@@ -1,0 +1,164 @@
+//! End-to-end driver (DESIGN.md §7): a real cache box TCP server + two edge
+//! clients cooperating over an MMLU-like multi-domain trace — the full
+//! Figure-1 topology with the real model over PJRT, real state bytes over
+//! real sockets, link shaping and (optionally) device pacing.
+//!
+//! ```bash
+//! cargo run --release --example edge_cluster                  # native speed
+//! EDGECACHE_PACED=1 cargo run --release --example edge_cluster  # paper pacing
+//! EDGECACHE_PRESET=edge-270m cargo run --release --example edge_cluster
+//! ```
+//!
+//! Reports per-case TTFT/TTLT distributions and the cooperative-reuse
+//! effect (client 2 benefiting from client 1's uploads).  The run recorded
+//! in EXPERIMENTS.md §E2E used the defaults below.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use edgecache::coordinator::{CacheBox, EdgeClient, EdgeClientConfig};
+use edgecache::devicemodel::DeviceProfile;
+use edgecache::engine::Engine;
+use edgecache::metrics::CaseAggregate;
+use edgecache::netsim::LinkModel;
+use edgecache::report::ascii_table;
+use edgecache::workload::{Generator, Trace};
+
+fn main() -> anyhow::Result<()> {
+    edgecache::util::logger::init_from_env();
+    let preset = std::env::var("EDGECACHE_PRESET").unwrap_or_else(|_| "tiny".into());
+    let paced = std::env::var("EDGECACHE_PACED").is_ok();
+    let n_domains: usize = std::env::var("EDGECACHE_DOMAINS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(6);
+    let per_domain: usize = std::env::var("EDGECACHE_PER_DOMAIN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+
+    println!("== edgecache end-to-end cluster ==");
+    println!("preset={preset} paced={paced} domains={n_domains} per_domain={per_domain}");
+
+    // cache box on a real TCP socket
+    let cache_box = CacheBox::start_local()?;
+    println!("cache box: {}", cache_box.addr());
+
+    // one engine (model artifacts) shared by both client processes' logic;
+    // each client gets its own connection, catalog, shaper and pacer
+    let t0 = std::time::Instant::now();
+    let engine = Arc::new(Engine::load_preset(&preset)?);
+    println!(
+        "engine loaded in {:.2}s ({:.1} MB params)",
+        t0.elapsed().as_secs_f64(),
+        engine.model.param_bytes as f64 / 1e6
+    );
+
+    let mk_cfg = |name: &str, seed: u64| EdgeClientConfig {
+        name: name.to_string(),
+        server_addr: Some(cache_box.addr()),
+        link: if paced { LinkModel::wifi4_2g4() } else { LinkModel::loopback() },
+        device: if paced { DeviceProfile::pi_zero_2w() } else { DeviceProfile::host() },
+        max_new_tokens: Some(if paced { 4 } else { 8 }),
+        compression: edgecache::model::state::Compression::None,
+        partial_matching: true,
+        use_catalog: true,
+        fetch_policy: edgecache::coordinator::FetchPolicy::Always,
+        min_hit_tokens: 1,
+        sync_interval: Some(Duration::from_millis(100)),
+        seed,
+    };
+    let mut clients = vec![
+        EdgeClient::new(Arc::clone(&engine), mk_cfg("client-1", 1))?,
+        EdgeClient::new(Arc::clone(&engine), mk_cfg("client-2", 2))?,
+    ];
+
+    // the workload trace: shared instruction+examples within each domain
+    let gen = Generator::new(42);
+    let trace = Trace::generate(42, clients.len(), n_domains, per_domain, 1);
+    println!("trace: {} queries across {} domains\n", trace.queries.len(), n_domains);
+
+    let mut by_case: BTreeMap<usize, CaseAggregate> = BTreeMap::new();
+    let run0 = std::time::Instant::now();
+    for (i, q) in trace.queries.iter().enumerate() {
+        let c = &mut clients[q.client];
+        let p = gen.prompt(&q.domain, q.question_index, q.n_shots);
+        let r = c.query(&p)?;
+        by_case.entry(r.case.number()).or_default().push(&r.breakdown);
+        println!(
+            "[{:>3}/{}] client-{} {:<28} case {}  ttft {:>9.2} ms  ttlt {:>9.2} ms  {}",
+            i + 1,
+            trace.queries.len(),
+            q.client + 1,
+            q.domain,
+            r.case.number(),
+            r.breakdown.ttft().as_secs_f64() * 1e3,
+            r.breakdown.ttlt().as_secs_f64() * 1e3,
+            if r.false_positive { "FP!" } else { "" }
+        );
+    }
+    let wall = run0.elapsed();
+
+    // ---- report ------------------------------------------------------------
+    println!("\n== per-case latency (mean over trace) ==");
+    let rows: Vec<Vec<String>> = by_case
+        .iter()
+        .map(|(case, a)| {
+            vec![
+                format!("Case {case}"),
+                a.n.to_string(),
+                format!("{:.3}", a.ttft.mean()),
+                format!("{:.3}", a.ttft.percentile(0.95)),
+                format!("{:.3}", a.ttlt.mean()),
+                format!("{:.1}", a.mean_prompt_tokens()),
+                format!("{:.2}", a.mean_state_mb()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        ascii_table(
+            &["Case", "n", "TTFT mean [s]", "TTFT p95 [s]", "TTLT mean [s]", "# tokens", "state MB"],
+            &rows
+        )
+    );
+
+    if let (Some(miss), Some(hit)) = (by_case.get(&1), by_case.get(&5)) {
+        let red = (hit.ttft.mean() - miss.ttft.mean()) / miss.ttft.mean() * 100.0;
+        println!(
+            "TTFT full-hit vs miss: {:.3} s -> {:.3} s ({red:+.1} %)  [paper low-end: -93.12 %]",
+            miss.ttft.mean(),
+            hit.ttft.mean()
+        );
+    }
+    let total_queries: u64 = clients.iter().map(|c| c.stats.queries).sum();
+    let throughput = total_queries as f64 / wall.as_secs_f64();
+    println!("\nwall time {:.1} s, {} queries, {:.2} q/s", wall.as_secs_f64(), total_queries, throughput);
+    for c in &clients {
+        println!(
+            "  {}: hits by case {:?}, FPs {}, down {:.2} MB, up {:.2} MB",
+            c.cfg.name,
+            c.stats.hits_by_case,
+            c.stats.false_positives,
+            c.stats.bytes_down as f64 / 1e6,
+            c.stats.bytes_up as f64 / 1e6,
+        );
+    }
+    let (keys, bytes, evictions) = cache_box.stats();
+    println!("  cache box: {keys} states, {:.2} MB, {evictions} evictions", bytes as f64 / 1e6);
+
+    // cooperative reuse must actually have happened
+    let cross_hits: u64 = clients
+        .iter()
+        .map(|c| c.stats.hits_by_case[1..].iter().sum::<u64>())
+        .sum();
+    assert!(cross_hits > 0, "expected at least one cache hit in the trace");
+
+    for c in clients {
+        c.shutdown();
+    }
+    cache_box.shutdown();
+    println!("\nOK");
+    Ok(())
+}

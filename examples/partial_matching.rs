@@ -1,0 +1,112 @@
+//! Partial matching walkthrough (paper §3.2, Figure 3, Table 4).
+//!
+//! Builds the astronomy N=5 prompt, registers its four nested ranges, then
+//! issues crafted queries that land in each of the five cases and shows the
+//! matched-token count and decode-time saving per case.
+//!
+//! ```bash
+//! cargo run --release --example partial_matching
+//! ```
+
+use std::sync::Arc;
+
+use edgecache::coordinator::{CacheBox, EdgeClient, EdgeClientConfig};
+use edgecache::engine::Engine;
+use edgecache::report::ascii_table;
+use edgecache::workload::{Generator, Prompt};
+
+fn main() -> anyhow::Result<()> {
+    edgecache::util::logger::init_from_env();
+    let preset = std::env::var("EDGECACHE_PRESET").unwrap_or_else(|_| "tiny".into());
+
+    let cache_box = CacheBox::start_local()?;
+    let engine = Arc::new(Engine::load_preset(&preset)?);
+    let mut cfg = EdgeClientConfig::native(Some(cache_box.addr()));
+    cfg.max_new_tokens = Some(2);
+    let mut client = EdgeClient::new(Arc::clone(&engine), cfg)?;
+
+    // the Figure-3 prompt: instruction + five examples + target question
+    let gen = Generator::new(42);
+    // N=5 like the paper for the full-size presets; the tiny demo preset has
+    // a coarser (budget-capped) tokenizer, so N=2 keeps prompts inside its
+    // context window without truncation muddying the case boundaries.
+    let shots: usize = std::env::var("EDGECACHE_SHOTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if preset == "tiny" { 2 } else { 5 });
+    let seed_prompt = gen.prompt("astronomy", 0, shots);
+    let ranges = seed_prompt.prefix_texts();
+    println!("prompt structure (chars): instruction {} | +ex1 {} | +all {} | full {}",
+        ranges[0].len(), ranges[1].len(), ranges[2].len(), ranges[3].len());
+
+    // Case-crafting: each query shares a successively longer prefix with the
+    // seed prompt.  A fresh question in the same domain shares the
+    // instruction+examples (Case 4); the same question repeats fully (Case 5);
+    // a different domain shares nothing (Case 1).
+    // Cases 2 and 3 are crafted by perturbing the examples after the shared
+    // prefix (same instruction, different examples ⇒ only range 1 matches).
+    let case2 = Prompt {
+        // same instruction, alien examples → only the instruction range hits
+        examples: gen.prompt("astronomy", 0, 0).examples.clone().into_iter().collect::<Vec<_>>(),
+        target: gen.prompt("virology", 7, 0).target.clone(),
+        ..seed_prompt.clone()
+    };
+    let case3 = Prompt {
+        // instruction + first example intact, later examples replaced
+        examples: {
+            let mut e = seed_prompt.examples.clone();
+            let other = gen.prompt("astronomy", 99, shots);
+            let _ = other;
+            // replace from the 2nd example on with shuffled copies of ex1
+            for x in e.iter_mut().skip(1) {
+                *x = seed_prompt.examples[0].replace("Answer", "ANSWER");
+            }
+            e
+        },
+        ..seed_prompt.clone()
+    };
+    let case4 = gen.prompt("astronomy", 1, shots); // same domain, new question
+    let case5 = seed_prompt.clone();
+    let case1 = gen.prompt("world_religions", 3, shots); // untouched domain
+
+    // 1. seed the cache (miss + upload of all four ranges)
+    let r0 = client.query(&seed_prompt)?;
+    println!(
+        "\nseed query: case {} — uploaded {:.2} MB across {} ranges\n",
+        r0.case.number(),
+        r0.uploaded_bytes as f64 / 1e6,
+        4
+    );
+
+    // 2. replay the five cases
+    let mut rows = Vec::new();
+    for (label, p) in [
+        ("Case 1 (no hit)", &case1),
+        ("Case 2 (instruction)", &case2),
+        ("Case 3 (instr+ex1)", &case3),
+        ("Case 4 (instr+all ex)", &case4),
+        ("Case 5 (full)", &case5),
+    ] {
+        let r = client.query(p)?;
+        rows.push(vec![
+            label.to_string(),
+            r.case.number().to_string(),
+            r.matched_tokens.to_string(),
+            format!("{:.2}", r.matched_tokens as f64 / r.prompt_tokens as f64 * 100.0),
+            format!("{:.2}", r.breakdown.t_decode().as_secs_f64() * 1e3),
+            format!("{:.2}", r.breakdown.ttft().as_secs_f64() * 1e3),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &["Query", "Landed case", "# matched", "% matched", "T-decode [ms]", "TTFT [ms]"],
+            &rows
+        )
+    );
+    println!("(compare the shape against paper Table 4: decode time falls as the\n matched prefix grows; Cases 4/5 dominate the saving)");
+
+    client.shutdown();
+    cache_box.shutdown();
+    Ok(())
+}

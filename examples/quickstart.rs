@@ -1,0 +1,74 @@
+//! Quickstart: one cache box + one edge client, miss → hit.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the paper's core effect on a single prompt: the first query
+//! prefill-decodes locally and uploads its KV state; the second query finds
+//! the state through the local Bloom catalog, downloads it, and skips
+//! prefill entirely — TTFT collapses.
+
+use std::sync::Arc;
+
+use edgecache::coordinator::{CacheBox, EdgeClient, EdgeClientConfig};
+use edgecache::engine::Engine;
+use edgecache::workload::Generator;
+
+fn main() -> anyhow::Result<()> {
+    edgecache::util::logger::init_from_env();
+    let preset = std::env::var("EDGECACHE_PRESET").unwrap_or_else(|_| "tiny".into());
+
+    // 1. the cache box (Figure 1, middle node) — in-process for the demo
+    let cache_box = CacheBox::start_local()?;
+    println!("cache box listening on {}", cache_box.addr());
+
+    // 2. an edge client running the local LLM
+    let engine = Arc::new(Engine::load_preset(&preset)?);
+    let mut cfg = EdgeClientConfig::native(Some(cache_box.addr()));
+    cfg.max_new_tokens = Some(8);
+    let mut client = EdgeClient::new(engine, cfg)?;
+
+    // 3. an MMLU-like prompt (astronomy, one few-shot example)
+    let prompt = Generator::new(42).prompt("astronomy", 0, 1);
+    println!(
+        "\nprompt: {} words / domain {}\n",
+        prompt.word_count(),
+        prompt.domain
+    );
+
+    // 4. first query: cache miss — local prefill, then state upload
+    let r1 = client.query(&prompt)?;
+    println!(
+        "query 1: case {} (miss)  TTFT {:>8.2} ms   uploaded {:.2} MB",
+        r1.case.number(),
+        r1.breakdown.ttft().as_secs_f64() * 1e3,
+        r1.uploaded_bytes as f64 / 1e6
+    );
+
+    // 5. second query: full hit — download the state, skip prefill
+    let r2 = client.query(&prompt)?;
+    println!(
+        "query 2: case {} (hit)   TTFT {:>8.2} ms   downloaded {:.2} MB",
+        r2.case.number(),
+        r2.breakdown.ttft().as_secs_f64() * 1e3,
+        r2.downloaded_bytes as f64 / 1e6
+    );
+
+    assert_eq!(
+        r1.response_tokens, r2.response_tokens,
+        "cached path must produce identical output"
+    );
+    println!(
+        "\nidentical responses: {:?}",
+        &r2.response_text[..r2.response_text.len().min(60)]
+    );
+    println!(
+        "breakdown (hit): {}",
+        r2.breakdown
+    );
+
+    client.shutdown();
+    cache_box.shutdown();
+    Ok(())
+}

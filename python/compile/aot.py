@@ -1,0 +1,196 @@
+"""AOT export: lower the L2 model to HLO *text* + params.bin per preset.
+
+This is the only place Python touches the pipeline; ``make artifacts`` runs it
+once and the rust binary is self-contained afterwards.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Layout written under ``--out`` (default ../artifacts):
+
+    <out>/<preset>/meta.json          config + model_hash + manifests
+    <out>/<preset>/params.bin         all parameters, f32 LE, PARAM_ORDER
+    <out>/<preset>/decode.hlo.txt
+    <out>/<preset>/prefill_<C>.hlo.txt   (one per configured chunk size)
+
+meta.json's ``input_order`` / per-entry ``inputs`` record the exact positional
+parameter order of each HLO entry computation (jax flattens the params dict in
+sorted-key order); the rust runtime feeds literals in that order.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sorted_param_names() -> list:
+    """jax flattens dicts in sorted-key order; this is the runtime contract."""
+    return sorted(M.PARAM_ORDER)
+
+
+def export_params(cfg: M.ModelConfig, out_dir: str) -> list:
+    """Write params.bin (f32 LE, sorted-name order) and return the manifest."""
+    params = M.init_params(cfg)
+    manifest = []
+    offset = 0
+    path = os.path.join(out_dir, "params.bin")
+    with open(path, "wb") as f:
+        for name in sorted_param_names():
+            arr = np.asarray(params[name], dtype="<f4")
+            data = arr.tobytes()
+            manifest.append(
+                {
+                    "name": name,
+                    "shape": list(arr.shape),
+                    "dtype": "f32",
+                    "offset_bytes": offset,
+                    "size_bytes": len(data),
+                }
+            )
+            f.write(data)
+            offset += len(data)
+    return manifest
+
+
+def scalar_spec() -> dict:
+    return {"shape": [], "dtype": "i32"}
+
+
+def entry_io(cfg: M.ModelConfig, chunk: int | None) -> tuple:
+    """(inputs, outputs) descriptors for one HLO entry computation."""
+    kv = {"shape": list(M.kv_cache_shape(cfg)), "dtype": "f32"}
+    shapes = M.param_shapes(cfg)
+    inputs = [
+        {"name": n, "shape": list(shapes[n]), "dtype": "f32", "role": "param"}
+        for n in sorted_param_names()
+    ]
+    inputs.append({"name": "kcache", "role": "kv", **kv})
+    inputs.append({"name": "vcache", "role": "kv", **kv})
+    if chunk is None:
+        inputs.append({"name": "token", "role": "token", **scalar_spec()})
+        inputs.append({"name": "pos", "role": "pos", **scalar_spec()})
+        outputs = [
+            {"name": "logits", "shape": [cfg.vocab], "dtype": "f32"},
+            {"name": "kcache", **kv},
+            {"name": "vcache", **kv},
+        ]
+    else:
+        inputs.append(
+            {"name": "tokens", "role": "tokens", "shape": [chunk], "dtype": "i32"}
+        )
+        inputs.append({"name": "pos", "role": "pos", **scalar_spec()})
+        inputs.append({"name": "valid_len", "role": "valid_len", **scalar_spec()})
+        outputs = [
+            {"name": "logits", "shape": [chunk, cfg.vocab], "dtype": "f32"},
+            {"name": "kcache", **kv},
+            {"name": "vcache", **kv},
+        ]
+    return inputs, outputs
+
+
+def export_preset(cfg: M.ModelConfig, out_root: str, use_pallas: bool = True) -> dict:
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    t0 = time.time()
+
+    entries = []
+
+    # --- decode ---
+    decode = M.make_decode(cfg, use_pallas=use_pallas)
+    args = M.example_args_decode(cfg)
+    hlo = to_hlo_text(jax.jit(decode, keep_unused=True).lower(*args))
+    with open(os.path.join(out_dir, "decode.hlo.txt"), "w") as f:
+        f.write(hlo)
+    ins, outs = entry_io(cfg, None)
+    entries.append(
+        {"name": "decode", "hlo": "decode.hlo.txt", "chunk": 0,
+         "inputs": ins, "outputs": outs}
+    )
+    print(f"  [{cfg.name}] decode lowered ({len(hlo)} chars)")
+
+    # --- prefill variants ---
+    for chunk in cfg.prefill_chunks:
+        prefill = M.make_prefill(cfg, chunk, use_pallas=use_pallas)
+        args = M.example_args(cfg, chunk)
+        hlo = to_hlo_text(jax.jit(prefill, keep_unused=True).lower(*args))
+        fname = f"prefill_{chunk}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+        ins, outs = entry_io(cfg, chunk)
+        entries.append(
+            {"name": f"prefill_{chunk}", "hlo": fname, "chunk": chunk,
+             "inputs": ins, "outputs": outs}
+        )
+        print(f"  [{cfg.name}] prefill_{chunk} lowered ({len(hlo)} chars)")
+
+    params_manifest = export_params(cfg, out_dir)
+
+    meta = {
+        "format_version": 1,
+        "config": json.loads(cfg.to_json()),
+        "model_hash": cfg.model_hash(),
+        "kv_cache_shape": list(M.kv_cache_shape(cfg)),
+        "kv_bytes_per_token": cfg.kv_bytes_per_token,
+        "n_params": cfg.n_params,
+        "input_order": sorted_param_names()
+        + ["kcache", "vcache", "<tokens-or-token>", "pos", "<valid_len:prefill-only>"],
+        "params_file": "params.bin",
+        "params": params_manifest,
+        "entries": entries,
+        "use_pallas": use_pallas,
+        "lowered_with": {"jax": jax.__version__},
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"  [{cfg.name}] exported in {time.time() - t0:.1f}s -> {out_dir}")
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts root dir")
+    ap.add_argument(
+        "--presets", default="tiny,edge-270m,edge-1b",
+        help="comma-separated preset names (see model.PRESETS)",
+    )
+    ap.add_argument(
+        "--no-pallas", action="store_true",
+        help="lower the pure-jnp reference path instead of the Pallas kernels",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    for name in args.presets.split(","):
+        name = name.strip()
+        if name not in M.PRESETS:
+            print(f"unknown preset {name!r}; have {list(M.PRESETS)}", file=sys.stderr)
+            sys.exit(2)
+        print(f"exporting {name} ...")
+        export_preset(M.PRESETS[name], args.out, use_pallas=not args.no_pallas)
+    print("AOT export complete.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels are authored for the TPU memory model (block-tiled VMEM residency,
+MXU-shaped matmuls) but lowered with ``interpret=True`` so the resulting HLO
+runs on the CPU PJRT plugin — real-TPU lowering would emit Mosaic custom-calls
+the CPU client cannot execute (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+INTERPRET = True  # flipped to False only for TPU compile-target experiments
+
+# Preferred tile edges.  On a real TPU the MXU is 128x128 and VMEM ~16 MB/core;
+# we aim tiles at multiples of 8 (sublane) x 128 (lane) when shapes allow and
+# degrade gracefully for the tiny shapes hypothesis throws at us.
+LANE = 128
+SUBLANE = 8
+
+
+def pick_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` (>=1).
+
+    Pallas grids must tile the array exactly (we do not rely on implicit
+    padding semantics, which differ between interpret and compiled modes), so
+    block sizes are always exact divisors.
+    """
+    if n <= 0:
+        raise ValueError(f"block dimension must be positive, got {n}")
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def estimate_vmem_bytes(*block_shapes_dtypes) -> int:
+    """Sum of buffer footprints for a kernel invocation, in bytes.
+
+    Used by EXPERIMENTS.md §Perf to check each kernel's working set against
+    the ~16 MB VMEM budget of a TPU core.  ``block_shapes_dtypes`` is a list
+    of (shape_tuple, itemsize) pairs.
+    """
+    total = 0
+    for shape, itemsize in block_shapes_dtypes:
+        n = itemsize
+        for d in shape:
+            n *= d
+        total += n
+    return total

@@ -1,0 +1,82 @@
+"""Pallas fused GeGLU feed-forward kernel.
+
+Computes ``(gelu(x @ wg) * (x @ wu)) @ wd`` for a row block of ``x`` without
+ever materialising the ``[n, ff]`` intermediate in HBM: the FFN width is
+streamed through VMEM in ``block_f`` columns, and each column block's
+contribution to the output is accumulated immediately (the MXU analog of
+llama.cpp's fused ggml FFN op — see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, LANE, SUBLANE, pick_block
+
+
+def _gelu_f32(x):
+    c = jnp.sqrt(2.0 / jnp.pi).astype(jnp.float32)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _geglu_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, block_f: int):
+    x = x_ref[...].astype(jnp.float32)  # [Bn, dm]
+    bn, dm = x.shape
+    ff = wg_ref.shape[1]
+    nblk = ff // block_f
+
+    if nblk == 1:
+        # whole FFN width in one tile (fits VMEM for edge-sized models —
+        # DESIGN.md §Perf): no loop, one fused matmul chain
+        wg = wg_ref[...].astype(jnp.float32)
+        wu = wu_ref[...].astype(jnp.float32)
+        wd = wd_ref[...].astype(jnp.float32)
+        o_ref[...] = ((_gelu_f32(x @ wg) * (x @ wu)) @ wd).astype(o_ref.dtype)
+        return
+
+    def body(j, acc):
+        wg_j = wg_ref[:, pl.ds(j * block_f, block_f)].astype(jnp.float32)  # [dm, Bf]
+        wu_j = wu_ref[:, pl.ds(j * block_f, block_f)].astype(jnp.float32)
+        wd_j = wd_ref[pl.ds(j * block_f, block_f), :].astype(jnp.float32)  # [Bf, dm]
+        g = _gelu_f32(x @ wg_j)  # [Bn, Bf]
+        u = x @ wu_j
+        return acc + (g * u) @ wd_j  # [Bn, dm]
+
+    acc0 = jnp.zeros((bn, dm), jnp.float32)
+    acc = jax.lax.fori_loop(0, nblk, body, acc0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_f"))
+def geglu_ffn(
+    x: jnp.ndarray,  # [n, dm]
+    wg: jnp.ndarray,  # [dm, ff]
+    wu: jnp.ndarray,  # [dm, ff]
+    wd: jnp.ndarray,  # [ff, dm]
+    block_rows: int = 4 * SUBLANE,
+    block_f: int = 16 * LANE,
+) -> jnp.ndarray:
+    """Fused gated-GELU FFN.  Returns [n, dm]."""
+    n, dm = x.shape
+    dmg, ff = wg.shape
+    assert dmg == dm and wu.shape == (dm, ff) and wd.shape == (ff, dm)
+    bn = pick_block(n, block_rows)
+    bf = pick_block(ff, block_f)
+
+    return pl.pallas_call(
+        functools.partial(_geglu_kernel, block_f=bf),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, dm), lambda i: (i, 0)),
+            pl.BlockSpec((dm, ff), lambda i: (0, 0)),
+            pl.BlockSpec((dm, ff), lambda i: (0, 0)),
+            pl.BlockSpec((ff, dm), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, dm), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dm), x.dtype),
+        interpret=INTERPRET,
+    )(x, wg, wu, wd)

@@ -1,0 +1,99 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has an exact functional twin here, written
+with plain ``jax.numpy`` ops only.  ``python/tests`` sweeps shapes/dtypes with
+hypothesis and asserts ``assert_allclose(kernel(...), ref(...))``.
+
+Conventions (shared with the kernels and with ``model.py``):
+  * ``C``  — prefill chunk length (queries in this call)
+  * ``S``  — max sequence length (KV-cache capacity)
+  * ``H``  — number of query heads;  ``Kh`` — number of KV heads (GQA: H % Kh == 0)
+  * ``D``  — head dimension;  ``dm`` — model width;  ``ff`` — FFN width
+  * masks are additive: 0.0 where attention is allowed, ``NEG_INF`` elsewhere
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Large-negative constant used for masking.  Finite (not -inf) so that fully
+# masked rows produce a uniform softmax instead of NaNs; matches llama.cpp's
+# behaviour of never feeding -inf into softmax.
+NEG_INF = -1e30
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Gemma-style RMSNorm: ``x * rsqrt(mean(x^2) + eps) * (1 + w)``.
+
+    Gemma parameterizes the gain as ``1 + w`` (zero-initialised ``w``), unlike
+    the Llama convention of a plain multiplicative weight.
+    x: [..., dm], w: [dm].
+    """
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    normed = x32 * (1.0 / jnp.sqrt(var + eps))
+    return (normed * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def _gqa_expand(kv: jnp.ndarray, h: int) -> jnp.ndarray:
+    """[S, Kh, D] -> [S, H, D] by repeating each KV head H/Kh times."""
+    s, kh, d = kv.shape
+    assert h % kh == 0, f"H={h} not a multiple of Kh={kh}"
+    return jnp.repeat(kv, h // kh, axis=1)
+
+
+def prefill_attention(
+    q: jnp.ndarray,  # [C, H, D]
+    k: jnp.ndarray,  # [S, Kh, D]
+    v: jnp.ndarray,  # [S, Kh, D]
+    mask: jnp.ndarray,  # [C, S] additive (0 or NEG_INF)
+    scale: float,
+) -> jnp.ndarray:
+    """Multi-head causal attention of a prefill chunk against the KV cache.
+
+    The cache already contains both the previously-decoded prefix *and* this
+    chunk's own K/V (the model scatters them in before calling attention), so
+    causality and padding are expressed entirely through ``mask``.
+    Returns [C, H, D].
+    """
+    c, h, d = q.shape
+    kx = _gqa_expand(k, h)  # [S, H, D]
+    vx = _gqa_expand(v, h)
+    # scores[c,h,s] = q[c,h,:] . k[s,h,:]
+    scores = jnp.einsum("chd,shd->chs", q.astype(jnp.float32), kx.astype(jnp.float32))
+    scores = scores * scale + mask[:, None, :].astype(jnp.float32)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("chs,shd->chd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # [H, D]
+    k: jnp.ndarray,  # [S, Kh, D]
+    v: jnp.ndarray,  # [S, Kh, D]
+    mask: jnp.ndarray,  # [S] additive
+    scale: float,
+) -> jnp.ndarray:
+    """Single-token (decode-step) attention.  Returns [H, D]."""
+    out = prefill_attention(q[None, :, :], k, v, mask[None, :], scale)
+    return out[0]
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximated GELU (the variant Gemma uses)."""
+    x32 = x.astype(jnp.float32)
+    c = jnp.sqrt(2.0 / jnp.pi).astype(jnp.float32)
+    return (0.5 * x32 * (1.0 + jnp.tanh(c * (x32 + 0.044715 * x32**3)))).astype(x.dtype)
+
+
+def geglu_ffn(
+    x: jnp.ndarray,  # [n, dm]
+    wg: jnp.ndarray,  # [dm, ff]
+    wu: jnp.ndarray,  # [dm, ff]
+    wd: jnp.ndarray,  # [ff, dm]
+) -> jnp.ndarray:
+    """Gated-GELU feed-forward: ``(gelu(x@wg) * (x@wu)) @ wd``.  Returns [n, dm]."""
+    g = gelu(jnp.dot(x, wg))
+    u = jnp.dot(x, wu)
+    return jnp.dot(g * u, wd)

@@ -1,0 +1,47 @@
+"""Pallas RMSNorm kernel (Gemma-style ``1 + w`` gain).
+
+Grid is 1-D over row blocks; each program normalises a ``[Bn, d]`` tile held
+in VMEM.  The reduction is along the lane axis, which the VPU handles without
+MXU involvement — this kernel is bandwidth-bound by design and exists so the
+whole transformer block lowers through Pallas (one fused region per op class).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, SUBLANE, pick_block
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # [Bn, d]
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    normed = x * (1.0 / jnp.sqrt(var + eps))
+    o_ref[...] = (normed * (1.0 + w_ref[...].astype(jnp.float32))).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(
+    x: jnp.ndarray,  # [n, d]
+    w: jnp.ndarray,  # [d]
+    eps: float = 1e-6,
+    block_rows: int = 4 * SUBLANE,
+) -> jnp.ndarray:
+    """RMSNorm over the last axis of a rank-2 input.  Returns [n, d]."""
+    n, d = x.shape
+    bn = pick_block(n, block_rows)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=INTERPRET,
+    )(x, w)

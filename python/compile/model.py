@@ -1,0 +1,342 @@
+"""L2: Gemma-3-style transformer in JAX, calling the Pallas kernels.
+
+This is the *compute graph* half of the reproduction.  The paper runs Gemma-3
+270M (low-end) / 1B (high-end) via llama.cpp; weights are gated downloads, so
+we instantiate the same architecture family — RMSNorm sandwich, RoPE, GQA
+attention, GeGLU FFN, tied embeddings — with random weights.  Every metric the
+paper reports is latency or state size, both functions of architecture shape
+only (DESIGN.md §Substitutions).
+
+Two entry points are AOT-lowered per model preset by ``aot.py``:
+
+  ``prefill(params, kcache, vcache, tokens[C], pos, valid_len)``
+      -> (logits[C, V], kcache', vcache')
+  ``decode(params, kcache, vcache, token, pos)``
+      -> (logits[V], kcache', vcache')
+
+The KV caches are dense ``[L, S, Kh, D]`` tensors threaded through every call;
+the rust engine owns them between calls, serialises them as the paper's
+``llama_state_get_data()`` blob, and ships them to the cache box.
+
+Parameters are *inputs* (not baked constants) so the HLO stays small and one
+loader serves all presets.  Layers are stacked on a leading ``L`` axis and the
+block is applied with ``lax.scan``, which keeps the lowered module compact
+(one fused layer body) and compile time flat in depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention as attn_k
+from .kernels import geglu as geglu_k
+from .kernels import ref
+from .kernels import rmsnorm as rms_k
+
+NEG_INF = ref.NEG_INF
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (the 'model card' the catalog hashes)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    max_seq: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    seed: int = 20260711
+    prefill_chunks: Tuple[int, ...] = (16, 64, 128)
+
+    def __post_init__(self):
+        assert self.n_heads % self.n_kv_heads == 0
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        """f32 K+V bytes contributed by one token across all layers."""
+        return 2 * self.n_layers * self.n_kv_heads * self.head_dim * 4
+
+    @property
+    def n_params(self) -> int:
+        c = self
+        per_layer = (
+            4 * c.d_model  # four norms
+            + c.d_model * c.n_heads * c.head_dim * 2  # wq, wo
+            + c.d_model * c.n_kv_heads * c.head_dim * 2  # wk, wv
+            + 3 * c.d_model * c.d_ff  # wg, wu, wd
+        )
+        return c.vocab * c.d_model + c.d_model + c.n_layers * per_layer
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    def model_hash(self) -> str:
+        """Hex digest binding cached states to (architecture, weights-seed).
+
+        This is the metadata the paper folds into the catalog hash so states
+        from different model configurations or quantization settings never
+        collide (paper §3.1, Figure 3 top).
+        """
+        return hashlib.sha256(self.to_json().encode()).hexdigest()[:16]
+
+
+# Presets.  Sizes are scaled so CPU-PJRT inference stays interactive while the
+# KV-state-per-token and parameter ratios between "270m" and "1b" mirror the
+# paper's 2.25 MB vs 9.94 MB cache entries (see DESIGN.md §Substitutions).
+PRESETS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(
+        name="tiny", vocab=512, d_model=64, n_layers=2, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, max_seq=768, prefill_chunks=(8, 16, 64),
+    ),
+    "edge-270m": ModelConfig(
+        name="edge-270m", vocab=4096, d_model=320, n_layers=6, n_heads=4,
+        n_kv_heads=1, head_dim=80, d_ff=1280, max_seq=768,
+        prefill_chunks=(16, 64, 128),
+    ),
+    "edge-1b": ModelConfig(
+        name="edge-1b", vocab=4096, d_model=512, n_layers=10, n_heads=8,
+        n_kv_heads=4, head_dim=64, d_ff=2048, max_seq=768,
+        prefill_chunks=(16, 64, 128),
+    ),
+}
+
+# Deterministic parameter order — the single source of truth shared with
+# aot.py's params.bin manifest and the rust loader.
+PARAM_ORDER = (
+    "embed",          # [V, dm]
+    "final_norm",     # [dm]
+    "ln_attn_pre",    # [L, dm]
+    "wq",             # [L, dm, H*D]
+    "wk",             # [L, dm, Kh*D]
+    "wv",             # [L, dm, Kh*D]
+    "wo",             # [L, H*D, dm]
+    "ln_attn_post",   # [L, dm]
+    "ln_ffn_pre",     # [L, dm]
+    "wg",             # [L, dm, ff]
+    "wu",             # [L, dm, ff]
+    "wd",             # [L, ff, dm]
+    "ln_ffn_post",    # [L, dm]
+)
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    L, dm, H, Kh, D, ff, V = (
+        cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+        cfg.head_dim, cfg.d_ff, cfg.vocab,
+    )
+    return {
+        "embed": (V, dm),
+        "final_norm": (dm,),
+        "ln_attn_pre": (L, dm),
+        "wq": (L, dm, H * D),
+        "wk": (L, dm, Kh * D),
+        "wv": (L, dm, Kh * D),
+        "wo": (L, H * D, dm),
+        "ln_attn_post": (L, dm),
+        "ln_ffn_pre": (L, dm),
+        "wg": (L, dm, ff),
+        "wu": (L, dm, ff),
+        "wd": (L, ff, dm),
+        "ln_ffn_post": (L, dm),
+    }
+
+
+def init_params(cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Seeded random init (truncated-normal-ish scaled by fan-in)."""
+    shapes = param_shapes(cfg)
+    rng = np.random.default_rng(cfg.seed)
+    params = {}
+    for name in PARAM_ORDER:
+        shape = shapes[name]
+        if name.startswith(("ln_", "final_norm")):
+            arr = np.zeros(shape, np.float32)  # Gemma norms: gain = 1 + w, w=0
+        elif name == "embed":
+            arr = rng.standard_normal(shape).astype(np.float32) * 0.02
+        else:
+            fan_in = shape[-2]
+            arr = rng.standard_normal(shape).astype(np.float32) / math.sqrt(fan_in)
+        params[name] = jnp.asarray(arr)
+    return params
+
+
+def kv_cache_shape(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    return (cfg.n_layers, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim)
+
+
+def init_kv_cache(cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    shape = kv_cache_shape(cfg)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (GPT-NeoX pairing: first half / second half of the head dim)
+# ---------------------------------------------------------------------------
+
+
+def _rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [C, Hx, D], positions: [C] int32.  Rotates each head vector."""
+    c, hx, d = x.shape
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * (2.0 * jnp.arange(half, dtype=jnp.float32) / d)
+    )  # [half]
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [C, half]
+    cos = jnp.cos(ang)[:, None, :]  # [C, 1, half]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Transformer block (scanned over layers)
+# ---------------------------------------------------------------------------
+
+
+def _layer(cfg: ModelConfig, x, kc_l, vc_l, lp, positions, mask, use_pallas: bool):
+    """One transformer layer.
+
+    x: [C, dm]; kc_l/vc_l: [S, Kh, D]; lp: dict of this layer's params;
+    positions: [C] absolute token positions; mask: [C, S] additive.
+    Returns (x', kc_l', vc_l').
+    """
+    C = x.shape[0]
+    H, Kh, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    scale = 1.0 / math.sqrt(D)
+
+    rms = (lambda t, w: rms_k.rmsnorm(t, w, cfg.norm_eps)) if use_pallas else (
+        lambda t, w: ref.rmsnorm(t, w, cfg.norm_eps)
+    )
+
+    # --- attention sub-block (pre/post sandwich norms, Gemma-2/3 style) ---
+    h = rms(x, lp["ln_attn_pre"])
+    q = (h @ lp["wq"]).reshape(C, H, D)
+    k = (h @ lp["wk"]).reshape(C, Kh, D)
+    v = (h @ lp["wv"]).reshape(C, Kh, D)
+    q = _rope(q, positions, cfg.rope_theta)
+    k = _rope(k, positions, cfg.rope_theta)
+    # Scatter this chunk's K/V into the cache at the chunk origin.  positions
+    # is contiguous (pos .. pos+C), so one dynamic_update_slice suffices.
+    kc_l = jax.lax.dynamic_update_slice(kc_l, k, (positions[0], 0, 0))
+    vc_l = jax.lax.dynamic_update_slice(vc_l, v, (positions[0], 0, 0))
+    if use_pallas:
+        o = attn_k.prefill_attention(q, kc_l, vc_l, mask, scale)
+    else:
+        o = ref.prefill_attention(q, kc_l, vc_l, mask, scale)
+    o = o.reshape(C, H * D) @ lp["wo"]
+    x = x + rms(o, lp["ln_attn_post"])
+
+    # --- FFN sub-block ---
+    h = rms(x, lp["ln_ffn_pre"])
+    f = geglu_k.geglu_ffn(h, lp["wg"], lp["wu"], lp["wd"]) if use_pallas else (
+        ref.geglu_ffn(h, lp["wg"], lp["wu"], lp["wd"])
+    )
+    x = x + rms(f, lp["ln_ffn_post"])
+    return x, kc_l, vc_l
+
+
+_LAYER_KEYS = (
+    "ln_attn_pre", "wq", "wk", "wv", "wo", "ln_attn_post",
+    "ln_ffn_pre", "wg", "wu", "wd", "ln_ffn_post",
+)
+
+
+def _forward(cfg: ModelConfig, params, kcache, vcache, tokens, pos, valid_len,
+              use_pallas: bool, unroll_layers: bool = False):
+    """Shared prefill/decode body.
+
+    tokens: [C] int32 (C static); pos: scalar int32 (chunk origin in the
+    sequence); valid_len: scalar int32 (tokens[valid_len:] are padding).
+    Returns (logits [C, V], kcache', vcache').
+    """
+    C = tokens.shape[0]
+    S = cfg.max_seq
+
+    x = params["embed"][tokens] * math.sqrt(cfg.d_model)  # [C, dm]
+    positions = pos + jnp.arange(C, dtype=jnp.int32)
+
+    # Additive mask: query row r (absolute position pos+r) may attend to
+    # absolute cache positions s <= pos+r.  Padding rows (r >= valid_len)
+    # compute garbage that is (a) never read as logits and (b) overwritten in
+    # the cache by the next chunk, which starts at pos+valid_len.
+    cols = jnp.arange(S, dtype=jnp.int32)[None, :]
+    allowed = cols <= positions[:, None]
+    mask = jnp.where(allowed, 0.0, NEG_INF).astype(jnp.float32)
+
+    layer_params = {k: params[k] for k in _LAYER_KEYS}
+
+    def scan_body(x, xs):
+        lp, kc_l, vc_l = xs
+        x, kc_l, vc_l = _layer(cfg, x, kc_l, vc_l, lp, positions, mask, use_pallas)
+        return x, (kc_l, vc_l)
+
+    # Unrolling the layer loop lets XLA fuse across layer boundaries, which
+    # is a measured 1.8x win for the latency-critical decode step on CPU-PJRT
+    # (27.5 -> 15.3 ms on edge-270m).  Prefill is throughput-bound over big
+    # matmuls where the rolled loop's smaller code wins instead (47 -> 55 ms
+    # unrolled), so each entry point chooses (EXPERIMENTS.md §Perf).
+    x, (kcache, vcache) = jax.lax.scan(
+        scan_body, x, (layer_params, kcache, vcache), unroll=unroll_layers
+    )
+
+    x = (rms_k.rmsnorm if use_pallas else ref.rmsnorm)(
+        x, params["final_norm"], cfg.norm_eps
+    )
+    logits = x @ params["embed"].T  # tied embeddings
+    return logits, kcache, vcache
+
+
+def make_prefill(cfg: ModelConfig, chunk: int, use_pallas: bool = True):
+    """Build the prefill entry point for a fixed chunk size."""
+
+    def prefill(params, kcache, vcache, tokens, pos, valid_len):
+        assert tokens.shape == (chunk,)
+        return _forward(cfg, params, kcache, vcache, tokens, pos, valid_len,
+                        use_pallas, unroll_layers=False)
+
+    return prefill
+
+
+def make_decode(cfg: ModelConfig, use_pallas: bool = True):
+    """Build the single-token decode entry point."""
+
+    def decode(params, kcache, vcache, token, pos):
+        tokens = jnp.reshape(token, (1,)).astype(jnp.int32)
+        logits, kcache, vcache = _forward(
+            cfg, params, kcache, vcache, tokens, pos,
+            jnp.int32(1), use_pallas, unroll_layers=True,
+        )
+        return logits[0], kcache, vcache
+
+    return decode
+
+
+def example_args(cfg: ModelConfig, chunk: int):
+    """ShapeDtypeStructs for lowering the prefill entry point."""
+    f32 = jnp.float32
+    params = {k: jax.ShapeDtypeStruct(v, f32) for k, v in param_shapes(cfg).items()}
+    kv = jax.ShapeDtypeStruct(kv_cache_shape(cfg), f32)
+    tokens = jax.ShapeDtypeStruct((chunk,), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    return params, kv, kv, tokens, scalar, scalar
+
+
+def example_args_decode(cfg: ModelConfig):
+    f32 = jnp.float32
+    params = {k: jax.ShapeDtypeStruct(v, f32) for k, v in param_shapes(cfg).items()}
+    kv = jax.ShapeDtypeStruct(kv_cache_shape(cfg), f32)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    return params, kv, kv, scalar, scalar

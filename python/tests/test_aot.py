@@ -1,0 +1,93 @@
+"""AOT artifact schema and round-trip checks (the rust runtime's contract)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    meta = aot.export_preset(M.PRESETS["tiny"], str(out))
+    return str(out / "tiny"), meta
+
+
+def test_meta_schema(exported):
+    out_dir, meta = exported
+    with open(os.path.join(out_dir, "meta.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == meta
+    assert meta["format_version"] == 1
+    assert meta["model_hash"] == M.PRESETS["tiny"].model_hash()
+    names = [e["name"] for e in meta["entries"]]
+    assert names[0] == "decode"
+    for c in M.PRESETS["tiny"].prefill_chunks:
+        assert f"prefill_{c}" in names
+
+
+def test_params_bin_matches_manifest(exported):
+    out_dir, meta = exported
+    size = os.path.getsize(os.path.join(out_dir, "params.bin"))
+    total = sum(p["size_bytes"] for p in meta["params"])
+    assert size == total
+    # offsets are contiguous and ordered
+    off = 0
+    for p in meta["params"]:
+        assert p["offset_bytes"] == off
+        assert p["size_bytes"] == 4 * int(np.prod(p["shape"])) if p["shape"] else 4
+        off += p["size_bytes"]
+    # manifest order == sorted name order (the jax pytree flatten contract)
+    names = [p["name"] for p in meta["params"]]
+    assert names == sorted(names)
+    # total param count matches the config's closed form
+    n_params = sum(int(np.prod(p["shape"] or [1])) for p in meta["params"])
+    assert n_params == M.PRESETS["tiny"].n_params
+
+
+def test_params_bin_reproducible(exported):
+    out_dir, meta = exported
+    with open(os.path.join(out_dir, "params.bin"), "rb") as f:
+        blob = f.read()
+    params = M.init_params(M.PRESETS["tiny"])
+    for p in meta["params"]:
+        want = np.asarray(params[p["name"]], dtype="<f4").tobytes()
+        got = blob[p["offset_bytes"] : p["offset_bytes"] + p["size_bytes"]]
+        assert got == want, p["name"]
+
+
+def test_hlo_text_parseable(exported):
+    out_dir, meta = exported
+    for e in meta["entries"]:
+        path = os.path.join(out_dir, e["hlo"])
+        with open(path) as f:
+            text = f.read()
+        assert "ENTRY" in text, e["name"]
+        assert "HloModule" in text
+        # input arity recorded in meta matches the HLO entry params
+        n_inputs = len(e["inputs"])
+        assert text.count("parameter(") >= n_inputs
+
+
+def test_entry_io_shapes(exported):
+    _, meta = exported
+    cfg = M.PRESETS["tiny"]
+    for e in meta["entries"]:
+        outs = {o["name"]: o for o in e["outputs"]}
+        assert outs["kcache"]["shape"] == list(M.kv_cache_shape(cfg))
+        if e["name"] == "decode":
+            assert outs["logits"]["shape"] == [cfg.vocab]
+        else:
+            assert outs["logits"]["shape"] == [e["chunk"], cfg.vocab]
+        roles = [i["role"] for i in e["inputs"]]
+        assert roles.count("param") == len(M.PARAM_ORDER)
+        assert "kv" in roles and "pos" in roles
+
+
+def test_kv_bytes_per_token_matches_cache_shape():
+    for cfg in M.PRESETS.values():
+        l, s, kh, d = M.kv_cache_shape(cfg)
+        assert cfg.kv_bytes_per_token == 2 * l * kh * d * 4

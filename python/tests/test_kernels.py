@@ -1,0 +1,214 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle in ref.py.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose is the contract.  These
+tests are the build-time gate for the AOT artifacts: if they pass, the HLO the
+rust runtime executes computes the same numbers as the oracle.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_k
+from compile.kernels import common
+from compile.kernels import geglu as geglu_k
+from compile.kernels import ref
+from compile.kernels import rmsnorm as rms_k
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rnd(rng, shape, dtype, scale=1.0):
+    x = rng.standard_normal(shape).astype(np.float32) * scale
+    return jnp.asarray(x).astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+
+
+def causal_mask(c, s, pos):
+    rows = np.arange(c)[:, None]
+    cols = np.arange(s)[None, :]
+    return jnp.asarray(np.where(cols <= pos + rows, 0.0, ref.NEG_INF).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# pick_block
+# ---------------------------------------------------------------------------
+
+
+@given(n=st.integers(1, 4096), target=st.integers(1, 512))
+@settings(max_examples=200, deadline=None)
+def test_pick_block_divides(n, target):
+    b = common.pick_block(n, target)
+    assert 1 <= b <= min(n, target)
+    assert n % b == 0
+
+
+def test_pick_block_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        common.pick_block(0, 8)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(1, 64),
+    d=st.sampled_from([8, 16, 64, 80, 128, 320]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_rmsnorm_matches_ref(n, d, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, (n, d), dtype)
+    w = rnd(rng, (d,), dtype, scale=0.1)
+    got = rms_k.rmsnorm(x, w)
+    want = ref.rmsnorm(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+def test_rmsnorm_unit_scale_invariance():
+    """RMSNorm output has unit RMS when w == 0 (Gemma gain = 1+0)."""
+    rng = np.random.default_rng(0)
+    x = rnd(rng, (16, 64), jnp.float32, scale=7.0)
+    out = np.asarray(rms_k.rmsnorm(x, jnp.zeros(64)))
+    rms = np.sqrt((out * out).mean(axis=-1))
+    np.testing.assert_allclose(rms, np.ones(16), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@given(
+    c=st.sampled_from([1, 3, 8, 16]),
+    s=st.sampled_from([16, 64, 96, 128]),
+    h_kh=st.sampled_from([(1, 1), (2, 1), (4, 2), (4, 4), (8, 2)]),
+    d=st.sampled_from([8, 16, 32, 80]),
+    pos=st.integers(0, 48),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_prefill_attention_matches_ref(c, s, h_kh, d, pos, dtype, seed):
+    h, kh = h_kh
+    pos = min(pos, s - c) if s - c > 0 else 0
+    rng = np.random.default_rng(seed)
+    q = rnd(rng, (c, h, d), dtype)
+    k = rnd(rng, (s, kh, d), dtype)
+    v = rnd(rng, (s, kh, d), dtype)
+    mask = causal_mask(c, s, pos)
+    scale = 1.0 / np.sqrt(d)
+    got = attn_k.prefill_attention(q, k, v, mask, scale)
+    want = ref.prefill_attention(q, k, v, mask, scale)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+@given(
+    s=st.sampled_from([16, 64, 256]),
+    h_kh=st.sampled_from([(1, 1), (4, 1), (4, 2), (8, 4)]),
+    d=st.sampled_from([16, 64, 80]),
+    n_valid=st.integers(1, 256),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_decode_attention_matches_ref(s, h_kh, d, n_valid, dtype, seed):
+    h, kh = h_kh
+    n_valid = min(n_valid, s)
+    rng = np.random.default_rng(seed)
+    q = rnd(rng, (h, d), dtype)
+    k = rnd(rng, (s, kh, d), dtype)
+    v = rnd(rng, (s, kh, d), dtype)
+    mask = jnp.asarray(
+        np.where(np.arange(s) < n_valid, 0.0, ref.NEG_INF).astype(np.float32)
+    )
+    scale = 1.0 / np.sqrt(d)
+    got = attn_k.decode_attention(q, k, v, mask, scale)
+    want = ref.decode_attention(q, k, v, mask, scale)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+def test_attention_masked_positions_have_no_influence():
+    """Changing K/V beyond the mask must not change the output at all."""
+    rng = np.random.default_rng(7)
+    s, h, kh, d = 64, 4, 2, 16
+    q = rnd(rng, (h, d), jnp.float32)
+    k = np.asarray(rnd(rng, (s, kh, d), jnp.float32))
+    v = np.asarray(rnd(rng, (s, kh, d), jnp.float32))
+    n_valid = 20
+    mask = jnp.asarray(
+        np.where(np.arange(s) < n_valid, 0.0, ref.NEG_INF).astype(np.float32)
+    )
+    out1 = attn_k.decode_attention(q, jnp.asarray(k), jnp.asarray(v), mask, 0.25)
+    k2, v2 = k.copy(), v.copy()
+    k2[n_valid:] = 1e3
+    v2[n_valid:] = -1e3
+    out2 = attn_k.decode_attention(q, jnp.asarray(k2), jnp.asarray(v2), mask, 0.25)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_decode_equals_prefill_row():
+    """decode_attention == the corresponding single row of prefill_attention."""
+    rng = np.random.default_rng(3)
+    c, s, h, kh, d = 4, 32, 4, 2, 16
+    q = rnd(rng, (c, h, d), jnp.float32)
+    k = rnd(rng, (s, kh, d), jnp.float32)
+    v = rnd(rng, (s, kh, d), jnp.float32)
+    mask = causal_mask(c, s, 8)
+    full = attn_k.prefill_attention(q, k, v, mask, 0.25)
+    for r in range(c):
+        row = attn_k.decode_attention(q[r], k, v, mask[r], 0.25)
+        np.testing.assert_allclose(
+            np.asarray(row), np.asarray(full[r]), rtol=1e-5, atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# geglu
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(1, 48),
+    dm=st.sampled_from([16, 64, 320]),
+    ff=st.sampled_from([32, 128, 256, 1280]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_geglu_matches_ref(n, dm, ff, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, (n, dm), dtype)
+    wg = rnd(rng, (dm, ff), dtype, scale=1 / np.sqrt(dm))
+    wu = rnd(rng, (dm, ff), dtype, scale=1 / np.sqrt(dm))
+    wd = rnd(rng, (ff, dm), dtype, scale=1 / np.sqrt(ff))
+    got = geglu_k.geglu_ffn(x, wg, wu, wd)
+    want = ref.geglu_ffn(x, wg, wu, wd)
+    t = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else dict(rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **t
+    )
+
+
+def test_gelu_reference_values():
+    """tanh-GELU at a few known points (sanity anchor for both impls)."""
+    x = jnp.asarray([0.0, 1.0, -1.0, 3.0])
+    got = np.asarray(ref.gelu(x))
+    np.testing.assert_allclose(got[0], 0.0, atol=1e-7)
+    np.testing.assert_allclose(got[1], 0.841192, rtol=1e-4)
+    np.testing.assert_allclose(got[2], -0.158808, rtol=1e-3)
+    np.testing.assert_allclose(got[3], 2.996363, rtol=1e-4)

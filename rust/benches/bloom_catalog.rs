@@ -1,0 +1,171 @@
+//! Regenerates the catalog experiments:
+//!
+//! * **§5.2.3 (benefit of the local Bloom filter)** — per-query lookup cost
+//!   with the local catalog vs remote EXISTS probing over the shaped Wi-Fi
+//!   link, across hit ratios: without the catalog every inference pays
+//!   round-trip overhead; with it, misses cost microseconds locally.
+//! * **§5.2.4 (false-positive impact)** — expected Case-1 TTFT inflation as
+//!   a function of the Bloom FP rate (analytic: fp × download), plus a real
+//!   forced-FP measurement through the stack.
+//! * Bloom micro-costs (insert / query / serialize) backing the paper's
+//!   "0.30 ms Bloom" row and the 1.20 MB / 1 M / 1 % sizing claim.
+
+use std::sync::Arc;
+
+use edgecache::bloom::BloomFilter;
+use edgecache::coordinator::{CacheBox, EdgeClient, EdgeClientConfig};
+use edgecache::devicemodel::DeviceProfile;
+use edgecache::engine::Engine;
+use edgecache::netsim::LinkModel;
+use edgecache::report::ascii_table;
+use edgecache::report::experiments as exp;
+use edgecache::workload::Generator;
+use edgecache::xbench::{Bench, Report};
+
+fn main() {
+    edgecache::util::logger::init_from_env();
+
+    // ---------------------------------------------------------------- sizing
+    println!("== catalog sizing (paper §4: 1M entries @ 1% -> 1.20 MB) ==\n");
+    let mut rows = Vec::new();
+    for (cap, fp) in [
+        (100_000u64, 0.01),
+        (1_000_000, 0.01),
+        (1_000_000, 0.001),
+        (10_000_000, 0.01),
+    ] {
+        let b = BloomFilter::new(cap, fp);
+        rows.push(vec![
+            format!("{cap}"),
+            format!("{fp}"),
+            format!("{:.2}", b.size_bytes() as f64 / 1e6),
+            b.k().to_string(),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(&["capacity", "target FP", "size [MB]", "k"], &rows)
+    );
+
+    // ------------------------------------------------------------ micro cost
+    println!("== bloom operation micro-costs (paper Table 3: Bloom = 0.30 ms on a Pi Zero) ==\n");
+    let mut report = Report::new("bloom-ops");
+    let mut filter = BloomFilter::paper_default();
+    let keys: Vec<Vec<u8>> = (0..10_000).map(|i| format!("key-{i}").into_bytes()).collect();
+    let mut i = 0usize;
+    report.push(Bench::new("insert (1M-capacity filter)").run(|| {
+        i = (i + 1) % keys.len();
+        filter.insert(&keys[i])
+    }));
+    let mut j = 0usize;
+    report.push(Bench::new("query hit").run(|| {
+        j = (j + 1) % keys.len();
+        filter.contains(&keys[j])
+    }));
+    report.push(Bench::new("query miss").run(|| filter.contains(b"never-inserted-key")));
+    report.push(
+        Bench::new("serialize 1.20 MB filter")
+            .throughput_bytes(filter.size_bytes() as u64)
+            .run(|| filter.to_bytes()),
+    );
+    report.finish();
+
+    // ------------------------------------------------- §5.2.3 catalog benefit
+    println!("\n== §5.2.3 — lookup cost per query: local catalog vs remote probing ==\n");
+    let link = LinkModel::wifi4_2g4();
+    let lo = DeviceProfile::pi_zero_2w();
+    let mut rows = Vec::new();
+    for hit_ratio in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        // with catalog: Bloom lookup always local; Redis only on (probable) hits
+        let with = lo.bloom_ms_per_lookup + hit_ratio * 0.0; // download cost counted in Redis phase either way
+        // without: probe the server — up to 4 EXISTS round trips on a miss,
+        // expected ~(1 + (1-hit)*3) probes finding the longest range
+        let probes = 1.0 + (1.0 - hit_ratio) * 3.0;
+        let without = probes * link.rtt.as_secs_f64() * 1e3;
+        rows.push(vec![
+            format!("{:.0}%", hit_ratio * 100.0),
+            format!("{with:.3}"),
+            format!("{without:.1}"),
+            format!("{:.0}x", without / with.max(1e-9)),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &["hit ratio", "with catalog [ms]", "without (probe) [ms]", "saving"],
+            &rows
+        )
+    );
+    println!("(paper: \"without the catalog, every inference would incur the Redis\n access overhead\" — the probing column is exactly that overhead)");
+
+    // --------------------------------------------------- §5.2.4 FP-rate sweep
+    println!("\n== §5.2.4 — expected Case-1 TTFT inflation vs Bloom FP rate ==\n");
+    let mut rows = Vec::new();
+    for fp in [0.001, 0.01, 0.05, 0.1, 0.25] {
+        let mut s = exp::Setting::low_end_paper();
+        s.fp_rate = fp;
+        let bd = exp::analytic_breakdown(&s, 65, 0, true);
+        let base = exp::analytic_breakdown(
+            &exp::Setting { fp_rate: 0.0, ..exp::Setting::low_end_paper() },
+            65,
+            0,
+            true,
+        );
+        let inflation =
+            bd.ttft().as_secs_f64() - base.ttft().as_secs_f64();
+        rows.push(vec![
+            format!("{fp}"),
+            format!("{:.1}", inflation * 1e3),
+            format!("{:.3}", inflation / base.ttft().as_secs_f64() * 100.0),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &["FP rate", "TTFT inflation [ms]", "relative [%]"],
+            &rows
+        )
+    );
+    println!("(paper: at 1 % the expected cost is 0.86 s x 0.01 ≈ 8.6 ms — negligible)");
+
+    // -------------------------------------------------- real forced-FP check
+    println!("\n== real forced-FP measurement (tiny preset, native) ==\n");
+    let Ok(engine) = Engine::load_preset("tiny") else {
+        println!("skipping (artifacts missing)");
+        return;
+    };
+    let engine = Arc::new(engine);
+    let cb = CacheBox::start_local().expect("cache box");
+    let mut cfg = EdgeClientConfig::native(Some(cb.addr()));
+    cfg.max_new_tokens = Some(2);
+    cfg.sync_interval = None;
+    let mut client = EdgeClient::new(Arc::clone(&engine), cfg).expect("client");
+    let gen = Generator::new(7);
+
+    // clean miss
+    let p_clean = gen.prompt("philosophy", 0, 1);
+    let r_clean = client.query(&p_clean).expect("clean");
+
+    // poisoned miss (every range falsely marked present)
+    let p_fp = gen.prompt("moral_disputes", 0, 1);
+    {
+        let tokens = engine.tokenize_prompt(&p_fp.full_text());
+        let meta = edgecache::catalog::ModelMeta::new(engine.model_hash());
+        let ranges = edgecache::catalog::ranges_for(
+            &meta,
+            &tokens,
+            &[tokens.len() / 2, tokens.len()],
+        );
+        client.catalog.lock().unwrap().register(&ranges);
+    }
+    let r_fp = client.query(&p_fp).expect("fp");
+    assert!(r_fp.false_positive);
+    println!(
+        "clean miss TTFT {:.2} ms vs forced-FP miss TTFT {:.2} ms (extra = wasted GET round trip)",
+        r_clean.breakdown.ttft().as_secs_f64() * 1e3,
+        r_fp.breakdown.ttft().as_secs_f64() * 1e3
+    );
+    println!("correctness preserved: FP query still produced {} tokens", r_fp.response_tokens.len());
+    client.shutdown();
+    cb.shutdown();
+}

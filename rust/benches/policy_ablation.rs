@@ -1,0 +1,124 @@
+//! Ablation: fetch policies across the device/link design space — the
+//! paper's §5.3 break-even discussion turned into a measurable sweep.
+//!
+//! The paper *always* fetches on a probable hit and shows that this loses on
+//! the high-end device (Table 2, +7 %).  [`FetchPolicy::BreakEven`] instead
+//! predicts transfer vs. local-prefill time per hit; this bench sweeps where
+//! the break-even point falls for each (device, link, state-size) corner and
+//! verifies the policy's end-to-end effect through the real stack.
+
+use std::sync::Arc;
+
+use edgecache::coordinator::{CacheBox, EdgeClient, EdgeClientConfig, FetchPolicy, HitCase};
+use edgecache::devicemodel::DeviceProfile;
+use edgecache::engine::Engine;
+use edgecache::netsim::LinkModel;
+use edgecache::report::ascii_table;
+use edgecache::report::experiments as exp;
+use edgecache::workload::Generator;
+
+fn main() {
+    edgecache::util::logger::init_from_env();
+
+    // --------------------------------------------------- break-even frontier
+    println!("== break-even token count per (device, link, state size) ==\n");
+    let mut rows = Vec::new();
+    for (dev_name, dev) in [
+        ("pi-zero-2w", DeviceProfile::pi_zero_2w()),
+        ("pi5-4gb", DeviceProfile::pi5_4gb()),
+    ] {
+        for (link_name, link) in [
+            ("wifi4-2g4", LinkModel::wifi4_2g4()),
+            ("ethernet-1g", LinkModel::ethernet_1g()),
+        ] {
+            for (model, bpt) in [("270M (34.5 KB/tok)", 34_474), ("1B (29.8 KB/tok)", 29_751)] {
+                let be = FetchPolicy::break_even_tokens(&dev, &link, bpt);
+                rows.push(vec![
+                    dev_name.to_string(),
+                    link_name.to_string(),
+                    model.to_string(),
+                    if be == usize::MAX { "never".into() } else { be.to_string() },
+                ]);
+            }
+        }
+    }
+    println!(
+        "{}",
+        ascii_table(&["device", "link", "state scale", "break-even tokens"], &rows)
+    );
+    println!("(paper §5.3: the low-end device wins almost immediately over Wi-Fi;\n the high-end device never reasonably breaks even on Wi-Fi but would on\n a wired cache box)");
+
+    // ------------------------------------------- policy effect on TTFT (analytic)
+    println!("\n== Case-5 TTFT under Always vs BreakEven (analytic) ==\n");
+    let mut rows = Vec::new();
+    for s in [exp::Setting::low_end_paper(), exp::Setting::high_end_paper()] {
+        let tokens = if s.name == "Low-end" { 65 } else { 334 };
+        let miss = exp::analytic_breakdown(&s, tokens, 0, false);
+        let hit = exp::analytic_breakdown(&s, tokens, tokens, false);
+        let fetch_wins = FetchPolicy::BreakEven.should_fetch(
+            &s.device,
+            &s.link,
+            tokens,
+            tokens * s.bytes_per_token,
+        );
+        let be_ttft = if fetch_wins { hit.ttft() } else { miss.ttft() };
+        rows.push(vec![
+            s.name.to_string(),
+            format!("{:.2}", miss.ttft().as_secs_f64()),
+            format!("{:.2}", hit.ttft().as_secs_f64()),
+            format!("{:.2}", be_ttft.as_secs_f64()),
+            (if fetch_wins { "fetch" } else { "decline" }).to_string(),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &["Setting", "miss TTFT [s]", "Always-hit TTFT [s]", "BreakEven TTFT [s]", "decision"],
+            &rows
+        )
+    );
+    println!("BreakEven recovers the high-end regression (chooses local prefill)\nwhile keeping the full low-end win — strictly dominates Always.");
+
+    // -------------------------------------------------- real-stack verification
+    println!("\n== real stack: BreakEven declines fetches that lose (tiny, native) ==\n");
+    let Ok(engine) = Engine::load_preset("tiny") else {
+        println!("skipping (artifacts missing)");
+        return;
+    };
+    let engine = Arc::new(engine);
+    let gen = Generator::new(31);
+    let p = gen.prompt("machine_learning", 0, 1);
+
+    for (label, policy, link) in [
+        ("Always on fast link", FetchPolicy::Always, LinkModel::loopback()),
+        ("BreakEven on fast link", FetchPolicy::BreakEven, LinkModel::ethernet_1g()),
+        (
+            "BreakEven on crippled link",
+            FetchPolicy::BreakEven,
+            LinkModel {
+                name: "crippled",
+                goodput_bps: 1e5,
+                rtt: std::time::Duration::from_millis(500),
+                jitter_frac: 0.0,
+            },
+        ),
+    ] {
+        let cb = CacheBox::start_local().expect("cache box");
+        let mut cfg = EdgeClientConfig::native(Some(cb.addr()));
+        cfg.max_new_tokens = Some(2);
+        cfg.sync_interval = None;
+        cfg.fetch_policy = policy;
+        cfg.link = link;
+        let mut c = EdgeClient::new(Arc::clone(&engine), cfg).expect("client");
+        let _ = c.query(&p).expect("seed");
+        let r = c.query(&p).expect("repeat");
+        println!(
+            "  {label:<28} -> case {} ({}), declined {}",
+            r.case.number(),
+            if r.case == HitCase::Full { "fetched" } else { "local" },
+            c.stats.fetches_declined
+        );
+        c.shutdown();
+        cb.shutdown();
+    }
+}

@@ -1,0 +1,95 @@
+//! Regenerates **Table 2 + Figure 4**: TTFT and TTLT on the low-end and
+//! high-end settings under Case 1 (cache miss) vs Case 5 (full hit).
+//!
+//! Two tracks (DESIGN.md §6):
+//!  * analytic — calibrated device/link models over the full 6434-prompt
+//!    population (paper scale; absolute numbers land on the paper's);
+//!  * real — the full stack (PJRT model, real sockets) on the `tiny` preset,
+//!    natively and, when `EDGECACHE_PACED=1`, device-paced on a small sample
+//!    (each paced low-end query costs ~24 s of wall clock).
+//!
+//! Env: EDGECACHE_BENCH_PROMPTS (default 6434), EDGECACHE_REAL_PROMPTS (4),
+//!      EDGECACHE_PACED (off).
+
+use std::sync::Arc;
+
+use edgecache::engine::Engine;
+use edgecache::report::experiments as exp;
+use edgecache::report::{ascii_bars, pct_change};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    edgecache::util::logger::init_from_env();
+    let n = env_usize("EDGECACHE_BENCH_PROMPTS", 6434);
+    let n_real = env_usize("EDGECACHE_REAL_PROMPTS", 4);
+    let seed = 42;
+
+    println!("================================================================");
+    println!(" Table 2 + Figure 4 — TTFT/TTLT, Case 1 (miss) vs Case 5 (hit)");
+    println!("================================================================");
+
+    println!("\n--- analytic track ({n} prompts/setting; paper ran 6434) ---\n");
+    let mut headline = Vec::new();
+    for s in [exp::Setting::low_end_paper(), exp::Setting::high_end_paper()] {
+        let (miss, hit) = exp::analytic_table23(&s, seed, n);
+        let (table, m) = exp::render_table2(s.name, &miss, &hit);
+        println!("{table}");
+        println!(
+            "{}",
+            ascii_bars(
+                &format!("Figure 4 — {} [s]", s.name),
+                &[
+                    ("TTFT case1".into(), m[0]),
+                    ("TTFT case5".into(), m[1]),
+                    ("TTLT case1".into(), m[2]),
+                    ("TTLT case5".into(), m[3]),
+                ],
+                "s",
+            )
+        );
+        headline.push((s.name, pct_change(m[1], m[0]), pct_change(m[3], m[2])));
+    }
+    println!("paper:    Low-end  TTFT −93.12 %   TTLT −50.07 %");
+    println!("paper:    High-end TTFT +7.08 %    TTLT +7.10 %");
+    for (name, dttft, dttlt) in &headline {
+        println!("measured: {name:<8} TTFT {dttft:+.2} %   TTLT {dttlt:+.2} %");
+    }
+
+    println!("\n--- real track (tiny preset, native speed, {n_real} prompts) ---\n");
+    match Engine::load_preset("tiny") {
+        Ok(engine) => {
+            let engine = Arc::new(engine);
+            let cfg = exp::RealRunCfg::native_tiny(n_real);
+            match exp::real_table23(Arc::clone(&engine), &cfg) {
+                Ok((miss, hit)) => {
+                    let (table, m) = exp::render_table2("tiny/native", &miss, &hit);
+                    println!("{table}");
+                    println!(
+                        "real-stack TTFT change on full hit: {:+.1} % (shape check: \
+                         negative = cache wins even without pacing)",
+                        pct_change(m[1], m[0])
+                    );
+                }
+                Err(e) => println!("real track failed: {e}"),
+            }
+
+            if std::env::var("EDGECACHE_PACED").is_ok() {
+                println!("\n--- real track, device-paced (low-end, 1 prompt) ---\n");
+                let mut cfg = exp::RealRunCfg::native_tiny(1);
+                cfg.paced = true;
+                cfg.setting = exp::Setting::low_end_paper();
+                match exp::real_table23(engine, &cfg) {
+                    Ok((miss, hit)) => {
+                        let (table, _) = exp::render_table2("low-end/paced", &miss, &hit);
+                        println!("{table}");
+                    }
+                    Err(e) => println!("paced run failed: {e}"),
+                }
+            }
+        }
+        Err(e) => println!("skipping real track (artifacts missing?): {e}"),
+    }
+}

@@ -1,0 +1,82 @@
+//! Regenerates **Table 3**: the six-component latency breakdown (Token /
+//! Bloom / P-decode / Redis / R-decode / Sample) for both settings under
+//! Case 1 and Case 5, plus # tokens and state size.
+//!
+//! Analytic track at population scale; real track shows the same breakdown
+//! measured through the actual client flow on the tiny preset.
+//!
+//! Env: EDGECACHE_BENCH_PROMPTS (default 6434), EDGECACHE_REAL_PROMPTS (4).
+
+use std::sync::Arc;
+
+use edgecache::engine::Engine;
+use edgecache::metrics::Phase;
+use edgecache::report::experiments as exp;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    edgecache::util::logger::init_from_env();
+    let n = env_usize("EDGECACHE_BENCH_PROMPTS", 6434);
+    let n_real = env_usize("EDGECACHE_REAL_PROMPTS", 4);
+    let seed = 42;
+
+    println!("================================================================");
+    println!(" Table 3 — latency breakdown [ms] per setting and case");
+    println!("================================================================");
+
+    println!("\n--- analytic track ({n} prompts/setting) ---\n");
+    let lo = exp::Setting::low_end_paper();
+    let hi = exp::Setting::high_end_paper();
+    let (lo_miss, lo_hit) = exp::analytic_table23(&lo, seed, n);
+    let (hi_miss, hi_hit) = exp::analytic_table23(&hi, seed, n);
+    println!(
+        "{}",
+        exp::render_table3(&[
+            ("Low-end (Case 1)", &lo_miss, lo.n_shots, lo.max_new),
+            ("Low-end (Case 5)", &lo_hit, lo.n_shots, lo.max_new),
+            ("High-end (Case 1)", &hi_miss, hi.n_shots, hi.max_new),
+            ("High-end (Case 5)", &hi_hit, hi.n_shots, hi.max_new),
+        ])
+    );
+    println!("paper reference [ms]:");
+    println!("  Low-end  (1): Token 3.46  Bloom 0.30 P-dec 12580.85 Redis 2.42†  R-dec 11061.04 Sample 95.69");
+    println!("  Low-end  (5): Token 3.46  Bloom 0.19 P-dec 0.00     Redis 861.92 R-dec 10904.67 Sample 84.82");
+    println!("  High-end (1): Token 1.61  Bloom 0.00 P-dec 2688.17  Redis 7.84†  R-dec 72.59    Sample 1.45");
+    println!("  High-end (5): Token 1.56  Bloom 0.00 P-dec 0.00     Redis 2887.04 R-dec 78.12   Sample 1.67");
+    println!("  († = expected false-positive cost)");
+    println!(
+        "\nshape checks: P-decode dominates Case 1 on the low-end ({}x Redis-on-hit); \
+         Redis-on-hit exceeds P-decode on the high-end ({:.2}x)",
+        (lo_miss.phase_mean_ms(Phase::PDecode) / lo_hit.phase_mean_ms(Phase::Redis)).round(),
+        hi_hit.phase_mean_ms(Phase::Redis) / hi_miss.phase_mean_ms(Phase::PDecode)
+    );
+
+    println!("\n--- real track (tiny preset, native, {n_real} prompts) ---\n");
+    match Engine::load_preset("tiny") {
+        Ok(engine) => {
+            let cfg = exp::RealRunCfg::native_tiny(n_real);
+            match exp::real_table23(Arc::new(engine), &cfg) {
+                Ok((miss, hit)) => {
+                    println!(
+                        "{}",
+                        exp::render_table3(&[
+                            ("tiny/native (Case 1)", &miss, 1, 8),
+                            ("tiny/native (Case 5)", &hit, 1, 8),
+                        ])
+                    );
+                    println!(
+                        "real-stack composition: Case 5 P-decode = {:.2} ms (must be 0), \
+                         Case 1 Redis = {:.2} ms (must be ~0: uploads are post-response)",
+                        hit.phase_mean_ms(Phase::PDecode),
+                        miss.phase_mean_ms(Phase::Redis),
+                    );
+                }
+                Err(e) => println!("real track failed: {e}"),
+            }
+        }
+        Err(e) => println!("skipping real track: {e}"),
+    }
+}

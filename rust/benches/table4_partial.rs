@@ -1,0 +1,151 @@
+//! Regenerates **Table 4 + Figure 5**: total decoding time (T-decode =
+//! P-decode + R-decode) under the five partial-matching cases, for one
+//! astronomy N=5 prompt, on both settings; Figure 5 stacks the Redis
+//! download cost on top for the low-end setting.
+//!
+//! The real track replays the actual five cases through the stack (tiny
+//! preset): seed upload, then queries crafted to land in Cases 1–5.
+//!
+//! Env: EDGECACHE_REAL (default on), EDGECACHE_SHOTS (2 for tiny).
+
+use std::sync::Arc;
+
+use edgecache::coordinator::{CacheBox, EdgeClient, EdgeClientConfig};
+use edgecache::engine::Engine;
+use edgecache::report::experiments as exp;
+use edgecache::report::{ascii_stacked_bars, ascii_table};
+use edgecache::workload::{Generator, Prompt};
+
+fn main() {
+    edgecache::util::logger::init_from_env();
+    let seed = 42;
+
+    println!("================================================================");
+    println!(" Table 4 + Figure 5 — partial matching (astronomy, N=5)");
+    println!("================================================================");
+
+    println!("\n--- analytic track ---\n");
+    for s in [exp::Setting::low_end_paper(), exp::Setting::high_end_paper()] {
+        let rows = exp::analytic_table4(&s, seed);
+        let body: Vec<Vec<String>> = rows
+            .iter()
+            .map(|(c, m, pct, td, _)| {
+                vec![
+                    format!("{} (Case {c})", s.name),
+                    m.to_string(),
+                    format!("{pct:.2}"),
+                    format!("{:.2}", td * 1e3),
+                ]
+            })
+            .collect();
+        println!(
+            "{}",
+            ascii_table(
+                &["Setting", "# matched", "% matched", "T-decode [ms]"],
+                &body
+            )
+        );
+        if s.name == "Low-end" {
+            let bars: Vec<(String, f64, f64)> = rows
+                .iter()
+                .map(|(c, _, _, td, redis)| (format!("Case {c}"), *td, *redis))
+                .collect();
+            println!(
+                "{}",
+                ascii_stacked_bars(
+                    "Figure 5 — Low-end: T-decode + Redis overhead [s]",
+                    &bars,
+                    "T-decode",
+                    "Redis",
+                    "s"
+                )
+            );
+        }
+    }
+    println!("paper reference (low-end, 405-token prompt):");
+    println!("  matched 1/10/57/340/405 -> T-decode 27204/26288/24590/13345/11221 ms");
+    println!("  (shape: monotone decrease; the knee is at Case 4)");
+
+    if std::env::var("EDGECACHE_REAL").as_deref() == Ok("0") {
+        return;
+    }
+    println!("\n--- real track (tiny preset, native) ---\n");
+    let engine = match Engine::load_preset("tiny") {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            println!("skipping real track: {e}");
+            return;
+        }
+    };
+    let shots: usize = std::env::var("EDGECACHE_SHOTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let cb = CacheBox::start_local().expect("cache box");
+    let mut cfg = EdgeClientConfig::native(Some(cb.addr()));
+    cfg.max_new_tokens = Some(2);
+    cfg.sync_interval = None;
+    let mut client = EdgeClient::new(Arc::clone(&engine), cfg).expect("client");
+
+    let gen = Generator::new(seed);
+    let seed_prompt = gen.prompt("astronomy", 0, shots);
+    let case2 = Prompt {
+        examples: gen.prompt("astronomy", 0, 0).examples.clone(),
+        target: gen.prompt("virology", 7, 0).target.clone(),
+        ..seed_prompt.clone()
+    };
+    let case3 = Prompt {
+        examples: {
+            let mut e = seed_prompt.examples.clone();
+            for x in e.iter_mut().skip(1) {
+                *x = seed_prompt.examples[0].replace("Answer", "ANSWER");
+            }
+            e
+        },
+        ..seed_prompt.clone()
+    };
+    let case4 = gen.prompt("astronomy", 1, shots);
+    let case5 = seed_prompt.clone();
+    let case1 = gen.prompt("world_religions", 3, shots);
+
+    let r0 = client.query(&seed_prompt).expect("seed");
+    println!(
+        "seeded cache: uploaded {:.2} MB across the prompt's ranges\n",
+        r0.uploaded_bytes as f64 / 1e6
+    );
+    let mut body = Vec::new();
+    for (label, p) in [
+        ("Case 1", &case1),
+        ("Case 2", &case2),
+        ("Case 3", &case3),
+        ("Case 4", &case4),
+        ("Case 5", &case5),
+    ] {
+        let r = client.query(p).expect(label);
+        body.push(vec![
+            format!("{label} (landed {})", r.case.number()),
+            r.matched_tokens.to_string(),
+            format!(
+                "{:.2}",
+                r.matched_tokens as f64 / r.prompt_tokens as f64 * 100.0
+            ),
+            format!("{:.2}", r.breakdown.t_decode().as_secs_f64() * 1e3),
+            format!(
+                "{:.2}",
+                r.breakdown
+                    .get(edgecache::metrics::Phase::Redis)
+                    .as_secs_f64()
+                    * 1e3
+            ),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &["Query", "# matched", "% matched", "T-decode [ms]", "Redis [ms]"],
+            &body
+        )
+    );
+    client.shutdown();
+    cb.shutdown();
+}

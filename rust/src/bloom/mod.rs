@@ -1,0 +1,345 @@
+//! Bloom filter — the data structure behind the paper's *catalog* (libbloom
+//! 2.0 analog, DESIGN.md §Substitutions).
+//!
+//! Sizing follows the standard closed forms: for target capacity `n` and
+//! false-positive ratio `p`,
+//!
+//! ```text
+//!   m = ceil(-n ln p / (ln 2)^2)      bits
+//!   k = round(m/n ln 2)               hash functions
+//! ```
+//!
+//! The paper's configuration — 1 M entries at 1 % — yields a 1.20 MB bitmap
+//! with k = 7, which [`BloomFilter::paper_default`] reproduces exactly and
+//! `tests::paper_sizing` pins.
+//!
+//! Hashing uses the Kirsch–Mitzenmacher double-hashing scheme over the two
+//! 64-bit halves of a SHA-256 digest: index_i = h1 + i*h2 (mod m).  The
+//! filter serializes to a versioned byte blob for master→local catalog
+//! synchronization, and supports `merge` (bitwise OR) for delta application.
+
+use sha2::{Digest, Sha256};
+use thiserror::Error;
+
+use crate::util::bytes::{Reader, Writer};
+
+#[derive(Debug, Error)]
+pub enum BloomError {
+    #[error("bad bloom blob: {0}")]
+    BadBlob(String),
+    #[error("incompatible filters: {0}")]
+    Incompatible(String),
+    #[error(transparent)]
+    Bytes(#[from] crate::util::bytes::ByteError),
+}
+
+const MAGIC: u32 = 0x424C4D31; // "BLM1"
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BloomFilter {
+    /// number of bits (m)
+    m_bits: u64,
+    /// number of hash functions (k)
+    k: u32,
+    /// design capacity (n) — informational
+    capacity: u64,
+    /// design false-positive ratio — informational
+    fp_rate: f64,
+    /// inserted-element counter (approximate under merge)
+    count: u64,
+    bits: Vec<u64>,
+}
+
+impl BloomFilter {
+    /// Dimension a filter for `capacity` elements at `fp_rate` false positives.
+    pub fn new(capacity: u64, fp_rate: f64) -> Self {
+        assert!(capacity > 0, "capacity must be positive");
+        assert!((0.0..1.0).contains(&fp_rate) && fp_rate > 0.0, "fp_rate in (0,1)");
+        let ln2 = std::f64::consts::LN_2;
+        let m = (-(capacity as f64) * fp_rate.ln() / (ln2 * ln2)).ceil() as u64;
+        let m = m.max(64);
+        let k = ((m as f64 / capacity as f64) * ln2).round().max(1.0) as u32;
+        BloomFilter {
+            m_bits: m,
+            k,
+            capacity,
+            fp_rate,
+            count: 0,
+            bits: vec![0u64; m.div_ceil(64) as usize],
+        }
+    }
+
+    /// The paper's configuration: 1 M entries, 1 % target FP ratio (≈1.20 MB).
+    pub fn paper_default() -> Self {
+        BloomFilter::new(1_000_000, 0.01)
+    }
+
+    pub fn m_bits(&self) -> u64 {
+        self.m_bits
+    }
+
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Bitmap size in bytes (the paper quotes 1.20 MB for the default).
+    pub fn size_bytes(&self) -> usize {
+        self.bits.len() * 8
+    }
+
+    fn hash_pair(key: &[u8]) -> (u64, u64) {
+        let digest = Sha256::digest(key);
+        let h1 = u64::from_le_bytes(digest[0..8].try_into().unwrap());
+        let h2 = u64::from_le_bytes(digest[8..16].try_into().unwrap());
+        // force h2 odd so the probe sequence cycles through distinct slots
+        (h1, h2 | 1)
+    }
+
+    #[inline]
+    fn set_bit(&mut self, idx: u64) {
+        self.bits[(idx / 64) as usize] |= 1u64 << (idx % 64);
+    }
+
+    #[inline]
+    fn get_bit(&self, idx: u64) -> bool {
+        self.bits[(idx / 64) as usize] & (1u64 << (idx % 64)) != 0
+    }
+
+    /// Insert a key.  Returns true if the key was (probably) new — i.e. at
+    /// least one bit flipped.
+    pub fn insert(&mut self, key: &[u8]) -> bool {
+        let (h1, h2) = Self::hash_pair(key);
+        let mut novel = false;
+        for i in 0..self.k as u64 {
+            let idx = h1.wrapping_add(i.wrapping_mul(h2)) % self.m_bits;
+            if !self.get_bit(idx) {
+                novel = true;
+                self.set_bit(idx);
+            }
+        }
+        if novel {
+            self.count += 1;
+        }
+        novel
+    }
+
+    /// Membership query; false positives possible at ~the design rate,
+    /// false negatives never.
+    pub fn contains(&self, key: &[u8]) -> bool {
+        let (h1, h2) = Self::hash_pair(key);
+        (0..self.k as u64).all(|i| {
+            let idx = h1.wrapping_add(i.wrapping_mul(h2)) % self.m_bits;
+            self.get_bit(idx)
+        })
+    }
+
+    /// Expected false-positive ratio at the current fill level:
+    /// `(1 - e^{-kn/m})^k`.
+    pub fn expected_fp_rate(&self) -> f64 {
+        let k = self.k as f64;
+        let n = self.count as f64;
+        let m = self.m_bits as f64;
+        (1.0 - (-k * n / m).exp()).powf(k)
+    }
+
+    /// Fraction of bits set (diagnostic; ~0.5 at design capacity).
+    pub fn fill_ratio(&self) -> f64 {
+        let ones: u64 = self.bits.iter().map(|w| w.count_ones() as u64).sum();
+        ones as f64 / self.m_bits as f64
+    }
+
+    /// Bitwise-OR another filter into this one (used to apply catalog deltas).
+    pub fn merge(&mut self, other: &BloomFilter) -> Result<(), BloomError> {
+        if self.m_bits != other.m_bits || self.k != other.k {
+            return Err(BloomError::Incompatible(format!(
+                "m/k mismatch: ({}, {}) vs ({}, {})",
+                self.m_bits, self.k, other.m_bits, other.k
+            )));
+        }
+        for (a, b) in self.bits.iter_mut().zip(&other.bits) {
+            *a |= b;
+        }
+        self.count = self.count.max(other.count); // lower bound, approximate
+        Ok(())
+    }
+
+    pub fn clear(&mut self) {
+        self.bits.iter_mut().for_each(|w| *w = 0);
+        self.count = 0;
+    }
+
+    // -- serialization (catalog sync wire format) ---------------------------
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(self.size_bytes() + 64);
+        w.u32(MAGIC);
+        w.u64(self.m_bits);
+        w.u32(self.k);
+        w.u64(self.capacity);
+        w.u64(self.fp_rate.to_bits());
+        w.u64(self.count);
+        w.u32(self.bits.len() as u32);
+        for word in &self.bits {
+            w.u64(*word);
+        }
+        w.into_vec()
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Result<Self, BloomError> {
+        let mut r = Reader::new(data);
+        let magic = r.u32()?;
+        if magic != MAGIC {
+            return Err(BloomError::BadBlob(format!("bad magic {magic:#x}")));
+        }
+        let m_bits = r.u64()?;
+        let k = r.u32()?;
+        let capacity = r.u64()?;
+        let fp_rate = f64::from_bits(r.u64()?);
+        let count = r.u64()?;
+        let n_words = r.u32()? as usize;
+        if n_words != m_bits.div_ceil(64) as usize {
+            return Err(BloomError::BadBlob(format!(
+                "word count {n_words} inconsistent with m={m_bits}"
+            )));
+        }
+        let mut bits = Vec::with_capacity(n_words);
+        for _ in 0..n_words {
+            bits.push(r.u64()?);
+        }
+        if r.remaining() != 0 {
+            return Err(BloomError::BadBlob("trailing bytes".into()));
+        }
+        Ok(BloomFilter { m_bits, k, capacity, fp_rate, count, bits })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop_n;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paper_sizing() {
+        // 1M entries @ 1% — the paper reports "only 1.20MB", k=7 from theory
+        let b = BloomFilter::paper_default();
+        let mb = b.size_bytes() as f64 / 1e6;
+        assert!(
+            (1.19..1.21).contains(&mb),
+            "paper says 1.20 MB, got {mb:.3} MB"
+        );
+        assert_eq!(b.k(), 7);
+    }
+
+    #[test]
+    fn no_false_negatives() {
+        run_prop_n("bloom-no-false-negatives", 32, |g| {
+            let n = g.size(500);
+            let mut b = BloomFilter::new(1000, 0.01);
+            let keys: Vec<Vec<u8>> = (0..n)
+                .map(|_| {
+                    let len = g.usize_in(1, 64);
+                    g.bytes(len)
+                })
+                .collect();
+            for k in &keys {
+                b.insert(k);
+            }
+            for k in &keys {
+                assert!(b.contains(k), "inserted key reported absent");
+            }
+        });
+    }
+
+    #[test]
+    fn fp_rate_near_design_point() {
+        // fill to design capacity, then measure FP ratio on fresh keys
+        let cap = 20_000u64;
+        let mut b = BloomFilter::new(cap, 0.01);
+        let mut rng = Rng::new(99);
+        for i in 0..cap {
+            b.insert(format!("member-{i}-{}", rng.next_u64()).as_bytes());
+        }
+        let trials = 50_000;
+        let mut fp = 0;
+        for i in 0..trials {
+            if b.contains(format!("nonmember-{i}").as_bytes()) {
+                fp += 1;
+            }
+        }
+        let rate = fp as f64 / trials as f64;
+        assert!(rate < 0.02, "measured FP rate {rate:.4} >> design 0.01");
+        assert!(rate > 0.001, "measured FP rate {rate:.4} implausibly low");
+        // analytic estimate agrees with measurement within 2x
+        let est = b.expected_fp_rate();
+        assert!(rate < est * 2.0 + 0.005 && est < 0.02, "est {est:.4} vs {rate:.4}");
+    }
+
+    #[test]
+    fn insert_novelty_flag() {
+        let mut b = BloomFilter::new(100, 0.01);
+        assert!(b.insert(b"alpha"));
+        assert!(!b.insert(b"alpha"), "second insert must report non-novel");
+        assert_eq!(b.count(), 1);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let mut b = BloomFilter::new(5000, 0.02);
+        for i in 0..1000 {
+            b.insert(format!("k{i}").as_bytes());
+        }
+        let blob = b.to_bytes();
+        let c = BloomFilter::from_bytes(&blob).unwrap();
+        assert_eq!(b, c);
+        for i in 0..1000 {
+            assert!(c.contains(format!("k{i}").as_bytes()));
+        }
+    }
+
+    #[test]
+    fn corrupt_blob_rejected() {
+        let mut b = BloomFilter::new(100, 0.01).to_bytes();
+        b[0] ^= 0xff; // magic
+        assert!(BloomFilter::from_bytes(&b).is_err());
+        let b2 = BloomFilter::new(100, 0.01).to_bytes();
+        assert!(BloomFilter::from_bytes(&b2[..b2.len() - 3]).is_err());
+        assert!(BloomFilter::from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn merge_is_union() {
+        let mut a = BloomFilter::new(1000, 0.01);
+        let mut b = BloomFilter::new(1000, 0.01);
+        a.insert(b"only-a");
+        b.insert(b"only-b");
+        a.merge(&b).unwrap();
+        assert!(a.contains(b"only-a"));
+        assert!(a.contains(b"only-b"));
+    }
+
+    #[test]
+    fn merge_incompatible_rejected() {
+        let mut a = BloomFilter::new(1000, 0.01);
+        let b = BloomFilter::new(2000, 0.01);
+        assert!(a.merge(&b).is_err());
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut a = BloomFilter::new(1000, 0.01);
+        a.insert(b"x");
+        a.clear();
+        assert!(!a.contains(b"x"));
+        assert_eq!(a.count(), 0);
+        assert_eq!(a.fill_ratio(), 0.0);
+    }
+}

@@ -1,0 +1,326 @@
+//! The *catalog* — the paper's §3.1/§3.2 contribution.
+//!
+//! A local Bloom filter on every client summarises which prompt-cache
+//! entries exist on the cache box, so a Redis round-trip happens only when a
+//! hit is probable.  Keys bind the cached state to everything that must
+//! match for it to be reusable (Figure 3, top): the **model metadata**
+//! (architecture hash, quantization) and the exact **token-id sequence** of
+//! a prompt range.
+//!
+//! Partial matching (§3.2) registers up to four nested prefix ranges per
+//! prompt — instruction / +first example / +all examples / full prompt — and
+//! lookup returns the *longest* probable match, since longer reused prefixes
+//! save more prefill time.
+//!
+//! [`LocalCatalog`] additionally tracks the master-catalog version it last
+//! synchronized to; the async sync loop lives in `coordinator` and applies
+//! [`LocalCatalog::apply_delta`].
+
+use sha2::{Digest, Sha256};
+
+use crate::bloom::BloomFilter;
+
+/// Length of a catalog key in bytes (truncated SHA-256; collision probability
+/// is negligible against the Bloom filter's own 1 % FP rate).
+pub const KEY_LEN: usize = 16;
+
+/// Everything that must be identical for a cached state to be restorable
+/// (paper: "model name and its configuration parameters ... distinguishes
+/// cached states from those generated under different model architectures or
+/// quantization settings").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelMeta {
+    /// `ModelConfig::model_hash()` from the artifact's meta.json.
+    pub model_hash: String,
+    /// Quantization / dtype tag (always "f32" for our artifacts).
+    pub quant: String,
+    /// State-blob format version (bumps invalidate all cached states).
+    pub state_format: u32,
+}
+
+impl ModelMeta {
+    pub fn new(model_hash: impl Into<String>) -> Self {
+        ModelMeta { model_hash: model_hash.into(), quant: "f32".into(), state_format: 1 }
+    }
+
+    fn digest_seed(&self) -> Vec<u8> {
+        let mut v = Vec::with_capacity(64);
+        v.extend_from_slice(self.model_hash.as_bytes());
+        v.push(0);
+        v.extend_from_slice(self.quant.as_bytes());
+        v.push(0);
+        v.extend_from_slice(&self.state_format.to_le_bytes());
+        v
+    }
+}
+
+/// Catalog key for (model meta, token-id range).  Also used verbatim as the
+/// cache box key for the state blob (prefixed "state:").
+pub fn range_key(meta: &ModelMeta, tokens: &[u32]) -> [u8; KEY_LEN] {
+    let mut h = Sha256::new();
+    h.update(meta.digest_seed());
+    h.update((tokens.len() as u64).to_le_bytes());
+    for t in tokens {
+        h.update(t.to_le_bytes());
+    }
+    let d = h.finalize();
+    let mut out = [0u8; KEY_LEN];
+    out.copy_from_slice(&d[..KEY_LEN]);
+    out
+}
+
+/// The kvstore key under which the state blob for `key` is stored.
+pub fn state_store_key(key: &[u8; KEY_LEN]) -> Vec<u8> {
+    let mut v = Vec::with_capacity(6 + KEY_LEN * 2);
+    v.extend_from_slice(b"state:");
+    v.extend_from_slice(crate::util::hex::encode(key).as_bytes());
+    v
+}
+
+/// A candidate prefix range of a tokenized prompt.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PromptRange {
+    /// Number of prompt tokens this range covers (a strict prefix length).
+    pub token_len: usize,
+    pub key: [u8; KEY_LEN],
+}
+
+/// Compute catalog keys for a set of nested prefix lengths of `tokens`.
+/// Lengths are deduplicated, clamped to the prompt length and sorted
+/// ascending; zero-length ranges are dropped.
+pub fn ranges_for(meta: &ModelMeta, tokens: &[u32], prefix_lens: &[usize]) -> Vec<PromptRange> {
+    let mut lens: Vec<usize> = prefix_lens
+        .iter()
+        .map(|&l| l.min(tokens.len()))
+        .filter(|&l| l > 0)
+        .collect();
+    lens.sort_unstable();
+    lens.dedup();
+    lens.into_iter()
+        .map(|l| PromptRange { token_len: l, key: range_key(meta, &tokens[..l]) })
+        .collect()
+}
+
+/// Result of a local-catalog lookup.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Lookup {
+    /// No range is (probably) cached.
+    Miss,
+    /// The longest probable hit.
+    Hit(PromptRange),
+}
+
+/// Client-side catalog state: Bloom filter + sync cursor.
+#[derive(Debug)]
+pub struct LocalCatalog {
+    pub filter: BloomFilter,
+    /// Master-catalog version this filter has incorporated.
+    pub synced_version: u64,
+    /// Minimum range length worth fetching (paper §3.2: "a match of
+    /// sufficient length"); ranges shorter than this are ignored at lookup.
+    pub min_hit_tokens: usize,
+}
+
+impl LocalCatalog {
+    pub fn new() -> Self {
+        LocalCatalog {
+            filter: BloomFilter::paper_default(),
+            synced_version: 0,
+            min_hit_tokens: 1,
+        }
+    }
+
+    pub fn with_filter(filter: BloomFilter) -> Self {
+        LocalCatalog { filter, synced_version: 0, min_hit_tokens: 1 }
+    }
+
+    /// Step 2 of the client flow: probe all candidate ranges, return the
+    /// longest probable hit of sufficient length.
+    pub fn lookup(&self, ranges: &[PromptRange]) -> Lookup {
+        let mut best: Option<&PromptRange> = None;
+        for r in ranges {
+            if r.token_len >= self.min_hit_tokens && self.filter.contains(&r.key) {
+                match best {
+                    Some(b) if b.token_len >= r.token_len => {}
+                    _ => best = Some(r),
+                }
+            }
+        }
+        match best {
+            Some(r) => Lookup::Hit(r.clone()),
+            None => Lookup::Miss,
+        }
+    }
+
+    /// Step 3 (miss path): after uploading new states, reflect them locally
+    /// so this client does not re-upload or re-miss its own entries.
+    pub fn register(&mut self, ranges: &[PromptRange]) {
+        for r in ranges {
+            self.filter.insert(&r.key);
+        }
+    }
+
+    pub fn register_key(&mut self, key: &[u8]) {
+        self.filter.insert(key);
+    }
+
+    /// Apply a master-catalog delta (async sync, Figure 2 green arrow).
+    pub fn apply_delta(&mut self, new_version: u64, keys: &[Vec<u8>]) {
+        for k in keys {
+            self.filter.insert(k);
+        }
+        self.synced_version = self.synced_version.max(new_version);
+    }
+}
+
+impl Default for LocalCatalog {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop_n;
+
+    fn meta() -> ModelMeta {
+        ModelMeta::new("abcd1234")
+    }
+
+    #[test]
+    fn key_depends_on_tokens_and_meta() {
+        let m = meta();
+        let k1 = range_key(&m, &[1, 2, 3]);
+        let k2 = range_key(&m, &[1, 2, 4]);
+        let k3 = range_key(&m, &[1, 2]);
+        assert_ne!(k1, k2);
+        assert_ne!(k1, k3);
+        // different model hash → different key space
+        let m2 = ModelMeta::new("ffff0000");
+        assert_ne!(range_key(&m, &[1, 2, 3]), range_key(&m2, &[1, 2, 3]));
+        // different quantization → different key (paper §3.1)
+        let mut m3 = meta();
+        m3.quant = "q4".into();
+        assert_ne!(range_key(&m, &[1, 2, 3]), range_key(&m3, &[1, 2, 3]));
+        // stable across calls
+        assert_eq!(k1, range_key(&meta(), &[1, 2, 3]));
+    }
+
+    #[test]
+    fn key_not_confusable_across_lengths() {
+        // ensure the length prefix prevents [1,2]+[3] v [1]+[2,3] style issues
+        let m = meta();
+        let a = range_key(&m, &[0x00010002]);
+        let b = range_key(&m, &[0x0001, 0x0002]);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn ranges_sorted_deduped_clamped() {
+        let m = meta();
+        let toks: Vec<u32> = (0..50).collect();
+        let rs = ranges_for(&m, &toks, &[10, 25, 50, 120, 25, 0]);
+        let lens: Vec<usize> = rs.iter().map(|r| r.token_len).collect();
+        assert_eq!(lens, vec![10, 25, 50]);
+        for r in &rs {
+            assert_eq!(r.key, range_key(&m, &toks[..r.token_len]));
+        }
+    }
+
+    #[test]
+    fn lookup_returns_longest_hit() {
+        let m = meta();
+        let toks: Vec<u32> = (0..100).collect();
+        let rs = ranges_for(&m, &toks, &[10, 40, 70, 100]);
+        let mut cat = LocalCatalog::new();
+        // register only the 10 and 70 ranges
+        cat.register(&[rs[0].clone(), rs[2].clone()]);
+        match cat.lookup(&rs) {
+            Lookup::Hit(r) => assert_eq!(r.token_len, 70),
+            other => panic!("expected hit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lookup_miss_when_nothing_registered() {
+        let m = meta();
+        let toks: Vec<u32> = (0..30).collect();
+        let rs = ranges_for(&m, &toks, &[10, 20, 30]);
+        let cat = LocalCatalog::new();
+        assert_eq!(cat.lookup(&rs), Lookup::Miss);
+    }
+
+    #[test]
+    fn min_hit_tokens_filters_short_ranges() {
+        let m = meta();
+        let toks: Vec<u32> = (0..100).collect();
+        let rs = ranges_for(&m, &toks, &[5, 80]);
+        let mut cat = LocalCatalog::new();
+        cat.register(&rs);
+        cat.min_hit_tokens = 10;
+        // only the 80-range qualifies
+        match cat.lookup(&rs[..1]) {
+            Lookup::Miss => {}
+            other => panic!("5-token range should be ignored, got {other:?}"),
+        }
+        match cat.lookup(&rs) {
+            Lookup::Hit(r) => assert_eq!(r.token_len, 80),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn delta_sync_propagates_remote_entries() {
+        let m = meta();
+        let toks: Vec<u32> = (0..60).collect();
+        let rs = ranges_for(&m, &toks, &[20, 40, 60]);
+
+        // client A registers; its keys travel via the master log to client B
+        let mut a = LocalCatalog::new();
+        a.register(&rs);
+        let log: Vec<Vec<u8>> = rs.iter().map(|r| r.key.to_vec()).collect();
+
+        let mut b = LocalCatalog::new();
+        assert_eq!(b.lookup(&rs), Lookup::Miss);
+        b.apply_delta(3, &log);
+        assert_eq!(b.synced_version, 3);
+        match b.lookup(&rs) {
+            Lookup::Hit(r) => assert_eq!(r.token_len, 60),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn apply_delta_version_monotone() {
+        let mut c = LocalCatalog::new();
+        c.apply_delta(5, &[]);
+        c.apply_delta(3, &[]); // stale delta must not regress the cursor
+        assert_eq!(c.synced_version, 5);
+    }
+
+    #[test]
+    fn no_false_negatives_property() {
+        run_prop_n("catalog-no-false-negatives", 64, |g| {
+            let m = ModelMeta::new(g.ascii_string(8));
+            let n = g.usize_in(4, 200);
+            let toks = g.tokens(n, 4096);
+            let lens = [n / 4, n / 2, n];
+            let rs = ranges_for(&m, &toks, &lens);
+            let mut cat = LocalCatalog::new();
+            cat.register(&rs);
+            match cat.lookup(&rs) {
+                Lookup::Hit(r) => assert_eq!(r.token_len, n, "longest wins"),
+                Lookup::Miss => panic!("registered ranges must hit"),
+            }
+        });
+    }
+
+    #[test]
+    fn state_store_key_format() {
+        let k = range_key(&meta(), &[1, 2, 3]);
+        let sk = state_store_key(&k);
+        assert!(sk.starts_with(b"state:"));
+        assert_eq!(sk.len(), 6 + 32);
+    }
+}

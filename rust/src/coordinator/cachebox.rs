@@ -1,0 +1,66 @@
+//! The *cache box* (Figure 1, middle node): a single process hosting the
+//! prompt-cache keyspace and the master catalog.  The paper uses an
+//! off-the-shelf Redis on a Raspberry Pi 5 16 GB; ours is the [`KvServer`]
+//! substrate with a configurable memory budget.
+
+use anyhow::Result;
+
+use crate::kvstore::server::ServerHandle;
+use crate::kvstore::KvServer;
+
+pub struct CacheBox {
+    pub handle: ServerHandle,
+}
+
+impl CacheBox {
+    /// Start a cache box on `addr` (`"127.0.0.1:0"` for an ephemeral port).
+    /// `max_bytes` bounds the prompt-cache keyspace (the Pi 5 in the paper
+    /// has 16 GB; eviction is exact-LRU).
+    pub fn start(addr: &str, max_bytes: usize) -> Result<CacheBox> {
+        let server = KvServer::new(max_bytes);
+        let handle = server.serve(addr)?;
+        Ok(CacheBox { handle })
+    }
+
+    /// Default-sized cache box on an ephemeral localhost port.
+    pub fn start_local() -> Result<CacheBox> {
+        Self::start("127.0.0.1:0", 14 << 30)
+    }
+
+    pub fn addr(&self) -> String {
+        self.handle.addr_string()
+    }
+
+    pub fn stats(&self) -> (usize, usize, u64) {
+        let s = self.handle.server.store.lock().unwrap();
+        (s.len(), s.used_bytes(), s.evictions)
+    }
+
+    pub fn catalog_version(&self) -> u64 {
+        self.handle.server.catalog.lock().unwrap().version()
+    }
+
+    pub fn shutdown(self) {
+        self.handle.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::KvClient;
+
+    #[test]
+    fn start_query_shutdown() {
+        let cb = CacheBox::start_local().unwrap();
+        let mut c = KvClient::connect(&cb.addr()).unwrap();
+        c.ping().unwrap();
+        c.set(b"x", b"y").unwrap();
+        let (keys, bytes, ev) = cb.stats();
+        assert_eq!(keys, 1);
+        assert!(bytes >= 2);
+        assert_eq!(ev, 0);
+        assert_eq!(cb.catalog_version(), 0);
+        cb.shutdown();
+    }
+}

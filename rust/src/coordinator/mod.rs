@@ -1,0 +1,21 @@
+//! The distributed prompt-caching coordinator — the paper's system
+//! contribution (§3), assembled from the substrate modules:
+//!
+//! * [`cachebox`] — the middle node of Figure 1: kvstore server + master
+//!   catalog in one process;
+//! * [`client`] — [`client::EdgeClient`], the steps 1–4 inference flow with
+//!   partial matching, false-positive fallback and post-response uploads;
+//! * [`sync`] — the asynchronous local-catalog synchronization loop
+//!   (Figure 2, green arrow);
+//! * [`policy`] — fetch policies: the paper's always-fetch-on-hit plus a
+//!   break-even extension (§5.3 analysis turned into a runtime policy).
+
+pub mod cachebox;
+pub mod client;
+pub mod policy;
+pub mod sync;
+
+pub use cachebox::CacheBox;
+pub use client::{EdgeClient, EdgeClientConfig, HitCase, QueryResult};
+pub use policy::FetchPolicy;
+pub use sync::CatalogSync;

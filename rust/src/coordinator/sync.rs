@@ -1,0 +1,189 @@
+//! Asynchronous local-catalog synchronization (paper §3.1, Figure 2 green
+//! arrow): a background thread pulls master-catalog deltas on an interval
+//! and merges them into the client's local Bloom filter, off the inference
+//! path ("synchronized with the server asynchronously ... so as not to
+//! impact inference latency").
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::catalog::LocalCatalog;
+use crate::kvstore::KvClient;
+use crate::log_debug;
+
+pub struct CatalogSync {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    /// Completed sync rounds (diagnostics / test synchronisation).
+    pub rounds: Arc<AtomicU64>,
+}
+
+impl CatalogSync {
+    /// Spawn the sync loop against `server_addr`, merging into `catalog`
+    /// every `interval`.  The loop opens its own connection so it never
+    /// contends with the client's request-path connection.
+    pub fn spawn(
+        server_addr: String,
+        catalog: Arc<Mutex<LocalCatalog>>,
+        interval: Duration,
+    ) -> Result<CatalogSync> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let rounds = Arc::new(AtomicU64::new(0));
+        let stop2 = Arc::clone(&stop);
+        let rounds2 = Arc::clone(&rounds);
+        let thread = std::thread::Builder::new()
+            .name("catalog-sync".into())
+            .spawn(move || {
+                let mut conn: Option<KvClient> = None;
+                while !stop2.load(Ordering::SeqCst) {
+                    if conn.is_none() {
+                        conn = KvClient::connect(&server_addr).ok();
+                    }
+                    if let Some(c) = conn.as_mut() {
+                        if let Err(e) = Self::sync_once(c, &catalog) {
+                            log_debug!("catalog-sync", "round failed: {e}; reconnecting");
+                            conn = None;
+                        } else {
+                            rounds2.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                    // sleep in small steps so shutdown is prompt
+                    let mut left = interval;
+                    while !left.is_zero() && !stop2.load(Ordering::SeqCst) {
+                        let step = left.min(Duration::from_millis(20));
+                        std::thread::sleep(step);
+                        left -= step;
+                    }
+                }
+            })?;
+        Ok(CatalogSync { stop, thread: Some(thread), rounds })
+    }
+
+    /// One pull-merge round (also used synchronously in tests).
+    pub fn sync_once(conn: &mut KvClient, catalog: &Arc<Mutex<LocalCatalog>>) -> Result<()> {
+        let since = catalog.lock().unwrap().synced_version;
+        let remote = conn.catalog_version()?;
+        if remote <= since {
+            return Ok(());
+        }
+        let (mut ver, mut keys) = conn.catalog_delta(since)?;
+        loop {
+            {
+                let mut cat = catalog.lock().unwrap();
+                cat.apply_delta(ver, &keys);
+            }
+            if ver >= remote {
+                break;
+            }
+            let (v2, k2) = conn.catalog_delta(ver)?;
+            ver = v2;
+            keys = k2;
+            if keys.is_empty() && ver >= remote {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn stop(mut self) {
+        self.do_stop();
+    }
+
+    fn do_stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for CatalogSync {
+    fn drop(&mut self) {
+        self.do_stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cachebox::CacheBox;
+
+    #[test]
+    fn background_sync_propagates_keys() {
+        let cb = CacheBox::start_local().unwrap();
+        let catalog = Arc::new(Mutex::new(LocalCatalog::new()));
+        let sync = CatalogSync::spawn(
+            cb.addr(),
+            Arc::clone(&catalog),
+            Duration::from_millis(10),
+        )
+        .unwrap();
+
+        // another client registers keys on the master
+        let mut c = KvClient::connect(&cb.addr()).unwrap();
+        c.catalog_register(b"remote-key-1").unwrap();
+        c.catalog_register(b"remote-key-2").unwrap();
+
+        // wait for the loop to pick them up
+        let t0 = std::time::Instant::now();
+        loop {
+            {
+                let cat = catalog.lock().unwrap();
+                if cat.synced_version >= 2 {
+                    assert!(cat.filter.contains(b"remote-key-1"));
+                    assert!(cat.filter.contains(b"remote-key-2"));
+                    break;
+                }
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "sync did not converge"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        sync.stop();
+        cb.shutdown();
+    }
+
+    #[test]
+    fn sync_once_is_incremental() {
+        let cb = CacheBox::start_local().unwrap();
+        let catalog = Arc::new(Mutex::new(LocalCatalog::new()));
+        let mut reg = KvClient::connect(&cb.addr()).unwrap();
+        let mut conn = KvClient::connect(&cb.addr()).unwrap();
+
+        reg.catalog_register(b"k1").unwrap();
+        CatalogSync::sync_once(&mut conn, &catalog).unwrap();
+        assert_eq!(catalog.lock().unwrap().synced_version, 1);
+
+        reg.catalog_register(b"k2").unwrap();
+        CatalogSync::sync_once(&mut conn, &catalog).unwrap();
+        let cat = catalog.lock().unwrap();
+        assert_eq!(cat.synced_version, 2);
+        assert!(cat.filter.contains(b"k1") && cat.filter.contains(b"k2"));
+        drop(cat);
+
+        // no-op round when nothing changed
+        CatalogSync::sync_once(&mut conn, &catalog).unwrap();
+        assert_eq!(catalog.lock().unwrap().synced_version, 2);
+        cb.shutdown();
+    }
+
+    #[test]
+    fn sync_survives_server_restart_cycle() {
+        // server down -> loop keeps retrying without panicking
+        let catalog = Arc::new(Mutex::new(LocalCatalog::new()));
+        let sync = CatalogSync::spawn(
+            "127.0.0.1:1".into(), // nothing listens here
+            Arc::clone(&catalog),
+            Duration::from_millis(5),
+        )
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(catalog.lock().unwrap().synced_version, 0);
+        sync.stop();
+    }
+}

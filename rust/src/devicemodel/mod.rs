@@ -1,0 +1,257 @@
+//! Device pacing — the Raspberry Pi substitute.
+//!
+//! The paper's clients are a Raspberry Pi Zero 2W (Cortex-A53 @1 GHz, 512 MB)
+//! and a Raspberry Pi 5 (Cortex-A76 @2.4 GHz).  We execute the real model on
+//! the host CPU, then *stretch* each compute phase to the target device's
+//! calibrated per-token rates: a [`Pacer`] measures the real duration and
+//! sleeps the remainder, so paced time = `max(real, modelled)` and every
+//! logit is still genuinely computed.
+//!
+//! Rates are derived from paper Table 3 (ms, averaged over 6434 prompts):
+//!
+//! | device            | model | prefill/tok | decode/tok | sample/tok | tokenize/tok |
+//! |-------------------|-------|------------:|-----------:|-----------:|-------------:|
+//! | Pi Zero 2W (low)  | 270M  | 192.75      | 172.1      | 1.49       | 0.053        |
+//! | Pi 5 4GB (high)   | 1B    | 8.046       | 72.59      | 1.45       | 0.0048       |
+//!
+//! (prefill/tok = P-decode 12580.85 ms ÷ 65.27 tokens, etc.  The low-end
+//! R-decode of 11061 ms at 1.49 ms/sample implies ≈64 generated tokens —
+//! the 270M model rambles; the 1B model answers in one token.)
+//!
+//! `DeviceProfile::host` disables pacing (native measurement mode).
+
+use std::time::{Duration, Instant};
+
+/// Calibrated per-phase costs of one device+model pairing.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// ms of prefill compute per prompt token (P-decode rate).
+    pub prefill_ms_per_tok: f64,
+    /// ms of forward-pass compute per generated token (R-decode rate).
+    pub decode_ms_per_tok: f64,
+    /// ms to sample one token from the logits.
+    pub sample_ms_per_tok: f64,
+    /// ms to tokenize one prompt token.
+    pub tokenize_ms_per_tok: f64,
+    /// ms for one local catalog (Bloom) query batch.
+    pub bloom_ms_per_lookup: f64,
+    /// Typical generated-response length for this device's model (the paper's
+    /// implied 64 tokens for 270M, 1 for 1B).
+    pub typical_response_tokens: usize,
+}
+
+impl DeviceProfile {
+    /// Raspberry Pi Zero 2W running Gemma-3-270M-class (paper low-end).
+    pub fn pi_zero_2w() -> Self {
+        DeviceProfile {
+            name: "pi-zero-2w",
+            prefill_ms_per_tok: 12580.85 / 65.27,
+            decode_ms_per_tok: 11061.04 / 64.27,
+            sample_ms_per_tok: 95.69 / 64.27,
+            tokenize_ms_per_tok: 3.46 / 65.27,
+            bloom_ms_per_lookup: 0.30,
+            typical_response_tokens: 64,
+        }
+    }
+
+    /// Raspberry Pi 5 (4 GB) running Gemma-3-1B-class (paper high-end).
+    pub fn pi5_4gb() -> Self {
+        DeviceProfile {
+            name: "pi5-4gb",
+            prefill_ms_per_tok: 2688.17 / 334.11,
+            decode_ms_per_tok: 72.59,
+            sample_ms_per_tok: 1.45,
+            tokenize_ms_per_tok: 1.61 / 334.11,
+            bloom_ms_per_lookup: 0.01,
+            typical_response_tokens: 1,
+        }
+    }
+
+    /// No pacing: report raw host performance.
+    pub fn host() -> Self {
+        DeviceProfile {
+            name: "host",
+            prefill_ms_per_tok: 0.0,
+            decode_ms_per_tok: 0.0,
+            sample_ms_per_tok: 0.0,
+            tokenize_ms_per_tok: 0.0,
+            bloom_ms_per_lookup: 0.0,
+            typical_response_tokens: 8,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "pi-zero-2w" | "low-end" | "low" => Some(Self::pi_zero_2w()),
+            "pi5-4gb" | "high-end" | "high" => Some(Self::pi5_4gb()),
+            "host" | "native" | "none" => Some(Self::host()),
+            _ => None,
+        }
+    }
+
+    pub fn is_host(&self) -> bool {
+        self.prefill_ms_per_tok == 0.0 && self.decode_ms_per_tok == 0.0
+    }
+
+    // -- analytic model (no execution; used for full-population sweeps) -----
+
+    pub fn prefill_time(&self, tokens: usize) -> Duration {
+        Duration::from_secs_f64(self.prefill_ms_per_tok * tokens as f64 / 1e3)
+    }
+
+    pub fn decode_time(&self, tokens: usize) -> Duration {
+        Duration::from_secs_f64(self.decode_ms_per_tok * tokens as f64 / 1e3)
+    }
+
+    pub fn sample_time(&self, tokens: usize) -> Duration {
+        Duration::from_secs_f64(self.sample_ms_per_tok * tokens as f64 / 1e3)
+    }
+
+    pub fn tokenize_time(&self, tokens: usize) -> Duration {
+        Duration::from_secs_f64(self.tokenize_ms_per_tok * tokens as f64 / 1e3)
+    }
+
+    pub fn bloom_time(&self, lookups: usize) -> Duration {
+        Duration::from_secs_f64(self.bloom_ms_per_lookup * lookups as f64 / 1e3)
+    }
+}
+
+/// Stretches real compute to a device's modelled duration.
+#[derive(Debug, Clone)]
+pub struct Pacer {
+    pub profile: DeviceProfile,
+    /// Total sleep injected (diagnostic: modelled − real).
+    pub injected: Duration,
+    /// Total real compute observed.
+    pub real: Duration,
+}
+
+impl Pacer {
+    pub fn new(profile: DeviceProfile) -> Self {
+        Pacer { profile, injected: Duration::ZERO, real: Duration::ZERO }
+    }
+
+    /// Run `op` and stretch to `target`; returns op's output.
+    pub fn paced<T>(&mut self, target: Duration, op: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = op();
+        let real = t0.elapsed();
+        self.real += real;
+        if !self.profile.is_host() && real < target {
+            let pad = target - real;
+            std::thread::sleep(pad);
+            self.injected += pad;
+        }
+        out
+    }
+
+    pub fn paced_prefill<T>(&mut self, tokens: usize, op: impl FnOnce() -> T) -> T {
+        let t = self.profile.prefill_time(tokens);
+        self.paced(t, op)
+    }
+
+    pub fn paced_decode<T>(&mut self, tokens: usize, op: impl FnOnce() -> T) -> T {
+        let t = self.profile.decode_time(tokens);
+        self.paced(t, op)
+    }
+
+    pub fn paced_sample<T>(&mut self, tokens: usize, op: impl FnOnce() -> T) -> T {
+        let t = self.profile.sample_time(tokens);
+        self.paced(t, op)
+    }
+
+    pub fn paced_tokenize<T>(&mut self, tokens_estimate: usize, op: impl FnOnce() -> T) -> T {
+        let t = self.profile.tokenize_time(tokens_estimate);
+        self.paced(t, op)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table3_low_end_reconstruction() {
+        // P-decode for the mean 65.27-token prompt must land on 12.58 s
+        let p = DeviceProfile::pi_zero_2w();
+        let t = p.prefill_time(65).as_secs_f64();
+        assert!((12.3..12.8).contains(&t), "{t}");
+        // R-decode + Sample for ~64 generated tokens ≈ 11.16 s
+        let d = (p.decode_time(64) + p.sample_time(64)).as_secs_f64();
+        assert!((10.8..11.4).contains(&d), "{d}");
+    }
+
+    #[test]
+    fn paper_table3_high_end_reconstruction() {
+        let p = DeviceProfile::pi5_4gb();
+        let t = p.prefill_time(334).as_secs_f64();
+        assert!((2.6..2.8).contains(&t), "{t}");
+        let d = (p.decode_time(1) + p.sample_time(1)).as_secs_f64();
+        assert!((0.07..0.08).contains(&d), "{d}");
+    }
+
+    #[test]
+    fn low_end_much_slower_than_high_end_per_token() {
+        let lo = DeviceProfile::pi_zero_2w();
+        let hi = DeviceProfile::pi5_4gb();
+        let ratio = lo.prefill_ms_per_tok / hi.prefill_ms_per_tok;
+        // A53@1GHz w/ 270M vs A76@2.4GHz w/ 1B: paper implies ~24x per-token
+        assert!((15.0..35.0).contains(&ratio), "ratio {ratio:.1}");
+    }
+
+    #[test]
+    fn pacer_stretches_fast_ops() {
+        let mut p = Pacer::new(DeviceProfile {
+            name: "test",
+            prefill_ms_per_tok: 10.0,
+            decode_ms_per_tok: 0.0,
+            sample_ms_per_tok: 0.0,
+            tokenize_ms_per_tok: 0.0,
+            bloom_ms_per_lookup: 0.0,
+            typical_response_tokens: 1,
+        });
+        let t0 = Instant::now();
+        let v = p.paced_prefill(5, || 7); // target 50 ms
+        assert_eq!(v, 7);
+        assert!(t0.elapsed() >= Duration::from_millis(49));
+        assert!(p.injected >= Duration::from_millis(40));
+    }
+
+    #[test]
+    fn host_profile_never_sleeps() {
+        let mut p = Pacer::new(DeviceProfile::host());
+        let t0 = Instant::now();
+        p.paced_prefill(1000, || ());
+        p.paced_decode(1000, || ());
+        assert!(t0.elapsed() < Duration::from_millis(20));
+        assert_eq!(p.injected, Duration::ZERO);
+    }
+
+    #[test]
+    fn pacer_does_not_shrink_slow_ops() {
+        let mut p = Pacer::new(DeviceProfile::pi5_4gb());
+        let t0 = Instant::now();
+        // target for 1 token ≈ 8 ms; op takes 30 ms
+        p.paced_prefill(1, || std::thread::sleep(Duration::from_millis(30)));
+        let el = t0.elapsed();
+        assert!(el >= Duration::from_millis(30));
+        assert!(el < Duration::from_millis(60));
+    }
+
+    #[test]
+    fn by_name_aliases() {
+        assert_eq!(DeviceProfile::by_name("low-end").unwrap().name, "pi-zero-2w");
+        assert_eq!(DeviceProfile::by_name("high").unwrap().name, "pi5-4gb");
+        assert!(DeviceProfile::by_name("host").unwrap().is_host());
+        assert!(DeviceProfile::by_name("cray-1").is_none());
+    }
+
+    #[test]
+    fn analytic_times_linear() {
+        let p = DeviceProfile::pi_zero_2w();
+        let t10 = p.prefill_time(10).as_secs_f64();
+        let t20 = p.prefill_time(20).as_secs_f64();
+        assert!((t20 / t10 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,288 @@
+//! Blocking, pipelined RESP client — the Hiredis analog the edge clients
+//! link against.
+//!
+//! All cache-box operations the coordinator performs go through here:
+//! state download (`GET`), state upload (`SET`), existence probes and the
+//! catalog-sync calls.  `pipeline` issues several commands in one write and
+//! reads the replies back in order (used by the upload path, which SETs all
+//! four prompt ranges in one round trip).
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::resp::{read_value, request, Decoder, Value};
+
+pub struct KvClient {
+    stream: TcpStream,
+    dec: Decoder,
+    pub addr: String,
+}
+
+impl KvClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true)?;
+        Ok(KvClient { stream, dec: Decoder::new(), addr: addr.to_string() })
+    }
+
+    pub fn connect_timeout(addr: &str, timeout: Duration) -> Result<Self> {
+        let sock_addr: std::net::SocketAddr =
+            addr.parse().with_context(|| format!("parse addr {addr}"))?;
+        let stream = TcpStream::connect_timeout(&sock_addr, timeout)
+            .with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true)?;
+        Ok(KvClient { stream, dec: Decoder::new(), addr: addr.to_string() })
+    }
+
+    pub fn set_io_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(timeout)?;
+        self.stream.set_write_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Issue one command and read its reply.
+    pub fn command(&mut self, parts: &[&[u8]]) -> Result<Value> {
+        let req = request(parts);
+        self.stream.write_all(&req.encode())?;
+        let v = read_value(&mut self.stream, &mut self.dec)?;
+        if let Value::Error(e) = &v {
+            bail!("server error: {e}");
+        }
+        Ok(v)
+    }
+
+    /// Issue several commands in one write; replies come back in order.
+    /// Server-side errors are returned in-place (not turned into Err) so a
+    /// batch with one failure still yields the other replies.
+    pub fn pipeline(&mut self, cmds: &[Vec<Vec<u8>>]) -> Result<Vec<Value>> {
+        let mut buf = Vec::new();
+        for c in cmds {
+            let parts: Vec<&[u8]> = c.iter().map(|p| p.as_slice()).collect();
+            request(&parts).encode_into(&mut buf);
+        }
+        self.stream.write_all(&buf)?;
+        let mut out = Vec::with_capacity(cmds.len());
+        for _ in cmds {
+            out.push(read_value(&mut self.stream, &mut self.dec)?);
+        }
+        Ok(out)
+    }
+
+    // -- typed helpers -------------------------------------------------------
+
+    pub fn ping(&mut self) -> Result<()> {
+        match self.command(&[b"PING"])? {
+            Value::Simple(s) if s == "PONG" => Ok(()),
+            other => Err(anyhow!("unexpected PING reply {other:?}")),
+        }
+    }
+
+    pub fn set(&mut self, key: &[u8], value: &[u8]) -> Result<()> {
+        match self.command(&[b"SET", key, value])? {
+            Value::Simple(s) if s == "OK" => Ok(()),
+            other => Err(anyhow!("unexpected SET reply {other:?}")),
+        }
+    }
+
+    pub fn get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        match self.command(&[b"GET", key])? {
+            Value::Bulk(b) => Ok(Some(b)),
+            Value::Nil => Ok(None),
+            other => Err(anyhow!("unexpected GET reply {other:?}")),
+        }
+    }
+
+    pub fn del(&mut self, key: &[u8]) -> Result<bool> {
+        Ok(self.command(&[b"DEL", key])?.as_int() == Some(1))
+    }
+
+    pub fn exists(&mut self, key: &[u8]) -> Result<bool> {
+        Ok(self.command(&[b"EXISTS", key])?.as_int() == Some(1))
+    }
+
+    pub fn strlen(&mut self, key: &[u8]) -> Result<usize> {
+        Ok(self.command(&[b"STRLEN", key])?.as_int().unwrap_or(0) as usize)
+    }
+
+    pub fn dbsize(&mut self) -> Result<usize> {
+        Ok(self.command(&[b"DBSIZE"])?.as_int().unwrap_or(0) as usize)
+    }
+
+    pub fn flushall(&mut self) -> Result<()> {
+        self.command(&[b"FLUSHALL"])?;
+        Ok(())
+    }
+
+    pub fn info(&mut self) -> Result<String> {
+        Ok(self
+            .command(&[b"INFO"])?
+            .as_text()
+            .unwrap_or_default())
+    }
+
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        let _ = self.command(&[b"SHUTDOWN"]);
+        Ok(())
+    }
+
+    // -- catalog sync --------------------------------------------------------
+
+    pub fn catalog_version(&mut self) -> Result<u64> {
+        Ok(self.command(&[b"CAT.VERSION"])?.as_int().unwrap_or(0) as u64)
+    }
+
+    pub fn catalog_register(&mut self, key: &[u8]) -> Result<u64> {
+        Ok(self.command(&[b"CAT.REGISTER", key])?.as_int().unwrap_or(0) as u64)
+    }
+
+    /// Pull catalog entries appended after `since`; returns (new_version, keys).
+    pub fn catalog_delta(&mut self, since: u64) -> Result<(u64, Vec<Vec<u8>>)> {
+        let since_s = since.to_string();
+        match self.command(&[b"CAT.DELTA", since_s.as_bytes()])? {
+            Value::Array(items) => {
+                let mut it = items.into_iter();
+                let ver = it
+                    .next()
+                    .and_then(|v| v.as_int())
+                    .ok_or_else(|| anyhow!("CAT.DELTA missing version"))? as u64;
+                let mut keys = Vec::new();
+                for v in it {
+                    match v {
+                        Value::Bulk(b) => keys.push(b),
+                        other => bail!("CAT.DELTA non-bulk entry {other:?}"),
+                    }
+                }
+                Ok((ver, keys))
+            }
+            other => Err(anyhow!("unexpected CAT.DELTA reply {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::server::KvServer;
+    use super::*;
+
+    fn spawn() -> (super::super::server::ServerHandle, KvClient) {
+        let srv = KvServer::new(usize::MAX);
+        let handle = srv.serve("127.0.0.1:0").unwrap();
+        let client = KvClient::connect(&handle.addr_string()).unwrap();
+        (handle, client)
+    }
+
+    #[test]
+    fn ping_set_get_roundtrip() {
+        let (_h, mut c) = spawn();
+        c.ping().unwrap();
+        c.set(b"key1", b"hello").unwrap();
+        assert_eq!(c.get(b"key1").unwrap().as_deref(), Some(&b"hello"[..]));
+        assert_eq!(c.get(b"missing").unwrap(), None);
+        assert!(c.exists(b"key1").unwrap());
+        assert_eq!(c.strlen(b"key1").unwrap(), 5);
+        assert_eq!(c.dbsize().unwrap(), 1);
+        assert!(c.del(b"key1").unwrap());
+        assert_eq!(c.dbsize().unwrap(), 0);
+    }
+
+    #[test]
+    fn large_binary_values() {
+        let (_h, mut c) = spawn();
+        // a realistic prompt-cache entry: a few MB of binary state
+        let blob: Vec<u8> = (0..2_250_000u32)
+            .map(|i| i.wrapping_mul(2654435761) as u8)
+            .collect();
+        c.set(b"state:abc", &blob).unwrap();
+        let got = c.get(b"state:abc").unwrap().unwrap();
+        assert_eq!(got.len(), blob.len());
+        assert_eq!(got, blob);
+    }
+
+    #[test]
+    fn pipeline_preserves_order() {
+        let (_h, mut c) = spawn();
+        let cmds: Vec<Vec<Vec<u8>>> = (0..20)
+            .map(|i| {
+                vec![
+                    b"SET".to_vec(),
+                    format!("k{i}").into_bytes(),
+                    format!("v{i}").into_bytes(),
+                ]
+            })
+            .collect();
+        let replies = c.pipeline(&cmds).unwrap();
+        assert_eq!(replies.len(), 20);
+        assert!(replies.iter().all(|r| matches!(r, Value::Simple(s) if s == "OK")));
+        for i in 0..20 {
+            assert_eq!(
+                c.get(format!("k{i}").as_bytes()).unwrap().unwrap(),
+                format!("v{i}").into_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn catalog_sync_over_network() {
+        let (_h, mut c) = spawn();
+        assert_eq!(c.catalog_version().unwrap(), 0);
+        c.catalog_register(b"hash-a").unwrap();
+        c.catalog_register(b"hash-b").unwrap();
+        let (v, keys) = c.catalog_delta(0).unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(keys, vec![b"hash-a".to_vec(), b"hash-b".to_vec()]);
+        let (v2, keys2) = c.catalog_delta(v).unwrap();
+        assert_eq!(v2, 2);
+        assert!(keys2.is_empty());
+    }
+
+    #[test]
+    fn two_clients_share_state() {
+        let (h, mut c1) = spawn();
+        let mut c2 = KvClient::connect(&h.addr_string()).unwrap();
+        c1.set(b"shared", b"from-c1").unwrap();
+        assert_eq!(c2.get(b"shared").unwrap().unwrap(), b"from-c1");
+    }
+
+    #[test]
+    fn unknown_command_is_error() {
+        let (_h, mut c) = spawn();
+        assert!(c.command(&[b"BOGUS"]).is_err());
+        // connection still usable afterwards
+        c.ping().unwrap();
+    }
+
+    #[test]
+    fn eviction_under_memory_cap() {
+        let srv = KvServer::new(3000);
+        let h = srv.serve("127.0.0.1:0").unwrap();
+        let mut c = KvClient::connect(&h.addr_string()).unwrap();
+        for i in 0..10 {
+            c.set(format!("k{i}").as_bytes(), &vec![0u8; 500]).unwrap();
+        }
+        let n = c.dbsize().unwrap();
+        assert!(n < 10, "eviction must have occurred, have {n}");
+        let info = c.info().unwrap();
+        assert!(info.contains("evictions:"), "{info}");
+    }
+
+    #[test]
+    fn info_fields_present() {
+        let (_h, mut c) = spawn();
+        c.set(b"a", b"x").unwrap();
+        let info = c.info().unwrap();
+        for field in ["keys:", "used_bytes:", "hits:", "misses:", "catalog_version:"] {
+            assert!(info.contains(field), "missing {field} in {info}");
+        }
+    }
+
+    #[test]
+    fn connect_timeout_to_dead_port_fails_fast() {
+        let t0 = std::time::Instant::now();
+        let r = KvClient::connect_timeout("127.0.0.1:1", Duration::from_millis(300));
+        assert!(r.is_err());
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+}

@@ -1,0 +1,25 @@
+//! kvstore — the cache box (Redis 8 + Hiredis analog, DESIGN.md
+//! §Substitutions).
+//!
+//! The paper stores prompt-cache entries in an off-the-shelf Redis on a
+//! Raspberry Pi 5 with snapshotting disabled (pure in-memory), accessed from
+//! C++ clients via Hiredis.  This module rebuilds that substrate:
+//!
+//! * [`resp`] — RESP2 wire protocol (the actual Redis framing);
+//! * [`store`] — in-memory keyspace with LRU eviction under a memory cap
+//!   (Redis `maxmemory` + `allkeys-lru`);
+//! * [`server`] — threaded TCP server speaking RESP2: `GET SET DEL EXISTS
+//!   STRLEN DBSIZE INFO FLUSHALL PING` plus three catalog-sync commands
+//!   (`CAT.VERSION`, `CAT.DELTA`, `CAT.REGISTER` — the master-catalog side
+//!   of the paper's Figure 2);
+//! * [`client`] — blocking pipelined client (Hiredis analog).
+
+pub mod client;
+pub mod resp;
+pub mod server;
+pub mod store;
+
+pub use client::KvClient;
+pub use resp::Value;
+pub use server::{KvServer, ServerHandle};
+pub use store::Store;

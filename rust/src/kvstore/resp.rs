@@ -1,0 +1,364 @@
+//! RESP2 protocol codec (REdis Serialization Protocol).
+//!
+//! Exactly the framing real Redis speaks: simple strings `+OK\r\n`, errors
+//! `-ERR ...\r\n`, integers `:42\r\n`, bulk strings `$5\r\nhello\r\n` (with
+//! `$-1\r\n` as nil) and arrays `*N\r\n...`.  Requests are arrays of bulk
+//! strings.  The codec is incremental: [`Decoder`] buffers partial frames
+//! across reads, which the server relies on for pipelining.
+
+use std::io::{self, Read, Write};
+
+/// Maximum accepted bulk-string / array size (64 MB guards against
+/// malformed length prefixes taking the server down).
+pub const MAX_BULK: usize = 64 << 20;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Simple(String),
+    Error(String),
+    Int(i64),
+    Bulk(Vec<u8>),
+    Nil,
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn ok() -> Value {
+        Value::Simple("OK".into())
+    }
+
+    pub fn bulk_str(s: &str) -> Value {
+        Value::Bulk(s.as_bytes().to_vec())
+    }
+
+    /// Interpret as UTF-8 text where possible (diagnostics).
+    pub fn as_text(&self) -> Option<String> {
+        match self {
+            Value::Simple(s) | Value::Error(s) => Some(s.clone()),
+            Value::Bulk(b) => String::from_utf8(b.clone()).ok(),
+            Value::Int(i) => Some(i.to_string()),
+            _ => None,
+        }
+    }
+
+    pub fn as_bulk(&self) -> Option<&[u8]> {
+        match self {
+            Value::Bulk(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn is_nil(&self) -> bool {
+        matches!(self, Value::Nil)
+    }
+
+    /// Serialize into `out`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            Value::Simple(s) => {
+                out.push(b'+');
+                out.extend_from_slice(s.as_bytes());
+                out.extend_from_slice(b"\r\n");
+            }
+            Value::Error(s) => {
+                out.push(b'-');
+                out.extend_from_slice(s.as_bytes());
+                out.extend_from_slice(b"\r\n");
+            }
+            Value::Int(i) => {
+                out.push(b':');
+                out.extend_from_slice(i.to_string().as_bytes());
+                out.extend_from_slice(b"\r\n");
+            }
+            Value::Bulk(b) => {
+                out.push(b'$');
+                out.extend_from_slice(b.len().to_string().as_bytes());
+                out.extend_from_slice(b"\r\n");
+                out.extend_from_slice(b);
+                out.extend_from_slice(b"\r\n");
+            }
+            Value::Nil => out.extend_from_slice(b"$-1\r\n"),
+            Value::Array(items) => {
+                out.push(b'*');
+                out.extend_from_slice(items.len().to_string().as_bytes());
+                out.extend_from_slice(b"\r\n");
+                for it in items {
+                    it.encode_into(out);
+                }
+            }
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut v = Vec::new();
+        self.encode_into(&mut v);
+        v
+    }
+}
+
+/// Build a RESP request (array of bulk strings) from command parts.
+pub fn request(parts: &[&[u8]]) -> Value {
+    Value::Array(parts.iter().map(|p| Value::Bulk(p.to_vec())).collect())
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum RespError {
+    #[error("protocol error: {0}")]
+    Protocol(String),
+    #[error(transparent)]
+    Io(#[from] io::Error),
+}
+
+/// Incremental RESP decoder with an internal buffer.
+#[derive(Default)]
+pub struct Decoder {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl Decoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append raw bytes received from the socket.
+    pub fn feed(&mut self, data: &[u8]) {
+        // compact consumed prefix occasionally to bound memory
+        if self.pos > 0 && self.pos * 2 > self.buf.len() {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(data);
+    }
+
+    /// Try to decode one complete value; `Ok(None)` means "need more bytes".
+    pub fn next_value(&mut self) -> Result<Option<Value>, RespError> {
+        let start = self.pos;
+        match self.parse_at(start) {
+            Ok(Some((v, consumed))) => {
+                self.pos = consumed;
+                Ok(Some(v))
+            }
+            Ok(None) => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn find_crlf(&self, from: usize) -> Option<usize> {
+        let b = &self.buf[from..];
+        b.windows(2).position(|w| w == b"\r\n").map(|i| from + i)
+    }
+
+    fn parse_at(&self, at: usize) -> Result<Option<(Value, usize)>, RespError> {
+        if at >= self.buf.len() {
+            return Ok(None);
+        }
+        let t = self.buf[at];
+        let Some(line_end) = self.find_crlf(at + 1) else {
+            return Ok(None);
+        };
+        let line = std::str::from_utf8(&self.buf[at + 1..line_end])
+            .map_err(|_| RespError::Protocol("non-utf8 header line".into()))?;
+        let after = line_end + 2;
+        match t {
+            b'+' => Ok(Some((Value::Simple(line.to_string()), after))),
+            b'-' => Ok(Some((Value::Error(line.to_string()), after))),
+            b':' => {
+                let i = line
+                    .parse::<i64>()
+                    .map_err(|_| RespError::Protocol(format!("bad integer {line:?}")))?;
+                Ok(Some((Value::Int(i), after)))
+            }
+            b'$' => {
+                let n = line
+                    .parse::<i64>()
+                    .map_err(|_| RespError::Protocol(format!("bad bulk len {line:?}")))?;
+                if n < 0 {
+                    return Ok(Some((Value::Nil, after)));
+                }
+                let n = n as usize;
+                if n > MAX_BULK {
+                    return Err(RespError::Protocol(format!("bulk too large: {n}")));
+                }
+                if self.buf.len() < after + n + 2 {
+                    return Ok(None);
+                }
+                if &self.buf[after + n..after + n + 2] != b"\r\n" {
+                    return Err(RespError::Protocol("bulk missing trailing CRLF".into()));
+                }
+                let data = self.buf[after..after + n].to_vec();
+                Ok(Some((Value::Bulk(data), after + n + 2)))
+            }
+            b'*' => {
+                let n = line
+                    .parse::<i64>()
+                    .map_err(|_| RespError::Protocol(format!("bad array len {line:?}")))?;
+                if n < 0 {
+                    return Ok(Some((Value::Nil, after)));
+                }
+                let n = n as usize;
+                if n > MAX_BULK / 16 {
+                    return Err(RespError::Protocol(format!("array too large: {n}")));
+                }
+                let mut items = Vec::with_capacity(n);
+                let mut cur = after;
+                for _ in 0..n {
+                    match self.parse_at(cur)? {
+                        Some((v, next)) => {
+                            items.push(v);
+                            cur = next;
+                        }
+                        None => return Ok(None),
+                    }
+                }
+                Ok(Some((Value::Array(items), cur)))
+            }
+            other => Err(RespError::Protocol(format!(
+                "unexpected type byte {:?}",
+                other as char
+            ))),
+        }
+    }
+}
+
+/// Read values from a stream until one complete value is available.
+pub fn read_value(stream: &mut impl Read, dec: &mut Decoder) -> Result<Value, RespError> {
+    loop {
+        if let Some(v) = dec.next_value()? {
+            return Ok(v);
+        }
+        let mut chunk = [0u8; 16 * 1024];
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(RespError::Io(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "connection closed mid-frame",
+            )));
+        }
+        dec.feed(&chunk[..n]);
+    }
+}
+
+pub fn write_value(stream: &mut impl Write, v: &Value) -> Result<(), RespError> {
+    let bytes = v.encode();
+    stream.write_all(&bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop_n;
+
+    fn roundtrip(v: &Value) {
+        let enc = v.encode();
+        let mut d = Decoder::new();
+        d.feed(&enc);
+        let got = d.next_value().unwrap().unwrap();
+        assert_eq!(&got, v);
+        assert!(d.next_value().unwrap().is_none(), "no trailing value");
+    }
+
+    #[test]
+    fn encode_known_frames() {
+        assert_eq!(Value::ok().encode(), b"+OK\r\n");
+        assert_eq!(Value::Int(42).encode(), b":42\r\n");
+        assert_eq!(Value::bulk_str("hello").encode(), b"$5\r\nhello\r\n");
+        assert_eq!(Value::Nil.encode(), b"$-1\r\n");
+        assert_eq!(
+            request(&[b"GET", b"key1"]).encode(),
+            b"*2\r\n$3\r\nGET\r\n$4\r\nkey1\r\n"
+        );
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        roundtrip(&Value::Simple("PONG".into()));
+        roundtrip(&Value::Error("ERR boom".into()));
+        roundtrip(&Value::Int(-7));
+        roundtrip(&Value::Bulk(vec![0, 1, 2, 255, 13, 10]));
+        roundtrip(&Value::Nil);
+        roundtrip(&Value::Array(vec![
+            Value::Int(1),
+            Value::Bulk(b"x".to_vec()),
+            Value::Array(vec![Value::Nil]),
+        ]));
+    }
+
+    #[test]
+    fn incremental_feed_byte_at_a_time() {
+        let v = request(&[b"SET", b"k", b"binary\r\nvalue\x00\xff"]);
+        let enc = v.encode();
+        let mut d = Decoder::new();
+        for (i, b) in enc.iter().enumerate() {
+            d.feed(std::slice::from_ref(b));
+            let r = d.next_value().unwrap();
+            if i + 1 < enc.len() {
+                assert!(r.is_none(), "premature value at byte {i}");
+            } else {
+                assert_eq!(r.unwrap(), v);
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_frames_decode_in_order() {
+        let mut bytes = Vec::new();
+        let vs = [Value::Int(1), Value::ok(), Value::bulk_str("x")];
+        for v in &vs {
+            v.encode_into(&mut bytes);
+        }
+        let mut d = Decoder::new();
+        d.feed(&bytes);
+        for v in &vs {
+            assert_eq!(&d.next_value().unwrap().unwrap(), v);
+        }
+        assert!(d.next_value().unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_bulk_rejected() {
+        let mut d = Decoder::new();
+        d.feed(format!("${}\r\n", MAX_BULK + 1).as_bytes());
+        assert!(d.next_value().is_err());
+    }
+
+    #[test]
+    fn garbage_type_byte_rejected() {
+        let mut d = Decoder::new();
+        d.feed(b"!weird\r\n");
+        assert!(d.next_value().is_err());
+    }
+
+    #[test]
+    fn roundtrip_property_random_payloads() {
+        run_prop_n("resp-roundtrip", 128, |g| {
+            let len = g.size(2000);
+            let payload = g.bytes(len);
+            let v = Value::Array(vec![
+                Value::Bulk(payload.clone()),
+                Value::Int(g.rng.next_u64() as i64),
+                Value::Nil,
+            ]);
+            let enc = v.encode();
+            // split the encoding at a random point to exercise buffering
+            let cut = g.usize_in(0, enc.len());
+            let mut d = Decoder::new();
+            d.feed(&enc[..cut]);
+            let first = d.next_value().unwrap();
+            if let Some(got) = first {
+                assert_eq!(got, v);
+            } else {
+                d.feed(&enc[cut..]);
+                assert_eq!(d.next_value().unwrap().unwrap(), v);
+            }
+        });
+    }
+}

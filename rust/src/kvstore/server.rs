@@ -1,0 +1,316 @@
+//! Threaded RESP2 TCP server — the *cache box* process (Figure 1, middle).
+//!
+//! One OS thread per connection (the paper has a handful of edge clients;
+//! Redis itself is single-threaded, so a thread-per-conn loop over a shared
+//! mutexed [`Store`] is a faithful stand-in at this scale).  Besides the
+//! classic string commands it hosts the **master catalog**: an append-only
+//! log of registered catalog keys that clients pull incrementally
+//! (`CAT.DELTA`) to synchronize their local Bloom filters (Figure 2, green
+//! arrow).
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::resp::{read_value, Decoder, RespError, Value};
+use super::store::Store;
+use crate::log_debug;
+use crate::log_info;
+
+/// Master-catalog state: an append-only key log; version = entries appended.
+#[derive(Debug, Default)]
+pub struct MasterCatalog {
+    log: Vec<Vec<u8>>,
+}
+
+impl MasterCatalog {
+    pub fn version(&self) -> u64 {
+        self.log.len() as u64
+    }
+
+    pub fn register(&mut self, key: Vec<u8>) -> u64 {
+        self.log.push(key);
+        self.version()
+    }
+
+    /// Entries appended after `since` (capped to keep replies bounded).
+    pub fn delta(&self, since: u64, cap: usize) -> (u64, &[Vec<u8>]) {
+        let from = (since as usize).min(self.log.len());
+        let to = (from + cap).min(self.log.len());
+        (to as u64, &self.log[from..to])
+    }
+}
+
+/// Shared server state.
+pub struct KvServer {
+    pub store: Mutex<Store>,
+    pub catalog: Mutex<MasterCatalog>,
+    stop: AtomicBool,
+    /// Live connection handles, force-closed on shutdown (real Redis's
+    /// SHUTDOWN drops client connections too).
+    conns: Mutex<Vec<TcpStream>>,
+    /// Simulated per-command processing delay (cache-box CPU time); zero by
+    /// default — the link shaping lives client-side in `netsim`.
+    pub op_delay: std::time::Duration,
+}
+
+impl KvServer {
+    pub fn new(max_bytes: usize) -> Arc<Self> {
+        Arc::new(KvServer {
+            store: Mutex::new(Store::new(max_bytes)),
+            catalog: Mutex::new(MasterCatalog::default()),
+            stop: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+            op_delay: std::time::Duration::ZERO,
+        })
+    }
+
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port).  Returns
+    /// a handle carrying the bound address and the accept-loop thread.
+    pub fn serve(self: &Arc<Self>, addr: &str) -> Result<ServerHandle> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        let srv = Arc::clone(self);
+        let accept_thread = std::thread::Builder::new()
+            .name("kv-accept".into())
+            .spawn(move || {
+                log_info!("kvstore", "cache box listening on {local}");
+                for conn in listener.incoming() {
+                    if srv.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let srv2 = Arc::clone(&srv);
+                            let _ = std::thread::Builder::new()
+                                .name("kv-conn".into())
+                                .spawn(move || srv2.handle_conn(stream));
+                        }
+                        Err(e) => {
+                            log_debug!("kvstore", "accept error: {e}");
+                        }
+                    }
+                }
+            })?;
+        Ok(ServerHandle { server: Arc::clone(self), addr: local, accept_thread: Some(accept_thread) })
+    }
+
+    fn handle_conn(&self, mut stream: TcpStream) {
+        let _ = stream.set_nodelay(true);
+        if let Ok(clone) = stream.try_clone() {
+            self.conns.lock().unwrap().push(clone);
+        }
+        let mut dec = Decoder::new();
+        let mut out = Vec::with_capacity(64 * 1024);
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let req = match read_value(&mut stream, &mut dec) {
+                Ok(v) => v,
+                Err(RespError::Io(_)) => return, // client hung up
+                Err(RespError::Protocol(msg)) => {
+                    let _ = stream.write_all(&Value::Error(format!("ERR {msg}")).encode());
+                    return;
+                }
+            };
+            let reply = self.dispatch(req);
+            let shutdown = matches!(&reply, Value::Simple(s) if s == "SHUTTING DOWN");
+            out.clear();
+            reply.encode_into(&mut out);
+            // Drain any further pipelined requests already buffered before
+            // flushing, so pipelined batches get answered in one write.
+            while let Ok(Some(req)) = dec.next_value() {
+                let r = self.dispatch(req);
+                r.encode_into(&mut out);
+            }
+            if stream.write_all(&out).is_err() {
+                return;
+            }
+            if shutdown {
+                return;
+            }
+        }
+    }
+
+    fn dispatch(&self, req: Value) -> Value {
+        if !self.op_delay.is_zero() {
+            std::thread::sleep(self.op_delay);
+        }
+        let Value::Array(parts) = req else {
+            return Value::Error("ERR expected array request".into());
+        };
+        let mut args: Vec<Vec<u8>> = Vec::with_capacity(parts.len());
+        for p in parts {
+            match p {
+                Value::Bulk(b) => args.push(b),
+                Value::Simple(s) => args.push(s.into_bytes()),
+                _ => return Value::Error("ERR request items must be bulk strings".into()),
+            }
+        }
+        let Some(cmd) = args.first() else {
+            return Value::Error("ERR empty request".into());
+        };
+        let cmd = String::from_utf8_lossy(cmd).to_ascii_uppercase();
+        match (cmd.as_str(), args.len()) {
+            ("PING", 1) => Value::Simple("PONG".into()),
+            ("SET", 3) => {
+                let ok = self.store.lock().unwrap().set(&args[1], args[2].clone());
+                if ok {
+                    Value::ok()
+                } else {
+                    Value::Error("OOM value exceeds maxmemory".into())
+                }
+            }
+            ("GET", 2) => match self.store.lock().unwrap().get(&args[1]) {
+                Some(v) => Value::Bulk(v.to_vec()),
+                None => Value::Nil,
+            },
+            ("DEL", 2) => Value::Int(self.store.lock().unwrap().del(&args[1]) as i64),
+            ("EXISTS", 2) => Value::Int(self.store.lock().unwrap().contains(&args[1]) as i64),
+            ("STRLEN", 2) => match self.store.lock().unwrap().strlen(&args[1]) {
+                Some(n) => Value::Int(n as i64),
+                None => Value::Int(0),
+            },
+            ("DBSIZE", 1) => Value::Int(self.store.lock().unwrap().len() as i64),
+            ("FLUSHALL", 1) => {
+                self.store.lock().unwrap().clear();
+                Value::ok()
+            }
+            ("INFO", 1) => {
+                let s = self.store.lock().unwrap();
+                let c = self.catalog.lock().unwrap();
+                Value::Bulk(
+                    format!(
+                        "# edgecache cache box\r\nkeys:{}\r\nused_bytes:{}\r\nevictions:{}\r\nhits:{}\r\nmisses:{}\r\ncatalog_version:{}\r\n",
+                        s.len(),
+                        s.used_bytes(),
+                        s.evictions,
+                        s.hits,
+                        s.misses,
+                        c.version()
+                    )
+                    .into_bytes(),
+                )
+            }
+            ("CAT.VERSION", 1) => Value::Int(self.catalog.lock().unwrap().version() as i64),
+            ("CAT.REGISTER", 2) => {
+                let v = self.catalog.lock().unwrap().register(args[1].clone());
+                Value::Int(v as i64)
+            }
+            ("CAT.DELTA", 2) => {
+                let since = match std::str::from_utf8(&args[1])
+                    .ok()
+                    .and_then(|s| s.parse::<u64>().ok())
+                {
+                    Some(v) => v,
+                    None => return Value::Error("ERR bad since".into()),
+                };
+                let cat = self.catalog.lock().unwrap();
+                let (ver, keys) = cat.delta(since, 100_000);
+                let mut items = Vec::with_capacity(keys.len() + 1);
+                items.push(Value::Int(ver as i64));
+                items.extend(keys.iter().map(|k| Value::Bulk(k.clone())));
+                Value::Array(items)
+            }
+            ("SHUTDOWN", 1) => {
+                self.stop.store(true, Ordering::SeqCst);
+                Value::Simple("SHUTTING DOWN".into())
+            }
+            _ => Value::Error(format!("ERR unknown command '{cmd}' / arity {}", args.len())),
+        }
+    }
+}
+
+/// RAII handle to a running server; shutting down unblocks the accept loop.
+pub struct ServerHandle {
+    pub server: Arc<KvServer>,
+    pub addr: std::net::SocketAddr,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr_string(&self) -> String {
+        self.addr.to_string()
+    }
+
+    pub fn shutdown(mut self) {
+        self.do_shutdown();
+    }
+
+    fn do_shutdown(&mut self) {
+        self.server.stop.store(true, Ordering::SeqCst);
+        // poke the accept loop so it observes the stop flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        // force-close live connections so blocked reads return immediately
+        for c in self.server.conns.lock().unwrap().drain(..) {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.do_shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn master_catalog_versioning() {
+        let mut c = MasterCatalog::default();
+        assert_eq!(c.version(), 0);
+        assert_eq!(c.register(b"k1".to_vec()), 1);
+        assert_eq!(c.register(b"k2".to_vec()), 2);
+        let (v, keys) = c.delta(0, 100);
+        assert_eq!(v, 2);
+        assert_eq!(keys.len(), 2);
+        let (v, keys) = c.delta(1, 100);
+        assert_eq!(v, 2);
+        assert_eq!(keys, &[b"k2".to_vec()][..]);
+        let (v, keys) = c.delta(2, 100);
+        assert_eq!(v, 2);
+        assert!(keys.is_empty());
+        // out-of-range since is clamped, not a panic
+        let (v, keys) = c.delta(99, 100);
+        assert_eq!(v, 2);
+        assert!(keys.is_empty());
+    }
+
+    #[test]
+    fn delta_cap_respected() {
+        let mut c = MasterCatalog::default();
+        for i in 0..50 {
+            c.register(format!("k{i}").into_bytes());
+        }
+        let (v, keys) = c.delta(0, 10);
+        assert_eq!(v, 10);
+        assert_eq!(keys.len(), 10);
+        let (v2, keys2) = c.delta(v, 10);
+        assert_eq!(v2, 20);
+        assert_eq!(keys2[0], b"k10".to_vec());
+    }
+
+    #[test]
+    fn dispatch_without_network() {
+        let srv = KvServer::new(usize::MAX);
+        let set = super::super::resp::request(&[b"SET", b"a", b"1"]);
+        assert_eq!(srv.dispatch(set), Value::ok());
+        let get = super::super::resp::request(&[b"GET", b"a"]);
+        assert_eq!(srv.dispatch(get), Value::Bulk(b"1".to_vec()));
+        let bad = super::super::resp::request(&[b"NOPE"]);
+        assert!(matches!(srv.dispatch(bad), Value::Error(_)));
+        let wrong_arity = super::super::resp::request(&[b"GET"]);
+        assert!(matches!(srv.dispatch(wrong_arity), Value::Error(_)));
+    }
+}

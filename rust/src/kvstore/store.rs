@@ -1,0 +1,244 @@
+//! In-memory keyspace with LRU eviction under a byte budget — Redis
+//! `maxmemory` + `allkeys-lru` semantics, the configuration that matters for
+//! a cache box whose entries are multi-megabyte KV states on a 16 GB Pi.
+//!
+//! LRU is exact (not Redis's sampled approximation): a monotonic clock
+//! stamps every access and eviction removes the stalest entries until the
+//! budget holds.  Exactness makes the eviction integration tests
+//! deterministic; the asymptotic behaviour under cache pressure is the same.
+
+use std::collections::HashMap;
+
+#[derive(Debug)]
+struct Entry {
+    data: Vec<u8>,
+    last_used: u64,
+}
+
+/// Byte-budgeted LRU keyspace.
+#[derive(Debug)]
+pub struct Store {
+    map: HashMap<Vec<u8>, Entry>,
+    clock: u64,
+    used_bytes: usize,
+    /// Maximum payload bytes held (keys counted too); `usize::MAX` = unbounded.
+    pub max_bytes: usize,
+    /// Cumulative eviction counter (INFO / diagnostics).
+    pub evictions: u64,
+    /// Hit/miss counters (INFO).
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Default for Store {
+    fn default() -> Self {
+        Self::new(usize::MAX)
+    }
+}
+
+impl Store {
+    pub fn new(max_bytes: usize) -> Self {
+        Store {
+            map: HashMap::new(),
+            clock: 0,
+            used_bytes: 0,
+            max_bytes,
+            evictions: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn entry_cost(key: &[u8], data: &[u8]) -> usize {
+        key.len() + data.len()
+    }
+
+    /// Insert/overwrite; evicts LRU entries if the budget would overflow.
+    /// Returns false (and stores nothing) if the value alone exceeds the
+    /// budget.
+    pub fn set(&mut self, key: &[u8], data: Vec<u8>) -> bool {
+        let cost = Self::entry_cost(key, &data);
+        if cost > self.max_bytes {
+            return false;
+        }
+        let t = self.tick();
+        if let Some(old) = self.map.remove(key) {
+            self.used_bytes -= Self::entry_cost(key, &old.data);
+        }
+        self.used_bytes += cost;
+        self.map.insert(key.to_vec(), Entry { data, last_used: t });
+        self.evict_to_budget();
+        true
+    }
+
+    fn evict_to_budget(&mut self) {
+        while self.used_bytes > self.max_bytes {
+            // exact LRU: find the stalest key
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    if let Some(e) = self.map.remove(&k) {
+                        self.used_bytes -= Self::entry_cost(&k, &e.data);
+                        self.evictions += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+
+    pub fn get(&mut self, key: &[u8]) -> Option<&[u8]> {
+        let t = self.tick();
+        match self.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = t;
+                self.hits += 1;
+                Some(&e.data)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Non-mutating existence check (does not refresh LRU or counters).
+    pub fn contains(&self, key: &[u8]) -> bool {
+        self.map.contains_key(key)
+    }
+
+    pub fn strlen(&self, key: &[u8]) -> Option<usize> {
+        self.map.get(key).map(|e| e.data.len())
+    }
+
+    pub fn del(&mut self, key: &[u8]) -> bool {
+        if let Some(e) = self.map.remove(key) {
+            self.used_bytes -= Self::entry_cost(key, &e.data);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.used_bytes = 0;
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &Vec<u8>> {
+        self.map.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop_n;
+
+    #[test]
+    fn set_get_del() {
+        let mut s = Store::default();
+        assert!(s.set(b"a", vec![1, 2, 3]));
+        assert_eq!(s.get(b"a"), Some(&[1u8, 2, 3][..]));
+        assert_eq!(s.strlen(b"a"), Some(3));
+        assert!(s.contains(b"a"));
+        assert!(s.del(b"a"));
+        assert!(!s.del(b"a"));
+        assert_eq!(s.get(b"a"), None);
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.used_bytes(), 0);
+    }
+
+    #[test]
+    fn overwrite_accounts_bytes() {
+        let mut s = Store::default();
+        s.set(b"k", vec![0; 100]);
+        s.set(b"k", vec![0; 10]);
+        assert_eq!(s.used_bytes(), 1 + 10);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut s = Store::new(3 * 11); // three 10-byte values with 1-byte keys
+        s.set(b"a", vec![0; 10]);
+        s.set(b"b", vec![0; 10]);
+        s.set(b"c", vec![0; 10]);
+        // touch "a" so "b" becomes LRU
+        s.get(b"a");
+        s.set(b"d", vec![0; 10]);
+        assert!(s.contains(b"a"), "recently used survives");
+        assert!(!s.contains(b"b"), "LRU evicted");
+        assert!(s.contains(b"c") && s.contains(b"d"));
+        assert_eq!(s.evictions, 1);
+    }
+
+    #[test]
+    fn oversized_value_rejected() {
+        let mut s = Store::new(100);
+        assert!(!s.set(b"big", vec![0; 200]));
+        assert_eq!(s.len(), 0);
+        // and does not evict existing entries trying
+        s.set(b"ok", vec![0; 50]);
+        assert!(!s.set(b"big", vec![0; 200]));
+        assert!(s.contains(b"ok"));
+    }
+
+    #[test]
+    fn hit_miss_counters() {
+        let mut s = Store::default();
+        s.set(b"x", vec![1]);
+        s.get(b"x");
+        s.get(b"y");
+        s.get(b"x");
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn budget_invariant_property() {
+        run_prop_n("store-budget-invariant", 64, |g| {
+            let budget = g.usize_in(64, 4096);
+            let mut s = Store::new(budget);
+            for _ in 0..g.size(200) {
+                let klen = g.usize_in(1, 16);
+                let key = g.bytes(klen);
+                let vlen = g.usize_in(0, 512);
+                s.set(&key, g.bytes(vlen));
+                assert!(
+                    s.used_bytes() <= budget,
+                    "used {} > budget {budget}",
+                    s.used_bytes()
+                );
+                // bookkeeping agrees with ground truth
+                let truth: usize = s
+                    .map
+                    .iter()
+                    .map(|(k, e)| k.len() + e.data.len())
+                    .sum();
+                assert_eq!(truth, s.used_bytes());
+            }
+        });
+    }
+}

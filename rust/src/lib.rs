@@ -1,0 +1,55 @@
+//! # edgecache
+//!
+//! Distributed prompt caching for local LLMs on resource-constrained edge
+//! devices — a full-system reproduction of Matsutani et al. (2026).
+//!
+//! The crate is the L3 (rust) layer of a three-layer rust + JAX + Pallas
+//! stack: Python authors the model (L2) and kernels (L1) and AOT-lowers them
+//! to HLO text once (`make artifacts`); this crate loads the artifacts via
+//! the PJRT C API and owns everything on the request path:
+//!
+//! * [`runtime`] / [`model`] / [`engine`] — local LLM inference (prefill,
+//!   decode, KV-state snapshot/restore — the `llama_state_get_data()` analog)
+//! * [`kvstore`] — the Redis-analog cache box (RESP2 TCP server + client)
+//! * [`bloom`] / [`catalog`] — the paper's Bloom-filter *catalog* with
+//!   master/local delta synchronization
+//! * [`coordinator`] — the paper's contribution: the steps 1–4 client flow,
+//!   partial prompt matching, upload/retrieval policy
+//! * [`netsim`] / [`devicemodel`] — calibrated Wi-Fi 4 link shaping and
+//!   Raspberry-Pi device pacing so the paper's testbed numbers reproduce
+//! * [`workload`] — MMLU-like multi-domain prompt generator
+//! * [`metrics`] / [`report`] — the six-phase latency breakdown and the
+//!   paper-table renderers
+//!
+//! See DESIGN.md for the per-experiment index and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod bloom;
+pub mod catalog;
+pub mod coordinator;
+pub mod devicemodel;
+pub mod engine;
+pub mod kvstore;
+pub mod metrics;
+pub mod model;
+pub mod netsim;
+pub mod report;
+pub mod runtime;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+pub mod xbench;
+
+/// Returns the PJRT platform name — used as a wiring smoke test.
+pub fn xla_smoke() -> anyhow::Result<String> {
+    let c = xla::PjRtClient::cpu()?;
+    Ok(c.platform_name())
+}
+
+/// Repo-relative artifacts directory honouring `EDGECACHE_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    match std::env::var("EDGECACHE_ARTIFACTS") {
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    }
+}

@@ -1,0 +1,358 @@
+//! edgecache CLI — launcher for the cache box, edge clients, workload
+//! inspection and paper-table regeneration.
+//!
+//! ```text
+//! edgecache server    --addr 0.0.0.0:7600 --max-mb 14336
+//! edgecache client    --server HOST:PORT --preset edge-270m --device low-end \
+//!                     --link wifi --domains 8 --per-domain 4 --shots 1
+//! edgecache run       --preset tiny --clients 2 --domains 6 --per-domain 3
+//! edgecache tables    --prompts 6434        # analytic Table 2/3/4 + figures
+//! edgecache workload  --domain astronomy --shots 5 --index 0
+//! edgecache info      --preset edge-270m
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use edgecache::coordinator::{CacheBox, EdgeClient, EdgeClientConfig, FetchPolicy};
+use edgecache::devicemodel::DeviceProfile;
+use edgecache::engine::Engine;
+use edgecache::metrics::CaseAggregate;
+use edgecache::model::state::Compression;
+use edgecache::netsim::LinkModel;
+use edgecache::report::experiments as exp;
+use edgecache::util::cli::Command;
+use edgecache::workload::{Generator, Trace, DOMAINS};
+use edgecache::{log_info, report};
+
+fn main() {
+    edgecache::util::logger::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    let result = match sub {
+        "server" => cmd_server(rest),
+        "client" => cmd_client(rest),
+        "run" => cmd_run(rest),
+        "tables" => cmd_tables(rest),
+        "workload" => cmd_workload(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand {other:?}\n")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        print_help();
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    eprintln!(
+        "edgecache — distributed prompt caching for local LLMs on edge devices\n\n\
+         subcommands:\n\
+         \x20 server     run a cache box (kvstore + master catalog)\n\
+         \x20 client     run an edge client over a generated MMLU-like trace\n\
+         \x20 run        in-process cluster: cache box + N clients + trace\n\
+         \x20 tables     regenerate the paper's tables/figures (analytic track)\n\
+         \x20 workload   print a generated prompt\n\
+         \x20 info       show artifact/preset information\n\n\
+         use `edgecache <subcommand> --help` for options"
+    );
+}
+
+fn parse_or_help(c: Command, argv: &[String]) -> Result<edgecache::util::cli::Matches> {
+    c.parse(argv).map_err(|msg| {
+        eprintln!("{msg}");
+        std::process::exit(2);
+    })
+}
+
+fn cmd_server(argv: &[String]) -> Result<()> {
+    let m = parse_or_help(
+        Command::new("server", "run the cache box (Figure 1, middle node)")
+            .opt("addr", "127.0.0.1:7600", "listen address")
+            .opt("max-mb", "14336", "prompt-cache memory budget in MB"),
+        argv,
+    )?;
+    let addr = m.str("addr");
+    let max_mb: usize = m.usize("max-mb").map_err(|e| anyhow!(e))?;
+    let cb = CacheBox::start(&addr, max_mb << 20)?;
+    log_info!("cli", "cache box on {} ({} MB budget); Ctrl-C to stop", cb.addr(), max_mb);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn client_config(m: &edgecache::util::cli::Matches, server: Option<String>) -> Result<EdgeClientConfig> {
+    let device = DeviceProfile::by_name(&m.str("device"))
+        .ok_or_else(|| anyhow!("unknown --device (pi-zero-2w|pi5-4gb|host)"))?;
+    let link = LinkModel::by_name(&m.str("link"))
+        .ok_or_else(|| anyhow!("unknown --link (wifi|ethernet|loopback)"))?;
+    Ok(EdgeClientConfig {
+        name: "cli".into(),
+        server_addr: server,
+        link,
+        device,
+        max_new_tokens: m.get("max-new").and_then(|v| v.parse().ok()),
+        compression: if m.flag("compress") { Compression::Deflate } else { Compression::None },
+        partial_matching: !m.flag("no-partial"),
+        use_catalog: !m.flag("no-catalog"),
+        fetch_policy: if m.flag("break-even") { FetchPolicy::BreakEven } else { FetchPolicy::Always },
+        min_hit_tokens: 1,
+        sync_interval: Some(std::time::Duration::from_millis(200)),
+        seed: m.u64("seed").map_err(|e| anyhow!(e))?,
+    })
+}
+
+fn client_cmd_spec(name: &'static str, about: &'static str) -> Command {
+    Command::new(name, about)
+        .opt("preset", "edge-270m", "artifact preset (tiny|edge-270m|edge-1b)")
+        .opt("device", "host", "device pacing profile (pi-zero-2w|pi5-4gb|host)")
+        .opt("link", "loopback", "link model (wifi|ethernet|loopback)")
+        .opt("domains", "6", "number of MMLU-like domains")
+        .opt("per-domain", "3", "questions per domain")
+        .opt("shots", "1", "few-shot examples per prompt")
+        .opt("max-new", "8", "response token budget")
+        .opt("seed", "42", "workload seed")
+        .flag("no-partial", "disable partial matching (full-prompt keys only)")
+        .flag("no-catalog", "disable the local Bloom catalog (probe server)")
+        .flag("break-even", "fetch only when the transfer beats local prefill")
+        .flag("compress", "deflate state blobs before upload")
+}
+
+fn run_trace(
+    engine: Arc<Engine>,
+    clients: &mut [EdgeClient],
+    trace: &Trace,
+    gen: &Generator,
+) -> Result<()> {
+    let _ = engine;
+    let mut agg_by_case: std::collections::BTreeMap<usize, CaseAggregate> = Default::default();
+    let t0 = std::time::Instant::now();
+    for (i, q) in trace.queries.iter().enumerate() {
+        let c = &mut clients[q.client % clients.len()];
+        let prompt = gen.prompt(&q.domain, q.question_index, q.n_shots);
+        let r = c.query(&prompt)?;
+        agg_by_case.entry(r.case.number()).or_default().push(&r.breakdown);
+        log_info!(
+            "cli",
+            "[{}/{}] client{} {} case{} ttft={:.3}s ttlt={:.3}s",
+            i + 1,
+            trace.queries.len(),
+            q.client,
+            q.domain,
+            r.case.number(),
+            r.breakdown.ttft().as_secs_f64(),
+            r.breakdown.ttlt().as_secs_f64()
+        );
+    }
+    println!("\ntrace finished in {:.1}s", t0.elapsed().as_secs_f64());
+    let rows: Vec<Vec<String>> = agg_by_case
+        .iter()
+        .map(|(case, a)| {
+            vec![
+                format!("Case {case}"),
+                a.n.to_string(),
+                format!("{:.3}", a.ttft.mean()),
+                format!("{:.3}", a.ttlt.mean()),
+                format!("{:.1}", a.mean_prompt_tokens()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::ascii_table(&["Case", "n", "TTFT [s]", "TTLT [s]", "# tokens"], &rows)
+    );
+    for c in clients.iter() {
+        println!(
+            "client {}: {} queries, hits by case {:?}, FPs {}, down {} KB, up {} KB",
+            c.cfg.name,
+            c.stats.queries,
+            c.stats.hits_by_case,
+            c.stats.false_positives,
+            c.stats.bytes_down / 1024,
+            c.stats.bytes_up / 1024
+        );
+    }
+    Ok(())
+}
+
+fn cmd_client(argv: &[String]) -> Result<()> {
+    let m = parse_or_help(
+        client_cmd_spec("client", "run one edge client against a cache box")
+            .req("server", "cache box address (host:port)"),
+        argv,
+    )?;
+    let engine = Arc::new(Engine::load_preset(&m.str("preset"))?);
+    let cfg = client_config(&m, Some(m.str("server")))?;
+    let mut clients = vec![EdgeClient::new(Arc::clone(&engine), cfg)?];
+    let gen = Generator::new(m.u64("seed").map_err(|e| anyhow!(e))?);
+    let trace = Trace::generate(
+        gen.seed,
+        1,
+        m.usize("domains").map_err(|e| anyhow!(e))?.min(DOMAINS.len()),
+        m.usize("per-domain").map_err(|e| anyhow!(e))?,
+        m.usize("shots").map_err(|e| anyhow!(e))?,
+    );
+    run_trace(engine, &mut clients, &trace, &gen)
+}
+
+fn cmd_run(argv: &[String]) -> Result<()> {
+    let m = parse_or_help(
+        client_cmd_spec("run", "in-process cluster: cache box + N clients")
+            .opt("clients", "2", "number of edge clients"),
+        argv,
+    )?;
+    let engine = Arc::new(Engine::load_preset(&m.str("preset"))?);
+    let cb = CacheBox::start_local()?;
+    let n_clients = m.usize("clients").map_err(|e| anyhow!(e))?.max(1);
+    let mut clients = Vec::new();
+    for i in 0..n_clients {
+        let mut cfg = client_config(&m, Some(cb.addr()))?;
+        cfg.name = format!("c{i}");
+        cfg.seed ^= i as u64;
+        clients.push(EdgeClient::new(Arc::clone(&engine), cfg)?);
+    }
+    let gen = Generator::new(m.u64("seed").map_err(|e| anyhow!(e))?);
+    let trace = Trace::generate(
+        gen.seed,
+        n_clients,
+        m.usize("domains").map_err(|e| anyhow!(e))?.min(DOMAINS.len()),
+        m.usize("per-domain").map_err(|e| anyhow!(e))?,
+        m.usize("shots").map_err(|e| anyhow!(e))?,
+    );
+    run_trace(engine, &mut clients, &trace, &gen)?;
+    let (keys, bytes, evictions) = cb.stats();
+    println!("cache box: {keys} keys, {:.1} MB, {evictions} evictions", bytes as f64 / 1e6);
+    cb.shutdown();
+    Ok(())
+}
+
+fn cmd_tables(argv: &[String]) -> Result<()> {
+    let m = parse_or_help(
+        Command::new("tables", "regenerate paper tables (analytic track)")
+            .opt("prompts", "6434", "population size (paper: 6434)")
+            .opt("seed", "42", "workload seed"),
+        argv,
+    )?;
+    let n = m.usize("prompts").map_err(|e| anyhow!(e))?;
+    let seed = m.u64("seed").map_err(|e| anyhow!(e))?;
+
+    println!("== Table 2 / Figure 4: TTFT & TTLT, Case 1 vs Case 5 ==\n");
+    for s in [exp::Setting::low_end_paper(), exp::Setting::high_end_paper()] {
+        let (miss, hit) = exp::analytic_table23(&s, seed, n);
+        let (t2, means) = exp::render_table2(s.name, &miss, &hit);
+        println!("{t2}");
+        println!(
+            "{}",
+            report::ascii_bars(
+                &format!("Figure 4 ({}): TTFT / TTLT [s]", s.name),
+                &[
+                    ("TTFT case1".into(), means[0]),
+                    ("TTFT case5".into(), means[1]),
+                    ("TTLT case1".into(), means[2]),
+                    ("TTLT case5".into(), means[3]),
+                ],
+                "s",
+            )
+        );
+        println!("== Table 3 ({}) ==\n{}", s.name, exp::render_table3(&[
+            (&format!("{} (Case 1)", s.name), &miss, s.n_shots, s.max_new),
+            (&format!("{} (Case 5)", s.name), &hit, s.n_shots, s.max_new),
+        ]));
+    }
+
+    println!("== Table 4 / Figure 5: partial matching (astronomy, N=5) ==\n");
+    for s in [exp::Setting::low_end_paper(), exp::Setting::high_end_paper()] {
+        let rows = exp::analytic_table4(&s, seed);
+        let body: Vec<Vec<String>> = rows
+            .iter()
+            .map(|(c, m_, pct, td, _)| {
+                vec![
+                    format!("{} (Case {c})", s.name),
+                    m_.to_string(),
+                    format!("{pct:.2}"),
+                    format!("{:.2}", td * 1e3),
+                ]
+            })
+            .collect();
+        println!(
+            "{}",
+            report::ascii_table(&["Setting", "# matched", "% matched", "T-decode [ms]"], &body)
+        );
+        if s.name == "Low-end" {
+            let bars: Vec<(String, f64, f64)> = rows
+                .iter()
+                .map(|(c, _, _, td, redis)| (format!("Case {c}"), *td, *redis))
+                .collect();
+            println!(
+                "{}",
+                report::ascii_stacked_bars(
+                    "Figure 5 (Low-end): total decoding time + Redis overhead [s]",
+                    &bars,
+                    "T-decode",
+                    "Redis",
+                    "s"
+                )
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_workload(argv: &[String]) -> Result<()> {
+    let m = parse_or_help(
+        Command::new("workload", "print a generated MMLU-like prompt")
+            .opt("domain", "astronomy", "one of the 57 MMLU domains")
+            .opt("shots", "5", "few-shot examples")
+            .opt("index", "0", "question index")
+            .opt("seed", "42", "generator seed"),
+        argv,
+    )?;
+    let g = Generator::new(m.u64("seed").map_err(|e| anyhow!(e))?);
+    let p = g.prompt(
+        &m.str("domain"),
+        m.u64("index").map_err(|e| anyhow!(e))?,
+        m.usize("shots").map_err(|e| anyhow!(e))?,
+    );
+    println!("{}", p.full_text());
+    eprintln!(
+        "\n--- {} words; ranges at {:?} chars; answer {}",
+        p.word_count(),
+        p.prefix_texts().iter().map(|t| t.len()).collect::<Vec<_>>(),
+        p.answer
+    );
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let m = parse_or_help(
+        Command::new("info", "artifact/preset information")
+            .opt("preset", "tiny", "artifact preset"),
+        argv,
+    )?;
+    let engine = Engine::load_preset(&m.str("preset"))?;
+    let c = &engine.model.config;
+    println!("preset        : {}", c.name);
+    println!("model hash    : {}", engine.model_hash());
+    println!("vocab         : {}", c.vocab);
+    println!("d_model       : {}", c.d_model);
+    println!("layers        : {}", c.n_layers);
+    println!("heads (kv)    : {} ({})", c.n_heads, c.n_kv_heads);
+    println!("head_dim      : {}", c.head_dim);
+    println!("d_ff          : {}", c.d_ff);
+    println!("max_seq       : {}", c.max_seq);
+    println!("prefill chunks: {:?}", engine.model.chunks());
+    println!("param bytes   : {:.1} MB", engine.model.param_bytes as f64 / 1e6);
+    println!("KV bytes/tok  : {}", c.kv_bytes_per_token());
+    println!(
+        "state @65 tok : {:.2} MB (paper 270M: 2.25 MB)",
+        (65 * c.kv_bytes_per_token()) as f64 / 1e6
+    );
+    Ok(())
+}

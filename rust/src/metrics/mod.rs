@@ -1,0 +1,338 @@
+//! Latency instrumentation: the paper's six-phase breakdown plus summary
+//! statistics over prompt populations.
+//!
+//! Table 3 decomposes every query into **Token** (tokenize), **Bloom** (local
+//! catalog lookup), **P-decode** (prompt prefill), **Redis** (cache-box
+//! down/upload), **R-decode** (response decoding) and **Sample** (token
+//! sampling).  [`PhaseBreakdown`] carries exactly those six accumulators;
+//! TTFT/TTLT derive from them the same way the paper composes Table 2 from
+//! Table 3.
+
+use std::fmt;
+use std::time::{Duration, Instant};
+
+/// The six latency components of Table 3, in paper order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Tokenizing the input prompt.
+    Token,
+    /// Querying the local Bloom-filter catalog.
+    Bloom,
+    /// Decoding (prefilling) the prompt locally.
+    PDecode,
+    /// Downloading/uploading prompt-cache entries from/to the server.
+    Redis,
+    /// Decoding response tokens.
+    RDecode,
+    /// Sampling response tokens.
+    Sample,
+}
+
+pub const PHASES: [Phase; 6] = [
+    Phase::Token,
+    Phase::Bloom,
+    Phase::PDecode,
+    Phase::Redis,
+    Phase::RDecode,
+    Phase::Sample,
+];
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Token => "Token",
+            Phase::Bloom => "Bloom",
+            Phase::PDecode => "P-decode",
+            Phase::Redis => "Redis",
+            Phase::RDecode => "R-decode",
+            Phase::Sample => "Sample",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Phase::Token => 0,
+            Phase::Bloom => 1,
+            Phase::PDecode => 2,
+            Phase::Redis => 3,
+            Phase::RDecode => 4,
+            Phase::Sample => 5,
+        }
+    }
+}
+
+/// Per-query phase accumulator.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    durs: [Duration; 6],
+    /// Number of prompt tokens (paper Table 3 "# tokens").
+    pub prompt_tokens: usize,
+    /// Number of generated response tokens.
+    pub response_tokens: usize,
+    /// Bytes moved over the cache-box link (paper "State size").
+    pub state_bytes: usize,
+    /// Tokens whose prefill was skipped thanks to a cache hit.
+    pub reused_tokens: usize,
+}
+
+impl PhaseBreakdown {
+    pub fn add(&mut self, p: Phase, d: Duration) {
+        self.durs[p.index()] += d;
+    }
+
+    pub fn get(&self, p: Phase) -> Duration {
+        self.durs[p.index()]
+    }
+
+    /// Time a closure into a phase.
+    pub fn time<T>(&mut self, p: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let r = f();
+        self.add(p, t0.elapsed());
+        r
+    }
+
+    /// Time to First Token = everything before response decoding starts
+    /// (paper: Token + Bloom + P-decode [+ Redis on hits]).
+    pub fn ttft(&self) -> Duration {
+        self.get(Phase::Token) + self.get(Phase::Bloom) + self.get(Phase::PDecode)
+            + self.get(Phase::Redis)
+    }
+
+    /// Time to Last Token = TTFT + R-decode + Sample.
+    pub fn ttlt(&self) -> Duration {
+        self.ttft() + self.get(Phase::RDecode) + self.get(Phase::Sample)
+    }
+
+    /// Total decoding time (paper Table 4 "T-decode" = P-decode + R-decode).
+    pub fn t_decode(&self) -> Duration {
+        self.get(Phase::PDecode) + self.get(Phase::RDecode)
+    }
+
+    pub fn merge(&mut self, other: &PhaseBreakdown) {
+        for (a, b) in self.durs.iter_mut().zip(&other.durs) {
+            *a += *b;
+        }
+        self.prompt_tokens += other.prompt_tokens;
+        self.response_tokens += other.response_tokens;
+        self.state_bytes += other.state_bytes;
+        self.reused_tokens += other.reused_tokens;
+    }
+}
+
+impl fmt::Display for PhaseBreakdown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for p in PHASES {
+            write!(f, "{}={:.2}ms ", p.name(), self.get(p).as_secs_f64() * 1e3)?;
+        }
+        write!(
+            f,
+            "ttft={:.2}ms ttlt={:.2}ms",
+            self.ttft().as_secs_f64() * 1e3,
+            self.ttlt().as_secs_f64() * 1e3
+        )
+    }
+}
+
+/// Running summary over a population of scalar samples (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn push_dur(&mut self, d: Duration) {
+        self.push(d.as_secs_f64());
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() as f64) * p) as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    /// Relative change vs a baseline mean, in percent (negative = reduction).
+    /// The paper's headline "−93.12 % TTFT" is this quantity.
+    pub fn reduction_pct(&self, baseline: &Summary) -> f64 {
+        let b = baseline.mean();
+        if b == 0.0 {
+            return 0.0;
+        }
+        (self.mean() - b) / b * 100.0
+    }
+}
+
+/// Aggregates phase breakdowns per experimental case (e.g. Case 1 vs Case 5).
+#[derive(Debug, Default)]
+pub struct CaseAggregate {
+    pub n: usize,
+    pub phase_sums: [f64; 6],
+    pub ttft: Summary,
+    pub ttlt: Summary,
+    pub t_decode: Summary,
+    pub prompt_tokens: f64,
+    pub state_bytes: f64,
+}
+
+impl CaseAggregate {
+    pub fn push(&mut self, b: &PhaseBreakdown) {
+        self.n += 1;
+        for p in PHASES {
+            self.phase_sums[p.index()] += b.get(p).as_secs_f64();
+        }
+        self.ttft.push_dur(b.ttft());
+        self.ttlt.push_dur(b.ttlt());
+        self.t_decode.push_dur(b.t_decode());
+        self.prompt_tokens += b.prompt_tokens as f64;
+        self.state_bytes += b.state_bytes as f64;
+    }
+
+    /// Mean time in a phase, milliseconds (Table 3 cell).
+    pub fn phase_mean_ms(&self, p: Phase) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.phase_sums[p.index()] / self.n as f64 * 1e3
+    }
+
+    pub fn mean_prompt_tokens(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.prompt_tokens / self.n as f64
+    }
+
+    pub fn mean_state_mb(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.state_bytes / self.n as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttft_ttlt_composition() {
+        let mut b = PhaseBreakdown::default();
+        b.add(Phase::Token, Duration::from_millis(3));
+        b.add(Phase::Bloom, Duration::from_millis(1));
+        b.add(Phase::PDecode, Duration::from_millis(100));
+        b.add(Phase::Redis, Duration::from_millis(50));
+        b.add(Phase::RDecode, Duration::from_millis(200));
+        b.add(Phase::Sample, Duration::from_millis(2));
+        assert_eq!(b.ttft(), Duration::from_millis(154));
+        assert_eq!(b.ttlt(), Duration::from_millis(356));
+        assert_eq!(b.t_decode(), Duration::from_millis(300));
+    }
+
+    #[test]
+    fn time_accumulates() {
+        let mut b = PhaseBreakdown::default();
+        let r = b.time(Phase::Token, || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(r, 42);
+        assert!(b.get(Phase::Token) >= Duration::from_millis(4));
+        b.time(Phase::Token, || std::thread::sleep(Duration::from_millis(5)));
+        assert!(b.get(Phase::Token) >= Duration::from_millis(9), "accumulate");
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseBreakdown::default();
+        a.add(Phase::Redis, Duration::from_millis(10));
+        a.prompt_tokens = 5;
+        let mut b = PhaseBreakdown::default();
+        b.add(Phase::Redis, Duration::from_millis(20));
+        b.prompt_tokens = 7;
+        a.merge(&b);
+        assert_eq!(a.get(Phase::Redis), Duration::from_millis(30));
+        assert_eq!(a.prompt_tokens, 12);
+    }
+
+    #[test]
+    fn summary_stats() {
+        let mut s = Summary::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(v);
+        }
+        assert_eq!(s.n(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.std() - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.percentile(0.5), 3.0);
+    }
+
+    #[test]
+    fn reduction_pct_headline() {
+        // paper: TTFT 12.59 s -> 0.87 s is a 93.1 % reduction
+        let mut base = Summary::new();
+        base.push(12.59);
+        let mut hit = Summary::new();
+        hit.push(0.87);
+        let red = hit.reduction_pct(&base);
+        assert!((-93.5..=-92.5).contains(&red), "{red}");
+    }
+
+    #[test]
+    fn case_aggregate_means() {
+        let mut agg = CaseAggregate::default();
+        for i in 1..=4u64 {
+            let mut b = PhaseBreakdown::default();
+            b.add(Phase::PDecode, Duration::from_millis(100 * i));
+            b.prompt_tokens = 10 * i as usize;
+            b.state_bytes = 1_000_000;
+            agg.push(&b);
+        }
+        assert_eq!(agg.n, 4);
+        assert!((agg.phase_mean_ms(Phase::PDecode) - 250.0).abs() < 1e-9);
+        assert!((agg.mean_prompt_tokens() - 25.0).abs() < 1e-9);
+        assert!((agg.mean_state_mb() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! Model-side state management: the KV cache the engine owns between PJRT
+//! calls, its wire format (the `llama_state_get_data()` /
+//! `llama_state_set_data()` analog the paper ships over Redis), and token
+//! sampling.
+
+pub mod sampler;
+pub mod state;
+
+pub use sampler::{argmax, Sampler};
+pub use state::{KvState, StateError, StateHeader};

@@ -1,0 +1,115 @@
+//! Token sampling — the paper's "Sample" phase.
+//!
+//! The paper uses greedy sampling throughout; temperature/top-k are included
+//! because the engine is a general serving component (and for ablations).
+
+use crate::util::rng::Rng;
+
+/// Greedy argmax over logits (ties broken toward the lower id, like
+/// llama.cpp's deterministic greedy sampler).
+pub fn argmax(logits: &[f32]) -> u32 {
+    debug_assert!(!logits.is_empty());
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[derive(Debug, Clone)]
+pub enum Sampler {
+    Greedy,
+    /// softmax(logits / temperature), restricted to the top-k ids.
+    TopK { temperature: f32, k: usize, rng: Rng },
+}
+
+impl Sampler {
+    pub fn greedy() -> Self {
+        Sampler::Greedy
+    }
+
+    pub fn top_k(temperature: f32, k: usize, seed: u64) -> Self {
+        assert!(temperature > 0.0 && k > 0);
+        Sampler::TopK { temperature, k, rng: Rng::new(seed) }
+    }
+
+    pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        match self {
+            Sampler::Greedy => argmax(logits),
+            Sampler::TopK { temperature, k, rng } => {
+                let k = (*k).min(logits.len());
+                // indices of the k largest logits
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                    logits[b].partial_cmp(&logits[a]).unwrap()
+                });
+                idx.truncate(k);
+                let maxv = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+                let weights: Vec<f64> = idx
+                    .iter()
+                    .map(|&i| (((logits[i] - maxv) / *temperature) as f64).exp())
+                    .collect();
+                let total: f64 = weights.iter().sum();
+                let mut r = rng.f64() * total;
+                for (w, &i) in weights.iter().zip(&idx) {
+                    if r < *w {
+                        return i as u32;
+                    }
+                    r -= w;
+                }
+                *idx.last().unwrap() as u32
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic_and_ties() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax(&[5.0, 5.0, 1.0]), 0, "ties -> lower id");
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    #[test]
+    fn greedy_matches_argmax() {
+        let mut s = Sampler::greedy();
+        assert_eq!(s.sample(&[0.0, 1.0, 0.5]), 1);
+    }
+
+    #[test]
+    fn topk_respects_support() {
+        let mut s = Sampler::top_k(1.0, 2, 42);
+        let logits = vec![10.0, 9.0, -50.0, -50.0];
+        for _ in 0..200 {
+            let t = s.sample(&logits);
+            assert!(t == 0 || t == 1, "sampled outside top-2: {t}");
+        }
+    }
+
+    #[test]
+    fn topk_low_temperature_is_almost_greedy() {
+        let mut s = Sampler::top_k(0.01, 4, 7);
+        let logits = vec![1.0, 2.0, 30.0, 4.0];
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits), 2);
+        }
+    }
+
+    #[test]
+    fn topk_deterministic_per_seed() {
+        let logits: Vec<f32> = (0..100).map(|i| (i % 13) as f32).collect();
+        let mut a = Sampler::top_k(1.0, 10, 3);
+        let mut b = Sampler::top_k(1.0, 10, 3);
+        for _ in 0..20 {
+            assert_eq!(a.sample(&logits), b.sample(&logits));
+        }
+    }
+}

@@ -1,0 +1,372 @@
+//! Experiment drivers behind every paper table/figure (DESIGN.md §6).
+//!
+//! Two tracks, both exercised by the benches:
+//!
+//! * **real** — the full stack end to end: PJRT model, real state bytes over
+//!   real sockets, device pacing + link shaping.  Absolute numbers land on
+//!   the paper's scale but each low-end Case-1 query costs ~24 paced
+//!   seconds, so the real track runs a handful of prompts.
+//! * **analytic** — the calibrated device/link models evaluated over the
+//!   full 6434-prompt population (token counts from the real tokenizer and
+//!   workload; no model execution).  This is how the population-mean tables
+//!   are regenerated at paper scale.
+//!
+//! The paper's state sizes (34.5 KB/token for 270M, 29.8 KB/token for 1B —
+//! Table 3's 2.25 MB / 9.94 MB entries) parameterize the analytic track so
+//! transfer times match the testbed; the real track uses the sim-model's
+//! actual state bytes.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{CacheBox, EdgeClient, EdgeClientConfig, HitCase};
+use crate::devicemodel::DeviceProfile;
+use crate::engine::Engine;
+use crate::metrics::{CaseAggregate, Phase, PhaseBreakdown, PHASES};
+use crate::model::state::Compression;
+use crate::netsim::LinkModel;
+use crate::tokenizer::Tokenizer;
+use crate::workload::{Generator, Prompt, DOMAINS};
+
+/// One experimental setting (a row pair of Table 2).
+#[derive(Debug, Clone)]
+pub struct Setting {
+    pub name: &'static str,
+    pub device: DeviceProfile,
+    pub link: LinkModel,
+    /// Few-shot examples per prompt (paper: N=1 low-end, N=5 high-end).
+    pub n_shots: usize,
+    /// Response-token budget (paper-implied: 64 low-end, 1 high-end).
+    pub max_new: usize,
+    /// State bytes per cached token for the analytic track.
+    pub bytes_per_token: usize,
+    /// Catalog Bloom false-positive design rate (for expected-cost terms).
+    pub fp_rate: f64,
+}
+
+impl Setting {
+    /// Low-end: Pi Zero 2W + Gemma-3-270M-class, Wi-Fi 4 (paper defaults).
+    pub fn low_end_paper() -> Self {
+        Setting {
+            name: "Low-end",
+            device: DeviceProfile::pi_zero_2w(),
+            link: LinkModel::wifi4_2g4(),
+            n_shots: 1,
+            max_new: 64,
+            bytes_per_token: 34_474, // 2.25 MB / 65.27 tokens
+            fp_rate: 0.01,
+        }
+    }
+
+    /// High-end: Pi 5 + Gemma-3-1B-class.
+    pub fn high_end_paper() -> Self {
+        Setting {
+            name: "High-end",
+            device: DeviceProfile::pi5_4gb(),
+            link: LinkModel::wifi4_2g4(),
+            n_shots: 5,
+            max_new: 1,
+            bytes_per_token: 29_751, // 9.94 MB / 334.11 tokens
+            fp_rate: 0.01,
+        }
+    }
+}
+
+/// Analytic phase model for one (prompt, case) — the closed-form twin of the
+/// EdgeClient flow, matching Table 3's composition rules.
+pub fn analytic_breakdown(
+    s: &Setting,
+    prompt_tokens: usize,
+    matched_tokens: usize,
+    include_expected_fp_cost: bool,
+) -> PhaseBreakdown {
+    let mut bd = PhaseBreakdown::default();
+    bd.prompt_tokens = prompt_tokens;
+    bd.reused_tokens = matched_tokens;
+    bd.response_tokens = s.max_new;
+    bd.add(Phase::Token, s.device.tokenize_time(prompt_tokens));
+    bd.add(Phase::Bloom, s.device.bloom_time(1));
+    if matched_tokens > 0 {
+        let bytes = matched_tokens * s.bytes_per_token;
+        bd.state_bytes = bytes;
+        bd.add(Phase::Redis, s.link.delay_for(bytes, None));
+    } else if include_expected_fp_cost {
+        // §5.2.4: a Case-1 query pays the download with probability fp_rate
+        let bytes = prompt_tokens * s.bytes_per_token;
+        let d = s.link.delay_for(bytes, None).mul_f64(s.fp_rate);
+        bd.add(Phase::Redis, d);
+    }
+    if matched_tokens < prompt_tokens {
+        bd.add(
+            Phase::PDecode,
+            s.device.prefill_time(prompt_tokens - matched_tokens),
+        );
+    }
+    bd.add(Phase::RDecode, s.device.decode_time(s.max_new));
+    bd.add(Phase::Sample, s.device.sample_time(s.max_new));
+    bd
+}
+
+/// The population of prompts a setting is evaluated on.
+pub fn population(seed: u64, n_shots: usize, n_prompts: usize) -> Vec<Prompt> {
+    let g = Generator::new(seed);
+    let per_domain = n_prompts.div_ceil(DOMAINS.len());
+    let mut prompts = Vec::with_capacity(n_prompts);
+    'outer: for q in 0..per_domain {
+        for &d in DOMAINS.iter() {
+            prompts.push(g.prompt(d, q as u64, n_shots));
+            if prompts.len() >= n_prompts {
+                break 'outer;
+            }
+        }
+    }
+    prompts
+}
+
+/// Analytic Table 2 + Table 3 over `n_prompts` (paper: 6434): returns
+/// (case1, case5) aggregates.
+pub fn analytic_table23(
+    s: &Setting,
+    seed: u64,
+    n_prompts: usize,
+) -> (CaseAggregate, CaseAggregate) {
+    let tok = Tokenizer::full();
+    let mut miss = CaseAggregate::default();
+    let mut hit = CaseAggregate::default();
+    for p in population(seed, s.n_shots, n_prompts) {
+        let n = tok.encode(&p.full_text()).len() + 1; // +BOS
+        miss.push(&analytic_breakdown(s, n, 0, true));
+        hit.push(&analytic_breakdown(s, n, n, false));
+    }
+    (miss, hit)
+}
+
+/// Analytic Table 4: total decoding time per partial-matching case for one
+/// astronomy N=5 prompt.  Returns rows (case_no, matched, pct, t_decode_s,
+/// redis_s).
+pub fn analytic_table4(s: &Setting, seed: u64) -> Vec<(usize, usize, f64, f64, f64)> {
+    let tok = Tokenizer::full();
+    let g = Generator::new(seed);
+    let p = g.prompt("astronomy", 0, 5);
+    let full: usize = tok.encode(&p.full_text()).len() + 1;
+    let mut matched: Vec<usize> = vec![0];
+    for ptext in p.prefix_texts() {
+        matched.push((tok.encode(&ptext).len() + 1).min(full));
+    }
+    // prefix_texts ends with the full prompt; dedup artifacts
+    matched.dedup();
+    let mut out = Vec::new();
+    for (i, &m) in matched.iter().enumerate() {
+        let bd = analytic_breakdown(s, full, m, false);
+        out.push((
+            i + 1,
+            m,
+            m as f64 / full as f64 * 100.0,
+            bd.t_decode().as_secs_f64(),
+            bd.get(Phase::Redis).as_secs_f64(),
+        ));
+    }
+    out
+}
+
+/// Configuration for the real-track run.
+#[derive(Debug, Clone)]
+pub struct RealRunCfg {
+    pub preset: &'static str,
+    pub n_prompts: usize,
+    pub paced: bool,
+    pub setting: Setting,
+    pub seed: u64,
+}
+
+impl RealRunCfg {
+    pub fn native_tiny(n_prompts: usize) -> Self {
+        RealRunCfg {
+            preset: "tiny",
+            n_prompts,
+            paced: false,
+            setting: Setting {
+                // native: no pacing/shaping, real bytes
+                device: DeviceProfile::host(),
+                link: LinkModel::loopback(),
+                ..Setting::low_end_paper()
+            },
+            seed: 42,
+        }
+    }
+}
+
+/// Real-track Case-1/Case-5 measurement: each prompt queried twice through
+/// an in-process cache box (first = miss + upload, second = full hit).
+/// Returns (case1, case5) aggregates plus the client stats.
+pub fn real_table23(
+    engine: Arc<Engine>,
+    cfg: &RealRunCfg,
+) -> Result<(CaseAggregate, CaseAggregate)> {
+    let cb = CacheBox::start_local()?;
+    let ecfg = EdgeClientConfig {
+        name: cfg.setting.name.into(),
+        server_addr: Some(cb.addr()),
+        link: cfg.setting.link.clone(),
+        device: if cfg.paced {
+            cfg.setting.device.clone()
+        } else {
+            DeviceProfile::host()
+        },
+        max_new_tokens: Some(cfg.setting.max_new.min(8)),
+        compression: Compression::None,
+        partial_matching: true,
+        use_catalog: true,
+        fetch_policy: crate::coordinator::FetchPolicy::Always,
+        min_hit_tokens: 1,
+        sync_interval: None,
+        seed: cfg.seed,
+    };
+    let mut client = EdgeClient::new(engine, ecfg)?;
+    let mut miss = CaseAggregate::default();
+    let mut hit = CaseAggregate::default();
+    for p in population(cfg.seed, cfg.setting.n_shots, cfg.n_prompts) {
+        let r1 = client.query(&p)?;
+        anyhow::ensure!(
+            r1.case == HitCase::Miss || r1.false_positive,
+            "first query should miss, got {:?}",
+            r1.case
+        );
+        miss.push(&r1.breakdown);
+        let r2 = client.query(&p)?;
+        anyhow::ensure!(r2.case == HitCase::Full, "second query should fully hit");
+        hit.push(&r2.breakdown);
+    }
+    client.shutdown();
+    cb.shutdown();
+    Ok((miss, hit))
+}
+
+/// Render a Table-3-style breakdown block.
+pub fn render_table3(rows: &[(&str, &CaseAggregate, usize, usize)]) -> String {
+    let headers = [
+        "Setting (case)", "Token", "Bloom", "P-decode", "Redis", "R-decode",
+        "Sample", "N", "# tokens", "State [MB]",
+    ];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(name, agg, n_shots, _max_new)| {
+            let mut r = vec![name.to_string()];
+            for p in PHASES {
+                r.push(format!("{:.2}", agg.phase_mean_ms(p)));
+            }
+            r.push(n_shots.to_string());
+            r.push(format!("{:.2}", agg.mean_prompt_tokens()));
+            r.push(format!("{:.2}", agg.mean_state_mb()));
+            r
+        })
+        .collect();
+    super::ascii_table(&headers, &body)
+}
+
+/// Render a Table-2-style TTFT/TTLT block; returns the text and the four
+/// means (ttft_miss, ttft_hit, ttlt_miss, ttlt_hit) in seconds.
+pub fn render_table2(
+    name: &str,
+    miss: &CaseAggregate,
+    hit: &CaseAggregate,
+) -> (String, [f64; 4]) {
+    let tm = miss.ttft.mean();
+    let th = hit.ttft.mean();
+    let lm = miss.ttlt.mean();
+    let lh = hit.ttlt.mean();
+    let rows = vec![vec![
+        name.to_string(),
+        format!("{tm:.2}"),
+        format!("{th:.2}"),
+        format!("{:.2}", th / tm.max(1e-12) * 100.0),
+        format!("{lm:.2}"),
+        format!("{lh:.2}"),
+        format!("{:.2}", lh / lm.max(1e-12) * 100.0),
+    ]];
+    (
+        super::ascii_table(
+            &["Setting", "TTFT c1 [s]", "TTFT c5 [s]", "[%]", "TTLT c1 [s]", "TTLT c5 [s]", "[%]"],
+            &rows,
+        ),
+        [tm, th, lm, lh],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_low_end_matches_paper_shape() {
+        // Use the paper's own mean token counts to pin the absolute numbers:
+        // 65.27-token prompts, 64-token responses.
+        let s = Setting::low_end_paper();
+        let c1 = analytic_breakdown(&s, 65, 0, true);
+        let c5 = analytic_breakdown(&s, 65, 65, false);
+        let ttft1 = c1.ttft().as_secs_f64();
+        let ttft5 = c5.ttft().as_secs_f64();
+        // paper: 12.59 -> 0.87 (93.12 % reduction)
+        assert!((11.5..13.5).contains(&ttft1), "{ttft1}");
+        assert!((0.7..1.1).contains(&ttft5), "{ttft5}");
+        let red = (ttft5 - ttft1) / ttft1 * 100.0;
+        assert!((-95.0..-90.0).contains(&red), "TTFT reduction {red:.2}%");
+        // TTLT: 23.74 -> 11.86 (~50 %)
+        let r2 = (c5.ttlt().as_secs_f64() - c1.ttlt().as_secs_f64())
+            / c1.ttlt().as_secs_f64()
+            * 100.0;
+        assert!((-56.0..-44.0).contains(&r2), "TTLT reduction {r2:.2}%");
+    }
+
+    #[test]
+    fn analytic_high_end_regresses_like_paper() {
+        let s = Setting::high_end_paper();
+        let c1 = analytic_breakdown(&s, 334, 0, true);
+        let c5 = analytic_breakdown(&s, 334, 334, false);
+        let ttft1 = c1.ttft().as_secs_f64();
+        let ttft5 = c5.ttft().as_secs_f64();
+        // paper: 2.70 -> 2.89 (+7 %): hit must be SLOWER on the high-end
+        assert!(ttft5 > ttft1, "hit {ttft5} must exceed miss {ttft1}");
+        let ratio = ttft5 / ttft1 * 100.0;
+        assert!((101.0..115.0).contains(&ratio), "ratio {ratio:.1}%");
+    }
+
+    #[test]
+    fn population_spans_domains() {
+        let p = population(1, 1, 100);
+        assert_eq!(p.len(), 100);
+        let domains: std::collections::HashSet<_> =
+            p.iter().map(|x| x.domain.clone()).collect();
+        assert!(domains.len() >= 57.min(100));
+    }
+
+    #[test]
+    fn analytic_table4_monotone() {
+        let s = Setting::low_end_paper();
+        let rows = analytic_table4(&s, 7);
+        assert!(rows.len() >= 4, "cases 1..5 (deduped)");
+        assert_eq!(rows[0].1, 0);
+        for w in rows.windows(2) {
+            assert!(w[1].1 > w[0].1, "matched tokens increase");
+            assert!(w[1].3 < w[0].3, "T-decode decreases with matching");
+        }
+        let last = rows.last().unwrap();
+        assert!((last.2 - 100.0).abs() < 1e-9, "last case is the full prompt");
+        assert!(last.3 < rows[0].3 * 0.6, "full hit saves most decode time");
+    }
+
+    #[test]
+    fn table_renderers_smoke() {
+        let s = Setting::low_end_paper();
+        let (miss, hit) = analytic_table23(&s, 1, 20);
+        let (t2, means) = render_table2("Low-end", &miss, &hit);
+        assert!(t2.contains("TTFT"));
+        assert!(means[0] > means[1], "miss TTFT > hit TTFT on low-end");
+        let t3 = render_table3(&[
+            ("Low-end (Case 1)", &miss, 1, 64),
+            ("Low-end (Case 5)", &hit, 1, 64),
+        ]);
+        assert!(t3.contains("P-decode"));
+    }
+}

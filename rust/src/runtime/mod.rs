@@ -1,0 +1,477 @@
+//! PJRT runtime — loads the AOT artifacts (`make artifacts`) and executes
+//! them on the request path.  This is the only module that touches the `xla`
+//! crate; everything above it deals in plain `Vec<f32>`/`Vec<i32>`.
+//!
+//! Wiring (see /opt/xla-example/load_hlo and aot_recipe): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute_b`.  Parameters are uploaded to the
+//! device once at load time and stay resident as [`xla::PjRtBuffer`]s; per
+//! call we upload only the KV caches, tokens and scalars.  Outputs come back
+//! as one tuple literal (the artifacts are lowered with `return_tuple=True`)
+//! and are decomposed into (logits, kcache, vcache).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::log_info;
+use crate::util::json::{parse_file, Json};
+
+/// Mirror of the Python `ModelConfig` (from meta.json).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub prefill_chunks: Vec<usize>,
+}
+
+impl ModelConfig {
+    fn from_json(j: &Json) -> Result<Self> {
+        let get = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("meta.json config missing {k}"))
+        };
+        Ok(ModelConfig {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("config missing name"))?
+                .to_string(),
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            n_kv_heads: get("n_kv_heads")?,
+            head_dim: get("head_dim")?,
+            d_ff: get("d_ff")?,
+            max_seq: get("max_seq")?,
+            prefill_chunks: j
+                .get("prefill_chunks")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// K+V f32 bytes one token contributes across all layers.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.n_layers * self.n_kv_heads * self.head_dim * 4
+    }
+
+    /// Elements in one KV cache tensor [L, S, Kh, D].
+    pub fn kv_cache_elems(&self) -> usize {
+        self.n_layers * self.max_seq * self.n_kv_heads * self.head_dim
+    }
+}
+
+#[derive(Debug, Clone)]
+struct ParamSpec {
+    name: String,
+    shape: Vec<usize>,
+    offset_bytes: usize,
+    size_bytes: usize,
+}
+
+/// One compiled entry point (decode or prefill_<C>).
+pub struct Entry {
+    pub name: String,
+    /// 0 for decode, chunk length for prefill variants.
+    pub chunk: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A fully-loaded model: compiled executables + device-resident parameters.
+pub struct LoadedModel {
+    pub config: ModelConfig,
+    pub model_hash: String,
+    pub dir: PathBuf,
+    client: xla::PjRtClient,
+    params: Vec<xla::PjRtBuffer>,
+    entries: HashMap<String, Entry>,
+    /// Total parameter bytes resident on device (diagnostics).
+    pub param_bytes: usize,
+}
+
+/// Execution result of one prefill/decode call.
+pub struct StepOutput {
+    /// Flat logits: `[vocab]` for decode, `[chunk * vocab]` for prefill.
+    pub logits: Vec<f32>,
+    pub kcache: Vec<f32>,
+    pub vcache: Vec<f32>,
+}
+
+impl LoadedModel {
+    /// Load `artifacts/<preset>` produced by `python -m compile.aot`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let t0 = std::time::Instant::now();
+        let meta = parse_file(&dir.join("meta.json"))?;
+        if meta.get("format_version").and_then(Json::as_i64) != Some(1) {
+            bail!("unsupported artifact format_version in {}", dir.display());
+        }
+        let config = ModelConfig::from_json(meta.req("config").map_err(|e| anyhow!("{e}"))?)?;
+        let model_hash = meta
+            .get("model_hash")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("meta.json missing model_hash"))?
+            .to_string();
+
+        let client = xla::PjRtClient::cpu()?;
+
+        // -- parameters: read params.bin, upload each tensor once ------------
+        let mut specs = Vec::new();
+        for p in meta
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("meta.json missing params"))?
+        {
+            specs.push(ParamSpec {
+                name: p.req("name")?.as_str().unwrap_or_default().to_string(),
+                shape: p
+                    .req("shape")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect(),
+                offset_bytes: p.req("offset_bytes")?.as_usize().unwrap_or(0),
+                size_bytes: p.req("size_bytes")?.as_usize().unwrap_or(0),
+            });
+        }
+        // manifest order must be sorted-name order (the jax flatten contract)
+        for w in specs.windows(2) {
+            if w[0].name >= w[1].name {
+                bail!("params manifest not in sorted order: {} >= {}", w[0].name, w[1].name);
+            }
+        }
+        let blob = std::fs::read(dir.join("params.bin"))
+            .with_context(|| format!("reading {}/params.bin", dir.display()))?;
+        let mut params = Vec::with_capacity(specs.len());
+        let mut param_bytes = 0usize;
+        for s in &specs {
+            let end = s.offset_bytes + s.size_bytes;
+            if end > blob.len() {
+                bail!("params.bin truncated: {} needs {end} bytes, file has {}", s.name, blob.len());
+            }
+            let data = crate::util::bytes::bytes_to_f32(&blob[s.offset_bytes..end]);
+            let expect: usize = s.shape.iter().product::<usize>().max(1);
+            if data.len() != expect {
+                bail!("param {} shape/size mismatch", s.name);
+            }
+            let buf = client
+                .buffer_from_host_buffer::<f32>(&data, &s.shape, None)
+                .map_err(|e| anyhow!("uploading {}: {e:?}", s.name))?;
+            params.push(buf);
+            param_bytes += s.size_bytes;
+        }
+
+        // -- entry points -----------------------------------------------------
+        let mut entries = HashMap::new();
+        for e in meta
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("meta.json missing entries"))?
+        {
+            let name = e.req("name")?.as_str().unwrap_or_default().to_string();
+            let hlo_file = e.req("hlo")?.as_str().unwrap_or_default().to_string();
+            let chunk = e.req("chunk")?.as_usize().unwrap_or(0);
+            let path = dir.join(&hlo_file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            entries.insert(name.clone(), Entry { name, chunk, exe });
+        }
+        if !entries.contains_key("decode") {
+            bail!("artifact dir {} lacks a decode entry", dir.display());
+        }
+
+        log_info!(
+            "runtime",
+            "loaded {} ({}): {} entries, {:.1} MB params, {:.2}s",
+            config.name,
+            model_hash,
+            entries.len(),
+            param_bytes as f64 / 1e6,
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(LoadedModel {
+            config,
+            model_hash,
+            dir: dir.to_path_buf(),
+            client,
+            params,
+            entries,
+            param_bytes,
+        })
+    }
+
+    /// Load a named preset from the repo artifacts dir.
+    pub fn load_preset(preset: &str) -> Result<Self> {
+        Self::load(&crate::artifacts_dir().join(preset))
+    }
+
+    /// Prefill chunk sizes available, ascending.
+    pub fn chunks(&self) -> Vec<usize> {
+        let mut c: Vec<usize> = self
+            .entries
+            .values()
+            .filter(|e| e.chunk > 0)
+            .map(|e| e.chunk)
+            .collect();
+        c.sort_unstable();
+        c
+    }
+
+    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .map_err(|e| anyhow!("host->device f32: {e:?}"))
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(data, dims, None)
+            .map_err(|e| anyhow!("host->device i32: {e:?}"))
+    }
+
+    fn run(
+        &self,
+        entry: &Entry,
+        kcache: &[f32],
+        vcache: &[f32],
+        tail: Vec<xla::PjRtBuffer>,
+    ) -> Result<StepOutput> {
+        let cfg = &self.config;
+        let kv_dims = [cfg.n_layers, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim];
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.params.len() + 5);
+        for p in &self.params {
+            args.push(p);
+        }
+        let kbuf = self.buf_f32(kcache, &kv_dims)?;
+        let vbuf = self.buf_f32(vcache, &kv_dims)?;
+        args.push(&kbuf);
+        args.push(&vbuf);
+        for t in &tail {
+            args.push(t);
+        }
+        let outs = entry
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", entry.name))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let (logits_l, k_l, v_l) = lit
+            .to_tuple3()
+            .map_err(|e| anyhow!("untuple result: {e:?}"))?;
+        Ok(StepOutput {
+            logits: logits_l.to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))?,
+            kcache: k_l.to_vec::<f32>().map_err(|e| anyhow!("kcache: {e:?}"))?,
+            vcache: v_l.to_vec::<f32>().map_err(|e| anyhow!("vcache: {e:?}"))?,
+        })
+    }
+
+    /// Execute `prefill_<chunk>` — `tokens` must have length == chunk
+    /// (pre-padded); `valid_len` marks the real token count.
+    pub fn prefill(
+        &self,
+        chunk: usize,
+        kcache: &[f32],
+        vcache: &[f32],
+        tokens: &[i32],
+        pos: i32,
+        valid_len: i32,
+    ) -> Result<StepOutput> {
+        let name = format!("prefill_{chunk}");
+        let entry = self
+            .entries
+            .get(&name)
+            .ok_or_else(|| anyhow!("no entry {name}; have {:?}", self.chunks()))?;
+        if tokens.len() != chunk {
+            bail!("prefill_{chunk} got {} tokens", tokens.len());
+        }
+        let tail = vec![
+            self.buf_i32(tokens, &[chunk])?,
+            self.buf_i32(&[pos], &[])?,
+            self.buf_i32(&[valid_len], &[])?,
+        ];
+        self.run(entry, kcache, vcache, tail)
+    }
+
+    /// Execute the single-token decode step writing the updated KV caches
+    /// directly into `kcache`/`vcache` (no per-step allocations — the decode
+    /// loop is the latency-critical path; see EXPERIMENTS.md §Perf).
+    pub fn decode_in_place(
+        &self,
+        kcache: &mut [f32],
+        vcache: &mut [f32],
+        token: i32,
+        pos: i32,
+    ) -> Result<Vec<f32>> {
+        let cfg = &self.config;
+        let kv_dims = [cfg.n_layers, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim];
+        let entry = self.entries.get("decode").expect("checked at load");
+        let kbuf = self.buf_f32(kcache, &kv_dims)?;
+        let vbuf = self.buf_f32(vcache, &kv_dims)?;
+        let tbuf = self.buf_i32(&[token], &[])?;
+        let pbuf = self.buf_i32(&[pos], &[])?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.params.len() + 4);
+        args.extend(self.params.iter());
+        args.push(&kbuf);
+        args.push(&vbuf);
+        args.push(&tbuf);
+        args.push(&pbuf);
+        let outs = entry
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute decode: {e:?}"))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let (logits_l, k_l, v_l) = lit
+            .to_tuple3()
+            .map_err(|e| anyhow!("untuple result: {e:?}"))?;
+        k_l.copy_raw_to(kcache).map_err(|e| anyhow!("kcache copy: {e:?}"))?;
+        v_l.copy_raw_to(vcache).map_err(|e| anyhow!("vcache copy: {e:?}"))?;
+        logits_l
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits: {e:?}"))
+    }
+
+    /// Execute the single-token decode step.
+    pub fn decode(
+        &self,
+        kcache: &[f32],
+        vcache: &[f32],
+        token: i32,
+        pos: i32,
+    ) -> Result<StepOutput> {
+        let entry = self.entries.get("decode").expect("checked at load");
+        let tail = vec![self.buf_i32(&[token], &[])?, self.buf_i32(&[pos], &[])?];
+        self.run(entry, kcache, vcache, tail)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dir() -> Option<PathBuf> {
+        let d = crate::artifacts_dir().join("tiny");
+        d.join("meta.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn load_tiny_and_inspect() {
+        let Some(dir) = tiny_dir() else {
+            eprintln!("skipping: artifacts/tiny missing (run `make artifacts`)");
+            return;
+        };
+        let m = LoadedModel::load(&dir).unwrap();
+        assert_eq!(m.config.name, "tiny");
+        assert_eq!(m.config.vocab, 512);
+        assert!(!m.chunks().is_empty());
+        assert!(m.param_bytes > 0);
+        assert_eq!(m.config.kv_bytes_per_token(), 2 * 2 * 2 * 16 * 4);
+    }
+
+    #[test]
+    fn prefill_and_decode_shapes() {
+        let Some(dir) = tiny_dir() else {
+            return;
+        };
+        let m = LoadedModel::load(&dir).unwrap();
+        let cfg = m.config.clone();
+        let n = cfg.kv_cache_elems();
+        let kc = vec![0f32; n];
+        let vc = vec![0f32; n];
+        let chunk = m.chunks()[0];
+        let tokens: Vec<i32> = (0..chunk as i32).map(|i| i + 3).collect();
+        let out = m.prefill(chunk, &kc, &vc, &tokens, 0, chunk as i32).unwrap();
+        assert_eq!(out.logits.len(), chunk * cfg.vocab);
+        assert_eq!(out.kcache.len(), n);
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+
+        let out2 = m.decode(&out.kcache, &out.vcache, 7, chunk as i32).unwrap();
+        assert_eq!(out2.logits.len(), cfg.vocab);
+        assert!(out2.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn decode_deterministic() {
+        let Some(dir) = tiny_dir() else {
+            return;
+        };
+        let m = LoadedModel::load(&dir).unwrap();
+        let n = m.config.kv_cache_elems();
+        let kc = vec![0f32; n];
+        let vc = vec![0f32; n];
+        let a = m.decode(&kc, &vc, 5, 0).unwrap();
+        let b = m.decode(&kc, &vc, 5, 0).unwrap();
+        assert_eq!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn missing_dir_fails_cleanly() {
+        let r = LoadedModel::load(Path::new("/nonexistent/artifact"));
+        assert!(r.is_err());
+    }
+}
+
+impl LoadedModel {
+    /// Perf probe: per-component timing of one decode step (buffer upload /
+    /// execute / tuple fetch / host conversion), in microseconds.
+    pub fn decode_timing_probe(
+        &self,
+        kcache: &[f32],
+        vcache: &[f32],
+    ) -> Result<[u128; 4]> {
+        use std::time::Instant;
+        let cfg = &self.config;
+        let kv_dims = [cfg.n_layers, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim];
+        let entry = self.entries.get("decode").unwrap();
+
+        let t0 = Instant::now();
+        let kbuf = self.buf_f32(kcache, &kv_dims)?;
+        let vbuf = self.buf_f32(vcache, &kv_dims)?;
+        let tbuf = self.buf_i32(&[5], &[])?;
+        let pbuf = self.buf_i32(&[10], &[])?;
+        let t_upload = t0.elapsed().as_micros();
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&kbuf);
+        args.push(&vbuf);
+        args.push(&tbuf);
+        args.push(&pbuf);
+        let t1 = Instant::now();
+        let outs = entry.exe.execute_b(&args).map_err(|e| anyhow!("{e:?}"))?;
+        let t_exec = t1.elapsed().as_micros();
+
+        let t2 = Instant::now();
+        let lit = outs[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        let t_fetch = t2.elapsed().as_micros();
+
+        let t3 = Instant::now();
+        let (l, k, v) = lit.to_tuple3().map_err(|e| anyhow!("{e:?}"))?;
+        let _ = std::hint::black_box((
+            l.to_vec::<f32>().unwrap(),
+            k.to_vec::<f32>().unwrap(),
+            v.to_vec::<f32>().unwrap(),
+        ));
+        let t_conv = t3.elapsed().as_micros();
+        Ok([t_upload, t_exec, t_fetch, t_conv])
+    }
+}

@@ -1,0 +1,207 @@
+//! Little-endian byte cursors for the state-blob and wire formats.
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum ByteError {
+    #[error("unexpected end of buffer (need {need} bytes at offset {at}, have {have})")]
+    Eof { at: usize, need: usize, have: usize },
+    #[error("invalid utf-8 in length-prefixed string")]
+    Utf8,
+}
+
+/// Append-only little-endian writer.
+#[derive(Default, Debug)]
+pub struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Writer { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+    /// u32-length-prefixed byte string.
+    pub fn lp_bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.bytes(v);
+    }
+    pub fn lp_str(&mut self, v: &str) {
+        self.lp_bytes(v.as_bytes());
+    }
+    pub fn f32_slice(&mut self, v: &[f32]) {
+        // bulk copy; f32::to_le_bytes per element would be 4x slower
+        let ptr = v.as_ptr() as *const u8;
+        let bytes = unsafe { std::slice::from_raw_parts(ptr, v.len() * 4) };
+        #[cfg(target_endian = "big")]
+        compile_error!("little-endian host required for f32_slice fast path");
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Little-endian reader over a borrowed slice.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ByteError> {
+        if self.remaining() < n {
+            return Err(ByteError::Eof { at: self.pos, need: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, ByteError> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn u16(&mut self) -> Result<u16, ByteError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    pub fn u32(&mut self) -> Result<u32, ByteError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> Result<u64, ByteError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn i32(&mut self) -> Result<i32, ByteError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn f32(&mut self) -> Result<f32, ByteError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], ByteError> {
+        self.take(n)
+    }
+    pub fn lp_bytes(&mut self) -> Result<&'a [u8], ByteError> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+    pub fn lp_str(&mut self) -> Result<&'a str, ByteError> {
+        std::str::from_utf8(self.lp_bytes()?).map_err(|_| ByteError::Utf8)
+    }
+    /// Bulk-read `n` f32s (little-endian).
+    pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>, ByteError> {
+        let raw = self.take(n * 4)?;
+        let mut out = vec![0f32; n];
+        // safe bulk copy: make an aligned copy via chunks
+        for (o, c) in out.iter_mut().zip(raw.chunks_exact(4)) {
+            *o = f32::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(out)
+    }
+}
+
+/// Reinterpret an f32 slice as bytes (LE hosts only; checked at compile time).
+pub fn f32_as_bytes(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// Copy bytes into an f32 vec (handles arbitrary alignment).
+pub fn bytes_to_f32(b: &[u8]) -> Vec<f32> {
+    assert!(b.len() % 4 == 0, "byte length {} not a multiple of 4", b.len());
+    let mut out = vec![0f32; b.len() / 4];
+    unsafe {
+        std::ptr::copy_nonoverlapping(b.as_ptr(), out.as_mut_ptr() as *mut u8, b.len());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u16(300);
+        w.u32(70_000);
+        w.u64(1 << 40);
+        w.i32(-5);
+        w.f32(1.5);
+        w.lp_str("hello");
+        w.lp_bytes(&[1, 2, 3]);
+        let buf = w.into_vec();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 300);
+        assert_eq!(r.u32().unwrap(), 70_000);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.i32().unwrap(), -5);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.lp_str().unwrap(), "hello");
+        assert_eq!(r.lp_bytes().unwrap(), &[1, 2, 3]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn eof_reported() {
+        let mut r = Reader::new(&[1, 2]);
+        assert!(matches!(r.u32(), Err(ByteError::Eof { .. })));
+    }
+
+    #[test]
+    fn f32_bulk_roundtrip() {
+        let xs: Vec<f32> = (0..1000).map(|i| i as f32 * 0.25 - 3.0).collect();
+        let mut w = Writer::new();
+        w.f32_slice(&xs);
+        let buf = w.into_vec();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.f32_vec(1000).unwrap(), xs);
+        assert_eq!(bytes_to_f32(f32_as_bytes(&xs)), xs);
+    }
+
+    #[test]
+    fn truncated_lp_string_fails() {
+        let mut w = Writer::new();
+        w.u32(100); // claims 100 bytes, provides none
+        let buf = w.into_vec();
+        let mut r = Reader::new(&buf);
+        assert!(r.lp_bytes().is_err());
+    }
+}

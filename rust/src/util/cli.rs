@@ -1,0 +1,235 @@
+//! Declarative command-line argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+    pub required: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    args: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, args: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: None, is_flag: true, required: false });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+            required: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: None, is_flag: false, required: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\noptions:");
+        for a in &self.args {
+            let tail = if a.is_flag {
+                String::new()
+            } else if let Some(d) = &a.default {
+                format!(" <value>  (default: {d})")
+            } else {
+                " <value>  (required)".to_string()
+            };
+            let _ = writeln!(s, "  --{}{}\n      {}", a.name, tail, a.help);
+        }
+        s
+    }
+
+    /// Parse a raw argv slice (without the program/subcommand name).
+    pub fn parse(&self, argv: &[String]) -> Result<Matches, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positional: Vec<String> = Vec::new();
+
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .args
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    flags.push(key);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} requires a value"))?
+                        }
+                    };
+                    values.insert(key, v);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+
+        for spec in &self.args {
+            if spec.required && !values.contains_key(spec.name) {
+                return Err(format!("missing required --{}\n\n{}", spec.name, self.usage()));
+            }
+            if let (false, Some(d)) = (spec.is_flag, &spec.default) {
+                values.entry(spec.name.to_string()).or_insert_with(|| d.clone());
+            }
+        }
+
+        Ok(Matches { values, flags, positional })
+    }
+}
+
+#[derive(Debug)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared/defaulted"))
+            .clone()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, name: &str) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .values
+            .get(name)
+            .ok_or_else(|| format!("missing --{name}"))?;
+        raw.parse::<T>()
+            .map_err(|e| format!("--{name}={raw}: {e}"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.parse_num(name)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.parse_num(name)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.parse_num(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("test", "a test command")
+            .opt("port", "7600", "tcp port")
+            .opt("model", "tiny", "model preset")
+            .flag("verbose", "chatty mode")
+            .req("out", "output path")
+    }
+
+    #[test]
+    fn defaults_and_values() {
+        let m = cmd().parse(&argv(&["--out", "x.txt"])).unwrap();
+        assert_eq!(m.str("port"), "7600");
+        assert_eq!(m.usize("port").unwrap(), 7600);
+        assert_eq!(m.str("out"), "x.txt");
+        assert!(!m.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let m = cmd()
+            .parse(&argv(&["--port=9000", "--verbose", "--out=o", "pos1"]))
+            .unwrap();
+        assert_eq!(m.str("port"), "9000");
+        assert!(m.flag("verbose"));
+        assert_eq!(m.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(cmd().parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&argv(&["--nope", "1", "--out", "o"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&argv(&["--verbose=1", "--out", "o"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = cmd().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("tcp port"));
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let m = cmd().parse(&argv(&["--port", "abc", "--out", "o"])).unwrap();
+        assert!(m.usize("port").is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! Hex encoding/decoding (for hashes and catalog keys).
+
+pub fn encode(bytes: &[u8]) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(HEX[(b >> 4) as usize] as char);
+        s.push(HEX[(b & 0xf) as usize] as char);
+    }
+    s
+}
+
+pub fn decode(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(s.len() / 2);
+    let b = s.as_bytes();
+    for pair in b.chunks_exact(2) {
+        let hi = (pair[0] as char).to_digit(16)?;
+        let lo = (pair[1] as char).to_digit(16)?;
+        out.push(((hi << 4) | lo) as u8);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let data: Vec<u8> = (0..=255).collect();
+        assert_eq!(decode(&encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn known_vector() {
+        assert_eq!(encode(b"\x00\xffab"), "00ff6162");
+        assert_eq!(decode("00ff6162").unwrap(), b"\x00\xffab");
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(decode("abc").is_none()); // odd length
+        assert!(decode("zz").is_none()); // non-hex
+    }
+}

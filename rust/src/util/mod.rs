@@ -1,0 +1,11 @@
+//! Small self-built substrates that replace crates unavailable in the
+//! offline vendor set (serde, clap, log, proptest — see DESIGN.md
+//! §Substitutions).
+
+pub mod bytes;
+pub mod cli;
+pub mod hex;
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod rng;

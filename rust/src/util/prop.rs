@@ -1,0 +1,134 @@
+//! Lightweight property-based testing harness (proptest substitute).
+//!
+//! `run_prop` drives a closure with a seeded RNG for N cases; on failure it
+//! re-runs with the failing case's seed to confirm, then reports the seed so
+//! the case can be replayed with `check_seed`.  Generators live on [`Gen`].
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with EDGECACHE_PROP_CASES).
+pub fn default_cases() -> u64 {
+    std::env::var("EDGECACHE_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256)
+}
+
+/// Per-case generator handle.
+pub struct Gen {
+    pub rng: Rng,
+    /// Case index (0..cases); useful for size-ramped generation.
+    pub case: u64,
+    pub cases: u64,
+}
+
+impl Gen {
+    /// Size hint that grows with the case index (small cases first, like
+    /// proptest's sizing), in `[1, max]`.
+    pub fn size(&mut self, max: usize) -> usize {
+        let ramp = 1 + (max as u64 * (self.case + 1) / self.cases.max(1)) as usize;
+        1 + self.rng.below(ramp.min(max) as u64) as usize
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo as u64, hi as u64) as usize
+    }
+
+    pub fn bytes(&mut self, len: usize) -> Vec<u8> {
+        (0..len).map(|_| self.rng.below(256) as u8).collect()
+    }
+
+    pub fn ascii_string(&mut self, len: usize) -> String {
+        (0..len)
+            .map(|_| (b'a' + self.rng.below(26) as u8) as char)
+            .collect()
+    }
+
+    pub fn tokens(&mut self, len: usize, vocab: u32) -> Vec<u32> {
+        (0..len).map(|_| self.rng.below(vocab as u64) as u32).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+}
+
+/// Run `f` for `cases` seeded cases; panic with the reproducing seed on the
+/// first failure.
+pub fn run_prop_n(name: &str, cases: u64, mut f: impl FnMut(&mut Gen)) {
+    let base = base_seed(name);
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen { rng: Rng::new(seed), case, cases };
+            f(&mut g);
+        }));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property {name:?} failed at case {case} (replay: check_seed({name:?}, {seed:#x})):\n{msg}",
+            );
+        }
+    }
+}
+
+pub fn run_prop(name: &str, f: impl FnMut(&mut Gen)) {
+    run_prop_n(name, default_cases(), f);
+}
+
+/// Replay a single failing case reported by `run_prop`.
+pub fn check_seed(name: &str, seed: u64, mut f: impl FnMut(&mut Gen)) {
+    let mut g = Gen { rng: Rng::new(seed), case: 0, cases: 1 };
+    let _ = name;
+    f(&mut g);
+}
+
+fn base_seed(name: &str) -> u64 {
+    // stable per-property seed unless EDGECACHE_PROP_SEED overrides
+    if let Ok(v) = std::env::var("EDGECACHE_PROP_SEED") {
+        if let Ok(s) = v.parse() {
+            return s;
+        }
+    }
+    let mut h = 0xcbf29ce484222325u64; // FNV-1a
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run_prop_n("add-commutes", 64, |g| {
+            let a = g.rng.below(1000);
+            let b = g.rng.below(1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay: check_seed")]
+    fn failing_property_reports_seed() {
+        run_prop_n("always-fails-eventually", 64, |g| {
+            // fails whenever the generated value is >= 100 (most cases)
+            assert!(g.rng.below(1000) < 100);
+        });
+    }
+
+    #[test]
+    fn size_ramp_within_bounds() {
+        run_prop_n("size-ramps", 64, |g| {
+            let s = g.size(40);
+            assert!((1..=40).contains(&s));
+        });
+    }
+}

@@ -1,0 +1,443 @@
+//! MMLU-like workload generator (the dataset substitute).
+//!
+//! The paper evaluates on MMLU: 57 domains, each prompt = shared instruction
+//! + N few-shot QA examples (fixed per domain, from the val split) + a target
+//! question (from the test split), filtered to QA pairs of ≤256 words; 6434
+//! prompts total.  The experiments exercise two properties of this dataset —
+//! *shared prefixes within a domain* and the *length distribution* — both of
+//! which this deterministic generator preserves (DESIGN.md §Substitutions):
+//!
+//! * per domain, the instruction and the N examples are fixed (seeded from
+//!   the domain name), so all prompts in a domain share the Case-4 prefix;
+//! * questions are templated from per-domain term banks with enough length
+//!   variance to exercise the ≤256-word filter;
+//! * every part boundary falls on whitespace, so tokenization is
+//!   prefix-stable across the catalog's four ranges (Figure 3).
+
+use crate::util::rng::Rng;
+
+/// The 57 MMLU subject domains (Hendrycks et al., ICLR'21).
+pub const DOMAINS: [&str; 57] = [
+    "abstract_algebra", "anatomy", "astronomy", "business_ethics",
+    "clinical_knowledge", "college_biology", "college_chemistry",
+    "college_computer_science", "college_mathematics", "college_medicine",
+    "college_physics", "computer_security", "conceptual_physics",
+    "econometrics", "electrical_engineering", "elementary_mathematics",
+    "formal_logic", "global_facts", "high_school_biology",
+    "high_school_chemistry", "high_school_computer_science",
+    "high_school_european_history", "high_school_geography",
+    "high_school_government_and_politics", "high_school_macroeconomics",
+    "high_school_mathematics", "high_school_microeconomics",
+    "high_school_physics", "high_school_psychology", "high_school_statistics",
+    "high_school_us_history", "high_school_world_history", "human_aging",
+    "human_sexuality", "international_law", "jurisprudence",
+    "logical_fallacies", "machine_learning", "management", "marketing",
+    "medical_genetics", "miscellaneous", "moral_disputes", "moral_scenarios",
+    "nutrition", "philosophy", "prehistory", "professional_accounting",
+    "professional_law", "professional_medicine", "professional_psychology",
+    "public_relations", "security_studies", "sociology", "us_foreign_policy",
+    "virology", "world_religions",
+];
+
+/// Generic term banks; combined with the domain name so each domain gets a
+/// distinct but plausible vocabulary.
+const SUBJECTS: &[&str] = &[
+    "the fundamental principle", "the standard model", "a conserved quantity",
+    "the boundary condition", "an equilibrium state", "the control group",
+    "a dominant allele", "the supreme court", "an open market",
+    "the prime factorization", "a feedback loop", "the observed sample",
+    "an isolated system", "the underlying mechanism", "a regulatory pathway",
+    "the historical record", "an early civilization", "the governing equation",
+    "a second-order effect", "the limiting case",
+];
+
+const RELATIONS: &[&str] = &[
+    "is best described by", "directly determines", "is independent of",
+    "varies inversely with", "is a necessary condition for",
+    "can be derived from", "is measured relative to", "contradicts",
+    "is proportional to", "emerges from the interaction of",
+];
+
+const OBJECTS: &[&str] = &[
+    "the rate of change observed in the system",
+    "the total energy available to the process",
+    "the distribution of outcomes across trials",
+    "the structure imposed by the governing rules",
+    "the response measured under controlled conditions",
+    "the long-run behaviour of the population",
+    "the set of admissible solutions",
+    "the precedent established in earlier cases",
+    "the marginal cost of one additional unit",
+    "the stability of the resulting configuration",
+];
+
+const FILLERS: &[&str] = &[
+    "in the general case", "under standard assumptions",
+    "according to the prevailing theory", "as discussed in the literature",
+    "for sufficiently large samples", "in the absence of external forcing",
+    "when boundary effects are negligible", "across all measured regimes",
+];
+
+/// Short answer-option phrases (kept terse so N=5 prompts land near the
+/// paper's 405-token astronomy prompt despite our coarser tokenizer).
+const CHOICES: &[&str] = &[
+    "the rate of change", "the total energy", "the sample distribution",
+    "the governing rules", "the measured response", "the population trend",
+    "the admissible set", "the earlier precedent", "the marginal cost",
+    "the stable configuration", "an unrelated factor", "none of the above",
+];
+
+const ANSWER_LETTERS: [char; 4] = ['A', 'B', 'C', 'D'];
+
+/// One multiple-choice QA pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QaPair {
+    pub question: String,
+    pub choices: [String; 4],
+    /// index into `choices` (0..4)
+    pub answer: usize,
+}
+
+impl QaPair {
+    /// Render as an answered few-shot example (MMLU harness format).
+    pub fn as_example(&self) -> String {
+        format!(
+            "{}\nA. {}\nB. {}\nC. {}\nD. {}\nAnswer: {}\n\n",
+            self.question,
+            self.choices[0],
+            self.choices[1],
+            self.choices[2],
+            self.choices[3],
+            ANSWER_LETTERS[self.answer]
+        )
+    }
+
+    /// Render as the target question (answer left for the model).
+    pub fn as_target(&self) -> String {
+        format!(
+            "{}\nA. {}\nB. {}\nC. {}\nD. {}\nAnswer:",
+            self.question, self.choices[0], self.choices[1], self.choices[2],
+            self.choices[3]
+        )
+    }
+
+    pub fn word_count(&self) -> usize {
+        self.question.split_whitespace().count()
+            + self.choices.iter().map(|c| c.split_whitespace().count()).sum::<usize>()
+    }
+}
+
+fn domain_seed(domain: &str, global_seed: u64) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in domain.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ global_seed
+}
+
+fn gen_question(rng: &mut Rng, domain: &str, length_boost: usize) -> QaPair {
+    let topic = domain.replace('_', " ");
+    let subj = rng.pick(SUBJECTS);
+    let rel = rng.pick(RELATIONS);
+    let obj = rng.pick(OBJECTS);
+    let mut q = format!("In {topic}, {subj} {rel} {obj}");
+    for _ in 0..length_boost {
+        q.push_str(", ");
+        q.push_str(*rng.pick(FILLERS));
+    }
+    q.push('?');
+
+    let mut choices: [String; 4] = Default::default();
+    let mut used = [false; 64];
+    for c in choices.iter_mut() {
+        // distinct short options
+        loop {
+            let i = rng.below(CHOICES.len() as u64) as usize;
+            if !used[i] {
+                used[i] = true;
+                *c = CHOICES[i].to_string();
+                break;
+            }
+        }
+    }
+    let answer = rng.below(4) as usize;
+    QaPair { question: q, choices, answer }
+}
+
+/// A fully-assembled prompt with its logical structure exposed — the unit the
+/// coordinator registers/looks up through the catalog's four ranges.
+#[derive(Debug, Clone)]
+pub struct Prompt {
+    pub domain: String,
+    pub instruction: String,
+    /// Few-shot examples, already rendered (answered) — fixed per domain.
+    pub examples: Vec<String>,
+    /// The rendered target question.
+    pub target: String,
+    /// Ground-truth answer letter (for sanity accounting only).
+    pub answer: char,
+}
+
+impl Prompt {
+    pub fn full_text(&self) -> String {
+        let mut s = self.instruction.clone();
+        for e in &self.examples {
+            s.push_str(e);
+        }
+        s.push_str(&self.target);
+        s
+    }
+
+    /// The paper's Figure-3 prefix ranges, shortest → longest:
+    /// 1) instruction, 2) instruction + first example,
+    /// 3) instruction + all examples, 4) the entire prompt.
+    /// (Deduplicated when N ≤ 1 makes ranges coincide.)
+    pub fn prefix_texts(&self) -> Vec<String> {
+        let mut out = Vec::with_capacity(4);
+        out.push(self.instruction.clone());
+        if !self.examples.is_empty() {
+            let mut with_first = self.instruction.clone();
+            with_first.push_str(&self.examples[0]);
+            if self.examples.len() > 1 {
+                out.push(with_first.clone());
+                let mut with_all = with_first;
+                for e in &self.examples[1..] {
+                    with_all.push_str(e);
+                }
+                out.push(with_all);
+            } else {
+                out.push(with_first);
+            }
+        }
+        out.push(self.full_text());
+        out.dedup();
+        out
+    }
+
+    pub fn word_count(&self) -> usize {
+        self.full_text().split_whitespace().count()
+    }
+}
+
+/// Deterministic MMLU-like dataset generator.
+pub struct Generator {
+    pub seed: u64,
+    /// Max words per QA pair (the paper filters at 256).
+    pub max_qa_words: usize,
+}
+
+impl Generator {
+    pub fn new(seed: u64) -> Self {
+        Generator { seed, max_qa_words: 256 }
+    }
+
+    pub fn instruction(&self, domain: &str) -> String {
+        format!(
+            "The following are multiple choice questions (with answers) about {}.\n\n",
+            domain.replace('_', " ")
+        )
+    }
+
+    /// The fixed few-shot examples of a domain (the paper's val-split draw).
+    pub fn examples(&self, domain: &str, n_shots: usize) -> Vec<String> {
+        let mut rng = Rng::new(domain_seed(domain, self.seed) ^ 0xE0A1);
+        (0..n_shots)
+            .map(|_| {
+                let boost = rng.below(3) as usize;
+                self.bounded_qa(&mut rng, domain, boost).as_example()
+            })
+            .collect()
+    }
+
+    /// The i-th test question of a domain.
+    pub fn question(&self, domain: &str, index: u64) -> QaPair {
+        let mut rng = Rng::new(domain_seed(domain, self.seed) ^ (0xBEEF + index));
+        let boost = rng.below(6) as usize;
+        self.bounded_qa(&mut rng, domain, boost)
+    }
+
+    fn bounded_qa(&self, rng: &mut Rng, domain: &str, boost: usize) -> QaPair {
+        // regenerate with shrinking boost until the ≤max_qa_words filter holds
+        let mut b = boost;
+        loop {
+            let qa = gen_question(rng, domain, b);
+            if qa.word_count() <= self.max_qa_words {
+                return qa;
+            }
+            b = b.saturating_sub(1);
+        }
+    }
+
+    /// Assemble the full prompt for (domain, question index, N shots).
+    pub fn prompt(&self, domain: &str, index: u64, n_shots: usize) -> Prompt {
+        let qa = self.question(domain, index);
+        Prompt {
+            domain: domain.to_string(),
+            instruction: self.instruction(domain),
+            examples: self.examples(domain, n_shots),
+            target: qa.as_target(),
+            answer: ANSWER_LETTERS[qa.answer],
+        }
+    }
+}
+
+/// One query in a multi-client trace.
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub client: usize,
+    pub domain: String,
+    pub question_index: u64,
+    pub n_shots: usize,
+}
+
+/// A reproducible multi-client query trace over the 57 domains.
+pub struct Trace {
+    pub queries: Vec<Query>,
+}
+
+impl Trace {
+    /// `n_domains` domains × `per_domain` questions, shuffled and dealt
+    /// round-robin-randomly to `n_clients` clients.
+    pub fn generate(
+        seed: u64,
+        n_clients: usize,
+        n_domains: usize,
+        per_domain: usize,
+        n_shots: usize,
+    ) -> Trace {
+        assert!(n_domains <= DOMAINS.len());
+        let mut rng = Rng::new(seed ^ 0x7ACE);
+        let mut queries = Vec::with_capacity(n_domains * per_domain);
+        for &domain in DOMAINS.iter().take(n_domains) {
+            for q in 0..per_domain {
+                queries.push(Query {
+                    client: rng.below(n_clients.max(1) as u64) as usize,
+                    domain: domain.to_string(),
+                    question_index: q as u64,
+                    n_shots,
+                });
+            }
+        }
+        rng.shuffle(&mut queries);
+        Trace { queries }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifty_seven_domains() {
+        assert_eq!(DOMAINS.len(), 57);
+        let mut d = DOMAINS.to_vec();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 57, "domains must be unique");
+        assert!(DOMAINS.contains(&"astronomy")); // the Table-4 domain
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Generator::new(7).prompt("astronomy", 3, 5);
+        let b = Generator::new(7).prompt("astronomy", 3, 5);
+        assert_eq!(a.full_text(), b.full_text());
+        let c = Generator::new(8).prompt("astronomy", 3, 5);
+        assert_ne!(a.full_text(), c.full_text(), "seed must matter");
+    }
+
+    #[test]
+    fn examples_fixed_per_domain_questions_vary() {
+        let g = Generator::new(1);
+        let p1 = g.prompt("anatomy", 0, 5);
+        let p2 = g.prompt("anatomy", 1, 5);
+        assert_eq!(p1.instruction, p2.instruction);
+        assert_eq!(p1.examples, p2.examples, "shared prefix within domain");
+        assert_ne!(p1.target, p2.target);
+        let p3 = g.prompt("virology", 0, 5);
+        assert_ne!(p1.examples, p3.examples, "examples differ across domains");
+    }
+
+    #[test]
+    fn prefix_ranges_are_nested_prefixes() {
+        let g = Generator::new(2);
+        let p = g.prompt("astronomy", 0, 5);
+        let ranges = p.prefix_texts();
+        assert_eq!(ranges.len(), 4, "N=5 yields all four Figure-3 ranges");
+        for w in ranges.windows(2) {
+            assert!(w[1].starts_with(&w[0]), "ranges must nest");
+            assert!(w[1].len() > w[0].len());
+        }
+        assert_eq!(*ranges.last().unwrap(), p.full_text());
+    }
+
+    #[test]
+    fn prefix_ranges_degenerate_cases() {
+        let g = Generator::new(2);
+        let p1 = g.prompt("anatomy", 0, 1); // N=1: instr, instr+ex1, full
+        assert_eq!(p1.prefix_texts().len(), 3);
+        let p0 = g.prompt("anatomy", 0, 0); // N=0: instr, full
+        assert_eq!(p0.prefix_texts().len(), 2);
+    }
+
+    #[test]
+    fn qa_word_filter_respected() {
+        let mut g = Generator::new(3);
+        g.max_qa_words = 64;
+        for i in 0..50 {
+            let qa = g.question("philosophy", i);
+            assert!(qa.word_count() <= 64, "{} words", qa.word_count());
+        }
+    }
+
+    #[test]
+    fn prompt_lengths_plausible() {
+        // paper: astronomy N=5 prompt = 405 Gemma tokens ≈ 300 words
+        let g = Generator::new(4);
+        let p = g.prompt("astronomy", 0, 5);
+        let w = p.word_count();
+        assert!((120..=600).contains(&w), "N=5 prompt has {w} words");
+        let p1 = g.prompt("astronomy", 0, 1);
+        assert!(p1.word_count() < w);
+    }
+
+    #[test]
+    fn example_format_matches_mmlu_harness() {
+        let g = Generator::new(5);
+        let p = g.prompt("college_physics", 0, 2);
+        assert!(p.instruction.starts_with("The following are multiple choice"));
+        assert!(p.instruction.contains("college physics"));
+        for e in &p.examples {
+            assert!(e.contains("\nA. ") && e.contains("\nD. "));
+            assert!(e.contains("\nAnswer: "));
+            assert!(e.ends_with("\n\n"));
+        }
+        assert!(p.target.ends_with("Answer:"));
+    }
+
+    #[test]
+    fn trace_covers_all_clients_and_domains() {
+        let t = Trace::generate(11, 3, 10, 20, 5);
+        assert_eq!(t.queries.len(), 200);
+        let mut clients = [false; 3];
+        let mut domains = std::collections::HashSet::new();
+        for q in &t.queries {
+            clients[q.client] = true;
+            domains.insert(q.domain.clone());
+        }
+        assert!(clients.iter().all(|&c| c));
+        assert_eq!(domains.len(), 10);
+    }
+
+    #[test]
+    fn trace_deterministic() {
+        let a = Trace::generate(1, 2, 5, 5, 1);
+        let b = Trace::generate(1, 2, 5, 5, 1);
+        for (x, y) in a.queries.iter().zip(&b.queries) {
+            assert_eq!(x.client, y.client);
+            assert_eq!(x.domain, y.domain);
+            assert_eq!(x.question_index, y.question_index);
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Micro-benchmark harness (criterion substitute for the offline build).
+//!
+//! Methodology mirrors criterion's core loop: warmup phase, then repeated
+//! timed iterations until both a minimum iteration count and a minimum
+//! measurement time are reached; reports mean / p50 / p95 / min / max and
+//! derived throughput.  Bench binaries are `[[bench]] harness = false`
+//! targets that call [`Bench::run`] and print [`Report`] tables.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// optional bytes processed per iteration (for MB/s reporting)
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl Stats {
+    pub fn mb_per_s(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|b| {
+            (b as f64 / (1024.0 * 1024.0)) / self.mean.as_secs_f64()
+        })
+    }
+
+    pub fn line(&self) -> String {
+        let tp = match self.mb_per_s() {
+            Some(t) => format!("  {:9.1} MB/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>7} it  mean {:>11}  p50 {:>11}  p95 {:>11}{}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            tp
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Configuration for one measured benchmark.
+pub struct Bench {
+    pub name: String,
+    pub warmup: Duration,
+    pub min_time: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Bench {
+            name: name.into(),
+            warmup: Duration::from_millis(150),
+            min_time: Duration::from_millis(500),
+            min_iters: 10,
+            max_iters: 1_000_000,
+            bytes_per_iter: None,
+        }
+    }
+
+    /// For slow end-to-end cases (seconds per iteration).
+    pub fn slow(mut self) -> Self {
+        self.warmup = Duration::ZERO;
+        self.min_time = Duration::ZERO;
+        self.min_iters = 3;
+        self.max_iters = 3;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Self {
+        self.min_iters = n;
+        self.max_iters = n;
+        self.min_time = Duration::ZERO;
+        self
+    }
+
+    pub fn throughput_bytes(mut self, b: u64) -> Self {
+        self.bytes_per_iter = Some(b);
+        self
+    }
+
+    /// Run the closure repeatedly and gather stats.  The closure's return
+    /// value is passed through `std::hint::black_box` to defeat DCE.
+    pub fn run<T>(self, mut f: impl FnMut() -> T) -> Stats {
+        // warmup
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // measure
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while (samples.len() < self.min_iters || start.elapsed() < self.min_time)
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        stats_from(&self.name, &mut samples, self.bytes_per_iter)
+    }
+}
+
+fn stats_from(name: &str, samples: &mut [Duration], bytes: Option<u64>) -> Stats {
+    samples.sort_unstable();
+    let n = samples.len();
+    let total: Duration = samples.iter().sum();
+    let pct = |p: f64| samples[((n as f64 * p) as usize).min(n - 1)];
+    Stats {
+        name: name.to_string(),
+        iters: n,
+        mean: total / n as u32,
+        p50: pct(0.50),
+        p95: pct(0.95),
+        min: samples[0],
+        max: samples[n - 1],
+        bytes_per_iter: bytes,
+    }
+}
+
+/// Collects results and prints a section-formatted report; also appends
+/// machine-readable lines to a CSV when `EDGECACHE_BENCH_CSV` is set.
+#[derive(Default)]
+pub struct Report {
+    pub title: String,
+    pub stats: Vec<Stats>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Self {
+        Report { title: title.into(), ..Default::default() }
+    }
+
+    pub fn push(&mut self, s: Stats) {
+        println!("  {}", s.line());
+        self.stats.push(s);
+    }
+
+    pub fn note(&mut self, n: impl Into<String>) {
+        let n = n.into();
+        println!("  # {n}");
+        self.notes.push(n);
+    }
+
+    pub fn section(&self, name: &str) {
+        println!("\n== {} — {} ==", self.title, name);
+    }
+
+    pub fn finish(&self) {
+        if let Ok(path) = std::env::var("EDGECACHE_BENCH_CSV") {
+            let mut out = String::new();
+            for s in &self.stats {
+                out.push_str(&format!(
+                    "{},{},{},{},{},{}\n",
+                    self.title,
+                    s.name.replace(',', ";"),
+                    s.iters,
+                    s.mean.as_nanos(),
+                    s.p50.as_nanos(),
+                    s.p95.as_nanos()
+                ));
+            }
+            use std::io::Write;
+            if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+                let _ = f.write_all(out.as_bytes());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering_sane() {
+        let s = Bench::new("noop").iters(50).run(|| 1 + 1);
+        assert_eq!(s.iters, 50);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let buf = vec![0u8; 1 << 20];
+        let s = Bench::new("sum-1mb")
+            .iters(20)
+            .throughput_bytes(buf.len() as u64)
+            .run(|| buf.iter().map(|&b| b as u64).sum::<u64>());
+        assert!(s.mb_per_s().unwrap() > 1.0);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(5)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with("s"));
+    }
+}

@@ -1,0 +1,148 @@
+//! Integration: catalog semantics across the wire — multi-client delta
+//! sync, convergence, and false-positive behaviour at population scale.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use edgecache::catalog::{range_key, ranges_for, LocalCatalog, Lookup, ModelMeta};
+use edgecache::coordinator::{CacheBox, CatalogSync};
+use edgecache::kvstore::KvClient;
+use edgecache::util::rng::Rng;
+
+#[test]
+fn three_clients_converge_through_the_master() {
+    let cb = CacheBox::start_local().unwrap();
+    let catalogs: Vec<Arc<Mutex<LocalCatalog>>> = (0..3)
+        .map(|_| Arc::new(Mutex::new(LocalCatalog::new())))
+        .collect();
+    let syncs: Vec<CatalogSync> = catalogs
+        .iter()
+        .map(|c| {
+            CatalogSync::spawn(cb.addr(), Arc::clone(c), Duration::from_millis(10)).unwrap()
+        })
+        .collect();
+
+    // each client registers its own key set on the master
+    let meta = ModelMeta::new("m");
+    let mut expected = Vec::new();
+    for t in 0..3u32 {
+        let mut conn = KvClient::connect(&cb.addr()).unwrap();
+        for i in 0..20u32 {
+            let toks: Vec<u32> = (0..10).map(|x| x + i * 100 + t * 10_000).collect();
+            let key = range_key(&meta, &toks);
+            conn.catalog_register(&key).unwrap();
+            expected.push(key);
+        }
+    }
+
+    // all three local catalogs converge to contain all 60 keys
+    let t0 = std::time::Instant::now();
+    'wait: loop {
+        assert!(t0.elapsed() < Duration::from_secs(10), "no convergence");
+        for c in &catalogs {
+            let cat = c.lock().unwrap();
+            if cat.synced_version < 60 {
+                std::thread::sleep(Duration::from_millis(10));
+                continue 'wait;
+            }
+        }
+        break;
+    }
+    for c in &catalogs {
+        let cat = c.lock().unwrap();
+        for k in &expected {
+            assert!(cat.filter.contains(k));
+        }
+    }
+    drop(syncs);
+    cb.shutdown();
+}
+
+#[test]
+fn delta_paging_handles_large_logs() {
+    // CAT.DELTA caps replies at 100k; sync_once loops until caught up.
+    let cb = CacheBox::start_local().unwrap();
+    let mut reg = KvClient::connect(&cb.addr()).unwrap();
+    // register in bulk via pipeline for speed
+    let cmds: Vec<Vec<Vec<u8>>> = (0..5000u32)
+        .map(|i| vec![b"CAT.REGISTER".to_vec(), format!("key:{i}").into_bytes()])
+        .collect();
+    for chunk in cmds.chunks(500) {
+        reg.pipeline(chunk).unwrap();
+    }
+
+    let catalog = Arc::new(Mutex::new(LocalCatalog::new()));
+    let mut conn = KvClient::connect(&cb.addr()).unwrap();
+    CatalogSync::sync_once(&mut conn, &catalog).unwrap();
+    let cat = catalog.lock().unwrap();
+    assert_eq!(cat.synced_version, 5000);
+    assert!(cat.filter.contains(b"key:0"));
+    assert!(cat.filter.contains(b"key:4999"));
+    drop(cat);
+    cb.shutdown();
+}
+
+#[test]
+fn population_scale_fp_rate_holds() {
+    // register 50k realistic range keys; probe 50k absent ones — the
+    // measured FP ratio must stay near the 1% design point (paper §3.3).
+    let meta = ModelMeta::new("model-hash-x");
+    let mut cat = LocalCatalog::new();
+    let mut rng = Rng::new(2026);
+    for i in 0..50_000u32 {
+        let len = 4 + (rng.below(60)) as usize;
+        let toks: Vec<u32> = (0..len).map(|x| (x as u32) ^ (i * 7919)).collect();
+        cat.register_key(&range_key(&meta, &toks));
+    }
+    let mut fp = 0usize;
+    let trials = 50_000;
+    for i in 0..trials {
+        let toks: Vec<u32> = (0..12).map(|x| x as u32 + 1_000_000 + i * 13).collect();
+        if cat.filter.contains(&range_key(&meta, &toks)) {
+            fp += 1;
+        }
+    }
+    let rate = fp as f64 / trials as f64;
+    assert!(rate < 0.005, "at 5% fill of a 1M filter, FP must be tiny: {rate}");
+}
+
+#[test]
+fn lookup_respects_longest_match_through_sync() {
+    // client A registers only the two shorter ranges; client B must get a
+    // partial (not full) hit after syncing.
+    let cb = CacheBox::start_local().unwrap();
+    let meta = ModelMeta::new("m2");
+    let toks: Vec<u32> = (0..120).collect();
+    let ranges = ranges_for(&meta, &toks, &[30, 60, 120]);
+
+    let mut conn = KvClient::connect(&cb.addr()).unwrap();
+    conn.catalog_register(&ranges[0].key).unwrap();
+    conn.catalog_register(&ranges[1].key).unwrap();
+
+    let catalog = Arc::new(Mutex::new(LocalCatalog::new()));
+    CatalogSync::sync_once(&mut conn, &catalog).unwrap();
+    match catalog.lock().unwrap().lookup(&ranges) {
+        Lookup::Hit(r) => assert_eq!(r.token_len, 60, "longest synced range"),
+        Lookup::Miss => panic!("must hit"),
+    }
+    cb.shutdown();
+}
+
+#[test]
+fn model_metadata_partitions_the_keyspace() {
+    // identical token streams under different models/quantizations never
+    // collide (paper §3.1's integrity requirement)
+    let toks: Vec<u32> = (0..64).collect();
+    let mut keys = std::collections::HashSet::new();
+    for hash in ["modelA", "modelB"] {
+        for quant in ["f32", "q8", "q4"] {
+            let mut meta = ModelMeta::new(hash);
+            meta.quant = quant.into();
+            assert!(keys.insert(range_key(&meta, &toks)), "collision for {hash}/{quant}");
+        }
+    }
+    // and format bumps invalidate too
+    let mut meta = ModelMeta::new("modelA");
+    meta.state_format = 2;
+    assert!(keys.insert(range_key(&meta, &toks)));
+}

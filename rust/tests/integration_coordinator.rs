@@ -1,0 +1,223 @@
+//! Integration: the full distributed-prompt-caching system — multi-client
+//! traces, policy ablations, and the paper's qualitative claims end to end.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use edgecache::coordinator::{
+    CacheBox, EdgeClient, EdgeClientConfig, FetchPolicy, HitCase,
+};
+use edgecache::engine::Engine;
+use edgecache::model::state::Compression;
+use edgecache::workload::{Generator, Trace};
+
+fn engine() -> Option<Arc<Engine>> {
+    if !edgecache::artifacts_dir().join("tiny/meta.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return None;
+    }
+    Some(Arc::new(Engine::load_preset("tiny").unwrap()))
+}
+
+fn cfg(name: &str, server: Option<String>) -> EdgeClientConfig {
+    EdgeClientConfig {
+        name: name.into(),
+        max_new_tokens: Some(2),
+        sync_interval: None,
+        ..EdgeClientConfig::native(server)
+    }
+}
+
+#[test]
+fn multi_client_trace_distribution() {
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    let mut clients: Vec<EdgeClient> = (0..3)
+        .map(|i| {
+            EdgeClient::new(Arc::clone(&eng), cfg(&format!("c{i}"), Some(cb.addr()))).unwrap()
+        })
+        .collect();
+    let gen = Generator::new(11);
+    let trace = Trace::generate(11, 3, 4, 4, 1);
+    let mut cases = [0usize; 5];
+    for q in &trace.queries {
+        let c = &mut clients[q.client];
+        c.sync_catalog_now().unwrap();
+        let p = gen.prompt(&q.domain, q.question_index, q.n_shots);
+        let r = c.query(&p).unwrap();
+        cases[r.case.number() - 1] += 1;
+    }
+    // the first query of a domain misses; later same-domain queries hit
+    // at least the instruction+examples prefix
+    assert!(cases[0] >= 4, "one miss per domain minimum: {cases:?}");
+    assert!(
+        cases[3] + cases[4] >= 8,
+        "most repeat-domain queries must hit cases 4/5: {cases:?}"
+    );
+    let total: usize = cases.iter().sum();
+    assert_eq!(total, 16);
+    for c in clients {
+        c.shutdown();
+    }
+    cb.shutdown();
+}
+
+#[test]
+fn cross_client_correctness_identical_outputs() {
+    // The headline correctness property: the same prompt produces the same
+    // tokens whether answered locally, via own-cache hit, or via a state
+    // another client uploaded.
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    let mut a = EdgeClient::new(Arc::clone(&eng), cfg("a", Some(cb.addr()))).unwrap();
+    let mut b = EdgeClient::new(Arc::clone(&eng), cfg("b", Some(cb.addr()))).unwrap();
+    let mut solo = EdgeClient::new(Arc::clone(&eng), cfg("solo", None)).unwrap();
+
+    let p = Generator::new(3).prompt("college_physics", 2, 1);
+    let r_solo = solo.query(&p).unwrap();
+    let r_a1 = a.query(&p).unwrap(); // miss + upload
+    let r_a2 = a.query(&p).unwrap(); // own full hit
+    b.sync_catalog_now().unwrap();
+    let r_b = b.query(&p).unwrap(); // cross-client full hit
+
+    assert_eq!(r_a1.case, HitCase::Miss);
+    assert_eq!(r_a2.case, HitCase::Full);
+    assert_eq!(r_b.case, HitCase::Full);
+    assert_eq!(r_solo.response_tokens, r_a1.response_tokens);
+    assert_eq!(r_a1.response_tokens, r_a2.response_tokens);
+    assert_eq!(r_a1.response_tokens, r_b.response_tokens);
+    for c in [a, b, solo] {
+        c.shutdown();
+    }
+    cb.shutdown();
+}
+
+#[test]
+fn partial_matching_off_means_full_or_nothing() {
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    let mut c = {
+        let mut k = cfg("nopartial", Some(cb.addr()));
+        k.partial_matching = false;
+        EdgeClient::new(Arc::clone(&eng), k).unwrap()
+    };
+    let gen = Generator::new(5);
+    let p0 = gen.prompt("marketing", 0, 1);
+    let p1 = gen.prompt("marketing", 1, 1); // shares instruction+examples
+
+    let r0 = c.query(&p0).unwrap();
+    assert_eq!(r0.case, HitCase::Miss);
+    let r1 = c.query(&p1).unwrap();
+    assert_eq!(
+        r1.case,
+        HitCase::Miss,
+        "without partial matching, shared prefixes cannot hit"
+    );
+    let r2 = c.query(&p0).unwrap();
+    assert_eq!(r2.case, HitCase::Full, "exact repeats still hit");
+    c.shutdown();
+    cb.shutdown();
+}
+
+#[test]
+fn break_even_policy_declines_on_slow_tradeoffs() {
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    // device so fast that fetching can never win (prefill is ~free)
+    let mut k = cfg("breakeven", Some(cb.addr()));
+    k.fetch_policy = FetchPolicy::BreakEven;
+    k.link = edgecache::netsim::LinkModel {
+        name: "slow-test",
+        goodput_bps: 1e6, // 1 MB/s: fetching a state is slower than prefill
+        rtt: Duration::from_millis(200),
+        jitter_frac: 0.0,
+    };
+    let mut c = EdgeClient::new(Arc::clone(&eng), k).unwrap();
+    let p = Generator::new(9).prompt("jurisprudence", 0, 1);
+    let _ = c.query(&p).unwrap(); // seed (upload still happens, shaped)
+    let r = c.query(&p).unwrap();
+    assert_eq!(
+        r.case,
+        HitCase::Miss,
+        "break-even must decline the fetch on a host-speed device"
+    );
+    assert_eq!(c.stats.fetches_declined, 1);
+    c.shutdown();
+    cb.shutdown();
+}
+
+#[test]
+fn compression_reduces_uploaded_bytes() {
+    let Some(eng) = engine() else { return };
+    let gen = Generator::new(13);
+    let p = gen.prompt("nutrition", 0, 1);
+
+    let cb1 = CacheBox::start_local().unwrap();
+    let mut plain = EdgeClient::new(Arc::clone(&eng), cfg("plain", Some(cb1.addr()))).unwrap();
+    let r_plain = plain.query(&p).unwrap();
+
+    let cb2 = CacheBox::start_local().unwrap();
+    let mut comp = {
+        let mut k = cfg("deflate", Some(cb2.addr()));
+        k.compression = Compression::Deflate;
+        EdgeClient::new(Arc::clone(&eng), k).unwrap()
+    };
+    let r_comp = comp.query(&p).unwrap();
+
+    assert!(r_comp.uploaded_bytes > 0);
+    assert!(
+        r_comp.uploaded_bytes < r_plain.uploaded_bytes,
+        "deflate must shrink uploads: {} vs {}",
+        r_comp.uploaded_bytes,
+        r_plain.uploaded_bytes
+    );
+    // and the compressed path still hits + reproduces
+    let r2 = comp.query(&p).unwrap();
+    assert_eq!(r2.case, HitCase::Full);
+    assert_eq!(r_comp.response_tokens, r2.response_tokens);
+    plain.shutdown();
+    comp.shutdown();
+    cb1.shutdown();
+    cb2.shutdown();
+}
+
+#[test]
+fn min_hit_tokens_suppresses_short_fetches() {
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    let mut k = cfg("minhit", Some(cb.addr()));
+    k.min_hit_tokens = 100_000; // nothing is ever long enough
+    let mut c = EdgeClient::new(Arc::clone(&eng), k).unwrap();
+    let p = Generator::new(17).prompt("sociology", 0, 1);
+    let _ = c.query(&p).unwrap();
+    let r = c.query(&p).unwrap();
+    assert_eq!(r.case, HitCase::Miss, "threshold filters all hits");
+    assert_eq!(r.downloaded_bytes, 0);
+    c.shutdown();
+    cb.shutdown();
+}
+
+#[test]
+fn upload_dedup_across_queries() {
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    let mut c = EdgeClient::new(Arc::clone(&eng), cfg("dedup", Some(cb.addr()))).unwrap();
+    let gen = Generator::new(21);
+    let p0 = gen.prompt("virology", 0, 1);
+    let p1 = gen.prompt("virology", 1, 1);
+
+    let r0 = c.query(&p0).unwrap();
+    assert!(r0.uploaded_bytes > 0);
+    let r1 = c.query(&p1).unwrap();
+    // shared instruction+examples ranges are already cached: only the new
+    // full-prompt range uploads
+    assert!(r1.uploaded_bytes > 0);
+    assert!(
+        r1.uploaded_bytes < r0.uploaded_bytes,
+        "prefix ranges must not re-upload: {} vs {}",
+        r1.uploaded_bytes,
+        r0.uploaded_bytes
+    );
+    c.shutdown();
+    cb.shutdown();
+}

@@ -1,0 +1,150 @@
+//! Integration: the cache-box substrate under realistic multi-client load.
+
+use std::sync::Arc;
+use std::thread;
+
+use edgecache::kvstore::{KvClient, KvServer};
+
+fn spawn_server(max_bytes: usize) -> edgecache::kvstore::ServerHandle {
+    KvServer::new(max_bytes).serve("127.0.0.1:0").unwrap()
+}
+
+#[test]
+fn concurrent_clients_share_one_keyspace() {
+    let h = spawn_server(usize::MAX);
+    let addr = h.addr_string();
+    let n_threads = 8;
+    let per_thread = 50;
+
+    let handles: Vec<_> = (0..n_threads)
+        .map(|t| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let mut c = KvClient::connect(&addr).unwrap();
+                for i in 0..per_thread {
+                    let key = format!("t{t}:k{i}");
+                    let val = format!("value-{t}-{i}").repeat(50);
+                    c.set(key.as_bytes(), val.as_bytes()).unwrap();
+                    let got = c.get(key.as_bytes()).unwrap().unwrap();
+                    assert_eq!(got, val.as_bytes());
+                }
+            })
+        })
+        .collect();
+    for jh in handles {
+        jh.join().unwrap();
+    }
+
+    let mut c = KvClient::connect(&addr).unwrap();
+    assert_eq!(c.dbsize().unwrap(), n_threads * per_thread);
+    // cross-thread visibility
+    assert!(c.get(b"t0:k0").unwrap().is_some());
+    assert!(c.get(b"t7:k49").unwrap().is_some());
+    h.shutdown();
+}
+
+#[test]
+fn pipelined_bulk_uploads_interleaved_with_reads() {
+    let h = spawn_server(usize::MAX);
+    let mut w = KvClient::connect(&h.addr_string()).unwrap();
+    let mut r = KvClient::connect(&h.addr_string()).unwrap();
+
+    let blob = vec![7u8; 300_000];
+    let cmds: Vec<Vec<Vec<u8>>> = (0..16)
+        .map(|i| vec![b"SET".to_vec(), format!("state:{i}").into_bytes(), blob.clone()])
+        .collect();
+    let writer = thread::spawn(move || {
+        for _ in 0..5 {
+            let replies = w.pipeline(&cmds).unwrap();
+            assert_eq!(replies.len(), 16);
+        }
+    });
+    // reader polls while the writer hammers
+    for _ in 0..50 {
+        let _ = r.dbsize().unwrap();
+        let _ = r.get(b"state:3").unwrap();
+    }
+    writer.join().unwrap();
+    assert_eq!(r.strlen(b"state:15").unwrap(), 300_000);
+    h.shutdown();
+}
+
+#[test]
+fn eviction_keeps_most_recent_states() {
+    // budget for ~4 x 1MB entries; insert 10, touching even keys
+    let h = spawn_server(4_200_000);
+    let mut c = KvClient::connect(&h.addr_string()).unwrap();
+    let blob = vec![1u8; 1_000_000];
+    for i in 0..6 {
+        c.set(format!("s{i}").as_bytes(), &blob).unwrap();
+        // keep s0 hot
+        let _ = c.get(b"s0").unwrap();
+    }
+    assert!(c.exists(b"s0").unwrap(), "hot key must survive eviction");
+    let n = c.dbsize().unwrap();
+    assert!(n <= 4, "budget enforced, have {n}");
+    let info = c.info().unwrap();
+    assert!(info.contains("evictions:"), "{info}");
+    h.shutdown();
+}
+
+#[test]
+fn catalog_registration_is_concurrent_safe() {
+    let h = spawn_server(usize::MAX);
+    let addr = h.addr_string();
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let mut c = KvClient::connect(&addr).unwrap();
+                for i in 0..100 {
+                    c.catalog_register(format!("t{t}:{i}").as_bytes()).unwrap();
+                }
+            })
+        })
+        .collect();
+    for jh in handles {
+        jh.join().unwrap();
+    }
+    let mut c = KvClient::connect(&addr).unwrap();
+    assert_eq!(c.catalog_version().unwrap(), 400);
+    let (v, keys) = c.catalog_delta(0).unwrap();
+    assert_eq!(v, 400);
+    assert_eq!(keys.len(), 400);
+    // every registered key is present exactly once
+    let set: std::collections::HashSet<_> = keys.iter().collect();
+    assert_eq!(set.len(), 400);
+    h.shutdown();
+}
+
+#[test]
+fn server_shutdown_is_clean_and_reconnect_fails() {
+    let h = spawn_server(usize::MAX);
+    let addr = h.addr_string();
+    let mut c = KvClient::connect(&addr).unwrap();
+    c.set(b"x", b"1").unwrap();
+    h.shutdown();
+    // subsequent connections must fail (no half-dead accept loop)
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let r = KvClient::connect_timeout(&addr, std::time::Duration::from_millis(300));
+    if let Ok(mut conn) = r {
+        // OS may accept briefly; any command must fail
+        assert!(conn.ping().is_err() || conn.set(b"y", b"2").is_err());
+    }
+}
+
+#[test]
+fn shared_server_arc_allows_in_process_introspection() {
+    let server = KvServer::new(usize::MAX);
+    let h = server.serve("127.0.0.1:0").unwrap();
+    let mut c = KvClient::connect(&h.addr_string()).unwrap();
+    c.set(b"probe", b"data").unwrap();
+    // the embedding process can inspect the store without a round trip
+    {
+        let store = server.store.lock().unwrap();
+        assert!(store.contains(b"probe"));
+    }
+    let arc = Arc::clone(&server);
+    assert_eq!(arc.catalog.lock().unwrap().version(), 0);
+    h.shutdown();
+}

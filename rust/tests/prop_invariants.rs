@@ -1,0 +1,248 @@
+//! Property tests on system invariants (the proptest-style suite; see
+//! `util::prop` for the harness and replay mechanics).
+
+use edgecache::catalog::{range_key, ranges_for, LocalCatalog, Lookup, ModelMeta};
+use edgecache::devicemodel::DeviceProfile;
+use edgecache::kvstore::resp::{Decoder, Value};
+use edgecache::model::state::{Compression, KvState};
+use edgecache::netsim::LinkModel;
+use edgecache::tokenizer::Tokenizer;
+use edgecache::util::prop::{run_prop_n, Gen};
+use edgecache::workload::{Generator, DOMAINS};
+
+/// Catalog: registered ranges are always found, and lookup returns the
+/// longest registered candidate — never a shorter one, never an unregistered
+/// longer one.
+#[test]
+fn prop_lookup_is_longest_registered_prefix() {
+    run_prop_n("lookup-longest-registered", 200, |g: &mut Gen| {
+        let meta = ModelMeta::new(g.ascii_string(8));
+        let n = g.usize_in(8, 400);
+        let toks = g.tokens(n, 4096);
+        let lens = [n / 8, n / 4, n / 2, n];
+        let ranges = ranges_for(&meta, &toks, &lens);
+        // register a random subset
+        let mut cat = LocalCatalog::new();
+        let mut registered = Vec::new();
+        for r in &ranges {
+            if g.bool() {
+                cat.register(std::slice::from_ref(r));
+                registered.push(r.token_len);
+            }
+        }
+        match cat.lookup(&ranges) {
+            Lookup::Miss => assert!(
+                registered.is_empty(),
+                "registered {registered:?} but lookup missed"
+            ),
+            Lookup::Hit(hit) => {
+                let want = registered.iter().max().copied().unwrap_or_else(|| {
+                    // a Bloom false positive can surface an unregistered
+                    // range; with a ~empty 1M filter this is ~impossible
+                    panic!("hit with nothing registered (FP at empty fill?)")
+                });
+                assert_eq!(hit.token_len, want, "must return the longest");
+            }
+        }
+    });
+}
+
+/// Tokenizer: workload prompts tokenize prefix-stably across all four
+/// catalog ranges — the property partial matching depends on.
+#[test]
+fn prop_workload_ranges_are_token_prefixes() {
+    let tok = Tokenizer::full();
+    run_prop_n("workload-prefix-stability", 60, |g: &mut Gen| {
+        let gen = Generator::new(g.rng.next_u64());
+        let domain = DOMAINS[g.usize_in(0, DOMAINS.len() - 1)];
+        let shots = g.usize_in(0, 5);
+        let p = gen.prompt(domain, g.rng.next_u64() % 50, shots);
+        let full = tok.encode(&p.full_text());
+        for prefix in p.prefix_texts() {
+            let pt = tok.encode(&prefix);
+            assert!(
+                full.starts_with(&pt),
+                "range of {} chars is not a token prefix (domain {domain})",
+                prefix.len()
+            );
+        }
+    });
+}
+
+/// Range keys: equal iff (meta, token prefix) equal.
+#[test]
+fn prop_range_key_injective_on_observations() {
+    run_prop_n("range-key-injective", 120, |g: &mut Gen| {
+        let meta_a = ModelMeta::new(g.ascii_string(6));
+        let meta_b = ModelMeta::new(g.ascii_string(6));
+        let n = g.usize_in(1, 100);
+        let ta = g.tokens(n, 512);
+        let mut tb = ta.clone();
+        if g.bool() && n > 0 {
+            let i = g.usize_in(0, n - 1);
+            tb[i] = tb[i].wrapping_add(1) % 512;
+        }
+        let ka = range_key(&meta_a, &ta);
+        let kb = range_key(&meta_a, &tb);
+        assert_eq!(ta == tb, ka == kb, "token equality must match key equality");
+        if meta_a != meta_b {
+            assert_ne!(
+                range_key(&meta_a, &ta),
+                range_key(&meta_b, &ta),
+                "distinct metadata must partition the keyspace"
+            );
+        }
+    });
+}
+
+/// KV-state blobs: serialize∘restore is the identity on the valid prefix
+/// for arbitrary geometry, token counts and compression.
+#[test]
+fn prop_state_roundtrip_any_geometry() {
+    run_prop_n("state-roundtrip-geometry", 80, |g: &mut Gen| {
+        let l = g.usize_in(1, 6);
+        let s = g.usize_in(2, 64);
+        let kh = g.usize_in(1, 4);
+        let d = 4 * g.usize_in(1, 8);
+        let n = g.usize_in(0, s);
+        let mut st = KvState::zeroed(l, s, kh, d);
+        st.n_tokens = n;
+        for i in 0..st.k.len() {
+            if g.rng.chance(0.25) {
+                st.k[i] = (g.rng.f64() - 0.5) as f32;
+                st.v[i] = (g.rng.f64() * 3.0) as f32;
+            }
+        }
+        let comp = if g.bool() { Compression::Deflate } else { Compression::None };
+        let blob = st.serialize("h", comp);
+        let back = KvState::restore(&blob, "h", (l, s, kh, d)).unwrap();
+        // rows beyond n_tokens are not shipped: compare the valid prefix
+        let row = kh * d;
+        let le = s * row;
+        for li in 0..l {
+            let a = &st.k[li * le..li * le + n * row];
+            let b = &back.k[li * le..li * le + n * row];
+            assert_eq!(a, b, "layer {li} K prefix");
+        }
+        assert_eq!(back.n_tokens, n);
+    });
+}
+
+/// State blobs: any single bit flip in the body is detected.
+#[test]
+fn prop_state_bitflip_detected() {
+    run_prop_n("state-bitflip-detected", 60, |g: &mut Gen| {
+        let mut st = KvState::zeroed(2, 8, 1, 4);
+        st.n_tokens = g.usize_in(1, 8);
+        for x in st.k.iter_mut() {
+            *x = g.rng.f64() as f32;
+        }
+        let mut blob = st.serialize("h", Compression::None);
+        let hdr = 4 + 4 + 1 + 5 * 4 + 1 + 4 + 4; // conservative header bound
+        if blob.len() <= hdr {
+            return;
+        }
+        let idx = g.usize_in(hdr, blob.len() - 1);
+        let bit = 1u8 << g.usize_in(0, 7);
+        blob[idx] ^= bit;
+        let r = KvState::restore(&blob, "h", (2, 8, 1, 4));
+        assert!(r.is_err(), "bit flip at {idx} went undetected");
+    });
+}
+
+/// RESP: encode∘decode identity for arbitrary nested values, under arbitrary
+/// buffer fragmentation.
+#[test]
+fn prop_resp_roundtrip_fragmented() {
+    fn arb_value(g: &mut Gen, depth: usize) -> Value {
+        match g.usize_in(0, if depth == 0 { 4 } else { 5 }) {
+            0 => {
+                let n = g.usize_in(0, 20);
+                Value::Simple(g.ascii_string(n))
+            }
+            1 => Value::Int(g.rng.next_u64() as i64),
+            2 => {
+                let n = g.usize_in(0, 200);
+                Value::Bulk(g.bytes(n))
+            }
+            3 => Value::Nil,
+            4 => Value::Error(format!("ERR {}", g.ascii_string(5))),
+            _ => {
+                let n = g.usize_in(0, 4);
+                Value::Array((0..n).map(|_| arb_value(g, depth - 1)).collect())
+            }
+        }
+    }
+    run_prop_n("resp-roundtrip-fragmented", 200, |g: &mut Gen| {
+        let v = arb_value(g, 2);
+        let enc = v.encode();
+        let mut dec = Decoder::new();
+        let mut pos = 0;
+        let mut out = None;
+        while pos < enc.len() {
+            let step = g.usize_in(1, (enc.len() - pos).min(17));
+            dec.feed(&enc[pos..pos + step]);
+            pos += step;
+            if let Some(got) = dec.next_value().unwrap() {
+                out = Some(got);
+                assert_eq!(pos, enc.len(), "value complete only at the end");
+            }
+        }
+        assert_eq!(out.expect("decoded"), v);
+    });
+}
+
+/// Device/link models: time is monotone in work, and the break-even
+/// relation is consistent (fetch wins exactly when transfer < prefill).
+#[test]
+fn prop_models_monotone_and_consistent() {
+    run_prop_n("models-monotone", 150, |g: &mut Gen| {
+        let dev = if g.bool() { DeviceProfile::pi_zero_2w() } else { DeviceProfile::pi5_4gb() };
+        let link = if g.bool() { LinkModel::wifi4_2g4() } else { LinkModel::ethernet_1g() };
+        let a = g.usize_in(0, 2000);
+        let b = g.usize_in(0, 2000);
+        let (lo, hi) = (a.min(b), a.max(b));
+        assert!(dev.prefill_time(lo) <= dev.prefill_time(hi));
+        assert!(dev.decode_time(lo) <= dev.decode_time(hi));
+        assert!(link.delay_for(lo, None) <= link.delay_for(hi, None));
+
+        let bytes = g.usize_in(0, 20_000_000);
+        let toks = g.usize_in(1, 2000);
+        let fetch_wins = link.delay_for(bytes, None) < dev.prefill_time(toks);
+        let policy = edgecache::coordinator::FetchPolicy::BreakEven;
+        assert_eq!(policy.should_fetch(&dev, &link, toks, bytes), fetch_wins);
+    });
+}
+
+/// Bloom under union: merging two filters never loses members.
+#[test]
+fn prop_bloom_merge_preserves_members() {
+    run_prop_n("bloom-merge-members", 60, |g: &mut Gen| {
+        let mut a = edgecache::bloom::BloomFilter::new(10_000, 0.01);
+        let mut b = edgecache::bloom::BloomFilter::new(10_000, 0.01);
+        let na = g.usize_in(0, 200);
+        let nb = g.usize_in(0, 200);
+        let keys_a: Vec<Vec<u8>> = (0..na)
+            .map(|_| {
+                let n = g.usize_in(1, 32);
+                g.bytes(n)
+            })
+            .collect();
+        let keys_b: Vec<Vec<u8>> = (0..nb)
+            .map(|_| {
+                let n = g.usize_in(1, 32);
+                g.bytes(n)
+            })
+            .collect();
+        for k in &keys_a {
+            a.insert(k);
+        }
+        for k in &keys_b {
+            b.insert(k);
+        }
+        a.merge(&b).unwrap();
+        for k in keys_a.iter().chain(&keys_b) {
+            assert!(a.contains(k));
+        }
+    });
+}
