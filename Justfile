@@ -1,0 +1,14 @@
+# Repo task runner (https://just.systems); plain `sh scripts/check.sh` works
+# too when just is unavailable.
+
+# build + test + clippy on the rust crate (tier-1 gate)
+check:
+    sh scripts/check.sh
+
+# tier-1 only (no clippy)
+test:
+    sh scripts/check.sh --no-clippy
+
+# regenerate the paper-table benches (release mode)
+bench:
+    cd rust && cargo bench --bench substrate_micro && cargo bench --bench table3_breakdown

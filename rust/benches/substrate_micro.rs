@@ -5,6 +5,10 @@
 //! * RESP codec + kvstore loopback GET/SET at prompt-cache entry sizes;
 //! * state-blob serialize/restore, uncompressed vs deflate (the CacheGen
 //!   trade-off: CPU vs Wi-Fi bytes);
+//! * the zero-copy blob pipeline: bytes *copied* per serialize→wire→store→
+//!   restore round trip (copymeter) vs the seed pipeline's copy chain, plus
+//!   the `GETRANGE` partial-row fetch — emitted to `BENCH_blob_pipeline.json`
+//!   so the perf trajectory tracks this path;
 //! * prefill chunk-size sweep on the real engine (why the artifacts ship
 //!   multiple prefill variants);
 //! * end-to-end upload pipeline (4-range pipelined SET+CAT.REGISTER).
@@ -42,7 +46,7 @@ fn main() {
     // ------------------------------------------------------------ resp codec
     report.section("RESP codec");
     let payload = vec![0xA5u8; 2_250_000]; // the paper's 270M state size
-    let val = edgecache::kvstore::Value::Bulk(payload.clone());
+    let val = edgecache::kvstore::Value::bulk(payload.clone());
     report.push(
         Bench::new("encode 2.25MB bulk")
             .throughput_bytes(payload.len() as u64)
@@ -115,6 +119,106 @@ fn main() {
             - LinkModel::wifi4_2g4().delay_for(packed.len(), None).as_secs_f64())
             * 1e3
     ));
+
+    // --------------------------------------------------- zero-copy pipeline
+    report.section("blob pipeline (serialize → wire → store → restore)");
+    {
+        use edgecache::model::state::BlobLayout;
+        use edgecache::util::bytes::copymeter;
+        use edgecache::util::json::Json;
+
+        let dims = (6, 768, 1, 80);
+        let lo = BlobLayout::new("h", 6, 1, 80);
+        let shared = st.serialize_shared("h", Compression::None);
+
+        // one instrumented round trip: count every payload-sized memcpy
+        copymeter::reset();
+        let measured = st.serialize_shared("h", Compression::None);
+        client.set_shared(b"pipe", measured.clone()).expect("set");
+        let got = client.get(b"pipe").expect("get").expect("present");
+        let back = KvState::restore(&got, "h", dims).unwrap();
+        assert_eq!(back.n_tokens, st.n_tokens);
+        let copied = copymeter::get();
+        // the seed pipeline moved every payload byte ~11 times between
+        // KvState::serialize and the restored state: gather, writer copy,
+        // clone into the command, client encode, server decode, GET-reply
+        // clone, reply encode, client decode, restore body copy, f32
+        // conversion, scatter
+        let seed_copies = 11u64 * shared.len() as u64;
+        let reduction = seed_copies as f64 / copied.max(1) as f64;
+        report.note(format!(
+            "round trip: blob {} KB, {} KB copied ({:.1}x blob) vs seed model {:.1}x — {:.1}x fewer bytes copied",
+            shared.len() / 1024,
+            copied / 1024,
+            copied as f64 / shared.len() as f64,
+            11.0,
+            reduction
+        ));
+
+        // range path: fetch only the first half of the token rows
+        let m = st.n_tokens / 2;
+        let stride = lo.token_stride();
+        let head = client
+            .getrange(b"pipe", 0, lo.index_off() + 4 * m)
+            .expect("head")
+            .expect("present");
+        let rows = client
+            .getrange(b"pipe", lo.payload_off(st.n_tokens), m * stride)
+            .expect("rows")
+            .expect("present");
+        let part = KvState::restore_prefix_from_parts(&head, &rows, m, "h", dims).unwrap();
+        assert_eq!(part.n_tokens, m);
+        let partial_bytes = head.len() + rows.len();
+        report.note(format!(
+            "partial fetch ({m}/{} rows): {} KB over the wire vs {} KB full blob",
+            st.n_tokens,
+            partial_bytes / 1024,
+            shared.len() / 1024
+        ));
+
+        report.push(
+            Bench::new("zero-copy SET+GET+restore")
+                .throughput_bytes(shared.len() as u64)
+                .run(|| {
+                    client.set_shared(b"pipe", shared.clone()).unwrap();
+                    let g = client.get(b"pipe").unwrap().unwrap();
+                    KvState::restore(&g, "h", dims).unwrap()
+                }),
+        );
+        report.push(
+            Bench::new(format!("GETRANGE {m}-row prefix + assemble"))
+                .throughput_bytes(partial_bytes as u64)
+                .run(|| {
+                    let h = client
+                        .getrange(b"pipe", 0, lo.index_off() + 4 * m)
+                        .unwrap()
+                        .unwrap();
+                    let r = client
+                        .getrange(b"pipe", lo.payload_off(st.n_tokens), m * stride)
+                        .unwrap()
+                        .unwrap();
+                    KvState::restore_prefix_from_parts(&h, &r, m, "h", dims).unwrap()
+                }),
+        );
+
+        // machine-readable trajectory record
+        let json = Json::obj(vec![
+            ("blob_bytes", Json::Int(shared.len() as i64)),
+            ("roundtrip_copied_bytes", Json::Int(copied as i64)),
+            ("seed_model_copied_bytes", Json::Int(seed_copies as i64)),
+            ("copy_reduction_x", Json::Num(reduction)),
+            ("partial_rows", Json::Int(m as i64)),
+            ("total_rows", Json::Int(st.n_tokens as i64)),
+            ("partial_fetch_bytes", Json::Int(partial_bytes as i64)),
+            ("full_fetch_bytes", Json::Int(shared.len() as i64)),
+        ]);
+        let path = std::env::var("EDGECACHE_BLOB_PIPELINE_JSON")
+            .unwrap_or_else(|_| "BENCH_blob_pipeline.json".into());
+        match std::fs::write(&path, json.to_pretty()) {
+            Ok(()) => report.note(format!("wrote {path}")),
+            Err(e) => report.note(format!("could not write {path}: {e}")),
+        }
+    }
 
     // ------------------------------------------------ prefill chunk ablation
     report.section("prefill chunk-size sweep (tiny preset, real engine)");

@@ -36,6 +36,19 @@ impl CacheBox {
         (s.len(), s.used_bytes(), s.evictions)
     }
 
+    /// Stored length of one entry (None when absent).  Does not refresh
+    /// LRU — a pure inspection hook for tests and tooling; range aliases
+    /// show up here as tiny (tens-of-bytes) entries next to the one real
+    /// state blob per prompt.
+    pub fn entry_len(&self, key: &[u8]) -> Option<usize> {
+        self.handle.server.store.lock().unwrap().strlen(key)
+    }
+
+    /// Bytes currently held by the keyspace (`Store::used_bytes`).
+    pub fn used_bytes(&self) -> usize {
+        self.handle.server.store.lock().unwrap().used_bytes()
+    }
+
     pub fn catalog_version(&self) -> u64 {
         self.handle.server.catalog.lock().unwrap().version()
     }
@@ -60,6 +73,9 @@ mod tests {
         assert_eq!(keys, 1);
         assert!(bytes >= 2);
         assert_eq!(ev, 0);
+        assert_eq!(cb.entry_len(b"x"), Some(1));
+        assert_eq!(cb.entry_len(b"absent"), None);
+        assert_eq!(cb.used_bytes(), bytes);
         assert_eq!(cb.catalog_version(), 0);
         cb.shutdown();
     }

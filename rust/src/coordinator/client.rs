@@ -9,6 +9,19 @@
 //!    register them in both catalogs;
 //! 4. **R-decode/Sample** — generate the response.
 //!
+//! Transfers are **range-aware** (the SparKV argument: move only bytes whose
+//! transfer cost beats recompute):
+//!
+//! * *Download*: a prompt's shorter catalog ranges are stored as tiny
+//!   aliases pointing into the one real blob.  A partial match resolves the
+//!   alias, then fetches — in a single pipelined round trip — just the blob
+//!   header+row-index prefix and the `matched` token rows via `GETRANGE`,
+//!   instead of a dedicated full blob per range.
+//! * *Upload*: one blob (the longest new range) is published per prompt;
+//!   shorter ranges become aliases.  When the query downloaded a state, the
+//!   upload ships only the *suffix* rows past the matched prefix and has
+//!   the server `SPLICE` them onto the prefix bytes it already holds.
+//!
 //! Latency attribution follows Table 3 exactly; uploads happen off the
 //! latency path (the paper's Case-1 Redis column shows only false-positive
 //! cost, so uploads are post-response).  All remote bytes flow through the
@@ -26,12 +39,17 @@ use crate::coordinator::policy::FetchPolicy;
 use crate::coordinator::sync::CatalogSync;
 use crate::devicemodel::{DeviceProfile, Pacer};
 use crate::engine::Engine;
+use crate::kvstore::client::getrange_req;
+use crate::kvstore::resp::{request_shared, Value};
 use crate::kvstore::KvClient;
 use crate::log_debug;
 use crate::metrics::{Phase, PhaseBreakdown};
 use crate::model::sampler::Sampler;
-use crate::model::state::{Compression, KvState};
+use crate::model::state::{
+    decode_range_alias, encode_range_alias, BlobLayout, Compression, KvState,
+};
 use crate::netsim::{LinkModel, Shaper};
+use crate::util::bytes::SharedBytes;
 use crate::workload::Prompt;
 
 /// Which of the paper's five evaluation cases a query landed in.
@@ -141,6 +159,9 @@ pub struct QueryResult {
     pub false_positive: bool,
     pub downloaded_bytes: usize,
     pub uploaded_bytes: usize,
+    /// Wire bytes the range-aware transfer path avoided moving, against the
+    /// full-blob-per-range model (uncompressed layout arithmetic).
+    pub saved_bytes: usize,
     /// Post-response upload duration (excluded from TTFT/TTLT, like the
     /// paper's Case-1 Redis column).
     pub upload_time: Duration,
@@ -154,7 +175,27 @@ pub struct ClientStats {
     pub false_positives: u64,
     pub bytes_down: u64,
     pub bytes_up: u64,
+    /// Cumulative modelled wire bytes saved by range downloads + delta/alias
+    /// uploads vs the full-blob-per-range baseline.
+    pub bytes_saved: u64,
     pub fetches_declined: u64,
+}
+
+/// Where a downloaded state physically lives on the cache box — the anchor
+/// the post-response upload splices suffix rows onto.
+#[derive(Debug, Clone)]
+struct DeltaBase {
+    store_key: Vec<u8>,
+    total_rows: usize,
+    compressed: bool,
+}
+
+/// Result of a successful state download.
+struct Download {
+    state: KvState,
+    wire_bytes: usize,
+    saved_bytes: usize,
+    base: DeltaBase,
 }
 
 pub struct EdgeClient {
@@ -222,6 +263,16 @@ impl EdgeClient {
         self.cfg
             .max_new_tokens
             .unwrap_or(self.cfg.device.typical_response_tokens)
+    }
+
+    fn blob_layout(&self) -> BlobLayout {
+        let cfg = &self.engine.model.config;
+        BlobLayout::new(
+            self.engine.model_hash(),
+            cfg.n_layers,
+            cfg.n_kv_heads,
+            cfg.head_dim,
+        )
     }
 
     /// Tokenize the prompt and derive its Figure-3 range prefix lengths.
@@ -306,16 +357,38 @@ impl EdgeClient {
 
     /// Step 3 (hit path): download + verify + restore.  `None` on false
     /// positive / eviction / corruption — caller falls back to local prefill.
-    fn try_download(
-        &mut self,
-        range: &PromptRange,
-        bd: &mut PhaseBreakdown,
-    ) -> Option<(KvState, usize)> {
-        let conn = self.conn.as_mut()?;
+    ///
+    /// The first GET returns either the state blob itself (the hit range is
+    /// the stored entry) or a range alias; an alias is resolved with one
+    /// further pipelined round trip fetching only the target's header+index
+    /// prefix and the `matched` token rows.
+    fn try_download(&mut self, range: &PromptRange, bd: &mut PhaseBreakdown) -> Option<Download> {
         let key = state_store_key(&range.key);
         let t0 = std::time::Instant::now();
+        let out = self.fetch_state(&key, range);
+        bd.add(Phase::Redis, t0.elapsed());
+        match out {
+            Some(d) if d.state.n_tokens == range.token_len => {
+                self.stats.bytes_saved += d.saved_bytes as u64;
+                Some(d)
+            }
+            Some(d) => {
+                log_debug!(
+                    "edge-client",
+                    "state token count {} != range {}; discarding",
+                    d.state.n_tokens,
+                    range.token_len
+                );
+                None
+            }
+            None => None,
+        }
+    }
+
+    fn fetch_state(&mut self, key: &[u8], range: &PromptRange) -> Option<Download> {
+        let conn = self.conn.as_mut()?;
         let blob = self.shaper.shaped_post(|| {
-            let r = conn.get(&key);
+            let r = conn.get(key);
             let n = r
                 .as_ref()
                 .map(|o| o.as_ref().map_or(0, |b| b.len()))
@@ -324,95 +397,265 @@ impl EdgeClient {
         });
         let blob = match blob {
             Ok(Some(b)) => b,
-            Ok(None) => {
-                bd.add(Phase::Redis, t0.elapsed());
-                return None; // false positive or evicted
-            }
+            Ok(None) => return None, // false positive or evicted
             Err(e) => {
                 log_debug!("edge-client", "download failed: {e}");
-                bd.add(Phase::Redis, t0.elapsed());
                 return None;
             }
         };
         let cfg = &self.engine.model.config;
-        let state = KvState::restore(
-            &blob,
-            self.engine.model_hash(),
-            (cfg.n_layers, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim),
-        );
-        bd.add(Phase::Redis, t0.elapsed());
-        match state {
-            Ok(s) if s.n_tokens == range.token_len => Some((s, blob.len())),
-            Ok(s) => {
-                log_debug!(
-                    "edge-client",
-                    "state token count {} != range {}; discarding",
-                    s.n_tokens,
-                    range.token_len
-                );
-                None
+        let dims = (cfg.n_layers, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim);
+        let hash = self.engine.model_hash();
+        let lo = BlobLayout::new(hash, cfg.n_layers, cfg.n_kv_heads, cfg.head_dim);
+        let m = range.token_len;
+
+        let Some((target, total_rows, compressed)) = decode_range_alias(&blob) else {
+            // the hit range is the stored entry itself: full restore
+            let compressed = KvState::peek_header(&blob)
+                .map(|h| h.compressed)
+                .unwrap_or(false);
+            return match KvState::restore(&blob, hash, dims) {
+                Ok(state) => Some(Download {
+                    state,
+                    wire_bytes: blob.len(),
+                    saved_bytes: 0,
+                    base: DeltaBase {
+                        store_key: key.to_vec(),
+                        total_rows: m,
+                        compressed,
+                    },
+                }),
+                Err(e) => {
+                    log_debug!("edge-client", "restore rejected: {e}");
+                    None
+                }
+            };
+        };
+
+        if total_rows < m {
+            log_debug!(
+                "edge-client",
+                "alias target holds {total_rows} rows < matched {m}; discarding"
+            );
+            return None;
+        }
+        let base = DeltaBase { store_key: target.clone(), total_rows, compressed };
+
+        if compressed {
+            // deflate bodies cannot be range-served (ROADMAP open item):
+            // fetch the whole target and truncate to the matched rows
+            let full = self.shaper.shaped_post(|| {
+                let r = conn.get(&target);
+                let n = r
+                    .as_ref()
+                    .map(|o| o.as_ref().map_or(0, |b| b.len()))
+                    .unwrap_or(0);
+                (r, n)
+            });
+            let full = match full {
+                Ok(Some(b)) => b,
+                _ => return None,
+            };
+            return match KvState::restore(&full, hash, dims) {
+                Ok(mut state) if state.n_tokens >= m => {
+                    state.n_tokens = m;
+                    Some(Download {
+                        state,
+                        wire_bytes: blob.len() + full.len(),
+                        saved_bytes: 0,
+                        base,
+                    })
+                }
+                Ok(_) => None,
+                Err(e) => {
+                    log_debug!("edge-client", "restore rejected: {e}");
+                    None
+                }
+            };
+        }
+
+        // range-aware path: header + row-index prefix, then the matched
+        // rows — both sliced server-side, one pipelined round trip
+        let head_len = lo.index_off() + 4 * m;
+        let pay_off = lo.payload_off(total_rows);
+        let stride = lo.token_stride();
+        let reqs = [
+            getrange_req(&target, 0, head_len),
+            getrange_req(&target, pay_off, m * stride),
+        ];
+        let replies = self.shaper.shaped_post(|| {
+            let r = conn.pipeline_req(&reqs);
+            let n = r
+                .as_ref()
+                .map(|vs| {
+                    vs.iter()
+                        .map(|v| v.as_bulk().map_or(0, <[u8]>::len))
+                        .sum::<usize>()
+                })
+                .unwrap_or(0);
+            (r, n)
+        });
+        let replies = match replies {
+            Ok(vs) => vs,
+            Err(e) => {
+                log_debug!("edge-client", "range download failed: {e}");
+                return None;
+            }
+        };
+        let (Some(head), Some(rows)) = (
+            replies.first().and_then(Value::as_bulk),
+            replies.get(1).and_then(Value::as_bulk),
+        ) else {
+            return None; // target evicted between the alias GET and now
+        };
+        if head.len() != head_len || rows.len() != m * stride {
+            log_debug!(
+                "edge-client",
+                "short range replies ({}/{head_len}, {}/{}); discarding",
+                head.len(),
+                rows.len(),
+                m * stride
+            );
+            return None;
+        }
+        match KvState::restore_prefix_from_parts(head, rows, m, hash, dims) {
+            Ok(state) => {
+                let wire_bytes = blob.len() + head.len() + rows.len();
+                // same baseline as the upload side: the per-range model
+                // would have downloaded a dedicated m-row blob, so the
+                // range fetch is roughly break-even here (the win is that
+                // the m-row blob no longer has to exist — upload-side
+                // savings — not that this fetch is smaller)
+                let saved_bytes = lo.blob_len(m).saturating_sub(wire_bytes);
+                Some(Download { state, wire_bytes, saved_bytes, base })
             }
             Err(e) => {
-                log_debug!("edge-client", "restore rejected: {e}");
+                log_debug!("edge-client", "range restore rejected: {e}");
                 None
             }
         }
     }
 
-    /// Step 3 (miss path, post-response): upload every range the server does
-    /// not already have and register the keys in both catalogs.
+    /// Step 3 (miss path, post-response): publish every range the server
+    /// does not already have.  One real blob is shipped per prompt — via
+    /// `SPLICE` (suffix rows only) when a delta base is known — and shorter
+    /// ranges are registered as tiny aliases into it.  Returns
+    /// (wire bytes, duration, modelled bytes saved vs full-blob-per-range).
     fn upload_ranges(
         &mut self,
         state: &KvState,
         ranges: &[PromptRange],
         skip_up_to: usize,
         prompt_tokens: usize,
-    ) -> (usize, Duration) {
+        delta_base: Option<&DeltaBase>,
+    ) -> (usize, Duration, usize) {
         if self.conn.is_none() {
-            return (0, Duration::ZERO);
+            return (0, Duration::ZERO, 0);
         }
         let t0 = std::time::Instant::now();
-        let mut blobs: Vec<(Vec<u8>, Vec<u8>, Vec<u8>)> = Vec::new(); // (store key, blob, cat key)
-        {
+        let todo: Vec<PromptRange> = {
             let cat = self.catalog.lock().unwrap();
-            for r in ranges {
-                if r.token_len <= skip_up_to || r.token_len > prompt_tokens {
-                    continue;
-                }
-                if !self.cfg.partial_matching && r.token_len != prompt_tokens {
-                    continue;
-                }
-                if cat.filter.contains(&r.key) {
-                    continue; // someone (maybe us) already uploaded it
-                }
-                let blob =
-                    state.serialize_prefix(r.token_len, self.engine.model_hash(), self.cfg.compression);
-                blobs.push((state_store_key(&r.key), blob, r.key.to_vec()));
-            }
+            ranges
+                .iter()
+                .filter(|r| {
+                    r.token_len > skip_up_to
+                        && r.token_len <= prompt_tokens
+                        && (self.cfg.partial_matching || r.token_len == prompt_tokens)
+                        && !cat.filter.contains(&r.key)
+                })
+                .cloned()
+                .collect()
+        };
+        if todo.is_empty() {
+            return (0, Duration::ZERO, 0);
         }
-        if blobs.is_empty() {
-            return (0, Duration::ZERO);
+
+        let hash = self.engine.model_hash().to_string();
+        let lo = self.blob_layout();
+        let compressed = self.cfg.compression == Compression::Deflate;
+        // ranges_for returns ascending lengths, so the last entry is longest
+        let longest = todo.last().unwrap().clone();
+        let n = longest.token_len;
+        let long_key = state_store_key(&longest.key);
+        let full = state.serialize_prefix_shared(n, &hash, self.cfg.compression);
+
+        // what the pre-delta pipeline would have shipped: one full nested
+        // blob per range (modelled uncompressed)
+        let seed_cost: usize = todo.iter().map(|r| lo.blob_len(r.token_len)).sum();
+
+        let mut reqs: Vec<Value> = Vec::with_capacity(todo.len() * 2 + 1);
+        let mut wire = 0usize;
+        let use_delta = !compressed
+            && skip_up_to > 0
+            && delta_base.is_some_and(|b| !b.compressed && b.total_rows >= skip_up_to);
+        if use_delta {
+            let b = delta_base.unwrap();
+            let stride = lo.token_stride();
+            let pay = lo.payload_off(n);
+            let head = full.slice(0..pay);
+            let tail = full.slice(pay + skip_up_to * stride..pay + n * stride);
+            let base_pay = lo.payload_off(b.total_rows);
+            wire += head.len() + tail.len();
+            reqs.push(request_shared(vec![
+                SharedBytes::copy_from(b"SPLICE"),
+                long_key.clone().into(),
+                b.store_key.clone().into(),
+                base_pay.to_string().into_bytes().into(),
+                (base_pay + skip_up_to * stride).to_string().into_bytes().into(),
+                head,
+                tail,
+            ]));
+        } else {
+            wire += full.len();
+            reqs.push(request_shared(vec![
+                SharedBytes::copy_from(b"SET"),
+                long_key.clone().into(),
+                full.clone(),
+            ]));
         }
-        let total: usize = blobs.iter().map(|(_, b, _)| b.len()).sum();
-        let mut cmds: Vec<Vec<Vec<u8>>> = Vec::with_capacity(blobs.len() * 2);
-        for (skey, blob, ckey) in &blobs {
-            cmds.push(vec![b"SET".to_vec(), skey.clone(), blob.clone()]);
-            cmds.push(vec![b"CAT.REGISTER".to_vec(), ckey.clone()]);
+        reqs.push(register_req(&longest.key));
+        for r in todo.iter().filter(|r| r.token_len != n) {
+            let alias = encode_range_alias(&long_key, n, compressed);
+            wire += alias.len();
+            reqs.push(request_shared(vec![
+                SharedBytes::copy_from(b"SET"),
+                state_store_key(&r.key).into(),
+                alias.into(),
+            ]));
+            reqs.push(register_req(&r.key));
         }
+
         let conn = self.conn.as_mut().unwrap();
-        let res = self.shaper.shaped(total, || conn.pipeline(&cmds));
+        let res = self.shaper.shaped(wire, || conn.pipeline_req(&reqs));
         match res {
-            Ok(_) => {
-                let mut cat = self.catalog.lock().unwrap();
-                for (_, _, ckey) in &blobs {
-                    cat.register_key(ckey);
+            Ok(replies) => {
+                if use_delta && matches!(replies.first(), Some(Value::Error(_))) {
+                    // the delta base vanished (evicted) between download and
+                    // upload: ship the whole blob after all
+                    log_debug!(
+                        "edge-client",
+                        "splice base gone; falling back to a full upload"
+                    );
+                    let blob = full.clone();
+                    let r2 = self
+                        .shaper
+                        .shaped(blob.len(), || conn.set_shared(&long_key, blob));
+                    if r2.is_ok() {
+                        wire += full.len();
+                    }
                 }
-                self.stats.bytes_up += total as u64;
-                (total, t0.elapsed())
+                let mut cat = self.catalog.lock().unwrap();
+                for r in &todo {
+                    cat.register_key(&r.key);
+                }
+                self.stats.bytes_up += wire as u64;
+                let saved = seed_cost.saturating_sub(wire);
+                self.stats.bytes_saved += saved as u64;
+                (wire, t0.elapsed(), saved)
             }
             Err(e) => {
                 log_debug!("edge-client", "upload failed (continuing local-only): {e}");
-                (0, t0.elapsed())
+                (0, t0.elapsed(), 0)
             }
         }
     }
@@ -435,6 +678,8 @@ impl EdgeClient {
         let mut matched = 0usize;
         let mut false_positive = false;
         let mut downloaded = 0usize;
+        let mut saved = 0usize;
+        let mut delta_base: Option<DeltaBase> = None;
         let mut state: Option<KvState> = None;
 
         if let Lookup::Hit(range) = lookup {
@@ -446,11 +691,13 @@ impl EdgeClient {
                 est_bytes,
             ) {
                 match self.try_download(&range, &mut bd) {
-                    Some((s, bytes)) => {
-                        matched = s.n_tokens;
-                        downloaded = bytes;
-                        self.stats.bytes_down += bytes as u64;
-                        state = Some(s);
+                    Some(d) => {
+                        matched = d.state.n_tokens;
+                        downloaded = d.wire_bytes;
+                        saved += d.saved_bytes;
+                        self.stats.bytes_down += d.wire_bytes as u64;
+                        delta_base = Some(d.base);
+                        state = Some(d.state);
                     }
                     None => {
                         false_positive = true;
@@ -481,8 +728,9 @@ impl EdgeClient {
         let text = engine.tokenizer.decode(&out_tokens);
 
         // -- post-response upload (miss/partial path) -------------------------
-        let (uploaded, upload_time) =
-            self.upload_ranges(&state, &ranges, matched, full_len);
+        let (uploaded, upload_time, upload_saved) =
+            self.upload_ranges(&state, &ranges, matched, full_len, delta_base.as_ref());
+        saved += upload_saved;
 
         let case = Self::classify(&ranges, matched, full_len);
         self.stats.hits_by_case[case.number() - 1] += 1;
@@ -490,6 +738,7 @@ impl EdgeClient {
         bd.prompt_tokens = full_len;
         bd.reused_tokens = matched;
         bd.state_bytes = downloaded.max(uploaded);
+        bd.saved_bytes = saved;
 
         Ok(QueryResult {
             case,
@@ -501,6 +750,7 @@ impl EdgeClient {
             false_positive,
             downloaded_bytes: downloaded,
             uploaded_bytes: uploaded,
+            saved_bytes: saved,
             upload_time,
         })
     }
@@ -519,6 +769,7 @@ impl EdgeClient {
             false_positive: false,
             downloaded_bytes: 0,
             uploaded_bytes: 0,
+            saved_bytes: 0,
             upload_time: Duration::ZERO,
         })
     }
@@ -528,6 +779,13 @@ impl EdgeClient {
             s.stop();
         }
     }
+}
+
+fn register_req(catalog_key: &[u8; crate::catalog::KEY_LEN]) -> Value {
+    request_shared(vec![
+        SharedBytes::copy_from(b"CAT.REGISTER"),
+        catalog_key.to_vec().into(),
+    ])
 }
 
 #[cfg(test)]
@@ -616,6 +874,9 @@ mod tests {
         assert!(r1.matched_tokens > 0 && r1.matched_tokens < r1.prompt_tokens);
         // the suffix still had to be prefilled locally
         assert!(r1.breakdown.get(Phase::PDecode) > Duration::ZERO);
+        // the partial hit resolved an alias and fetched only the matched
+        // rows, not a dedicated full blob
+        assert!(r1.saved_bytes > 0, "range download + delta upload must save bytes");
         cb.shutdown();
     }
 
@@ -678,6 +939,27 @@ mod tests {
         let r2 = c.query(&p).unwrap();
         assert_eq!(r2.case, HitCase::Full);
         assert_eq!(r1.response_tokens, r2.response_tokens);
+        cb.shutdown();
+    }
+
+    #[test]
+    fn compressed_partial_hit_falls_back_to_full_fetch() {
+        // deflate entries cannot be range-served: an alias hit must still
+        // reproduce the right state by fetching the whole target
+        let Some(eng) = engine() else { return };
+        let cb = CacheBox::start_local().unwrap();
+        let mut cfg = native_cfg("comp-partial", Some(cb.addr()));
+        cfg.compression = Compression::Deflate;
+        let mut c = EdgeClient::new(eng, cfg).unwrap();
+        let g = Generator::new(27);
+        let p0 = g.prompt("virology", 0, 2);
+        let p1 = g.prompt("virology", 1, 2);
+
+        let r0 = c.query(&p0).unwrap();
+        assert_eq!(r0.case, HitCase::Miss);
+        let r1 = c.query(&p1).unwrap();
+        assert_eq!(r1.case, HitCase::AllExamples);
+        assert!(r1.matched_tokens > 0 && r1.downloaded_bytes > 0);
         cb.shutdown();
     }
 

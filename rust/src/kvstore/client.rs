@@ -2,10 +2,17 @@
 //! link against.
 //!
 //! All cache-box operations the coordinator performs go through here:
-//! state download (`GET`), state upload (`SET`), existence probes and the
-//! catalog-sync calls.  `pipeline` issues several commands in one write and
-//! reads the replies back in order (used by the upload path, which SETs all
-//! four prompt ranges in one round trip).
+//! state download (`GET`/`GETRANGE`), state upload (`SET`/`SPLICE`),
+//! existence probes and the catalog-sync calls.  `pipeline`/`pipeline_req`
+//! issue several commands in one write and read the replies back in order
+//! (used by the upload path, which publishes a prompt's ranges in one round
+//! trip, and by the range-download path, which fetches a blob's header and
+//! its matched rows together).
+//!
+//! Payload-carrying calls speak [`SharedBytes`] end to end: `get` returns a
+//! slice of the receive buffer and `set_shared`/`splice` queue views of the
+//! caller's blob, so no payload byte is copied between the serialized state
+//! and the socket write.
 
 use std::io::Write;
 use std::net::TcpStream;
@@ -13,12 +20,27 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::resp::{read_value, request, Decoder, Value};
+use super::resp::{read_value, request, request_shared, Decoder, Value};
+use crate::util::bytes::SharedBytes;
 
 pub struct KvClient {
     stream: TcpStream,
     dec: Decoder,
     pub addr: String,
+}
+
+/// Build a `GETRANGE` request for a `len > 0` byte window at `start`.  The
+/// server speaks Redis's inclusive-end encoding; this is the one place the
+/// start/len → start/end conversion lives (used both by
+/// [`KvClient::getrange`] and by pipelined range fetches).
+pub fn getrange_req(key: &[u8], start: usize, len: usize) -> Value {
+    assert!(len > 0, "GETRANGE request needs a non-empty window");
+    request_shared(vec![
+        SharedBytes::copy_from(b"GETRANGE"),
+        key.into(),
+        start.to_string().into_bytes().into(),
+        (start + len - 1).to_string().into_bytes().into(),
+    ])
 }
 
 impl KvClient {
@@ -43,10 +65,11 @@ impl KvClient {
         Ok(())
     }
 
-    /// Issue one command and read its reply.
-    pub fn command(&mut self, parts: &[&[u8]]) -> Result<Value> {
-        let req = request(parts);
-        self.stream.write_all(&req.encode())?;
+    /// Issue one pre-built request and read its reply.
+    fn exec_req(&mut self, req: &Value) -> Result<Value> {
+        let mut buf = Vec::with_capacity(64);
+        req.encode_into(&mut buf);
+        self.stream.write_all(&buf)?;
         let v = read_value(&mut self.stream, &mut self.dec)?;
         if let Value::Error(e) = &v {
             bail!("server error: {e}");
@@ -54,21 +77,37 @@ impl KvClient {
         Ok(v)
     }
 
-    /// Issue several commands in one write; replies come back in order.
-    /// Server-side errors are returned in-place (not turned into Err) so a
-    /// batch with one failure still yields the other replies.
-    pub fn pipeline(&mut self, cmds: &[Vec<Vec<u8>>]) -> Result<Vec<Value>> {
+    /// Issue one command and read its reply.
+    pub fn command(&mut self, parts: &[&[u8]]) -> Result<Value> {
+        self.exec_req(&request(parts))
+    }
+
+    /// Issue several pre-built requests in one write; replies come back in
+    /// order.  Server-side errors are returned in-place (not turned into
+    /// Err) so a batch with one failure still yields the other replies.
+    pub fn pipeline_req(&mut self, reqs: &[Value]) -> Result<Vec<Value>> {
         let mut buf = Vec::new();
-        for c in cmds {
-            let parts: Vec<&[u8]> = c.iter().map(|p| p.as_slice()).collect();
-            request(&parts).encode_into(&mut buf);
+        for r in reqs {
+            r.encode_into(&mut buf);
         }
         self.stream.write_all(&buf)?;
-        let mut out = Vec::with_capacity(cmds.len());
-        for _ in cmds {
+        let mut out = Vec::with_capacity(reqs.len());
+        for _ in reqs {
             out.push(read_value(&mut self.stream, &mut self.dec)?);
         }
         Ok(out)
+    }
+
+    /// Issue several commands in one write; replies come back in order.
+    pub fn pipeline(&mut self, cmds: &[Vec<Vec<u8>>]) -> Result<Vec<Value>> {
+        let reqs: Vec<Value> = cmds
+            .iter()
+            .map(|c| {
+                let parts: Vec<&[u8]> = c.iter().map(|p| p.as_slice()).collect();
+                request(&parts)
+            })
+            .collect();
+        self.pipeline_req(&reqs)
     }
 
     // -- typed helpers -------------------------------------------------------
@@ -87,11 +126,63 @@ impl KvClient {
         }
     }
 
-    pub fn get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+    /// `SET` without copying the payload into the request: the wire write
+    /// streams straight out of the shared blob.
+    pub fn set_shared(&mut self, key: &[u8], value: SharedBytes) -> Result<()> {
+        let req = request_shared(vec![SharedBytes::copy_from(b"SET"), key.into(), value]);
+        match self.exec_req(&req)? {
+            Value::Simple(s) if s == "OK" => Ok(()),
+            other => Err(anyhow!("unexpected SET reply {other:?}")),
+        }
+    }
+
+    pub fn get(&mut self, key: &[u8]) -> Result<Option<SharedBytes>> {
         match self.command(&[b"GET", key])? {
             Value::Bulk(b) => Ok(Some(b)),
             Value::Nil => Ok(None),
             other => Err(anyhow!("unexpected GET reply {other:?}")),
+        }
+    }
+
+    /// Fetch `len` bytes of a value starting at byte `start` (token-row
+    /// ranges of state blobs, but the server is layout-agnostic).  `None`
+    /// when the key is absent; a short/empty result means the entry is
+    /// smaller than the requested window.
+    pub fn getrange(&mut self, key: &[u8], start: usize, len: usize) -> Result<Option<SharedBytes>> {
+        if len == 0 {
+            return Ok(Some(SharedBytes::empty()));
+        }
+        match self.exec_req(&getrange_req(key, start, len))? {
+            Value::Bulk(b) => Ok(Some(b)),
+            Value::Nil => Ok(None),
+            other => Err(anyhow!("unexpected GETRANGE reply {other:?}")),
+        }
+    }
+
+    /// Store `head ++ basekey[start, end) ++ tail` under `newkey`
+    /// (end-exclusive) — the suffix-delta upload primitive.  Returns the
+    /// assembled entry's length.
+    pub fn splice(
+        &mut self,
+        newkey: &[u8],
+        basekey: &[u8],
+        start: usize,
+        end: usize,
+        head: SharedBytes,
+        tail: SharedBytes,
+    ) -> Result<usize> {
+        let req = request_shared(vec![
+            SharedBytes::copy_from(b"SPLICE"),
+            newkey.into(),
+            basekey.into(),
+            start.to_string().into_bytes().into(),
+            end.to_string().into_bytes().into(),
+            head,
+            tail,
+        ]);
+        match self.exec_req(&req)? {
+            Value::Int(n) => Ok(n as usize),
+            other => Err(anyhow!("unexpected SPLICE reply {other:?}")),
         }
     }
 
@@ -120,6 +211,7 @@ impl KvClient {
         Ok(self
             .command(&[b"INFO"])?
             .as_text()
+            .map(|c| c.into_owned())
             .unwrap_or_default())
     }
 
@@ -151,7 +243,7 @@ impl KvClient {
                 let mut keys = Vec::new();
                 for v in it {
                     match v {
-                        Value::Bulk(b) => keys.push(b),
+                        Value::Bulk(b) => keys.push(b.to_vec()),
                         other => bail!("CAT.DELTA non-bulk entry {other:?}"),
                     }
                 }
@@ -199,6 +291,47 @@ mod tests {
         let got = c.get(b"state:abc").unwrap().unwrap();
         assert_eq!(got.len(), blob.len());
         assert_eq!(got, blob);
+    }
+
+    #[test]
+    fn shared_set_and_ranged_get() {
+        let (_h, mut c) = spawn();
+        let blob: Vec<u8> = (0u32..100_000).map(|i| (i % 251) as u8).collect();
+        c.set_shared(b"blob", SharedBytes::new(blob.clone())).unwrap();
+        assert_eq!(c.strlen(b"blob").unwrap(), blob.len());
+        // windows come back exactly
+        let win = c.getrange(b"blob", 1000, 500).unwrap().unwrap();
+        assert_eq!(win, blob[1000..1500].to_vec());
+        // zero-length request short-circuits client-side
+        assert_eq!(c.getrange(b"blob", 0, 0).unwrap().unwrap().len(), 0);
+        // windows past the end clamp; missing keys are None
+        let tail = c.getrange(b"blob", blob.len() - 10, 100).unwrap().unwrap();
+        assert_eq!(tail, blob[blob.len() - 10..].to_vec());
+        assert_eq!(c.getrange(b"absent", 0, 10).unwrap(), None);
+    }
+
+    #[test]
+    fn splice_over_network() {
+        let (_h, mut c) = spawn();
+        c.set(b"base", b"0123456789").unwrap();
+        let n = c
+            .splice(
+                b"new",
+                b"base",
+                2,
+                6,
+                SharedBytes::copy_from(b"<<"),
+                SharedBytes::copy_from(b">>"),
+            )
+            .unwrap();
+        assert_eq!(n, 8);
+        assert_eq!(c.get(b"new").unwrap().unwrap(), b"<<2345>>");
+        // missing base is a typed error
+        assert!(c
+            .splice(b"x", b"gone", 0, 0, SharedBytes::empty(), SharedBytes::empty())
+            .is_err());
+        // connection still usable afterwards
+        c.ping().unwrap();
     }
 
     #[test]

@@ -5,13 +5,15 @@
 //! Raspberry Pi 5 with snapshotting disabled (pure in-memory), accessed from
 //! C++ clients via Hiredis.  This module rebuilds that substrate:
 //!
-//! * [`resp`] — RESP2 wire protocol (the actual Redis framing);
+//! * [`resp`] — RESP2 wire protocol (the actual Redis framing), with
+//!   zero-copy bulk payloads (`SharedBytes` slices of the read buffer);
 //! * [`store`] — in-memory keyspace with LRU eviction under a memory cap
-//!   (Redis `maxmemory` + `allkeys-lru`);
+//!   (Redis `maxmemory` + `allkeys-lru`), holding shared views;
 //! * [`server`] — threaded TCP server speaking RESP2: `GET SET DEL EXISTS
-//!   STRLEN DBSIZE INFO FLUSHALL PING` plus three catalog-sync commands
-//!   (`CAT.VERSION`, `CAT.DELTA`, `CAT.REGISTER` — the master-catalog side
-//!   of the paper's Figure 2);
+//!   STRLEN DBSIZE INFO FLUSHALL PING`, the byte-range pair
+//!   `GETRANGE`/`SPLICE` powering range-aware state transfer, plus three
+//!   catalog-sync commands (`CAT.VERSION`, `CAT.DELTA`, `CAT.REGISTER` —
+//!   the master-catalog side of the paper's Figure 2);
 //! * [`client`] — blocking pipelined client (Hiredis analog).
 
 pub mod client;

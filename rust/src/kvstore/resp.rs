@@ -5,8 +5,18 @@
 //! `$-1\r\n` as nil) and arrays `*N\r\n...`.  Requests are arrays of bulk
 //! strings.  The codec is incremental: [`Decoder`] buffers partial frames
 //! across reads, which the server relies on for pipelining.
+//!
+//! Bulk payloads are [`SharedBytes`]: the decoder's read buffer is a shared
+//! allocation and every decoded `Bulk` is an O(1) *slice* of it, so a
+//! multi-megabyte state blob travels socket → decoder → [`Value`] → store
+//! without being copied.  The buffer is re-homed lazily (on the next `feed`)
+//! once decoded values still reference it.
 
+use std::borrow::Cow;
 use std::io::{self, Read, Write};
+use std::sync::Arc;
+
+use crate::util::bytes::{copymeter, SharedBytes};
 
 /// Maximum accepted bulk-string / array size (64 MB guards against
 /// malformed length prefixes taking the server down).
@@ -17,7 +27,7 @@ pub enum Value {
     Simple(String),
     Error(String),
     Int(i64),
-    Bulk(Vec<u8>),
+    Bulk(SharedBytes),
     Nil,
     Array(Vec<Value>),
 }
@@ -28,20 +38,34 @@ impl Value {
     }
 
     pub fn bulk_str(s: &str) -> Value {
-        Value::Bulk(s.as_bytes().to_vec())
+        Value::Bulk(SharedBytes::copy_from(s.as_bytes()))
     }
 
-    /// Interpret as UTF-8 text where possible (diagnostics).
-    pub fn as_text(&self) -> Option<String> {
+    /// Wrap anything byte-like as a bulk string.
+    pub fn bulk(b: impl Into<SharedBytes>) -> Value {
+        Value::Bulk(b.into())
+    }
+
+    /// Interpret as UTF-8 text where possible (diagnostics).  Borrows the
+    /// payload for the Simple/Error/Bulk cases; only `Int` allocates.
+    pub fn as_text(&self) -> Option<Cow<'_, str>> {
         match self {
-            Value::Simple(s) | Value::Error(s) => Some(s.clone()),
-            Value::Bulk(b) => String::from_utf8(b.clone()).ok(),
-            Value::Int(i) => Some(i.to_string()),
+            Value::Simple(s) | Value::Error(s) => Some(Cow::Borrowed(s.as_str())),
+            Value::Bulk(b) => std::str::from_utf8(b).ok().map(Cow::Borrowed),
+            Value::Int(i) => Some(Cow::Owned(i.to_string())),
             _ => None,
         }
     }
 
     pub fn as_bulk(&self) -> Option<&[u8]> {
+        match self {
+            Value::Bulk(b) => Some(b.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// Take the bulk payload out without copying.
+    pub fn into_bulk(self) -> Option<SharedBytes> {
         match self {
             Value::Bulk(b) => Some(b),
             _ => None,
@@ -82,6 +106,7 @@ impl Value {
                 out.extend_from_slice(b.len().to_string().as_bytes());
                 out.extend_from_slice(b"\r\n");
                 out.extend_from_slice(b);
+                copymeter::add(b.len()); // the one unavoidable wire copy
                 out.extend_from_slice(b"\r\n");
             }
             Value::Nil => out.extend_from_slice(b"$-1\r\n"),
@@ -105,7 +130,12 @@ impl Value {
 
 /// Build a RESP request (array of bulk strings) from command parts.
 pub fn request(parts: &[&[u8]]) -> Value {
-    Value::Array(parts.iter().map(|p| Value::Bulk(p.to_vec())).collect())
+    Value::Array(parts.iter().map(|p| Value::bulk(*p)).collect())
+}
+
+/// Build a RESP request from already-shared parts (no payload copies).
+pub fn request_shared(parts: Vec<SharedBytes>) -> Value {
+    Value::Array(parts.into_iter().map(Value::Bulk).collect())
 }
 
 #[derive(Debug, thiserror::Error)]
@@ -116,10 +146,13 @@ pub enum RespError {
     Io(#[from] io::Error),
 }
 
-/// Incremental RESP decoder with an internal buffer.
+/// Incremental RESP decoder with a shared internal buffer.  Complete bulk
+/// payloads are sliced out of the buffer without copying; the buffer is
+/// abandoned to its outstanding slices and restarted when the next `feed`
+/// arrives while values still hold references.
 #[derive(Default)]
 pub struct Decoder {
-    buf: Vec<u8>,
+    buf: Arc<Vec<u8>>,
     pos: usize,
 }
 
@@ -130,12 +163,28 @@ impl Decoder {
 
     /// Append raw bytes received from the socket.
     pub fn feed(&mut self, data: &[u8]) {
-        // compact consumed prefix occasionally to bound memory
-        if self.pos > 0 && self.pos * 2 > self.buf.len() {
-            self.buf.drain(..self.pos);
-            self.pos = 0;
+        match Arc::get_mut(&mut self.buf) {
+            Some(buf) => {
+                // sole owner: append in place, compacting the consumed
+                // prefix occasionally to bound memory
+                if self.pos > 0 && self.pos * 2 > buf.len() {
+                    buf.drain(..self.pos);
+                    self.pos = 0;
+                }
+                buf.extend_from_slice(data);
+            }
+            None => {
+                // decoded values still reference the old buffer: re-home the
+                // unconsumed tail (usually empty) into a fresh allocation
+                let tail = &self.buf[self.pos..];
+                let mut nb = Vec::with_capacity(tail.len() + data.len());
+                nb.extend_from_slice(tail);
+                copymeter::add(tail.len());
+                nb.extend_from_slice(data);
+                self.buf = Arc::new(nb);
+                self.pos = 0;
+            }
         }
-        self.buf.extend_from_slice(data);
     }
 
     /// Try to decode one complete value; `Ok(None)` means "need more bytes".
@@ -193,7 +242,8 @@ impl Decoder {
                 if &self.buf[after + n..after + n + 2] != b"\r\n" {
                     return Err(RespError::Protocol("bulk missing trailing CRLF".into()));
                 }
-                let data = self.buf[after..after + n].to_vec();
+                // zero-copy: the value is a slice of the read buffer
+                let data = SharedBytes::from_arc_slice(Arc::clone(&self.buf), after, n);
                 Ok(Some((Value::Bulk(data), after + n + 2)))
             }
             b'*' => {
@@ -283,13 +333,45 @@ mod tests {
         roundtrip(&Value::Simple("PONG".into()));
         roundtrip(&Value::Error("ERR boom".into()));
         roundtrip(&Value::Int(-7));
-        roundtrip(&Value::Bulk(vec![0, 1, 2, 255, 13, 10]));
+        roundtrip(&Value::bulk(vec![0u8, 1, 2, 255, 13, 10]));
         roundtrip(&Value::Nil);
         roundtrip(&Value::Array(vec![
             Value::Int(1),
-            Value::Bulk(b"x".to_vec()),
+            Value::bulk(&b"x"[..]),
             Value::Array(vec![Value::Nil]),
         ]));
+    }
+
+    #[test]
+    fn decoded_bulk_shares_read_buffer() {
+        let payload = vec![0xA5u8; 4096];
+        let enc = Value::bulk(payload.clone()).encode();
+        let mut d = Decoder::new();
+        d.feed(&enc);
+        let got = d.next_value().unwrap().unwrap();
+        let Value::Bulk(b) = got else { panic!("expected bulk") };
+        assert_eq!(b, payload);
+        // the payload is a slice of the decoder's buffer, not a copy
+        assert_eq!(b.backing_len(), enc.len());
+        // the decoder survives the outstanding reference: the next feed
+        // re-homes its buffer and keeps decoding correctly
+        let enc2 = Value::Int(9).encode();
+        d.feed(&enc2);
+        assert_eq!(d.next_value().unwrap().unwrap(), Value::Int(9));
+        assert_eq!(b, payload, "old slice still valid after re-home");
+    }
+
+    #[test]
+    fn as_text_borrows_payloads() {
+        assert_eq!(Value::Simple("PONG".into()).as_text().as_deref(), Some("PONG"));
+        assert_eq!(Value::bulk_str("hi").as_text().as_deref(), Some("hi"));
+        assert_eq!(Value::Int(-3).as_text().as_deref(), Some("-3"));
+        assert_eq!(Value::Nil.as_text(), None);
+        assert!(matches!(
+            Value::bulk_str("hi").as_text(),
+            Some(Cow::Borrowed(_))
+        ));
+        assert!(Value::bulk(vec![0xFFu8, 0xFE]).as_text().is_none());
     }
 
     #[test]
@@ -343,7 +425,7 @@ mod tests {
             let len = g.size(2000);
             let payload = g.bytes(len);
             let v = Value::Array(vec![
-                Value::Bulk(payload.clone()),
+                Value::bulk(payload.clone()),
                 Value::Int(g.rng.next_u64() as i64),
                 Value::Nil,
             ]);

@@ -7,6 +7,19 @@
 //! log of registered catalog keys that clients pull incrementally
 //! (`CAT.DELTA`) to synchronize their local Bloom filters (Figure 2, green
 //! arrow).
+//!
+//! Two byte-oriented commands power the zero-copy/suffix-delta transfer
+//! path (the server never interprets blob layouts — clients compute all
+//! offsets from `model::state::BlobLayout`):
+//!
+//! * `GETRANGE key start end` — Redis-style inclusive byte range of a
+//!   value, served as an O(1) slice of the stored entry (`Nil` when the key
+//!   is absent, empty bulk when the range is);
+//! * `SPLICE newkey basekey start end head tail` — store
+//!   `head ++ basekey[start, end) ++ tail` under `newkey` (end-exclusive).
+//!   This is the delta-upload primitive: a client extending a cached prefix
+//!   ships only its new suffix rows, and the server splices them onto the
+//!   prefix bytes it already holds.
 
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
@@ -20,6 +33,7 @@ use super::resp::{read_value, Decoder, RespError, Value};
 use super::store::Store;
 use crate::log_debug;
 use crate::log_info;
+use crate::util::bytes::SharedBytes;
 
 /// Master-catalog state: an append-only key log; version = entries appended.
 #[derive(Debug, Default)]
@@ -56,6 +70,10 @@ pub struct KvServer {
     /// Simulated per-command processing delay (cache-box CPU time); zero by
     /// default — the link shaping lives client-side in `netsim`.
     pub op_delay: std::time::Duration,
+}
+
+fn parse_index(arg: &[u8]) -> Option<usize> {
+    std::str::from_utf8(arg).ok()?.parse::<usize>().ok()
 }
 
 impl KvServer {
@@ -144,11 +162,11 @@ impl KvServer {
         let Value::Array(parts) = req else {
             return Value::Error("ERR expected array request".into());
         };
-        let mut args: Vec<Vec<u8>> = Vec::with_capacity(parts.len());
+        let mut args: Vec<SharedBytes> = Vec::with_capacity(parts.len());
         for p in parts {
             match p {
                 Value::Bulk(b) => args.push(b),
-                Value::Simple(s) => args.push(s.into_bytes()),
+                Value::Simple(s) => args.push(s.into_bytes().into()),
                 _ => return Value::Error("ERR request items must be bulk strings".into()),
             }
         }
@@ -159,6 +177,7 @@ impl KvServer {
         match (cmd.as_str(), args.len()) {
             ("PING", 1) => Value::Simple("PONG".into()),
             ("SET", 3) => {
+                // the stored entry shares the wire buffer's allocation
                 let ok = self.store.lock().unwrap().set(&args[1], args[2].clone());
                 if ok {
                     Value::ok()
@@ -167,9 +186,58 @@ impl KvServer {
                 }
             }
             ("GET", 2) => match self.store.lock().unwrap().get(&args[1]) {
-                Some(v) => Value::Bulk(v.to_vec()),
+                Some(v) => Value::Bulk(v),
                 None => Value::Nil,
             },
+            ("GETRANGE", 4) => {
+                let (Some(start), Some(end)) =
+                    (parse_index(&args[2]), parse_index(&args[3]))
+                else {
+                    return Value::Error("ERR bad range".into());
+                };
+                match self.store.lock().unwrap().get(&args[1]) {
+                    None => Value::Nil,
+                    Some(v) => {
+                        // Redis semantics: inclusive end, clamped; an empty
+                        // or inverted range yields an empty bulk
+                        if start >= v.len() || end < start {
+                            Value::Bulk(SharedBytes::empty())
+                        } else {
+                            let end = end.min(v.len() - 1);
+                            Value::Bulk(v.slice(start..end + 1))
+                        }
+                    }
+                }
+            }
+            ("SPLICE", 7) => {
+                let (Some(start), Some(end)) =
+                    (parse_index(&args[3]), parse_index(&args[4]))
+                else {
+                    return Value::Error("ERR bad splice range".into());
+                };
+                let mut store = self.store.lock().unwrap();
+                let Some(base) = store.get(&args[2]) else {
+                    return Value::Error("ERR splice base missing".into());
+                };
+                if start > end || end > base.len() {
+                    return Value::Error(format!(
+                        "ERR splice range [{start}, {end}) out of bounds (base {} bytes)",
+                        base.len()
+                    ));
+                }
+                let head = &args[5];
+                let tail = &args[6];
+                let mut v = Vec::with_capacity(head.len() + (end - start) + tail.len());
+                v.extend_from_slice(head);
+                v.extend_from_slice(&base[start..end]);
+                v.extend_from_slice(tail);
+                let n = v.len();
+                if store.set(&args[1], v) {
+                    Value::Int(n as i64)
+                } else {
+                    Value::Error("OOM value exceeds maxmemory".into())
+                }
+            }
             ("DEL", 2) => Value::Int(self.store.lock().unwrap().del(&args[1]) as i64),
             ("EXISTS", 2) => Value::Int(self.store.lock().unwrap().contains(&args[1]) as i64),
             ("STRLEN", 2) => match self.store.lock().unwrap().strlen(&args[1]) {
@@ -184,7 +252,7 @@ impl KvServer {
             ("INFO", 1) => {
                 let s = self.store.lock().unwrap();
                 let c = self.catalog.lock().unwrap();
-                Value::Bulk(
+                Value::bulk(
                     format!(
                         "# edgecache cache box\r\nkeys:{}\r\nused_bytes:{}\r\nevictions:{}\r\nhits:{}\r\nmisses:{}\r\ncatalog_version:{}\r\n",
                         s.len(),
@@ -199,7 +267,7 @@ impl KvServer {
             }
             ("CAT.VERSION", 1) => Value::Int(self.catalog.lock().unwrap().version() as i64),
             ("CAT.REGISTER", 2) => {
-                let v = self.catalog.lock().unwrap().register(args[1].clone());
+                let v = self.catalog.lock().unwrap().register(args[1].to_vec());
                 Value::Int(v as i64)
             }
             ("CAT.DELTA", 2) => {
@@ -214,7 +282,7 @@ impl KvServer {
                 let (ver, keys) = cat.delta(since, 100_000);
                 let mut items = Vec::with_capacity(keys.len() + 1);
                 items.push(Value::Int(ver as i64));
-                items.extend(keys.iter().map(|k| Value::Bulk(k.clone())));
+                items.extend(keys.iter().map(|k| Value::bulk(k.clone())));
                 Value::Array(items)
             }
             ("SHUTDOWN", 1) => {
@@ -264,6 +332,7 @@ impl Drop for ServerHandle {
 
 #[cfg(test)]
 mod tests {
+    use super::super::resp::request;
     use super::*;
 
     #[test]
@@ -304,13 +373,92 @@ mod tests {
     #[test]
     fn dispatch_without_network() {
         let srv = KvServer::new(usize::MAX);
-        let set = super::super::resp::request(&[b"SET", b"a", b"1"]);
+        let set = request(&[b"SET", b"a", b"1"]);
         assert_eq!(srv.dispatch(set), Value::ok());
-        let get = super::super::resp::request(&[b"GET", b"a"]);
-        assert_eq!(srv.dispatch(get), Value::Bulk(b"1".to_vec()));
-        let bad = super::super::resp::request(&[b"NOPE"]);
+        let get = request(&[b"GET", b"a"]);
+        assert_eq!(srv.dispatch(get), Value::bulk(&b"1"[..]));
+        let bad = request(&[b"NOPE"]);
         assert!(matches!(srv.dispatch(bad), Value::Error(_)));
-        let wrong_arity = super::super::resp::request(&[b"GET"]);
+        let wrong_arity = request(&[b"GET"]);
         assert!(matches!(srv.dispatch(wrong_arity), Value::Error(_)));
+    }
+
+    #[test]
+    fn getrange_dispatch_semantics() {
+        let srv = KvServer::new(usize::MAX);
+        srv.dispatch(request(&[b"SET", b"k", b"hello world"]));
+        assert_eq!(
+            srv.dispatch(request(&[b"GETRANGE", b"k", b"0", b"4"])),
+            Value::bulk(&b"hello"[..])
+        );
+        // inclusive end, clamped past the value length
+        assert_eq!(
+            srv.dispatch(request(&[b"GETRANGE", b"k", b"6", b"999"])),
+            Value::bulk(&b"world"[..])
+        );
+        // start beyond the value → empty bulk, missing key → nil
+        assert_eq!(
+            srv.dispatch(request(&[b"GETRANGE", b"k", b"99", b"100"])),
+            Value::Bulk(SharedBytes::empty())
+        );
+        assert_eq!(
+            srv.dispatch(request(&[b"GETRANGE", b"nope", b"0", b"1"])),
+            Value::Nil
+        );
+        assert!(matches!(
+            srv.dispatch(request(&[b"GETRANGE", b"k", b"x", b"1"])),
+            Value::Error(_)
+        ));
+    }
+
+    #[test]
+    fn splice_dispatch_assembles_value() {
+        let srv = KvServer::new(usize::MAX);
+        srv.dispatch(request(&[b"SET", b"base", b"hello world"]));
+        // "he" ++ base[3,7) ++ "!!" = "he" + "lo w" + "!!"
+        let r = srv.dispatch(request(&[b"SPLICE", b"n", b"base", b"3", b"7", b"he", b"!!"]));
+        assert_eq!(r, Value::Int(8));
+        assert_eq!(
+            srv.dispatch(request(&[b"GET", b"n"])),
+            Value::bulk(&b"helo w!!"[..])
+        );
+        // empty splice range is legal (pure head ++ tail concat)
+        let r = srv.dispatch(request(&[b"SPLICE", b"m", b"base", b"0", b"0", b"a", b"b"]));
+        assert_eq!(r, Value::Int(2));
+        // missing base and out-of-bounds ranges are errors
+        assert!(matches!(
+            srv.dispatch(request(&[b"SPLICE", b"x", b"nope", b"0", b"0", b"", b""])),
+            Value::Error(_)
+        ));
+        assert!(matches!(
+            srv.dispatch(request(&[b"SPLICE", b"x", b"base", b"5", b"99", b"", b""])),
+            Value::Error(_)
+        ));
+        assert!(matches!(
+            srv.dispatch(request(&[b"SPLICE", b"x", b"base", b"7", b"3", b"", b""])),
+            Value::Error(_)
+        ));
+    }
+
+    #[test]
+    fn splice_respects_memory_budget() {
+        let srv = KvServer::new(64);
+        srv.dispatch(request(&[b"SET", b"base", b"0123456789"]));
+        let big_head = vec![b'x'; 200];
+        let r = srv.dispatch(Value::Array(vec![
+            Value::bulk(&b"SPLICE"[..]),
+            Value::bulk(&b"big"[..]),
+            Value::bulk(&b"base"[..]),
+            Value::bulk(&b"0"[..]),
+            Value::bulk(&b"10"[..]),
+            Value::bulk(big_head),
+            Value::bulk(&b""[..]),
+        ]));
+        assert!(matches!(r, Value::Error(_)), "oversized splice must OOM");
+        assert_eq!(
+            srv.dispatch(request(&[b"EXISTS", b"big"])),
+            Value::Int(0),
+            "rejected splice must store nothing"
+        );
     }
 }

@@ -6,12 +6,20 @@
 //! stamps every access and eviction removes the stalest entries until the
 //! budget holds.  Exactness makes the eviction integration tests
 //! deterministic; the asymptotic behaviour under cache pressure is the same.
+//!
+//! Entries are [`SharedBytes`], so inserting a value decoded off the wire
+//! and serving it back out of `GET`/`GETRANGE` are refcount operations, not
+//! copies.  Loose views (a small slice pinning a much larger read buffer)
+//! are compacted on insert so `entry_cost` — and therefore eviction — keeps
+//! tracking real memory.
 
 use std::collections::HashMap;
 
+use crate::util::bytes::SharedBytes;
+
 #[derive(Debug)]
 struct Entry {
-    data: Vec<u8>,
+    data: SharedBytes,
     last_used: u64,
 }
 
@@ -60,8 +68,10 @@ impl Store {
 
     /// Insert/overwrite; evicts LRU entries if the budget would overflow.
     /// Returns false (and stores nothing) if the value alone exceeds the
-    /// budget.
-    pub fn set(&mut self, key: &[u8], data: Vec<u8>) -> bool {
+    /// budget.  Accepts anything convertible into [`SharedBytes`]; the view
+    /// is compacted if it pins a disproportionately large backing buffer.
+    pub fn set(&mut self, key: &[u8], data: impl Into<SharedBytes>) -> bool {
+        let data = data.into().detach_loose();
         let cost = Self::entry_cost(key, &data);
         if cost > self.max_bytes {
             return false;
@@ -96,13 +106,15 @@ impl Store {
         }
     }
 
-    pub fn get(&mut self, key: &[u8]) -> Option<&[u8]> {
+    /// Fetch an entry as a shared view — an O(1) refcount bump, no payload
+    /// copy.  Refreshes LRU and the hit/miss counters.
+    pub fn get(&mut self, key: &[u8]) -> Option<SharedBytes> {
         let t = self.tick();
         match self.map.get_mut(key) {
             Some(e) => {
                 e.last_used = t;
                 self.hits += 1;
-                Some(&e.data)
+                Some(e.data.clone())
             }
             None => {
                 self.misses += 1;
@@ -160,7 +172,7 @@ mod tests {
     fn set_get_del() {
         let mut s = Store::default();
         assert!(s.set(b"a", vec![1, 2, 3]));
-        assert_eq!(s.get(b"a"), Some(&[1u8, 2, 3][..]));
+        assert_eq!(s.get(b"a").as_deref(), Some(&[1u8, 2, 3][..]));
         assert_eq!(s.strlen(b"a"), Some(3));
         assert!(s.contains(b"a"));
         assert!(s.del(b"a"));
@@ -168,6 +180,30 @@ mod tests {
         assert_eq!(s.get(b"a"), None);
         assert_eq!(s.len(), 0);
         assert_eq!(s.used_bytes(), 0);
+    }
+
+    #[test]
+    fn get_returns_shared_view_not_copy() {
+        let mut s = Store::default();
+        let payload = vec![9u8; 256 * 1024];
+        s.set(b"big", SharedBytes::new(payload.clone()));
+        let a = s.get(b"big").unwrap();
+        let b = s.get(b"big").unwrap();
+        assert_eq!(a, payload);
+        // both views are the same backing allocation as the stored entry
+        assert_eq!(a.backing_len(), payload.len());
+        assert_eq!(b.backing_len(), payload.len());
+    }
+
+    #[test]
+    fn loose_views_are_compacted_on_insert() {
+        let mut s = Store::default();
+        let big = SharedBytes::new(vec![3u8; 1 << 20]);
+        s.set(b"slice", big.slice(0..100));
+        // entry_cost must reflect the 100 bytes, and the entry must not pin
+        // the megabyte backing buffer
+        assert_eq!(s.used_bytes(), 5 + 100);
+        assert_eq!(s.get(b"slice").unwrap().backing_len(), 100);
     }
 
     #[test]

@@ -71,6 +71,9 @@ pub struct PhaseBreakdown {
     pub response_tokens: usize,
     /// Bytes moved over the cache-box link (paper "State size").
     pub state_bytes: usize,
+    /// Bytes the range-aware transfer path avoided moving (vs the
+    /// full-blob-per-range model; see `coordinator::client`).
+    pub saved_bytes: usize,
     /// Tokens whose prefill was skipped thanks to a cache hit.
     pub reused_tokens: usize,
 }
@@ -116,6 +119,7 @@ impl PhaseBreakdown {
         self.prompt_tokens += other.prompt_tokens;
         self.response_tokens += other.response_tokens;
         self.state_bytes += other.state_bytes;
+        self.saved_bytes += other.saved_bytes;
         self.reused_tokens += other.reused_tokens;
     }
 }
@@ -213,6 +217,7 @@ pub struct CaseAggregate {
     pub t_decode: Summary,
     pub prompt_tokens: f64,
     pub state_bytes: f64,
+    pub saved_bytes: f64,
 }
 
 impl CaseAggregate {
@@ -226,6 +231,7 @@ impl CaseAggregate {
         self.t_decode.push_dur(b.t_decode());
         self.prompt_tokens += b.prompt_tokens as f64;
         self.state_bytes += b.state_bytes as f64;
+        self.saved_bytes += b.saved_bytes as f64;
     }
 
     /// Mean time in a phase, milliseconds (Table 3 cell).
@@ -248,6 +254,14 @@ impl CaseAggregate {
             return 0.0;
         }
         self.state_bytes / self.n as f64 / 1e6
+    }
+
+    /// Mean wire bytes the range-aware transfer path saved per query, MB.
+    pub fn mean_saved_mb(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.saved_bytes / self.n as f64 / 1e6
     }
 }
 
@@ -287,12 +301,15 @@ mod tests {
         let mut a = PhaseBreakdown::default();
         a.add(Phase::Redis, Duration::from_millis(10));
         a.prompt_tokens = 5;
+        a.saved_bytes = 100;
         let mut b = PhaseBreakdown::default();
         b.add(Phase::Redis, Duration::from_millis(20));
         b.prompt_tokens = 7;
+        b.saved_bytes = 23;
         a.merge(&b);
         assert_eq!(a.get(Phase::Redis), Duration::from_millis(30));
         assert_eq!(a.prompt_tokens, 12);
+        assert_eq!(a.saved_bytes, 123);
     }
 
     #[test]

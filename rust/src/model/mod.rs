@@ -7,4 +7,4 @@ pub mod sampler;
 pub mod state;
 
 pub use sampler::{argmax, Sampler};
-pub use state::{KvState, StateError, StateHeader};
+pub use state::{BlobLayout, Compression, KvState, StateError, StateHeader};

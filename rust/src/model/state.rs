@@ -2,28 +2,52 @@
 //!
 //! [`KvState`] is the live form: dense `[L, S, Kh, D]` K/V tensors plus the
 //! number of valid tokens.  [`KvState::serialize`] produces the blob the
-//! paper uploads with `llama_state_get_data()`:
+//! paper uploads with `llama_state_get_data()`.  Format v2 (`"ECS2"`) is
+//! **token-major and row-indexed** so that any token prefix of a blob is a
+//! contiguous byte range a cache box can serve with `GETRANGE`:
 //!
 //! ```text
-//!   magic "ECS1" | header (model hash, dims, n_tokens, flags) |
-//!   K rows [L, n_tokens, Kh, D] | V rows [..] | crc32 of payload
+//!   magic "ECS2"
+//!   header: lp model hash | L S Kh D n_tokens (u32 each) | flags (u8)
+//!           | crc32 over (row index ++ body)
+//!   row index: n_tokens × u32 — crc32 of each token's row chunk
+//!   body (lp): token 0 [K rows layer 0..L | V rows layer 0..L]
+//!              token 1 [..] ... token n-1 [..]      (deflated if flag set)
 //! ```
+//!
+//! Every token occupies one fixed-size chunk of `2·L·Kh·D·4` bytes
+//! ([`BlobLayout::token_stride`]), so the first `m` tokens of an `n`-token
+//! blob are exactly bytes `[payload_off(n), payload_off(n) + m·stride)` —
+//! the property the coordinator's range-aware downloads and suffix-delta
+//! uploads (`SPLICE`) rely on.  The per-token crc32 row index lets a client
+//! verify a partially fetched prefix without the whole-blob checksum.
+//! Offsets are computed client-side from [`BlobLayout`]; the cache box
+//! stays byte-oriented.
 //!
 //! Only the first `n_tokens` sequence rows are shipped, so blob size scales
 //! linearly with the cached prompt length — the paper's 2.25 MB (65-token,
 //! 270M) and 9.94 MB (334-token, 1B) entries are exactly this scaling.
 //! An optional deflate pass (CacheGen-style, §2 related work) is behind
-//! [`Compression::Deflate`].  Restore verifies magic, model hash, dims and
+//! [`Compression::Deflate`]; compressed bodies cannot be range-served (see
+//! ROADMAP open items).  Restore verifies magic, model hash, dims and
 //! checksum before touching the live cache: a corrupt or mismatched blob is
 //! rejected, the client falls back to local prefill (paper §3.3 — wrong
 //! bytes must never poison an inference).
+//!
+//! A second tiny record type, the **range alias** (`"ECSA"`, see
+//! [`encode_range_alias`]), lets one stored blob serve all four catalog
+//! ranges: shorter prefix keys map to an alias naming the long entry and
+//! its row count, and the client fetches just the rows it needs.
 
 use crc32fast::Hasher as Crc32;
 use thiserror::Error;
 
-use crate::util::bytes::{f32_as_bytes, Reader, Writer};
+use crate::util::bytes::{copymeter, f32_as_bytes, f32_as_bytes_mut, Reader, SharedBytes};
 
-const MAGIC: &[u8; 4] = b"ECS1";
+const MAGIC: &[u8; 4] = b"ECS2";
+
+/// Magic for range-alias records stored under short-prefix keys.
+pub const ALIAS_MAGIC: &[u8; 4] = b"ECSA";
 
 #[derive(Debug, Error, PartialEq)]
 pub enum StateError {
@@ -58,6 +82,82 @@ pub struct StateHeader {
     pub head_dim: usize,
     pub n_tokens: usize,
     pub compressed: bool,
+}
+
+/// Byte-offset arithmetic for the v2 blob layout.  Everything is derivable
+/// from the model identity, so clients compute `GETRANGE`/`SPLICE` offsets
+/// without asking the server anything about the format.
+#[derive(Debug, Clone)]
+pub struct BlobLayout {
+    pub hash_len: usize,
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+}
+
+impl BlobLayout {
+    pub fn new(model_hash: &str, n_layers: usize, n_kv_heads: usize, head_dim: usize) -> Self {
+        BlobLayout { hash_len: model_hash.len(), n_layers, n_kv_heads, head_dim }
+    }
+
+    /// Bytes per token chunk: K and V rows across all layers.
+    pub fn token_stride(&self) -> usize {
+        2 * self.n_layers * self.n_kv_heads * self.head_dim * 4
+    }
+
+    /// Offset of the per-token crc32 row index (end of the fixed header).
+    pub fn index_off(&self) -> usize {
+        4 + 4 + self.hash_len + 5 * 4 + 1 + 4
+    }
+
+    /// Offset of the first payload byte in a blob holding `total_rows`
+    /// tokens (the row index and the body length prefix sit in between).
+    pub fn payload_off(&self, total_rows: usize) -> usize {
+        self.index_off() + 4 * total_rows + 4
+    }
+
+    /// Total uncompressed blob size for `rows` tokens.
+    pub fn blob_len(&self, rows: usize) -> usize {
+        self.payload_off(rows) + rows * self.token_stride()
+    }
+}
+
+/// Encode a range alias: "the state for this prefix key lives as the first
+/// `prefix_rows ≤ total_rows` rows of the entry stored at `target_store_key`".
+/// Carries its own crc32 so tampering degrades to a cache miss, never a
+/// wrong restore.
+pub fn encode_range_alias(target_store_key: &[u8], total_rows: usize, compressed: bool) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(4 + 4 + target_store_key.len() + 4 + 1 + 4);
+    buf.extend_from_slice(ALIAS_MAGIC);
+    buf.extend_from_slice(&(target_store_key.len() as u32).to_le_bytes());
+    buf.extend_from_slice(target_store_key);
+    buf.extend_from_slice(&(total_rows as u32).to_le_bytes());
+    buf.push(compressed as u8);
+    let mut crc = Crc32::new();
+    crc.update(&buf[4..]);
+    buf.extend_from_slice(&crc.finalize().to_le_bytes());
+    buf
+}
+
+/// Decode a range alias; `None` when `blob` is not a (well-formed) alias.
+pub fn decode_range_alias(blob: &[u8]) -> Option<(Vec<u8>, usize, bool)> {
+    if blob.len() < 4 || &blob[..4] != ALIAS_MAGIC {
+        return None;
+    }
+    let mut r = Reader::new(&blob[4..]);
+    let key = r.lp_bytes().ok()?.to_vec();
+    let rows = r.u32().ok()? as usize;
+    let compressed = r.u8().ok()? != 0;
+    let stored = r.u32().ok()?;
+    if r.remaining() != 0 {
+        return None;
+    }
+    let mut crc = Crc32::new();
+    crc.update(&blob[4..blob.len() - 4]);
+    if crc.finalize() != stored {
+        return None;
+    }
+    Some((key, rows, compressed))
 }
 
 /// Live KV cache: what the engine threads through every PJRT call.
@@ -107,16 +207,114 @@ impl KvState {
         2 * self.n_layers * n_tokens * self.row_elems() * 4
     }
 
-    /// Copy the valid `[.., :n_tokens]` rows of `src` into `dst`, layer by
-    /// layer (the caches are `[L, S, Kh, D]`, so valid rows are not
-    /// contiguous across layers).
-    fn gather_valid(&self, src: &[f32], out: &mut Vec<u8>) {
+    fn layout_for(&self, model_hash: &str) -> BlobLayout {
+        BlobLayout::new(model_hash, self.n_layers, self.n_kv_heads, self.head_dim)
+    }
+
+    /// Gather the first `m` token chunks (token-major) into `dst`,
+    /// returning each chunk's crc32.
+    fn gather_rows_into(&self, m: usize, dst: &mut Vec<u8>) -> Vec<u32> {
+        let row = self.row_elems();
         let le = self.layer_elems();
-        let take = self.n_tokens * self.row_elems();
-        for l in 0..self.n_layers {
-            let s = &src[l * le..l * le + take];
-            out.extend_from_slice(f32_as_bytes(s));
+        let mut crcs = Vec::with_capacity(m);
+        for t in 0..m {
+            let cs = dst.len();
+            for l in 0..self.n_layers {
+                let o = l * le + t * row;
+                dst.extend_from_slice(f32_as_bytes(&self.k[o..o + row]));
+            }
+            for l in 0..self.n_layers {
+                let o = l * le + t * row;
+                dst.extend_from_slice(f32_as_bytes(&self.v[o..o + row]));
+            }
+            let mut c = Crc32::new();
+            c.update(&dst[cs..]);
+            crcs.push(c.finalize());
         }
+        crcs
+    }
+
+    /// Scatter `m` token chunks of payload back into the `[L, S, Kh, D]`
+    /// live tensors (inverse of [`KvState::gather_rows_into`]).
+    fn scatter_rows(&mut self, payload: &[u8], m: usize) {
+        let row = self.row_elems();
+        let le = self.layer_elems();
+        let rb = row * 4;
+        let mut src = 0usize;
+        for t in 0..m {
+            for l in 0..self.n_layers {
+                let o = l * le + t * row;
+                f32_as_bytes_mut(&mut self.k[o..o + row])
+                    .copy_from_slice(&payload[src..src + rb]);
+                src += rb;
+            }
+            for l in 0..self.n_layers {
+                let o = l * le + t * row;
+                f32_as_bytes_mut(&mut self.v[o..o + row])
+                    .copy_from_slice(&payload[src..src + rb]);
+                src += rb;
+            }
+        }
+        copymeter::add(src);
+    }
+
+    /// Single-pass blob writer: the header, row index and payload land in
+    /// one allocation (the uncompressed path writes every payload byte
+    /// exactly once — there is no intermediate payload buffer to copy out
+    /// of, which is half of the zero-copy pipeline's budget).
+    fn write_blob(&self, m: usize, model_hash: &str, compression: Compression) -> Vec<u8> {
+        assert!(m <= self.n_tokens, "prefix {m} > valid {}", self.n_tokens);
+        let flags: u8 = match compression {
+            Compression::None => 0,
+            Compression::Deflate => 1,
+        };
+        let lo = self.layout_for(model_hash);
+        let mut buf: Vec<u8> = Vec::with_capacity(lo.blob_len(m));
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(model_hash.len() as u32).to_le_bytes());
+        buf.extend_from_slice(model_hash.as_bytes());
+        for v in [self.n_layers, self.max_seq, self.n_kv_heads, self.head_dim, m] {
+            buf.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        buf.push(flags);
+        let crc_pos = buf.len();
+        buf.extend_from_slice(&[0u8; 4]);
+        let idx_pos = buf.len();
+        buf.resize(idx_pos + 4 * m, 0);
+        let lp_pos = buf.len();
+        buf.extend_from_slice(&[0u8; 4]);
+        let pay_pos = buf.len();
+
+        let crcs = match compression {
+            Compression::None => {
+                let crcs = self.gather_rows_into(m, &mut buf);
+                copymeter::add(buf.len() - pay_pos);
+                crcs
+            }
+            Compression::Deflate => {
+                use flate2::write::DeflateEncoder;
+                use flate2::Compression as Level;
+                use std::io::Write as _;
+                let mut payload = Vec::with_capacity(self.payload_bytes(m));
+                let crcs = self.gather_rows_into(m, &mut payload);
+                copymeter::add(payload.len());
+                let mut enc = DeflateEncoder::new(buf, Level::fast());
+                enc.write_all(&payload).expect("in-memory deflate");
+                buf = enc.finish().expect("in-memory deflate");
+                crcs
+            }
+        };
+        for (t, c) in crcs.iter().enumerate() {
+            buf[idx_pos + 4 * t..idx_pos + 4 * t + 4].copy_from_slice(&c.to_le_bytes());
+        }
+        let body_len = buf.len() - pay_pos;
+        buf[lp_pos..lp_pos + 4].copy_from_slice(&(body_len as u32).to_le_bytes());
+        let mut crc = Crc32::new();
+        crc.update(&buf[idx_pos..idx_pos + 4 * m]);
+        crc.update(&buf[pay_pos..]);
+        let crc = crc.finalize();
+        buf[crc_pos..crc_pos + 4].copy_from_slice(&crc.to_le_bytes());
+        buf
     }
 
     /// Snapshot only the first `m` tokens of this state (m ≤ n_tokens).
@@ -128,51 +326,34 @@ impl KvState {
         model_hash: &str,
         compression: Compression,
     ) -> Vec<u8> {
-        assert!(m <= self.n_tokens, "prefix {m} > valid {}", self.n_tokens);
-        let mut clone = self.clone();
-        clone.n_tokens = m;
-        clone.serialize(model_hash, compression)
+        self.write_blob(m, model_hash, compression)
     }
 
     /// `llama_state_get_data()` analog: snapshot the valid prefix.
     pub fn serialize(&self, model_hash: &str, compression: Compression) -> Vec<u8> {
-        let mut payload = Vec::with_capacity(self.payload_bytes(self.n_tokens));
-        self.gather_valid(&self.k, &mut payload);
-        self.gather_valid(&self.v, &mut payload);
-
-        let (flags, body) = match compression {
-            Compression::None => (0u8, payload),
-            Compression::Deflate => {
-                use flate2::write::DeflateEncoder;
-                use flate2::Compression as Level;
-                use std::io::Write as _;
-                let mut enc = DeflateEncoder::new(
-                    Vec::with_capacity(payload.len() / 2),
-                    Level::fast(),
-                );
-                enc.write_all(&payload).expect("in-memory deflate");
-                (1u8, enc.finish().expect("in-memory deflate"))
-            }
-        };
-
-        let mut crc = Crc32::new();
-        crc.update(&body);
-
-        let mut w = Writer::with_capacity(body.len() + 64);
-        w.bytes(MAGIC);
-        w.lp_str(model_hash);
-        w.u32(self.n_layers as u32);
-        w.u32(self.max_seq as u32);
-        w.u32(self.n_kv_heads as u32);
-        w.u32(self.head_dim as u32);
-        w.u32(self.n_tokens as u32);
-        w.u8(flags);
-        w.u32(crc.finalize());
-        w.lp_bytes(&body);
-        w.into_vec()
+        self.write_blob(self.n_tokens, model_hash, compression)
     }
 
-    /// Parse and verify a blob header without restoring (cheap peek).
+    /// Like [`KvState::serialize`] but handing back a [`SharedBytes`] so the
+    /// blob can be sliced (header / row ranges) and queued on the wire
+    /// without further copies.
+    pub fn serialize_shared(&self, model_hash: &str, compression: Compression) -> SharedBytes {
+        SharedBytes::new(self.write_blob(self.n_tokens, model_hash, compression))
+    }
+
+    /// [`KvState::serialize_prefix`] into a [`SharedBytes`].
+    pub fn serialize_prefix_shared(
+        &self,
+        m: usize,
+        model_hash: &str,
+        compression: Compression,
+    ) -> SharedBytes {
+        SharedBytes::new(self.write_blob(m, model_hash, compression))
+    }
+
+    /// Parse and verify a blob header without restoring (cheap peek).  Works
+    /// on any prefix of the blob that covers the fixed header, so the
+    /// range-download path can validate a `GETRANGE` head slice.
     pub fn peek_header(blob: &[u8]) -> Result<StateHeader, StateError> {
         let mut r = Reader::new(blob);
         let magic = r.bytes(4).map_err(|e| StateError::Malformed(e.to_string()))?;
@@ -203,16 +384,14 @@ impl KvState {
         })
     }
 
-    /// `llama_state_set_data()` analog: verify + restore into a fresh state.
-    pub fn restore(
-        blob: &[u8],
+    fn check_identity(
+        hdr: &StateHeader,
         expect_model_hash: &str,
         expect_dims: (usize, usize, usize, usize),
-    ) -> Result<KvState, StateError> {
-        let hdr = Self::peek_header(blob)?;
+    ) -> Result<(), StateError> {
         if hdr.model_hash != expect_model_hash {
             return Err(StateError::ModelMismatch {
-                blob: hdr.model_hash,
+                blob: hdr.model_hash.clone(),
                 engine: expect_model_hash.to_string(),
             });
         }
@@ -226,8 +405,20 @@ impl KvState {
         if hdr.n_tokens > s {
             return Err(StateError::TooLong { n: hdr.n_tokens, cap: s });
         }
+        Ok(())
+    }
 
-        // re-walk the header to find the body
+    /// `llama_state_set_data()` analog: verify + restore into a fresh state.
+    pub fn restore(
+        blob: &[u8],
+        expect_model_hash: &str,
+        expect_dims: (usize, usize, usize, usize),
+    ) -> Result<KvState, StateError> {
+        let hdr = Self::peek_header(blob)?;
+        Self::check_identity(&hdr, expect_model_hash, expect_dims)?;
+        let (l, s, kh, d) = expect_dims;
+
+        // re-walk the header to find index and body
         let mut r = Reader::new(blob);
         r.bytes(4).unwrap();
         r.lp_bytes().unwrap();
@@ -236,6 +427,9 @@ impl KvState {
         }
         r.u8().unwrap();
         let crc_stored = r.u32().map_err(|e| StateError::Malformed(e.to_string()))?;
+        let index = r
+            .bytes(4 * hdr.n_tokens)
+            .map_err(|e| StateError::Malformed(e.to_string()))?;
         let body = r
             .lp_bytes()
             .map_err(|e| StateError::Malformed(e.to_string()))?;
@@ -243,44 +437,95 @@ impl KvState {
             return Err(StateError::Malformed("trailing bytes".into()));
         }
         let mut crc = Crc32::new();
+        crc.update(index);
         crc.update(body);
         if crc.finalize() != crc_stored {
             return Err(StateError::BadChecksum);
         }
 
-        let payload: Vec<u8> = if hdr.compressed {
+        let inflated;
+        let payload: &[u8] = if hdr.compressed {
             use flate2::read::DeflateDecoder;
             use std::io::Read as _;
             let mut out = Vec::new();
             DeflateDecoder::new(body)
                 .read_to_end(&mut out)
                 .map_err(|e| StateError::Malformed(format!("deflate: {e}")))?;
-            out
+            inflated = out;
+            &inflated
         } else {
-            body.to_vec()
+            body
         };
 
         let mut st = KvState::zeroed(l, s, kh, d);
         st.n_tokens = hdr.n_tokens;
-        let take = hdr.n_tokens * st.row_elems();
-        let expect_len = 2 * l * take * 4;
+        let expect_len = st.payload_bytes(hdr.n_tokens);
         if payload.len() != expect_len {
             return Err(StateError::Malformed(format!(
                 "payload {} bytes, expected {expect_len}",
                 payload.len()
             )));
         }
-        let le = st.layer_elems();
-        let floats = crate::util::bytes::bytes_to_f32(&payload);
-        for li in 0..l {
-            let src = &floats[li * take..(li + 1) * take];
-            st.k[li * le..li * le + take].copy_from_slice(src);
+        st.scatter_rows(payload, hdr.n_tokens);
+        Ok(st)
+    }
+
+    /// Restore the first `m` tokens from a *partially fetched* blob:
+    /// `head` is a byte prefix of the stored blob covering the fixed header
+    /// plus at least `m` row-index entries; `rows` is the payload slice for
+    /// token chunks `[0, m)` (`GETRANGE`-fetched).  Each chunk is verified
+    /// against its indexed crc32, so a truncated, stale or corrupted range
+    /// degrades to an error — never a poisoned cache.
+    pub fn restore_prefix_from_parts(
+        head: &[u8],
+        rows: &[u8],
+        m: usize,
+        expect_model_hash: &str,
+        expect_dims: (usize, usize, usize, usize),
+    ) -> Result<KvState, StateError> {
+        let hdr = Self::peek_header(head)?;
+        Self::check_identity(&hdr, expect_model_hash, expect_dims)?;
+        if hdr.compressed {
+            return Err(StateError::Malformed(
+                "compressed blob cannot be range-restored".into(),
+            ));
         }
-        let off = l * take;
-        for li in 0..l {
-            let src = &floats[off + li * take..off + (li + 1) * take];
-            st.v[li * le..li * le + take].copy_from_slice(src);
+        if hdr.n_tokens < m {
+            return Err(StateError::Malformed(format!(
+                "entry holds {} rows, need {m}",
+                hdr.n_tokens
+            )));
         }
+        let (l, s, kh, d) = expect_dims;
+        if m > s {
+            return Err(StateError::TooLong { n: m, cap: s });
+        }
+        let lo = BlobLayout::new(expect_model_hash, l, kh, d);
+        let idx_off = lo.index_off();
+        if head.len() < idx_off + 4 * m {
+            return Err(StateError::Malformed("row index truncated".into()));
+        }
+        let stride = lo.token_stride();
+        if rows.len() != m * stride {
+            return Err(StateError::Malformed(format!(
+                "row payload {} bytes, expected {}",
+                rows.len(),
+                m * stride
+            )));
+        }
+        for t in 0..m {
+            let want = u32::from_le_bytes(
+                head[idx_off + 4 * t..idx_off + 4 * t + 4].try_into().unwrap(),
+            );
+            let mut c = Crc32::new();
+            c.update(&rows[t * stride..(t + 1) * stride]);
+            if c.finalize() != want {
+                return Err(StateError::BadChecksum);
+            }
+        }
+        let mut st = KvState::zeroed(l, s, kh, d);
+        st.n_tokens = m;
+        st.scatter_rows(rows, m);
         Ok(st)
     }
 }
@@ -340,6 +585,88 @@ mod tests {
     }
 
     #[test]
+    fn blob_layout_matches_serialized_bytes() {
+        let st = filled(2, 16, 2, 8, 7, 9);
+        let blob = st.serialize("hash!", Compression::None);
+        let lo = BlobLayout::new("hash!", 2, 2, 8);
+        assert_eq!(blob.len(), lo.blob_len(7));
+        assert_eq!(lo.token_stride(), 2 * 2 * 2 * 8 * 4);
+        // the token-major property: the payload of a shorter prefix blob is
+        // a byte-prefix of the longer blob's payload
+        let blob3 = st.serialize_prefix(3, "hash!", Compression::None);
+        assert_eq!(
+            &blob3[lo.payload_off(3)..],
+            &blob[lo.payload_off(7)..lo.payload_off(7) + 3 * lo.token_stride()]
+        );
+    }
+
+    #[test]
+    fn restore_prefix_from_parts_matches_truncated_blob() {
+        let st = filled(3, 16, 1, 8, 10, 11);
+        let blob = st.serialize("h", Compression::None);
+        let lo = BlobLayout::new("h", 3, 1, 8);
+        for m in [1usize, 4, 10] {
+            let head = &blob[..lo.index_off() + 4 * m];
+            let rows =
+                &blob[lo.payload_off(10)..lo.payload_off(10) + m * lo.token_stride()];
+            let part =
+                KvState::restore_prefix_from_parts(head, rows, m, "h", (3, 16, 1, 8)).unwrap();
+            let trunc = KvState::restore(
+                &st.serialize_prefix(m, "h", Compression::None),
+                "h",
+                (3, 16, 1, 8),
+            )
+            .unwrap();
+            assert_eq!(part, trunc, "m={m}");
+        }
+    }
+
+    #[test]
+    fn restore_prefix_rejects_corrupt_rows() {
+        let st = filled(2, 8, 1, 4, 6, 13);
+        let blob = st.serialize("h", Compression::None);
+        let lo = BlobLayout::new("h", 2, 1, 4);
+        let m = 4;
+        let head = &blob[..lo.index_off() + 4 * m];
+        let mut rows =
+            blob[lo.payload_off(6)..lo.payload_off(6) + m * lo.token_stride()].to_vec();
+        rows[7] ^= 0x10;
+        assert_eq!(
+            KvState::restore_prefix_from_parts(head, &rows, m, "h", (2, 8, 1, 4)).unwrap_err(),
+            StateError::BadChecksum
+        );
+        // wrong payload length is malformed, not a panic
+        assert!(matches!(
+            KvState::restore_prefix_from_parts(head, &rows[..8], m, "h", (2, 8, 1, 4))
+                .unwrap_err(),
+            StateError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn range_alias_roundtrip_and_tamper() {
+        let enc = encode_range_alias(b"state:deadbeef", 42, false);
+        assert_eq!(
+            decode_range_alias(&enc),
+            Some((b"state:deadbeef".to_vec(), 42, false))
+        );
+        let enc_c = encode_range_alias(b"k", 7, true);
+        assert_eq!(decode_range_alias(&enc_c), Some((b"k".to_vec(), 7, true)));
+        // any flipped byte kills the alias instead of redirecting it
+        for i in 0..enc.len() {
+            let mut bad = enc.clone();
+            bad[i] ^= 0x01;
+            assert_eq!(decode_range_alias(&bad), None, "flip at {i}");
+        }
+        // a state blob is not an alias
+        let st = filled(1, 8, 1, 4, 2, 5);
+        assert_eq!(
+            decode_range_alias(&st.serialize("h", Compression::None)),
+            None
+        );
+    }
+
+    #[test]
     fn model_hash_mismatch_rejected() {
         let st = filled(2, 16, 2, 8, 3, 4);
         let blob = st.serialize("modelA", Compression::None);
@@ -361,7 +688,7 @@ mod tests {
     fn corruption_detected() {
         let st = filled(2, 16, 2, 8, 4, 6);
         let mut blob = st.serialize("h", Compression::None);
-        // flip a payload byte (past the ~64-byte header)
+        // flip a payload byte (past the header + row index)
         let idx = blob.len() - 10;
         blob[idx] ^= 0x40;
         assert_eq!(
@@ -425,5 +752,26 @@ mod tests {
         let plain = st.serialize("h", Compression::None).len();
         let packed = st.serialize("h", Compression::Deflate).len();
         assert!(packed < plain / 4, "{packed} vs {plain}");
+    }
+
+    #[test]
+    fn serialize_shared_slices_without_copy() {
+        let st = filled(2, 16, 1, 8, 6, 21);
+        let shared = st.serialize_shared("h", Compression::None);
+        let lo = BlobLayout::new("h", 2, 1, 8);
+        let head = shared.slice(0..lo.payload_off(6));
+        let rows = shared.slice(lo.payload_off(6)..shared.len());
+        assert_eq!(head.backing_len(), shared.len(), "same backing allocation");
+        assert_eq!(rows.len(), 6 * lo.token_stride());
+        let part = KvState::restore_prefix_from_parts(
+            &head,
+            &rows,
+            6,
+            "h",
+            (2, 16, 1, 8),
+        )
+        .unwrap();
+        assert_eq!(part.n_tokens, 6);
+        assert_eq!(part.k, st.k);
     }
 }

@@ -1,6 +1,227 @@
-//! Little-endian byte cursors for the state-blob and wire formats.
+//! Little-endian byte cursors for the state-blob and wire formats, plus
+//! [`SharedBytes`] — the reference-counted buffer view the whole blob
+//! pipeline is built on.
+//!
+//! `SharedBytes` is an `Arc<Vec<u8>>` together with an `(offset, len)`
+//! window.  Cloning and [`SharedBytes::slice`] are O(1) refcount bumps, so
+//! one allocation can travel from `KvState::serialize` through the RESP
+//! encoder, the server's read buffer, the [`Store`](crate::kvstore::Store)
+//! and back out of a `GETRANGE` reply without the payload ever being
+//! memcpy'd into a fresh allocation.  The [`copymeter`] module counts the
+//! payload-sized copies that *do* still happen (wire writes, the final
+//! scatter into a live KV cache) so the `substrate_micro` bench can track
+//! the copy budget per serialize→restore round trip.
+
+use std::ops::Range;
+use std::sync::Arc;
 
 use thiserror::Error;
+
+/// Process-wide accounting of payload bytes copied into fresh allocations
+/// on the blob pipeline (diagnostic only; relaxed atomics).
+pub mod copymeter {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static BYTES: AtomicU64 = AtomicU64::new(0);
+
+    pub fn add(n: usize) {
+        BYTES.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn reset() {
+        BYTES.store(0, Ordering::Relaxed);
+    }
+
+    pub fn get() -> u64 {
+        BYTES.load(Ordering::Relaxed)
+    }
+}
+
+/// Cheaply clonable, sliceable view into a shared byte buffer.
+#[derive(Clone, Default)]
+pub struct SharedBytes {
+    data: Arc<Vec<u8>>,
+    off: usize,
+    len: usize,
+}
+
+impl SharedBytes {
+    /// Wrap an owned buffer without copying.
+    pub fn new(v: Vec<u8>) -> Self {
+        let len = v.len();
+        SharedBytes { data: Arc::new(v), off: 0, len }
+    }
+
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Copying constructor (counted by [`copymeter`]).
+    pub fn copy_from(b: &[u8]) -> Self {
+        copymeter::add(b.len());
+        Self::new(b.to_vec())
+    }
+
+    /// View `[off, off+len)` of an existing shared allocation.
+    pub fn from_arc_slice(data: Arc<Vec<u8>>, off: usize, len: usize) -> Self {
+        assert!(
+            off + len <= data.len(),
+            "slice [{off}, {}) out of bounds of backing {}",
+            off + len,
+            data.len()
+        );
+        SharedBytes { data, off, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data[self.off..self.off + self.len]
+    }
+
+    /// O(1) subview sharing the same backing allocation.
+    pub fn slice(&self, r: Range<usize>) -> SharedBytes {
+        assert!(
+            r.start <= r.end && r.end <= self.len,
+            "slice {}..{} out of view of length {}",
+            r.start,
+            r.end,
+            self.len
+        );
+        SharedBytes {
+            data: Arc::clone(&self.data),
+            off: self.off + r.start,
+            len: r.end - r.start,
+        }
+    }
+
+    /// Size of the backing allocation (≥ `len`); the difference is memory
+    /// this view pins but does not use.
+    pub fn backing_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Copy out to an owned `Vec` (counted).
+    pub fn to_vec(&self) -> Vec<u8> {
+        copymeter::add(self.len);
+        self.as_slice().to_vec()
+    }
+
+    /// Unwrap to an owned `Vec`, avoiding the copy when this view is the
+    /// sole whole-buffer owner.
+    pub fn into_vec(self) -> Vec<u8> {
+        if self.off == 0 && self.len == self.data.len() {
+            match Arc::try_unwrap(self.data) {
+                Ok(v) => return v,
+                Err(data) => {
+                    copymeter::add(data.len());
+                    return data.as_slice().to_vec();
+                }
+            }
+        }
+        self.to_vec()
+    }
+
+    /// Re-home a view that pins a much larger backing allocation (e.g. one
+    /// bulk payload sliced out of a pipelined read buffer).  Keeping such a
+    /// view alive — say as an LRU [`Store`](crate::kvstore::Store) entry —
+    /// would make the byte accounting lie about real memory use, so callers
+    /// that retain buffers long-term compact loose views into tight copies.
+    /// A kept view pins at most `1.5 × len` (plus a 4 KB floor so tiny
+    /// values off a read buffer don't each trigger a copy).
+    pub fn detach_loose(self) -> SharedBytes {
+        let waste = self.data.len() - self.len;
+        if waste > 4096 && waste > self.len / 2 {
+            SharedBytes::copy_from(self.as_slice())
+        } else {
+            self
+        }
+    }
+}
+
+impl std::ops::Deref for SharedBytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for SharedBytes {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for SharedBytes {
+    fn from(v: Vec<u8>) -> Self {
+        Self::new(v)
+    }
+}
+
+impl From<&[u8]> for SharedBytes {
+    fn from(b: &[u8]) -> Self {
+        Self::copy_from(b)
+    }
+}
+
+impl std::fmt::Debug for SharedBytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.len <= 32 {
+            write!(f, "SharedBytes({:?})", self.as_slice())
+        } else {
+            write!(
+                f,
+                "SharedBytes({} bytes, {:?}…)",
+                self.len,
+                &self.as_slice()[..16]
+            )
+        }
+    }
+}
+
+impl PartialEq for SharedBytes {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for SharedBytes {}
+
+impl PartialEq<[u8]> for SharedBytes {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<&[u8]> for SharedBytes {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl PartialEq<Vec<u8>> for SharedBytes {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<const N: usize> PartialEq<[u8; N]> for SharedBytes {
+    fn eq(&self, other: &[u8; N]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl<const N: usize> PartialEq<&[u8; N]> for SharedBytes {
+    fn eq(&self, other: &&[u8; N]) -> bool {
+        self.as_slice() == *other
+    }
+}
 
 #[derive(Debug, Error)]
 pub enum ByteError {
@@ -141,6 +362,11 @@ pub fn f32_as_bytes(v: &[f32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 
+/// Mutable byte view of an f32 slice (LE hosts; the scatter fast path).
+pub fn f32_as_bytes_mut(v: &mut [f32]) -> &mut [u8] {
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 4) }
+}
+
 /// Copy bytes into an f32 vec (handles arbitrary alignment).
 pub fn bytes_to_f32(b: &[u8]) -> Vec<f32> {
     assert!(b.len() % 4 == 0, "byte length {} not a multiple of 4", b.len());
@@ -197,11 +423,88 @@ mod tests {
     }
 
     #[test]
+    fn f32_mut_view_roundtrip() {
+        let mut xs = vec![0f32; 4];
+        let src = [1.0f32, -2.5, 3.25, 0.0];
+        f32_as_bytes_mut(&mut xs).copy_from_slice(f32_as_bytes(&src));
+        assert_eq!(xs, src);
+    }
+
+    #[test]
     fn truncated_lp_string_fails() {
         let mut w = Writer::new();
         w.u32(100); // claims 100 bytes, provides none
         let buf = w.into_vec();
         let mut r = Reader::new(&buf);
         assert!(r.lp_bytes().is_err());
+    }
+
+    #[test]
+    fn shared_bytes_slice_is_zero_copy() {
+        let sb = SharedBytes::new((0u8..100).collect());
+        let a = sb.slice(10..20);
+        let b = a.slice(2..5);
+        assert_eq!(a, (10u8..20).collect::<Vec<u8>>());
+        assert_eq!(b, &[12u8, 13, 14][..]);
+        assert_eq!(b.backing_len(), 100);
+        // clones share the backing allocation
+        let c = sb.clone();
+        assert_eq!(c, sb);
+        assert_eq!(c.backing_len(), 100);
+    }
+
+    #[test]
+    fn shared_bytes_into_vec_roundtrips() {
+        let v: Vec<u8> = (0u8..50).collect();
+        let sb = SharedBytes::new(v.clone());
+        assert_eq!(sb.into_vec(), v);
+        // a shared view still produces the right bytes (via a copy)
+        let sb = SharedBytes::new(v.clone());
+        let keep = sb.clone();
+        assert_eq!(sb.into_vec(), v);
+        assert_eq!(keep, v);
+        // and a subview copies just the window
+        assert_eq!(keep.slice(10..20).into_vec(), (10u8..20).collect::<Vec<u8>>());
+    }
+
+    #[test]
+    fn shared_bytes_detach_loose_compacts_big_waste() {
+        let big = SharedBytes::new(vec![7u8; 1 << 20]);
+        let loose = big.slice(0..100);
+        let tight = loose.detach_loose();
+        assert_eq!(tight, vec![7u8; 100]);
+        assert_eq!(tight.backing_len(), 100, "loose view must re-home");
+        // nearly-full views are left alone
+        let snug = big.slice(0..(1 << 20) - 16);
+        assert_eq!(snug.clone().detach_loose().backing_len(), 1 << 20);
+        // a view pinning more than ~1.5x its own size is re-homed — the
+        // two-blobs-in-one-read-buffer case must not undercount memory
+        let majority = big.slice(0..600_000);
+        assert_eq!(majority.detach_loose().backing_len(), 600_000);
+    }
+
+    #[test]
+    fn shared_bytes_eq_across_types() {
+        let sb = SharedBytes::copy_from(b"hello");
+        assert_eq!(sb, b"hello");
+        assert_eq!(sb, *b"hello");
+        assert_eq!(sb, &b"hello"[..]);
+        assert_eq!(sb, b"hello".to_vec());
+        assert!(sb != SharedBytes::empty());
+        assert!(SharedBytes::empty().is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shared_bytes_slice_out_of_bounds_panics() {
+        SharedBytes::new(vec![1, 2, 3]).slice(1..5);
+    }
+
+    #[test]
+    fn copymeter_counts_explicit_copies() {
+        copymeter::reset();
+        let sb = SharedBytes::copy_from(&[0u8; 128]);
+        let _ = sb.to_vec();
+        assert!(copymeter::get() >= 256);
     }
 }

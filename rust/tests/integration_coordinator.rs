@@ -198,6 +198,73 @@ fn min_hit_tokens_suppresses_short_fetches() {
 }
 
 #[test]
+fn delta_upload_and_range_download_shrink_wire_bytes() {
+    // The zero-copy/suffix-delta acceptance: a miss publishes ~one blob
+    // (plus tiny aliases) instead of one full nested blob per range, and a
+    // partial match downloads only the matched token rows plus the blob
+    // head — both visibly smaller than the full-blob-per-range pipeline.
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    let mut c = EdgeClient::new(Arc::clone(&eng), cfg("delta", Some(cb.addr()))).unwrap();
+    let gen = Generator::new(23);
+    let p0 = gen.prompt("astronomy", 0, 2);
+    let p1 = gen.prompt("astronomy", 1, 2); // shares instruction + examples
+
+    let mcfg = &eng.model.config;
+    let lo = edgecache::model::state::BlobLayout::new(
+        eng.model_hash(),
+        mcfg.n_layers,
+        mcfg.n_kv_heads,
+        mcfg.head_dim,
+    );
+
+    let r0 = c.query(&p0).unwrap();
+    assert_eq!(r0.case, HitCase::Miss);
+    let one_blob = lo.blob_len(r0.prompt_tokens);
+    assert!(r0.uploaded_bytes > 0);
+    assert!(
+        r0.uploaded_bytes < one_blob + one_blob / 4,
+        "miss upload must ship ~one blob + aliases, not nested blobs: {} vs {}",
+        r0.uploaded_bytes,
+        one_blob
+    );
+    assert!(r0.saved_bytes > 0, "alias scheme must beat the per-range model");
+
+    let r1 = c.query(&p1).unwrap();
+    assert_eq!(r1.case, HitCase::AllExamples);
+    assert!(r1.matched_tokens > 0 && r1.matched_tokens < r1.prompt_tokens);
+    // download: alias + head/index + matched rows only — strictly less than
+    // the stored full-prompt entry it resolves into
+    assert!(r1.downloaded_bytes > 0);
+    assert!(
+        r1.downloaded_bytes < lo.blob_len(r0.prompt_tokens),
+        "partial match must not move the whole entry: {} vs {}",
+        r1.downloaded_bytes,
+        lo.blob_len(r0.prompt_tokens)
+    );
+    assert!(r1.downloaded_bytes >= r1.matched_tokens * lo.token_stride());
+    // upload: only the suffix rows past the matched prefix (via SPLICE)
+    let suffix_rows = r1.prompt_tokens - r1.matched_tokens;
+    assert!(r1.uploaded_bytes > 0);
+    assert!(
+        r1.uploaded_bytes < lo.blob_len(r1.prompt_tokens),
+        "delta upload must beat a full blob: {} vs {}",
+        r1.uploaded_bytes,
+        lo.blob_len(r1.prompt_tokens)
+    );
+    assert!(r1.uploaded_bytes >= suffix_rows * lo.token_stride());
+    assert!(r1.saved_bytes > 0);
+
+    // the spliced entry is complete: an exact repeat of p1 is a full hit
+    // that reproduces the same response
+    let r2 = c.query(&p1).unwrap();
+    assert_eq!(r2.case, HitCase::Full);
+    assert_eq!(r1.response_tokens, r2.response_tokens);
+    c.shutdown();
+    cb.shutdown();
+}
+
+#[test]
 fn upload_dedup_across_queries() {
     let Some(eng) = engine() else { return };
     let cb = CacheBox::start_local().unwrap();

@@ -4,6 +4,7 @@ use std::sync::Arc;
 use std::thread;
 
 use edgecache::kvstore::{KvClient, KvServer};
+use edgecache::util::bytes::SharedBytes;
 
 fn spawn_server(max_bytes: usize) -> edgecache::kvstore::ServerHandle {
     KvServer::new(max_bytes).serve("127.0.0.1:0").unwrap()
@@ -114,6 +115,85 @@ fn catalog_registration_is_concurrent_safe() {
     // every registered key is present exactly once
     let set: std::collections::HashSet<_> = keys.iter().collect();
     assert_eq!(set.len(), 400);
+    h.shutdown();
+}
+
+#[test]
+fn getrange_windows_reassemble_the_entry() {
+    let h = spawn_server(usize::MAX);
+    let mut c = KvClient::connect(&h.addr_string()).unwrap();
+    let blob: Vec<u8> = (0u32..250_000).map(|i| (i % 241) as u8).collect();
+    c.set_shared(b"entry", SharedBytes::new(blob.clone())).unwrap();
+
+    // fetch in uneven windows and reassemble byte-perfectly
+    let mut rebuilt = Vec::new();
+    let mut at = 0usize;
+    for win in [1usize, 17, 4096, 100_000, 400_000] {
+        let part = c.getrange(b"entry", at, win).unwrap().unwrap();
+        rebuilt.extend_from_slice(&part);
+        at += part.len();
+        if part.len() < win {
+            break; // clamped at the end of the value
+        }
+    }
+    assert_eq!(rebuilt, blob);
+    assert_eq!(c.getrange(b"entry", blob.len() + 10, 4).unwrap().unwrap().len(), 0);
+    assert_eq!(c.getrange(b"missing", 0, 4).unwrap(), None);
+    h.shutdown();
+}
+
+#[test]
+fn splice_accounting_stays_exact_under_eviction() {
+    // delta uploads (SPLICE-assembled entries) must respect the byte budget
+    // with exact entry_cost accounting, and evict LRU like any SET
+    let server = KvServer::new(10_000);
+    let h = server.serve("127.0.0.1:0").unwrap();
+    let mut c = KvClient::connect(&h.addr_string()).unwrap();
+
+    let base = vec![0xABu8; 3000];
+    c.set_shared(b"base", SharedBytes::new(base)).unwrap();
+    // each spliced entry: 100-byte head + 2000 base bytes + 100-byte tail
+    for i in 0..5 {
+        let n = c
+            .splice(
+                format!("d{i}").as_bytes(),
+                b"base",
+                500,
+                2500,
+                SharedBytes::new(vec![b'h'; 100]),
+                SharedBytes::new(vec![b't'; 100]),
+            )
+            .unwrap();
+        assert_eq!(n, 2200);
+    }
+    // ground truth: used_bytes equals the sum of key + value lengths
+    {
+        let store = server.store.lock().unwrap();
+        let truth: usize = store
+            .keys()
+            .map(|k| k.len() + store.strlen(k).unwrap())
+            .sum();
+        assert_eq!(truth, store.used_bytes(), "entry_cost must stay exact");
+        assert!(store.used_bytes() <= 10_000, "budget holds after splices");
+        assert!(store.evictions > 0, "5 x 2.2KB entries + base exceed 10KB");
+    }
+    // a splice result is a first-class entry: readable and evictable
+    let alive: Vec<String> = (0..5)
+        .filter(|i| {
+            server
+                .store
+                .lock()
+                .unwrap()
+                .contains(format!("d{i}").as_bytes())
+        })
+        .map(|i| format!("d{i}"))
+        .collect();
+    assert!(!alive.is_empty());
+    let got = c.get(alive[0].as_bytes()).unwrap().unwrap();
+    assert_eq!(got.len(), 2200);
+    assert_eq!(&got[..100], &[b'h'; 100][..]);
+    assert_eq!(&got[100..2100], &vec![0xABu8; 2000][..]);
+    assert_eq!(&got[2100..], &[b't'; 100][..]);
     h.shutdown();
 }
 

@@ -4,7 +4,7 @@
 use edgecache::catalog::{range_key, ranges_for, LocalCatalog, Lookup, ModelMeta};
 use edgecache::devicemodel::DeviceProfile;
 use edgecache::kvstore::resp::{Decoder, Value};
-use edgecache::model::state::{Compression, KvState};
+use edgecache::model::state::{BlobLayout, Compression, KvState};
 use edgecache::netsim::LinkModel;
 use edgecache::tokenizer::Tokenizer;
 use edgecache::util::prop::{run_prop_n, Gen};
@@ -128,6 +128,53 @@ fn prop_state_roundtrip_any_geometry() {
     });
 }
 
+/// Range transfer: a prefix assembled from `GETRANGE`-style byte windows of
+/// a long blob restores to exactly the same state as a full blob truncated
+/// at that prefix — the invariant the alias/partial-download path rides on.
+#[test]
+fn prop_range_assembly_matches_full_blob_truncation() {
+    run_prop_n("range-assembly-prefix", 60, |g: &mut Gen| {
+        let l = g.usize_in(1, 4);
+        let s = g.usize_in(2, 32);
+        let kh = g.usize_in(1, 3);
+        let d = 4 * g.usize_in(1, 4);
+        let n = g.usize_in(1, s);
+        let mut st = KvState::zeroed(l, s, kh, d);
+        st.n_tokens = n;
+        for i in 0..st.k.len() {
+            if g.rng.chance(0.3) {
+                st.k[i] = (g.rng.f64() - 0.5) as f32;
+                st.v[i] = (g.rng.f64() * 2.0) as f32;
+            }
+        }
+        let hash = "ph";
+        let blob = st.serialize(hash, Compression::None);
+        let lo = BlobLayout::new(hash, l, kh, d);
+        assert_eq!(blob.len(), lo.blob_len(n), "layout arithmetic matches bytes");
+        let m = g.usize_in(1, n);
+        let stride = lo.token_stride();
+
+        // the byte windows the client would GETRANGE
+        let head = &blob[..lo.index_off() + 4 * m];
+        let rows = &blob[lo.payload_off(n)..lo.payload_off(n) + m * stride];
+
+        let assembled =
+            KvState::restore_prefix_from_parts(head, rows, m, hash, (l, s, kh, d)).unwrap();
+        let truncated = KvState::restore(
+            &st.serialize_prefix(m, hash, Compression::None),
+            hash,
+            (l, s, kh, d),
+        )
+        .unwrap();
+        assert_eq!(assembled, truncated, "l={l} s={s} kh={kh} d={d} n={n} m={m}");
+
+        // token-major property: the short blob's payload is byte-identical
+        // to the long blob's payload prefix
+        let short = st.serialize_prefix(m, hash, Compression::None);
+        assert_eq!(&short[lo.payload_off(m)..], rows);
+    });
+}
+
 /// State blobs: any single bit flip in the body is detected.
 #[test]
 fn prop_state_bitflip_detected() {
@@ -163,7 +210,7 @@ fn prop_resp_roundtrip_fragmented() {
             1 => Value::Int(g.rng.next_u64() as i64),
             2 => {
                 let n = g.usize_in(0, 200);
-                Value::Bulk(g.bytes(n))
+                Value::bulk(g.bytes(n))
             }
             3 => Value::Nil,
             4 => Value::Error(format!("ERR {}", g.ascii_string(5))),

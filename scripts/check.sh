@@ -1,0 +1,22 @@
+#!/usr/bin/env sh
+# Mechanical gate for the rust/ crate: build, test, lint.  Run before every
+# PR — the hot-path refactors (zero-copy blob pipeline, range transfers)
+# regress silently without it.
+#
+# Usage: scripts/check.sh [--no-clippy]
+set -eu
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [ "${1:-}" != "--no-clippy" ]; then
+    echo "== cargo clippy -- -D warnings =="
+    cargo clippy -- -D warnings
+fi
+
+echo "check: OK"
