@@ -9,6 +9,16 @@ check:
 test:
     sh scripts/check.sh --no-clippy
 
+# unit + property tests only — the fast inner loop (no engine-backed
+# integration suites, no clippy)
+test-fast:
+    cd rust && cargo test -q --lib && cargo test -q --test prop_invariants
+
+# the failure-injection suite on its own (corrupt/truncated chunks, stale
+# alias geometry, dead-server degradation)
+test-failures:
+    cd rust && cargo test -q --test integration_failures
+
 # regenerate the paper-table benches (release mode)
 bench:
     cd rust && cargo bench --bench substrate_micro && cargo bench --bench table3_breakdown

@@ -62,6 +62,7 @@ fn main() -> anyhow::Result<()> {
         device: if paced { DeviceProfile::pi_zero_2w() } else { DeviceProfile::host() },
         max_new_tokens: Some(if paced { 4 } else { 8 }),
         compression: edgecache::model::state::Compression::None,
+        chunk_tokens: edgecache::model::state::DEFAULT_CHUNK_TOKENS,
         partial_matching: true,
         use_catalog: true,
         fetch_policy: edgecache::coordinator::FetchPolicy::Always,

@@ -123,8 +123,8 @@ fn main() {
     // --------------------------------------------------- zero-copy pipeline
     report.section("blob pipeline (serialize → wire → store → restore)");
     {
-        use edgecache::model::state::BlobLayout;
-        use edgecache::util::bytes::copymeter;
+        use edgecache::model::state::{read_chunk_index, BlobLayout};
+        use edgecache::util::bytes::{copymeter, SharedBytes};
         use edgecache::util::json::Json;
 
         let dims = (6, 768, 1, 80);
@@ -155,23 +155,27 @@ fn main() {
             reduction
         ));
 
-        // range path: fetch only the first half of the token rows
+        // range path: fetch only the first half of the token rows — the
+        // head (header + chunk index), then the whole chunks covering them
         let m = st.n_tokens / 2;
+        let total = st.n_tokens;
         let stride = lo.token_stride();
+        let head_len = lo.payload_off(total);
+        let fetch_rows = lo.prefix_rows(m, total);
         let head = client
-            .getrange(b"pipe", 0, lo.index_off() + 4 * m)
+            .getrange(b"pipe", 0, head_len)
             .expect("head")
             .expect("present");
         let rows = client
-            .getrange(b"pipe", lo.payload_off(st.n_tokens), m * stride)
+            .getrange(b"pipe", head_len, fetch_rows * stride)
             .expect("rows")
             .expect("present");
         let part = KvState::restore_prefix_from_parts(&head, &rows, m, "h", dims).unwrap();
         assert_eq!(part.n_tokens, m);
         let partial_bytes = head.len() + rows.len();
         report.note(format!(
-            "partial fetch ({m}/{} rows): {} KB over the wire vs {} KB full blob",
-            st.n_tokens,
+            "partial fetch ({m}/{total} rows, ct={}): {} KB over the wire vs {} KB full blob",
+            lo.chunk_tokens,
             partial_bytes / 1024,
             shared.len() / 1024
         ));
@@ -189,14 +193,40 @@ fn main() {
             Bench::new(format!("GETRANGE {m}-row prefix + assemble"))
                 .throughput_bytes(partial_bytes as u64)
                 .run(|| {
-                    let h = client
-                        .getrange(b"pipe", 0, lo.index_off() + 4 * m)
-                        .unwrap()
-                        .unwrap();
+                    let h = client.getrange(b"pipe", 0, head_len).unwrap().unwrap();
                     let r = client
-                        .getrange(b"pipe", lo.payload_off(st.n_tokens), m * stride)
+                        .getrange(b"pipe", head_len, fetch_rows * stride)
                         .unwrap()
                         .unwrap();
+                    KvState::restore_prefix_from_parts(&h, &r, m, "h", dims).unwrap()
+                }),
+        );
+
+        // chunk-compressed range path (ECS3 deflate): the partial fetch
+        // moves only the matched chunks' *compressed* bytes — the path the
+        // old pipeline served with a full-blob download
+        let packed_shared = SharedBytes::new(st.serialize("h", Compression::Deflate));
+        client.set_shared(b"pipe-z", packed_shared.clone()).expect("set");
+        let zhead = client.getrange(b"pipe-z", 0, head_len).unwrap().unwrap();
+        let (zct, zentries) = read_chunk_index(&zhead).expect("v3 head");
+        let zk = lo.prefix_chunks(m);
+        let zspan: usize = zentries.iter().take(zk).map(|e| e.len as usize).sum();
+        let zrows = client.getrange(b"pipe-z", head_len, zspan).unwrap().unwrap();
+        let zpart = KvState::restore_prefix_from_parts(&zhead, &zrows, m, "h", dims).unwrap();
+        assert_eq!(zpart.n_tokens, m);
+        let z_partial = zhead.len() + zrows.len();
+        report.note(format!(
+            "deflate partial fetch ({m}/{total} rows, ct={zct}): {} KB vs {} KB deflated entry ({} KB raw)",
+            z_partial / 1024,
+            packed_shared.len() / 1024,
+            shared.len() / 1024
+        ));
+        report.push(
+            Bench::new(format!("GETRANGE {m}-row deflated chunks + assemble"))
+                .throughput_bytes(z_partial as u64)
+                .run(|| {
+                    let h = client.getrange(b"pipe-z", 0, head_len).unwrap().unwrap();
+                    let r = client.getrange(b"pipe-z", head_len, zspan).unwrap().unwrap();
                     KvState::restore_prefix_from_parts(&h, &r, m, "h", dims).unwrap()
                 }),
         );
@@ -209,8 +239,11 @@ fn main() {
             ("copy_reduction_x", Json::Num(reduction)),
             ("partial_rows", Json::Int(m as i64)),
             ("total_rows", Json::Int(st.n_tokens as i64)),
+            ("chunk_tokens", Json::Int(lo.chunk_tokens as i64)),
             ("partial_fetch_bytes", Json::Int(partial_bytes as i64)),
             ("full_fetch_bytes", Json::Int(shared.len() as i64)),
+            ("deflate_entry_bytes", Json::Int(packed_shared.len() as i64)),
+            ("deflate_partial_fetch_bytes", Json::Int(z_partial as i64)),
         ]);
         let path = std::env::var("EDGECACHE_BLOB_PIPELINE_JSON")
             .unwrap_or_else(|_| "BENCH_blob_pipeline.json".into());

@@ -85,6 +85,13 @@ fn main() {
     let mut cfg = EdgeClientConfig::native(Some(cb.addr()));
     cfg.max_new_tokens = Some(2);
     cfg.sync_interval = None;
+    // EDGECACHE_COMPRESS=1 runs the real track over chunk-compressed (ECS3
+    // deflate) entries — partial matches still ride the range path
+    let compress = std::env::var("EDGECACHE_COMPRESS").as_deref() == Ok("1");
+    if compress {
+        cfg.compression = edgecache::model::state::Compression::Deflate;
+        println!("(compression: ECS3 deflate, chunk_tokens={})\n", cfg.chunk_tokens);
+    }
     let mut client = EdgeClient::new(Arc::clone(&engine), cfg).expect("client");
 
     let gen = Generator::new(seed);
@@ -145,6 +152,14 @@ fn main() {
             &["Query", "# matched", "% matched", "T-decode [ms]", "Redis [ms]"],
             &body
         )
+    );
+    println!(
+        "wire ledger: {:.2} MB moved ({:.2} MB logical), {} range fetches, {} full-blob fallbacks, {:.2} MB saved vs per-range blobs",
+        client.link_moved_bytes() as f64 / 1e6,
+        client.link_inflated_bytes() as f64 / 1e6,
+        client.stats.range_fetches,
+        client.stats.full_fetch_fallbacks,
+        client.stats.bytes_saved as f64 / 1e6
     );
     client.shutdown();
     cb.shutdown();

@@ -14,13 +14,16 @@
 //!
 //! * *Download*: a prompt's shorter catalog ranges are stored as tiny
 //!   aliases pointing into the one real blob.  A partial match resolves the
-//!   alias, then fetches — in a single pipelined round trip — just the blob
-//!   header+row-index prefix and the `matched` token rows via `GETRANGE`,
-//!   instead of a dedicated full blob per range.
+//!   alias, then `GETRANGE`s just the blob head (header + chunk index) and
+//!   the whole ECS3 chunks covering the matched rows — one pipelined round
+//!   trip for raw bodies, head-then-chunks for deflated ones — instead of a
+//!   dedicated full blob per range.  Any range-path verification failure
+//!   falls back to a full-blob download, never to a questionable restore.
 //! * *Upload*: one blob (the longest new range) is published per prompt;
 //!   shorter ranges become aliases.  When the query downloaded a state, the
-//!   upload ships only the *suffix* rows past the matched prefix and has
-//!   the server `SPLICE` them onto the prefix bytes it already holds.
+//!   upload ships only the chunks past the matched prefix and has the
+//!   server `SPLICE` them onto the base chunks it already holds — deflated
+//!   bases included, since every chunk is an independent stream.
 //!
 //! Latency attribution follows Table 3 exactly; uploads happen off the
 //! latency path (the paper's Case-1 Redis column shows only false-positive
@@ -46,7 +49,8 @@ use crate::log_debug;
 use crate::metrics::{Phase, PhaseBreakdown};
 use crate::model::sampler::Sampler;
 use crate::model::state::{
-    decode_range_alias, encode_range_alias, BlobLayout, Compression, KvState,
+    decode_range_alias, encode_range_alias, read_chunk_index, BlobLayout, ChunkEntry,
+    Compression, KvState, DEFAULT_CHUNK_TOKENS,
 };
 use crate::netsim::{LinkModel, Shaper};
 use crate::util::bytes::SharedBytes;
@@ -91,6 +95,10 @@ pub struct EdgeClientConfig {
     /// length (64 for the low-end 270M setting, 1 for the high-end 1B).
     pub max_new_tokens: Option<usize>,
     pub compression: Compression,
+    /// Tokens per ECS3 chunk in uploaded state blobs.  Chunks are the unit
+    /// of (per-chunk) compression, crc verification and range transfer —
+    /// see `model::state`.  Must be ≥ 1.
+    pub chunk_tokens: usize,
     /// Register/look up the four Figure-3 prefix ranges (§3.2).  When false
     /// only the full prompt is cached (prefix-caching ablation).
     pub partial_matching: bool,
@@ -116,6 +124,7 @@ impl EdgeClientConfig {
             device: DeviceProfile::pi_zero_2w(),
             max_new_tokens: None,
             compression: Compression::None,
+            chunk_tokens: DEFAULT_CHUNK_TOKENS,
             partial_matching: true,
             use_catalog: true,
             fetch_policy: FetchPolicy::Always,
@@ -179,15 +188,44 @@ pub struct ClientStats {
     /// uploads vs the full-blob-per-range baseline.
     pub bytes_saved: u64,
     pub fetches_declined: u64,
+    /// Chunk-aligned range downloads that completed without moving the
+    /// whole entry (the ECS3 path, compressed or not).
+    pub range_fetches: u64,
+    /// Range-path failures (stale alias geometry, short replies, corrupt
+    /// chunks) that re-fetched and re-verified the whole entry instead.
+    pub full_fetch_fallbacks: u64,
 }
 
 /// Where a downloaded state physically lives on the cache box — the anchor
-/// the post-response upload splices suffix rows onto.
+/// the post-response upload splices suffix chunks onto.
 #[derive(Debug, Clone)]
 struct DeltaBase {
     store_key: Vec<u8>,
     total_rows: usize,
     compressed: bool,
+    /// ECS3 chunk size of the base entry (`None` = legacy v2 entry, which
+    /// is never spliced onto).
+    chunk_tokens: Option<usize>,
+    /// The base's chunk-index entries, in order — a splice reuses the whole
+    /// chunks below the matched prefix by copying these into the new header.
+    chunk_index: Vec<ChunkEntry>,
+}
+
+/// Describe a fully fetched entry as a future `SPLICE` base, reading the
+/// authoritative geometry out of its own header/index (not the alias).
+fn delta_base_for_entry(store_key: Vec<u8>, blob: &[u8]) -> DeltaBase {
+    let hdr = KvState::peek_header(blob).ok();
+    let (chunk_tokens, chunk_index) = match read_chunk_index(blob) {
+        Some((ct, entries)) => (Some(ct), entries),
+        None => (None, Vec::new()),
+    };
+    DeltaBase {
+        store_key,
+        total_rows: hdr.as_ref().map_or(0, |h| h.n_tokens),
+        compressed: hdr.as_ref().is_some_and(|h| h.compressed),
+        chunk_tokens,
+        chunk_index,
+    }
 }
 
 /// Result of a successful state download.
@@ -196,6 +234,189 @@ struct Download {
     wire_bytes: usize,
     saved_bytes: usize,
     base: DeltaBase,
+}
+
+/// Result of a successful chunk-aligned range download.
+struct RangeFetch {
+    state: KvState,
+    /// Wire bytes this fetch moved (head + chunk bytes, alias excluded).
+    wire: usize,
+    /// Bytes saved vs what the pre-chunking pipeline would have moved.
+    saved: usize,
+    /// Authoritative compression flag from the entry's own header.
+    compressed: bool,
+    /// The entry's full chunk index (future splice base).
+    entries: Vec<ChunkEntry>,
+}
+
+/// The chunk-aware range download for an ECS3 target: fetch the head
+/// (header + chunk index), then exactly the whole chunks covering `m`
+/// tokens.  Uncompressed bodies have a-priori-computable chunk spans, so
+/// head and chunks ride one pipelined round trip; deflated bodies need the
+/// index first and pay one extra round trip — still a fraction of the
+/// full-blob bytes.  `None` means the range path could not complete (stale
+/// geometry, short replies, corruption): the caller falls back to a
+/// full-blob download, never to a questionable restore.
+#[allow(clippy::too_many_arguments)]
+fn fetch_chunked(
+    conn: &mut KvClient,
+    shaper: &mut Shaper,
+    target: &[u8],
+    total_rows: usize,
+    compressed: bool,
+    ct: usize,
+    m: usize,
+    hash: &str,
+    dims: (usize, usize, usize, usize),
+) -> Option<RangeFetch> {
+    let (l, _, kh, d) = dims;
+    let lo = BlobLayout::new(hash, l, kh, d).with_chunk_tokens(ct);
+    let head_len = lo.payload_off(total_rows);
+    let stride = lo.token_stride();
+    let k = lo.prefix_chunks(m);
+
+    // validate a fetched head once: full length, matching chunk geometry,
+    // crc-verified index covering the matched chunks
+    let check_head = |head: &SharedBytes| -> Option<Vec<ChunkEntry>> {
+        if head.len() != head_len {
+            return None;
+        }
+        let (ct2, entries) = read_chunk_index(head)?;
+        if ct2 != ct || entries.len() < k {
+            return None; // stale geometry: entry re-written with another chunk size
+        }
+        Some(entries)
+    };
+    let (head, rows, entries) = if !compressed {
+        // raw chunk spans are pure layout arithmetic: one pipelined trip
+        let span = lo.prefix_rows(m, total_rows) * stride;
+        let reqs = [
+            getrange_req(target, 0, head_len),
+            getrange_req(target, head_len, span),
+        ];
+        let replies = shaper
+            .shaped_post(|| {
+                let r = conn.pipeline_req(&reqs);
+                let n = r
+                    .as_ref()
+                    .map(|vs| {
+                        vs.iter()
+                            .map(|v| v.as_bulk().map_or(0, <[u8]>::len))
+                            .sum::<usize>()
+                    })
+                    .unwrap_or(0);
+                (r, n)
+            })
+            .ok()?;
+        let (head, rows) = match (replies.first(), replies.get(1)) {
+            (Some(Value::Bulk(h)), Some(Value::Bulk(r))) => (h.clone(), r.clone()),
+            _ => return None, // target evicted between the alias GET and now
+        };
+        let entries = check_head(&head)?;
+        (head, rows, entries)
+    } else {
+        // deflated chunk lengths are data-dependent: head first, then
+        // exactly the matched chunks' byte span from its index
+        let head = shaper
+            .shaped_post(|| {
+                let r = conn.getrange(target, 0, head_len);
+                let n = r
+                    .as_ref()
+                    .map(|o| o.as_ref().map_or(0, |b| b.len()))
+                    .unwrap_or(0);
+                (r, n)
+            })
+            .ok()??;
+        let entries = check_head(&head)?;
+        let span: usize = entries.iter().take(k).map(|e| e.len as usize).sum();
+        if span == 0 {
+            return None;
+        }
+        let rows = shaper
+            .shaped_post(|| {
+                let r = conn.getrange(target, head_len, span);
+                let n = r
+                    .as_ref()
+                    .map(|o| o.as_ref().map_or(0, |b| b.len()))
+                    .unwrap_or(0);
+                (r, n)
+            })
+            .ok()??;
+        (head, rows, entries)
+    };
+
+    let span: usize = entries.iter().take(k).map(|e| e.len as usize).sum();
+    if rows.len() != span {
+        log_debug!(
+            "edge-client",
+            "short range replies ({}/{head_len}, {}/{span}); discarding",
+            head.len(),
+            rows.len()
+        );
+        return None;
+    }
+    let compressed = KvState::peek_header(&head).ok()?.compressed;
+    match KvState::restore_prefix_from_parts(&head, &rows, m, hash, dims) {
+        Ok(state) => {
+            let wire = head.len() + rows.len();
+            // baseline: what the pre-chunking pipeline moved for this hit —
+            // compressed entries fell back to a full-blob download (head +
+            // whole body); uncompressed is the dedicated-m-row-blob model,
+            // same as the upload side
+            let body_total: usize = entries.iter().map(|e| e.len as usize).sum();
+            let baseline = if compressed {
+                head_len + body_total
+            } else {
+                lo.blob_len(m)
+            };
+            Some(RangeFetch {
+                state,
+                wire,
+                saved: baseline.saturating_sub(wire),
+                compressed,
+                entries,
+            })
+        }
+        Err(e) => {
+            log_debug!("edge-client", "range restore rejected: {e}");
+            None
+        }
+    }
+}
+
+/// `GET` + verify + truncate an entire stored entry — the range path's
+/// fallback and the legacy-alias path.  Returns the state truncated to `m`
+/// rows, the wire bytes moved and the raw blob (for splice-base metadata).
+fn fetch_full_entry(
+    conn: &mut KvClient,
+    shaper: &mut Shaper,
+    target: &[u8],
+    m: usize,
+    hash: &str,
+    dims: (usize, usize, usize, usize),
+) -> Option<(KvState, usize, SharedBytes)> {
+    let full = shaper
+        .shaped_post(|| {
+            let r = conn.get(target);
+            let n = r
+                .as_ref()
+                .map(|o| o.as_ref().map_or(0, |b| b.len()))
+                .unwrap_or(0);
+            (r, n)
+        })
+        .ok()??;
+    match KvState::restore(&full, hash, dims) {
+        Ok(mut state) if state.n_tokens >= m => {
+            state.n_tokens = m;
+            let wire = full.len();
+            Some((state, wire, full))
+        }
+        Ok(_) => None,
+        Err(e) => {
+            log_debug!("edge-client", "restore rejected: {e}");
+            None
+        }
+    }
 }
 
 pub struct EdgeClient {
@@ -213,6 +434,7 @@ pub struct EdgeClient {
 
 impl EdgeClient {
     pub fn new(engine: Arc<Engine>, cfg: EdgeClientConfig) -> Result<Self> {
+        anyhow::ensure!(cfg.chunk_tokens >= 1, "chunk_tokens must be >= 1");
         let meta = ModelMeta::new(engine.model_hash());
         let mut catalog = LocalCatalog::new();
         catalog.min_hit_tokens = cfg.min_hit_tokens;
@@ -273,6 +495,20 @@ impl EdgeClient {
             cfg.n_kv_heads,
             cfg.head_dim,
         )
+        .with_chunk_tokens(self.cfg.chunk_tokens)
+    }
+
+    /// Total payload bytes this client has moved over the modelled link
+    /// (both directions) — the honest wire ledger range transfers shrink.
+    pub fn link_moved_bytes(&self) -> u64 {
+        self.shaper.moved_bytes
+    }
+
+    /// Logical (uncompressed) state bytes those transfers represent; with
+    /// `Compression::Deflate` this exceeds [`EdgeClient::link_moved_bytes`]
+    /// whenever the codec actually saves wire bytes.
+    pub fn link_inflated_bytes(&self) -> u64 {
+        self.shaper.inflated_bytes
     }
 
     /// Tokenize the prompt and derive its Figure-3 range prefix lengths.
@@ -359,9 +595,9 @@ impl EdgeClient {
     /// positive / eviction / corruption — caller falls back to local prefill.
     ///
     /// The first GET returns either the state blob itself (the hit range is
-    /// the stored entry) or a range alias; an alias is resolved with one
-    /// further pipelined round trip fetching only the target's header+index
-    /// prefix and the `matched` token rows.
+    /// the stored entry) or a range alias; an alias is resolved by fetching
+    /// only the target's head (header + chunk index) and the whole ECS3
+    /// chunks covering the matched rows — see [`fetch_chunked`].
     fn try_download(&mut self, range: &PromptRange, bd: &mut PhaseBreakdown) -> Option<Download> {
         let key = state_store_key(&range.key);
         let t0 = std::time::Instant::now();
@@ -406,134 +642,92 @@ impl EdgeClient {
         let cfg = &self.engine.model.config;
         let dims = (cfg.n_layers, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim);
         let hash = self.engine.model_hash();
-        let lo = BlobLayout::new(hash, cfg.n_layers, cfg.n_kv_heads, cfg.head_dim);
         let m = range.token_len;
 
-        let Some((target, total_rows, compressed)) = decode_range_alias(&blob) else {
+        let Some(alias) = decode_range_alias(&blob) else {
             // the hit range is the stored entry itself: full restore
-            let compressed = KvState::peek_header(&blob)
-                .map(|h| h.compressed)
-                .unwrap_or(false);
             return match KvState::restore(&blob, hash, dims) {
-                Ok(state) => Some(Download {
-                    state,
-                    wire_bytes: blob.len(),
-                    saved_bytes: 0,
-                    base: DeltaBase {
-                        store_key: key.to_vec(),
-                        total_rows: m,
-                        compressed,
-                    },
-                }),
-                Err(e) => {
-                    log_debug!("edge-client", "restore rejected: {e}");
-                    None
-                }
-            };
-        };
-
-        if total_rows < m {
-            log_debug!(
-                "edge-client",
-                "alias target holds {total_rows} rows < matched {m}; discarding"
-            );
-            return None;
-        }
-        let base = DeltaBase { store_key: target.clone(), total_rows, compressed };
-
-        if compressed {
-            // deflate bodies cannot be range-served (ROADMAP open item):
-            // fetch the whole target and truncate to the matched rows
-            let full = self.shaper.shaped_post(|| {
-                let r = conn.get(&target);
-                let n = r
-                    .as_ref()
-                    .map(|o| o.as_ref().map_or(0, |b| b.len()))
-                    .unwrap_or(0);
-                (r, n)
-            });
-            let full = match full {
-                Ok(Some(b)) => b,
-                _ => return None,
-            };
-            return match KvState::restore(&full, hash, dims) {
-                Ok(mut state) if state.n_tokens >= m => {
-                    state.n_tokens = m;
+                Ok(state) => {
+                    self.shaper.note_inflated(state.payload_bytes(state.n_tokens));
                     Some(Download {
-                        state,
-                        wire_bytes: blob.len() + full.len(),
+                        base: delta_base_for_entry(key.to_vec(), &blob),
+                        wire_bytes: blob.len(),
                         saved_bytes: 0,
-                        base,
+                        state,
                     })
                 }
-                Ok(_) => None,
                 Err(e) => {
                     log_debug!("edge-client", "restore rejected: {e}");
                     None
                 }
             };
-        }
+        };
 
-        // range-aware path: header + row-index prefix, then the matched
-        // rows — both sliced server-side, one pipelined round trip
-        let head_len = lo.index_off() + 4 * m;
-        let pay_off = lo.payload_off(total_rows);
-        let stride = lo.token_stride();
-        let reqs = [
-            getrange_req(&target, 0, head_len),
-            getrange_req(&target, pay_off, m * stride),
-        ];
-        let replies = self.shaper.shaped_post(|| {
-            let r = conn.pipeline_req(&reqs);
-            let n = r
-                .as_ref()
-                .map(|vs| {
-                    vs.iter()
-                        .map(|v| v.as_bulk().map_or(0, <[u8]>::len))
-                        .sum::<usize>()
-                })
-                .unwrap_or(0);
-            (r, n)
-        });
-        let replies = match replies {
-            Ok(vs) => vs,
-            Err(e) => {
-                log_debug!("edge-client", "range download failed: {e}");
-                return None;
-            }
-        };
-        let (Some(head), Some(rows)) = (
-            replies.first().and_then(Value::as_bulk),
-            replies.get(1).and_then(Value::as_bulk),
-        ) else {
-            return None; // target evicted between the alias GET and now
-        };
-        if head.len() != head_len || rows.len() != m * stride {
+        if alias.total_rows < m {
             log_debug!(
                 "edge-client",
-                "short range replies ({}/{head_len}, {}/{}); discarding",
-                head.len(),
-                rows.len(),
-                m * stride
+                "alias target holds {} rows < matched {m}; discarding",
+                alias.total_rows
             );
             return None;
         }
-        match KvState::restore_prefix_from_parts(head, rows, m, hash, dims) {
-            Ok(state) => {
-                let wire_bytes = blob.len() + head.len() + rows.len();
-                // same baseline as the upload side: the per-range model
-                // would have downloaded a dedicated m-row blob, so the
-                // range fetch is roughly break-even here (the win is that
-                // the m-row blob no longer has to exist — upload-side
-                // savings — not that this fetch is smaller)
-                let saved_bytes = lo.blob_len(m).saturating_sub(wire_bytes);
-                Some(Download { state, wire_bytes, saved_bytes, base })
-            }
-            Err(e) => {
-                log_debug!("edge-client", "range restore rejected: {e}");
-                None
+        let target = alias.target_key;
+
+        // chunk-aligned range path: ECS3 aliases carry the target's chunk
+        // size, so whole-chunk byte ranges never round to a mid-chunk
+        // boundary — and deflated entries are range-served like any other
+        if let Some(ct) = alias.chunk_tokens {
+            match fetch_chunked(
+                &mut *conn,
+                &mut self.shaper,
+                &target,
+                alias.total_rows,
+                alias.compressed,
+                ct,
+                m,
+                hash,
+                dims,
+            ) {
+                Some(f) => {
+                    self.stats.range_fetches += 1;
+                    self.shaper.note_inflated(f.state.payload_bytes(m));
+                    return Some(Download {
+                        state: f.state,
+                        wire_bytes: blob.len() + f.wire,
+                        saved_bytes: f.saved,
+                        base: DeltaBase {
+                            store_key: target,
+                            total_rows: alias.total_rows,
+                            compressed: f.compressed,
+                            chunk_tokens: Some(ct),
+                            chunk_index: f.entries,
+                        },
+                    });
+                }
+                None => {
+                    // never restore a questionable range: re-fetch the whole
+                    // entry, which re-verifies everything from scratch (and
+                    // degrades to a miss only if that fails too)
+                    log_debug!(
+                        "edge-client",
+                        "range path failed for {m}-row prefix; full-blob fallback"
+                    );
+                    self.stats.full_fetch_fallbacks += 1;
+                }
             }
         }
+
+        // full-blob path: legacy (pre-chunking) aliases land here directly,
+        // the chunked path lands here when its verification fails
+        let (state, wire, full) =
+            fetch_full_entry(&mut *conn, &mut self.shaper, &target, m, hash, dims)?;
+        self.shaper.note_inflated(state.payload_bytes(m));
+        Some(Download {
+            base: delta_base_for_entry(target, &full),
+            wire_bytes: blob.len() + wire,
+            saved_bytes: 0,
+            state,
+        })
     }
 
     /// Step 3 (miss path, post-response): publish every range the server
@@ -572,12 +766,12 @@ impl EdgeClient {
 
         let hash = self.engine.model_hash().to_string();
         let lo = self.blob_layout();
+        let ct = self.cfg.chunk_tokens;
         let compressed = self.cfg.compression == Compression::Deflate;
         // ranges_for returns ascending lengths, so the last entry is longest
         let longest = todo.last().unwrap().clone();
         let n = longest.token_len;
         let long_key = state_store_key(&longest.key);
-        let full = state.serialize_prefix_shared(n, &hash, self.cfg.compression);
 
         // what the pre-delta pipeline would have shipped: one full nested
         // blob per range (modelled uncompressed)
@@ -585,37 +779,55 @@ impl EdgeClient {
 
         let mut reqs: Vec<Value> = Vec::with_capacity(todo.len() * 2 + 1);
         let mut wire = 0usize;
-        let use_delta = !compressed
-            && skip_up_to > 0
-            && delta_base.is_some_and(|b| !b.compressed && b.total_rows >= skip_up_to);
-        if use_delta {
-            let b = delta_base.unwrap();
-            let stride = lo.token_stride();
-            let pay = lo.payload_off(n);
-            let head = full.slice(0..pay);
-            let tail = full.slice(pay + skip_up_to * stride..pay + n * stride);
-            let base_pay = lo.payload_off(b.total_rows);
-            wire += head.len() + tail.len();
-            reqs.push(request_shared(vec![
-                SharedBytes::copy_from(b"SPLICE"),
-                long_key.clone().into(),
-                b.store_key.clone().into(),
-                base_pay.to_string().into_bytes().into(),
-                (base_pay + skip_up_to * stride).to_string().into_bytes().into(),
-                head,
-                tail,
-            ]));
-        } else {
-            wire += full.len();
-            reqs.push(request_shared(vec![
-                SharedBytes::copy_from(b"SET"),
-                long_key.clone().into(),
-                full.clone(),
-            ]));
+        // SPLICE is chunk-aligned: reuse the base's whole chunks below the
+        // matched prefix (their compressed bytes stay server-side and their
+        // index entries are copied into the new header); the ragged
+        // remainder rides along with the suffix chunks.  Works for deflated
+        // bases exactly like raw ones — chunks are independent streams.
+        let delta = delta_base
+            .filter(|b| {
+                skip_up_to > 0
+                    && b.total_rows >= skip_up_to
+                    && b.compressed == compressed
+                    && b.chunk_tokens == Some(ct)
+            })
+            .map(|b| (b, (skip_up_to / ct).min(b.chunk_index.len())))
+            .filter(|(_, k)| *k >= 1);
+        let use_delta = delta.is_some();
+        match delta {
+            Some((b, k)) => {
+                let prefix = &b.chunk_index[..k];
+                let (head, tail) =
+                    state.serialize_for_splice(n, &hash, self.cfg.compression, ct, prefix);
+                let prefix_span: usize = prefix.iter().map(|e| e.len as usize).sum();
+                let base_pay = lo.payload_off(b.total_rows);
+                self.shaper.note_inflated((n - k * ct) * lo.token_stride());
+                wire += head.len() + tail.len();
+                reqs.push(request_shared(vec![
+                    SharedBytes::copy_from(b"SPLICE"),
+                    long_key.clone().into(),
+                    b.store_key.clone().into(),
+                    base_pay.to_string().into_bytes().into(),
+                    (base_pay + prefix_span).to_string().into_bytes().into(),
+                    head,
+                    tail,
+                ]));
+            }
+            None => {
+                let blob =
+                    state.serialize_prefix_shared_opts(n, &hash, self.cfg.compression, ct);
+                self.shaper.note_inflated(state.payload_bytes(n));
+                wire += blob.len();
+                reqs.push(request_shared(vec![
+                    SharedBytes::copy_from(b"SET"),
+                    long_key.clone().into(),
+                    blob,
+                ]));
+            }
         }
         reqs.push(register_req(&longest.key));
         for r in todo.iter().filter(|r| r.token_len != n) {
-            let alias = encode_range_alias(&long_key, n, compressed);
+            let alias = encode_range_alias(&long_key, n, compressed, ct);
             wire += alias.len();
             reqs.push(request_shared(vec![
                 SharedBytes::copy_from(b"SET"),
@@ -636,12 +848,21 @@ impl EdgeClient {
                         "edge-client",
                         "splice base gone; falling back to a full upload"
                     );
-                    let blob = full.clone();
+                    let blob = state.serialize_prefix_shared_opts(
+                        n,
+                        &hash,
+                        self.cfg.compression,
+                        ct,
+                    );
+                    let blen = blob.len();
                     let r2 = self
                         .shaper
-                        .shaped(blob.len(), || conn.set_shared(&long_key, blob));
+                        .shaped(blen, || conn.set_shared(&long_key, blob));
                     if r2.is_ok() {
-                        wire += full.len();
+                        wire += blen;
+                        // the full blob replaced the delta: account the
+                        // prefix rows the splice would have left in place
+                        self.shaper.note_inflated(state.payload_bytes(n));
                     }
                 }
                 let mut cat = self.catalog.lock().unwrap();
@@ -664,6 +885,7 @@ impl EdgeClient {
     pub fn query(&mut self, prompt: &Prompt) -> Result<QueryResult> {
         let mut bd = PhaseBreakdown::default();
         self.stats.queries += 1;
+        let inflated0 = self.shaper.inflated_bytes;
 
         // -- step 1: tokenize -------------------------------------------------
         let t0 = std::time::Instant::now();
@@ -739,6 +961,8 @@ impl EdgeClient {
         bd.reused_tokens = matched;
         bd.state_bytes = downloaded.max(uploaded);
         bd.saved_bytes = saved;
+        bd.wire_bytes = downloaded + uploaded;
+        bd.inflated_bytes = (self.shaper.inflated_bytes - inflated0) as usize;
 
         Ok(QueryResult {
             case,
@@ -943,9 +1167,10 @@ mod tests {
     }
 
     #[test]
-    fn compressed_partial_hit_falls_back_to_full_fetch() {
-        // deflate entries cannot be range-served: an alias hit must still
-        // reproduce the right state by fetching the whole target
+    fn compressed_partial_hit_uses_range_path() {
+        // deflate entries are chunk-compressed (ECS3): an alias hit fetches
+        // only the matched chunks — no full-blob fallback — and still
+        // reproduces the right state
         let Some(eng) = engine() else { return };
         let cb = CacheBox::start_local().unwrap();
         let mut cfg = native_cfg("comp-partial", Some(cb.addr()));
@@ -960,6 +1185,9 @@ mod tests {
         let r1 = c.query(&p1).unwrap();
         assert_eq!(r1.case, HitCase::AllExamples);
         assert!(r1.matched_tokens > 0 && r1.downloaded_bytes > 0);
+        assert_eq!(c.stats.range_fetches, 1, "deflated alias hit must range-fetch");
+        assert_eq!(c.stats.full_fetch_fallbacks, 0, "no full-blob fallback");
+        assert!(r1.saved_bytes > 0, "range fetch must beat the full-entry model");
         cb.shutdown();
     }
 

@@ -32,7 +32,10 @@ pub struct KvClient {
 /// Build a `GETRANGE` request for a `len > 0` byte window at `start`.  The
 /// server speaks Redis's inclusive-end encoding; this is the one place the
 /// start/len → start/end conversion lives (used both by
-/// [`KvClient::getrange`] and by pipelined range fetches).
+/// [`KvClient::getrange`] and by pipelined range fetches).  Callers fetching
+/// ECS3 state blobs must pass whole-chunk windows (`BlobLayout::prefix_rows`
+/// / the chunk index) — per-chunk crcs and deflate streams only verify and
+/// decode at chunk granularity.
 pub fn getrange_req(key: &[u8], start: usize, len: usize) -> Value {
     assert!(len > 0, "GETRANGE request needs a non-empty window");
     request_shared(vec![

@@ -14,12 +14,15 @@
 //!
 //! * `GETRANGE key start end` — Redis-style inclusive byte range of a
 //!   value, served as an O(1) slice of the stored entry (`Nil` when the key
-//!   is absent, empty bulk when the range is);
+//!   is absent, empty bulk when the range is).  ECS3 clients use it to pull
+//!   a blob's head (header + chunk index) and then whole compressed chunks;
+//!   the chunk-boundary arithmetic stays entirely client-side;
 //! * `SPLICE newkey basekey start end head tail` — store
 //!   `head ++ basekey[start, end) ++ tail` under `newkey` (end-exclusive).
 //!   This is the delta-upload primitive: a client extending a cached prefix
-//!   ships only its new suffix rows, and the server splices them onto the
-//!   prefix bytes it already holds.
+//!   ships only its new suffix chunks, and the server splices them onto the
+//!   prefix chunk bytes it already holds — compressed or not, since ECS3
+//!   chunks are independent deflate streams.
 
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
@@ -195,18 +198,13 @@ impl KvServer {
                 else {
                     return Value::Error("ERR bad range".into());
                 };
-                match self.store.lock().unwrap().get(&args[1]) {
+                // Redis semantics (inclusive end, clamped, empty bulk for an
+                // empty range) live in Store::get_range; the server stays a
+                // dispatcher.  Chunk alignment is a *client* concern — the
+                // box never interprets blob layouts.
+                match self.store.lock().unwrap().get_range(&args[1], start, end) {
                     None => Value::Nil,
-                    Some(v) => {
-                        // Redis semantics: inclusive end, clamped; an empty
-                        // or inverted range yields an empty bulk
-                        if start >= v.len() || end < start {
-                            Value::Bulk(SharedBytes::empty())
-                        } else {
-                            let end = end.min(v.len() - 1);
-                            Value::Bulk(v.slice(start..end + 1))
-                        }
-                    }
+                    Some(v) => Value::Bulk(v),
                 }
             }
             ("SPLICE", 7) => {

@@ -123,6 +123,22 @@ impl Store {
         }
     }
 
+    /// `GETRANGE`-shaped fetch: an O(1) shared subview of an entry, Redis
+    /// semantics (inclusive `end`, clamped to the value; an empty or
+    /// inverted range yields an empty view).  `None` when the key is
+    /// absent.  Refreshes LRU and the hit/miss counters like
+    /// [`Store::get`] — serving chunk ranges of a state blob must keep the
+    /// blob warm, or partial matching would evict exactly the entries it
+    /// reuses most.
+    pub fn get_range(&mut self, key: &[u8], start: usize, end: usize) -> Option<SharedBytes> {
+        let v = self.get(key)?;
+        if start >= v.len() || end < start {
+            return Some(SharedBytes::empty());
+        }
+        let end = end.min(v.len() - 1);
+        Some(v.slice(start..end + 1))
+    }
+
     /// Non-mutating existence check (does not refresh LRU or counters).
     pub fn contains(&self, key: &[u8]) -> bool {
         self.map.contains_key(key)
@@ -204,6 +220,25 @@ mod tests {
         // the megabyte backing buffer
         assert_eq!(s.used_bytes(), 5 + 100);
         assert_eq!(s.get(b"slice").unwrap().backing_len(), 100);
+    }
+
+    #[test]
+    fn get_range_semantics_and_lru_refresh() {
+        let mut s = Store::default();
+        s.set(b"k", b"hello world".to_vec());
+        assert_eq!(s.get_range(b"k", 0, 4).unwrap(), b"hello");
+        // inclusive end, clamped past the value length
+        assert_eq!(s.get_range(b"k", 6, 999).unwrap(), b"world");
+        // start beyond the value / inverted range → empty view, not None
+        assert_eq!(s.get_range(b"k", 99, 100).unwrap().len(), 0);
+        assert_eq!(s.get_range(b"k", 4, 2).unwrap().len(), 0);
+        assert_eq!(s.get_range(b"gone", 0, 1), None);
+        // the subview shares the stored backing allocation (zero-copy)
+        assert_eq!(s.get_range(b"k", 0, 4).unwrap().backing_len(), 11);
+        // and counts as an access: range-served entries stay warm
+        let hits_before = s.hits;
+        s.get_range(b"k", 0, 0);
+        assert_eq!(s.hits, hits_before + 1);
     }
 
     #[test]

@@ -100,6 +100,7 @@ fn client_config(m: &edgecache::util::cli::Matches, server: Option<String>) -> R
         device,
         max_new_tokens: m.get("max-new").and_then(|v| v.parse().ok()),
         compression: if m.flag("compress") { Compression::Deflate } else { Compression::None },
+        chunk_tokens: edgecache::model::state::DEFAULT_CHUNK_TOKENS,
         partial_matching: !m.flag("no-partial"),
         use_catalog: !m.flag("no-catalog"),
         fetch_policy: if m.flag("break-even") { FetchPolicy::BreakEven } else { FetchPolicy::Always },

@@ -74,6 +74,14 @@ pub struct PhaseBreakdown {
     /// Bytes the range-aware transfer path avoided moving (vs the
     /// full-blob-per-range model; see `coordinator::client`).
     pub saved_bytes: usize,
+    /// Total wire bytes moved over the link this query, both directions
+    /// summed (unlike `state_bytes`, which keeps the paper's per-direction
+    /// "State size" semantics).
+    pub wire_bytes: usize,
+    /// Logical (uncompressed) KV bytes the moved payloads represent — with
+    /// chunk compression `wire_bytes` shrinks while this one doesn't, so
+    /// per-query compression ratios stay computable and honest.
+    pub inflated_bytes: usize,
     /// Tokens whose prefill was skipped thanks to a cache hit.
     pub reused_tokens: usize,
 }
@@ -120,6 +128,8 @@ impl PhaseBreakdown {
         self.response_tokens += other.response_tokens;
         self.state_bytes += other.state_bytes;
         self.saved_bytes += other.saved_bytes;
+        self.wire_bytes += other.wire_bytes;
+        self.inflated_bytes += other.inflated_bytes;
         self.reused_tokens += other.reused_tokens;
     }
 }
@@ -218,6 +228,8 @@ pub struct CaseAggregate {
     pub prompt_tokens: f64,
     pub state_bytes: f64,
     pub saved_bytes: f64,
+    pub wire_bytes: f64,
+    pub inflated_bytes: f64,
 }
 
 impl CaseAggregate {
@@ -232,6 +244,8 @@ impl CaseAggregate {
         self.prompt_tokens += b.prompt_tokens as f64;
         self.state_bytes += b.state_bytes as f64;
         self.saved_bytes += b.saved_bytes as f64;
+        self.wire_bytes += b.wire_bytes as f64;
+        self.inflated_bytes += b.inflated_bytes as f64;
     }
 
     /// Mean time in a phase, milliseconds (Table 3 cell).
@@ -262,6 +276,16 @@ impl CaseAggregate {
             return 0.0;
         }
         self.saved_bytes / self.n as f64 / 1e6
+    }
+
+    /// Achieved wire compression ratio: logical KV bytes represented per
+    /// wire byte moved, both directions (≈1.0 when uncompressed — wire adds
+    /// only header/index/alias overhead — > 1.0 when deflate pays).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.wire_bytes == 0.0 {
+            return 1.0;
+        }
+        self.inflated_bytes / self.wire_bytes
     }
 }
 
@@ -306,10 +330,23 @@ mod tests {
         b.add(Phase::Redis, Duration::from_millis(20));
         b.prompt_tokens = 7;
         b.saved_bytes = 23;
+        b.inflated_bytes = 400;
         a.merge(&b);
         assert_eq!(a.get(Phase::Redis), Duration::from_millis(30));
         assert_eq!(a.prompt_tokens, 12);
         assert_eq!(a.saved_bytes, 123);
+        assert_eq!(a.inflated_bytes, 400);
+    }
+
+    #[test]
+    fn compression_ratio_from_wire_and_inflated() {
+        let mut agg = CaseAggregate::default();
+        let mut b = PhaseBreakdown::default();
+        b.wire_bytes = 250_000;
+        b.inflated_bytes = 1_000_000;
+        agg.push(&b);
+        assert!((agg.compression_ratio() - 4.0).abs() < 1e-9);
+        assert_eq!(CaseAggregate::default().compression_ratio(), 1.0);
     }
 
     #[test]

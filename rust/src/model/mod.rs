@@ -7,4 +7,7 @@ pub mod sampler;
 pub mod state;
 
 pub use sampler::{argmax, Sampler};
-pub use state::{BlobLayout, Compression, KvState, StateError, StateHeader};
+pub use state::{
+    BlobLayout, ChunkEntry, Compression, KvState, RangeAlias, StateError, StateHeader,
+    DEFAULT_CHUNK_TOKENS,
+};

@@ -2,52 +2,74 @@
 //!
 //! [`KvState`] is the live form: dense `[L, S, Kh, D]` K/V tensors plus the
 //! number of valid tokens.  [`KvState::serialize`] produces the blob the
-//! paper uploads with `llama_state_get_data()`.  Format v2 (`"ECS2"`) is
-//! **token-major and row-indexed** so that any token prefix of a blob is a
-//! contiguous byte range a cache box can serve with `GETRANGE`:
+//! paper uploads with `llama_state_get_data()`.  Format v3 (`"ECS3"`) is
+//! **token-major, chunked and chunk-compressed** so that any token prefix of
+//! a blob maps to a contiguous byte range of *whole chunks* a cache box can
+//! serve with `GETRANGE` — even when the body is deflated:
 //!
 //! ```text
-//!   magic "ECS2"
+//!   magic "ECS3"
 //!   header: lp model hash | L S Kh D n_tokens (u32 each) | flags (u8)
-//!           | crc32 over (row index ++ body)
-//!   row index: n_tokens × u32 — crc32 of each token's row chunk
-//!   body (lp): token 0 [K rows layer 0..L | V rows layer 0..L]
-//!              token 1 [..] ... token n-1 [..]      (deflated if flag set)
+//!           | chunk_tokens (u32) | crc32 over the chunk index
+//!   chunk index: n_chunks × (u32 byte length, u32 crc32)   — one entry per
+//!           chunk, crc taken over the *stored* (possibly deflated) bytes
+//!   body (lp): chunk 0 bytes ‖ chunk 1 bytes ‖ …           — each chunk is
+//!           `chunk_tokens` token rows (the last may be partial), deflated
+//!           independently when the compression flag is set
 //! ```
 //!
-//! Every token occupies one fixed-size chunk of `2·L·Kh·D·4` bytes
-//! ([`BlobLayout::token_stride`]), so the first `m` tokens of an `n`-token
-//! blob are exactly bytes `[payload_off(n), payload_off(n) + m·stride)` —
-//! the property the coordinator's range-aware downloads and suffix-delta
-//! uploads (`SPLICE`) rely on.  The per-token crc32 row index lets a client
-//! verify a partially fetched prefix without the whole-blob checksum.
-//! Offsets are computed client-side from [`BlobLayout`]; the cache box
-//! stays byte-oriented.
+//! Every token row occupies `2·L·Kh·D·4` bytes ([`BlobLayout::token_stride`])
+//! and chunk `c` covers tokens `[c·ct, min((c+1)·ct, n))`.  Because each
+//! chunk is an independent deflate stream with its own crc32, the first `m`
+//! tokens of an entry are exactly the first `ceil(m/ct)` chunks — a byte
+//! range whose offsets the client computes from the chunk index in the
+//! header, with **no whole-blob inflate on either side** (the CacheGen
+//! per-chunk-compression argument, §2 related work).  The header crc covers
+//! the chunk index; body integrity is per-chunk, which is what lets a
+//! corrupted chunk be rejected *chunk-granularly* while clean prefixes keep
+//! restoring, and what lets `SPLICE` suffix-delta uploads reuse a base
+//! entry's compressed prefix chunks verbatim (their index entries are copied
+//! into the new header via [`KvState::serialize_for_splice`]).
+//!
+//! Offsets are computed client-side from [`BlobLayout`]; the cache box stays
+//! byte-oriented.  Restore verifies magic, model hash, dims, the index crc
+//! and every chunk crc before touching the live cache: a corrupt, truncated
+//! or mismatched blob is rejected and the client falls back — first to a
+//! full-blob download, then to local prefill (paper §3.3 — wrong bytes must
+//! never poison an inference).  Readers negotiate by magic: the previous
+//! format v2 (`"ECS2"`, whole-body compression + per-token crc row index)
+//! still deserializes, both whole and — uncompressed only — via
+//! [`KvState::restore_prefix_from_parts`].
 //!
 //! Only the first `n_tokens` sequence rows are shipped, so blob size scales
 //! linearly with the cached prompt length — the paper's 2.25 MB (65-token,
 //! 270M) and 9.94 MB (334-token, 1B) entries are exactly this scaling.
-//! An optional deflate pass (CacheGen-style, §2 related work) is behind
-//! [`Compression::Deflate`]; compressed bodies cannot be range-served (see
-//! ROADMAP open items).  Restore verifies magic, model hash, dims and
-//! checksum before touching the live cache: a corrupt or mismatched blob is
-//! rejected, the client falls back to local prefill (paper §3.3 — wrong
-//! bytes must never poison an inference).
 //!
 //! A second tiny record type, the **range alias** (`"ECSA"`, see
 //! [`encode_range_alias`]), lets one stored blob serve all four catalog
-//! ranges: shorter prefix keys map to an alias naming the long entry and
-//! its row count, and the client fetches just the rows it needs.
+//! ranges: shorter prefix keys map to an alias naming the long entry, its
+//! row count and — so that `GETRANGE` requests never round to a non-chunk
+//! boundary — the target's `chunk_tokens`.  Aliases written before chunking
+//! (no chunk size field) still decode, with `chunk_tokens: None`.
+
+use std::borrow::Cow;
 
 use crc32fast::Hasher as Crc32;
 use thiserror::Error;
 
 use crate::util::bytes::{copymeter, f32_as_bytes, f32_as_bytes_mut, Reader, SharedBytes};
 
-const MAGIC: &[u8; 4] = b"ECS2";
+const MAGIC_V3: &[u8; 4] = b"ECS3";
+const MAGIC_V2: &[u8; 4] = b"ECS2";
 
 /// Magic for range-alias records stored under short-prefix keys.
 pub const ALIAS_MAGIC: &[u8; 4] = b"ECSA";
+
+/// Default tokens per chunk.  Small enough that a partial match over-fetches
+/// at most 7 rows past the matched prefix, large enough that the per-chunk
+/// deflate streams still see repeated f32 structure.  (Adaptive sizing is a
+/// ROADMAP follow-on.)
+pub const DEFAULT_CHUNK_TOKENS: usize = 8;
 
 #[derive(Debug, Error, PartialEq)]
 pub enum StateError {
@@ -59,6 +81,8 @@ pub enum StateError {
     DimMismatch(String),
     #[error("checksum mismatch (corrupt blob)")]
     BadChecksum,
+    #[error("checksum mismatch in chunk {chunk} (corrupt chunk)")]
+    ChunkChecksum { chunk: usize },
     #[error("blob truncated or malformed: {0}")]
     Malformed(String),
     #[error("n_tokens {n} exceeds cache capacity {cap}")]
@@ -68,8 +92,17 @@ pub enum StateError {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Compression {
     None,
-    /// DEFLATE (flate2) — trades CPU for Wi-Fi bytes, the CacheGen direction.
+    /// DEFLATE (flate2), applied per chunk — trades CPU for Wi-Fi bytes
+    /// while keeping every chunk independently decodable (CacheGen-style).
     Deflate,
+}
+
+/// One chunk-index entry: stored byte length and crc32 of the stored
+/// (possibly deflated) chunk bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkEntry {
+    pub len: u32,
+    pub crc: u32,
 }
 
 /// Parsed blob header (exposed for diagnostics and tests).
@@ -82,57 +115,122 @@ pub struct StateHeader {
     pub head_dim: usize,
     pub n_tokens: usize,
     pub compressed: bool,
+    /// Blob format version (2 = `"ECS2"`, 3 = `"ECS3"`).
+    pub version: u8,
+    /// Tokens per chunk (0 for v2 blobs, which index per token).
+    pub chunk_tokens: usize,
 }
 
-/// Byte-offset arithmetic for the v2 blob layout.  Everything is derivable
-/// from the model identity, so clients compute `GETRANGE`/`SPLICE` offsets
-/// without asking the server anything about the format.
+/// Byte-offset arithmetic for the v3 blob layout.  Everything is derivable
+/// from the model identity plus the chunk size, so clients compute
+/// `GETRANGE`/`SPLICE` offsets without asking the server anything about the
+/// format.
 #[derive(Debug, Clone)]
 pub struct BlobLayout {
     pub hash_len: usize,
     pub n_layers: usize,
     pub n_kv_heads: usize,
     pub head_dim: usize,
+    pub chunk_tokens: usize,
 }
 
 impl BlobLayout {
     pub fn new(model_hash: &str, n_layers: usize, n_kv_heads: usize, head_dim: usize) -> Self {
-        BlobLayout { hash_len: model_hash.len(), n_layers, n_kv_heads, head_dim }
+        BlobLayout {
+            hash_len: model_hash.len(),
+            n_layers,
+            n_kv_heads,
+            head_dim,
+            chunk_tokens: DEFAULT_CHUNK_TOKENS,
+        }
     }
 
-    /// Bytes per token chunk: K and V rows across all layers.
+    pub fn with_chunk_tokens(mut self, chunk_tokens: usize) -> Self {
+        assert!(chunk_tokens >= 1, "chunk_tokens must be >= 1");
+        self.chunk_tokens = chunk_tokens;
+        self
+    }
+
+    /// Bytes per token row: K and V rows across all layers.
     pub fn token_stride(&self) -> usize {
         2 * self.n_layers * self.n_kv_heads * self.head_dim * 4
     }
 
-    /// Offset of the per-token crc32 row index (end of the fixed header).
+    /// Number of chunks holding `rows` tokens.
+    pub fn n_chunks(&self, rows: usize) -> usize {
+        rows.div_ceil(self.chunk_tokens)
+    }
+
+    /// Token rows held by chunk `c` of an entry with `total` rows.
+    pub fn chunk_rows(&self, c: usize, total: usize) -> usize {
+        self.chunk_tokens.min(total - c * self.chunk_tokens)
+    }
+
+    /// Offset of the chunk index (end of the fixed header).
     pub fn index_off(&self) -> usize {
-        4 + 4 + self.hash_len + 5 * 4 + 1 + 4
+        4 + 4 + self.hash_len + 5 * 4 + 1 + 4 + 4
     }
 
-    /// Offset of the first payload byte in a blob holding `total_rows`
-    /// tokens (the row index and the body length prefix sit in between).
+    /// Offset of the first body byte in a blob holding `total_rows` tokens
+    /// (the chunk index and the body length prefix sit in between).  This is
+    /// also the length of the *head* — the header-plus-index prefix a range
+    /// download fetches first.
     pub fn payload_off(&self, total_rows: usize) -> usize {
-        self.index_off() + 4 * total_rows + 4
+        self.index_off() + 8 * self.n_chunks(total_rows) + 4
     }
 
-    /// Total uncompressed blob size for `rows` tokens.
+    /// Total blob size for `rows` tokens in the uncompressed encoding
+    /// (deflated bodies are data-dependent; read their chunk index instead).
     pub fn blob_len(&self, rows: usize) -> usize {
         self.payload_off(rows) + rows * self.token_stride()
     }
+
+    /// Chunks covering an `m`-token prefix.
+    pub fn prefix_chunks(&self, m: usize) -> usize {
+        self.n_chunks(m)
+    }
+
+    /// Token rows actually held by the whole chunks covering an `m`-token
+    /// prefix of a `total`-row entry — `m` rounded up to a chunk boundary,
+    /// clamped to `total`.  A `GETRANGE` for a prefix must fetch exactly
+    /// these rows: per-chunk crcs (and deflate streams) only verify whole
+    /// chunks, so requests never land mid-chunk.
+    pub fn prefix_rows(&self, m: usize, total: usize) -> usize {
+        (self.prefix_chunks(m) * self.chunk_tokens).min(total)
+    }
 }
 
-/// Encode a range alias: "the state for this prefix key lives as the first
-/// `prefix_rows ≤ total_rows` rows of the entry stored at `target_store_key`".
-/// Carries its own crc32 so tampering degrades to a cache miss, never a
-/// wrong restore.
-pub fn encode_range_alias(target_store_key: &[u8], total_rows: usize, compressed: bool) -> Vec<u8> {
-    let mut buf = Vec::with_capacity(4 + 4 + target_store_key.len() + 4 + 1 + 4);
+/// A decoded range alias: "the state for this prefix key lives as the first
+/// `total_rows` rows of the entry stored at `target_key`".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RangeAlias {
+    pub target_key: Vec<u8>,
+    pub total_rows: usize,
+    pub compressed: bool,
+    /// Chunk size (tokens) of the ECS3 target entry, so range requests can
+    /// be chunk-aligned without fetching the target's header first.  `None`
+    /// for alias records written before chunking (v2 targets) — those fall
+    /// back to the legacy per-token range path (uncompressed) or a full-blob
+    /// download (compressed).
+    pub chunk_tokens: Option<usize>,
+}
+
+/// Encode a range alias.  Carries its own crc32 so tampering degrades to a
+/// cache miss, never a wrong restore.
+pub fn encode_range_alias(
+    target_store_key: &[u8],
+    total_rows: usize,
+    compressed: bool,
+    chunk_tokens: usize,
+) -> Vec<u8> {
+    assert!(chunk_tokens >= 1, "chunk_tokens must be >= 1");
+    let mut buf = Vec::with_capacity(4 + 4 + target_store_key.len() + 4 + 1 + 4 + 4);
     buf.extend_from_slice(ALIAS_MAGIC);
     buf.extend_from_slice(&(target_store_key.len() as u32).to_le_bytes());
     buf.extend_from_slice(target_store_key);
     buf.extend_from_slice(&(total_rows as u32).to_le_bytes());
     buf.push(compressed as u8);
+    buf.extend_from_slice(&(chunk_tokens as u32).to_le_bytes());
     let mut crc = Crc32::new();
     crc.update(&buf[4..]);
     buf.extend_from_slice(&crc.finalize().to_le_bytes());
@@ -140,7 +238,9 @@ pub fn encode_range_alias(target_store_key: &[u8], total_rows: usize, compressed
 }
 
 /// Decode a range alias; `None` when `blob` is not a (well-formed) alias.
-pub fn decode_range_alias(blob: &[u8]) -> Option<(Vec<u8>, usize, bool)> {
+/// Accepts both the chunked record and the pre-chunking legacy record
+/// (which lacks the chunk size field).
+pub fn decode_range_alias(blob: &[u8]) -> Option<RangeAlias> {
     if blob.len() < 4 || &blob[..4] != ALIAS_MAGIC {
         return None;
     }
@@ -148,6 +248,14 @@ pub fn decode_range_alias(blob: &[u8]) -> Option<(Vec<u8>, usize, bool)> {
     let key = r.lp_bytes().ok()?.to_vec();
     let rows = r.u32().ok()? as usize;
     let compressed = r.u8().ok()? != 0;
+    let chunk_tokens = match r.remaining() {
+        8 => match r.u32().ok()? as usize {
+            0 => return None, // a zero chunk size is never written
+            ct => Some(ct),
+        },
+        4 => None, // legacy record: crc only
+        _ => return None,
+    };
     let stored = r.u32().ok()?;
     if r.remaining() != 0 {
         return None;
@@ -157,7 +265,65 @@ pub fn decode_range_alias(blob: &[u8]) -> Option<(Vec<u8>, usize, bool)> {
     if crc.finalize() != stored {
         return None;
     }
-    Some((key, rows, compressed))
+    Some(RangeAlias { target_key: key, total_rows: rows, compressed, chunk_tokens })
+}
+
+/// Parse an ECS3 head (any byte prefix of a blob covering the header and the
+/// whole chunk index): returns the chunk size and the verified chunk index.
+/// `None` for v2 blobs, garbage, a truncated index or an index crc mismatch.
+pub fn read_chunk_index(head: &[u8]) -> Option<(usize, Vec<ChunkEntry>)> {
+    let hdr = KvState::peek_header(head).ok()?;
+    if hdr.version != 3 || hdr.chunk_tokens == 0 {
+        return None;
+    }
+    let lo = BlobLayout::new(&hdr.model_hash, hdr.n_layers, hdr.n_kv_heads, hdr.head_dim)
+        .with_chunk_tokens(hdr.chunk_tokens);
+    let idx_off = lo.index_off();
+    let nch = lo.n_chunks(hdr.n_tokens);
+    if head.len() < idx_off + 8 * nch {
+        return None;
+    }
+    let stored = u32::from_le_bytes(head[idx_off - 4..idx_off].try_into().unwrap());
+    let index = &head[idx_off..idx_off + 8 * nch];
+    let mut crc = Crc32::new();
+    crc.update(index);
+    if crc.finalize() != stored {
+        return None;
+    }
+    let entries = index
+        .chunks_exact(8)
+        .map(|e| ChunkEntry {
+            len: u32::from_le_bytes(e[..4].try_into().unwrap()),
+            crc: u32::from_le_bytes(e[4..].try_into().unwrap()),
+        })
+        .collect();
+    Some((hdr.chunk_tokens, entries))
+}
+
+/// Inflate (or borrow) one stored chunk, expecting exactly `expect` payload
+/// bytes.  The decoder is bounded at `expect + 1` bytes so a deflate-bomb
+/// chunk (small stored bytes, huge inflated size — its crc still matches,
+/// since crcs cover the *stored* bytes) is rejected after one extra byte
+/// instead of exhausting an edge device's memory.
+fn chunk_payload(bytes: &[u8], compressed: bool, expect: usize) -> Result<Cow<'_, [u8]>, StateError> {
+    if !compressed {
+        return Ok(Cow::Borrowed(bytes));
+    }
+    use flate2::read::DeflateDecoder;
+    use std::io::Read as _;
+    let mut out = Vec::with_capacity(expect.min(1 << 20));
+    DeflateDecoder::new(bytes)
+        .take(expect as u64 + 1)
+        .read_to_end(&mut out)
+        .map_err(|e| StateError::Malformed(format!("deflate: {e}")))?;
+    if out.len() != expect {
+        return Err(StateError::Malformed(format!(
+            "chunk inflates to {} bytes, expected {expect}",
+            out.len()
+        )));
+    }
+    copymeter::add(out.len());
+    Ok(Cow::Owned(out))
 }
 
 /// Live KV cache: what the engine threads through every PJRT call.
@@ -207,18 +373,16 @@ impl KvState {
         2 * self.n_layers * n_tokens * self.row_elems() * 4
     }
 
-    fn layout_for(&self, model_hash: &str) -> BlobLayout {
+    fn layout_for(&self, model_hash: &str, chunk_tokens: usize) -> BlobLayout {
         BlobLayout::new(model_hash, self.n_layers, self.n_kv_heads, self.head_dim)
+            .with_chunk_tokens(chunk_tokens)
     }
 
-    /// Gather the first `m` token chunks (token-major) into `dst`,
-    /// returning each chunk's crc32.
-    fn gather_rows_into(&self, m: usize, dst: &mut Vec<u8>) -> Vec<u32> {
+    /// Gather token rows `[t0, t0+rows)` (token-major) into `dst`.
+    fn gather_rows_into(&self, t0: usize, rows: usize, dst: &mut Vec<u8>) {
         let row = self.row_elems();
         let le = self.layer_elems();
-        let mut crcs = Vec::with_capacity(m);
-        for t in 0..m {
-            let cs = dst.len();
+        for t in t0..t0 + rows {
             for l in 0..self.n_layers {
                 let o = l * le + t * row;
                 dst.extend_from_slice(f32_as_bytes(&self.k[o..o + row]));
@@ -227,21 +391,17 @@ impl KvState {
                 let o = l * le + t * row;
                 dst.extend_from_slice(f32_as_bytes(&self.v[o..o + row]));
             }
-            let mut c = Crc32::new();
-            c.update(&dst[cs..]);
-            crcs.push(c.finalize());
         }
-        crcs
     }
 
-    /// Scatter `m` token chunks of payload back into the `[L, S, Kh, D]`
-    /// live tensors (inverse of [`KvState::gather_rows_into`]).
-    fn scatter_rows(&mut self, payload: &[u8], m: usize) {
+    /// Scatter `m` token rows of payload into the `[L, S, Kh, D]` live
+    /// tensors starting at token `t0` (inverse of [`KvState::gather_rows_into`]).
+    fn scatter_rows_at(&mut self, payload: &[u8], t0: usize, m: usize) {
         let row = self.row_elems();
         let le = self.layer_elems();
         let rb = row * 4;
         let mut src = 0usize;
-        for t in 0..m {
+        for t in t0..t0 + m {
             for l in 0..self.n_layers {
                 let o = l * le + t * row;
                 f32_as_bytes_mut(&mut self.k[o..o + row])
@@ -258,63 +418,92 @@ impl KvState {
         copymeter::add(src);
     }
 
-    /// Single-pass blob writer: the header, row index and payload land in
-    /// one allocation (the uncompressed path writes every payload byte
-    /// exactly once — there is no intermediate payload buffer to copy out
-    /// of, which is half of the zero-copy pipeline's budget).
-    fn write_blob(&self, m: usize, model_hash: &str, compression: Compression) -> Vec<u8> {
+    /// Single-pass v3 blob writer.  Token rows are grouped into chunks of
+    /// `chunk_tokens`; each chunk is written (and, for `Deflate`, compressed)
+    /// independently and indexed by (stored length, crc32).  When `prefix`
+    /// is non-empty, those entries describe already-stored chunks `[0,
+    /// prefix.len())` of a base entry with identical geometry/compression:
+    /// their bytes are *not* written — the caller splices them in
+    /// server-side — but their index entries land in the header so the
+    /// assembled entry is self-consistent.  Returns the buffer and the
+    /// offset where the body starts (the head/tail split for `SPLICE`).
+    fn write_blob_v3(
+        &self,
+        m: usize,
+        model_hash: &str,
+        compression: Compression,
+        chunk_tokens: usize,
+        prefix: &[ChunkEntry],
+    ) -> (Vec<u8>, usize) {
         assert!(m <= self.n_tokens, "prefix {m} > valid {}", self.n_tokens);
+        assert!(chunk_tokens >= 1, "chunk_tokens must be >= 1");
+        assert!(
+            prefix.len() * chunk_tokens <= m,
+            "{} reused chunks exceed the {m}-row blob",
+            prefix.len()
+        );
         let flags: u8 = match compression {
             Compression::None => 0,
             Compression::Deflate => 1,
         };
-        let lo = self.layout_for(model_hash);
+        let lo = self.layout_for(model_hash, chunk_tokens);
+        let n_chunks = lo.n_chunks(m);
+        let stride = lo.token_stride();
         let mut buf: Vec<u8> = Vec::with_capacity(lo.blob_len(m));
-        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(MAGIC_V3);
         buf.extend_from_slice(&(model_hash.len() as u32).to_le_bytes());
         buf.extend_from_slice(model_hash.as_bytes());
         for v in [self.n_layers, self.max_seq, self.n_kv_heads, self.head_dim, m] {
             buf.extend_from_slice(&(v as u32).to_le_bytes());
         }
         buf.push(flags);
+        buf.extend_from_slice(&(chunk_tokens as u32).to_le_bytes());
         let crc_pos = buf.len();
         buf.extend_from_slice(&[0u8; 4]);
         let idx_pos = buf.len();
-        buf.resize(idx_pos + 4 * m, 0);
+        buf.resize(idx_pos + 8 * n_chunks, 0);
         let lp_pos = buf.len();
         buf.extend_from_slice(&[0u8; 4]);
         let pay_pos = buf.len();
 
-        let crcs = match compression {
-            Compression::None => {
-                let crcs = self.gather_rows_into(m, &mut buf);
-                copymeter::add(buf.len() - pay_pos);
-                crcs
+        let mut entries: Vec<ChunkEntry> = prefix.to_vec();
+        let prefix_span: usize = prefix.iter().map(|e| e.len as usize).sum();
+        for c in prefix.len()..n_chunks {
+            let rows = lo.chunk_rows(c, m);
+            let cs = buf.len();
+            match compression {
+                Compression::None => {
+                    self.gather_rows_into(c * chunk_tokens, rows, &mut buf);
+                    copymeter::add(rows * stride);
+                }
+                Compression::Deflate => {
+                    use flate2::write::DeflateEncoder;
+                    use flate2::Compression as Level;
+                    use std::io::Write as _;
+                    let mut raw = Vec::with_capacity(rows * stride);
+                    self.gather_rows_into(c * chunk_tokens, rows, &mut raw);
+                    copymeter::add(raw.len());
+                    let mut enc = DeflateEncoder::new(buf, Level::fast());
+                    enc.write_all(&raw).expect("in-memory deflate");
+                    buf = enc.finish().expect("in-memory deflate");
+                }
             }
-            Compression::Deflate => {
-                use flate2::write::DeflateEncoder;
-                use flate2::Compression as Level;
-                use std::io::Write as _;
-                let mut payload = Vec::with_capacity(self.payload_bytes(m));
-                let crcs = self.gather_rows_into(m, &mut payload);
-                copymeter::add(payload.len());
-                let mut enc = DeflateEncoder::new(buf, Level::fast());
-                enc.write_all(&payload).expect("in-memory deflate");
-                buf = enc.finish().expect("in-memory deflate");
-                crcs
-            }
-        };
-        for (t, c) in crcs.iter().enumerate() {
-            buf[idx_pos + 4 * t..idx_pos + 4 * t + 4].copy_from_slice(&c.to_le_bytes());
+            let mut crc = Crc32::new();
+            crc.update(&buf[cs..]);
+            entries.push(ChunkEntry { len: (buf.len() - cs) as u32, crc: crc.finalize() });
         }
-        let body_len = buf.len() - pay_pos;
+        for (c, e) in entries.iter().enumerate() {
+            buf[idx_pos + 8 * c..idx_pos + 8 * c + 4].copy_from_slice(&e.len.to_le_bytes());
+            buf[idx_pos + 8 * c + 4..idx_pos + 8 * c + 8]
+                .copy_from_slice(&e.crc.to_le_bytes());
+        }
+        let body_len = prefix_span + (buf.len() - pay_pos);
         buf[lp_pos..lp_pos + 4].copy_from_slice(&(body_len as u32).to_le_bytes());
         let mut crc = Crc32::new();
-        crc.update(&buf[idx_pos..idx_pos + 4 * m]);
-        crc.update(&buf[pay_pos..]);
+        crc.update(&buf[idx_pos..idx_pos + 8 * n_chunks]);
         let crc = crc.finalize();
         buf[crc_pos..crc_pos + 4].copy_from_slice(&crc.to_le_bytes());
-        buf
+        (buf, pay_pos)
     }
 
     /// Snapshot only the first `m` tokens of this state (m ≤ n_tokens).
@@ -326,19 +515,41 @@ impl KvState {
         model_hash: &str,
         compression: Compression,
     ) -> Vec<u8> {
-        self.write_blob(m, model_hash, compression)
+        self.write_blob_v3(m, model_hash, compression, DEFAULT_CHUNK_TOKENS, &[]).0
+    }
+
+    /// [`KvState::serialize_prefix`] with an explicit chunk size.
+    pub fn serialize_prefix_opts(
+        &self,
+        m: usize,
+        model_hash: &str,
+        compression: Compression,
+        chunk_tokens: usize,
+    ) -> Vec<u8> {
+        self.write_blob_v3(m, model_hash, compression, chunk_tokens, &[]).0
     }
 
     /// `llama_state_get_data()` analog: snapshot the valid prefix.
     pub fn serialize(&self, model_hash: &str, compression: Compression) -> Vec<u8> {
-        self.write_blob(self.n_tokens, model_hash, compression)
+        self.serialize_prefix(self.n_tokens, model_hash, compression)
     }
 
     /// Like [`KvState::serialize`] but handing back a [`SharedBytes`] so the
-    /// blob can be sliced (header / row ranges) and queued on the wire
+    /// blob can be sliced (head / chunk ranges) and queued on the wire
     /// without further copies.
     pub fn serialize_shared(&self, model_hash: &str, compression: Compression) -> SharedBytes {
-        SharedBytes::new(self.write_blob(self.n_tokens, model_hash, compression))
+        SharedBytes::new(self.serialize(model_hash, compression))
+    }
+
+    /// [`KvState::serialize_prefix_opts`] into a [`SharedBytes`].
+    pub fn serialize_prefix_shared_opts(
+        &self,
+        m: usize,
+        model_hash: &str,
+        compression: Compression,
+        chunk_tokens: usize,
+    ) -> SharedBytes {
+        SharedBytes::new(self.serialize_prefix_opts(m, model_hash, compression, chunk_tokens))
     }
 
     /// [`KvState::serialize_prefix`] into a [`SharedBytes`].
@@ -348,18 +559,44 @@ impl KvState {
         model_hash: &str,
         compression: Compression,
     ) -> SharedBytes {
-        SharedBytes::new(self.write_blob(m, model_hash, compression))
+        SharedBytes::new(self.serialize_prefix(m, model_hash, compression))
+    }
+
+    /// Build the `SPLICE` halves of an `n`-row blob whose first
+    /// `prefix.len()` chunks are reused verbatim from a base entry with the
+    /// same geometry, chunk size and compression: returns `(head, tail)`
+    /// where `head` is the new header + chunk index + body length prefix and
+    /// `tail` is the freshly written suffix chunks.  The server assembles
+    /// `head ++ base_chunk_bytes ++ tail`; only the suffix is ever gathered
+    /// or compressed here — the delta upload's CPU *and* wire saving.
+    pub fn serialize_for_splice(
+        &self,
+        n: usize,
+        model_hash: &str,
+        compression: Compression,
+        chunk_tokens: usize,
+        prefix: &[ChunkEntry],
+    ) -> (SharedBytes, SharedBytes) {
+        let (buf, pay_pos) = self.write_blob_v3(n, model_hash, compression, chunk_tokens, prefix);
+        let whole = SharedBytes::new(buf);
+        let len = whole.len();
+        (whole.slice(0..pay_pos), whole.slice(pay_pos..len))
     }
 
     /// Parse and verify a blob header without restoring (cheap peek).  Works
     /// on any prefix of the blob that covers the fixed header, so the
-    /// range-download path can validate a `GETRANGE` head slice.
+    /// range-download path can validate a `GETRANGE` head slice.  Accepts
+    /// both v3 (`"ECS3"`) and legacy v2 (`"ECS2"`) headers.
     pub fn peek_header(blob: &[u8]) -> Result<StateHeader, StateError> {
         let mut r = Reader::new(blob);
         let magic = r.bytes(4).map_err(|e| StateError::Malformed(e.to_string()))?;
-        if magic != MAGIC {
+        let version = if magic == MAGIC_V3 {
+            3u8
+        } else if magic == MAGIC_V2 {
+            2u8
+        } else {
             return Err(StateError::BadMagic);
-        }
+        };
         let model_hash = r
             .lp_str()
             .map_err(|e| StateError::Malformed(e.to_string()))?
@@ -373,6 +610,11 @@ impl KvState {
         let head_dim = u()?;
         let n_tokens = u()?;
         let flags = r.u8().map_err(|e| StateError::Malformed(e.to_string()))?;
+        let chunk_tokens = if version == 3 {
+            r.u32().map_err(|e| StateError::Malformed(e.to_string()))? as usize
+        } else {
+            0
+        };
         Ok(StateHeader {
             model_hash,
             n_layers,
@@ -381,6 +623,8 @@ impl KvState {
             head_dim,
             n_tokens,
             compressed: flags & 1 != 0,
+            version,
+            chunk_tokens,
         })
     }
 
@@ -409,6 +653,8 @@ impl KvState {
     }
 
     /// `llama_state_set_data()` analog: verify + restore into a fresh state.
+    /// Dispatches on the header magic: v3 blobs verify the index crc and
+    /// every chunk crc; legacy v2 blobs take the whole-body path.
     pub fn restore(
         blob: &[u8],
         expect_model_hash: &str,
@@ -416,9 +662,88 @@ impl KvState {
     ) -> Result<KvState, StateError> {
         let hdr = Self::peek_header(blob)?;
         Self::check_identity(&hdr, expect_model_hash, expect_dims)?;
+        if hdr.version == 2 {
+            return Self::restore_v2(blob, &hdr, expect_dims);
+        }
+        if hdr.chunk_tokens == 0 {
+            return Err(StateError::Malformed("chunk_tokens 0".into()));
+        }
         let (l, s, kh, d) = expect_dims;
+        let lo = BlobLayout::new(expect_model_hash, l, kh, d)
+            .with_chunk_tokens(hdr.chunk_tokens);
+        let nch = lo.n_chunks(hdr.n_tokens);
 
-        // re-walk the header to find index and body
+        // re-walk the header to find the index and the body
+        let mut r = Reader::new(blob);
+        r.bytes(4).unwrap();
+        r.lp_bytes().unwrap();
+        for _ in 0..5 {
+            r.u32().unwrap();
+        }
+        r.u8().unwrap();
+        r.u32().unwrap(); // chunk_tokens
+        let crc_stored = r.u32().map_err(|e| StateError::Malformed(e.to_string()))?;
+        let index = r
+            .bytes(8 * nch)
+            .map_err(|e| StateError::Malformed(e.to_string()))?;
+        let body = r
+            .lp_bytes()
+            .map_err(|e| StateError::Malformed(e.to_string()))?;
+        if r.remaining() != 0 {
+            return Err(StateError::Malformed("trailing bytes".into()));
+        }
+        let mut crc = Crc32::new();
+        crc.update(index);
+        if crc.finalize() != crc_stored {
+            return Err(StateError::BadChecksum);
+        }
+        let total_span: usize = index
+            .chunks_exact(8)
+            .map(|e| u32::from_le_bytes(e[..4].try_into().unwrap()) as usize)
+            .sum();
+        if total_span != body.len() {
+            return Err(StateError::Malformed(format!(
+                "chunk lengths sum to {total_span}, body holds {}",
+                body.len()
+            )));
+        }
+
+        let stride = lo.token_stride();
+        let mut st = KvState::zeroed(l, s, kh, d);
+        st.n_tokens = hdr.n_tokens;
+        let mut off = 0usize;
+        for (c, e) in index.chunks_exact(8).enumerate() {
+            let clen = u32::from_le_bytes(e[..4].try_into().unwrap()) as usize;
+            let want = u32::from_le_bytes(e[4..].try_into().unwrap());
+            let bytes = &body[off..off + clen];
+            off += clen;
+            let mut crc = Crc32::new();
+            crc.update(bytes);
+            if crc.finalize() != want {
+                return Err(StateError::ChunkChecksum { chunk: c });
+            }
+            let rows = lo.chunk_rows(c, hdr.n_tokens);
+            let raw = chunk_payload(bytes, hdr.compressed, rows * stride)?;
+            if raw.len() != rows * stride {
+                return Err(StateError::Malformed(format!(
+                    "chunk {c}: {} payload bytes, expected {}",
+                    raw.len(),
+                    rows * stride
+                )));
+            }
+            st.scatter_rows_at(&raw, c * hdr.chunk_tokens, rows);
+        }
+        Ok(st)
+    }
+
+    /// Legacy v2 (`"ECS2"`) whole-blob restore: per-token crc row index,
+    /// whole-body compression, header crc over index ++ body.
+    fn restore_v2(
+        blob: &[u8],
+        hdr: &StateHeader,
+        expect_dims: (usize, usize, usize, usize),
+    ) -> Result<KvState, StateError> {
+        let (l, s, kh, d) = expect_dims;
         let mut r = Reader::new(blob);
         r.bytes(4).unwrap();
         r.lp_bytes().unwrap();
@@ -442,40 +767,30 @@ impl KvState {
         if crc.finalize() != crc_stored {
             return Err(StateError::BadChecksum);
         }
-
-        let inflated;
-        let payload: &[u8] = if hdr.compressed {
-            use flate2::read::DeflateDecoder;
-            use std::io::Read as _;
-            let mut out = Vec::new();
-            DeflateDecoder::new(body)
-                .read_to_end(&mut out)
-                .map_err(|e| StateError::Malformed(format!("deflate: {e}")))?;
-            inflated = out;
-            &inflated
-        } else {
-            body
-        };
-
         let mut st = KvState::zeroed(l, s, kh, d);
         st.n_tokens = hdr.n_tokens;
         let expect_len = st.payload_bytes(hdr.n_tokens);
+        let payload = chunk_payload(body, hdr.compressed, expect_len)?;
         if payload.len() != expect_len {
             return Err(StateError::Malformed(format!(
                 "payload {} bytes, expected {expect_len}",
                 payload.len()
             )));
         }
-        st.scatter_rows(payload, hdr.n_tokens);
+        st.scatter_rows_at(&payload, 0, hdr.n_tokens);
         Ok(st)
     }
 
-    /// Restore the first `m` tokens from a *partially fetched* blob:
-    /// `head` is a byte prefix of the stored blob covering the fixed header
-    /// plus at least `m` row-index entries; `rows` is the payload slice for
-    /// token chunks `[0, m)` (`GETRANGE`-fetched).  Each chunk is verified
-    /// against its indexed crc32, so a truncated, stale or corrupted range
-    /// degrades to an error — never a poisoned cache.
+    /// Restore the first `m` tokens from a *partially fetched* blob: `head`
+    /// is a byte prefix of the stored blob covering the fixed header plus
+    /// the whole chunk index; `rows` is the body slice holding the whole
+    /// chunks that cover tokens `[0, m)` (`GETRANGE`-fetched — see
+    /// [`BlobLayout::prefix_rows`]).  The index crc and each chunk's crc are
+    /// verified, so a truncated, stale or corrupted range degrades to an
+    /// error — never a poisoned cache — and a corrupt chunk is reported
+    /// chunk-granularly ([`StateError::ChunkChecksum`]): prefixes that stop
+    /// short of it still restore.  v2 heads (uncompressed only) take the
+    /// legacy per-token path.
     pub fn restore_prefix_from_parts(
         head: &[u8],
         rows: &[u8],
@@ -485,11 +800,6 @@ impl KvState {
     ) -> Result<KvState, StateError> {
         let hdr = Self::peek_header(head)?;
         Self::check_identity(&hdr, expect_model_hash, expect_dims)?;
-        if hdr.compressed {
-            return Err(StateError::Malformed(
-                "compressed blob cannot be range-restored".into(),
-            ));
-        }
         if hdr.n_tokens < m {
             return Err(StateError::Malformed(format!(
                 "entry holds {} rows, need {m}",
@@ -500,12 +810,89 @@ impl KvState {
         if m > s {
             return Err(StateError::TooLong { n: m, cap: s });
         }
-        let lo = BlobLayout::new(expect_model_hash, l, kh, d);
+        if hdr.version == 2 {
+            return Self::restore_prefix_v2(head, rows, m, &hdr, expect_dims);
+        }
+        if hdr.chunk_tokens == 0 {
+            return Err(StateError::Malformed("chunk_tokens 0".into()));
+        }
+        let ct = hdr.chunk_tokens;
+        let lo = BlobLayout::new(expect_model_hash, l, kh, d).with_chunk_tokens(ct);
         let idx_off = lo.index_off();
+        let nch_total = lo.n_chunks(hdr.n_tokens);
+        if head.len() < idx_off + 8 * nch_total {
+            return Err(StateError::Malformed("chunk index truncated".into()));
+        }
+        let crc_stored =
+            u32::from_le_bytes(head[idx_off - 4..idx_off].try_into().unwrap());
+        let index = &head[idx_off..idx_off + 8 * nch_total];
+        let mut crc = Crc32::new();
+        crc.update(index);
+        if crc.finalize() != crc_stored {
+            return Err(StateError::BadChecksum);
+        }
+        let k = lo.prefix_chunks(m);
+        let span: usize = index
+            .chunks_exact(8)
+            .take(k)
+            .map(|e| u32::from_le_bytes(e[..4].try_into().unwrap()) as usize)
+            .sum();
+        if rows.len() != span {
+            return Err(StateError::Malformed(format!(
+                "chunk payload {} bytes, expected {span}",
+                rows.len()
+            )));
+        }
+        let stride = lo.token_stride();
+        let mut st = KvState::zeroed(l, s, kh, d);
+        st.n_tokens = m;
+        let mut off = 0usize;
+        for (c, e) in index.chunks_exact(8).take(k).enumerate() {
+            let clen = u32::from_le_bytes(e[..4].try_into().unwrap()) as usize;
+            let want = u32::from_le_bytes(e[4..].try_into().unwrap());
+            let bytes = &rows[off..off + clen];
+            off += clen;
+            let mut crc = Crc32::new();
+            crc.update(bytes);
+            if crc.finalize() != want {
+                return Err(StateError::ChunkChecksum { chunk: c });
+            }
+            // the stored chunk belongs to the n_tokens-row entry; the final
+            // fetched chunk may extend past m — scatter only what we need
+            let stored_rows = lo.chunk_rows(c, hdr.n_tokens);
+            let raw = chunk_payload(bytes, hdr.compressed, stored_rows * stride)?;
+            if raw.len() != stored_rows * stride {
+                return Err(StateError::Malformed(format!(
+                    "chunk {c}: {} payload bytes, expected {}",
+                    raw.len(),
+                    stored_rows * stride
+                )));
+            }
+            let need = stored_rows.min(m - c * ct);
+            st.scatter_rows_at(&raw[..need * stride], c * ct, need);
+        }
+        Ok(st)
+    }
+
+    /// Legacy v2 partial restore (uncompressed per-token rows).
+    fn restore_prefix_v2(
+        head: &[u8],
+        rows: &[u8],
+        m: usize,
+        hdr: &StateHeader,
+        expect_dims: (usize, usize, usize, usize),
+    ) -> Result<KvState, StateError> {
+        if hdr.compressed {
+            return Err(StateError::Malformed(
+                "v2 compressed blob cannot be range-restored".into(),
+            ));
+        }
+        let (l, s, kh, d) = expect_dims;
+        let idx_off = 4 + 4 + hdr.model_hash.len() + 5 * 4 + 1 + 4;
         if head.len() < idx_off + 4 * m {
             return Err(StateError::Malformed("row index truncated".into()));
         }
-        let stride = lo.token_stride();
+        let stride = 2 * l * kh * d * 4;
         if rows.len() != m * stride {
             return Err(StateError::Malformed(format!(
                 "row payload {} bytes, expected {}",
@@ -525,7 +912,7 @@ impl KvState {
         }
         let mut st = KvState::zeroed(l, s, kh, d);
         st.n_tokens = m;
-        st.scatter_rows(rows, m);
+        st.scatter_rows_at(rows, 0, m);
         Ok(st)
     }
 }
@@ -551,6 +938,44 @@ mod tests {
         st
     }
 
+    /// Hand-written legacy v2 (`"ECS2"`) uncompressed writer, kept test-side
+    /// only: pins the promise that old blobs keep deserializing.
+    fn write_v2_blob(st: &KvState, model_hash: &str) -> Vec<u8> {
+        let m = st.n_tokens;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"ECS2");
+        buf.extend_from_slice(&(model_hash.len() as u32).to_le_bytes());
+        buf.extend_from_slice(model_hash.as_bytes());
+        for v in [st.n_layers, st.max_seq, st.n_kv_heads, st.head_dim, m] {
+            buf.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        buf.push(0u8); // flags: uncompressed
+        let crc_pos = buf.len();
+        buf.extend_from_slice(&[0u8; 4]);
+        let idx_pos = buf.len();
+        buf.resize(idx_pos + 4 * m, 0);
+        let mut payload = Vec::new();
+        let mut crcs = Vec::with_capacity(m);
+        for t in 0..m {
+            let cs = payload.len();
+            st.gather_rows_into(t, 1, &mut payload);
+            let mut c = Crc32::new();
+            c.update(&payload[cs..]);
+            crcs.push(c.finalize());
+        }
+        for (t, c) in crcs.iter().enumerate() {
+            buf[idx_pos + 4 * t..idx_pos + 4 * t + 4].copy_from_slice(&c.to_le_bytes());
+        }
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        let mut crc = Crc32::new();
+        crc.update(&buf[idx_pos..idx_pos + 4 * m]);
+        crc.update(&payload);
+        let crc = crc.finalize();
+        buf[crc_pos..crc_pos + 4].copy_from_slice(&crc.to_le_bytes());
+        buf
+    }
+
     #[test]
     fn roundtrip_uncompressed() {
         let st = filled(2, 16, 2, 8, 5, 1);
@@ -570,6 +995,43 @@ mod tests {
         assert_eq!(back.v, st.v);
         let hdr = KvState::peek_header(&blob).unwrap();
         assert!(hdr.compressed);
+        assert_eq!(hdr.version, 3);
+        assert_eq!(hdr.chunk_tokens, DEFAULT_CHUNK_TOKENS);
+    }
+
+    #[test]
+    fn legacy_v2_blob_still_restores() {
+        let st = filled(2, 16, 1, 8, 9, 33);
+        let blob = write_v2_blob(&st, "h2");
+        let hdr = KvState::peek_header(&blob).unwrap();
+        assert_eq!(hdr.version, 2);
+        assert_eq!(hdr.chunk_tokens, 0);
+        let back = KvState::restore(&blob, "h2", (2, 16, 1, 8)).unwrap();
+        assert_eq!(back, st);
+        // and the v2 per-token range path still assembles prefixes
+        let idx_off = 4 + 4 + 2 + 5 * 4 + 1 + 4;
+        let stride = 2 * 2 * 1 * 8 * 4;
+        let pay_off = idx_off + 4 * 9 + 4;
+        let m = 4;
+        let head = &blob[..idx_off + 4 * m];
+        let rows = &blob[pay_off..pay_off + m * stride];
+        let part =
+            KvState::restore_prefix_from_parts(head, rows, m, "h2", (2, 16, 1, 8)).unwrap();
+        let trunc = {
+            // the expected truncated state: rows past m zeroed in every layer
+            let mut t = st.clone();
+            let row = t.row_elems();
+            let le = t.layer_elems();
+            for li in 0..t.n_layers {
+                for e in m * row..le {
+                    t.k[li * le + e] = 0.0;
+                    t.v[li * le + e] = 0.0;
+                }
+            }
+            t.n_tokens = m;
+            t
+        };
+        assert_eq!(part, trunc);
     }
 
     #[test]
@@ -579,7 +1041,7 @@ mod tests {
         let st40 = filled(2, 64, 2, 8, 40, 3);
         let b20 = st20.serialize("h", Compression::None).len();
         let b40 = st40.serialize("h", Compression::None).len();
-        let overhead = 64;
+        let overhead = 128;
         assert!(b40 - overhead > (b20 - overhead) * 19 / 10, "{b20} -> {b40}");
         assert_eq!(st20.payload_bytes(20), 2 * 2 * 20 * 2 * 8 * 4);
     }
@@ -592,7 +1054,8 @@ mod tests {
         assert_eq!(blob.len(), lo.blob_len(7));
         assert_eq!(lo.token_stride(), 2 * 2 * 2 * 8 * 4);
         // the token-major property: the payload of a shorter prefix blob is
-        // a byte-prefix of the longer blob's payload
+        // a byte-prefix of the longer blob's payload (uncompressed bodies
+        // are raw token-major rows regardless of chunking)
         let blob3 = st.serialize_prefix(3, "hash!", Compression::None);
         assert_eq!(
             &blob3[lo.payload_off(3)..],
@@ -601,57 +1064,139 @@ mod tests {
     }
 
     #[test]
-    fn restore_prefix_from_parts_matches_truncated_blob() {
-        let st = filled(3, 16, 1, 8, 10, 11);
-        let blob = st.serialize("h", Compression::None);
-        let lo = BlobLayout::new("h", 3, 1, 8);
-        for m in [1usize, 4, 10] {
-            let head = &blob[..lo.index_off() + 4 * m];
-            let rows =
-                &blob[lo.payload_off(10)..lo.payload_off(10) + m * lo.token_stride()];
-            let part =
-                KvState::restore_prefix_from_parts(head, rows, m, "h", (3, 16, 1, 8)).unwrap();
-            let trunc = KvState::restore(
-                &st.serialize_prefix(m, "h", Compression::None),
-                "h",
-                (3, 16, 1, 8),
-            )
-            .unwrap();
-            assert_eq!(part, trunc, "m={m}");
+    fn chunk_layout_math() {
+        let lo = BlobLayout::new("h", 1, 1, 4).with_chunk_tokens(4);
+        assert_eq!(lo.n_chunks(0), 0);
+        assert_eq!(lo.n_chunks(1), 1);
+        assert_eq!(lo.n_chunks(4), 1);
+        assert_eq!(lo.n_chunks(5), 2);
+        assert_eq!(lo.chunk_rows(0, 10), 4);
+        assert_eq!(lo.chunk_rows(2, 10), 2);
+        // prefix fetches are chunk-aligned, clamped to the entry
+        assert_eq!(lo.prefix_rows(1, 10), 4);
+        assert_eq!(lo.prefix_rows(4, 10), 4);
+        assert_eq!(lo.prefix_rows(5, 10), 8);
+        assert_eq!(lo.prefix_rows(9, 10), 10);
+        for m in 1..=10usize {
+            let pr = lo.prefix_rows(m, 10);
+            assert!(pr >= m);
+            assert!(pr % 4 == 0 || pr == 10, "prefix_rows({m}) = {pr} mid-chunk");
         }
     }
 
     #[test]
-    fn restore_prefix_rejects_corrupt_rows() {
-        let st = filled(2, 8, 1, 4, 6, 13);
-        let blob = st.serialize("h", Compression::None);
-        let lo = BlobLayout::new("h", 2, 1, 4);
-        let m = 4;
-        let head = &blob[..lo.index_off() + 4 * m];
-        let mut rows =
-            blob[lo.payload_off(6)..lo.payload_off(6) + m * lo.token_stride()].to_vec();
-        rows[7] ^= 0x10;
+    fn restore_prefix_from_parts_matches_truncated_blob() {
+        for comp in [Compression::None, Compression::Deflate] {
+            let st = filled(3, 16, 1, 8, 10, 11);
+            let ct = 4;
+            let blob = st.serialize_prefix_opts(10, "h", comp, ct);
+            let lo = BlobLayout::new("h", 3, 1, 8).with_chunk_tokens(ct);
+            let (ct2, entries) = read_chunk_index(&blob).unwrap();
+            assert_eq!(ct2, ct);
+            for m in [1usize, 4, 7, 10] {
+                let head = &blob[..lo.payload_off(10)];
+                let span: usize = entries
+                    .iter()
+                    .take(lo.prefix_chunks(m))
+                    .map(|e| e.len as usize)
+                    .sum();
+                let rows = &blob[lo.payload_off(10)..lo.payload_off(10) + span];
+                let part = KvState::restore_prefix_from_parts(head, rows, m, "h", (3, 16, 1, 8))
+                    .unwrap();
+                let trunc = KvState::restore(
+                    &st.serialize_prefix_opts(m, "h", comp, ct),
+                    "h",
+                    (3, 16, 1, 8),
+                )
+                .unwrap();
+                assert_eq!(part, trunc, "m={m} comp={comp:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn restore_prefix_rejects_corrupt_chunk_granularly() {
+        let st = filled(2, 16, 1, 4, 12, 13);
+        let ct = 4;
+        let blob = st.serialize_prefix_opts(12, "h", Compression::Deflate, ct);
+        let lo = BlobLayout::new("h", 2, 1, 4).with_chunk_tokens(ct);
+        let (_, entries) = read_chunk_index(&blob).unwrap();
+        assert_eq!(entries.len(), 3);
+        // flip a byte inside chunk 1's stored bytes
+        let mut bad = blob.clone();
+        let c1_off = lo.payload_off(12) + entries[0].len as usize;
+        bad[c1_off + 2] ^= 0x10;
+        // whole-blob restore pins the guilty chunk
         assert_eq!(
-            KvState::restore_prefix_from_parts(head, &rows, m, "h", (2, 8, 1, 4)).unwrap_err(),
-            StateError::BadChecksum
+            KvState::restore(&bad, "h", (2, 16, 1, 4)).unwrap_err(),
+            StateError::ChunkChecksum { chunk: 1 }
         );
+        let head = &bad[..lo.payload_off(12)];
+        // a prefix range covering the corrupt chunk is rejected...
+        let span2: usize = entries.iter().take(2).map(|e| e.len as usize).sum();
+        let rows2 = &bad[lo.payload_off(12)..lo.payload_off(12) + span2];
+        assert_eq!(
+            KvState::restore_prefix_from_parts(head, rows2, 8, "h", (2, 16, 1, 4))
+                .unwrap_err(),
+            StateError::ChunkChecksum { chunk: 1 }
+        );
+        // ...while a prefix that stops short of it still restores
+        let span1 = entries[0].len as usize;
+        let rows1 = &bad[lo.payload_off(12)..lo.payload_off(12) + span1];
+        let part =
+            KvState::restore_prefix_from_parts(head, rows1, 4, "h", (2, 16, 1, 4)).unwrap();
+        assert_eq!(part.n_tokens, 4);
         // wrong payload length is malformed, not a panic
         assert!(matches!(
-            KvState::restore_prefix_from_parts(head, &rows[..8], m, "h", (2, 8, 1, 4))
+            KvState::restore_prefix_from_parts(head, &rows1[..span1 - 1], 4, "h", (2, 16, 1, 4))
                 .unwrap_err(),
             StateError::Malformed(_)
         ));
     }
 
     #[test]
+    fn serialize_for_splice_reassembles_byte_identically() {
+        for comp in [Compression::None, Compression::Deflate] {
+            let st = filled(2, 32, 1, 8, 20, 17);
+            let ct = 4;
+            // the "base" entry holds the first 12 rows (3 full chunks)
+            let base = st.serialize_prefix_opts(12, "h", comp, ct);
+            let lo = BlobLayout::new("h", 2, 1, 8).with_chunk_tokens(ct);
+            let (_, base_entries) = read_chunk_index(&base).unwrap();
+            let k = 3; // reuse all 3 base chunks (12 rows, chunk-aligned)
+            let prefix_span: usize =
+                base_entries.iter().take(k).map(|e| e.len as usize).sum();
+            let base_pay = lo.payload_off(12);
+            let (head, tail) = st.serialize_for_splice(20, "h", comp, ct, &base_entries[..k]);
+            // server-side assembly: head ++ base chunk bytes ++ tail
+            let mut assembled = head.to_vec();
+            assembled.extend_from_slice(&base[base_pay..base_pay + prefix_span]);
+            assembled.extend_from_slice(&tail);
+            let direct = st.serialize_prefix_opts(20, "h", comp, ct);
+            assert_eq!(assembled, direct, "comp={comp:?}");
+            let back = KvState::restore(&assembled, "h", (2, 32, 1, 8)).unwrap();
+            assert_eq!(back.n_tokens, 20);
+            assert_eq!(back.k, st.k);
+        }
+    }
+
+    #[test]
     fn range_alias_roundtrip_and_tamper() {
-        let enc = encode_range_alias(b"state:deadbeef", 42, false);
+        let enc = encode_range_alias(b"state:deadbeef", 42, false, 8);
         assert_eq!(
             decode_range_alias(&enc),
-            Some((b"state:deadbeef".to_vec(), 42, false))
+            Some(RangeAlias {
+                target_key: b"state:deadbeef".to_vec(),
+                total_rows: 42,
+                compressed: false,
+                chunk_tokens: Some(8),
+            })
         );
-        let enc_c = encode_range_alias(b"k", 7, true);
-        assert_eq!(decode_range_alias(&enc_c), Some((b"k".to_vec(), 7, true)));
+        let enc_c = encode_range_alias(b"k", 7, true, 1);
+        assert_eq!(
+            decode_range_alias(&enc_c).map(|a| (a.compressed, a.chunk_tokens)),
+            Some((true, Some(1)))
+        );
         // any flipped byte kills the alias instead of redirecting it
         for i in 0..enc.len() {
             let mut bad = enc.clone();
@@ -663,6 +1208,29 @@ mod tests {
         assert_eq!(
             decode_range_alias(&st.serialize("h", Compression::None)),
             None
+        );
+    }
+
+    #[test]
+    fn legacy_alias_without_chunk_size_still_decodes() {
+        // hand-build the pre-chunking record: key, rows, compressed, crc
+        let mut buf = Vec::new();
+        buf.extend_from_slice(ALIAS_MAGIC);
+        buf.extend_from_slice(&(5u32).to_le_bytes());
+        buf.extend_from_slice(b"k-old");
+        buf.extend_from_slice(&(31u32).to_le_bytes());
+        buf.push(1u8);
+        let mut crc = Crc32::new();
+        crc.update(&buf[4..]);
+        buf.extend_from_slice(&crc.finalize().to_le_bytes());
+        assert_eq!(
+            decode_range_alias(&buf),
+            Some(RangeAlias {
+                target_key: b"k-old".to_vec(),
+                total_rows: 31,
+                compressed: true,
+                chunk_tokens: None,
+            })
         );
     }
 
@@ -688,22 +1256,24 @@ mod tests {
     fn corruption_detected() {
         let st = filled(2, 16, 2, 8, 4, 6);
         let mut blob = st.serialize("h", Compression::None);
-        // flip a payload byte (past the header + row index)
+        // flip a payload byte (past the header + chunk index)
         let idx = blob.len() - 10;
         blob[idx] ^= 0x40;
-        assert_eq!(
+        assert!(matches!(
             KvState::restore(&blob, "h", (2, 16, 2, 8)).unwrap_err(),
-            StateError::BadChecksum
-        );
+            StateError::ChunkChecksum { .. }
+        ));
     }
 
     #[test]
     fn truncation_detected() {
-        let st = filled(2, 16, 2, 8, 4, 7);
-        let blob = st.serialize("h", Compression::None);
-        for cut in [0, 3, 10, blob.len() - 1] {
-            let err = KvState::restore(&blob[..cut], "h", (2, 16, 2, 8));
-            assert!(err.is_err(), "cut at {cut} must fail");
+        for comp in [Compression::None, Compression::Deflate] {
+            let st = filled(2, 16, 2, 8, 4, 7);
+            let blob = st.serialize("h", comp);
+            for cut in [0, 3, 10, blob.len() / 2, blob.len() - 1] {
+                let err = KvState::restore(&blob[..cut], "h", (2, 16, 2, 8));
+                assert!(err.is_err(), "cut at {cut} must fail ({comp:?})");
+            }
         }
     }
 
@@ -725,16 +1295,17 @@ mod tests {
     }
 
     #[test]
-    fn property_roundtrip_arbitrary_dims() {
+    fn property_roundtrip_arbitrary_dims_and_chunks() {
         run_prop_n("state-roundtrip", 32, |g| {
             let l = g.usize_in(1, 4);
             let s = g.usize_in(4, 32);
             let kh = g.usize_in(1, 3);
             let d = [4, 8, 16][g.usize_in(0, 2)];
             let n = g.usize_in(0, s);
+            let ct = g.usize_in(1, s + 2);
             let st = filled(l, s, kh, d, n, g.rng.next_u64());
             let comp = if g.bool() { Compression::Deflate } else { Compression::None };
-            let blob = st.serialize("ph", comp);
+            let blob = st.serialize_prefix_opts(n, "ph", comp, ct);
             let back = KvState::restore(&blob, "ph", (l, s, kh, d)).unwrap();
             assert_eq!(back, st);
         });

@@ -113,11 +113,29 @@ pub struct Shaper {
     pub injected: Duration,
     /// Total payload bytes accounted against the link (both directions).
     pub moved_bytes: u64,
+    /// Logical (uncompressed) state bytes the moved payloads represent —
+    /// the second axis that keeps `moved_bytes`/`saved_bytes` honest under
+    /// chunk compression: with deflate on, `moved_bytes` shrinks while this
+    /// counter still reflects the KV rows actually transferred, so a
+    /// "fewer wire bytes" claim can never hide "fewer rows moved".
+    pub inflated_bytes: u64,
 }
 
 impl Shaper {
     pub fn new(link: LinkModel, seed: u64) -> Self {
-        Shaper { link, rng: Rng::new(seed), injected: Duration::ZERO, moved_bytes: 0 }
+        Shaper {
+            link,
+            rng: Rng::new(seed),
+            injected: Duration::ZERO,
+            moved_bytes: 0,
+            inflated_bytes: 0,
+        }
+    }
+
+    /// Record the logical payload size behind a (possibly compressed)
+    /// transfer already counted in [`Shaper::moved_bytes`].
+    pub fn note_inflated(&mut self, bytes: usize) {
+        self.inflated_bytes += bytes as u64;
     }
 
     /// Run `op` (a real network transfer moving `bytes`) and stretch its
@@ -231,6 +249,17 @@ mod tests {
         s.shaped(1000, || ());
         s.shaped_post(|| ((), 234));
         assert_eq!(s.moved_bytes, 1234);
+    }
+
+    #[test]
+    fn shaper_tracks_inflated_separately_from_wire() {
+        let mut s = Shaper::new(LinkModel::loopback(), 1);
+        // a compressed transfer: 300 wire bytes standing for 1000 logical
+        s.shaped(300, || ());
+        s.note_inflated(1000);
+        s.note_inflated(24);
+        assert_eq!(s.moved_bytes, 300);
+        assert_eq!(s.inflated_bytes, 1024);
     }
 
     #[test]

@@ -265,6 +265,87 @@ fn delta_upload_and_range_download_shrink_wire_bytes() {
 }
 
 #[test]
+fn compressed_partial_hit_uses_range_path() {
+    // The ECS3 acceptance: with Compression::Deflate, a partial match moves
+    // only the matched chunks' bytes — no full-blob fallback — and the
+    // SPLICE suffix-delta composes with the deflated base entry.
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    let mut k = cfg("comp-range", Some(cb.addr()));
+    k.compression = Compression::Deflate;
+    k.chunk_tokens = 2; // small chunks: tight over-fetch bound for the test
+    let mut c = EdgeClient::new(Arc::clone(&eng), k).unwrap();
+    let gen = Generator::new(29);
+    let p0 = gen.prompt("astronomy", 0, 2);
+    let p1 = gen.prompt("astronomy", 1, 2); // shares instruction + examples
+
+    let r0 = c.query(&p0).unwrap();
+    assert_eq!(r0.case, HitCase::Miss);
+
+    // the largest stored entry is p0's full-prompt deflated blob — the
+    // old pipeline moved at least this much on a compressed partial hit
+    let full_entry_len = {
+        let store = cb.handle.server.store.lock().unwrap();
+        let mut max = 0usize;
+        for key in store.keys() {
+            max = max.max(store.strlen(key).unwrap_or(0));
+        }
+        max
+    };
+    assert!(full_entry_len > 0);
+
+    let moved0 = c.link_moved_bytes();
+    edgecache::util::bytes::copymeter::reset();
+    let r1 = c.query(&p1).unwrap();
+    let copied = edgecache::util::bytes::copymeter::get();
+    let moved = (c.link_moved_bytes() - moved0) as usize;
+
+    assert_eq!(r1.case, HitCase::AllExamples);
+    assert!(r1.matched_tokens > 0 && r1.matched_tokens < r1.prompt_tokens);
+    // the path taken, exactly: one chunk-aligned range fetch, no fallback
+    assert_eq!(c.stats.range_fetches, 1);
+    assert_eq!(c.stats.full_fetch_fallbacks, 0);
+    // moved_bytes bound: the download (alias + head + matched chunks) must
+    // undercut the full deflated entry the old fallback re-shipped
+    assert!(
+        r1.downloaded_bytes < full_entry_len,
+        "partial fetch {} must move less than the {}-byte entry",
+        r1.downloaded_bytes,
+        full_entry_len
+    );
+    // ...and the Shaper ledger agrees with the per-query accounting
+    assert_eq!(moved, r1.downloaded_bytes + r1.uploaded_bytes);
+    // the SPLICE suffix-delta also undercuts re-shipping a whole entry
+    assert!(r1.uploaded_bytes > 0);
+    assert!(
+        r1.uploaded_bytes < full_entry_len,
+        "deflated suffix splice {} vs full entry {}",
+        r1.uploaded_bytes,
+        full_entry_len
+    );
+    assert!(r1.saved_bytes > 0, "range + delta must beat the old pipeline");
+    // copymeter bound: client and in-process server together may move the
+    // state through a small constant number of payload-sized copies
+    // (gather, wire write, inflate, scatter, ...), but never the old
+    // download-whole-blob-then-truncate pipeline's worth per side
+    let logical = r1.breakdown.inflated_bytes;
+    assert!(logical > 0, "inflated accounting must be populated");
+    let state_size = eng.model.config.kv_bytes_per_token() * r1.prompt_tokens;
+    assert!(
+        (copied as usize) < 12 * state_size + (4 << 20),
+        "copy budget blown: {copied} bytes copied vs state {state_size}"
+    );
+
+    // the spliced deflated entry is complete and valid: an exact repeat is
+    // a full hit that reproduces the same response
+    let r2 = c.query(&p1).unwrap();
+    assert_eq!(r2.case, HitCase::Full);
+    assert_eq!(r1.response_tokens, r2.response_tokens);
+    c.shutdown();
+    cb.shutdown();
+}
+
+#[test]
 fn upload_dedup_across_queries() {
     let Some(eng) = engine() else { return };
     let cb = CacheBox::start_local().unwrap();

@@ -8,6 +8,10 @@ use edgecache::catalog::{ranges_for, state_store_key, ModelMeta};
 use edgecache::coordinator::{CacheBox, EdgeClient, EdgeClientConfig, HitCase};
 use edgecache::engine::Engine;
 use edgecache::kvstore::KvClient;
+use edgecache::model::state::{
+    read_chunk_index, BlobLayout, Compression, KvState, StateError,
+};
+use edgecache::util::rng::Rng;
 use edgecache::workload::Generator;
 
 fn engine() -> Option<Arc<Engine>> {
@@ -168,6 +172,221 @@ fn eviction_between_catalog_and_store_behaves_like_fp() {
         "evicted/never-stored state must degrade to a local answer"
     );
     assert_eq!(r1.response_tokens, r2.response_tokens);
+    c.shutdown();
+    cb.shutdown();
+}
+
+fn filled_state(l: usize, s: usize, kh: usize, d: usize, n: usize, seed: u64) -> KvState {
+    let mut st = KvState::zeroed(l, s, kh, d);
+    st.n_tokens = n;
+    let mut rng = Rng::new(seed);
+    let row = kh * d;
+    let le = s * row;
+    for li in 0..l {
+        for e in 0..n * row {
+            st.k[li * le + e] = rng.f64() as f32;
+            st.v[li * le + e] = rng.f64() as f32 - 0.5;
+        }
+    }
+    st
+}
+
+#[test]
+fn corrupted_chunk_is_rejected_chunk_granularly() {
+    // ECS3 failure injection: flipping a byte inside one compressed chunk
+    // must fail exactly the ranges that cover that chunk — prefixes that
+    // stop short of it keep restoring.
+    let st = filled_state(2, 32, 1, 8, 20, 9);
+    let ct = 4;
+    let blob = st.serialize_prefix_opts(20, "h", Compression::Deflate, ct);
+    let lo = BlobLayout::new("h", 2, 1, 8).with_chunk_tokens(ct);
+    let (_, entries) = read_chunk_index(&blob).unwrap();
+    assert_eq!(entries.len(), 5);
+
+    // flip one byte inside chunk 2's stored bytes (tokens 8..12)
+    let mut bad = blob.clone();
+    let c2_off = lo.payload_off(20)
+        + entries[..2].iter().map(|e| e.len as usize).sum::<usize>();
+    bad[c2_off + 1] ^= 0x01;
+
+    // whole-blob restore pins exactly the guilty chunk
+    assert_eq!(
+        KvState::restore(&bad, "h", (2, 32, 1, 8)).unwrap_err(),
+        StateError::ChunkChecksum { chunk: 2 }
+    );
+    let head = &bad[..lo.payload_off(20)];
+    let pay = lo.payload_off(20);
+    // every range that covers chunk 2 is rejected, naming chunk 2...
+    for m in [9usize, 12, 16, 20] {
+        let span: usize = entries[..lo.prefix_chunks(m)]
+            .iter()
+            .map(|e| e.len as usize)
+            .sum();
+        assert_eq!(
+            KvState::restore_prefix_from_parts(head, &bad[pay..pay + span], m, "h", (2, 32, 1, 8))
+                .unwrap_err(),
+            StateError::ChunkChecksum { chunk: 2 },
+            "m={m}"
+        );
+    }
+    // ...while ranges that stop short of it still restore
+    for m in [1usize, 4, 8] {
+        let span: usize = entries[..lo.prefix_chunks(m)]
+            .iter()
+            .map(|e| e.len as usize)
+            .sum();
+        let part = KvState::restore_prefix_from_parts(
+            head,
+            &bad[pay..pay + span],
+            m,
+            "h",
+            (2, 32, 1, 8),
+        )
+        .unwrap();
+        assert_eq!(part.n_tokens, m, "clean prefix m={m} must restore");
+    }
+}
+
+#[test]
+fn truncated_final_chunk_detected() {
+    for comp in [Compression::None, Compression::Deflate] {
+        let st = filled_state(1, 16, 1, 8, 10, 4);
+        let blob = st.serialize_prefix_opts(10, "h", comp, 4);
+        // whole-blob restores of a cut blob always fail
+        for cut in [blob.len() - 1, blob.len() - 3, blob.len() / 2] {
+            assert!(
+                KvState::restore(&blob[..cut], "h", (1, 16, 1, 8)).is_err(),
+                "cut at {cut} ({comp:?}) must fail"
+            );
+        }
+        // a range reply whose final chunk is short is malformed, not a panic
+        // and not a partial restore
+        let lo = BlobLayout::new("h", 1, 1, 8).with_chunk_tokens(4);
+        let (_, entries) = read_chunk_index(&blob).unwrap();
+        let span: usize = entries.iter().map(|e| e.len as usize).sum();
+        let head = &blob[..lo.payload_off(10)];
+        let pay = lo.payload_off(10);
+        let err = KvState::restore_prefix_from_parts(
+            head,
+            &blob[pay..pay + span - 1],
+            10,
+            "h",
+            (1, 16, 1, 8),
+        )
+        .unwrap_err();
+        assert!(
+            matches!(err, StateError::Malformed(_)),
+            "short final chunk must be Malformed, got {err:?} ({comp:?})"
+        );
+    }
+}
+
+#[test]
+fn stale_chunk_geometry_falls_back_to_full_download() {
+    // The alias promises chunk size 4 but the entry was re-written with
+    // chunk size 8 (as a newer writer might): the range path must refuse to
+    // guess and the client must recover the hit via a full-blob download.
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    let mut k = cfg("stale", Some(cb.addr()));
+    k.compression = Compression::Deflate;
+    k.chunk_tokens = 4;
+    let mut c = EdgeClient::new(Arc::clone(&eng), k).unwrap();
+    let gen = Generator::new(8);
+    let p0 = gen.prompt("astronomy", 0, 2);
+    let p1 = gen.prompt("astronomy", 1, 2);
+
+    let r0 = c.query(&p0).unwrap();
+    assert_eq!(r0.case, HitCase::Miss);
+
+    // re-encode the big entry with a different chunk size, in place
+    {
+        let mcfg = &eng.model.config;
+        let dims = (mcfg.n_layers, mcfg.max_seq, mcfg.n_kv_heads, mcfg.head_dim);
+        let mut store = cb.handle.server.store.lock().unwrap();
+        let key: Vec<u8> = store
+            .keys()
+            .max_by_key(|kk| store.strlen(kk).unwrap_or(0))
+            .unwrap()
+            .clone();
+        let blob = store.get(&key).unwrap().to_vec();
+        let st = KvState::restore(&blob, eng.model_hash(), dims).unwrap();
+        let re = st.serialize_prefix_opts(
+            st.n_tokens,
+            eng.model_hash(),
+            Compression::Deflate,
+            8,
+        );
+        store.set(&key, re);
+    }
+
+    let r1 = c.query(&p1).unwrap();
+    assert_eq!(r1.case, HitCase::AllExamples, "fallback must still hit");
+    assert!(!r1.false_positive);
+    assert!(r1.matched_tokens > 0);
+    assert_eq!(c.stats.full_fetch_fallbacks, 1, "range path must have bailed");
+    assert_eq!(c.stats.range_fetches, 0);
+    c.shutdown();
+    cb.shutdown();
+}
+
+#[test]
+fn corrupt_chunk_on_server_never_restores_and_degrades_to_local() {
+    // A corrupted chunk inside the matched prefix: the range path rejects
+    // it (chunk crc), the full-blob fallback rejects it too, and the client
+    // answers from local prefill — corrupt state is never restored.
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    let mut k = cfg("chunkvictim", Some(cb.addr()));
+    k.compression = Compression::Deflate;
+    k.chunk_tokens = 4;
+    let mut c = EdgeClient::new(Arc::clone(&eng), k).unwrap();
+    let gen = Generator::new(12);
+    let p0 = gen.prompt("virology", 0, 2);
+    let p1 = gen.prompt("virology", 1, 2);
+
+    let r0 = c.query(&p0).unwrap();
+    assert_eq!(r0.case, HitCase::Miss);
+    let baseline = {
+        let mut solo = EdgeClient::new(Arc::clone(&eng), cfg("solo", None)).unwrap();
+        let r = solo.query(&p1).unwrap();
+        solo.shutdown();
+        r.response_tokens
+    };
+
+    // flip a byte inside the entry's first body chunk (always matched)
+    {
+        let mut store = cb.handle.server.store.lock().unwrap();
+        let key: Vec<u8> = store
+            .keys()
+            .max_by_key(|kk| store.strlen(kk).unwrap_or(0))
+            .unwrap()
+            .clone();
+        let mut blob = store.get(&key).unwrap().to_vec();
+        let hdr = KvState::peek_header(&blob).unwrap();
+        let lo = BlobLayout::new(
+            &hdr.model_hash,
+            hdr.n_layers,
+            hdr.n_kv_heads,
+            hdr.head_dim,
+        )
+        .with_chunk_tokens(hdr.chunk_tokens);
+        let off = lo.payload_off(hdr.n_tokens) + 3;
+        blob[off] ^= 0xFF;
+        store.set(&key, blob);
+    }
+
+    let r1 = c.query(&p1).unwrap();
+    assert!(r1.false_positive, "corrupt chunk must surface as an FP miss");
+    assert_eq!(r1.case, HitCase::Miss);
+    assert!(
+        c.stats.full_fetch_fallbacks >= 1,
+        "the range path must have tried the full-blob fallback first"
+    );
+    assert_eq!(
+        r1.response_tokens, baseline,
+        "local fallback reproduces the correct answer"
+    );
     c.shutdown();
     cb.shutdown();
 }

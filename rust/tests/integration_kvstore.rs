@@ -11,6 +11,58 @@ fn spawn_server(max_bytes: usize) -> edgecache::kvstore::ServerHandle {
 }
 
 #[test]
+fn alias_chunk_size_keeps_getranges_chunk_aligned() {
+    // Regression for the chunk-boundary-aware alias record: the alias
+    // carries the target's chunk size, so a reader that only ever saw the
+    // alias computes byte windows that land exactly on whole chunks of the
+    // deflated entry — never a mid-chunk GETRANGE that per-chunk crcs and
+    // deflate streams could not verify or decode.
+    use edgecache::model::state::{
+        decode_range_alias, encode_range_alias, read_chunk_index, BlobLayout, Compression,
+        KvState,
+    };
+    let h = spawn_server(usize::MAX);
+    let mut c = KvClient::connect(&h.addr_string()).unwrap();
+
+    let mut st = KvState::zeroed(2, 32, 1, 8);
+    st.n_tokens = 20;
+    for (i, x) in st.k.iter_mut().enumerate() {
+        *x = (i % 17) as f32;
+    }
+    let ct = 4;
+    let blob = st.serialize_prefix_opts(20, "h", Compression::Deflate, ct);
+    c.set(b"state:long", &blob).unwrap();
+    let alias = encode_range_alias(b"state:long", 20, true, ct);
+    c.set(b"state:short", &alias).unwrap();
+
+    let a = decode_range_alias(&c.get(b"state:short").unwrap().unwrap()).unwrap();
+    assert_eq!(a.chunk_tokens, Some(ct), "alias must carry the chunk size");
+    assert!(a.compressed);
+    let lo = BlobLayout::new("h", 2, 1, 8).with_chunk_tokens(a.chunk_tokens.unwrap());
+    let head_len = lo.payload_off(a.total_rows);
+    let head = c.getrange(&a.target_key, 0, head_len).unwrap().unwrap();
+    let (ct2, entries) = read_chunk_index(&head).unwrap();
+    assert_eq!(ct2, ct);
+
+    // a 10-row prefix rounds up to whole chunks (12 rows), never mid-chunk
+    let m = 10;
+    assert_eq!(lo.prefix_rows(m, a.total_rows), 12);
+    assert_eq!(lo.prefix_rows(m, a.total_rows) % ct, 0);
+    let span: usize = entries
+        .iter()
+        .take(lo.prefix_chunks(m))
+        .map(|e| e.len as usize)
+        .sum();
+    let rows = c.getrange(&a.target_key, head_len, span).unwrap().unwrap();
+    let part =
+        KvState::restore_prefix_from_parts(&head, &rows, m, "h", (2, 32, 1, 8)).unwrap();
+    assert_eq!(part.n_tokens, m);
+    for i in 0..m * 8 {
+        assert_eq!(part.k[i], st.k[i], "restored prefix row bytes");
+    }
+}
+
+#[test]
 fn concurrent_clients_share_one_keyspace() {
     let h = spawn_server(usize::MAX);
     let addr = h.addr_string();

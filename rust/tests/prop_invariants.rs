@@ -4,7 +4,7 @@
 use edgecache::catalog::{range_key, ranges_for, LocalCatalog, Lookup, ModelMeta};
 use edgecache::devicemodel::DeviceProfile;
 use edgecache::kvstore::resp::{Decoder, Value};
-use edgecache::model::state::{BlobLayout, Compression, KvState};
+use edgecache::model::state::{read_chunk_index, BlobLayout, Compression, KvState};
 use edgecache::netsim::LinkModel;
 use edgecache::tokenizer::Tokenizer;
 use edgecache::util::prop::{run_prop_n, Gen};
@@ -114,7 +114,8 @@ fn prop_state_roundtrip_any_geometry() {
             }
         }
         let comp = if g.bool() { Compression::Deflate } else { Compression::None };
-        let blob = st.serialize("h", comp);
+        let ct = g.usize_in(1, s + 1);
+        let blob = st.serialize_prefix_opts(n, "h", comp, ct);
         let back = KvState::restore(&blob, "h", (l, s, kh, d)).unwrap();
         // rows beyond n_tokens are not shipped: compare the valid prefix
         let row = kh * d;
@@ -128,9 +129,13 @@ fn prop_state_roundtrip_any_geometry() {
     });
 }
 
-/// Range transfer: a prefix assembled from `GETRANGE`-style byte windows of
-/// a long blob restores to exactly the same state as a full blob truncated
-/// at that prefix — the invariant the alias/partial-download path rides on.
+/// Range transfer (ECS3): a prefix assembled from whole-chunk `GETRANGE`
+/// windows of a long blob restores to exactly the same state as the full
+/// blob deserialized and truncated at that prefix — for arbitrary token
+/// counts, chunk sizes (including the degenerate per-token `ct = 1` and
+/// larger-than-blob sizes), prefix lengths (including exact chunk
+/// boundaries) and both compressions.  This is the invariant the
+/// alias/partial-download path rides on.
 #[test]
 fn prop_range_assembly_matches_full_blob_truncation() {
     run_prop_n("range-assembly-prefix", 60, |g: &mut Gen| {
@@ -139,6 +144,7 @@ fn prop_range_assembly_matches_full_blob_truncation() {
         let kh = g.usize_in(1, 3);
         let d = 4 * g.usize_in(1, 4);
         let n = g.usize_in(1, s);
+        let ct = if g.bool() { 1 } else { g.usize_in(1, n + 2) };
         let mut st = KvState::zeroed(l, s, kh, d);
         st.n_tokens = n;
         for i in 0..st.k.len() {
@@ -148,30 +154,63 @@ fn prop_range_assembly_matches_full_blob_truncation() {
             }
         }
         let hash = "ph";
-        let blob = st.serialize(hash, Compression::None);
-        let lo = BlobLayout::new(hash, l, kh, d);
-        assert_eq!(blob.len(), lo.blob_len(n), "layout arithmetic matches bytes");
-        let m = g.usize_in(1, n);
-        let stride = lo.token_stride();
+        let comp = if g.bool() { Compression::Deflate } else { Compression::None };
+        let blob = st.serialize_prefix_opts(n, hash, comp, ct);
+        let lo = BlobLayout::new(hash, l, kh, d).with_chunk_tokens(ct);
+        if comp == Compression::None {
+            assert_eq!(blob.len(), lo.blob_len(n), "layout arithmetic matches bytes");
+        }
+        // prefix length: half the time exactly on a chunk boundary
+        let m = if g.bool() && n >= ct {
+            (g.usize_in(1, n / ct) * ct).min(n)
+        } else {
+            g.usize_in(1, n)
+        };
 
-        // the byte windows the client would GETRANGE
-        let head = &blob[..lo.index_off() + 4 * m];
-        let rows = &blob[lo.payload_off(n)..lo.payload_off(n) + m * stride];
+        // the byte windows the client would GETRANGE: the whole head
+        // (header + chunk index) and the whole chunks covering [0, m)
+        let (ct2, entries) = read_chunk_index(&blob).expect("well-formed v3 head");
+        assert_eq!(ct2, ct);
+        let k = lo.prefix_chunks(m);
+        let span: usize = entries.iter().take(k).map(|e| e.len as usize).sum();
+        let head = &blob[..lo.payload_off(n)];
+        let rows = &blob[lo.payload_off(n)..lo.payload_off(n) + span];
 
         let assembled =
             KvState::restore_prefix_from_parts(head, rows, m, hash, (l, s, kh, d)).unwrap();
-        let truncated = KvState::restore(
-            &st.serialize_prefix(m, hash, Compression::None),
-            hash,
-            (l, s, kh, d),
-        )
-        .unwrap();
-        assert_eq!(assembled, truncated, "l={l} s={s} kh={kh} d={d} n={n} m={m}");
+        // the spec: full-blob deserialize, then truncate to m rows
+        let full = KvState::restore(&blob, hash, (l, s, kh, d)).unwrap();
+        assert_eq!(assembled.n_tokens, m, "l={l} s={s} kh={kh} d={d} n={n} m={m} ct={ct}");
+        let row = kh * d;
+        let le = s * row;
+        for li in 0..l {
+            assert_eq!(
+                &assembled.k[li * le..li * le + m * row],
+                &full.k[li * le..li * le + m * row],
+                "layer {li} K prefix (n={n} m={m} ct={ct} comp={comp:?})"
+            );
+            assert_eq!(
+                &assembled.v[li * le..li * le + m * row],
+                &full.v[li * le..li * le + m * row],
+                "layer {li} V prefix"
+            );
+            // rows past m stay zero: the over-fetched tail of the last
+            // chunk must not leak into the restored state
+            for e in m * row..le {
+                assert_eq!(assembled.k[li * le + e], 0.0, "layer {li} leaked past m");
+            }
+        }
 
-        // token-major property: the short blob's payload is byte-identical
-        // to the long blob's payload prefix
-        let short = st.serialize_prefix(m, hash, Compression::None);
-        assert_eq!(&short[lo.payload_off(m)..], rows);
+        // token-major property (uncompressed bodies are raw rows): the
+        // short blob's payload is byte-identical to the long blob's prefix
+        if comp == Compression::None {
+            let short = st.serialize_prefix_opts(m, hash, Compression::None, ct);
+            let stride = lo.token_stride();
+            assert_eq!(
+                &short[lo.payload_off(m)..],
+                &blob[lo.payload_off(n)..lo.payload_off(n) + m * stride]
+            );
+        }
     });
 }
 
@@ -185,7 +224,10 @@ fn prop_state_bitflip_detected() {
             *x = g.rng.f64() as f32;
         }
         let mut blob = st.serialize("h", Compression::None);
-        let hdr = 4 + 4 + 1 + 5 * 4 + 1 + 4 + 4; // conservative header bound
+        // v3 fixed-header bound for a 1-byte hash: anything at or past the
+        // chunk index must be caught by the index crc, the body length
+        // prefix, or a per-chunk crc
+        let hdr = 4 + 4 + 1 + 5 * 4 + 1 + 4 + 4;
         if blob.len() <= hdr {
             return;
         }

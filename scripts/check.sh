@@ -1,18 +1,34 @@
 #!/usr/bin/env sh
 # Mechanical gate for the rust/ crate: build, test, lint.  Run before every
-# PR — the hot-path refactors (zero-copy blob pipeline, range transfers)
-# regress silently without it.
+# PR — the hot-path refactors (zero-copy blob pipeline, chunk-compressed
+# range transfers) regress silently without it.
 #
 # Usage: scripts/check.sh [--no-clippy]
 set -eu
 
 cd "$(dirname "$0")/../rust"
 
+# Disabled tests must point at a ROADMAP item, or they rot: any #[ignore]
+# whose attribute line lacks a "ROADMAP" marker fails the gate.
+echo "== #[ignore] audit =="
+ignored=$(grep -rn '#\[ignore' src tests benches 2>/dev/null | grep -v 'ROADMAP' || true)
+if [ -n "$ignored" ]; then
+    echo "ignored tests without a linked ROADMAP item:" >&2
+    echo "$ignored" >&2
+    exit 1
+fi
+
 echo "== cargo build --release =="
 cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+# The failure-injection suite is the safety net for the chunk-compressed
+# state path (corrupt chunks, truncation, stale aliases, dead servers);
+# run it explicitly so a filtered `cargo test` can never skip it silently.
+echo "== cargo test -q --test integration_failures =="
+cargo test -q --test integration_failures
 
 if [ "${1:-}" != "--no-clippy" ]; then
     echo "== cargo clippy -- -D warnings =="
