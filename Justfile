@@ -22,3 +22,13 @@ test-failures:
 # regenerate the paper-table benches (release mode)
 bench:
     cd rust && cargo bench --bench substrate_micro && cargo bench --bench table3_breakdown
+
+# streaming-assembly bench, full sweep (emits BENCH_streaming.json)
+bench-streaming:
+    cd rust && cargo bench --bench streaming_assembly
+
+# the same bench with tiny parameters — the check.sh smoke gate: it asserts
+# streaming strictly beats store-and-forward and that restore completes
+# within ~1 chunk-decode of last-byte arrival
+bench-smoke:
+    cd rust && EDGECACHE_SMOKE=1 cargo bench --bench streaming_assembly

@@ -63,6 +63,7 @@ fn main() -> anyhow::Result<()> {
         max_new_tokens: Some(if paced { 4 } else { 8 }),
         compression: edgecache::model::state::Compression::None,
         chunk_tokens: edgecache::model::state::DEFAULT_CHUNK_TOKENS,
+        adaptive_chunk: false,
         partial_matching: true,
         use_catalog: true,
         fetch_policy: edgecache::coordinator::FetchPolicy::Always,

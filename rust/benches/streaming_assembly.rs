@@ -1,0 +1,299 @@
+//! Streaming state assembly — the PR-3 hot-path claim, measured.
+//!
+//! Compares two ways of turning a partial-match range download into a live
+//! KV state, over a real cache box with the modelled link in between:
+//!
+//! * **store-and-forward** (the old pipeline): buffer the head and the whole
+//!   matched-chunk span, then verify + inflate + scatter everything —
+//!   restore cost = `transfer + decode`, paid serially;
+//! * **streaming** (`StateAssembler` + `Shaper::shaped_stream` + one
+//!   `GETRANGE` per chunk): decode chunk `i` while chunk `i+1` is still on
+//!   the modelled wire — restore cost ≈ `max(transfer, decode)`.
+//!
+//! Sweeps chunk sizes × link rates, asserts the two acceptance properties
+//! (streaming strictly beats store-and-forward at every measured chunk
+//! size; streaming restore-complete lands within ~1 chunk-decode of
+//! last-byte arrival) and emits `BENCH_streaming.json`.
+//!
+//! Env: EDGECACHE_SMOKE=1 (reduced sweep for the check.sh gate),
+//!      EDGECACHE_STREAMING_JSON (output path, default BENCH_streaming.json).
+
+use std::time::{Duration, Instant};
+
+use edgecache::coordinator::CacheBox;
+use edgecache::kvstore::client::getrange_req;
+use edgecache::kvstore::{KvClient, Value};
+use edgecache::model::state::{BlobLayout, Compression, KvState, StateAssembler};
+use edgecache::netsim::{LinkModel, Shaper};
+use edgecache::util::json::Json;
+use edgecache::util::rng::Rng;
+
+const HASH: &str = "bench-model";
+const DIMS: (usize, usize, usize, usize) = (8, 256, 2, 64); // 16 KB/token
+
+fn filled_state(total_rows: usize) -> KvState {
+    let (l, s, kh, d) = DIMS;
+    let mut st = KvState::zeroed(l, s, kh, d);
+    st.n_tokens = total_rows;
+    let mut rng = Rng::new(7);
+    // semi-structured rows: deflate really compresses (and really inflates)
+    for (i, x) in st.k.iter_mut().enumerate() {
+        *x = ((i % 23) as f32) * 0.5 + if rng.f64() < 0.1 { rng.f64() as f32 } else { 0.0 };
+    }
+    for (i, x) in st.v.iter_mut().enumerate() {
+        *x = ((i % 17) as f32) * 0.25;
+    }
+    st
+}
+
+struct Sample {
+    store_forward: Duration,
+    streaming: Duration,
+    last_byte: Duration,
+    tail_decode: Duration,
+    overlap_saved: Duration,
+    wire_bytes: usize,
+}
+
+/// One store-and-forward fetch+restore: head, then the whole matched span in
+/// a single reply, then a monolithic verify+inflate+scatter.
+fn run_store_forward(
+    conn: &mut KvClient,
+    link: &LinkModel,
+    key: &[u8],
+    lo: &BlobLayout,
+    total: usize,
+    m: usize,
+) -> (Duration, usize) {
+    let mut shaper = Shaper::new(link.clone(), 11);
+    let head_len = lo.payload_off(total);
+    let t0 = Instant::now();
+    let head = shaper
+        .shaped_post(|| {
+            let r = conn.getrange(key, 0, head_len).unwrap().unwrap();
+            let n = r.len();
+            (r, n)
+        });
+    let asm = StateAssembler::new(&head, m, HASH, DIMS).expect("head");
+    let span = asm.prefix_span();
+    let rows = shaper
+        .shaped_post(|| {
+            let r = conn.getrange(key, head_len, span).unwrap().unwrap();
+            let n = r.len();
+            (r, n)
+        });
+    let st = KvState::restore_prefix_from_parts(&head, &rows, m, HASH, DIMS).expect("restore");
+    assert_eq!(st.n_tokens, m);
+    (t0.elapsed(), head.len() + rows.len())
+}
+
+/// One streaming fetch+restore: head, then one GETRANGE per chunk consumed
+/// as a shaped reply stream feeding the assembler.  Returns (total,
+/// last-byte arrival, overlap credited, wire bytes).
+fn run_streaming(
+    conn: &mut KvClient,
+    link: &LinkModel,
+    key: &[u8],
+    lo: &BlobLayout,
+    total: usize,
+    m: usize,
+) -> (Duration, Duration, Duration, usize) {
+    let mut shaper = Shaper::new(link.clone(), 11);
+    let head_len = lo.payload_off(total);
+    let t0 = Instant::now();
+    let head = shaper
+        .shaped_post(|| {
+            let r = conn.getrange(key, 0, head_len).unwrap().unwrap();
+            let n = r.len();
+            (r, n)
+        });
+    let mut asm = StateAssembler::new(&head, m, HASH, DIMS).expect("head");
+    let k = asm.expected_chunks();
+    let mut reqs = Vec::with_capacity(k);
+    let mut off = head_len;
+    for c in 0..k {
+        reqs.push(getrange_req(key, off, asm.chunk_len(c)));
+        off += asm.chunk_len(c);
+    }
+    let mut replies = conn.send_reqs(&reqs).expect("batch");
+    let mut sess = shaper.shaped_stream();
+    let mut last_byte = t0.elapsed();
+    for _ in 0..k {
+        let Some(Value::Bulk(bytes)) = replies.next_reply().expect("reply") else {
+            panic!("chunk reply missing");
+        };
+        sess.arrived(bytes.len());
+        last_byte = t0.elapsed();
+        asm.feed_chunk(&bytes).expect("chunk");
+    }
+    let wire = head.len() + sess.bytes();
+    let overlap = sess.finish();
+    let st = asm.finish().expect("complete");
+    assert_eq!(st.n_tokens, m);
+    (t0.elapsed(), last_byte, overlap, wire)
+}
+
+/// Unshaped, network-free mean decode cost of one chunk (crc + inflate +
+/// scatter) — the yardstick for the "within ~1 chunk-decode of last byte"
+/// acceptance bound.
+fn mean_chunk_decode(blob: &[u8], lo: &BlobLayout, total: usize, m: usize) -> Duration {
+    let head = &blob[..lo.payload_off(total)];
+    let mut asm = StateAssembler::new(head, m, HASH, DIMS).expect("head");
+    let k = asm.expected_chunks();
+    let t0 = Instant::now();
+    let mut off = lo.payload_off(total);
+    for c in 0..k {
+        let clen = asm.chunk_len(c);
+        asm.feed_chunk(&blob[off..off + clen]).expect("chunk");
+        off += clen;
+    }
+    asm.finish().expect("complete");
+    t0.elapsed() / k as u32
+}
+
+fn main() {
+    edgecache::util::logger::init_from_env();
+    let smoke = std::env::var("EDGECACHE_SMOKE").as_deref() == Ok("1");
+    let (l, _, kh, d) = DIMS;
+    let total = 192usize;
+    let m = 144usize;
+    // the smoke run gates check.sh: take enough samples that one scheduler
+    // preemption cannot fail the assertions below (they compare per-metric
+    // minima across iterations, the noise-robust choice)
+    let iters = 3;
+    let chunk_sizes: &[usize] = if smoke { &[4, 16] } else { &[4, 8, 16, 32] };
+    let lan = LinkModel {
+        name: "lan-200m",
+        goodput_bps: 25e6,
+        rtt: Duration::from_millis(2),
+        jitter_frac: 0.0,
+    };
+    let wifi = LinkModel {
+        // the paper's Wi-Fi 4 goodput with a scaled-down RTT so the
+        // sweep stays seconds, not minutes
+        name: "wifi-goodput",
+        goodput_bps: 30.4e6 / 8.0,
+        rtt: Duration::from_millis(10),
+        jitter_frac: 0.0,
+    };
+    let links: Vec<LinkModel> = if smoke { vec![lan] } else { vec![lan, wifi] };
+
+    println!("================================================================");
+    println!(" streaming assembly — store-and-forward vs streamed chunk decode");
+    println!(" dims {DIMS:?}, {total} rows stored, {m}-row prefix restored{}",
+        if smoke { "  [smoke]" } else { "" });
+    println!("================================================================");
+
+    let st = filled_state(total);
+    let cb = CacheBox::start_local().expect("cache box");
+    let mut conn = KvClient::connect(&cb.addr()).expect("client");
+
+    let mut rows_json: Vec<Json> = Vec::new();
+    for &ct in chunk_sizes {
+        let blob = st.serialize_prefix_opts(total, HASH, Compression::Deflate, ct);
+        let lo = BlobLayout::new(HASH, l, kh, d).with_chunk_tokens(ct);
+        let key = format!("state:ct{ct}");
+        conn.set(key.as_bytes(), &blob).expect("seed");
+        let chunk_decode = mean_chunk_decode(&blob, &lo, total, m);
+
+        for link in &links {
+            // per-metric minima across iterations: one preempted iteration
+            // cannot fail the gate, and both paths get their best case
+            let mut s: Option<Sample> = None;
+            for _ in 0..iters {
+                let (sf, _) = run_store_forward(&mut conn, link, key.as_bytes(), &lo, total, m);
+                let (stm, last, overlap, wire) =
+                    run_streaming(&mut conn, link, key.as_bytes(), &lo, total, m);
+                let tail = stm.saturating_sub(last);
+                s = Some(match s {
+                    None => Sample {
+                        store_forward: sf,
+                        streaming: stm,
+                        last_byte: last,
+                        tail_decode: tail,
+                        overlap_saved: overlap,
+                        wire_bytes: wire,
+                    },
+                    Some(b) => Sample {
+                        store_forward: b.store_forward.min(sf),
+                        streaming: b.streaming.min(stm),
+                        last_byte: b.last_byte.min(last),
+                        tail_decode: b.tail_decode.min(tail),
+                        overlap_saved: b.overlap_saved.max(overlap),
+                        wire_bytes: wire,
+                    },
+                });
+            }
+            let s = s.unwrap();
+            let ms = |dur: Duration| dur.as_secs_f64() * 1e3;
+            println!(
+                "ct={ct:<3} {:<12} wire {:>7.1} KB  s&f {:>8.2} ms  stream {:>8.2} ms  last-byte {:>8.2} ms  tail {:>6.3} ms  (1 chunk ≈ {:>6.3} ms)  overlap {:>6.3} ms",
+                link.name,
+                s.wire_bytes as f64 / 1e3,
+                ms(s.store_forward),
+                ms(s.streaming),
+                ms(s.last_byte),
+                ms(s.tail_decode),
+                ms(chunk_decode),
+                ms(s.overlap_saved),
+            );
+
+            // acceptance: streaming strictly beats store-and-forward at
+            // every measured chunk size × link
+            assert!(
+                s.streaming < s.store_forward,
+                "streaming ({:?}) must beat store-and-forward ({:?}) at ct={ct} on {}",
+                s.streaming,
+                s.store_forward,
+                link.name
+            );
+            // acceptance: restore completes within ~1 chunk-decode of the
+            // last byte (2x + a small scheduling floor absorbs timer noise)
+            let bound = chunk_decode * 2 + Duration::from_millis(5);
+            assert!(
+                s.tail_decode <= bound,
+                "tail decode {:?} exceeds ~1 chunk-decode bound {:?} at ct={ct} on {}",
+                s.tail_decode,
+                bound,
+                link.name
+            );
+            assert!(
+                s.overlap_saved > Duration::ZERO,
+                "streamed run must credit overlap at ct={ct} on {}",
+                link.name
+            );
+
+            rows_json.push(Json::obj(vec![
+                ("link", Json::Str(link.name.to_string())),
+                ("chunk_tokens", Json::Int(ct as i64)),
+                ("entry_rows", Json::Int(total as i64)),
+                ("matched_rows", Json::Int(m as i64)),
+                ("wire_bytes", Json::Int(s.wire_bytes as i64)),
+                ("store_forward_ms", Json::Num(ms(s.store_forward))),
+                ("streaming_ms", Json::Num(ms(s.streaming))),
+                ("last_byte_ms", Json::Num(ms(s.last_byte))),
+                ("tail_decode_ms", Json::Num(ms(s.tail_decode))),
+                ("chunk_decode_ms", Json::Num(ms(chunk_decode))),
+                ("overlap_saved_ms", Json::Num(ms(s.overlap_saved))),
+                (
+                    "speedup_x",
+                    Json::Num(s.store_forward.as_secs_f64() / s.streaming.as_secs_f64()),
+                ),
+            ]));
+        }
+    }
+
+    let json = Json::obj(vec![
+        ("smoke", Json::Bool(smoke)),
+        ("dims", Json::Str(format!("{DIMS:?}"))),
+        ("rows", Json::Arr(rows_json)),
+    ]);
+    let path = std::env::var("EDGECACHE_STREAMING_JSON")
+        .unwrap_or_else(|_| "BENCH_streaming.json".into());
+    match std::fs::write(&path, json.to_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+    cb.shutdown();
+    println!("streaming_assembly done.");
+}

@@ -154,12 +154,13 @@ fn main() {
         )
     );
     println!(
-        "wire ledger: {:.2} MB moved ({:.2} MB logical), {} range fetches, {} full-blob fallbacks, {:.2} MB saved vs per-range blobs",
+        "wire ledger: {:.2} MB moved ({:.2} MB logical), {} range fetches, {} full-blob fallbacks, {:.2} MB saved vs per-range blobs, {:.2} ms decode/wire overlap credited",
         client.link_moved_bytes() as f64 / 1e6,
         client.link_inflated_bytes() as f64 / 1e6,
         client.stats.range_fetches,
         client.stats.full_fetch_fallbacks,
-        client.stats.bytes_saved as f64 / 1e6
+        client.stats.bytes_saved as f64 / 1e6,
+        client.link_overlap_saved().as_secs_f64() * 1e3
     );
     client.shutdown();
     cb.shutdown();

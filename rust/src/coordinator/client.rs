@@ -10,20 +10,32 @@
 //! 4. **R-decode/Sample** — generate the response.
 //!
 //! Transfers are **range-aware** (the SparKV argument: move only bytes whose
-//! transfer cost beats recompute):
+//! transfer cost beats recompute) and **streamed**:
 //!
 //! * *Download*: a prompt's shorter catalog ranges are stored as tiny
 //!   aliases pointing into the one real blob.  A partial match resolves the
-//!   alias, then `GETRANGE`s just the blob head (header + chunk index) and
-//!   the whole ECS3 chunks covering the matched rows — one pipelined round
-//!   trip for raw bodies, head-then-chunks for deflated ones — instead of a
-//!   dedicated full blob per range.  Any range-path verification failure
-//!   falls back to a full-blob download, never to a questionable restore.
+//!   alias, then fetches just the blob head (header + chunk index) and the
+//!   whole ECS3 chunks covering the matched rows — **one `GETRANGE` per
+//!   chunk**, pipelined in a single write and consumed as a reply *stream*:
+//!   each chunk is crc-verified, inflated and scattered into the live state
+//!   ([`StateAssembler`]) the moment its bytes land, while later chunks are
+//!   still on the modelled wire.  TTFT therefore pays
+//!   `max(transfer, decode)` instead of `transfer + decode`, and the suffix
+//!   prefill starts the instant the last chunk is fed — there is no
+//!   buffered-then-restored monolith left on the hot path.  The saving is
+//!   ledgered honestly in `overlap_saved` (see [`Shaper::shaped_stream`]).
+//!   Raw bodies ride one round trip (chunk spans are layout arithmetic);
+//!   deflated bodies fetch the head first and pay one extra round trip.
+//!   Any range-path verification failure drains the reply stream and falls
+//!   back to a full-blob download, never to a questionable restore.
 //! * *Upload*: one blob (the longest new range) is published per prompt;
 //!   shorter ranges become aliases.  When the query downloaded a state, the
 //!   upload ships only the chunks past the matched prefix and has the
 //!   server `SPLICE` them onto the base chunks it already holds — deflated
-//!   bases included, since every chunk is an independent stream.
+//!   bases included, since every chunk is an independent stream.  The chunk
+//!   size itself is either fixed (`chunk_tokens`) or picked per entry from
+//!   the link's goodput/RTT break-even ([`adaptive_chunk_tokens`]) and
+//!   recorded in the entry header + alias, so mixed-size fleets interop.
 //!
 //! Latency attribution follows Table 3 exactly; uploads happen off the
 //! latency path (the paper's Case-1 Redis column shows only false-positive
@@ -42,7 +54,7 @@ use crate::coordinator::policy::FetchPolicy;
 use crate::coordinator::sync::CatalogSync;
 use crate::devicemodel::{DeviceProfile, Pacer};
 use crate::engine::Engine;
-use crate::kvstore::client::getrange_req;
+use crate::kvstore::client::{getrange_req, StreamingReplies};
 use crate::kvstore::resp::{request_shared, Value};
 use crate::kvstore::KvClient;
 use crate::log_debug;
@@ -50,9 +62,9 @@ use crate::metrics::{Phase, PhaseBreakdown};
 use crate::model::sampler::Sampler;
 use crate::model::state::{
     decode_range_alias, encode_range_alias, read_chunk_index, BlobLayout, ChunkEntry,
-    Compression, KvState, DEFAULT_CHUNK_TOKENS,
+    Compression, KvState, StateAssembler, DEFAULT_CHUNK_TOKENS,
 };
-use crate::netsim::{LinkModel, Shaper};
+use crate::netsim::{LinkModel, Shaper, StreamSession};
 use crate::util::bytes::SharedBytes;
 use crate::workload::Prompt;
 
@@ -83,6 +95,47 @@ impl HitCase {
     }
 }
 
+/// Pick an ECS3 chunk size (tokens) for an `entry_rows`-row entry from the
+/// link's goodput/RTT break-even.
+///
+/// Two costs pull in opposite directions, both in wire bytes (goodput
+/// divides out of the ratio):
+///
+/// * **over-fetch** — a partial hit rounds up to a chunk boundary, moving
+///   ~`ct/2` extra rows (`ct·stride/2` bytes) past the matched prefix, so
+///   small chunks win when per-byte time dominates;
+/// * **per-chunk overhead** — every chunk adds a fixed cost `OH` (its
+///   8-byte index entry, deflate stream framing, the pipelined per-chunk
+///   `GETRANGE` exchange) *plus* a slice of the link's bandwidth–delay
+///   product: on fat-RTT links each extra in-flight request adds scheduling
+///   slop that eats goodput, so expensive RTTs push chunks larger (and
+///   larger chunks also give the per-chunk deflate streams more context to
+///   compress).
+///
+/// `cost(ct) = ct·stride/2 + (rows/ct)·OH` is minimized at
+/// `ct* = sqrt(2·rows·OH/stride)`; the result is quantized to a power of
+/// two so entries of similar length agree on a size and stay
+/// `SPLICE`-compatible.  On the paper's Wi-Fi 4 link with the 270M-class
+/// state stride this lands exactly on the old fixed default
+/// ([`DEFAULT_CHUNK_TOKENS`] = 8); a wired link shrinks chunks, a
+/// long-fat link grows them.
+pub fn adaptive_chunk_tokens(
+    link: &LinkModel,
+    token_stride: usize,
+    entry_rows: usize,
+) -> usize {
+    let rows = entry_rows.max(1) as f64;
+    let bdp = if link.goodput_bps.is_finite() {
+        link.goodput_bps * link.rtt.as_secs_f64()
+    } else {
+        0.0
+    };
+    let oh = 64.0 + bdp / 1024.0;
+    let ct = (2.0 * rows * oh / token_stride.max(1) as f64).sqrt();
+    let ct = ct.max(1.0).log2().round().exp2() as usize;
+    ct.clamp(1, 1024)
+}
+
 #[derive(Debug, Clone)]
 pub struct EdgeClientConfig {
     pub name: String,
@@ -99,6 +152,11 @@ pub struct EdgeClientConfig {
     /// of (per-chunk) compression, crc verification and range transfer —
     /// see `model::state`.  Must be ≥ 1.
     pub chunk_tokens: usize,
+    /// Pick the chunk size per entry from the link's goodput/RTT break-even
+    /// ([`adaptive_chunk_tokens`]) instead of the fixed `chunk_tokens`.  The
+    /// chosen size is recorded in the entry header and its aliases, so
+    /// readers never need this flag to agree — mixed fleets interoperate.
+    pub adaptive_chunk: bool,
     /// Register/look up the four Figure-3 prefix ranges (§3.2).  When false
     /// only the full prompt is cached (prefix-caching ablation).
     pub partial_matching: bool,
@@ -125,6 +183,7 @@ impl EdgeClientConfig {
             max_new_tokens: None,
             compression: Compression::None,
             chunk_tokens: DEFAULT_CHUNK_TOKENS,
+            adaptive_chunk: false,
             partial_matching: true,
             use_catalog: true,
             fetch_policy: FetchPolicy::Always,
@@ -249,14 +308,71 @@ struct RangeFetch {
     entries: Vec<ChunkEntry>,
 }
 
-/// The chunk-aware range download for an ECS3 target: fetch the head
-/// (header + chunk index), then exactly the whole chunks covering `m`
-/// tokens.  Uncompressed bodies have a-priori-computable chunk spans, so
-/// head and chunks ride one pipelined round trip; deflated bodies need the
-/// index first and pay one extra round trip — still a fraction of the
-/// full-blob bytes.  `None` means the range path could not complete (stale
-/// geometry, short replies, corruption): the caller falls back to a
-/// full-blob download, never to a questionable restore.
+/// Validate a fetched head and build the streaming assembler from it: the
+/// head must be exactly the promised length, parse + verify
+/// ([`StateAssembler::new`]: identity, index crc) and declare the chunk
+/// size the alias promised — anything else is a stale or short entry and
+/// the caller falls back.  Shared by both `fetch_chunked` branches so a
+/// future validation fix cannot land in one and miss the other.
+fn checked_assembler(
+    head: &[u8],
+    head_len: usize,
+    ct: usize,
+    m: usize,
+    hash: &str,
+    dims: (usize, usize, usize, usize),
+) -> Option<StateAssembler> {
+    if head.len() != head_len {
+        return None; // entry shorter than the alias promised
+    }
+    let asm = match StateAssembler::new(head, m, hash, dims) {
+        Ok(a) => a,
+        Err(e) => {
+            log_debug!("edge-client", "range head rejected: {e}");
+            return None;
+        }
+    };
+    if asm.chunk_tokens() != ct {
+        return None; // stale geometry: re-written with another chunk size
+    }
+    Some(asm)
+}
+
+/// Pull the outstanding chunk replies off a streamed batch, shaping each
+/// arrival and feeding it straight into the assembler — the
+/// wire-overlapped decode loop.  `false` on any missing/short/invalid reply
+/// (the caller drains the stream and falls back).
+fn consume_chunk_stream(
+    replies: &mut StreamingReplies<'_>,
+    sess: &mut StreamSession<'_>,
+    asm: &mut StateAssembler,
+) -> bool {
+    for c in asm.fed_chunks()..asm.expected_chunks() {
+        let bytes = match replies.next_reply() {
+            Ok(Some(Value::Bulk(b))) => b,
+            _ => return false, // evicted mid-stream / error reply / dead conn
+        };
+        sess.arrived(bytes.len());
+        if let Err(e) = asm.feed_chunk(&bytes) {
+            log_debug!("edge-client", "streamed chunk {c} rejected: {e}");
+            return false;
+        }
+    }
+    true
+}
+
+/// The streaming chunk-aware range download for an ECS3 target: fetch the
+/// head (header + chunk index), then **one `GETRANGE` per whole chunk**
+/// covering `m` tokens, all pipelined in a single write — and decode each
+/// chunk as its reply arrives, overlapping chunk `i`'s crc/inflate/scatter
+/// with chunk `i+1`'s modelled wire time ([`StateAssembler`] +
+/// [`Shaper::shaped_stream`]).  Uncompressed bodies have
+/// a-priori-computable chunk spans, so the head rides the same pipelined
+/// round trip; deflated bodies need the index first and pay one extra round
+/// trip — still a fraction of the full-blob bytes.  `None` means the range
+/// path could not complete (stale geometry, short replies, corruption): the
+/// reply stream is drained to keep the connection synced and the caller
+/// falls back to a full-blob download, never to a questionable restore.
 #[allow(clippy::too_many_arguments)]
 fn fetch_chunked(
     conn: &mut KvClient,
@@ -275,48 +391,47 @@ fn fetch_chunked(
     let stride = lo.token_stride();
     let k = lo.prefix_chunks(m);
 
-    // validate a fetched head once: full length, matching chunk geometry,
-    // crc-verified index covering the matched chunks
-    let check_head = |head: &SharedBytes| -> Option<Vec<ChunkEntry>> {
-        if head.len() != head_len {
+    let (asm, wire) = if !compressed {
+        // raw chunk spans are pure layout arithmetic: head + one GETRANGE
+        // per chunk in one pipelined write, consumed as a stream
+        let mut reqs = Vec::with_capacity(k + 1);
+        reqs.push(getrange_req(target, 0, head_len));
+        let mut off = head_len;
+        for c in 0..k {
+            let span = lo.chunk_rows(c, total_rows) * stride;
+            reqs.push(getrange_req(target, off, span));
+            off += span;
+        }
+        let mut replies = match conn.send_reqs(&reqs) {
+            Ok(r) => r,
+            Err(e) => {
+                log_debug!("edge-client", "range batch failed: {e}");
+                return None;
+            }
+        };
+        let mut sess = shaper.shaped_stream();
+        let mut asm: Option<StateAssembler> = None;
+        let ok = 'stream: {
+            let head = match replies.next_reply() {
+                Ok(Some(Value::Bulk(b))) => b,
+                _ => break 'stream false, // evicted between the alias GET and now
+            };
+            sess.arrived(head.len());
+            let Some(a) = checked_assembler(&head, head_len, ct, m, hash, dims) else {
+                break 'stream false;
+            };
+            consume_chunk_stream(&mut replies, &mut sess, asm.insert(a))
+        };
+        if !ok {
+            let _ = replies.drain(); // re-sync before the full-blob fallback
             return None;
         }
-        let (ct2, entries) = read_chunk_index(head)?;
-        if ct2 != ct || entries.len() < k {
-            return None; // stale geometry: entry re-written with another chunk size
-        }
-        Some(entries)
-    };
-    let (head, rows, entries) = if !compressed {
-        // raw chunk spans are pure layout arithmetic: one pipelined trip
-        let span = lo.prefix_rows(m, total_rows) * stride;
-        let reqs = [
-            getrange_req(target, 0, head_len),
-            getrange_req(target, head_len, span),
-        ];
-        let replies = shaper
-            .shaped_post(|| {
-                let r = conn.pipeline_req(&reqs);
-                let n = r
-                    .as_ref()
-                    .map(|vs| {
-                        vs.iter()
-                            .map(|v| v.as_bulk().map_or(0, <[u8]>::len))
-                            .sum::<usize>()
-                    })
-                    .unwrap_or(0);
-                (r, n)
-            })
-            .ok()?;
-        let (head, rows) = match (replies.first(), replies.get(1)) {
-            (Some(Value::Bulk(h)), Some(Value::Bulk(r))) => (h.clone(), r.clone()),
-            _ => return None, // target evicted between the alias GET and now
-        };
-        let entries = check_head(&head)?;
-        (head, rows, entries)
+        let wire = sess.bytes();
+        sess.finish();
+        (asm?, wire)
     } else {
-        // deflated chunk lengths are data-dependent: head first, then
-        // exactly the matched chunks' byte span from its index
+        // deflated chunk lengths are data-dependent: head first, then one
+        // GETRANGE per chunk at offsets read from the verified index
         let head = shaper
             .shaped_post(|| {
                 let r = conn.getrange(target, 0, head_len);
@@ -327,61 +442,60 @@ fn fetch_chunked(
                 (r, n)
             })
             .ok()??;
-        let entries = check_head(&head)?;
-        let span: usize = entries.iter().take(k).map(|e| e.len as usize).sum();
-        if span == 0 {
+        let mut asm = checked_assembler(&head, head_len, ct, m, hash, dims)?;
+        let mut reqs = Vec::with_capacity(k);
+        let mut off = head_len;
+        for c in 0..k {
+            let clen = asm.chunk_len(c);
+            if clen == 0 {
+                return None; // a zero-length stored chunk is never written
+            }
+            reqs.push(getrange_req(target, off, clen));
+            off += clen;
+        }
+        let mut replies = match conn.send_reqs(&reqs) {
+            Ok(r) => r,
+            Err(e) => {
+                log_debug!("edge-client", "range batch failed: {e}");
+                return None;
+            }
+        };
+        let mut sess = shaper.shaped_stream();
+        if !consume_chunk_stream(&mut replies, &mut sess, &mut asm) {
+            let _ = replies.drain();
             return None;
         }
-        let rows = shaper
-            .shaped_post(|| {
-                let r = conn.getrange(target, head_len, span);
-                let n = r
-                    .as_ref()
-                    .map(|o| o.as_ref().map_or(0, |b| b.len()))
-                    .unwrap_or(0);
-                (r, n)
-            })
-            .ok()??;
-        (head, rows, entries)
+        let wire = head.len() + sess.bytes();
+        sess.finish();
+        (asm, wire)
     };
 
-    let span: usize = entries.iter().take(k).map(|e| e.len as usize).sum();
-    if rows.len() != span {
-        log_debug!(
-            "edge-client",
-            "short range replies ({}/{head_len}, {}/{span}); discarding",
-            head.len(),
-            rows.len()
-        );
-        return None;
-    }
-    let compressed = KvState::peek_header(&head).ok()?.compressed;
-    match KvState::restore_prefix_from_parts(&head, &rows, m, hash, dims) {
-        Ok(state) => {
-            let wire = head.len() + rows.len();
-            // baseline: what the pre-chunking pipeline moved for this hit —
-            // compressed entries fell back to a full-blob download (head +
-            // whole body); uncompressed is the dedicated-m-row-blob model,
-            // same as the upload side
-            let body_total: usize = entries.iter().map(|e| e.len as usize).sum();
-            let baseline = if compressed {
-                head_len + body_total
-            } else {
-                lo.blob_len(m)
-            };
-            Some(RangeFetch {
-                state,
-                wire,
-                saved: baseline.saturating_sub(wire),
-                compressed,
-                entries,
-            })
-        }
+    let compressed = asm.compressed();
+    let entries = asm.entries().to_vec();
+    let body_total: usize = entries.iter().map(|e| e.len as usize).sum();
+    let state = match asm.finish() {
+        Ok(st) => st,
         Err(e) => {
             log_debug!("edge-client", "range restore rejected: {e}");
-            None
+            return None;
         }
-    }
+    };
+    // baseline: what the pre-chunking pipeline moved for this hit —
+    // compressed entries fell back to a full-blob download (head + whole
+    // body); uncompressed is the dedicated-m-row-blob model, same as the
+    // upload side
+    let baseline = if compressed {
+        head_len + body_total
+    } else {
+        lo.blob_len(m)
+    };
+    Some(RangeFetch {
+        state,
+        wire,
+        saved: baseline.saturating_sub(wire),
+        compressed,
+        entries,
+    })
 }
 
 /// `GET` + verify + truncate an entire stored entry — the range path's
@@ -498,6 +612,33 @@ impl EdgeClient {
         .with_chunk_tokens(self.cfg.chunk_tokens)
     }
 
+    /// ECS3 chunk size to serialize an `entry_rows`-row entry with: the
+    /// static config value, or — with adaptive sizing on — the link's
+    /// break-even, preferring a compatible delta base's size (within 2× of
+    /// optimal) because reusing its stored chunks verbatim via `SPLICE`
+    /// beats a marginally better-sized full re-upload.
+    fn chunk_tokens_for(&self, entry_rows: usize, delta_base: Option<&DeltaBase>) -> usize {
+        if !self.cfg.adaptive_chunk {
+            return self.cfg.chunk_tokens;
+        }
+        let ct = adaptive_chunk_tokens(
+            &self.shaper.link,
+            self.blob_layout().token_stride(),
+            entry_rows,
+        );
+        if let Some(b) = delta_base {
+            if let Some(bct) = b.chunk_tokens {
+                if b.compressed == (self.cfg.compression == Compression::Deflate)
+                    && bct >= ct / 2
+                    && bct <= ct * 2
+                {
+                    return bct;
+                }
+            }
+        }
+        ct
+    }
+
     /// Total payload bytes this client has moved over the modelled link
     /// (both directions) — the honest wire ledger range transfers shrink.
     pub fn link_moved_bytes(&self) -> u64 {
@@ -509,6 +650,13 @@ impl EdgeClient {
     /// whenever the codec actually saves wire bytes.
     pub fn link_inflated_bytes(&self) -> u64 {
         self.shaper.inflated_bytes
+    }
+
+    /// Latency the streaming download path hid by decoding chunks while
+    /// later chunks were still on the modelled wire (see
+    /// [`Shaper::shaped_stream`]).
+    pub fn link_overlap_saved(&self) -> Duration {
+        self.shaper.overlap_saved
     }
 
     /// Tokenize the prompt and derive its Figure-3 range prefix lengths.
@@ -765,12 +913,12 @@ impl EdgeClient {
         }
 
         let hash = self.engine.model_hash().to_string();
-        let lo = self.blob_layout();
-        let ct = self.cfg.chunk_tokens;
         let compressed = self.cfg.compression == Compression::Deflate;
         // ranges_for returns ascending lengths, so the last entry is longest
         let longest = todo.last().unwrap().clone();
         let n = longest.token_len;
+        let ct = self.chunk_tokens_for(n, delta_base);
+        let lo = self.blob_layout().with_chunk_tokens(ct);
         let long_key = state_store_key(&longest.key);
 
         // what the pre-delta pipeline would have shipped: one full nested
@@ -886,6 +1034,7 @@ impl EdgeClient {
         let mut bd = PhaseBreakdown::default();
         self.stats.queries += 1;
         let inflated0 = self.shaper.inflated_bytes;
+        let overlap0 = self.shaper.overlap_saved;
 
         // -- step 1: tokenize -------------------------------------------------
         let t0 = std::time::Instant::now();
@@ -963,6 +1112,7 @@ impl EdgeClient {
         bd.saved_bytes = saved;
         bd.wire_bytes = downloaded + uploaded;
         bd.inflated_bytes = (self.shaper.inflated_bytes - inflated0) as usize;
+        bd.overlap_saved = self.shaper.overlap_saved - overlap0;
 
         Ok(QueryResult {
             case,
@@ -1189,6 +1339,43 @@ mod tests {
         assert_eq!(c.stats.full_fetch_fallbacks, 0, "no full-blob fallback");
         assert!(r1.saved_bytes > 0, "range fetch must beat the full-entry model");
         cb.shutdown();
+    }
+
+    #[test]
+    fn adaptive_chunk_tokens_break_even_shape() {
+        // the paper's Wi-Fi 4 + 270M-class stride (6 layers, 1 head, 80
+        // dims = 3840 B/token) lands on the old fixed default
+        let stride_270m = 2 * 6 * 80 * 4;
+        let wifi = LinkModel::wifi4_2g4();
+        assert_eq!(
+            adaptive_chunk_tokens(&wifi, stride_270m, 117),
+            DEFAULT_CHUNK_TOKENS
+        );
+        // cheap RTT (wired) shrinks chunks; a long-fat link grows them
+        let eth = LinkModel::ethernet_1g();
+        assert!(adaptive_chunk_tokens(&eth, stride_270m, 117) < DEFAULT_CHUNK_TOKENS);
+        let long_fat = LinkModel {
+            name: "sat",
+            goodput_bps: wifi.goodput_bps,
+            rtt: std::time::Duration::from_millis(2000),
+            jitter_frac: 0.0,
+        };
+        assert!(
+            adaptive_chunk_tokens(&long_fat, stride_270m, 117) > DEFAULT_CHUNK_TOKENS
+        );
+        // monotone: fatter strides want smaller chunks, longer entries larger
+        let a = adaptive_chunk_tokens(&wifi, stride_270m, 117);
+        assert!(adaptive_chunk_tokens(&wifi, stride_270m * 8, 117) <= a);
+        assert!(adaptive_chunk_tokens(&wifi, stride_270m, 117 * 16) >= a);
+        // always a clamped power of two, even in degenerate corners
+        for (stride, rows) in [(1usize, 1usize), (1 << 20, 1), (4, 1 << 20)] {
+            let ct = adaptive_chunk_tokens(&wifi, stride, rows);
+            assert!((1..=1024).contains(&ct));
+            assert!(ct.is_power_of_two());
+        }
+        // loopback has no BDP: only the fixed per-chunk overhead remains
+        let lo = adaptive_chunk_tokens(&LinkModel::loopback(), stride_270m, 117);
+        assert!((1..=4).contains(&lo), "{lo}");
     }
 
     #[test]

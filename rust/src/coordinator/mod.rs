@@ -16,6 +16,8 @@ pub mod policy;
 pub mod sync;
 
 pub use cachebox::CacheBox;
-pub use client::{EdgeClient, EdgeClientConfig, HitCase, QueryResult};
+pub use client::{
+    adaptive_chunk_tokens, EdgeClient, EdgeClientConfig, HitCase, QueryResult,
+};
 pub use policy::FetchPolicy;
 pub use sync::CatalogSync;

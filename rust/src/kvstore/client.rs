@@ -6,8 +6,17 @@
 //! existence probes and the catalog-sync calls.  `pipeline`/`pipeline_req`
 //! issue several commands in one write and read the replies back in order
 //! (used by the upload path, which publishes a prompt's ranges in one round
-//! trip, and by the range-download path, which fetches a blob's header and
-//! its matched rows together).
+//! trip).
+//!
+//! The **streaming** variant, [`KvClient::send_reqs`], writes the same
+//! pipelined batch but hands back a [`StreamingReplies`] that yields each
+//! reply as it is decoded off the socket instead of buffering the whole
+//! batch.  This is what the range-download path rides: it issues one
+//! `GETRANGE` per matched ECS3 chunk and verifies + inflates each chunk the
+//! moment its reply lands, overlapping decode with the wire time of the
+//! chunks still in flight.  An aborted consume must call
+//! [`StreamingReplies::drain`] so the connection stays frame-synced for
+//! whatever command follows (e.g. the full-blob fallback).
 //!
 //! Payload-carrying calls speak [`SharedBytes`] end to end: `get` returns a
 //! slice of the receive buffer and `set_shared`/`splice` queue views of the
@@ -85,18 +94,28 @@ impl KvClient {
         self.exec_req(&request(parts))
     }
 
-    /// Issue several pre-built requests in one write; replies come back in
-    /// order.  Server-side errors are returned in-place (not turned into
-    /// Err) so a batch with one failure still yields the other replies.
-    pub fn pipeline_req(&mut self, reqs: &[Value]) -> Result<Vec<Value>> {
+    /// Write a pipelined batch in one go and stream the replies back: the
+    /// returned handle decodes each reply off the socket on demand, so the
+    /// caller can process reply `i` while replies `i+1..` are still in
+    /// flight.  Server-side errors come back in-place as [`Value::Error`].
+    pub fn send_reqs(&mut self, reqs: &[Value]) -> Result<StreamingReplies<'_>> {
         let mut buf = Vec::new();
         for r in reqs {
             r.encode_into(&mut buf);
         }
         self.stream.write_all(&buf)?;
+        Ok(StreamingReplies { remaining: reqs.len(), client: self })
+    }
+
+    /// Issue several pre-built requests in one write; replies come back in
+    /// order.  Server-side errors are returned in-place (not turned into
+    /// Err) so a batch with one failure still yields the other replies.
+    /// Buffer-everything wrapper over [`KvClient::send_reqs`].
+    pub fn pipeline_req(&mut self, reqs: &[Value]) -> Result<Vec<Value>> {
+        let mut replies = self.send_reqs(reqs)?;
         let mut out = Vec::with_capacity(reqs.len());
-        for _ in reqs {
-            out.push(read_value(&mut self.stream, &mut self.dec)?);
+        while let Some(v) = replies.next_reply()? {
+            out.push(v);
         }
         Ok(out)
     }
@@ -257,6 +276,41 @@ impl KvClient {
     }
 }
 
+/// In-flight replies of one pipelined batch ([`KvClient::send_reqs`]).
+/// Yields replies in request order, decoding each from the socket only when
+/// asked — the batch is never buffered wholesale.
+pub struct StreamingReplies<'a> {
+    remaining: usize,
+    client: &'a mut KvClient,
+}
+
+impl StreamingReplies<'_> {
+    /// Replies not yet read.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    /// Block for the next reply; `Ok(None)` once the batch is exhausted.
+    /// Server-side errors are returned in-place as [`Value::Error`].
+    pub fn next_reply(&mut self) -> Result<Option<Value>> {
+        if self.remaining == 0 {
+            return Ok(None);
+        }
+        let v = read_value(&mut self.client.stream, &mut self.client.dec)?;
+        self.remaining -= 1;
+        Ok(Some(v))
+    }
+
+    /// Read and discard every outstanding reply, re-syncing the connection
+    /// after an aborted streaming consume.  Must be called before issuing
+    /// any further command on the client when a consume stops early;
+    /// otherwise stale replies would be mis-attributed to later requests.
+    pub fn drain(mut self) -> Result<()> {
+        while self.next_reply()?.is_some() {}
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::server::KvServer;
@@ -358,6 +412,39 @@ mod tests {
                 format!("v{i}").into_bytes()
             );
         }
+    }
+
+    #[test]
+    fn streaming_replies_yield_in_order_and_drain_resyncs() {
+        let (_h, mut c) = spawn();
+        c.set(b"k", b"0123456789").unwrap();
+        let reqs = vec![
+            getrange_req(b"k", 0, 3),
+            getrange_req(b"k", 3, 3),
+            getrange_req(b"k", 6, 4),
+        ];
+        let mut s = c.send_reqs(&reqs).unwrap();
+        assert_eq!(s.remaining(), 3);
+        assert_eq!(s.next_reply().unwrap().unwrap(), Value::bulk(&b"012"[..]));
+        assert_eq!(s.remaining(), 2);
+        // abort mid-batch: drain re-syncs the connection for later commands
+        s.drain().unwrap();
+        c.ping().unwrap();
+        assert_eq!(c.get(b"k").unwrap().unwrap(), b"0123456789");
+        // a full consume yields every reply in request order, then None
+        let mut s = c.send_reqs(&reqs).unwrap();
+        let mut got = Vec::new();
+        while let Some(v) = s.next_reply().unwrap() {
+            got.push(v);
+        }
+        assert_eq!(
+            got,
+            vec![
+                Value::bulk(&b"012"[..]),
+                Value::bulk(&b"345"[..]),
+                Value::bulk(&b"6789"[..]),
+            ]
+        );
     }
 
     #[test]

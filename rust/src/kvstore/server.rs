@@ -24,9 +24,10 @@
 //!   prefix chunk bytes it already holds — compressed or not, since ECS3
 //!   chunks are independent deflate streams.
 
+use std::collections::HashMap;
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -39,9 +40,14 @@ use crate::log_info;
 use crate::util::bytes::SharedBytes;
 
 /// Master-catalog state: an append-only key log; version = entries appended.
+///
+/// Keys are stored as [`SharedBytes`] so a `CAT.DELTA` reply is built from
+/// O(1) views of the log entries — no per-key payload copy per syncing
+/// client.  Keys arriving off the wire (slices of a connection read buffer)
+/// are compacted on insert so the log never pins whole read buffers.
 #[derive(Debug, Default)]
 pub struct MasterCatalog {
-    log: Vec<Vec<u8>>,
+    log: Vec<SharedBytes>,
 }
 
 impl MasterCatalog {
@@ -49,13 +55,13 @@ impl MasterCatalog {
         self.log.len() as u64
     }
 
-    pub fn register(&mut self, key: Vec<u8>) -> u64 {
-        self.log.push(key);
+    pub fn register(&mut self, key: impl Into<SharedBytes>) -> u64 {
+        self.log.push(key.into().detach_loose());
         self.version()
     }
 
     /// Entries appended after `since` (capped to keep replies bounded).
-    pub fn delta(&self, since: u64, cap: usize) -> (u64, &[Vec<u8>]) {
+    pub fn delta(&self, since: u64, cap: usize) -> (u64, &[SharedBytes]) {
         let from = (since as usize).min(self.log.len());
         let to = (from + cap).min(self.log.len());
         (to as u64, &self.log[from..to])
@@ -68,8 +74,12 @@ pub struct KvServer {
     pub catalog: Mutex<MasterCatalog>,
     stop: AtomicBool,
     /// Live connection handles, force-closed on shutdown (real Redis's
-    /// SHUTDOWN drops client connections too).
-    conns: Mutex<Vec<TcpStream>>,
+    /// SHUTDOWN drops client connections too).  Keyed by a per-connection
+    /// id so a connection prunes its own handle on exit — a long-lived
+    /// server must not retain one dead `TcpStream` per connection ever
+    /// accepted.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    next_conn_id: AtomicU64,
     /// Simulated per-command processing delay (cache-box CPU time); zero by
     /// default — the link shaping lives client-side in `netsim`.
     pub op_delay: std::time::Duration,
@@ -85,7 +95,8 @@ impl KvServer {
             store: Mutex::new(Store::new(max_bytes)),
             catalog: Mutex::new(MasterCatalog::default()),
             stop: AtomicBool::new(false),
-            conns: Mutex::new(Vec::new()),
+            conns: Mutex::new(HashMap::new()),
+            next_conn_id: AtomicU64::new(0),
             op_delay: std::time::Duration::ZERO,
         })
     }
@@ -122,16 +133,23 @@ impl KvServer {
 
     fn handle_conn(&self, mut stream: TcpStream) {
         let _ = stream.set_nodelay(true);
+        let conn_id = self.next_conn_id.fetch_add(1, Ordering::Relaxed);
         if let Ok(clone) = stream.try_clone() {
-            self.conns.lock().unwrap().push(clone);
+            self.conns.lock().unwrap().insert(conn_id, clone);
         }
+        self.serve_conn(&mut stream);
+        // prune on every exit path: `conns` tracks live connections only
+        self.conns.lock().unwrap().remove(&conn_id);
+    }
+
+    fn serve_conn(&self, stream: &mut TcpStream) {
         let mut dec = Decoder::new();
         let mut out = Vec::with_capacity(64 * 1024);
         loop {
             if self.stop.load(Ordering::SeqCst) {
                 return;
             }
-            let req = match read_value(&mut stream, &mut dec) {
+            let req = match read_value(stream, &mut dec) {
                 Ok(v) => v,
                 Err(RespError::Io(_)) => return, // client hung up
                 Err(RespError::Protocol(msg)) => {
@@ -144,10 +162,25 @@ impl KvServer {
             out.clear();
             reply.encode_into(&mut out);
             // Drain any further pipelined requests already buffered before
-            // flushing, so pipelined batches get answered in one write.
-            while let Ok(Some(req)) = dec.next_value() {
-                let r = self.dispatch(req);
-                r.encode_into(&mut out);
+            // flushing, so pipelined batches get answered in one write.  A
+            // protocol error mid-batch is surfaced as an error reply and the
+            // connection is closed, exactly like the top-of-loop path —
+            // swallowing it would leave the stream desynced, with the peer
+            // waiting on replies that can never be framed correctly again.
+            loop {
+                match dec.next_value() {
+                    Ok(Some(req)) => {
+                        let r = self.dispatch(req);
+                        r.encode_into(&mut out);
+                    }
+                    Ok(None) => break,
+                    Err(RespError::Protocol(msg)) => {
+                        Value::Error(format!("ERR {msg}")).encode_into(&mut out);
+                        let _ = stream.write_all(&out);
+                        return;
+                    }
+                    Err(RespError::Io(_)) => return, // unreachable for a decoder
+                }
             }
             if stream.write_all(&out).is_err() {
                 return;
@@ -265,7 +298,8 @@ impl KvServer {
             }
             ("CAT.VERSION", 1) => Value::Int(self.catalog.lock().unwrap().version() as i64),
             ("CAT.REGISTER", 2) => {
-                let v = self.catalog.lock().unwrap().register(args[1].to_vec());
+                // O(1) view of the wire buffer; register compacts loose ones
+                let v = self.catalog.lock().unwrap().register(args[1].clone());
                 Value::Int(v as i64)
             }
             ("CAT.DELTA", 2) => {
@@ -316,7 +350,7 @@ impl ServerHandle {
             let _ = t.join();
         }
         // force-close live connections so blocked reads return immediately
-        for c in self.server.conns.lock().unwrap().drain(..) {
+        for (_, c) in self.server.conns.lock().unwrap().drain() {
             let _ = c.shutdown(std::net::Shutdown::Both);
         }
     }
@@ -344,7 +378,8 @@ mod tests {
         assert_eq!(keys.len(), 2);
         let (v, keys) = c.delta(1, 100);
         assert_eq!(v, 2);
-        assert_eq!(keys, &[b"k2".to_vec()][..]);
+        assert_eq!(keys.len(), 1);
+        assert_eq!(keys[0], b"k2".to_vec());
         let (v, keys) = c.delta(2, 100);
         assert_eq!(v, 2);
         assert!(keys.is_empty());
@@ -366,6 +401,65 @@ mod tests {
         let (v2, keys2) = c.delta(v, 10);
         assert_eq!(v2, 20);
         assert_eq!(keys2[0], b"k10".to_vec());
+    }
+
+    #[test]
+    fn catalog_log_keys_are_compact_shared_views() {
+        let mut c = MasterCatalog::default();
+        // a key that arrives as a loose slice of a big read buffer must be
+        // compacted, not pin the buffer
+        let buf = SharedBytes::new(vec![b'x'; 1 << 20]);
+        c.register(buf.slice(0..16));
+        let (_, keys) = c.delta(0, 10);
+        assert_eq!(keys[0].len(), 16);
+        assert!(keys[0].backing_len() <= 4096, "loose key must be re-homed");
+        // delta replies are views, not copies: a clone (what CAT.DELTA puts
+        // in the reply) points at the very same backing bytes
+        let k0 = keys[0].clone();
+        assert_eq!(k0.as_slice().as_ptr(), keys[0].as_slice().as_ptr());
+    }
+
+    #[test]
+    fn pipelined_protocol_error_is_surfaced_and_closes_conn() {
+        use std::io::{Read, Write};
+        let srv = KvServer::new(usize::MAX);
+        let h = srv.serve("127.0.0.1:0").unwrap();
+        let mut raw = std::net::TcpStream::connect(h.addr).unwrap();
+        // a valid PING followed, in the same write, by a garbage frame: the
+        // drain loop must answer the PING *and* surface the error instead of
+        // silently leaving the connection desynced
+        raw.write_all(b"*1\r\n$4\r\nPING\r\n!bogus\r\n").unwrap();
+        let mut buf = Vec::new();
+        raw.read_to_end(&mut buf).unwrap(); // server closes after the error
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.starts_with("+PONG\r\n"), "{text:?}");
+        assert!(text.contains("-ERR"), "protocol error must be surfaced: {text:?}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn dead_connections_are_pruned_from_the_handle_list() {
+        let srv = KvServer::new(usize::MAX);
+        let h = srv.serve("127.0.0.1:0").unwrap();
+        for _ in 0..8 {
+            let mut c = super::super::client::KvClient::connect(&h.addr_string()).unwrap();
+            c.ping().unwrap();
+            drop(c);
+        }
+        // connection threads notice the hangup and prune their handles
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            let live = srv.conns.lock().unwrap().len();
+            if live == 0 {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "{live} dead connection handles still retained"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        h.shutdown();
     }
 
     #[test]

@@ -101,6 +101,7 @@ fn client_config(m: &edgecache::util::cli::Matches, server: Option<String>) -> R
         max_new_tokens: m.get("max-new").and_then(|v| v.parse().ok()),
         compression: if m.flag("compress") { Compression::Deflate } else { Compression::None },
         chunk_tokens: edgecache::model::state::DEFAULT_CHUNK_TOKENS,
+        adaptive_chunk: m.flag("adaptive-chunk"),
         partial_matching: !m.flag("no-partial"),
         use_catalog: !m.flag("no-catalog"),
         fetch_policy: if m.flag("break-even") { FetchPolicy::BreakEven } else { FetchPolicy::Always },
@@ -124,6 +125,7 @@ fn client_cmd_spec(name: &'static str, about: &'static str) -> Command {
         .flag("no-catalog", "disable the local Bloom catalog (probe server)")
         .flag("break-even", "fetch only when the transfer beats local prefill")
         .flag("compress", "deflate state blobs before upload")
+        .flag("adaptive-chunk", "pick ECS3 chunk size from the link break-even")
 }
 
 fn run_trace(

@@ -84,6 +84,12 @@ pub struct PhaseBreakdown {
     pub inflated_bytes: usize,
     /// Tokens whose prefill was skipped thanks to a cache hit.
     pub reused_tokens: usize,
+    /// Latency the streaming download path hid by decoding chunks while
+    /// later chunks were still on the modelled wire (store-and-forward
+    /// serial time minus the streamed elapsed time; see
+    /// `netsim::Shaper::shaped_stream`).  Already reflected in the Redis
+    /// phase — this is the *credit* ledger, not an extra cost.
+    pub overlap_saved: Duration,
 }
 
 impl PhaseBreakdown {
@@ -131,6 +137,7 @@ impl PhaseBreakdown {
         self.wire_bytes += other.wire_bytes;
         self.inflated_bytes += other.inflated_bytes;
         self.reused_tokens += other.reused_tokens;
+        self.overlap_saved += other.overlap_saved;
     }
 }
 
@@ -230,6 +237,9 @@ pub struct CaseAggregate {
     pub saved_bytes: f64,
     pub wire_bytes: f64,
     pub inflated_bytes: f64,
+    /// Seconds of decode latency hidden inside wire time by the streaming
+    /// assembly path, summed over queries.
+    pub overlap_saved: f64,
 }
 
 impl CaseAggregate {
@@ -246,6 +256,7 @@ impl CaseAggregate {
         self.saved_bytes += b.saved_bytes as f64;
         self.wire_bytes += b.wire_bytes as f64;
         self.inflated_bytes += b.inflated_bytes as f64;
+        self.overlap_saved += b.overlap_saved.as_secs_f64();
     }
 
     /// Mean time in a phase, milliseconds (Table 3 cell).
@@ -276,6 +287,14 @@ impl CaseAggregate {
             return 0.0;
         }
         self.saved_bytes / self.n as f64 / 1e6
+    }
+
+    /// Mean decode latency hidden inside wire time per query, milliseconds.
+    pub fn mean_overlap_saved_ms(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.overlap_saved / self.n as f64 * 1e3
     }
 
     /// Achieved wire compression ratio: logical KV bytes represented per
@@ -331,11 +350,25 @@ mod tests {
         b.prompt_tokens = 7;
         b.saved_bytes = 23;
         b.inflated_bytes = 400;
+        b.overlap_saved = Duration::from_millis(4);
         a.merge(&b);
         assert_eq!(a.get(Phase::Redis), Duration::from_millis(30));
         assert_eq!(a.prompt_tokens, 12);
         assert_eq!(a.saved_bytes, 123);
         assert_eq!(a.inflated_bytes, 400);
+        assert_eq!(a.overlap_saved, Duration::from_millis(4));
+    }
+
+    #[test]
+    fn overlap_saved_aggregates_to_mean_ms() {
+        let mut agg = CaseAggregate::default();
+        for ms in [10u64, 30] {
+            let mut b = PhaseBreakdown::default();
+            b.overlap_saved = Duration::from_millis(ms);
+            agg.push(&b);
+        }
+        assert!((agg.mean_overlap_saved_ms() - 20.0).abs() < 1e-9);
+        assert_eq!(CaseAggregate::default().mean_overlap_saved_ms(), 0.0);
     }
 
     #[test]

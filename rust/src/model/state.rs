@@ -36,9 +36,14 @@
 //! and every chunk crc before touching the live cache: a corrupt, truncated
 //! or mismatched blob is rejected and the client falls back — first to a
 //! full-blob download, then to local prefill (paper §3.3 — wrong bytes must
-//! never poison an inference).  Readers negotiate by magic: the previous
-//! format v2 (`"ECS2"`, whole-body compression + per-token crc row index)
-//! still deserializes, both whole and — uncompressed only — via
+//! never poison an inference).  Because every chunk is independently
+//! verifiable and decodable, restore also runs **incrementally**:
+//! [`StateAssembler`] accepts the head once and then each chunk the moment
+//! its bytes arrive, so the range-download path decodes chunk `i` while
+//! chunk `i+1` is still on the wire ([`KvState::restore_prefix_from_parts`]
+//! is its thin feed-everything wrapper).  Readers negotiate by magic: the
+//! previous format v2 (`"ECS2"`, whole-body compression + per-token crc row
+//! index) still deserializes, both whole and — uncompressed only — via
 //! [`KvState::restore_prefix_from_parts`].
 //!
 //! Only the first `n_tokens` sequence rows are shipped, so blob size scales
@@ -324,6 +329,202 @@ fn chunk_payload(bytes: &[u8], compressed: bool, expect: usize) -> Result<Cow<'_
     }
     copymeter::add(out.len());
     Ok(Cow::Owned(out))
+}
+
+/// Incremental verifier/decoder for a chunked (v3) range download — the
+/// streaming half of the restore path.  Built once from the blob *head*
+/// (fixed header + crc-verified chunk index), then fed each stored chunk
+/// **in arrival order** as its bytes land: [`StateAssembler::feed_chunk`]
+/// crc-checks, bounded-inflates and scatters that chunk immediately, so the
+/// decode of chunk `i` overlaps the wire time of chunk `i+1` instead of
+/// waiting for the whole range to buffer.  [`StateAssembler::finish`] hands
+/// back the assembled state only once every expected chunk was fed; any
+/// failure (wrong length, crc mismatch, deflate bomb, short payload) aborts
+/// the whole assembly and the caller falls back to a full-blob download —
+/// never a partial or questionable restore.
+///
+/// Chunks are strictly ordered: entry `fed` of the verified index names the
+/// only acceptable next chunk, so out-of-order or substituted chunk bytes
+/// fail its crc/length check instead of scattering rows to the wrong tokens.
+#[derive(Debug)]
+pub struct StateAssembler {
+    st: KvState,
+    entries: Vec<ChunkEntry>,
+    compressed: bool,
+    chunk_tokens: usize,
+    /// Row count of the stored entry (chunk geometry is defined against it).
+    total_rows: usize,
+    stride: usize,
+    /// Target prefix rows (what `finish` returns).
+    m: usize,
+    /// Whole chunks covering the `m`-row prefix.
+    k: usize,
+    fed: usize,
+}
+
+impl StateAssembler {
+    /// Parse + verify a blob head for an `m`-token prefix restore.  `head`
+    /// must cover the fixed header and the whole chunk index; identity, the
+    /// index crc and the chunk geometry are all checked here, before any
+    /// body byte is accepted.  v2 heads are rejected (streamed assembly is a
+    /// v3 capability; the legacy path lives in
+    /// [`KvState::restore_prefix_from_parts`]).
+    pub fn new(
+        head: &[u8],
+        m: usize,
+        expect_model_hash: &str,
+        expect_dims: (usize, usize, usize, usize),
+    ) -> Result<StateAssembler, StateError> {
+        let hdr = KvState::peek_header(head)?;
+        KvState::check_identity(&hdr, expect_model_hash, expect_dims)?;
+        if hdr.n_tokens < m {
+            return Err(StateError::Malformed(format!(
+                "entry holds {} rows, need {m}",
+                hdr.n_tokens
+            )));
+        }
+        let (l, s, kh, d) = expect_dims;
+        if m > s {
+            return Err(StateError::TooLong { n: m, cap: s });
+        }
+        if hdr.version != 3 {
+            return Err(StateError::Malformed(
+                "streamed assembly needs a v3 (chunked) head".into(),
+            ));
+        }
+        if hdr.chunk_tokens == 0 {
+            return Err(StateError::Malformed("chunk_tokens 0".into()));
+        }
+        let ct = hdr.chunk_tokens;
+        let lo = BlobLayout::new(expect_model_hash, l, kh, d).with_chunk_tokens(ct);
+        let idx_off = lo.index_off();
+        let nch_total = lo.n_chunks(hdr.n_tokens);
+        if head.len() < idx_off + 8 * nch_total {
+            return Err(StateError::Malformed("chunk index truncated".into()));
+        }
+        let crc_stored =
+            u32::from_le_bytes(head[idx_off - 4..idx_off].try_into().unwrap());
+        let index = &head[idx_off..idx_off + 8 * nch_total];
+        let mut crc = Crc32::new();
+        crc.update(index);
+        if crc.finalize() != crc_stored {
+            return Err(StateError::BadChecksum);
+        }
+        let entries: Vec<ChunkEntry> = index
+            .chunks_exact(8)
+            .map(|e| ChunkEntry {
+                len: u32::from_le_bytes(e[..4].try_into().unwrap()),
+                crc: u32::from_le_bytes(e[4..].try_into().unwrap()),
+            })
+            .collect();
+        let mut st = KvState::zeroed(l, s, kh, d);
+        st.n_tokens = m;
+        Ok(StateAssembler {
+            st,
+            entries,
+            compressed: hdr.compressed,
+            chunk_tokens: ct,
+            total_rows: hdr.n_tokens,
+            stride: lo.token_stride(),
+            m,
+            k: lo.prefix_chunks(m),
+            fed: 0,
+        })
+    }
+
+    /// Chunk size (tokens) the entry's own header declares.
+    pub fn chunk_tokens(&self) -> usize {
+        self.chunk_tokens
+    }
+
+    /// Whether the stored chunks are deflated.
+    pub fn compressed(&self) -> bool {
+        self.compressed
+    }
+
+    /// Whole chunks the `m`-row prefix needs.
+    pub fn expected_chunks(&self) -> usize {
+        self.k
+    }
+
+    pub fn fed_chunks(&self) -> usize {
+        self.fed
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.fed == self.k
+    }
+
+    /// Stored byte length of chunk `c` per the verified index.
+    pub fn chunk_len(&self, c: usize) -> usize {
+        self.entries[c].len as usize
+    }
+
+    /// Total stored bytes of the chunks covering the prefix (what a
+    /// batch-mode caller fetches in one range).
+    pub fn prefix_span(&self) -> usize {
+        self.entries[..self.k].iter().map(|e| e.len as usize).sum()
+    }
+
+    /// The entry's full chunk index (future `SPLICE` base metadata).
+    pub fn entries(&self) -> &[ChunkEntry] {
+        &self.entries
+    }
+
+    /// Accept the next chunk's stored bytes: verify its index length + crc,
+    /// inflate (bounded) and scatter its rows.  Errors leave the assembler
+    /// unusable for a *successful* finish — callers abort to the full-blob
+    /// fallback.
+    pub fn feed_chunk(&mut self, bytes: &[u8]) -> Result<(), StateError> {
+        let c = self.fed;
+        if c >= self.k {
+            return Err(StateError::Malformed(format!(
+                "all {} chunks already fed",
+                self.k
+            )));
+        }
+        let e = self.entries[c];
+        if bytes.len() != e.len as usize {
+            return Err(StateError::Malformed(format!(
+                "chunk {c}: {} stored bytes, index says {}",
+                bytes.len(),
+                e.len
+            )));
+        }
+        let mut crc = Crc32::new();
+        crc.update(bytes);
+        if crc.finalize() != e.crc {
+            return Err(StateError::ChunkChecksum { chunk: c });
+        }
+        // the stored chunk belongs to the total_rows-row entry; the final
+        // fetched chunk may extend past m — scatter only what we need
+        let stored_rows = self.chunk_tokens.min(self.total_rows - c * self.chunk_tokens);
+        let raw = chunk_payload(bytes, self.compressed, stored_rows * self.stride)?;
+        if raw.len() != stored_rows * self.stride {
+            return Err(StateError::Malformed(format!(
+                "chunk {c}: {} payload bytes, expected {}",
+                raw.len(),
+                stored_rows * self.stride
+            )));
+        }
+        let need = stored_rows.min(self.m - c * self.chunk_tokens);
+        self.st
+            .scatter_rows_at(&raw[..need * self.stride], c * self.chunk_tokens, need);
+        self.fed += 1;
+        Ok(())
+    }
+
+    /// Return the assembled `m`-row state; an error if any expected chunk
+    /// was never fed.
+    pub fn finish(self) -> Result<KvState, StateError> {
+        if self.fed != self.k {
+            return Err(StateError::Malformed(format!(
+                "assembly incomplete: {} of {} chunks fed",
+                self.fed, self.k
+            )));
+        }
+        Ok(self.st)
+    }
 }
 
 /// Live KV cache: what the engine threads through every PJRT call.
@@ -785,12 +986,13 @@ impl KvState {
     /// is a byte prefix of the stored blob covering the fixed header plus
     /// the whole chunk index; `rows` is the body slice holding the whole
     /// chunks that cover tokens `[0, m)` (`GETRANGE`-fetched — see
-    /// [`BlobLayout::prefix_rows`]).  The index crc and each chunk's crc are
-    /// verified, so a truncated, stale or corrupted range degrades to an
-    /// error — never a poisoned cache — and a corrupt chunk is reported
-    /// chunk-granularly ([`StateError::ChunkChecksum`]): prefixes that stop
-    /// short of it still restore.  v2 heads (uncompressed only) take the
-    /// legacy per-token path.
+    /// [`BlobLayout::prefix_rows`]).  A thin feed-everything wrapper over
+    /// [`StateAssembler`]: the index crc and each chunk's crc are verified,
+    /// so a truncated, stale or corrupted range degrades to an error — never
+    /// a poisoned cache — and a corrupt chunk is reported chunk-granularly
+    /// ([`StateError::ChunkChecksum`]): prefixes that stop short of it still
+    /// restore.  v2 heads (uncompressed only) take the legacy per-token
+    /// path.
     pub fn restore_prefix_from_parts(
         head: &[u8],
         rows: &[u8],
@@ -799,79 +1001,34 @@ impl KvState {
         expect_dims: (usize, usize, usize, usize),
     ) -> Result<KvState, StateError> {
         let hdr = Self::peek_header(head)?;
-        Self::check_identity(&hdr, expect_model_hash, expect_dims)?;
-        if hdr.n_tokens < m {
-            return Err(StateError::Malformed(format!(
-                "entry holds {} rows, need {m}",
-                hdr.n_tokens
-            )));
-        }
-        let (l, s, kh, d) = expect_dims;
-        if m > s {
-            return Err(StateError::TooLong { n: m, cap: s });
-        }
         if hdr.version == 2 {
-            return Self::restore_prefix_v2(head, rows, m, &hdr, expect_dims);
-        }
-        if hdr.chunk_tokens == 0 {
-            return Err(StateError::Malformed("chunk_tokens 0".into()));
-        }
-        let ct = hdr.chunk_tokens;
-        let lo = BlobLayout::new(expect_model_hash, l, kh, d).with_chunk_tokens(ct);
-        let idx_off = lo.index_off();
-        let nch_total = lo.n_chunks(hdr.n_tokens);
-        if head.len() < idx_off + 8 * nch_total {
-            return Err(StateError::Malformed("chunk index truncated".into()));
-        }
-        let crc_stored =
-            u32::from_le_bytes(head[idx_off - 4..idx_off].try_into().unwrap());
-        let index = &head[idx_off..idx_off + 8 * nch_total];
-        let mut crc = Crc32::new();
-        crc.update(index);
-        if crc.finalize() != crc_stored {
-            return Err(StateError::BadChecksum);
-        }
-        let k = lo.prefix_chunks(m);
-        let span: usize = index
-            .chunks_exact(8)
-            .take(k)
-            .map(|e| u32::from_le_bytes(e[..4].try_into().unwrap()) as usize)
-            .sum();
-        if rows.len() != span {
-            return Err(StateError::Malformed(format!(
-                "chunk payload {} bytes, expected {span}",
-                rows.len()
-            )));
-        }
-        let stride = lo.token_stride();
-        let mut st = KvState::zeroed(l, s, kh, d);
-        st.n_tokens = m;
-        let mut off = 0usize;
-        for (c, e) in index.chunks_exact(8).take(k).enumerate() {
-            let clen = u32::from_le_bytes(e[..4].try_into().unwrap()) as usize;
-            let want = u32::from_le_bytes(e[4..].try_into().unwrap());
-            let bytes = &rows[off..off + clen];
-            off += clen;
-            let mut crc = Crc32::new();
-            crc.update(bytes);
-            if crc.finalize() != want {
-                return Err(StateError::ChunkChecksum { chunk: c });
-            }
-            // the stored chunk belongs to the n_tokens-row entry; the final
-            // fetched chunk may extend past m — scatter only what we need
-            let stored_rows = lo.chunk_rows(c, hdr.n_tokens);
-            let raw = chunk_payload(bytes, hdr.compressed, stored_rows * stride)?;
-            if raw.len() != stored_rows * stride {
+            Self::check_identity(&hdr, expect_model_hash, expect_dims)?;
+            if hdr.n_tokens < m {
                 return Err(StateError::Malformed(format!(
-                    "chunk {c}: {} payload bytes, expected {}",
-                    raw.len(),
-                    stored_rows * stride
+                    "entry holds {} rows, need {m}",
+                    hdr.n_tokens
                 )));
             }
-            let need = stored_rows.min(m - c * ct);
-            st.scatter_rows_at(&raw[..need * stride], c * ct, need);
+            if m > expect_dims.1 {
+                return Err(StateError::TooLong { n: m, cap: expect_dims.1 });
+            }
+            return Self::restore_prefix_v2(head, rows, m, &hdr, expect_dims);
         }
-        Ok(st)
+        let mut asm = StateAssembler::new(head, m, expect_model_hash, expect_dims)?;
+        if rows.len() != asm.prefix_span() {
+            return Err(StateError::Malformed(format!(
+                "chunk payload {} bytes, expected {}",
+                rows.len(),
+                asm.prefix_span()
+            )));
+        }
+        let mut off = 0usize;
+        for c in 0..asm.expected_chunks() {
+            let clen = asm.chunk_len(c);
+            asm.feed_chunk(&rows[off..off + clen])?;
+            off += clen;
+        }
+        asm.finish()
     }
 
     /// Legacy v2 partial restore (uncompressed per-token rows).
@@ -1178,6 +1335,136 @@ mod tests {
             assert_eq!(back.n_tokens, 20);
             assert_eq!(back.k, st.k);
         }
+    }
+
+    #[test]
+    fn assembler_streams_chunks_to_the_same_state_as_batch_restore() {
+        for comp in [Compression::None, Compression::Deflate] {
+            let st = filled(3, 16, 1, 8, 10, 19);
+            let ct = 4;
+            let blob = st.serialize_prefix_opts(10, "h", comp, ct);
+            let lo = BlobLayout::new("h", 3, 1, 8).with_chunk_tokens(ct);
+            let head = &blob[..lo.payload_off(10)];
+            let pay = lo.payload_off(10);
+            for m in [1usize, 4, 7, 10] {
+                let mut asm = StateAssembler::new(head, m, "h", (3, 16, 1, 8)).unwrap();
+                assert_eq!(asm.chunk_tokens(), ct);
+                assert_eq!(asm.compressed(), comp == Compression::Deflate);
+                assert_eq!(asm.expected_chunks(), lo.prefix_chunks(m));
+                assert!(!asm.is_complete());
+                let mut off = pay;
+                for c in 0..asm.expected_chunks() {
+                    let clen = asm.chunk_len(c);
+                    asm.feed_chunk(&blob[off..off + clen]).unwrap();
+                    off += clen;
+                }
+                assert!(asm.is_complete());
+                let streamed = asm.finish().unwrap();
+                let span = off - pay;
+                let batch = KvState::restore_prefix_from_parts(
+                    head,
+                    &blob[pay..pay + span],
+                    m,
+                    "h",
+                    (3, 16, 1, 8),
+                )
+                .unwrap();
+                assert_eq!(streamed, batch, "m={m} comp={comp:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn assembler_incomplete_or_overfed_assembly_is_rejected() {
+        let st = filled(2, 16, 1, 8, 10, 23);
+        let ct = 4;
+        let blob = st.serialize_prefix_opts(10, "h", Compression::None, ct);
+        let lo = BlobLayout::new("h", 2, 1, 8).with_chunk_tokens(ct);
+        let head = &blob[..lo.payload_off(10)];
+        let pay = lo.payload_off(10);
+        // finish before the last chunk: error, never a partial state
+        let mut asm = StateAssembler::new(head, 10, "h", (2, 16, 1, 8)).unwrap();
+        let c0 = asm.chunk_len(0);
+        asm.feed_chunk(&blob[pay..pay + c0]).unwrap();
+        assert!(matches!(asm.finish().unwrap_err(), StateError::Malformed(_)));
+        // feeding past the expected count is rejected too
+        let mut asm = StateAssembler::new(head, 4, "h", (2, 16, 1, 8)).unwrap();
+        asm.feed_chunk(&blob[pay..pay + c0]).unwrap();
+        assert!(asm.is_complete());
+        assert!(matches!(
+            asm.feed_chunk(&blob[pay..pay + c0]).unwrap_err(),
+            StateError::Malformed(_)
+        ));
+        // a v2 head is refused (streamed assembly is a v3 capability)
+        let v2 = write_v2_blob(&filled(2, 16, 1, 8, 6, 2), "h");
+        assert!(StateAssembler::new(&v2, 4, "h", (2, 16, 1, 8)).is_err());
+    }
+
+    #[test]
+    fn assembler_property_out_of_order_and_corrupt_chunks_abort() {
+        run_prop_n("assembler-abort", 24, |g| {
+            let l = g.usize_in(1, 3);
+            let s = g.usize_in(8, 24);
+            let kh = g.usize_in(1, 2);
+            let d = [4, 8][g.usize_in(0, 1)];
+            let n = g.usize_in(5, s);
+            let ct = g.usize_in(1, n.div_ceil(2).max(1));
+            let comp = if g.bool() { Compression::Deflate } else { Compression::None };
+            let st = filled(l, s, kh, d, n, g.rng.next_u64());
+            let blob = st.serialize_prefix_opts(n, "ph", comp, ct);
+            let lo = BlobLayout::new("ph", l, kh, d).with_chunk_tokens(ct);
+            let head = &blob[..lo.payload_off(n)];
+            let pay = lo.payload_off(n);
+            let dims = (l, s, kh, d);
+
+            let mut asm = StateAssembler::new(head, n, "ph", dims).unwrap();
+            let k = asm.expected_chunks();
+            let offs: Vec<usize> = (0..k)
+                .scan(pay, |o, c| {
+                    let cur = *o;
+                    *o += asm.chunk_len(c);
+                    Some(cur)
+                })
+                .collect();
+            if k >= 2 {
+                // arbitrary arrival order is rejected: chunk 1's bytes fed
+                // as chunk 0 fail the index length/crc check (the two chunks
+                // hold different random rows)
+                let c1 = &blob[offs[1]..offs[1] + asm.chunk_len(1)];
+                let err = asm.feed_chunk(c1);
+                assert!(
+                    err.is_err(),
+                    "swapped chunk arrival must be rejected (ct={ct} n={n})"
+                );
+            }
+            // mid-stream corruption: flip a byte in a random chunk; feeding
+            // reaches it, fails chunk-granularly, and the assembly aborts
+            let bad_c = g.usize_in(0, k - 1);
+            let mut bad = blob.clone();
+            let flip = offs[bad_c] + g.usize_in(0, asm.chunk_len(bad_c) - 1);
+            bad[flip] ^= 0x20;
+            let mut asm = StateAssembler::new(head, n, "ph", dims).unwrap();
+            let mut failed_at = None;
+            for c in 0..k {
+                let clen = asm.chunk_len(c);
+                match asm.feed_chunk(&bad[offs[c]..offs[c] + clen]) {
+                    Ok(()) => {}
+                    Err(e) => {
+                        assert_eq!(
+                            e,
+                            StateError::ChunkChecksum { chunk: c },
+                            "corruption must be pinned to its chunk"
+                        );
+                        failed_at = Some(c);
+                        break;
+                    }
+                }
+            }
+            assert_eq!(failed_at, Some(bad_c), "exactly the corrupt chunk fails");
+            // ...and the fallback path (the pristine whole blob) still works
+            let full = KvState::restore(&blob, "ph", dims).unwrap();
+            assert_eq!(full.n_tokens, n);
+        });
     }
 
     #[test]

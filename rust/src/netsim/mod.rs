@@ -119,6 +119,13 @@ pub struct Shaper {
     /// counter still reflects the KV rows actually transferred, so a
     /// "fewer wire bytes" claim can never hide "fewer rows moved".
     pub inflated_bytes: u64,
+    /// Latency the streaming assembly path hid by decoding chunk `i` while
+    /// chunk `i+1` was still on the modelled wire: store-and-forward time
+    /// (wire + all decode, serial) minus the streamed elapsed time, summed
+    /// over every [`Shaper::shaped_stream`] session.  Credited only from
+    /// work that measurably happened between arrivals, so the ledger cannot
+    /// claim overlap a serial pipeline would not actually have paid for.
+    pub overlap_saved: Duration,
 }
 
 impl Shaper {
@@ -129,6 +136,7 @@ impl Shaper {
             injected: Duration::ZERO,
             moved_bytes: 0,
             inflated_bytes: 0,
+            overlap_saved: Duration::ZERO,
         }
     }
 
@@ -169,6 +177,113 @@ impl Shaper {
             self.injected += pad;
         }
         out
+    }
+
+    /// Begin a shaped **streaming** download: one pipelined request batch is
+    /// already on the wire and its replies arrive back-to-back.  Each
+    /// [`StreamSession::arrived`] call models the next reply's payload
+    /// landing `rtt + cum_bytes/goodput` after the session started and
+    /// blocks only for the remainder, so whatever the caller does between
+    /// arrivals (chunk crc + inflate + scatter) runs *during* the modelled
+    /// flight time of later bytes.  [`StreamSession::finish`] credits the
+    /// resulting overlap into [`Shaper::overlap_saved`].
+    ///
+    /// Per-session jitter is drawn once so arrival targets stay monotone in
+    /// cumulative bytes (per-call jitter could model bytes arriving out of
+    /// order, which TCP does not do).
+    pub fn shaped_stream(&mut self) -> StreamSession<'_> {
+        let jitter = if self.link.jitter_frac > 0.0 {
+            1.0 + (self.rng.f64() - 0.5) * self.link.jitter_frac
+        } else {
+            1.0
+        };
+        let now = Instant::now();
+        StreamSession {
+            shaper: self,
+            t0: now,
+            last_return: now,
+            jitter,
+            cum_bytes: 0,
+            first: true,
+            saved: Duration::ZERO,
+        }
+    }
+}
+
+/// One shaped streaming transfer — see [`Shaper::shaped_stream`].
+#[derive(Debug)]
+pub struct StreamSession<'a> {
+    shaper: &'a mut Shaper,
+    /// Session start (the pipelined request batch hitting the wire).
+    t0: Instant,
+    /// When the previous `arrived` returned control to the caller; the gap
+    /// until the next call is caller CPU work (decode) that a
+    /// store-and-forward pipeline would have paid *after* the last byte.
+    last_return: Instant,
+    jitter: f64,
+    cum_bytes: usize,
+    /// The work before the first arrival is request building + the raw
+    /// socket read, not decode — it earns no overlap credit.
+    first: bool,
+    saved: Duration,
+}
+
+impl StreamSession<'_> {
+    /// Modelled arrival time of the cumulative byte count, relative to `t0`:
+    /// one RTT for the batch plus the serialization delay of every byte so
+    /// far.
+    fn target_for(&self, cum: usize) -> Duration {
+        let l = &self.shaper.link;
+        if l.goodput_bps.is_infinite() && l.rtt.is_zero() {
+            return Duration::ZERO;
+        }
+        let secs = (l.rtt.as_secs_f64() + cum as f64 / l.goodput_bps) * self.jitter;
+        Duration::from_secs_f64(secs.max(0.0))
+    }
+
+    /// Payload bytes accounted so far in this session.
+    pub fn bytes(&self) -> usize {
+        self.cum_bytes
+    }
+
+    /// The next `bytes` wire bytes have really been read; block until their
+    /// modelled arrival time.
+    ///
+    /// Overlap is credited incrementally from modelled targets, not from
+    /// total elapsed time: decode work the caller did in
+    /// `[last_return, min(now, target)]` ran while this reply's bytes were
+    /// still in modelled flight — exactly the latency a store-and-forward
+    /// pipeline would have added after its last byte.  (Computing the credit
+    /// per-interval keeps it immune to `thread::sleep` overshoot, which
+    /// inflates elapsed time but not the modelled targets.)
+    pub fn arrived(&mut self, bytes: usize) {
+        let work_start = self.last_return.duration_since(self.t0);
+        let now = self.t0.elapsed();
+        self.cum_bytes += bytes;
+        self.shaper.moved_bytes += bytes as u64;
+        let target = self.target_for(self.cum_bytes);
+        if !self.first {
+            let hidden_until = now.min(target);
+            if hidden_until > work_start {
+                self.saved += hidden_until - work_start;
+            }
+        }
+        self.first = false;
+        if now < target {
+            let pad = target - now;
+            std::thread::sleep(pad);
+            self.shaper.injected += pad;
+        }
+        self.last_return = Instant::now();
+    }
+
+    /// End the session and bank the credit into
+    /// [`Shaper::overlap_saved`].  Work after the final arrival (the last
+    /// chunk's decode) earns nothing — the wire is already idle.
+    pub fn finish(self) -> Duration {
+        let saved = self.saved;
+        self.shaper.overlap_saved += saved;
+        saved
     }
 }
 
@@ -269,6 +384,82 @@ mod tests {
         s.shaped(1 << 20, || std::thread::sleep(Duration::from_millis(5)));
         assert!(t0.elapsed() < Duration::from_millis(50));
         assert_eq!(s.injected, Duration::ZERO);
+    }
+
+    fn test_link() -> LinkModel {
+        LinkModel {
+            name: "test",
+            goodput_bps: 1e6, // 1 MB/s
+            rtt: Duration::from_millis(10),
+            jitter_frac: 0.0,
+        }
+    }
+
+    #[test]
+    fn stream_session_enforces_cumulative_arrival_times() {
+        let mut s = Shaper::new(test_link(), 1);
+        let t0 = Instant::now();
+        let mut sess = s.shaped_stream();
+        sess.arrived(50_000); // model: 10ms rtt + 50ms
+        let mid = t0.elapsed();
+        assert!(mid >= Duration::from_millis(55), "{mid:?}");
+        sess.arrived(50_000); // cumulative 100KB -> 10ms + 100ms
+        let done = t0.elapsed();
+        assert!(done >= Duration::from_millis(105), "{done:?}");
+        // no decode work between arrivals: nothing to credit
+        let saved = sess.finish();
+        assert!(saved < Duration::from_millis(5), "{saved:?}");
+        assert_eq!(s.moved_bytes, 100_000);
+    }
+
+    #[test]
+    fn stream_session_credits_overlapped_decode() {
+        let mut s = Shaper::new(test_link(), 1);
+        let t0 = Instant::now();
+        let mut sess = s.shaped_stream();
+        sess.arrived(50_000); // arrives at ~60ms
+        // 20ms of "decode" fits inside the next chunk's 50ms flight time
+        std::thread::sleep(Duration::from_millis(20));
+        sess.arrived(50_000); // arrives at ~110ms regardless
+        let elapsed = t0.elapsed();
+        assert!(elapsed >= Duration::from_millis(105), "{elapsed:?}");
+        assert!(elapsed < Duration::from_millis(160), "decode must be hidden");
+        let saved = sess.finish();
+        // serial = 110ms wire + 20ms decode; streamed ~110ms -> ~20ms saved
+        assert!(saved >= Duration::from_millis(12), "{saved:?}");
+        assert!(saved <= Duration::from_millis(30), "{saved:?}");
+        assert_eq!(s.overlap_saved, saved);
+    }
+
+    #[test]
+    fn stream_session_never_credits_when_decode_dominates() {
+        let mut s = Shaper::new(test_link(), 1);
+        let mut sess = s.shaped_stream();
+        sess.arrived(1_000); // ~11ms
+        std::thread::sleep(Duration::from_millis(40)); // decode >> wire
+        sess.arrived(1_000); // target ~12ms already passed: no sleep
+        let saved = sess.finish();
+        // serial = 12ms + 40ms; elapsed ~51ms -> credit stays ~0, never the
+        // full decode time
+        assert!(saved < Duration::from_millis(15), "{saved:?}");
+    }
+
+    #[test]
+    fn stream_session_on_loopback_is_free_and_creditless() {
+        let mut s = Shaper::new(LinkModel::loopback(), 1);
+        let t0 = Instant::now();
+        let mut sess = s.shaped_stream();
+        for _ in 0..10 {
+            sess.arrived(1 << 20);
+        }
+        let saved = sess.finish();
+        assert!(t0.elapsed() < Duration::from_millis(50));
+        assert_eq!(saved, Duration::ZERO);
+        assert_eq!(s.moved_bytes, 10 << 20);
+        // an empty session credits nothing either
+        let saved = s.shaped_stream().finish();
+        assert_eq!(saved, Duration::ZERO);
+        assert_eq!(s.overlap_saved, Duration::ZERO);
     }
 
     #[test]

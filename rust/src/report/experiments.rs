@@ -217,6 +217,7 @@ pub fn real_table23(
         max_new_tokens: Some(cfg.setting.max_new.min(8)),
         compression: Compression::None,
         chunk_tokens: crate::model::state::DEFAULT_CHUNK_TOKENS,
+        adaptive_chunk: false,
         partial_matching: true,
         use_catalog: true,
         fetch_policy: crate::coordinator::FetchPolicy::Always,

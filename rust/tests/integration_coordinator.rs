@@ -63,6 +63,91 @@ fn multi_client_trace_distribution() {
 }
 
 #[test]
+fn deflated_partial_hit_streams_and_credits_overlap() {
+    // Acceptance pin for the streaming assembly pipeline: a deflated
+    // partial hit must ride the per-chunk range path, and the decode of
+    // early chunks must demonstrably overlap the modelled wire time of
+    // later chunks — overlap_saved > 0 on the hit query's breakdown.
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    let mut k = cfg("overlap", Some(cb.addr()));
+    k.compression = Compression::Deflate;
+    k.chunk_tokens = 2; // many chunks -> many arrivals to overlap
+    k.link = edgecache::netsim::LinkModel {
+        name: "test-lan",
+        // slow enough that each chunk has real modelled flight time to hide
+        // decode inside, fast enough to keep the test well under a second
+        goodput_bps: 2e6,
+        rtt: Duration::from_millis(2),
+        jitter_frac: 0.0,
+    };
+    let mut c = EdgeClient::new(Arc::clone(&eng), k).unwrap();
+    let gen = Generator::new(21);
+    let p0 = gen.prompt("anatomy", 0, 2);
+    let p1 = gen.prompt("anatomy", 1, 2);
+
+    let r0 = c.query(&p0).unwrap();
+    assert_eq!(r0.case, HitCase::Miss);
+    assert_eq!(r0.breakdown.overlap_saved, Duration::ZERO, "miss streams nothing");
+
+    let r1 = c.query(&p1).unwrap();
+    assert_eq!(r1.case, HitCase::AllExamples);
+    assert_eq!(c.stats.range_fetches, 1, "deflated alias hit must range-fetch");
+    assert_eq!(c.stats.full_fetch_fallbacks, 0);
+    assert!(
+        r1.breakdown.overlap_saved > Duration::ZERO,
+        "chunk decode must overlap wire time (saved {:?})",
+        r1.breakdown.overlap_saved
+    );
+    // the credit can never exceed the Redis phase it was hidden inside
+    assert!(
+        r1.breakdown.overlap_saved <= r1.breakdown.get(edgecache::metrics::Phase::Redis),
+        "overlap credit {:?} must be bounded by Redis time {:?}",
+        r1.breakdown.overlap_saved,
+        r1.breakdown.get(edgecache::metrics::Phase::Redis)
+    );
+    assert_eq!(c.link_overlap_saved(), r1.breakdown.overlap_saved);
+    c.shutdown();
+    cb.shutdown();
+}
+
+#[test]
+fn adaptive_chunk_size_roundtrips_through_the_range_path() {
+    // Adaptive sizing records the chosen chunk size per entry (header +
+    // alias), so a partial hit still chunk-aligns its GETRANGEs and the
+    // range path completes without fallback.
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    let mut k = cfg("adaptive", Some(cb.addr()));
+    k.compression = Compression::Deflate;
+    k.adaptive_chunk = true;
+    k.link = edgecache::netsim::LinkModel {
+        name: "test-lan",
+        goodput_bps: 25e6,
+        rtt: Duration::from_millis(2),
+        jitter_frac: 0.0,
+    };
+    let mut c = EdgeClient::new(Arc::clone(&eng), k).unwrap();
+    let gen = Generator::new(23);
+    let p0 = gen.prompt("virology", 0, 2);
+    let p1 = gen.prompt("virology", 1, 2);
+
+    let r0 = c.query(&p0).unwrap();
+    assert_eq!(r0.case, HitCase::Miss);
+    let r1 = c.query(&p1).unwrap();
+    assert_eq!(r1.case, HitCase::AllExamples);
+    assert_eq!(c.stats.range_fetches, 1, "adaptive entries must range-fetch");
+    assert_eq!(c.stats.full_fetch_fallbacks, 0, "no stale-geometry fallback");
+    assert!(r1.saved_bytes > 0);
+    // identical repeat fully hits and reproduces through the adaptive entry
+    let r2 = c.query(&p0).unwrap();
+    assert_eq!(r2.case, HitCase::Full);
+    assert_eq!(r0.response_tokens, r2.response_tokens);
+    c.shutdown();
+    cb.shutdown();
+}
+
+#[test]
 fn cross_client_correctness_identical_outputs() {
     // The headline correctness property: the same prompt produces the same
     // tokens whether answered locally, via own-cache hit, or via a state

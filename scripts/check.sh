@@ -30,6 +30,13 @@ cargo test -q
 echo "== cargo test -q --test integration_failures =="
 cargo test -q --test integration_failures
 
+# Streaming-assembly smoke (`just bench-smoke`): a tiny-parameter run of the
+# overlap bench whose built-in assertions pin the hot-path claim — streaming
+# beats store-and-forward and restore completes ~1 chunk-decode after the
+# last byte.
+echo "== streaming assembly smoke (EDGECACHE_SMOKE=1) =="
+EDGECACHE_SMOKE=1 cargo bench --bench streaming_assembly
+
 if [ "${1:-}" != "--no-clippy" ]; then
     echo "== cargo clippy -- -D warnings =="
     cargo clippy -- -D warnings
