@@ -27,6 +27,18 @@ bench:
 bench-streaming:
     cd rust && cargo bench --bench streaming_assembly
 
+# peer-fabric bench, full sweep (emits BENCH_peer_fabric.json): 2-peer
+# multi-source fetch vs 1-peer, and hit-rate retention through a mid-trace
+# peer death
+bench-peers-full:
+    cd rust && cargo bench --bench peer_fabric
+
+# the same bench with tiny parameters — the check.sh smoke gate: asserts
+# 2-peer striping strictly beats 1-peer and that a trace survives a peer
+# death via survivor re-planning
+bench-peers:
+    cd rust && EDGECACHE_SMOKE=1 cargo bench --bench peer_fabric
+
 # the same bench with tiny parameters — the check.sh smoke gate: it asserts
 # streaming strictly beats store-and-forward and that restore completes
 # within ~1 chunk-decode of last-byte arrival

@@ -1,23 +1,28 @@
-//! End-to-end driver (DESIGN.md §7): a real cache box TCP server + two edge
-//! clients cooperating over an MMLU-like multi-domain trace — the full
-//! Figure-1 topology with the real model over PJRT, real state bytes over
-//! real sockets, link shaping and (optionally) device pacing.
+//! End-to-end driver (DESIGN.md §7): a real peer fabric of
+//! `EDGECACHE_PEERS` cache-box TCP servers + two edge clients cooperating
+//! over an MMLU-like multi-domain trace — the Figure-1 topology
+//! generalised to N middle nodes, with the real model over PJRT, real
+//! state bytes over real sockets, link shaping and (optionally) device
+//! pacing.
 //!
 //! ```bash
 //! cargo run --release --example edge_cluster                  # native speed
 //! EDGECACHE_PACED=1 cargo run --release --example edge_cluster  # paper pacing
 //! EDGECACHE_PRESET=edge-270m cargo run --release --example edge_cluster
+//! EDGECACHE_PEERS=3 EDGECACHE_REPLICAS=1 cargo run --release --example edge_cluster
 //! ```
 //!
-//! Reports per-case TTFT/TTLT distributions and the cooperative-reuse
-//! effect (client 2 benefiting from client 1's uploads).  The run recorded
-//! in EXPERIMENTS.md §E2E used the defaults below.
+//! Reports per-case TTFT/TTLT distributions, the cooperative-reuse effect
+//! (client 2 benefiting from client 1's uploads) and — with several peers
+//! — the placement spread across boxes plus each client's per-peer
+//! ledger.  The run recorded in EXPERIMENTS.md §E2E used the defaults
+//! below.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
-use edgecache::coordinator::{CacheBox, EdgeClient, EdgeClientConfig};
+use edgecache::coordinator::{CacheBox, EdgeClient, EdgeClientConfig, PeerConfig};
 use edgecache::devicemodel::DeviceProfile;
 use edgecache::engine::Engine;
 use edgecache::metrics::CaseAggregate;
@@ -37,16 +42,32 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(4);
+    let n_peers: usize = std::env::var("EDGECACHE_PEERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+        .max(1);
+    let replicas: usize = std::env::var("EDGECACHE_REPLICAS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
 
     println!("== edgecache end-to-end cluster ==");
-    println!("preset={preset} paced={paced} domains={n_domains} per_domain={per_domain}");
+    println!(
+        "preset={preset} paced={paced} domains={n_domains} per_domain={per_domain} \
+         peers={n_peers} replicas={replicas}"
+    );
 
-    // cache box on a real TCP socket
-    let cache_box = CacheBox::start_local()?;
-    println!("cache box: {}", cache_box.addr());
+    // the peer fabric: N cache boxes on real TCP sockets
+    let cache_boxes: Vec<CacheBox> = (0..n_peers)
+        .map(|_| CacheBox::start_local())
+        .collect::<anyhow::Result<_>>()?;
+    for (i, cb) in cache_boxes.iter().enumerate() {
+        println!("cache box {i}: {}", cb.addr());
+    }
 
     // one engine (model artifacts) shared by both client processes' logic;
-    // each client gets its own connection, catalog, shaper and pacer
+    // each client gets its own connections, catalogs, shapers and pacer
     let t0 = std::time::Instant::now();
     let engine = Arc::new(Engine::load_preset(&preset)?);
     println!(
@@ -55,9 +76,14 @@ fn main() -> anyhow::Result<()> {
         engine.model.param_bytes as f64 / 1e6
     );
 
+    let peers: Vec<PeerConfig> = cache_boxes
+        .iter()
+        .map(|cb| PeerConfig::new(cb.addr()))
+        .collect();
     let mk_cfg = |name: &str, seed: u64| EdgeClientConfig {
         name: name.to_string(),
-        server_addr: Some(cache_box.addr()),
+        peers: peers.clone(),
+        replicas,
         link: if paced { LinkModel::wifi4_2g4() } else { LinkModel::loopback() },
         device: if paced { DeviceProfile::pi_zero_2w() } else { DeviceProfile::host() },
         max_new_tokens: Some(if paced { 4 } else { 8 }),
@@ -139,16 +165,38 @@ fn main() -> anyhow::Result<()> {
     println!("\nwall time {:.1} s, {} queries, {:.2} q/s", wall.as_secs_f64(), total_queries, throughput);
     for c in &clients {
         println!(
-            "  {}: hits by case {:?}, FPs {}, down {:.2} MB, up {:.2} MB",
+            "  {}: hits by case {:?}, FPs {}, down {:.2} MB, up {:.2} MB, \
+             multi-source {}, re-plans {}",
             c.cfg.name,
             c.stats.hits_by_case,
             c.stats.false_positives,
             c.stats.bytes_down as f64 / 1e6,
             c.stats.bytes_up as f64 / 1e6,
+            c.stats.multi_source_fetches,
+            c.stats.re_plans,
+        );
+        for l in c.peer_ledgers() {
+            println!(
+                "    peer {}: down {:.2} MB, up {:.2} MB, shares {} ({} failed), \
+                 uploads {} (+{} replicas), {} sync rounds",
+                l.addr,
+                l.bytes_down as f64 / 1e6,
+                l.bytes_up as f64 / 1e6,
+                l.fetch_shares,
+                l.share_failures,
+                l.uploads,
+                l.replica_uploads,
+                l.sync_rounds,
+            );
+        }
+    }
+    for (i, cb) in cache_boxes.iter().enumerate() {
+        let (keys, bytes, evictions) = cb.stats();
+        println!(
+            "  cache box {i}: {keys} states, {:.2} MB, {evictions} evictions",
+            bytes as f64 / 1e6
         );
     }
-    let (keys, bytes, evictions) = cache_box.stats();
-    println!("  cache box: {keys} states, {:.2} MB, {evictions} evictions", bytes as f64 / 1e6);
 
     // cooperative reuse must actually have happened
     let cross_hits: u64 = clients
@@ -156,11 +204,24 @@ fn main() -> anyhow::Result<()> {
         .map(|c| c.stats.hits_by_case[1..].iter().sum::<u64>())
         .sum();
     assert!(cross_hits > 0, "expected at least one cache hit in the trace");
+    // with several peers, placement must actually spread entries around
+    if n_peers > 1 {
+        let populated = cache_boxes
+            .iter()
+            .filter(|cb| cb.stats().0 > 0)
+            .count();
+        assert!(
+            populated > 1,
+            "placement policy must use more than one box ({populated}/{n_peers})"
+        );
+    }
 
     for c in clients {
         c.shutdown();
     }
-    cache_box.shutdown();
+    for cb in cache_boxes {
+        cb.shutdown();
+    }
     println!("\nOK");
     Ok(())
 }

@@ -1,0 +1,256 @@
+//! Peer-fabric acceptance bench — the PR's two headline claims, measured
+//! over real cache-box TCP servers with modelled links in between:
+//!
+//! * **(a) multi-source beats single-source**: the same partial hit fetched
+//!   from one box vs striped across two boxes.  Each peer's modelled wire
+//!   time elapses in its own thread, so the two-peer fetch approaches half
+//!   the shaped TTFT (transfer dominates at these sizes) — asserted
+//!   strictly, per iteration-minimum.
+//! * **(b) hit-rate retention through a mid-trace peer death**: a trace of
+//!   partial-hit fetches against two replicated boxes; one box is killed
+//!   halfway.  Every remaining fetch must still complete bit-exact via the
+//!   survivor (head rotation + orphan re-planning), keeping the hit rate
+//!   at 1.0 — also asserted.
+//!
+//! Emits `BENCH_peer_fabric.json`.
+//!
+//! Env: EDGECACHE_SMOKE=1 (reduced sizes for the check.sh gate),
+//!      EDGECACHE_PEER_FABRIC_JSON (output path, default
+//!      BENCH_peer_fabric.json).
+
+use std::time::{Duration, Instant};
+
+use edgecache::coordinator::fabric::{fetch_prefix_multi, Peer, PeerConfig};
+use edgecache::coordinator::{CacheBox, PeerPlanner};
+use edgecache::kvstore::KvClient;
+use edgecache::model::state::{Compression, KvState};
+use edgecache::netsim::LinkModel;
+use edgecache::util::json::Json;
+use edgecache::util::rng::Rng;
+
+const HASH: &str = "bench-fabric";
+const DIMS: (usize, usize, usize, usize) = (8, 256, 2, 64); // 16 KB/token
+
+fn filled_state(total_rows: usize, seed: u64) -> KvState {
+    let (l, s, kh, d) = DIMS;
+    let mut st = KvState::zeroed(l, s, kh, d);
+    st.n_tokens = total_rows;
+    let mut rng = Rng::new(seed);
+    for x in st.k.iter_mut().take(total_rows * 2 * kh * d * l) {
+        *x = rng.f64() as f32;
+    }
+    for x in st.v.iter_mut().take(total_rows * 2 * kh * d * l) {
+        *x = rng.f64() as f32 - 0.5;
+    }
+    st
+}
+
+fn bench_link() -> LinkModel {
+    LinkModel {
+        name: "lan-64m",
+        goodput_bps: 8e6, // 8 MB/s: transfer dominates, stripes pay off
+        rtt: Duration::from_millis(2),
+        jitter_frac: 0.0,
+    }
+}
+
+fn peer_for(addr: &str, seed: u64) -> Peer {
+    Peer::connect(PeerConfig::new(addr), bench_link(), seed, 1)
+        .expect("peer connect")
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+fn main() {
+    edgecache::util::logger::init_from_env();
+    let smoke = std::env::var("EDGECACHE_SMOKE").as_deref() == Ok("1");
+    let planner = PeerPlanner::default();
+    let ct = 4usize;
+
+    println!("=================================================================");
+    println!(" peer fabric — multi-source fetch + mid-trace peer death{}",
+        if smoke { "  [smoke]" } else { "" });
+    println!("=================================================================");
+
+    // ---- (a) 1-peer vs 2-peer shaped fetch latency ----------------------
+    let (total, m) = if smoke { (32usize, 24usize) } else { (64usize, 48usize) };
+    let iters = if smoke { 2 } else { 3 };
+    let st = filled_state(total, 7);
+    // uncompressed: deterministic byte volume, so the comparison is pure
+    // link scheduling (striping), not codec luck
+    let blob = st.serialize_prefix_opts(total, HASH, Compression::None, ct);
+    let truth = KvState::restore(
+        &st.serialize_prefix_opts(m, HASH, Compression::None, ct),
+        HASH,
+        DIMS,
+    )
+    .expect("truth restore");
+
+    let cb_a = CacheBox::start_local().expect("box a");
+    let cb_b = CacheBox::start_local().expect("box b");
+    for cb in [&cb_a, &cb_b] {
+        let mut c = KvClient::connect(&cb.addr()).expect("seed conn");
+        c.set(b"state:a", &blob).expect("seed");
+    }
+
+    let mut pa = peer_for(&cb_a.addr(), 1);
+    let mut pb = peer_for(&cb_b.addr(), 2);
+    let mut single_min = Duration::MAX;
+    let mut dual_min = Duration::MAX;
+    let mut wire = 0usize;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let f = {
+            let mut claimers = vec![(0usize, &mut pa)];
+            fetch_prefix_multi(
+                &mut claimers, &planner, b"state:a", total, false, ct, m, HASH, DIMS,
+            )
+            .expect("single fetch")
+        };
+        single_min = single_min.min(t0.elapsed());
+        assert_eq!(f.state.k, truth.k, "single-source restore must be exact");
+
+        let t0 = Instant::now();
+        let f = {
+            let mut claimers = vec![(0usize, &mut pa), (1usize, &mut pb)];
+            fetch_prefix_multi(
+                &mut claimers, &planner, b"state:a", total, false, ct, m, HASH, DIMS,
+            )
+            .expect("dual fetch")
+        };
+        dual_min = dual_min.min(t0.elapsed());
+        wire = f.wire;
+        assert!(f.multi_source, "two claimers must stripe");
+        assert_eq!(f.re_plans, 0);
+        assert_eq!(f.state.k, truth.k, "multi-source restore must be exact");
+        assert_eq!(f.state.v, truth.v);
+    }
+    let speedup = single_min.as_secs_f64() / dual_min.as_secs_f64();
+    println!(
+        "(a) {}-row prefix of {} rows, {:.1} KB wire on {}: 1-peer {:>7.2} ms,  2-peer {:>7.2} ms  ({speedup:.2}x)",
+        m,
+        total,
+        wire as f64 / 1e3,
+        bench_link().name,
+        ms(single_min),
+        ms(dual_min),
+    );
+    assert!(
+        dual_min < single_min,
+        "2-peer multi-source fetch ({dual_min:?}) must strictly beat 1-peer ({single_min:?})"
+    );
+
+    // ---- (b) mid-trace peer death: hit-rate retention -------------------
+    let n_entries = if smoke { 2usize } else { 4usize };
+    let n_fetches = if smoke { 6usize } else { 12usize };
+    let (btotal, bm) = if smoke { (24usize, 16usize) } else { (32usize, 24usize) };
+    let cb_c = CacheBox::start_local().expect("box c");
+    let cb_d = CacheBox::start_local().expect("box d");
+    let mut truths = Vec::new();
+    for e in 0..n_entries {
+        let st = filled_state(btotal, 100 + e as u64);
+        // deflate here: the trace also exercises compressed striping
+        let blob = st.serialize_prefix_opts(btotal, HASH, Compression::Deflate, ct);
+        for cb in [&cb_c, &cb_d] {
+            let mut c = KvClient::connect(&cb.addr()).expect("seed conn");
+            c.set(format!("state:t{e}").as_bytes(), &blob).expect("seed");
+        }
+        truths.push(
+            KvState::restore(
+                &st.serialize_prefix_opts(bm, HASH, Compression::Deflate, ct),
+                HASH,
+                DIMS,
+            )
+            .expect("truth restore"),
+        );
+    }
+    let mut pc = peer_for(&cb_c.addr(), 3);
+    let mut pd = peer_for(&cb_d.addr(), 4);
+    let kill_at = n_fetches / 2;
+    let mut cb_d = Some(cb_d);
+    let (mut hits_before, mut hits_after) = (0usize, 0usize);
+    let (mut replans, mut failures) = (0u64, 0u64);
+    for i in 0..n_fetches {
+        if i == kill_at {
+            // peer D dies mid-trace; the catalogs still claim it
+            cb_d.take().expect("box d alive").shutdown();
+            println!("(b) fetch {i}: peer D killed");
+        }
+        let e = i % n_entries;
+        let key = format!("state:t{e}");
+        let f = {
+            // alternate the claimer order so the dead peer also shows up
+            // as the would-be head and exercises rotation
+            let mut claimers: Vec<(usize, &mut Peer)> = if i % 2 == 0 {
+                vec![(0, &mut pc), (1, &mut pd)]
+            } else {
+                vec![(1, &mut pd), (0, &mut pc)]
+            };
+            fetch_prefix_multi(
+                &mut claimers, &planner, key.as_bytes(), btotal, true, ct, bm, HASH, DIMS,
+            )
+        };
+        let f = f.unwrap_or_else(|| {
+            panic!("fetch {i} must complete via the surviving peer")
+        });
+        assert_eq!(f.state.k, truths[e].k, "fetch {i}: corrupt restore");
+        replans += f.re_plans;
+        failures += f.share_failures;
+        if i < kill_at {
+            hits_before += 1;
+        } else {
+            hits_after += 1;
+        }
+    }
+    let rate_before = hits_before as f64 / kill_at as f64;
+    let rate_after = hits_after as f64 / (n_fetches - kill_at) as f64;
+    println!(
+        "(b) {n_fetches} fetches over {n_entries} replicated entries: hit rate {rate_before:.2} before death, {rate_after:.2} after ({replans} re-plans, {failures} share failures)"
+    );
+    assert_eq!(rate_after, 1.0, "survivor re-planning must retain every hit");
+    assert!(
+        replans >= 1 || failures >= 1,
+        "the dead peer must have been planned around at least once"
+    );
+
+    let json = Json::obj(vec![
+        ("smoke", Json::Bool(smoke)),
+        ("dims", Json::Str(format!("{DIMS:?}"))),
+        (
+            "multi_source",
+            Json::obj(vec![
+                ("link", Json::Str(bench_link().name.to_string())),
+                ("entry_rows", Json::Int(total as i64)),
+                ("matched_rows", Json::Int(m as i64)),
+                ("wire_bytes", Json::Int(wire as i64)),
+                ("single_peer_ms", Json::Num(ms(single_min))),
+                ("two_peer_ms", Json::Num(ms(dual_min))),
+                ("speedup_x", Json::Num(speedup)),
+            ]),
+        ),
+        (
+            "peer_death",
+            Json::obj(vec![
+                ("entries", Json::Int(n_entries as i64)),
+                ("fetches", Json::Int(n_fetches as i64)),
+                ("killed_at", Json::Int(kill_at as i64)),
+                ("hit_rate_before", Json::Num(rate_before)),
+                ("hit_rate_after", Json::Num(rate_after)),
+                ("re_plans", Json::Int(replans as i64)),
+                ("share_failures", Json::Int(failures as i64)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("EDGECACHE_PEER_FABRIC_JSON")
+        .unwrap_or_else(|_| "BENCH_peer_fabric.json".into());
+    match std::fs::write(&path, json.to_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+    cb_a.shutdown();
+    cb_b.shutdown();
+    cb_c.shutdown();
+    println!("peer_fabric done.");
+}

@@ -110,6 +110,33 @@ pub enum Lookup {
     Hit(PromptRange),
 }
 
+/// Peer-tagged lookup across one [`LocalCatalog`] per cache-box peer: the
+/// longest range of sufficient length that *some* peer (probably) holds,
+/// together with the index of every claiming peer — the fan-out set the
+/// peer planner splits a multi-source chunk fetch across.  `catalogs[i]`
+/// is peer `i`'s filter, merged by that peer's own `CatalogSync` loop;
+/// each filter honours its own `min_hit_tokens`.  Returns `None` when no
+/// peer claims any range.
+pub fn lookup_tagged(
+    catalogs: &[&LocalCatalog],
+    ranges: &[PromptRange],
+) -> Option<(PromptRange, Vec<usize>)> {
+    // ranges_for yields ascending lengths; longest hit wins, like
+    // LocalCatalog::lookup
+    for r in ranges.iter().rev() {
+        let claimers: Vec<usize> = catalogs
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| r.token_len >= c.min_hit_tokens && c.filter.contains(&r.key))
+            .map(|(i, _)| i)
+            .collect();
+        if !claimers.is_empty() {
+            return Some((r.clone(), claimers));
+        }
+    }
+    None
+}
+
 /// Client-side catalog state: Bloom filter + sync cursor.
 #[derive(Debug)]
 pub struct LocalCatalog {
@@ -289,6 +316,39 @@ mod tests {
             Lookup::Hit(r) => assert_eq!(r.token_len, 60),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn tagged_lookup_names_every_claiming_peer() {
+        let m = meta();
+        let toks: Vec<u32> = (0..100).collect();
+        let rs = ranges_for(&m, &toks, &[10, 40, 70, 100]);
+        let mut a = LocalCatalog::new(); // peer 0: 10 and 70
+        a.register(&[rs[0].clone(), rs[2].clone()]);
+        let mut b = LocalCatalog::new(); // peer 1: 70 only
+        b.register(&[rs[2].clone()]);
+        let c = LocalCatalog::new(); // peer 2: nothing
+
+        let (hit, peers) = lookup_tagged(&[&a, &b, &c], &rs).unwrap();
+        assert_eq!(hit.token_len, 70, "longest claimed range wins");
+        assert_eq!(peers, vec![0, 1], "both claimers named, empty peer not");
+
+        // a range only one peer claims tags exactly that peer
+        let short = &rs[..1];
+        let (hit, peers) = lookup_tagged(&[&a, &b, &c], short).unwrap();
+        assert_eq!(hit.token_len, 10);
+        assert_eq!(peers, vec![0]);
+
+        // nothing claimed anywhere -> None; empty peer set -> None
+        assert!(lookup_tagged(&[&c], &rs).is_none());
+        assert!(lookup_tagged(&[], &rs).is_none());
+
+        // per-peer min_hit_tokens filters that peer's claims only
+        let mut strict = LocalCatalog::new();
+        strict.register(&rs);
+        strict.min_hit_tokens = 1000;
+        let (hit, peers) = lookup_tagged(&[&strict, &a], &rs).unwrap();
+        assert_eq!((hit.token_len, peers), (70, vec![1]));
     }
 
     #[test]

@@ -2,12 +2,25 @@
 //! prompt caching.  Implements the paper's §3.1 four-step flow:
 //!
 //! 1. **Token** — tokenize the prompt (and its Figure-3 prefix ranges);
-//! 2. **Bloom** — query the local catalog for the longest probable hit;
+//! 2. **Bloom** — query the local catalogs for the longest probable hit;
 //! 3. on hit: **Redis**-download the state and restore it; on miss (or a
 //!    Bloom false positive, detected when the GET comes back empty): decode
 //!    locally, then upload the resulting states *after* the response and
 //!    register them in both catalogs;
 //! 4. **R-decode/Sample** — generate the response.
+//!
+//! The client talks to a **peer fabric** of N cache boxes, not a single
+//! middle node (`coordinator::fabric`): each configured [`PeerConfig`] gets
+//! its own pooled connection, link shaper, Bloom catalog and sync loop, so
+//! a step-2 hit names the peer(s) that claim the range
+//! ([`crate::catalog::lookup_tagged`]).  A partial hit's matched chunks are
+//! then striped across the claiming peers and downloaded concurrently —
+//! aggregate goodput scales with peer count, and a peer dying mid-stream
+//! re-plans its orphaned chunks onto the survivors before ever falling
+//! back to a full blob or local prefill.  Uploads pick a placement peer by
+//! power-of-two-choices on reported `used_bytes` (plus optional replicas),
+//! and a one-peer configuration is simply the degenerate one-stripe plan —
+//! there is no separate single-box code path.
 //!
 //! Transfers are **range-aware** (the SparKV argument: move only bytes whose
 //! transfer cost beats recompute) and **streamed**:
@@ -45,27 +58,29 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::catalog::{
-    ranges_for, state_store_key, LocalCatalog, Lookup, ModelMeta, PromptRange,
+    lookup_tagged, ranges_for, state_store_key, LocalCatalog, ModelMeta, PromptRange,
 };
-use crate::coordinator::policy::FetchPolicy;
+use crate::coordinator::fabric::{
+    fetch_full_entry, fetch_prefix_multi, Peer, PeerConfig,
+};
+use crate::coordinator::policy::{FetchPolicy, PeerPlanner};
 use crate::coordinator::sync::CatalogSync;
 use crate::devicemodel::{DeviceProfile, Pacer};
 use crate::engine::Engine;
-use crate::kvstore::client::{getrange_req, StreamingReplies};
 use crate::kvstore::resp::{request_shared, Value};
-use crate::kvstore::KvClient;
 use crate::log_debug;
-use crate::metrics::{Phase, PhaseBreakdown};
+use crate::metrics::{PeerLedger, Phase, PhaseBreakdown};
 use crate::model::sampler::Sampler;
 use crate::model::state::{
     decode_range_alias, encode_range_alias, read_chunk_index, BlobLayout, ChunkEntry,
-    Compression, KvState, StateAssembler, DEFAULT_CHUNK_TOKENS,
+    Compression, KvState, DEFAULT_CHUNK_TOKENS,
 };
-use crate::netsim::{LinkModel, Shaper, StreamSession};
+use crate::netsim::LinkModel;
 use crate::util::bytes::SharedBytes;
+use crate::util::rng::Rng;
 use crate::workload::Prompt;
 
 /// Which of the paper's five evaluation cases a query landed in.
@@ -139,10 +154,21 @@ pub fn adaptive_chunk_tokens(
 #[derive(Debug, Clone)]
 pub struct EdgeClientConfig {
     pub name: String,
-    /// Cache-box address; `None` runs fully standalone (paper §5.3: local
-    /// inference keeps working when the middle node is down).
-    pub server_addr: Option<String>,
+    /// The cache-box peer fabric: zero peers runs fully standalone (paper
+    /// §5.3: local inference keeps working when the middle nodes are
+    /// down), one peer is the paper's topology, and N peers share the
+    /// prompt-cache load — each peer gets its own pooled connection, link
+    /// shaper, Bloom catalog and sync loop.
+    pub peers: Vec<PeerConfig>,
+    /// Default link model for peers without a per-peer override
+    /// ([`PeerConfig::link`]).
     pub link: LinkModel,
+    /// Extra full copies each upload ships to distinct peers beyond the
+    /// placement primary (clamped to the fleet size).  Replication trades
+    /// upload bytes for read fan-out and failure resilience: a replicated
+    /// range survives its primary dying mid-trace, because the surviving
+    /// claimers re-serve the orphaned chunks.
+    pub replicas: usize,
     pub device: DeviceProfile,
     /// Response-token budget; `None` uses the device profile's typical
     /// length (64 for the low-end 270M setting, 1 for the high-end 1B).
@@ -174,10 +200,12 @@ pub struct EdgeClientConfig {
 
 impl EdgeClientConfig {
     /// The paper's low-end setting: Pi Zero 2W + 270M-class model, Wi-Fi 4.
+    /// `server` configures a one-peer fabric (the paper's topology).
     pub fn low_end(server: Option<String>) -> Self {
         EdgeClientConfig {
             name: "low-end".into(),
-            server_addr: server,
+            peers: server.into_iter().map(PeerConfig::new).collect(),
+            replicas: 0,
             link: LinkModel::wifi4_2g4(),
             device: DeviceProfile::pi_zero_2w(),
             max_new_tokens: None,
@@ -253,13 +281,26 @@ pub struct ClientStats {
     /// Range-path failures (stale alias geometry, short replies, corrupt
     /// chunks) that re-fetched and re-verified the whole entry instead.
     pub full_fetch_fallbacks: u64,
+    /// Range downloads that actually striped chunks across 2+ peers.
+    pub multi_source_fetches: u64,
+    /// Re-plan rounds the fabric ran after mid-fetch share failures
+    /// (orphaned chunks reassigned to surviving peers).
+    pub re_plans: u64,
+    /// Peer-level failures observed (dead connections, failed shares,
+    /// failed head acquisitions) across downloads and uploads.
+    pub peer_failures: u64,
+    /// Replica copies shipped by the upload placement policy.
+    pub replica_uploads: u64,
 }
 
-/// Where a downloaded state physically lives on the cache box — the anchor
+/// Where a downloaded state physically lives on the fabric — the anchor
 /// the post-response upload splices suffix chunks onto.
 #[derive(Debug, Clone)]
 struct DeltaBase {
     store_key: Vec<u8>,
+    /// Which peer certainly holds the base entry (the head peer of the
+    /// download) — splices target it for data locality.
+    peer: usize,
     total_rows: usize,
     compressed: bool,
     /// ECS3 chunk size of the base entry (`None` = legacy v2 entry, which
@@ -272,7 +313,7 @@ struct DeltaBase {
 
 /// Describe a fully fetched entry as a future `SPLICE` base, reading the
 /// authoritative geometry out of its own header/index (not the alias).
-fn delta_base_for_entry(store_key: Vec<u8>, blob: &[u8]) -> DeltaBase {
+fn delta_base_for_entry(store_key: Vec<u8>, peer: usize, blob: &[u8]) -> DeltaBase {
     let hdr = KvState::peek_header(blob).ok();
     let (chunk_tokens, chunk_index) = match read_chunk_index(blob) {
         Some((ct, entries)) => (Some(ct), entries),
@@ -280,6 +321,7 @@ fn delta_base_for_entry(store_key: Vec<u8>, blob: &[u8]) -> DeltaBase {
     };
     DeltaBase {
         store_key,
+        peer,
         total_rows: hdr.as_ref().map_or(0, |h| h.n_tokens),
         compressed: hdr.as_ref().is_some_and(|h| h.compressed),
         chunk_tokens,
@@ -295,254 +337,20 @@ struct Download {
     base: DeltaBase,
 }
 
-/// Result of a successful chunk-aligned range download.
-struct RangeFetch {
-    state: KvState,
-    /// Wire bytes this fetch moved (head + chunk bytes, alias excluded).
-    wire: usize,
-    /// Bytes saved vs what the pre-chunking pipeline would have moved.
-    saved: usize,
-    /// Authoritative compression flag from the entry's own header.
-    compressed: bool,
-    /// The entry's full chunk index (future splice base).
-    entries: Vec<ChunkEntry>,
-}
-
-/// Validate a fetched head and build the streaming assembler from it: the
-/// head must be exactly the promised length, parse + verify
-/// ([`StateAssembler::new`]: identity, index crc) and declare the chunk
-/// size the alias promised — anything else is a stale or short entry and
-/// the caller falls back.  Shared by both `fetch_chunked` branches so a
-/// future validation fix cannot land in one and miss the other.
-fn checked_assembler(
-    head: &[u8],
-    head_len: usize,
-    ct: usize,
-    m: usize,
-    hash: &str,
-    dims: (usize, usize, usize, usize),
-) -> Option<StateAssembler> {
-    if head.len() != head_len {
-        return None; // entry shorter than the alias promised
-    }
-    let asm = match StateAssembler::new(head, m, hash, dims) {
-        Ok(a) => a,
-        Err(e) => {
-            log_debug!("edge-client", "range head rejected: {e}");
-            return None;
-        }
-    };
-    if asm.chunk_tokens() != ct {
-        return None; // stale geometry: re-written with another chunk size
-    }
-    Some(asm)
-}
-
-/// Pull the outstanding chunk replies off a streamed batch, shaping each
-/// arrival and feeding it straight into the assembler — the
-/// wire-overlapped decode loop.  `false` on any missing/short/invalid reply
-/// (the caller drains the stream and falls back).
-fn consume_chunk_stream(
-    replies: &mut StreamingReplies<'_>,
-    sess: &mut StreamSession<'_>,
-    asm: &mut StateAssembler,
-) -> bool {
-    for c in asm.fed_chunks()..asm.expected_chunks() {
-        let bytes = match replies.next_reply() {
-            Ok(Some(Value::Bulk(b))) => b,
-            _ => return false, // evicted mid-stream / error reply / dead conn
-        };
-        sess.arrived(bytes.len());
-        if let Err(e) = asm.feed_chunk(&bytes) {
-            log_debug!("edge-client", "streamed chunk {c} rejected: {e}");
-            return false;
-        }
-    }
-    true
-}
-
-/// The streaming chunk-aware range download for an ECS3 target: fetch the
-/// head (header + chunk index), then **one `GETRANGE` per whole chunk**
-/// covering `m` tokens, all pipelined in a single write — and decode each
-/// chunk as its reply arrives, overlapping chunk `i`'s crc/inflate/scatter
-/// with chunk `i+1`'s modelled wire time ([`StateAssembler`] +
-/// [`Shaper::shaped_stream`]).  Uncompressed bodies have
-/// a-priori-computable chunk spans, so the head rides the same pipelined
-/// round trip; deflated bodies need the index first and pay one extra round
-/// trip — still a fraction of the full-blob bytes.  `None` means the range
-/// path could not complete (stale geometry, short replies, corruption): the
-/// reply stream is drained to keep the connection synced and the caller
-/// falls back to a full-blob download, never to a questionable restore.
-#[allow(clippy::too_many_arguments)]
-fn fetch_chunked(
-    conn: &mut KvClient,
-    shaper: &mut Shaper,
-    target: &[u8],
-    total_rows: usize,
-    compressed: bool,
-    ct: usize,
-    m: usize,
-    hash: &str,
-    dims: (usize, usize, usize, usize),
-) -> Option<RangeFetch> {
-    let (l, _, kh, d) = dims;
-    let lo = BlobLayout::new(hash, l, kh, d).with_chunk_tokens(ct);
-    let head_len = lo.payload_off(total_rows);
-    let stride = lo.token_stride();
-    let k = lo.prefix_chunks(m);
-
-    let (asm, wire) = if !compressed {
-        // raw chunk spans are pure layout arithmetic: head + one GETRANGE
-        // per chunk in one pipelined write, consumed as a stream
-        let mut reqs = Vec::with_capacity(k + 1);
-        reqs.push(getrange_req(target, 0, head_len));
-        let mut off = head_len;
-        for c in 0..k {
-            let span = lo.chunk_rows(c, total_rows) * stride;
-            reqs.push(getrange_req(target, off, span));
-            off += span;
-        }
-        let mut replies = match conn.send_reqs(&reqs) {
-            Ok(r) => r,
-            Err(e) => {
-                log_debug!("edge-client", "range batch failed: {e}");
-                return None;
-            }
-        };
-        let mut sess = shaper.shaped_stream();
-        let mut asm: Option<StateAssembler> = None;
-        let ok = 'stream: {
-            let head = match replies.next_reply() {
-                Ok(Some(Value::Bulk(b))) => b,
-                _ => break 'stream false, // evicted between the alias GET and now
-            };
-            sess.arrived(head.len());
-            let Some(a) = checked_assembler(&head, head_len, ct, m, hash, dims) else {
-                break 'stream false;
-            };
-            consume_chunk_stream(&mut replies, &mut sess, asm.insert(a))
-        };
-        if !ok {
-            let _ = replies.drain(); // re-sync before the full-blob fallback
-            return None;
-        }
-        let wire = sess.bytes();
-        sess.finish();
-        (asm?, wire)
-    } else {
-        // deflated chunk lengths are data-dependent: head first, then one
-        // GETRANGE per chunk at offsets read from the verified index
-        let head = shaper
-            .shaped_post(|| {
-                let r = conn.getrange(target, 0, head_len);
-                let n = r
-                    .as_ref()
-                    .map(|o| o.as_ref().map_or(0, |b| b.len()))
-                    .unwrap_or(0);
-                (r, n)
-            })
-            .ok()??;
-        let mut asm = checked_assembler(&head, head_len, ct, m, hash, dims)?;
-        let mut reqs = Vec::with_capacity(k);
-        let mut off = head_len;
-        for c in 0..k {
-            let clen = asm.chunk_len(c);
-            if clen == 0 {
-                return None; // a zero-length stored chunk is never written
-            }
-            reqs.push(getrange_req(target, off, clen));
-            off += clen;
-        }
-        let mut replies = match conn.send_reqs(&reqs) {
-            Ok(r) => r,
-            Err(e) => {
-                log_debug!("edge-client", "range batch failed: {e}");
-                return None;
-            }
-        };
-        let mut sess = shaper.shaped_stream();
-        if !consume_chunk_stream(&mut replies, &mut sess, &mut asm) {
-            let _ = replies.drain();
-            return None;
-        }
-        let wire = head.len() + sess.bytes();
-        sess.finish();
-        (asm, wire)
-    };
-
-    let compressed = asm.compressed();
-    let entries = asm.entries().to_vec();
-    let body_total: usize = entries.iter().map(|e| e.len as usize).sum();
-    let state = match asm.finish() {
-        Ok(st) => st,
-        Err(e) => {
-            log_debug!("edge-client", "range restore rejected: {e}");
-            return None;
-        }
-    };
-    // baseline: what the pre-chunking pipeline moved for this hit —
-    // compressed entries fell back to a full-blob download (head + whole
-    // body); uncompressed is the dedicated-m-row-blob model, same as the
-    // upload side
-    let baseline = if compressed {
-        head_len + body_total
-    } else {
-        lo.blob_len(m)
-    };
-    Some(RangeFetch {
-        state,
-        wire,
-        saved: baseline.saturating_sub(wire),
-        compressed,
-        entries,
-    })
-}
-
-/// `GET` + verify + truncate an entire stored entry — the range path's
-/// fallback and the legacy-alias path.  Returns the state truncated to `m`
-/// rows, the wire bytes moved and the raw blob (for splice-base metadata).
-fn fetch_full_entry(
-    conn: &mut KvClient,
-    shaper: &mut Shaper,
-    target: &[u8],
-    m: usize,
-    hash: &str,
-    dims: (usize, usize, usize, usize),
-) -> Option<(KvState, usize, SharedBytes)> {
-    let full = shaper
-        .shaped_post(|| {
-            let r = conn.get(target);
-            let n = r
-                .as_ref()
-                .map(|o| o.as_ref().map_or(0, |b| b.len()))
-                .unwrap_or(0);
-            (r, n)
-        })
-        .ok()??;
-    match KvState::restore(&full, hash, dims) {
-        Ok(mut state) if state.n_tokens >= m => {
-            state.n_tokens = m;
-            let wire = full.len();
-            Some((state, wire, full))
-        }
-        Ok(_) => None,
-        Err(e) => {
-            log_debug!("edge-client", "restore rejected: {e}");
-            None
-        }
-    }
-}
-
 pub struct EdgeClient {
     pub cfg: EdgeClientConfig,
     engine: Arc<Engine>,
     meta: ModelMeta,
+    /// Peer 0's local catalog (or a free-standing one when no peers are
+    /// configured) — kept as a public field so single-box tooling and
+    /// tests keep their direct handle; the fabric lookup consults every
+    /// peer's catalog via [`Peer::catalog`].
     pub catalog: Arc<Mutex<LocalCatalog>>,
-    conn: Option<KvClient>,
-    shaper: Shaper,
+    peers: Vec<Peer>,
+    planner: PeerPlanner,
+    rng: Rng,
     pacer: Pacer,
     sampler: Sampler,
-    sync: Option<CatalogSync>,
     pub stats: ClientStats,
 }
 
@@ -550,32 +358,40 @@ impl EdgeClient {
     pub fn new(engine: Arc<Engine>, cfg: EdgeClientConfig) -> Result<Self> {
         anyhow::ensure!(cfg.chunk_tokens >= 1, "chunk_tokens must be >= 1");
         let meta = ModelMeta::new(engine.model_hash());
-        let mut catalog = LocalCatalog::new();
-        catalog.min_hit_tokens = cfg.min_hit_tokens;
-        let catalog = Arc::new(Mutex::new(catalog));
-
-        let conn = match &cfg.server_addr {
-            Some(addr) => Some(
-                KvClient::connect(addr).with_context(|| format!("cache box at {addr}"))?,
-            ),
-            None => None,
-        };
-        let sync = match (&cfg.server_addr, cfg.sync_interval) {
-            (Some(addr), Some(iv)) => {
-                Some(CatalogSync::spawn(addr.clone(), Arc::clone(&catalog), iv)?)
+        let mut peers = Vec::with_capacity(cfg.peers.len());
+        for (i, pc) in cfg.peers.iter().enumerate() {
+            let link = pc.link.clone().unwrap_or_else(|| cfg.link.clone());
+            // per-peer shaper seed: peer 0 keeps the historical stream
+            let mut peer = Peer::connect(
+                pc.clone(),
+                link,
+                cfg.seed ^ (0x5AFE + i as u64),
+                cfg.min_hit_tokens,
+            )?;
+            if let Some(iv) = cfg.sync_interval {
+                peer.spawn_sync(iv)?;
             }
-            _ => None,
+            peers.push(peer);
+        }
+        // peer 0's catalog doubles as the public single-box handle; a
+        // standalone client gets a free-standing (never-hit) one
+        let catalog = match peers.first() {
+            Some(p) => Arc::clone(&p.catalog),
+            None => {
+                let mut c = LocalCatalog::new();
+                c.min_hit_tokens = cfg.min_hit_tokens;
+                Arc::new(Mutex::new(c))
+            }
         };
-        let shaper = Shaper::new(cfg.link.clone(), cfg.seed ^ 0x5AFE);
         let pacer = Pacer::new(cfg.device.clone());
         Ok(EdgeClient {
             sampler: Sampler::greedy(),
             meta,
             catalog,
-            conn,
-            shaper,
+            peers,
+            planner: PeerPlanner::default(),
+            rng: Rng::new(cfg.seed ^ 0x9EE8),
             pacer,
-            sync,
             stats: ClientStats::default(),
             engine,
             cfg,
@@ -586,13 +402,48 @@ impl EdgeClient {
         &self.engine
     }
 
-    /// Force a synchronous catalog pull (tests / deterministic benches).
+    /// Force a synchronous catalog pull from every peer over the pooled
+    /// request-path connections (tests / deterministic benches).  Every
+    /// reachable peer is synced even when another is down — surviving
+    /// peers' entries must stay visible through a peer death — and the
+    /// first failure is reported after the sweep.
     pub fn sync_catalog_now(&mut self) -> Result<()> {
-        if let Some(addr) = &self.cfg.server_addr {
-            let mut conn = KvClient::connect(addr)?;
-            CatalogSync::sync_once(&mut conn, &self.catalog)?;
+        let mut first_err: Option<anyhow::Error> = None;
+        for peer in &mut self.peers {
+            let catalog = Arc::clone(&peer.catalog);
+            let res = match peer.conn_parts() {
+                Some((conn, _)) => CatalogSync::sync_once(conn, &catalog),
+                None => Err(anyhow::anyhow!(
+                    "cache box at {} unreachable",
+                    peer.cfg.addr
+                )),
+            };
+            if let Err(e) = res {
+                peer.mark_dead_conn();
+                first_err.get_or_insert(e);
+            }
         }
-        Ok(())
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Per-peer transfer/latency ledgers, in peer order.
+    pub fn peer_ledgers(&self) -> Vec<PeerLedger> {
+        self.peers
+            .iter()
+            .map(|p| {
+                let mut l = p.ledger.clone();
+                l.sync_rounds = p.sync_rounds();
+                l
+            })
+            .collect()
+    }
+
+    /// Number of configured cache-box peers.
+    pub fn n_peers(&self) -> usize {
+        self.peers.len()
     }
 
     fn max_new(&self) -> usize {
@@ -621,11 +472,14 @@ impl EdgeClient {
         if !self.cfg.adaptive_chunk {
             return self.cfg.chunk_tokens;
         }
-        let ct = adaptive_chunk_tokens(
-            &self.shaper.link,
-            self.blob_layout().token_stride(),
-            entry_rows,
-        );
+        // break-even against the link the entry will actually ride: the
+        // delta base's peer when splicing, else the first peer's link
+        let link = delta_base
+            .and_then(|b| self.peers.get(b.peer))
+            .or_else(|| self.peers.first())
+            .map(|p| &p.link)
+            .unwrap_or(&self.cfg.link);
+        let ct = adaptive_chunk_tokens(link, self.blob_layout().token_stride(), entry_rows);
         if let Some(b) = delta_base {
             if let Some(bct) = b.chunk_tokens {
                 if b.compressed == (self.cfg.compression == Compression::Deflate)
@@ -639,24 +493,28 @@ impl EdgeClient {
         ct
     }
 
-    /// Total payload bytes this client has moved over the modelled link
-    /// (both directions) — the honest wire ledger range transfers shrink.
+    /// Total payload bytes this client has moved over the modelled links
+    /// of every peer (both directions) — the honest wire ledger range
+    /// transfers shrink.
     pub fn link_moved_bytes(&self) -> u64 {
-        self.shaper.moved_bytes
+        self.peers.iter().map(|p| p.shaper.moved_bytes).sum()
     }
 
     /// Logical (uncompressed) state bytes those transfers represent; with
     /// `Compression::Deflate` this exceeds [`EdgeClient::link_moved_bytes`]
     /// whenever the codec actually saves wire bytes.
     pub fn link_inflated_bytes(&self) -> u64 {
-        self.shaper.inflated_bytes
+        self.peers.iter().map(|p| p.shaper.inflated_bytes).sum()
     }
 
     /// Latency the streaming download path hid by decoding chunks while
-    /// later chunks were still on the modelled wire (see
-    /// [`Shaper::shaped_stream`]).
+    /// later chunks were still on the modelled wire, summed over peers
+    /// (see `netsim::Shaper::shaped_stream`).
     pub fn link_overlap_saved(&self) -> Duration {
-        self.shaper.overlap_saved
+        self.peers
+            .iter()
+            .map(|p| p.shaper.overlap_saved)
+            .sum()
     }
 
     /// Tokenize the prompt and derive its Figure-3 range prefix lengths.
@@ -699,57 +557,80 @@ impl EdgeClient {
         }
     }
 
-    /// Step 2: consult the catalog (or, in the no-catalog ablation, probe
-    /// the server over the shaped link).
-    fn lookup(&mut self, ranges: &[PromptRange], bd: &mut PhaseBreakdown) -> Lookup {
-        if self.conn.is_none() {
-            return Lookup::Miss;
+    /// Step 2: consult every peer's local catalog — the hit names the
+    /// peer(s) that claim the range ([`lookup_tagged`]) — or, in the
+    /// no-catalog ablation, probe each peer with EXISTS for every
+    /// candidate range, over that peer's shaped link.
+    fn lookup(
+        &mut self,
+        ranges: &[PromptRange],
+        bd: &mut PhaseBreakdown,
+    ) -> Option<(PromptRange, Vec<usize>)> {
+        if self.peers.is_empty() {
+            return None;
         }
         if self.cfg.use_catalog {
-            let catalog = Arc::clone(&self.catalog);
             let t0 = std::time::Instant::now();
-            let res = self
-                .pacer
-                .paced(self.cfg.device.bloom_time(1), || {
-                    catalog.lock().unwrap().lookup(ranges)
-                });
+            let bloom_cost = self.cfg.device.bloom_time(self.peers.len());
+            let peers = &self.peers;
+            let res = self.pacer.paced(bloom_cost, || {
+                let guards: Vec<_> =
+                    peers.iter().map(|p| p.catalog.lock().unwrap()).collect();
+                let refs: Vec<&LocalCatalog> = guards.iter().map(|g| &**g).collect();
+                lookup_tagged(&refs, ranges)
+            });
             bd.add(Phase::Bloom, t0.elapsed());
             res
         } else {
-            // §5.2.3 ablation: every inference pays remote round trips
+            // §5.2.3 ablation: every inference pays remote round trips,
+            // once per peer per candidate range until a claimer is found
             let t0 = std::time::Instant::now();
-            let mut best: Option<PromptRange> = None;
-            for r in ranges.iter().rev() {
+            let mut best: Option<(PromptRange, Vec<usize>)> = None;
+            'ranges: for r in ranges.iter().rev() {
                 let key = state_store_key(&r.key);
-                let conn = self.conn.as_mut().unwrap();
-                let exists = self
-                    .shaper
-                    .shaped(0, || conn.exists(&key))
-                    .unwrap_or(false);
-                if exists {
-                    best = Some(r.clone());
-                    break;
+                let mut claimers = Vec::new();
+                for i in 0..self.peers.len() {
+                    let peer = &mut self.peers[i];
+                    let probe = {
+                        let Some((conn, shaper)) = peer.conn_parts() else {
+                            continue;
+                        };
+                        shaper.shaped(0, || conn.exists(&key))
+                    };
+                    match probe {
+                        Ok(true) => claimers.push(i),
+                        Ok(false) => {}
+                        Err(_) => peer.mark_dead_conn(),
+                    }
+                }
+                if !claimers.is_empty() {
+                    best = Some((r.clone(), claimers));
+                    break 'ranges;
                 }
             }
             bd.add(Phase::Redis, t0.elapsed());
-            match best {
-                Some(r) => Lookup::Hit(r),
-                None => Lookup::Miss,
-            }
+            best
         }
     }
 
-    /// Step 3 (hit path): download + verify + restore.  `None` on false
-    /// positive / eviction / corruption — caller falls back to local prefill.
+    /// Step 3 (hit path): download + verify + restore from the claiming
+    /// peers.  `None` on false positive / eviction / corruption — caller
+    /// falls back to local prefill.
     ///
     /// The first GET returns either the state blob itself (the hit range is
-    /// the stored entry) or a range alias; an alias is resolved by fetching
-    /// only the target's head (header + chunk index) and the whole ECS3
-    /// chunks covering the matched rows — see [`fetch_chunked`].
-    fn try_download(&mut self, range: &PromptRange, bd: &mut PhaseBreakdown) -> Option<Download> {
+    /// the stored entry) or a range alias; an alias is resolved through the
+    /// fabric — the matched ECS3 chunks striped across every claiming peer
+    /// and streamed concurrently, with failures re-planned onto survivors
+    /// (see [`fetch_prefix_multi`]).
+    fn try_download(
+        &mut self,
+        range: &PromptRange,
+        claimers: &[usize],
+        bd: &mut PhaseBreakdown,
+    ) -> Option<Download> {
         let key = state_store_key(&range.key);
         let t0 = std::time::Instant::now();
-        let out = self.fetch_state(&key, range);
+        let out = self.fetch_state(&key, range, claimers);
         bd.add(Phase::Redis, t0.elapsed());
         match out {
             Some(d) if d.state.n_tokens == range.token_len => {
@@ -769,36 +650,71 @@ impl EdgeClient {
         }
     }
 
-    fn fetch_state(&mut self, key: &[u8], range: &PromptRange) -> Option<Download> {
-        let conn = self.conn.as_mut()?;
-        let blob = self.shaper.shaped_post(|| {
-            let r = conn.get(key);
-            let n = r
-                .as_ref()
-                .map(|o| o.as_ref().map_or(0, |b| b.len()))
-                .unwrap_or(0);
-            (r, n)
-        });
-        let blob = match blob {
-            Ok(Some(b)) => b,
-            Ok(None) => return None, // false positive or evicted
-            Err(e) => {
-                log_debug!("edge-client", "download failed: {e}");
-                return None;
+    /// GET the hit key from the claiming peers in order, rotating past
+    /// dead or evicted copies.  Returns the alias/entry blob plus the slot
+    /// of the peer that served it.
+    fn fetch_alias_blob(&mut self, key: &[u8], claimers: &[usize]) -> Option<(usize, SharedBytes)> {
+        for &i in claimers {
+            let peer = &mut self.peers[i];
+            let got = {
+                let Some((conn, shaper)) = peer.conn_parts() else {
+                    self.stats.peer_failures += 1;
+                    continue;
+                };
+                shaper.shaped_post(|| {
+                    let r = conn.get(key);
+                    let n = r
+                        .as_ref()
+                        .map(|o| o.as_ref().map_or(0, |b| b.len()))
+                        .unwrap_or(0);
+                    (r, n)
+                })
+            };
+            match got {
+                Ok(Some(b)) => {
+                    peer.ledger.bytes_down += b.len() as u64;
+                    return Some((i, b));
+                }
+                Ok(None) => {
+                    // this peer claimed the range but no longer holds it
+                    // (evicted / Bloom FP); another claimer may still
+                    log_debug!(
+                        "edge-client",
+                        "claimer {} lost the entry; rotating",
+                        peer.cfg.addr
+                    );
+                }
+                Err(e) => {
+                    log_debug!("edge-client", "download failed: {e}");
+                    peer.mark_dead_conn();
+                    self.stats.peer_failures += 1;
+                }
             }
-        };
+        }
+        None
+    }
+
+    fn fetch_state(
+        &mut self,
+        key: &[u8],
+        range: &PromptRange,
+        claimers: &[usize],
+    ) -> Option<Download> {
+        let (alias_peer, blob) = self.fetch_alias_blob(key, claimers)?;
         let cfg = &self.engine.model.config;
         let dims = (cfg.n_layers, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim);
-        let hash = self.engine.model_hash();
+        let hash = self.engine.model_hash().to_string();
         let m = range.token_len;
 
         let Some(alias) = decode_range_alias(&blob) else {
             // the hit range is the stored entry itself: full restore
-            return match KvState::restore(&blob, hash, dims) {
+            return match KvState::restore(&blob, &hash, dims) {
                 Ok(state) => {
-                    self.shaper.note_inflated(state.payload_bytes(state.n_tokens));
+                    self.peers[alias_peer]
+                        .shaper
+                        .note_inflated(state.payload_bytes(state.n_tokens));
                     Some(Download {
-                        base: delta_base_for_entry(key.to_vec(), &blob),
+                        base: delta_base_for_entry(key.to_vec(), alias_peer, &blob),
                         wire_bytes: blob.len(),
                         saved_bytes: 0,
                         state,
@@ -821,35 +737,74 @@ impl EdgeClient {
         }
         let target = alias.target_key;
 
-        // chunk-aligned range path: ECS3 aliases carry the target's chunk
+        // chunk-aligned fabric path: ECS3 aliases carry the target's chunk
         // size, so whole-chunk byte ranges never round to a mid-chunk
-        // boundary — and deflated entries are range-served like any other
+        // boundary — and deflated entries are range-served like any other.
+        // The alias-serving peer leads (it certainly holds the entry);
+        // every other claimer joins the stripe plan.
         if let Some(ct) = alias.chunk_tokens {
-            match fetch_chunked(
-                &mut *conn,
-                &mut self.shaper,
-                &target,
-                alias.total_rows,
-                alias.compressed,
-                ct,
-                m,
-                hash,
-                dims,
-            ) {
+            let order: Vec<usize> = std::iter::once(alias_peer)
+                .chain(claimers.iter().copied().filter(|&i| i != alias_peer))
+                .collect();
+            let fetch = {
+                let mut sel: Vec<(usize, &mut Peer)> = self
+                    .peers
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(i, _)| order.contains(i))
+                    .collect();
+                sel.sort_by_key(|(i, _)| {
+                    order.iter().position(|&o| o == *i).unwrap_or(usize::MAX)
+                });
+                fetch_prefix_multi(
+                    &mut sel,
+                    &self.planner,
+                    &target,
+                    alias.total_rows,
+                    alias.compressed,
+                    ct,
+                    m,
+                    &hash,
+                    dims,
+                )
+            };
+            match fetch {
                 Some(f) => {
                     self.stats.range_fetches += 1;
-                    self.shaper.note_inflated(f.state.payload_bytes(m));
+                    self.stats.re_plans += f.re_plans;
+                    self.stats.peer_failures += f.share_failures;
+                    if f.multi_source {
+                        self.stats.multi_source_fetches += 1;
+                    }
+                    let head_peer = f.head_peer;
+                    self.peers[head_peer]
+                        .shaper
+                        .note_inflated(f.state.payload_bytes(m));
+                    // baseline: what the pre-chunking pipeline moved for
+                    // this hit — compressed entries fell back to a
+                    // full-blob download (head + whole body); uncompressed
+                    // is the dedicated-m-row-blob model, same as uploads
+                    let lo = BlobLayout::new(&hash, dims.0, dims.2, dims.3)
+                        .with_chunk_tokens(ct);
+                    let body_total: usize =
+                        f.entries.iter().map(|e| e.len as usize).sum();
+                    let baseline = if f.compressed {
+                        lo.payload_off(alias.total_rows) + body_total
+                    } else {
+                        lo.blob_len(m)
+                    };
                     return Some(Download {
-                        state: f.state,
                         wire_bytes: blob.len() + f.wire,
-                        saved_bytes: f.saved,
+                        saved_bytes: baseline.saturating_sub(f.wire),
                         base: DeltaBase {
                             store_key: target,
+                            peer: head_peer,
                             total_rows: alias.total_rows,
                             compressed: f.compressed,
                             chunk_tokens: Some(ct),
                             chunk_index: f.entries,
                         },
+                        state: f.state,
                     });
                 }
                 None => {
@@ -858,7 +813,7 @@ impl EdgeClient {
                     // degrades to a miss only if that fails too)
                     log_debug!(
                         "edge-client",
-                        "range path failed for {m}-row prefix; full-blob fallback"
+                        "fabric range path failed for {m}-row prefix; full-blob fallback"
                     );
                     self.stats.full_fetch_fallbacks += 1;
                 }
@@ -866,22 +821,87 @@ impl EdgeClient {
         }
 
         // full-blob path: legacy (pre-chunking) aliases land here directly,
-        // the chunked path lands here when its verification fails
-        let (state, wire, full) =
-            fetch_full_entry(&mut *conn, &mut self.shaper, &target, m, hash, dims)?;
-        self.shaper.note_inflated(state.payload_bytes(m));
-        Some(Download {
-            base: delta_base_for_entry(target, &full),
-            wire_bytes: blob.len() + wire,
-            saved_bytes: 0,
-            state,
-        })
+        // the fabric path lands here when its verification fails.  Try the
+        // claimers in order until one serves a verifiable entry.
+        for &i in std::iter::once(&alias_peer)
+            .chain(claimers.iter().filter(|&&i| i != alias_peer))
+        {
+            if let Some((state, wire, full)) =
+                fetch_full_entry(&mut self.peers[i], &target, m, &hash, dims)
+            {
+                self.peers[i].shaper.note_inflated(state.payload_bytes(m));
+                return Some(Download {
+                    base: delta_base_for_entry(target, i, &full),
+                    wire_bytes: blob.len() + wire,
+                    saved_bytes: 0,
+                    state,
+                });
+            }
+        }
+        None
     }
 
-    /// Step 3 (miss path, post-response): publish every range the server
+    /// Probe a peer's keyspace load for the placement policy (`INFO`
+    /// `used_bytes:` over the shaped link).  `u64::MAX` marks an
+    /// unreachable peer so two-choices routes around it.
+    fn probe_used_bytes(&mut self, i: usize) -> u64 {
+        let res = {
+            let Some((conn, shaper)) = self.peers[i].conn_parts() else {
+                return u64::MAX;
+            };
+            shaper.shaped_post(|| {
+                let r = conn.info();
+                let len = r.as_ref().map(|s| s.len()).unwrap_or(0);
+                (r, len)
+            })
+        };
+        match res {
+            Ok(info) => crate::kvstore::client::parse_info_used_bytes(&info)
+                .map(|v| v as u64)
+                .unwrap_or(u64::MAX),
+            Err(_) => {
+                self.peers[i].mark_dead_conn();
+                self.stats.peer_failures += 1;
+                u64::MAX
+            }
+        }
+    }
+
+    /// Ship one prepared request pipeline to `peer` over its pooled
+    /// connection.  Returns the replies, or `None` after marking the
+    /// connection dead (the caller picks another peer).
+    fn send_upload(&mut self, i: usize, reqs: &[Value], wire: usize) -> Option<Vec<Value>> {
+        let t0 = std::time::Instant::now();
+        let res = {
+            let Some((conn, shaper)) = self.peers[i].conn_parts() else {
+                self.stats.peer_failures += 1;
+                return None;
+            };
+            shaper.shaped(wire, || conn.pipeline_req(reqs))
+        };
+        let peer = &mut self.peers[i];
+        peer.ledger.breakdown.add(Phase::Redis, t0.elapsed());
+        match res {
+            Ok(replies) => {
+                peer.ledger.bytes_up += wire as u64;
+                Some(replies)
+            }
+            Err(e) => {
+                log_debug!("edge-client", "upload to {} failed: {e}", peer.cfg.addr);
+                peer.mark_dead_conn();
+                self.stats.peer_failures += 1;
+                None
+            }
+        }
+    }
+
+    /// Step 3 (miss path, post-response): publish every range the fabric
     /// does not already have.  One real blob is shipped per prompt — via
-    /// `SPLICE` (suffix rows only) when a delta base is known — and shorter
-    /// ranges are registered as tiny aliases into it.  Returns
+    /// `SPLICE` (suffix rows only) when a delta base is known, onto the
+    /// base's own peer — and shorter ranges become tiny aliases into it.
+    /// Fresh blobs are placed by power-of-two-choices on the peers'
+    /// reported `used_bytes`; `cfg.replicas` extra full copies go to
+    /// distinct peers so the range survives its primary dying.  Returns
     /// (wire bytes, duration, modelled bytes saved vs full-blob-per-range).
     fn upload_ranges(
         &mut self,
@@ -891,19 +911,25 @@ impl EdgeClient {
         prompt_tokens: usize,
         delta_base: Option<&DeltaBase>,
     ) -> (usize, Duration, usize) {
-        if self.conn.is_none() {
+        if self.peers.is_empty() {
             return (0, Duration::ZERO, 0);
         }
         let t0 = std::time::Instant::now();
         let todo: Vec<PromptRange> = {
-            let cat = self.catalog.lock().unwrap();
+            // a range that any peer already (probably) holds is not
+            // re-published anywhere
+            let guards: Vec<_> = self
+                .peers
+                .iter()
+                .map(|p| p.catalog.lock().unwrap())
+                .collect();
             ranges
                 .iter()
                 .filter(|r| {
                     r.token_len > skip_up_to
                         && r.token_len <= prompt_tokens
                         && (self.cfg.partial_matching || r.token_len == prompt_tokens)
-                        && !cat.filter.contains(&r.key)
+                        && !guards.iter().any(|c| c.filter.contains(&r.key))
                 })
                 .cloned()
                 .collect()
@@ -925,32 +951,111 @@ impl EdgeClient {
         // blob per range (modelled uncompressed)
         let seed_cost: usize = todo.iter().map(|r| lo.blob_len(r.token_len)).sum();
 
-        let mut reqs: Vec<Value> = Vec::with_capacity(todo.len() * 2 + 1);
-        let mut wire = 0usize;
+        // shared pipeline tail: the long-range registration plus one tiny
+        // alias + registration per shorter range (identical on every peer
+        // that receives a copy)
+        let mut tail_reqs: Vec<Value> = Vec::with_capacity(todo.len() * 2 + 1);
+        let mut alias_wire = 0usize;
+        tail_reqs.push(register_req(&longest.key));
+        for r in todo.iter().filter(|r| r.token_len != n) {
+            let alias = encode_range_alias(&long_key, n, compressed, ct);
+            alias_wire += alias.len();
+            tail_reqs.push(request_shared(vec![
+                SharedBytes::copy_from(b"SET"),
+                state_store_key(&r.key).into(),
+                alias.into(),
+            ]));
+            tail_reqs.push(register_req(&r.key));
+        }
+
         // SPLICE is chunk-aligned: reuse the base's whole chunks below the
         // matched prefix (their compressed bytes stay server-side and their
         // index entries are copied into the new header); the ragged
         // remainder rides along with the suffix chunks.  Works for deflated
         // bases exactly like raw ones — chunks are independent streams.
+        // The splice must land on the base's own peer; fresh blobs go to
+        // the two-choices placement winner instead.
         let delta = delta_base
             .filter(|b| {
                 skip_up_to > 0
                     && b.total_rows >= skip_up_to
                     && b.compressed == compressed
                     && b.chunk_tokens == Some(ct)
+                    && b.peer < self.peers.len()
             })
             .map(|b| (b, (skip_up_to / ct).min(b.chunk_index.len())))
             .filter(|(_, k)| *k >= 1);
-        let use_delta = delta.is_some();
-        match delta {
-            Some((b, k)) => {
-                let prefix = &b.chunk_index[..k];
+        // placement choice; `None` (both two-choices probes dead) falls
+        // through to the any-live-peer salvage path below rather than
+        // dropping the upload — other peers may still be reachable
+        let primary: Option<usize> = match &delta {
+            Some((b, _)) => Some(b.peer),
+            None => {
+                let candidates: Vec<usize> = (0..self.peers.len()).collect();
+                let planner = self.planner;
+                let mut rng = self.rng.clone();
+                let choice =
+                    planner.place(&mut rng, &candidates, |i| self.probe_used_bytes(i));
+                self.rng = rng;
+                choice
+            }
+        };
+
+        // lazily-built full blob (fresh publishes, replicas, fallbacks);
+        // captures no part of self so uploads can borrow self freely
+        let compression = self.cfg.compression;
+        let mut full_blob: Option<SharedBytes> = None;
+        let hash_for_blob = hash.clone();
+        let mut mk_full = |state: &KvState| -> SharedBytes {
+            full_blob
+                .get_or_insert_with(|| {
+                    state.serialize_prefix_shared_opts(n, &hash_for_blob, compression, ct)
+                })
+                .clone()
+        };
+
+        // the one full-copy publish shape (fresh primaries, salvage after a
+        // dead primary, replicas): SET long_key + the shared alias tail.
+        // The blob comes in as a parameter so this closure never borrows
+        // `mk_full`, which other paths also call.
+        let publish_full_copy =
+            |cl: &mut Self, i: usize, replica: bool, blob: SharedBytes| -> usize {
+                let blen = blob.len();
+                let mut reqs = Vec::with_capacity(tail_reqs.len() + 1);
+                reqs.push(request_shared(vec![
+                    SharedBytes::copy_from(b"SET"),
+                    long_key.clone().into(),
+                    blob,
+                ]));
+                reqs.extend(tail_reqs.iter().cloned());
+                if cl.send_upload(i, &reqs, blen + alias_wire).is_none() {
+                    return 0;
+                }
+                cl.peers[i].shaper.note_inflated(state.payload_bytes(n));
+                if replica {
+                    cl.peers[i].ledger.replica_uploads += 1;
+                    cl.stats.replica_uploads += 1;
+                } else {
+                    cl.peers[i].ledger.uploads += 1;
+                }
+                blen + alias_wire
+            };
+
+        // -- primary send (splice base peer or placement winner) ----------
+        let mut wire = 0usize;
+        // peers that verifiably *stored* a copy — only these get the
+        // local-catalog registration below, so a botched publish is
+        // re-attempted on a later query instead of poisoning the filter
+        let mut uploaded_to: Vec<usize> = Vec::new();
+        match (primary, &delta) {
+            (Some(primary), Some((b, k))) => {
+                let prefix = &b.chunk_index[..*k];
                 let (head, tail) =
-                    state.serialize_for_splice(n, &hash, self.cfg.compression, ct, prefix);
+                    state.serialize_for_splice(n, &hash, compression, ct, prefix);
                 let prefix_span: usize = prefix.iter().map(|e| e.len as usize).sum();
                 let base_pay = lo.payload_off(b.total_rows);
-                self.shaper.note_inflated((n - k * ct) * lo.token_stride());
-                wire += head.len() + tail.len();
+                let head_wire = head.len() + tail.len();
+                let mut reqs = Vec::with_capacity(tail_reqs.len() + 1);
                 reqs.push(request_shared(vec![
                     SharedBytes::copy_from(b"SPLICE"),
                     long_key.clone().into(),
@@ -960,81 +1065,138 @@ impl EdgeClient {
                     head,
                     tail,
                 ]));
-            }
-            None => {
-                let blob =
-                    state.serialize_prefix_shared_opts(n, &hash, self.cfg.compression, ct);
-                self.shaper.note_inflated(state.payload_bytes(n));
-                wire += blob.len();
-                reqs.push(request_shared(vec![
-                    SharedBytes::copy_from(b"SET"),
-                    long_key.clone().into(),
-                    blob,
-                ]));
-            }
-        }
-        reqs.push(register_req(&longest.key));
-        for r in todo.iter().filter(|r| r.token_len != n) {
-            let alias = encode_range_alias(&long_key, n, compressed, ct);
-            wire += alias.len();
-            reqs.push(request_shared(vec![
-                SharedBytes::copy_from(b"SET"),
-                state_store_key(&r.key).into(),
-                alias.into(),
-            ]));
-            reqs.push(register_req(&r.key));
-        }
-
-        let conn = self.conn.as_mut().unwrap();
-        let res = self.shaper.shaped(wire, || conn.pipeline_req(&reqs));
-        match res {
-            Ok(replies) => {
-                if use_delta && matches!(replies.first(), Some(Value::Error(_))) {
-                    // the delta base vanished (evicted) between download and
-                    // upload: ship the whole blob after all
-                    log_debug!(
-                        "edge-client",
-                        "splice base gone; falling back to a full upload"
-                    );
-                    let blob = state.serialize_prefix_shared_opts(
-                        n,
-                        &hash,
-                        self.cfg.compression,
-                        ct,
-                    );
-                    let blen = blob.len();
-                    let r2 = self
+                reqs.extend(tail_reqs.iter().cloned());
+                let send_wire = head_wire + alias_wire;
+                if let Some(replies) = self.send_upload(primary, &reqs, send_wire) {
+                    self.peers[primary]
                         .shaper
-                        .shaped(blen, || conn.set_shared(&long_key, blob));
-                    if r2.is_ok() {
-                        wire += blen;
-                        // the full blob replaced the delta: account the
-                        // prefix rows the splice would have left in place
-                        self.shaper.note_inflated(state.payload_bytes(n));
+                        .note_inflated((n - k * ct) * lo.token_stride());
+                    wire += send_wire;
+                    let mut stored = true;
+                    if matches!(replies.first(), Some(Value::Error(_))) {
+                        // the delta base vanished (evicted) between download
+                        // and upload: ship the whole blob after all
+                        log_debug!(
+                            "edge-client",
+                            "splice base gone; falling back to a full upload"
+                        );
+                        let blob = mk_full(state);
+                        let blen = blob.len();
+                        let res = match self.peers[primary].conn_parts() {
+                            Some((conn, shaper)) => {
+                                shaper.shaped(blen, || conn.set_shared(&long_key, blob))
+                            }
+                            None => Err(anyhow::anyhow!("connection lost")),
+                        };
+                        match res {
+                            Ok(()) => {
+                                wire += blen;
+                                self.peers[primary].ledger.bytes_up += blen as u64;
+                                // the full blob replaced the delta: credit
+                                // only the prefix rows the splice would
+                                // have left in place — the suffix rows
+                                // were already counted above
+                                self.peers[primary]
+                                    .shaper
+                                    .note_inflated(k * ct * lo.token_stride());
+                            }
+                            Err(_) => {
+                                // the aliases went through but the entry
+                                // did not: leave the ranges unregistered
+                                // locally so a later query republishes
+                                self.peers[primary].mark_dead_conn();
+                                self.stats.peer_failures += 1;
+                                stored = false;
+                            }
+                        }
+                    }
+                    if stored {
+                        self.peers[primary].ledger.uploads += 1;
+                        uploaded_to.push(primary);
                     }
                 }
-                let mut cat = self.catalog.lock().unwrap();
-                for r in &todo {
-                    cat.register_key(&r.key);
-                }
-                self.stats.bytes_up += wire as u64;
-                let saved = seed_cost.saturating_sub(wire);
-                self.stats.bytes_saved += saved as u64;
-                (wire, t0.elapsed(), saved)
             }
-            Err(e) => {
-                log_debug!("edge-client", "upload failed (continuing local-only): {e}");
-                (0, t0.elapsed(), 0)
+            (Some(primary), None) => {
+                let added = publish_full_copy(self, primary, false, mk_full(state));
+                if added > 0 {
+                    wire += added;
+                    uploaded_to.push(primary);
+                }
+            }
+            (None, _) => {}
+        }
+        if uploaded_to.is_empty() {
+            // primary dead, placement found no live probe, or the splice
+            // fallback failed: publish the full blob on any other peer
+            for i in (0..self.peers.len()).filter(|&i| Some(i) != primary) {
+                let added = publish_full_copy(self, i, false, mk_full(state));
+                if added > 0 {
+                    wire += added;
+                    uploaded_to.push(i);
+                    break;
+                }
             }
         }
+        if uploaded_to.is_empty() {
+            log_debug!(
+                "edge-client",
+                "upload failed on every peer (continuing local-only)"
+            );
+            // `wire` may be non-zero (a splice pipeline that landed on a
+            // vanished base) — keep the byte ledger honest regardless
+            self.stats.bytes_up += wire as u64;
+            return (wire, t0.elapsed(), 0);
+        }
+
+        // -- replicas: extra full copies on distinct peers, each placed by
+        // the same two-choices policy as primaries so replica load spreads
+        // by reported used_bytes instead of piling onto low peer indices
+        let mut extra = self.cfg.replicas;
+        let mut failed: Vec<usize> = Vec::new();
+        while extra > 0 {
+            let candidates: Vec<usize> = (0..self.peers.len())
+                .filter(|i| !uploaded_to.contains(i) && !failed.contains(i))
+                .collect();
+            if candidates.is_empty() {
+                break;
+            }
+            let planner = self.planner;
+            let mut rng = self.rng.clone();
+            let choice =
+                planner.place(&mut rng, &candidates, |i| self.probe_used_bytes(i));
+            self.rng = rng;
+            let Some(i) = choice else { break };
+            let added = publish_full_copy(self, i, true, mk_full(state));
+            if added > 0 {
+                wire += added;
+                uploaded_to.push(i);
+                extra -= 1;
+            } else {
+                failed.push(i);
+            }
+        }
+
+        // reflect the published ranges in the local catalog of every peer
+        // that received a copy, so this client neither re-uploads nor
+        // mis-plans future fetches
+        for &i in &uploaded_to {
+            let mut cat = self.peers[i].catalog.lock().unwrap();
+            for r in &todo {
+                cat.register_key(&r.key);
+            }
+        }
+        self.stats.bytes_up += wire as u64;
+        let saved = seed_cost.saturating_sub(wire);
+        self.stats.bytes_saved += saved as u64;
+        (wire, t0.elapsed(), saved)
     }
 
     /// The full steps-1-to-4 query flow for a structured prompt.
     pub fn query(&mut self, prompt: &Prompt) -> Result<QueryResult> {
         let mut bd = PhaseBreakdown::default();
         self.stats.queries += 1;
-        let inflated0 = self.shaper.inflated_bytes;
-        let overlap0 = self.shaper.overlap_saved;
+        let inflated0 = self.link_inflated_bytes();
+        let overlap0 = self.link_overlap_saved();
 
         // -- step 1: tokenize -------------------------------------------------
         let t0 = std::time::Instant::now();
@@ -1042,7 +1204,7 @@ impl EdgeClient {
         bd.add(Phase::Token, t0.elapsed());
         let full_len = tokens.len();
 
-        // -- step 2: catalog lookup -------------------------------------------
+        // -- step 2: peer-tagged catalog lookup -------------------------------
         let lookup = self.lookup(&ranges, &mut bd);
 
         // -- step 3: fetch or local prefill ----------------------------------
@@ -1053,15 +1215,22 @@ impl EdgeClient {
         let mut delta_base: Option<DeltaBase> = None;
         let mut state: Option<KvState> = None;
 
-        if let Lookup::Hit(range) = lookup {
+        if let Some((range, claimers)) = lookup {
             let est_bytes = self.engine.model.config.kv_bytes_per_token() * range.token_len;
+            // break-even against the first claimer's link — the one the
+            // head (and a single-source fetch) would ride
+            let link = claimers
+                .first()
+                .and_then(|&i| self.peers.get(i))
+                .map(|p| p.link.clone())
+                .unwrap_or_else(|| self.cfg.link.clone());
             if self.cfg.fetch_policy.should_fetch(
                 &self.cfg.device,
-                &self.cfg.link,
+                &link,
                 range.token_len,
                 est_bytes,
             ) {
-                match self.try_download(&range, &mut bd) {
+                match self.try_download(&range, &claimers, &mut bd) {
                     Some(d) => {
                         matched = d.state.n_tokens;
                         downloaded = d.wire_bytes;
@@ -1111,8 +1280,8 @@ impl EdgeClient {
         bd.state_bytes = downloaded.max(uploaded);
         bd.saved_bytes = saved;
         bd.wire_bytes = downloaded + uploaded;
-        bd.inflated_bytes = (self.shaper.inflated_bytes - inflated0) as usize;
-        bd.overlap_saved = self.shaper.overlap_saved - overlap0;
+        bd.inflated_bytes = (self.link_inflated_bytes() - inflated0) as usize;
+        bd.overlap_saved = self.link_overlap_saved() - overlap0;
 
         Ok(QueryResult {
             case,
@@ -1149,8 +1318,8 @@ impl EdgeClient {
     }
 
     pub fn shutdown(mut self) {
-        if let Some(s) = self.sync.take() {
-            s.stop();
+        for p in &mut self.peers {
+            p.stop_sync();
         }
     }
 }

@@ -1,0 +1,908 @@
+//! The **peer fabric** — N cooperating cache boxes behind one client.
+//!
+//! The paper's topology has exactly one middle node; this module
+//! generalises the client side to a fleet of them.  Each [`Peer`] bundles
+//! everything one cache box costs a client: a **pooled** [`KvClient`]
+//! connection (redialed only after an error, never per-operation), a
+//! per-peer link [`Shaper`], the peer's own [`LocalCatalog`] (merged by
+//! that peer's `CatalogSync` loop, so a Bloom hit names *which* box claims
+//! a range), and a [`PeerLedger`] of bytes and time attributable to that
+//! box.
+//!
+//! [`fetch_prefix_multi`] is the fabric's download engine.  Given the set
+//! of peers claiming a matched range, it:
+//!
+//! 1. acquires the entry **head** (header + chunk index) from the first
+//!    live claimer via the server-push `GETCHUNKS` command — with a single
+//!    claimer the same request already carries every matched chunk, so the
+//!    deflated path's old extra head round trip is gone and each chunk
+//!    still decodes the moment its bytes land;
+//! 2. splits the remaining whole chunks into goodput-weighted contiguous
+//!    stripes ([`PeerPlanner::split_chunks`]) and drives **one reply
+//!    stream per peer concurrently** (scoped threads, one pipelined
+//!    `GETRANGE` batch each), every arrival fed straight into a shared
+//!    [`StateAssembler`] under a mutex — aggregate goodput scales with
+//!    peer count because each peer's modelled wire time elapses in its own
+//!    thread;
+//! 3. on a mid-stream share failure (dead box, short/corrupt reply),
+//!    re-plans the orphaned chunks onto the surviving peers
+//!    ([`PeerPlanner::reassign`]) and fetches them there — a peer death
+//!    mid-trace degrades throughput, never correctness, because every
+//!    chunk re-verifies against the head peer's crc index no matter which
+//!    box served it.
+//!
+//! Anything unrecoverable returns `None` and the caller falls back to a
+//! full-blob download ([`fetch_full_entry`]) and then to local prefill —
+//! the same never-restore-questionable-bytes ladder as the single-box
+//! system.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::catalog::LocalCatalog;
+use crate::coordinator::policy::PeerPlanner;
+use crate::coordinator::sync::CatalogSync;
+use crate::kvstore::client::{getrange_req, ChunksReply, StreamingReplies};
+use crate::kvstore::resp::Value;
+use crate::kvstore::KvClient;
+use crate::log_debug;
+use crate::metrics::{PeerLedger, Phase};
+use crate::model::state::{BlobLayout, ChunkEntry, ChunkVerifier, KvState, StateAssembler};
+use crate::netsim::{LinkModel, Shaper, StreamSession};
+use crate::util::bytes::SharedBytes;
+
+/// One cache-box peer in the client configuration.
+#[derive(Debug, Clone)]
+pub struct PeerConfig {
+    /// Cache-box address (`host:port`).
+    pub addr: String,
+    /// Per-peer link model; `None` inherits the client's default link
+    /// (`EdgeClientConfig::link`), so homogeneous fleets configure one
+    /// link once and heterogeneous ones override per box.
+    pub link: Option<LinkModel>,
+}
+
+impl PeerConfig {
+    pub fn new(addr: impl Into<String>) -> Self {
+        PeerConfig { addr: addr.into(), link: None }
+    }
+
+    pub fn with_link(addr: impl Into<String>, link: LinkModel) -> Self {
+        PeerConfig { addr: addr.into(), link: Some(link) }
+    }
+}
+
+/// One cache box as a client sees it: pooled connection, per-peer shaper,
+/// per-peer catalog + sync loop, per-peer ledger.
+pub struct Peer {
+    pub cfg: PeerConfig,
+    /// Resolved link model (the per-peer override or the client default).
+    pub link: LinkModel,
+    conn: Option<KvClient>,
+    pub shaper: Shaper,
+    /// This peer's local catalog: one Bloom filter + sync cursor per box,
+    /// so a lookup can name the box(es) that claim a range.
+    pub catalog: Arc<Mutex<LocalCatalog>>,
+    sync: Option<CatalogSync>,
+    pub ledger: PeerLedger,
+}
+
+impl Peer {
+    /// Dial the peer eagerly (construction fails fast when a configured box
+    /// is unreachable, like the single-box client always has).
+    pub fn connect(
+        cfg: PeerConfig,
+        link: LinkModel,
+        seed: u64,
+        min_hit_tokens: usize,
+    ) -> Result<Peer> {
+        let conn = KvClient::connect(&cfg.addr)
+            .with_context(|| format!("cache box at {}", cfg.addr))?;
+        let mut catalog = LocalCatalog::new();
+        catalog.min_hit_tokens = min_hit_tokens;
+        Ok(Peer {
+            link: link.clone(),
+            conn: Some(conn),
+            shaper: Shaper::new(link, seed),
+            catalog: Arc::new(Mutex::new(catalog)),
+            sync: None,
+            ledger: PeerLedger { addr: cfg.addr.clone(), ..Default::default() },
+            cfg,
+        })
+    }
+
+    /// Start this peer's background catalog-sync loop (own connection, so
+    /// it never contends with the request-path connection).
+    pub fn spawn_sync(&mut self, interval: Duration) -> Result<()> {
+        if self.sync.is_none() {
+            self.sync = Some(CatalogSync::spawn(
+                self.cfg.addr.clone(),
+                Arc::clone(&self.catalog),
+                interval,
+            )?);
+        }
+        Ok(())
+    }
+
+    pub fn stop_sync(&mut self) {
+        if let Some(s) = self.sync.take() {
+            s.stop();
+        }
+    }
+
+    /// Completed background sync rounds against this peer.
+    pub fn sync_rounds(&self) -> u64 {
+        self.sync
+            .as_ref()
+            .map_or(0, |s| s.rounds.load(Ordering::SeqCst))
+    }
+
+    /// The pooled request-path connection plus this peer's shaper, split as
+    /// disjoint borrows so a caller can shape a transfer on the very
+    /// connection it drives.  Redials once if the previous connection was
+    /// torn down by an error — every operation (downloads, uploads, manual
+    /// syncs) reuses this one socket instead of dialing per call.
+    pub fn conn_parts(&mut self) -> Option<(&mut KvClient, &mut Shaper)> {
+        if self.conn.is_none() {
+            self.conn = KvClient::connect(&self.cfg.addr).ok();
+        }
+        match &mut self.conn {
+            Some(c) => Some((c, &mut self.shaper)),
+            None => None,
+        }
+    }
+
+    /// Tear the pooled connection down after an I/O error; the next
+    /// [`Peer::conn_parts`] call redials.
+    pub fn mark_dead_conn(&mut self) {
+        self.conn = None;
+    }
+
+    /// Whether the pooled connection is currently up (a dead box shows up
+    /// here after its first failed operation).
+    pub fn is_connected(&self) -> bool {
+        self.conn.is_some()
+    }
+}
+
+/// Result of a successful fabric range fetch.
+pub struct FabricFetch {
+    pub state: KvState,
+    /// Payload bytes moved over all participating links (head + chunks).
+    pub wire: usize,
+    /// Authoritative compression flag from the entry's own header.
+    pub compressed: bool,
+    /// The entry's full chunk index (future `SPLICE` base metadata).
+    pub entries: Vec<ChunkEntry>,
+    /// Caller id of the peer that served the head — the natural `SPLICE`
+    /// base peer, since it certainly holds the full entry.
+    pub head_peer: usize,
+    /// Re-plan rounds the fetch needed after share failures.
+    pub re_plans: u64,
+    /// Shares (including head attempts) that failed along the way.
+    pub share_failures: u64,
+    /// Whether more than one peer actually served chunks.
+    pub multi_source: bool,
+}
+
+/// Validate a fetched head and build the streaming assembler from it: the
+/// head must be exactly the promised length, parse + verify
+/// ([`StateAssembler::new`]: identity, index crc) and declare the chunk
+/// size the alias promised — anything else is a stale or short entry and
+/// the caller falls back.  Shared by every head-acquisition path so a
+/// future validation fix cannot land in one and miss the others.
+pub fn checked_assembler(
+    head: &[u8],
+    head_len: usize,
+    ct: usize,
+    m: usize,
+    hash: &str,
+    dims: (usize, usize, usize, usize),
+) -> Option<StateAssembler> {
+    if head.len() != head_len {
+        return None; // entry shorter than the alias promised
+    }
+    let asm = match StateAssembler::new(head, m, hash, dims) {
+        Ok(a) => a,
+        Err(e) => {
+            log_debug!("fabric", "range head rejected: {e}");
+            return None;
+        }
+    };
+    if asm.chunk_tokens() != ct {
+        return None; // stale geometry: re-written with another chunk size
+    }
+    Some(asm)
+}
+
+/// Pull the outstanding chunk replies off a streamed batch, shaping each
+/// arrival and feeding it straight into the assembler — the
+/// wire-overlapped decode loop for a single in-order source.  `false` on
+/// any missing/short/invalid reply (the caller drains the stream and falls
+/// back).
+pub fn consume_chunk_stream(
+    replies: &mut StreamingReplies<'_>,
+    sess: &mut StreamSession<'_>,
+    asm: &mut StateAssembler,
+) -> bool {
+    for c in asm.fed_chunks()..asm.expected_chunks() {
+        let bytes = match replies.next_reply() {
+            Ok(Some(Value::Bulk(b))) => b,
+            _ => return false, // evicted mid-stream / error reply / dead conn
+        };
+        sess.arrived(bytes.len());
+        if let Err(e) = asm.feed_chunk(&bytes) {
+            log_debug!("fabric", "streamed chunk {c} rejected: {e}");
+            return false;
+        }
+    }
+    true
+}
+
+/// Outcome of one head-acquisition attempt against one peer.
+enum HeadOutcome {
+    /// Single-claimer fast path: the `GETCHUNKS` stream already carried
+    /// every matched chunk — assembly is complete.
+    Done { asm: StateAssembler, wire: usize },
+    /// Multi-claimer path: head verified, chunks still to fetch.
+    Head { asm: StateAssembler, wire: usize },
+    /// The key is authoritatively absent on this peer (evicted / FP).
+    Absent,
+    /// The entry is unusable via the range path (stale geometry, short or
+    /// corrupt head) — fall back to a full-blob download.
+    Reject,
+    /// Connection-level failure: mark the peer dead and try the next one.
+    PeerDown,
+    /// The peer does not speak `GETCHUNKS` (or the entry is not chunked):
+    /// retry via the byte-oriented GETRANGE compatibility path.
+    Unsupported,
+}
+
+/// Head acquisition over server-push `GETCHUNKS`: one request returns the
+/// head — and, with a single claimer, every matched chunk behind it in the
+/// same streamed reply, which removes the deflated path's old extra head
+/// round trip entirely.
+#[allow(clippy::too_many_arguments)]
+fn acquire_head_push(
+    peer: &mut Peer,
+    target: &[u8],
+    head_len: usize,
+    ct: usize,
+    m: usize,
+    k: usize,
+    hash: &str,
+    dims: (usize, usize, usize, usize),
+    single: bool,
+) -> HeadOutcome {
+    let Some((conn, shaper)) = peer.conn_parts() else {
+        return HeadOutcome::PeerDown;
+    };
+    let want_rows = if single { m } else { 0 };
+    let mut stream = match conn.getchunks_stream(target, want_rows) {
+        Ok(ChunksReply::Stream(s)) => s,
+        Ok(ChunksReply::Terminal(Value::Nil)) => return HeadOutcome::Absent,
+        Ok(ChunksReply::Terminal(Value::Error(_))) => return HeadOutcome::Unsupported,
+        Ok(ChunksReply::Terminal(_)) => return HeadOutcome::Reject,
+        Err(e) => {
+            log_debug!("fabric", "GETCHUNKS failed: {e}");
+            return HeadOutcome::PeerDown;
+        }
+    };
+    let expected = if single { 1 + k } else { 1 };
+    if stream.remaining() != expected {
+        // stale geometry: the entry was re-written with another chunk size
+        let _ = stream.drain();
+        return HeadOutcome::Reject;
+    }
+    let mut sess = shaper.shaped_stream();
+    let head = match stream.next_reply() {
+        Ok(Some(Value::Bulk(b))) => b,
+        Ok(_) => {
+            let _ = stream.drain();
+            return HeadOutcome::Reject;
+        }
+        Err(_) => return HeadOutcome::PeerDown,
+    };
+    sess.arrived(head.len());
+    let Some(mut asm) = checked_assembler(&head, head_len, ct, m, hash, dims) else {
+        let _ = stream.drain();
+        return HeadOutcome::Reject;
+    };
+    if !single {
+        let wire = sess.bytes();
+        sess.finish();
+        return HeadOutcome::Head { asm, wire };
+    }
+    if !consume_chunk_stream(&mut stream, &mut sess, &mut asm) {
+        let _ = stream.drain();
+        return HeadOutcome::Reject;
+    }
+    let wire = sess.bytes();
+    sess.finish();
+    HeadOutcome::Done { asm, wire }
+}
+
+/// Head acquisition over plain byte ranges — the compatibility path for
+/// boxes (or entries) that cannot serve `GETCHUNKS`.  With a single
+/// claimer this is exactly the pre-push pipeline: raw bodies ride one
+/// pipelined round trip (chunk spans are layout arithmetic), deflated
+/// bodies pay the head round trip first.
+#[allow(clippy::too_many_arguments)]
+fn acquire_head_getrange(
+    peer: &mut Peer,
+    target: &[u8],
+    total_rows: usize,
+    head_len: usize,
+    ct: usize,
+    m: usize,
+    k: usize,
+    hash: &str,
+    dims: (usize, usize, usize, usize),
+    compressed: bool,
+    single: bool,
+) -> HeadOutcome {
+    let (l, _, kh, d) = dims;
+    let lo = BlobLayout::new(hash, l, kh, d).with_chunk_tokens(ct);
+    let stride = lo.token_stride();
+    let Some((conn, shaper)) = peer.conn_parts() else {
+        return HeadOutcome::PeerDown;
+    };
+
+    if single && !compressed {
+        // raw chunk spans are pure layout arithmetic: head + one GETRANGE
+        // per chunk in one pipelined write, consumed as a stream
+        let mut reqs = Vec::with_capacity(k + 1);
+        reqs.push(getrange_req(target, 0, head_len));
+        let mut off = head_len;
+        for c in 0..k {
+            let span = lo.chunk_rows(c, total_rows) * stride;
+            reqs.push(getrange_req(target, off, span));
+            off += span;
+        }
+        let mut replies = match conn.send_reqs(&reqs) {
+            Ok(r) => r,
+            Err(e) => {
+                log_debug!("fabric", "range batch failed: {e}");
+                return HeadOutcome::PeerDown;
+            }
+        };
+        let mut sess = shaper.shaped_stream();
+        let head = match replies.next_reply() {
+            Ok(Some(Value::Bulk(b))) => b,
+            Ok(_) => {
+                let _ = replies.drain();
+                return HeadOutcome::Reject; // evicted between alias GET and now
+            }
+            Err(_) => return HeadOutcome::PeerDown,
+        };
+        sess.arrived(head.len());
+        let Some(mut asm) = checked_assembler(&head, head_len, ct, m, hash, dims) else {
+            let _ = replies.drain();
+            return HeadOutcome::Reject;
+        };
+        if !consume_chunk_stream(&mut replies, &mut sess, &mut asm) {
+            let _ = replies.drain();
+            return HeadOutcome::Reject;
+        }
+        let wire = sess.bytes();
+        sess.finish();
+        return HeadOutcome::Done { asm, wire };
+    }
+
+    // deflated chunk lengths are data-dependent (and a multi-source head is
+    // always fetched alone): head first
+    let head = match shaper.shaped_post(|| {
+        let r = conn.getrange(target, 0, head_len);
+        let n = r
+            .as_ref()
+            .map(|o| o.as_ref().map_or(0, |b| b.len()))
+            .unwrap_or(0);
+        (r, n)
+    }) {
+        Ok(Some(b)) => b,
+        Ok(None) => return HeadOutcome::Absent,
+        Err(e) => {
+            log_debug!("fabric", "head fetch failed: {e}");
+            return HeadOutcome::PeerDown;
+        }
+    };
+    let Some(mut asm) = checked_assembler(&head, head_len, ct, m, hash, dims) else {
+        return HeadOutcome::Reject;
+    };
+    if !single {
+        return HeadOutcome::Head { asm, wire: head.len() };
+    }
+    let mut reqs = Vec::with_capacity(k);
+    let mut off = head_len;
+    for c in 0..k {
+        let clen = asm.chunk_len(c);
+        if clen == 0 {
+            return HeadOutcome::Reject; // a zero-length stored chunk is never written
+        }
+        reqs.push(getrange_req(target, off, clen));
+        off += clen;
+    }
+    let mut replies = match conn.send_reqs(&reqs) {
+        Ok(r) => r,
+        Err(e) => {
+            log_debug!("fabric", "range batch failed: {e}");
+            return HeadOutcome::PeerDown;
+        }
+    };
+    let mut sess = shaper.shaped_stream();
+    if !consume_chunk_stream(&mut replies, &mut sess, &mut asm) {
+        let _ = replies.drain();
+        return HeadOutcome::Reject;
+    }
+    let wire = head.len() + sess.bytes();
+    sess.finish();
+    HeadOutcome::Done { asm, wire }
+}
+
+/// Outcome of one worker's chunk share.
+struct ShareOutcome {
+    wire: usize,
+    /// Chunks this share actually fed into the assembler.
+    fed: usize,
+    ok: bool,
+}
+
+/// I/O half of one share: pipelined GETRANGE batch for this peer's chunk
+/// ids, each reply shaped, crc-verified and inflated *outside* the shared
+/// lock ([`ChunkVerifier`] — concurrent peers must not serialize their
+/// decode behind one mutex), then committed into the assembler under it (a
+/// bounded scatter).  Returns the outcome plus whether the connection died
+/// (the caller tears it down — the borrow rules keep `mark_dead_conn` out
+/// of reach while the reply stream lives).
+fn fetch_share_io(
+    peer: &mut Peer,
+    target: &[u8],
+    chunks: &[usize],
+    geom: &[(usize, usize)],
+    verifier: &ChunkVerifier,
+    asm: &Mutex<Option<StateAssembler>>,
+) -> (ShareOutcome, bool) {
+    let fail = ShareOutcome { wire: 0, fed: 0, ok: false };
+    let Some((conn, shaper)) = peer.conn_parts() else {
+        return (fail, true);
+    };
+    let reqs: Vec<Value> = chunks
+        .iter()
+        .map(|&c| getrange_req(target, geom[c].0, geom[c].1))
+        .collect();
+    let mut replies = match conn.send_reqs(&reqs) {
+        Ok(r) => r,
+        Err(e) => {
+            log_debug!("fabric", "share batch failed: {e}");
+            return (fail, true);
+        }
+    };
+    let mut sess = shaper.shaped_stream();
+    let mut fed = 0usize;
+    let mut ok = true;
+    let mut dead = false;
+    for &c in chunks {
+        let bytes = match replies.next_reply() {
+            Ok(Some(Value::Bulk(b))) => b,
+            Ok(_) => {
+                ok = false; // evicted / error reply mid-share
+                break;
+            }
+            Err(_) => {
+                ok = false;
+                dead = true;
+                break;
+            }
+        };
+        sess.arrived(bytes.len());
+        // CPU-heavy half outside the lock: crc + bounded inflate
+        let payload = match verifier.verify(c, &bytes) {
+            Ok(p) => p,
+            Err(e) => {
+                log_debug!("fabric", "share chunk {c} rejected: {e}");
+                ok = false;
+                break;
+            }
+        };
+        // cheap half under the lock: once-only bookkeeping + scatter
+        let committed = match asm.lock() {
+            Ok(mut guard) => match guard.as_mut() {
+                Some(a) => match a.commit_chunk(c, &payload) {
+                    Ok(()) => true,
+                    Err(e) => {
+                        log_debug!("fabric", "share chunk {c} not committed: {e}");
+                        false
+                    }
+                },
+                None => false,
+            },
+            Err(_) => false,
+        };
+        if !committed {
+            ok = false;
+            break;
+        }
+        fed += 1;
+    }
+    let wire = sess.bytes();
+    sess.finish();
+    if !ok && !dead {
+        // keep the connection frame-synced for the re-plan / fallback
+        let _ = replies.drain();
+    }
+    (ShareOutcome { wire, fed, ok }, dead)
+}
+
+/// One worker share: run the I/O, then settle the peer's ledger and
+/// connection state.
+fn fetch_share(
+    peer: &mut Peer,
+    target: &[u8],
+    chunks: Vec<usize>,
+    geom: &[(usize, usize)],
+    verifier: &ChunkVerifier,
+    asm: &Mutex<Option<StateAssembler>>,
+) -> ShareOutcome {
+    let t0 = Instant::now();
+    let (outcome, dead) = fetch_share_io(peer, target, &chunks, geom, verifier, asm);
+    if dead {
+        peer.mark_dead_conn();
+    }
+    if outcome.ok {
+        peer.ledger.fetch_shares += 1;
+    } else {
+        peer.ledger.share_failures += 1;
+    }
+    peer.ledger.bytes_down += outcome.wire as u64;
+    peer.ledger.breakdown.add(Phase::Redis, t0.elapsed());
+    outcome
+}
+
+/// Run one round of chunk shares concurrently — one scoped thread per
+/// participating peer, each driving its own pipelined reply stream into
+/// the shared assembler.  Returns (wire bytes moved, failed shares, slots
+/// that fed at least one chunk).
+fn run_shares(
+    claimers: &mut [(usize, &mut Peer)],
+    assign: &[(usize, Vec<usize>)],
+    target: &[u8],
+    geom: &[(usize, usize)],
+    verifier: &ChunkVerifier,
+    asm: &Mutex<Option<StateAssembler>>,
+) -> (usize, u64, Vec<usize>, Vec<usize>) {
+    let mut slots: Vec<Option<&mut Peer>> =
+        claimers.iter_mut().map(|(_, p)| Some(&mut **p)).collect();
+    let mut wire = 0usize;
+    let mut fails = 0u64;
+    let mut contributed = Vec::new();
+    let mut failed_slots = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (slot, chunks) in assign {
+            if chunks.is_empty() {
+                continue;
+            }
+            let Some(peer) = slots[*slot].take() else {
+                continue; // a slot assigned twice in one round is a plan bug
+            };
+            let chunks = chunks.clone();
+            handles.push((
+                *slot,
+                s.spawn(move || fetch_share(peer, target, chunks, geom, verifier, asm)),
+            ));
+        }
+        for (slot, h) in handles {
+            match h.join() {
+                Ok(o) => {
+                    wire += o.wire;
+                    if o.fed > 0 {
+                        contributed.push(slot);
+                    }
+                    if !o.ok {
+                        fails += 1;
+                        failed_slots.push(slot);
+                    }
+                }
+                Err(_) => {
+                    fails += 1;
+                    failed_slots.push(slot);
+                }
+            }
+        }
+    });
+    (wire, fails, contributed, failed_slots)
+}
+
+fn finish_fetch(
+    asm: StateAssembler,
+    wire: usize,
+    head_peer: usize,
+    multi_source: bool,
+    re_plans: u64,
+    share_failures: u64,
+) -> Option<FabricFetch> {
+    let compressed = asm.compressed();
+    let entries = asm.entries().to_vec();
+    match asm.finish() {
+        Ok(state) => Some(FabricFetch {
+            state,
+            wire,
+            compressed,
+            entries,
+            head_peer,
+            re_plans,
+            share_failures,
+            multi_source,
+        }),
+        Err(e) => {
+            log_debug!("fabric", "assembly rejected: {e}");
+            None
+        }
+    }
+}
+
+/// The fabric range download (module docs): fetch the first `m` rows of
+/// the ECS3 entry stored under `target` from the claiming peers, splitting
+/// whole chunks across them and re-planning around failures.  `claimers`
+/// pairs each peer with its caller-side id (reported back in
+/// [`FabricFetch::head_peer`]); a single claimer is simply the degenerate
+/// one-stripe plan.  `None` means the range path could not complete — the
+/// caller falls back to [`fetch_full_entry`], never to a questionable
+/// restore.
+#[allow(clippy::too_many_arguments)]
+pub fn fetch_prefix_multi(
+    claimers: &mut [(usize, &mut Peer)],
+    planner: &PeerPlanner,
+    target: &[u8],
+    total_rows: usize,
+    compressed: bool,
+    ct: usize,
+    m: usize,
+    hash: &str,
+    dims: (usize, usize, usize, usize),
+) -> Option<FabricFetch> {
+    let n = claimers.len();
+    if n == 0 {
+        return None;
+    }
+    let (l, _, kh, d) = dims;
+    let lo = BlobLayout::new(hash, l, kh, d).with_chunk_tokens(ct);
+    let head_len = lo.payload_off(total_rows);
+    let k = lo.prefix_chunks(m);
+    // one *live* claimer is a single-source fetch: the GETCHUNKS request
+    // carries every chunk in one round trip (dead-marked claimers don't
+    // force the split head+stripes shape — after a peer death the
+    // survivor keeps serving hits at full single-source speed; the head
+    // rotation below still redials them, so a recovered box re-joins)
+    let live = claimers.iter().filter(|(_, p)| p.is_connected()).count();
+    let single = live <= 1;
+    let mut share_failures = 0u64;
+
+    // -- head acquisition: rotate across claimers until one answers -------
+    let mut acquired: Option<(usize, StateAssembler, usize)> = None;
+    for slot in 0..n {
+        let t0 = Instant::now();
+        let mut out = acquire_head_push(
+            &mut *claimers[slot].1,
+            target,
+            head_len,
+            ct,
+            m,
+            k,
+            hash,
+            dims,
+            single,
+        );
+        if matches!(out, HeadOutcome::Unsupported) {
+            out = acquire_head_getrange(
+                &mut *claimers[slot].1,
+                target,
+                total_rows,
+                head_len,
+                ct,
+                m,
+                k,
+                hash,
+                dims,
+                compressed,
+                single,
+            );
+        }
+        let peer = &mut *claimers[slot].1;
+        peer.ledger.breakdown.add(Phase::Redis, t0.elapsed());
+        match out {
+            HeadOutcome::Done { asm, wire } => {
+                peer.ledger.fetch_shares += 1;
+                peer.ledger.bytes_down += wire as u64;
+                let head_peer = claimers[slot].0;
+                return finish_fetch(asm, wire, head_peer, false, 0, share_failures);
+            }
+            HeadOutcome::Head { asm, wire } => {
+                peer.ledger.bytes_down += wire as u64;
+                acquired = Some((slot, asm, wire));
+                break;
+            }
+            HeadOutcome::Absent => {
+                // evicted on this claimer (or a Bloom FP); a replicated
+                // copy on another claimer can still serve the range path
+                log_debug!(
+                    "fabric",
+                    "head peer {} lost the entry; rotating",
+                    peer.cfg.addr
+                );
+            }
+            HeadOutcome::Reject => return None, // caller: full-blob fallback
+            HeadOutcome::PeerDown | HeadOutcome::Unsupported => {
+                peer.mark_dead_conn();
+                peer.ledger.share_failures += 1;
+                share_failures += 1;
+                log_debug!(
+                    "fabric",
+                    "head peer {} down; rotating",
+                    peer.cfg.addr
+                );
+            }
+        }
+    }
+    let (head_slot, asm, head_wire) = acquired?;
+
+    // chunk geometry from the verified index: (byte offset, stored length)
+    // per chunk — identical on every peer that holds the entry, and any
+    // divergent replica is caught by the per-chunk crc check
+    let mut geom = Vec::with_capacity(k);
+    let mut off = head_len;
+    for e in asm.entries().iter().take(k) {
+        let len = e.len as usize;
+        if len == 0 {
+            return None; // a zero-length stored chunk is never written
+        }
+        geom.push((off, len));
+        off += len;
+    }
+
+    // lock-free verification geometry for the worker threads (one index
+    // snapshot per fetch, not per chunk)
+    let verifier = asm.verifier();
+    let asm_cell = Mutex::new(Some(asm));
+    let mut wire_total = head_wire;
+    let mut re_plans = 0u64;
+    // slots that actually fed chunks — `multi_source` reports what
+    // happened, not what round 0 planned
+    let mut sources: Vec<usize> = Vec::new();
+    // slots that failed a share this fetch: a copy that came back Nil,
+    // short or corrupt will do so again — re-planning onto it only burns
+    // the bounded rounds, so survivors exclude them even while connected
+    let mut bad_slots: Vec<usize> = Vec::new();
+
+    // round 0: goodput-weighted contiguous stripes, head peer first.
+    // Claimers already known dead (alias-GET or head-rotation casualties)
+    // get no stripe — a share planned onto them is a guaranteed failure
+    // that would burn one of the bounded re-plan rounds for nothing.
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    order.push(head_slot);
+    order.extend((0..n).filter(|&s| s != head_slot && claimers[s].1.is_connected()));
+    let weights: Vec<f64> = order
+        .iter()
+        .map(|&s| claimers[s].1.link.goodput_bps)
+        .collect();
+    let stripes = planner.split_chunks(k, &weights);
+    let mut assign: Vec<(usize, Vec<usize>)> = order
+        .iter()
+        .zip(stripes)
+        .map(|(&s, r)| (s, r.collect()))
+        .collect();
+
+    let mut rounds = 0usize;
+    loop {
+        let (wire, fails, contributed, failed_slots) =
+            run_shares(claimers, &assign, target, &geom, &verifier, &asm_cell);
+        wire_total += wire;
+        share_failures += fails;
+        for s in contributed {
+            if !sources.contains(&s) {
+                sources.push(s);
+            }
+        }
+        for s in failed_slots {
+            if !bad_slots.contains(&s) {
+                bad_slots.push(s);
+            }
+        }
+        let unfed = match asm_cell.lock() {
+            Ok(guard) => match guard.as_ref() {
+                Some(a) => a.unfed_chunks(),
+                None => return None,
+            },
+            Err(_) => return None, // a worker panicked: never restore this
+        };
+        if unfed.is_empty() {
+            break;
+        }
+        if rounds >= planner.max_replan_rounds {
+            log_debug!("fabric", "re-plan budget exhausted, {} chunks orphaned", unfed.len());
+            return None;
+        }
+        rounds += 1;
+        let live: Vec<usize> = (0..n)
+            .filter(|&s| claimers[s].1.is_connected() && !bad_slots.contains(&s))
+            .collect();
+        if live.is_empty() {
+            return None;
+        }
+        assign = planner.reassign(&unfed, &live);
+        if assign.is_empty() {
+            return None;
+        }
+        re_plans += 1;
+        log_debug!(
+            "fabric",
+            "re-plan round {rounds}: {} orphaned chunks over {} survivors",
+            unfed.len(),
+            live.len()
+        );
+    }
+
+    let asm = asm_cell.into_inner().unwrap_or(None)?;
+    let head_peer = claimers[head_slot].0;
+    finish_fetch(
+        asm,
+        wire_total,
+        head_peer,
+        sources.len() > 1,
+        re_plans,
+        share_failures,
+    )
+}
+
+/// `GET` + verify + truncate an entire stored entry — the range path's
+/// fallback and the legacy-alias path.  Returns the state truncated to `m`
+/// rows, the wire bytes moved and the raw blob (for splice-base metadata).
+pub fn fetch_full_entry(
+    peer: &mut Peer,
+    target: &[u8],
+    m: usize,
+    hash: &str,
+    dims: (usize, usize, usize, usize),
+) -> Option<(KvState, usize, SharedBytes)> {
+    let t0 = Instant::now();
+    let (fetched, dead) = {
+        let Some((conn, shaper)) = peer.conn_parts() else {
+            return None;
+        };
+        match shaper.shaped_post(|| {
+            let r = conn.get(target);
+            let n = r
+                .as_ref()
+                .map(|o| o.as_ref().map_or(0, |b| b.len()))
+                .unwrap_or(0);
+            (r, n)
+        }) {
+            Ok(opt) => (opt, false),
+            Err(e) => {
+                log_debug!("fabric", "full download failed: {e}");
+                (None, true)
+            }
+        }
+    };
+    if dead {
+        peer.mark_dead_conn();
+    }
+    let full = fetched?;
+    peer.ledger.bytes_down += full.len() as u64;
+    peer.ledger.breakdown.add(Phase::Redis, t0.elapsed());
+    match KvState::restore(&full, hash, dims) {
+        Ok(mut state) if state.n_tokens >= m => {
+            state.n_tokens = m;
+            let wire = full.len();
+            Some((state, wire, full))
+        }
+        Ok(_) => None,
+        Err(e) => {
+            log_debug!("fabric", "restore rejected: {e}");
+            None
+        }
+    }
+}

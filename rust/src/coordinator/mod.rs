@@ -1,17 +1,26 @@
 //! The distributed prompt-caching coordinator — the paper's system
-//! contribution (§3), assembled from the substrate modules:
+//! contribution (§3), generalised from one middle node to an N-box **peer
+//! fabric**, assembled from the substrate modules:
 //!
-//! * [`cachebox`] — the middle node of Figure 1: kvstore server + master
-//!   catalog in one process;
+//! * [`cachebox`] — one middle node of Figure 1: kvstore server + master
+//!   catalog in one process; a fabric runs N of them;
+//! * [`fabric`] — the peer layer: pooled per-peer connections, peer-tagged
+//!   catalogs, and the multi-source chunk fetch that stripes a matched
+//!   range across every claiming box and re-plans around mid-stream peer
+//!   deaths;
 //! * [`client`] — [`client::EdgeClient`], the steps 1–4 inference flow with
 //!   partial matching, false-positive fallback and post-response uploads;
 //! * [`sync`] — the asynchronous local-catalog synchronization loop
-//!   (Figure 2, green arrow);
-//! * [`policy`] — fetch policies: the paper's always-fetch-on-hit plus a
-//!   break-even extension (§5.3 analysis turned into a runtime policy).
+//!   (Figure 2, green arrow), one per peer, with capped backoff for dead
+//!   peers;
+//! * [`policy`] — fetch + placement policies: the paper's
+//!   always-fetch-on-hit plus a break-even extension (§5.3 analysis turned
+//!   into a runtime policy), and the fabric's chunk-split / re-plan /
+//!   power-of-two-choices placement planner.
 
 pub mod cachebox;
 pub mod client;
+pub mod fabric;
 pub mod policy;
 pub mod sync;
 
@@ -19,5 +28,6 @@ pub use cachebox::CacheBox;
 pub use client::{
     adaptive_chunk_tokens, EdgeClient, EdgeClientConfig, HitCase, QueryResult,
 };
-pub use policy::FetchPolicy;
+pub use fabric::{Peer, PeerConfig};
+pub use policy::{FetchPolicy, PeerPlanner};
 pub use sync::CatalogSync;

@@ -1,12 +1,24 @@
-//! Fetch policies: should a catalog hit trigger a state download?
+//! Fetch and placement policies for the peer fabric.
 //!
-//! The paper always fetches on a (probable) hit and *shows* in Table 2 that
-//! this loses on the high-end device (Redis 2.89 s vs P-decode 2.69 s).  Its
-//! §5.3 break-even discussion is turned here into an explicit runtime
-//! policy — [`FetchPolicy::BreakEven`] — evaluated in the ablation bench.
+//! * [`FetchPolicy`] — should a catalog hit trigger a state download?  The
+//!   paper always fetches on a (probable) hit and *shows* in Table 2 that
+//!   this loses on the high-end device (Redis 2.89 s vs P-decode 2.69 s).
+//!   Its §5.3 break-even discussion is turned here into an explicit runtime
+//!   policy — [`FetchPolicy::BreakEven`] — evaluated in the ablation bench.
+//! * [`PeerPlanner`] — with N cache boxes instead of one, three decisions
+//!   appear that a single-box system never had to make: how to *split* a
+//!   matched chunk set across the peers that claim it (goodput-weighted
+//!   contiguous stripes, so aggregate download bandwidth scales with peer
+//!   count), how to *re-plan* the orphaned chunks when a peer dies
+//!   mid-fetch (round-robin over survivors), and where to *place* an upload
+//!   (power-of-two-choices on reported `used_bytes` — near-balanced load
+//!   for two probes instead of N).
+
+use std::ops::Range;
 
 use crate::devicemodel::DeviceProfile;
 use crate::netsim::LinkModel;
+use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FetchPolicy {
@@ -56,9 +68,179 @@ impl FetchPolicy {
     }
 }
 
+/// Chunk-split, failure re-planning and upload placement for the N-peer
+/// cache fabric (see module docs).  Stateless apart from its knobs, so the
+/// client and the benches share one implementation.
+#[derive(Debug, Clone, Copy)]
+pub struct PeerPlanner {
+    /// How many re-plan rounds a multi-source fetch may attempt after
+    /// share failures before giving up to the full-blob fallback.
+    pub max_replan_rounds: usize,
+}
+
+impl Default for PeerPlanner {
+    fn default() -> Self {
+        PeerPlanner { max_replan_rounds: 2 }
+    }
+}
+
+impl PeerPlanner {
+    /// Split `k` chunks into contiguous stripes, one per participant,
+    /// proportional to `weights` (link goodputs).  Stripe order follows the
+    /// participant order — the head peer is participant 0 and always owns
+    /// the leading stripe.  Non-finite or non-positive weights (loopback
+    /// links model infinite goodput) degrade the whole split to equal
+    /// shares.  Stripes are contiguous so each peer's byte offsets are one
+    /// prefix-sum walk of the chunk index, and they always sum to `k`.
+    pub fn split_chunks(&self, k: usize, weights: &[f64]) -> Vec<Range<usize>> {
+        let n = weights.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let equal = weights.iter().any(|w| !w.is_finite() || *w <= 0.0);
+        let total: f64 = if equal {
+            n as f64
+        } else {
+            weights.iter().sum()
+        };
+        let mut out = Vec::with_capacity(n);
+        let mut cum = 0.0;
+        let mut prev = 0usize;
+        for (i, w) in weights.iter().enumerate() {
+            cum += if equal { 1.0 } else { *w };
+            let b = if i + 1 == n {
+                k
+            } else {
+                (((k as f64) * cum / total).round() as usize).clamp(prev, k)
+            };
+            out.push(prev..b);
+            prev = b;
+        }
+        out
+    }
+
+    /// Re-plan orphaned chunks onto the surviving peers, round-robin.
+    /// `unfed` are chunk ids a failed share left behind; `live` are the
+    /// peer slots still worth asking.  Returns one `(peer, chunks)` share
+    /// per survivor that got work.
+    pub fn reassign(&self, unfed: &[usize], live: &[usize]) -> Vec<(usize, Vec<usize>)> {
+        if live.is_empty() || unfed.is_empty() {
+            return Vec::new();
+        }
+        let mut shares: Vec<(usize, Vec<usize>)> =
+            live.iter().map(|&p| (p, Vec::new())).collect();
+        for (i, &c) in unfed.iter().enumerate() {
+            shares[i % live.len()].1.push(c);
+        }
+        shares.retain(|(_, cs)| !cs.is_empty());
+        shares
+    }
+
+    /// Upload placement: power-of-two-choices over `candidates`.  Two
+    /// distinct peers are sampled and the one whose probed `used_bytes` is
+    /// smaller wins — the classic two-choices result gives near-balanced
+    /// load without probing the whole fleet.  `probe` returning `u64::MAX`
+    /// marks a peer unreachable.  Degenerates to the single candidate (no
+    /// probe round trips) when only one peer exists.
+    pub fn place(
+        &self,
+        rng: &mut Rng,
+        candidates: &[usize],
+        mut probe: impl FnMut(usize) -> u64,
+    ) -> Option<usize> {
+        match candidates.len() {
+            0 => None,
+            1 => Some(candidates[0]),
+            n => {
+                let a = rng.below(n as u64) as usize;
+                let mut b = rng.below((n - 1) as u64) as usize;
+                if b >= a {
+                    b += 1;
+                }
+                let (pa, pb) = (candidates[a], candidates[b]);
+                let (ua, ub) = (probe(pa), probe(pb));
+                if ua == u64::MAX && ub == u64::MAX {
+                    return None;
+                }
+                Some(if ua <= ub { pa } else { pb })
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn split_chunks_contiguous_weighted_and_complete() {
+        let p = PeerPlanner::default();
+        // equal weights: near-even contiguous stripes covering [0, k)
+        let s = p.split_chunks(10, &[1.0, 1.0]);
+        assert_eq!(s, vec![0..5, 5..10]);
+        // weighted: the faster link takes the larger stripe
+        let s = p.split_chunks(12, &[3.0, 1.0]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].start, 0);
+        assert_eq!(s[0].end, s[1].start, "stripes are contiguous");
+        assert_eq!(s[1].end, 12, "stripes cover every chunk");
+        assert!(s[0].len() > s[1].len(), "weight 3 beats weight 1: {s:?}");
+        // infinite goodput (loopback) degrades to equal shares
+        let s = p.split_chunks(8, &[f64::INFINITY, 1.0]);
+        assert_eq!(s.iter().map(|r| r.len()).collect::<Vec<_>>(), vec![4, 4]);
+        // fewer chunks than peers: trailing peers get empty stripes
+        let s = p.split_chunks(1, &[1.0, 1.0, 1.0]);
+        assert_eq!(s.iter().map(|r| r.len()).sum::<usize>(), 1);
+        // degenerate single-peer case: one stripe owning everything
+        assert_eq!(p.split_chunks(7, &[1.0]), vec![0..7]);
+        assert!(p.split_chunks(7, &[]).is_empty());
+    }
+
+    #[test]
+    fn reassign_covers_every_orphan_over_survivors() {
+        let p = PeerPlanner::default();
+        let shares = p.reassign(&[2, 5, 6, 9], &[0, 3]);
+        let mut got: Vec<usize> = shares.iter().flat_map(|(_, cs)| cs.clone()).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![2, 5, 6, 9], "every orphan reassigned exactly once");
+        for (peer, _) in &shares {
+            assert!([0, 3].contains(peer));
+        }
+        // single survivor takes everything; no survivors -> nothing
+        let shares = p.reassign(&[1, 2], &[7]);
+        assert_eq!(shares, vec![(7, vec![1, 2])]);
+        assert!(p.reassign(&[1], &[]).is_empty());
+        assert!(p.reassign(&[], &[0]).is_empty());
+    }
+
+    #[test]
+    fn place_prefers_less_loaded_of_two_choices() {
+        let p = PeerPlanner::default();
+        let mut rng = Rng::new(7);
+        // loads: peer 2 is drastically lighter; over many draws it must win
+        // whenever sampled, and a two-choice winner is never the heaviest
+        let loads = [900u64, 800, 10];
+        let mut wins = [0usize; 3];
+        for _ in 0..200 {
+            let w = p.place(&mut rng, &[0, 1, 2], |i| loads[i]).unwrap();
+            wins[w] += 1;
+        }
+        assert!(wins[2] > wins[0] && wins[2] > wins[1], "{wins:?}");
+        assert!(wins[0] < 40, "heaviest peer must rarely win: {wins:?}");
+        // single candidate needs no probe; empty set places nowhere
+        let mut probes = 0;
+        assert_eq!(
+            p.place(&mut rng, &[4], |_| {
+                probes += 1;
+                0
+            }),
+            Some(4)
+        );
+        assert_eq!(probes, 0, "single-peer placement must not probe");
+        assert_eq!(p.place(&mut rng, &[], |_| 0), None);
+        // both probes dead -> no placement
+        assert_eq!(p.place(&mut rng, &[0, 1], |_| u64::MAX), None);
+    }
 
     #[test]
     fn always_always_fetches() {

@@ -13,18 +13,33 @@ use anyhow::Result;
 use crate::catalog::LocalCatalog;
 use crate::kvstore::KvClient;
 use crate::log_debug;
+use crate::util::rng::Rng;
+
+/// Ceiling for the failure backoff: a dead peer is re-probed at least this
+/// often, so recovery is never more than a few seconds away, but the sync
+/// thread stops hammering a socket that keeps refusing.
+const MAX_BACKOFF: Duration = Duration::from_secs(5);
 
 pub struct CatalogSync {
     stop: Arc<AtomicBool>,
     thread: Option<std::thread::JoinHandle<()>>,
     /// Completed sync rounds (diagnostics / test synchronisation).
     pub rounds: Arc<AtomicU64>,
+    /// Connect/sync attempts, successful or not — under backoff this grows
+    /// much slower than `elapsed / interval` while a peer is down.
+    pub attempts: Arc<AtomicU64>,
 }
 
 impl CatalogSync {
     /// Spawn the sync loop against `server_addr`, merging into `catalog`
     /// every `interval`.  The loop opens its own connection so it never
     /// contends with the client's request-path connection.
+    ///
+    /// A peer that keeps failing (dead box, partitioned link) does not spin
+    /// the thread at the full interval rate: each consecutive failure
+    /// doubles the sleep, capped at [`MAX_BACKOFF`], with ±25 % jitter so a
+    /// fleet of clients whose peer died together does not reconnect as a
+    /// thundering herd.  The first success snaps back to `interval`.
     pub fn spawn(
         server_addr: String,
         catalog: Arc<Mutex<LocalCatalog>>,
@@ -32,26 +47,57 @@ impl CatalogSync {
     ) -> Result<CatalogSync> {
         let stop = Arc::new(AtomicBool::new(false));
         let rounds = Arc::new(AtomicU64::new(0));
+        let attempts = Arc::new(AtomicU64::new(0));
         let stop2 = Arc::clone(&stop);
         let rounds2 = Arc::clone(&rounds);
+        let attempts2 = Arc::clone(&attempts);
+        // jitter seeded from the peer address so each peer's loop drifts
+        // differently but deterministically
+        let mut jitter_rng = Rng::new(
+            server_addr.bytes().fold(0x5CA1AB1Eu64, |h, b| {
+                h.wrapping_mul(31).wrapping_add(b as u64)
+            }),
+        );
         let thread = std::thread::Builder::new()
             .name("catalog-sync".into())
             .spawn(move || {
                 let mut conn: Option<KvClient> = None;
+                let mut delay = interval;
                 while !stop2.load(Ordering::SeqCst) {
+                    attempts2.fetch_add(1, Ordering::SeqCst);
                     if conn.is_none() {
                         conn = KvClient::connect(&server_addr).ok();
                     }
-                    if let Some(c) = conn.as_mut() {
-                        if let Err(e) = Self::sync_once(c, &catalog) {
-                            log_debug!("catalog-sync", "round failed: {e}; reconnecting");
-                            conn = None;
-                        } else {
-                            rounds2.fetch_add(1, Ordering::SeqCst);
-                        }
+                    let ok = match conn.as_mut() {
+                        Some(c) => match Self::sync_once(c, &catalog) {
+                            Ok(()) => true,
+                            Err(e) => {
+                                log_debug!(
+                                    "catalog-sync",
+                                    "round failed: {e}; reconnecting"
+                                );
+                                conn = None;
+                                false
+                            }
+                        },
+                        None => false,
+                    };
+                    if ok {
+                        rounds2.fetch_add(1, Ordering::SeqCst);
+                        delay = interval;
+                    } else {
+                        // exponential backoff with ±25 % jitter, the
+                        // jittered result itself capped so MAX_BACKOFF is
+                        // a true re-probe ceiling
+                        let doubled = delay.saturating_mul(2).min(MAX_BACKOFF);
+                        let jitter = 0.75 + 0.5 * jitter_rng.f64();
+                        delay = doubled
+                            .mul_f64(jitter)
+                            .min(MAX_BACKOFF)
+                            .max(interval);
                     }
                     // sleep in small steps so shutdown is prompt
-                    let mut left = interval;
+                    let mut left = delay;
                     while !left.is_zero() && !stop2.load(Ordering::SeqCst) {
                         let step = left.min(Duration::from_millis(20));
                         std::thread::sleep(step);
@@ -59,7 +105,7 @@ impl CatalogSync {
                     }
                 }
             })?;
-        Ok(CatalogSync { stop, thread: Some(thread), rounds })
+        Ok(CatalogSync { stop, thread: Some(thread), rounds, attempts })
     }
 
     /// One pull-merge round (also used synchronously in tests).
@@ -185,5 +231,64 @@ mod tests {
         std::thread::sleep(Duration::from_millis(50));
         assert_eq!(catalog.lock().unwrap().synced_version, 0);
         sync.stop();
+    }
+
+    #[test]
+    fn dead_peer_backoff_caps_attempt_rate() {
+        use std::sync::atomic::Ordering;
+        // a 1 ms interval against a dead port: without backoff the loop
+        // would attempt hundreds of connects in 250 ms (loopback refusal is
+        // immediate); with capped exponential backoff the delays double
+        // (2, 4, 8, ... ms) so only a handful of attempts fit
+        let catalog = Arc::new(Mutex::new(LocalCatalog::new()));
+        let sync = CatalogSync::spawn(
+            "127.0.0.1:1".into(),
+            Arc::clone(&catalog),
+            Duration::from_millis(1),
+        )
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(250));
+        let attempts = sync.attempts.load(Ordering::SeqCst);
+        assert!(attempts >= 2, "loop must keep retrying: {attempts}");
+        assert!(
+            attempts <= 20,
+            "backoff must slow the retry spin: {attempts} attempts in 250 ms"
+        );
+        assert_eq!(sync.rounds.load(Ordering::SeqCst), 0);
+        sync.stop();
+    }
+
+    #[test]
+    fn backoff_resets_after_recovery() {
+        use std::sync::atomic::Ordering;
+        // against a live box the loop syncs at the plain interval: rounds
+        // accumulate and attempts track them 1:1 (no failures, no backoff)
+        let cb = CacheBox::start_local().unwrap();
+        let catalog = Arc::new(Mutex::new(LocalCatalog::new()));
+        let sync = CatalogSync::spawn(
+            cb.addr(),
+            Arc::clone(&catalog),
+            Duration::from_millis(5),
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        while sync.rounds.load(Ordering::SeqCst) < 5 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "healthy peer must sync at interval rate"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // compare only after the loop has fully stopped — mid-iteration the
+        // attempt counter legitimately leads the round counter by one
+        let rounds = Arc::clone(&sync.rounds);
+        let attempts = Arc::clone(&sync.attempts);
+        sync.stop();
+        assert_eq!(
+            rounds.load(Ordering::SeqCst),
+            attempts.load(Ordering::SeqCst),
+            "healthy rounds must not burn backoff attempts"
+        );
+        cb.shutdown();
     }
 }

@@ -23,13 +23,13 @@
 //! caller's blob, so no payload byte is copied between the serialized state
 //! and the socket write.
 
-use std::io::Write;
+use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::resp::{read_value, request, request_shared, Decoder, Value};
+use super::resp::{read_value, request, request_shared, Decoder, Frame, Value};
 use crate::util::bytes::SharedBytes;
 
 pub struct KvClient {
@@ -208,6 +208,50 @@ impl KvClient {
         }
     }
 
+    /// `GETCHUNKS key m` — the server-push range fetch: the box parses its
+    /// own copy of the entry and replies with a multi-bulk of `1 + k`
+    /// elements (the ECS3 head, then each whole chunk covering an `m`-row
+    /// prefix; `m = 0` asks for the head alone).  The reply comes back as a
+    /// [`StreamingReplies`]-style handle over the array *elements*, so the
+    /// caller decodes chunk `i` while chunk `i+1` is still on the wire —
+    /// one round trip, no client-side offset math.  Terminal replies
+    /// (`Nil` = key absent, `Error` = not a chunked entry / old server)
+    /// are handed back whole for the caller to dispatch on.
+    pub fn getchunks_stream(&mut self, key: &[u8], m: usize) -> Result<ChunksReply<'_>> {
+        let m_s = m.to_string();
+        let req = request(&[b"GETCHUNKS", key, m_s.as_bytes()]);
+        let mut buf = Vec::with_capacity(64);
+        req.encode_into(&mut buf);
+        self.stream.write_all(&buf)?;
+        loop {
+            match self.dec.next_frame()? {
+                Some(Frame::Array(n)) => {
+                    return Ok(ChunksReply::Stream(StreamingReplies {
+                        remaining: n,
+                        client: self,
+                    }));
+                }
+                Some(Frame::Value(v)) => return Ok(ChunksReply::Terminal(v)),
+                None => {
+                    let mut chunk = [0u8; 16 * 1024];
+                    let n = self.stream.read(&mut chunk)?;
+                    if n == 0 {
+                        bail!("connection closed mid-frame");
+                    }
+                    self.dec.feed(&chunk[..n]);
+                }
+            }
+        }
+    }
+
+    /// Keyspace bytes the box currently holds (`INFO` `used_bytes:` field) —
+    /// the load signal the upload placement policy balances on.
+    pub fn used_bytes(&mut self) -> Result<usize> {
+        let info = self.info()?;
+        parse_info_used_bytes(&info)
+            .ok_or_else(|| anyhow!("INFO reply lacks a parseable used_bytes"))
+    }
+
     pub fn del(&mut self, key: &[u8]) -> Result<bool> {
         Ok(self.command(&[b"DEL", key])?.as_int() == Some(1))
     }
@@ -276,9 +320,32 @@ impl KvClient {
     }
 }
 
+/// Extract the `used_bytes:` field from an `INFO` reply — the one place
+/// the field name/format is interpreted, shared by [`KvClient::used_bytes`]
+/// and callers that shape the `INFO` exchange themselves (the upload
+/// placement probe).
+pub fn parse_info_used_bytes(info: &str) -> Option<usize> {
+    info.lines()
+        .find_map(|l| l.strip_prefix("used_bytes:"))
+        .and_then(|v| v.trim().parse::<usize>().ok())
+}
+
+/// Reply of a [`KvClient::getchunks_stream`] call.
+pub enum ChunksReply<'a> {
+    /// The multi-bulk head+chunks stream (`remaining() == 1 + k` elements).
+    /// Consume every element or [`StreamingReplies::drain`] before issuing
+    /// another command.
+    Stream(StreamingReplies<'a>),
+    /// A terminal single-value reply: `Nil` (key absent) or `Error` (entry
+    /// is not a chunked state blob / server predates `GETCHUNKS`).
+    Terminal(Value),
+}
+
 /// In-flight replies of one pipelined batch ([`KvClient::send_reqs`]).
 /// Yields replies in request order, decoding each from the socket only when
-/// asked — the batch is never buffered wholesale.
+/// asked — the batch is never buffered wholesale.  Also serves as the
+/// element stream of one `GETCHUNKS` multi-bulk reply, where each "reply"
+/// is the next array element.
 pub struct StreamingReplies<'a> {
     remaining: usize,
     client: &'a mut KvClient,
@@ -445,6 +512,66 @@ mod tests {
                 Value::bulk(&b"6789"[..]),
             ]
         );
+    }
+
+    #[test]
+    fn getchunks_streams_head_and_chunks_in_one_round_trip() {
+        use crate::model::state::{BlobLayout, Compression, KvState};
+        let (_h, mut c) = spawn();
+        let (l, s, kh, d) = (2usize, 16usize, 1usize, 8usize);
+        let mut st = KvState::zeroed(l, s, kh, d);
+        st.n_tokens = 10;
+        for (i, x) in st.v.iter_mut().enumerate() {
+            *x = (i % 97) as f32;
+        }
+        let ct = 4;
+        let blob = st.serialize_prefix_opts(10, "h", Compression::None, ct);
+        let lo = BlobLayout::new("h", l, kh, d).with_chunk_tokens(ct);
+        c.set(b"state:x", &blob).unwrap();
+
+        let mut stream = match c.getchunks_stream(b"state:x", 6).unwrap() {
+            ChunksReply::Stream(s) => s,
+            ChunksReply::Terminal(v) => panic!("expected stream, got {v:?}"),
+        };
+        assert_eq!(stream.remaining(), 1 + 2, "head + 2 whole chunks for 6 rows");
+        let head = stream.next_reply().unwrap().unwrap();
+        assert_eq!(head.as_bulk().unwrap(), &blob[..lo.payload_off(10)]);
+        // abort mid-stream: drain re-syncs the connection
+        stream.drain().unwrap();
+        c.ping().unwrap();
+
+        // full consume restores the exact prefix bytes
+        let mut stream = match c.getchunks_stream(b"state:x", 10).unwrap() {
+            ChunksReply::Stream(s) => s,
+            ChunksReply::Terminal(v) => panic!("{v:?}"),
+        };
+        let mut got = Vec::new();
+        while let Some(v) = stream.next_reply().unwrap() {
+            got.extend_from_slice(v.as_bulk().unwrap());
+        }
+        assert_eq!(got, blob, "head ++ all chunks == the stored entry");
+
+        // terminal replies: missing key is Nil, non-state entry is an error
+        c.set(b"plain", b"hello").unwrap();
+        assert!(matches!(
+            c.getchunks_stream(b"absent", 4).unwrap(),
+            ChunksReply::Terminal(Value::Nil)
+        ));
+        assert!(matches!(
+            c.getchunks_stream(b"plain", 4).unwrap(),
+            ChunksReply::Terminal(Value::Error(_))
+        ));
+        c.ping().unwrap();
+    }
+
+    #[test]
+    fn used_bytes_parses_info() {
+        let (_h, mut c) = spawn();
+        let before = c.used_bytes().unwrap();
+        let payload = [7u8; 10_000];
+        c.set(b"k", &payload).unwrap();
+        let after = c.used_bytes().unwrap();
+        assert!(after >= before + 10_000, "{before} -> {after}");
     }
 
     #[test]

@@ -278,6 +278,57 @@ impl Decoder {
     }
 }
 
+/// One step of element-streamed decoding ([`Decoder::next_frame`]): either
+/// a complete non-array value, or a consumed top-level array *header* whose
+/// `n` elements will follow as standalone frames.
+#[derive(Debug, PartialEq)]
+pub enum Frame {
+    /// An array header `*n\r\n` was consumed alone; the `n` elements are
+    /// still in the stream, each decodable as its own value.
+    Array(usize),
+    /// A complete non-array value.
+    Value(Value),
+}
+
+impl Decoder {
+    /// Like [`Decoder::next_value`], but when the next frame is an array,
+    /// consume only its *header* and hand the element count back — the
+    /// elements stay in the stream for the caller to pull one at a time
+    /// (each is a self-delimiting RESP value).  This is what lets a client
+    /// stream a multi-bulk reply (`GETCHUNKS`) element-by-element instead
+    /// of buffering the whole array: element `i` decodes the moment its
+    /// bytes land, while elements `i+1..` are still in flight.  Non-array
+    /// frames (and nil arrays) come back whole as [`Frame::Value`].
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, RespError> {
+        let at = self.pos;
+        if at >= self.buf.len() {
+            return Ok(None);
+        }
+        if self.buf[at] != b'*' {
+            return Ok(self.next_value()?.map(Frame::Value));
+        }
+        let Some(line_end) = self.find_crlf(at + 1) else {
+            return Ok(None); // header line incomplete: need more bytes
+        };
+        let line = std::str::from_utf8(&self.buf[at + 1..line_end])
+            .map_err(|_| RespError::Protocol("non-utf8 header line".into()))?;
+        let n = line
+            .parse::<i64>()
+            .map_err(|_| RespError::Protocol(format!("bad array len {line:?}")))?;
+        let after = line_end + 2;
+        if n < 0 {
+            self.pos = after;
+            return Ok(Some(Frame::Value(Value::Nil)));
+        }
+        let n = n as usize;
+        if n > MAX_BULK / 16 {
+            return Err(RespError::Protocol(format!("array too large: {n}")));
+        }
+        self.pos = after;
+        Ok(Some(Frame::Array(n)))
+    }
+}
+
 /// Read values from a stream until one complete value is available.
 pub fn read_value(stream: &mut impl Read, dec: &mut Decoder) -> Result<Value, RespError> {
     loop {
@@ -403,6 +454,44 @@ mod tests {
             assert_eq!(&d.next_value().unwrap().unwrap(), v);
         }
         assert!(d.next_value().unwrap().is_none());
+    }
+
+    #[test]
+    fn next_frame_streams_array_elements() {
+        // a 3-element array decodes as header + three standalone values
+        let arr = Value::Array(vec![
+            Value::bulk_str("head"),
+            Value::bulk_str("c0"),
+            Value::bulk_str("c1"),
+        ]);
+        let enc = arr.encode();
+        let mut d = Decoder::new();
+        // feed byte-at-a-time: the header frame appears as soon as its CRLF
+        // lands, before any element bytes exist
+        let mut fed = 0;
+        let header_at = loop {
+            d.feed(std::slice::from_ref(&enc[fed]));
+            fed += 1;
+            match d.next_frame().unwrap() {
+                Some(Frame::Array(3)) => break fed,
+                Some(other) => panic!("unexpected frame {other:?}"),
+                None => {}
+            }
+        };
+        assert_eq!(header_at, 4, "header is *3\\r\\n");
+        d.feed(&enc[fed..]);
+        for want in ["head", "c0", "c1"] {
+            assert_eq!(d.next_value().unwrap().unwrap(), Value::bulk_str(want));
+        }
+        assert!(d.next_value().unwrap().is_none());
+        // non-array frames pass through whole; nil arrays collapse to Nil
+        let mut d = Decoder::new();
+        d.feed(b"+OK\r\n*-1\r\n");
+        assert_eq!(
+            d.next_frame().unwrap().unwrap(),
+            Frame::Value(Value::Simple("OK".into()))
+        );
+        assert_eq!(d.next_frame().unwrap().unwrap(), Frame::Value(Value::Nil));
     }
 
     #[test]

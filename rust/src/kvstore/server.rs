@@ -8,9 +8,9 @@
 //! (`CAT.DELTA`) to synchronize their local Bloom filters (Figure 2, green
 //! arrow).
 //!
-//! Two byte-oriented commands power the zero-copy/suffix-delta transfer
-//! path (the server never interprets blob layouts — clients compute all
-//! offsets from `model::state::BlobLayout`):
+//! Three commands power the zero-copy/suffix-delta transfer path.  Two are
+//! byte-oriented (the server never interprets blob layouts — clients compute
+//! all offsets from `model::state::BlobLayout`):
 //!
 //! * `GETRANGE key start end` — Redis-style inclusive byte range of a
 //!   value, served as an O(1) slice of the stored entry (`Nil` when the key
@@ -23,6 +23,19 @@
 //!   ships only its new suffix chunks, and the server splices them onto the
 //!   prefix chunk bytes it already holds — compressed or not, since ECS3
 //!   chunks are independent deflate streams.
+//!
+//! The third is the one deliberate exception to layout-agnosticism
+//! (ROADMAP "server-push streaming"):
+//!
+//! * `GETCHUNKS key m` — parse the stored entry's own ECS3 header + chunk
+//!   index and reply with a multi-bulk of `1 + k` O(1) slices: the head,
+//!   then each whole chunk covering an `m`-row prefix (`m` clamped to the
+//!   entry; `m = 0` returns the head alone).  One request replaces the
+//!   head round trip *plus* the per-chunk offset math on the client — and
+//!   because the reply is a RESP array whose elements are self-delimiting,
+//!   a streaming client still decodes chunk `i` while chunk `i+1` is on
+//!   the wire.  Non-ECS3 entries (legacy v2 blobs, aliases, garbage) get a
+//!   typed error so clients fall back to the GETRANGE compatibility path.
 
 use std::collections::HashMap;
 use std::io::Write;
@@ -87,6 +100,37 @@ pub struct KvServer {
 
 fn parse_index(arg: &[u8]) -> Option<usize> {
     std::str::from_utf8(arg).ok()?.parse::<usize>().ok()
+}
+
+/// Build the `GETCHUNKS` reply for a stored ECS3 entry: the head (header +
+/// chunk index) followed by each whole chunk covering an `m`-row prefix,
+/// every element an O(1) shared slice of the stored bytes.  `None` when the
+/// entry is not a well-formed chunked state blob (v2, alias, truncated,
+/// index crc mismatch) — the dispatcher turns that into a typed error and
+/// the client falls back to the byte-oriented GETRANGE path.
+fn getchunks_reply(blob: &SharedBytes, m: usize) -> Option<Value> {
+    use crate::model::state::{read_chunk_index, BlobLayout, KvState};
+    let hdr = KvState::peek_header(blob).ok()?;
+    let (ct, entries) = read_chunk_index(blob)?;
+    let lo = BlobLayout::new(&hdr.model_hash, hdr.n_layers, hdr.n_kv_heads, hdr.head_dim)
+        .with_chunk_tokens(ct);
+    let head_len = lo.payload_off(hdr.n_tokens);
+    if blob.len() < head_len {
+        return None;
+    }
+    let k = lo.prefix_chunks(m.min(hdr.n_tokens));
+    let mut items = Vec::with_capacity(k + 1);
+    items.push(Value::Bulk(blob.slice(0..head_len)));
+    let mut off = head_len;
+    for e in entries.iter().take(k) {
+        let len = e.len as usize;
+        if off + len > blob.len() {
+            return None; // index promises more bytes than the entry holds
+        }
+        items.push(Value::Bulk(blob.slice(off..off + len)));
+        off += len;
+    }
+    Some(Value::Array(items))
 }
 
 impl KvServer {
@@ -238,6 +282,21 @@ impl KvServer {
                 match self.store.lock().unwrap().get_range(&args[1], start, end) {
                     None => Value::Nil,
                     Some(v) => Value::Bulk(v),
+                }
+            }
+            ("GETCHUNKS", 3) => {
+                let Some(m) = parse_index(&args[2]) else {
+                    return Value::Error("ERR bad row count".into());
+                };
+                // hold the lock only for the O(1) entry lookup; slicing the
+                // reply works on the shared view outside it
+                let blob = self.store.lock().unwrap().get(&args[1]);
+                match blob {
+                    None => Value::Nil,
+                    Some(blob) => match getchunks_reply(&blob, m) {
+                        Some(v) => v,
+                        None => Value::Error("ERR not a chunked state entry".into()),
+                    },
                 }
             }
             ("SPLICE", 7) => {
@@ -499,6 +558,61 @@ mod tests {
         );
         assert!(matches!(
             srv.dispatch(request(&[b"GETRANGE", b"k", b"x", b"1"])),
+            Value::Error(_)
+        ));
+    }
+
+    #[test]
+    fn getchunks_dispatch_serves_head_and_whole_chunks() {
+        use crate::model::state::{BlobLayout, Compression, KvState};
+        let srv = KvServer::new(usize::MAX);
+        let (l, s, kh, d) = (2usize, 16usize, 1usize, 8usize);
+        let mut st = KvState::zeroed(l, s, kh, d);
+        st.n_tokens = 10;
+        for (i, x) in st.k.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let ct = 4;
+        let blob = st.serialize_prefix_opts(10, "h", Compression::Deflate, ct);
+        let lo = BlobLayout::new("h", l, kh, d).with_chunk_tokens(ct);
+        srv.dispatch(Value::Array(vec![
+            Value::bulk(&b"SET"[..]),
+            Value::bulk(&b"k"[..]),
+            Value::bulk(blob.clone()),
+        ]));
+
+        // m = 6 rows with ct = 4 covers exactly 2 whole chunks
+        let r = srv.dispatch(request(&[b"GETCHUNKS", b"k", b"6"]));
+        let Value::Array(items) = r else { panic!("expected array, got {r:?}") };
+        assert_eq!(items.len(), 1 + 2);
+        let head_len = lo.payload_off(10);
+        assert_eq!(items[0].as_bulk().unwrap(), &blob[..head_len]);
+        let (_, entries) = crate::model::state::read_chunk_index(&blob).unwrap();
+        let c0 = entries[0].len as usize;
+        let c1 = entries[1].len as usize;
+        assert_eq!(items[1].as_bulk().unwrap(), &blob[head_len..head_len + c0]);
+        assert_eq!(
+            items[2].as_bulk().unwrap(),
+            &blob[head_len + c0..head_len + c0 + c1]
+        );
+
+        // m = 0 returns the head alone; m past the entry clamps to all chunks
+        let r = srv.dispatch(request(&[b"GETCHUNKS", b"k", b"0"]));
+        let Value::Array(items) = r else { panic!("{r:?}") };
+        assert_eq!(items.len(), 1);
+        let r = srv.dispatch(request(&[b"GETCHUNKS", b"k", b"999"]));
+        let Value::Array(items) = r else { panic!("{r:?}") };
+        assert_eq!(items.len(), 1 + lo.n_chunks(10));
+
+        // missing key is nil; a non-ECS3 entry is a typed error
+        assert_eq!(srv.dispatch(request(&[b"GETCHUNKS", b"nope", b"4"])), Value::Nil);
+        srv.dispatch(request(&[b"SET", b"plain", b"not a state blob"]));
+        assert!(matches!(
+            srv.dispatch(request(&[b"GETCHUNKS", b"plain", b"4"])),
+            Value::Error(_)
+        ));
+        assert!(matches!(
+            srv.dispatch(request(&[b"GETCHUNKS", b"k", b"x"])),
             Value::Error(_)
         ));
     }

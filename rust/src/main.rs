@@ -5,7 +5,8 @@
 //! edgecache server    --addr 0.0.0.0:7600 --max-mb 14336
 //! edgecache client    --server HOST:PORT --preset edge-270m --device low-end \
 //!                     --link wifi --domains 8 --per-domain 4 --shots 1
-//! edgecache run       --preset tiny --clients 2 --domains 6 --per-domain 3
+//! edgecache client    --server H1:P1 --peer H2:P2 --peer H3:P3 --replicas 1
+//! edgecache run       --preset tiny --clients 2 --peers 2 --domains 6 --per-domain 3
 //! edgecache tables    --prompts 6434        # analytic Table 2/3/4 + figures
 //! edgecache workload  --domain astronomy --shots 5 --index 0
 //! edgecache info      --preset edge-270m
@@ -15,7 +16,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use edgecache::coordinator::{CacheBox, EdgeClient, EdgeClientConfig, FetchPolicy};
+use edgecache::coordinator::{CacheBox, EdgeClient, EdgeClientConfig, FetchPolicy, PeerConfig};
 use edgecache::devicemodel::DeviceProfile;
 use edgecache::engine::Engine;
 use edgecache::metrics::CaseAggregate;
@@ -93,9 +94,17 @@ fn client_config(m: &edgecache::util::cli::Matches, server: Option<String>) -> R
         .ok_or_else(|| anyhow!("unknown --device (pi-zero-2w|pi5-4gb|host)"))?;
     let link = LinkModel::by_name(&m.str("link"))
         .ok_or_else(|| anyhow!("unknown --link (wifi|ethernet|loopback)"))?;
+    // the peer fabric: --server (if any) is peer 0, every repeated --peer
+    // adds another cache box sharing the prompt-cache load
+    let peers: Vec<PeerConfig> = server
+        .into_iter()
+        .chain(m.all("peer"))
+        .map(PeerConfig::new)
+        .collect();
     Ok(EdgeClientConfig {
         name: "cli".into(),
-        server_addr: server,
+        peers,
+        replicas: m.usize("replicas").map_err(|e| anyhow!(e))?,
         link,
         device,
         max_new_tokens: m.get("max-new").and_then(|v| v.parse().ok()),
@@ -116,6 +125,8 @@ fn client_cmd_spec(name: &'static str, about: &'static str) -> Command {
         .opt("preset", "edge-270m", "artifact preset (tiny|edge-270m|edge-1b)")
         .opt("device", "host", "device pacing profile (pi-zero-2w|pi5-4gb|host)")
         .opt("link", "loopback", "link model (wifi|ethernet|loopback)")
+        .multi("peer", "additional cache-box peer address (repeatable)")
+        .opt("replicas", "0", "extra peers each upload is replicated to")
         .opt("domains", "6", "number of MMLU-like domains")
         .opt("per-domain", "3", "questions per domain")
         .opt("shots", "1", "few-shot examples per prompt")
@@ -181,6 +192,19 @@ fn run_trace(
             c.stats.bytes_down / 1024,
             c.stats.bytes_up / 1024
         );
+        for l in c.peer_ledgers() {
+            println!(
+                "  peer {}: down {} KB, up {} KB, shares {} ({} failed), uploads {} (+{} replicas), {} sync rounds",
+                l.addr,
+                l.bytes_down / 1024,
+                l.bytes_up / 1024,
+                l.fetch_shares,
+                l.share_failures,
+                l.uploads,
+                l.replica_uploads,
+                l.sync_rounds
+            );
+        }
     }
     Ok(())
 }
@@ -207,16 +231,23 @@ fn cmd_client(argv: &[String]) -> Result<()> {
 
 fn cmd_run(argv: &[String]) -> Result<()> {
     let m = parse_or_help(
-        client_cmd_spec("run", "in-process cluster: cache box + N clients")
-            .opt("clients", "2", "number of edge clients"),
+        client_cmd_spec("run", "in-process cluster: N cache boxes + N clients")
+            .opt("clients", "2", "number of edge clients")
+            .opt("peers", "1", "number of in-process cache boxes (peer fabric)"),
         argv,
     )?;
     let engine = Arc::new(Engine::load_preset(&m.str("preset"))?);
-    let cb = CacheBox::start_local()?;
+    let n_boxes = m.usize("peers").map_err(|e| anyhow!(e))?.max(1);
+    let boxes: Vec<CacheBox> = (0..n_boxes)
+        .map(|_| CacheBox::start_local())
+        .collect::<Result<_>>()?;
     let n_clients = m.usize("clients").map_err(|e| anyhow!(e))?.max(1);
     let mut clients = Vec::new();
     for i in 0..n_clients {
-        let mut cfg = client_config(&m, Some(cb.addr()))?;
+        let mut cfg = client_config(&m, Some(boxes[0].addr()))?;
+        // every client talks to the whole fabric (plus any --peer extras)
+        cfg.peers
+            .extend(boxes[1..].iter().map(|b| PeerConfig::new(b.addr())));
         cfg.name = format!("c{i}");
         cfg.seed ^= i as u64;
         clients.push(EdgeClient::new(Arc::clone(&engine), cfg)?);
@@ -230,9 +261,17 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         m.usize("shots").map_err(|e| anyhow!(e))?,
     );
     run_trace(engine, &mut clients, &trace, &gen)?;
-    let (keys, bytes, evictions) = cb.stats();
-    println!("cache box: {keys} keys, {:.1} MB, {evictions} evictions", bytes as f64 / 1e6);
-    cb.shutdown();
+    for (i, cb) in boxes.iter().enumerate() {
+        let (keys, bytes, evictions) = cb.stats();
+        println!(
+            "cache box {i} ({}): {keys} keys, {:.1} MB, {evictions} evictions",
+            cb.addr(),
+            bytes as f64 / 1e6
+        );
+    }
+    for cb in boxes {
+        cb.shutdown();
+    }
     Ok(())
 }
 

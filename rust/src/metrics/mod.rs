@@ -155,6 +155,35 @@ impl fmt::Display for PhaseBreakdown {
     }
 }
 
+/// Per-peer ledger of the peer fabric: one per cache box a client talks
+/// to, so "how much did each box contribute / cost" stays answerable when
+/// transfers fan out across N peers.  Byte counters are payload bytes over
+/// that peer's modelled link; `breakdown` accumulates wall time per phase
+/// attributed to this peer (its fetch shares and uploads land in
+/// [`Phase::Redis`]).
+#[derive(Debug, Clone, Default)]
+pub struct PeerLedger {
+    /// The peer's cache-box address.
+    pub addr: String,
+    /// Payload bytes downloaded from this peer.
+    pub bytes_down: u64,
+    /// Payload bytes uploaded to this peer.
+    pub bytes_up: u64,
+    /// Multi-source fetch shares this peer served to completion.
+    pub fetch_shares: u64,
+    /// Fetch shares this peer failed mid-stream (dead conn, short or
+    /// corrupt reply) — the planner re-plans these onto survivors.
+    pub share_failures: u64,
+    /// Uploads this peer received as placement primary.
+    pub uploads: u64,
+    /// Uploads this peer received as a replica copy.
+    pub replica_uploads: u64,
+    /// Completed catalog-sync rounds against this peer.
+    pub sync_rounds: u64,
+    /// Per-peer phase time (Redis = this peer's transfers).
+    pub breakdown: PhaseBreakdown,
+}
+
 /// Running summary over a population of scalar samples (seconds).
 #[derive(Debug, Clone, Default)]
 pub struct Summary {

@@ -343,9 +343,16 @@ fn chunk_payload(bytes: &[u8], compressed: bool, expect: usize) -> Result<Cow<'_
 /// the whole assembly and the caller falls back to a full-blob download —
 /// never a partial or questionable restore.
 ///
-/// Chunks are strictly ordered: entry `fed` of the verified index names the
-/// only acceptable next chunk, so out-of-order or substituted chunk bytes
-/// fail its crc/length check instead of scattering rows to the wrong tokens.
+/// A single-source stream feeds chunks in order ([`StateAssembler::feed_chunk`]:
+/// the lowest unfed index names the only acceptable next chunk, so
+/// out-of-order or substituted chunk bytes fail its crc/length check instead
+/// of scattering rows to the wrong tokens).  A **multi-source** fetch — the
+/// peer fabric pulling disjoint chunk stripes from several cache boxes
+/// concurrently — addresses chunks explicitly instead
+/// ([`StateAssembler::feed_chunk_at`]): every chunk still verifies against
+/// its own index entry, each index may be fed exactly once, and `finish`
+/// only succeeds when the fed set covers the whole prefix, so interleaved
+/// arrival order across sources can never corrupt nor skip a chunk.
 #[derive(Debug)]
 pub struct StateAssembler {
     st: KvState,
@@ -359,7 +366,10 @@ pub struct StateAssembler {
     m: usize,
     /// Whole chunks covering the `m`-row prefix.
     k: usize,
-    fed: usize,
+    /// Which of the `k` expected chunks have been fed (multi-source fetches
+    /// fill this out of order).
+    fed_mask: Vec<bool>,
+    fed_count: usize,
 }
 
 impl StateAssembler {
@@ -419,6 +429,7 @@ impl StateAssembler {
             .collect();
         let mut st = KvState::zeroed(l, s, kh, d);
         st.n_tokens = m;
+        let k = lo.prefix_chunks(m);
         Ok(StateAssembler {
             st,
             entries,
@@ -427,8 +438,9 @@ impl StateAssembler {
             total_rows: hdr.n_tokens,
             stride: lo.token_stride(),
             m,
-            k: lo.prefix_chunks(m),
-            fed: 0,
+            k,
+            fed_mask: vec![false; k],
+            fed_count: 0,
         })
     }
 
@@ -448,11 +460,22 @@ impl StateAssembler {
     }
 
     pub fn fed_chunks(&self) -> usize {
-        self.fed
+        self.fed_count
     }
 
     pub fn is_complete(&self) -> bool {
-        self.fed == self.k
+        self.fed_count == self.k
+    }
+
+    /// Whether chunk `c` has already been fed.
+    pub fn fed_at(&self, c: usize) -> bool {
+        self.fed_mask.get(c).copied().unwrap_or(false)
+    }
+
+    /// Expected chunks not yet fed — the re-plan worklist after a source
+    /// dies mid-fetch.
+    pub fn unfed_chunks(&self) -> Vec<usize> {
+        (0..self.k).filter(|&c| !self.fed_mask[c]).collect()
     }
 
     /// Stored byte length of chunk `c` per the verified index.
@@ -471,60 +494,178 @@ impl StateAssembler {
         &self.entries
     }
 
-    /// Accept the next chunk's stored bytes: verify its index length + crc,
-    /// inflate (bounded) and scatter its rows.  Errors leave the assembler
-    /// unusable for a *successful* finish — callers abort to the full-blob
-    /// fallback.
+    /// Accept the next in-order chunk's stored bytes — the single-stream
+    /// path: the lowest unfed index is the only acceptable chunk, so a
+    /// stream that delivers replies in request order needs no addressing.
+    /// Errors leave the assembler unusable for a *successful* finish —
+    /// callers abort to the full-blob fallback.
     pub fn feed_chunk(&mut self, bytes: &[u8]) -> Result<(), StateError> {
-        let c = self.fed;
+        let c = (0..self.k).find(|&c| !self.fed_mask[c]).ok_or_else(|| {
+            StateError::Malformed(format!("all {} chunks already fed", self.k))
+        })?;
+        self.feed_chunk_at(c, bytes)
+    }
+
+    /// Accept chunk `c`'s stored bytes, in any order — the multi-source
+    /// path: verify its index length + crc, inflate (bounded) and scatter
+    /// its rows.  Each index may be fed exactly once; a chunk outside the
+    /// expected prefix or fed twice is an error.
+    pub fn feed_chunk_at(&mut self, c: usize, bytes: &[u8]) -> Result<(), StateError> {
+        if self.fed_mask.get(c).copied().unwrap_or(true) {
+            // bail before the crc/inflate work; commit_chunk re-checks
+            return self.commit_chunk(c, &[]);
+        }
+        let raw = verify_chunk_bytes(
+            &self.entries,
+            self.compressed,
+            self.chunk_tokens,
+            self.total_rows,
+            self.stride,
+            self.k,
+            c,
+            bytes,
+        )?;
+        self.commit_chunk(c, &raw)
+    }
+
+    /// Snapshot the verification geometry so the CPU-heavy half of a feed
+    /// (crc + bounded inflate) can run *outside* whatever lock guards this
+    /// assembler — concurrent multi-source fetches would otherwise
+    /// serialize every peer's chunk decode behind one mutex.
+    pub fn verifier(&self) -> ChunkVerifier {
+        ChunkVerifier {
+            entries: self.entries.clone(),
+            compressed: self.compressed,
+            chunk_tokens: self.chunk_tokens,
+            total_rows: self.total_rows,
+            stride: self.stride,
+            k: self.k,
+        }
+    }
+
+    /// Scatter an already-verified chunk payload (the cheap half of a
+    /// feed — a bounded memcpy) and mark the chunk fed.  `payload` must be
+    /// the exact bytes [`ChunkVerifier::verify`] returned for chunk `c` of
+    /// this assembler's entry; the length is re-checked so a mismatched
+    /// verifier cannot scatter rows to the wrong tokens.
+    pub fn commit_chunk(&mut self, c: usize, payload: &[u8]) -> Result<(), StateError> {
         if c >= self.k {
             return Err(StateError::Malformed(format!(
-                "all {} chunks already fed",
+                "chunk {c} outside the {}-chunk prefix",
                 self.k
             )));
         }
-        let e = self.entries[c];
-        if bytes.len() != e.len as usize {
-            return Err(StateError::Malformed(format!(
-                "chunk {c}: {} stored bytes, index says {}",
-                bytes.len(),
-                e.len
-            )));
+        if self.fed_mask[c] {
+            return Err(StateError::Malformed(format!("chunk {c} already fed")));
         }
-        let mut crc = Crc32::new();
-        crc.update(bytes);
-        if crc.finalize() != e.crc {
-            return Err(StateError::ChunkChecksum { chunk: c });
-        }
-        // the stored chunk belongs to the total_rows-row entry; the final
-        // fetched chunk may extend past m — scatter only what we need
         let stored_rows = self.chunk_tokens.min(self.total_rows - c * self.chunk_tokens);
-        let raw = chunk_payload(bytes, self.compressed, stored_rows * self.stride)?;
-        if raw.len() != stored_rows * self.stride {
+        if payload.len() != stored_rows * self.stride {
             return Err(StateError::Malformed(format!(
                 "chunk {c}: {} payload bytes, expected {}",
-                raw.len(),
+                payload.len(),
                 stored_rows * self.stride
             )));
         }
         let need = stored_rows.min(self.m - c * self.chunk_tokens);
         self.st
-            .scatter_rows_at(&raw[..need * self.stride], c * self.chunk_tokens, need);
-        self.fed += 1;
+            .scatter_rows_at(&payload[..need * self.stride], c * self.chunk_tokens, need);
+        self.fed_mask[c] = true;
+        self.fed_count += 1;
         Ok(())
     }
 
     /// Return the assembled `m`-row state; an error if any expected chunk
     /// was never fed.
     pub fn finish(self) -> Result<KvState, StateError> {
-        if self.fed != self.k {
+        if self.fed_count != self.k {
             return Err(StateError::Malformed(format!(
                 "assembly incomplete: {} of {} chunks fed",
-                self.fed, self.k
+                self.fed_count, self.k
             )));
         }
         Ok(self.st)
     }
+}
+
+/// The lock-free half of a [`StateAssembler`] feed: an owned snapshot of
+/// the verified chunk geometry, so a worker thread can crc-check and
+/// inflate a chunk's stored bytes without touching (or locking) the
+/// assembler itself, then hand the payload to
+/// [`StateAssembler::commit_chunk`] under the lock.
+#[derive(Debug, Clone)]
+pub struct ChunkVerifier {
+    entries: Vec<ChunkEntry>,
+    compressed: bool,
+    chunk_tokens: usize,
+    total_rows: usize,
+    stride: usize,
+    k: usize,
+}
+
+impl ChunkVerifier {
+    /// Verify chunk `c`'s stored bytes against the index (length + crc) and
+    /// inflate them (bounded).  Returns the raw token-row payload ready for
+    /// [`StateAssembler::commit_chunk`]; borrowed for uncompressed chunks,
+    /// owned for deflated ones.
+    pub fn verify<'a>(&self, c: usize, bytes: &'a [u8]) -> Result<Cow<'a, [u8]>, StateError> {
+        verify_chunk_bytes(
+            &self.entries,
+            self.compressed,
+            self.chunk_tokens,
+            self.total_rows,
+            self.stride,
+            self.k,
+            c,
+            bytes,
+        )
+    }
+}
+
+/// The one implementation of chunk verification (index length + crc +
+/// bounded inflate), shared by the in-place [`StateAssembler::feed_chunk_at`]
+/// and the lock-free [`ChunkVerifier::verify`].
+#[allow(clippy::too_many_arguments)]
+fn verify_chunk_bytes<'a>(
+    entries: &[ChunkEntry],
+    compressed: bool,
+    chunk_tokens: usize,
+    total_rows: usize,
+    stride: usize,
+    k: usize,
+    c: usize,
+    bytes: &'a [u8],
+) -> Result<Cow<'a, [u8]>, StateError> {
+    if c >= k {
+        return Err(StateError::Malformed(format!(
+            "chunk {c} outside the {k}-chunk prefix"
+        )));
+    }
+    let e = entries[c];
+    if bytes.len() != e.len as usize {
+        return Err(StateError::Malformed(format!(
+            "chunk {c}: {} stored bytes, index says {}",
+            bytes.len(),
+            e.len
+        )));
+    }
+    let mut crc = Crc32::new();
+    crc.update(bytes);
+    if crc.finalize() != e.crc {
+        return Err(StateError::ChunkChecksum { chunk: c });
+    }
+    // the stored chunk belongs to the total_rows-row entry; the final
+    // fetched chunk may extend past the target prefix — the committer
+    // scatters only what it needs
+    let stored_rows = chunk_tokens.min(total_rows - c * chunk_tokens);
+    let raw = chunk_payload(bytes, compressed, stored_rows * stride)?;
+    if raw.len() != stored_rows * stride {
+        return Err(StateError::Malformed(format!(
+            "chunk {c}: {} payload bytes, expected {}",
+            raw.len(),
+            stored_rows * stride
+        )));
+    }
+    Ok(raw)
 }
 
 /// Live KV cache: what the engine threads through every PJRT call.
@@ -1398,6 +1539,69 @@ mod tests {
         // a v2 head is refused (streamed assembly is a v3 capability)
         let v2 = write_v2_blob(&filled(2, 16, 1, 8, 6, 2), "h");
         assert!(StateAssembler::new(&v2, 4, "h", (2, 16, 1, 8)).is_err());
+    }
+
+    #[test]
+    fn assembler_feed_chunk_at_accepts_any_order_once() {
+        // the multi-source path: disjoint stripes land interleaved, each
+        // chunk addressed explicitly — result identical to in-order feeding
+        for comp in [Compression::None, Compression::Deflate] {
+            let st = filled(2, 32, 1, 8, 18, 41);
+            let ct = 4;
+            let blob = st.serialize_prefix_opts(18, "h", comp, ct);
+            let lo = BlobLayout::new("h", 2, 1, 8).with_chunk_tokens(ct);
+            let head = &blob[..lo.payload_off(18)];
+            let pay = lo.payload_off(18);
+            let mut asm = StateAssembler::new(head, 18, "h", (2, 32, 1, 8)).unwrap();
+            let k = asm.expected_chunks();
+            let offs: Vec<usize> = (0..k)
+                .scan(pay, |o, c| {
+                    let cur = *o;
+                    *o += asm.chunk_len(c);
+                    Some(cur)
+                })
+                .collect();
+            // stripe A = even chunks, stripe B = odd chunks, B first
+            for c in (0..k).filter(|c| c % 2 == 1).chain((0..k).filter(|c| c % 2 == 0)) {
+                assert!(!asm.fed_at(c));
+                asm.feed_chunk_at(c, &blob[offs[c]..offs[c] + asm.chunk_len(c)])
+                    .unwrap();
+                assert!(asm.fed_at(c));
+            }
+            assert!(asm.is_complete());
+            assert!(asm.unfed_chunks().is_empty());
+            let streamed = asm.finish().unwrap();
+            let whole = KvState::restore(&blob, "h", (2, 32, 1, 8)).unwrap();
+            assert_eq!(streamed, whole, "comp={comp:?}");
+
+            // double-feed and out-of-prefix indices are rejected
+            let mut asm = StateAssembler::new(head, 18, "h", (2, 32, 1, 8)).unwrap();
+            asm.feed_chunk_at(0, &blob[offs[0]..offs[0] + asm.chunk_len(0)])
+                .unwrap();
+            assert!(matches!(
+                asm.feed_chunk_at(0, &blob[offs[0]..offs[0] + asm.chunk_len(0)]),
+                Err(StateError::Malformed(_))
+            ));
+            assert!(matches!(
+                asm.feed_chunk_at(k, b""),
+                Err(StateError::Malformed(_))
+            ));
+            // the unfed worklist names exactly the missing chunks
+            assert_eq!(asm.unfed_chunks(), (1..k).collect::<Vec<_>>());
+            // chunk bytes fed under the wrong index fail that index's crc
+            if k >= 2 {
+                let err = asm
+                    .feed_chunk_at(1, &blob[offs[0]..offs[0] + asm.chunk_len(0)])
+                    .unwrap_err();
+                assert!(
+                    matches!(
+                        err,
+                        StateError::ChunkChecksum { chunk: 1 } | StateError::Malformed(_)
+                    ),
+                    "{err:?}"
+                );
+            }
+        }
     }
 
     #[test]

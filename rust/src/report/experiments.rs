@@ -207,7 +207,8 @@ pub fn real_table23(
     let cb = CacheBox::start_local()?;
     let ecfg = EdgeClientConfig {
         name: cfg.setting.name.into(),
-        server_addr: Some(cb.addr()),
+        peers: vec![crate::coordinator::PeerConfig::new(cb.addr())],
+        replicas: 0,
         link: cfg.setting.link.clone(),
         device: if cfg.paced {
             cfg.setting.device.clone()

@@ -1,7 +1,8 @@
 //! Declarative command-line argument parser (clap substitute).
 //!
-//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
-//! subcommands, defaults, and auto-generated `--help`.
+//! Supports `--flag`, `--key value`, `--key=value`, repeatable options
+//! (`--peer a --peer b`, read back via [`Matches::all`]), positional
+//! arguments, subcommands, defaults, and auto-generated `--help`.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -48,6 +49,14 @@ impl Command {
         self
     }
 
+    /// A repeatable value option (`--name a --name b`); every occurrence is
+    /// collected and read back with [`Matches::all`].  Declared like a
+    /// defaultless optional value — zero occurrences is fine.
+    pub fn multi(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: None, is_flag: false, required: false });
+        self
+    }
+
     pub fn usage(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(s, "{} — {}", self.name, self.about);
@@ -68,6 +77,7 @@ impl Command {
     /// Parse a raw argv slice (without the program/subcommand name).
     pub fn parse(&self, argv: &[String]) -> Result<Matches, String> {
         let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut multi: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut flags: Vec<String> = Vec::new();
         let mut positional: Vec<String> = Vec::new();
 
@@ -102,6 +112,7 @@ impl Command {
                                 .ok_or_else(|| format!("--{key} requires a value"))?
                         }
                     };
+                    multi.entry(key.clone()).or_default().push(v.clone());
                     values.insert(key, v);
                 }
             } else {
@@ -119,13 +130,16 @@ impl Command {
             }
         }
 
-        Ok(Matches { values, flags, positional })
+        Ok(Matches { values, multi, flags, positional })
     }
 }
 
 #[derive(Debug)]
 pub struct Matches {
     values: BTreeMap<String, String>,
+    /// Every explicit occurrence of each value option, in argv order
+    /// (defaults are not included — only what the user typed).
+    multi: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -133,6 +147,12 @@ pub struct Matches {
 impl Matches {
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Every explicit occurrence of a repeatable option, in order; empty
+    /// when the option never appeared (defaults don't count).
+    pub fn all(&self, name: &str) -> Vec<String> {
+        self.multi.get(name).cloned().unwrap_or_default()
     }
 
     pub fn str(&self, name: &str) -> String {
@@ -204,6 +224,22 @@ mod tests {
         assert_eq!(m.str("port"), "9000");
         assert!(m.flag("verbose"));
         assert_eq!(m.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn repeated_options_collect_in_order() {
+        let c = Command::new("t", "about")
+            .multi("peer", "cache-box peer (repeatable)")
+            .opt("port", "1", "port");
+        let m = c
+            .parse(&argv(&["--peer", "a:1", "--peer=b:2", "--peer", "c:3"]))
+            .unwrap();
+        assert_eq!(m.all("peer"), vec!["a:1", "b:2", "c:3"]);
+        // last occurrence also wins the scalar view
+        assert_eq!(m.str("peer"), "c:3");
+        // absent repeatable options and defaults yield no occurrences
+        assert!(m.all("port").is_empty());
+        assert!(c.parse(&argv(&[])).unwrap().all("peer").is_empty());
     }
 
     #[test]

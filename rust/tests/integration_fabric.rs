@@ -1,0 +1,384 @@
+//! Peer-fabric integration: multi-source chunk fetches across several
+//! cache boxes, peer death mid-trace, survivor re-planning and placement.
+//!
+//! The first half drives the fabric machinery directly with hand-built
+//! states (no engine artifacts needed); the second half runs the full
+//! `EdgeClient` flow and skips when `artifacts/tiny` is absent.
+
+use std::sync::Arc;
+
+use edgecache::coordinator::fabric::{fetch_prefix_multi, Peer, PeerConfig};
+use edgecache::coordinator::{
+    CacheBox, EdgeClient, EdgeClientConfig, HitCase, PeerPlanner,
+};
+use edgecache::engine::Engine;
+use edgecache::model::state::{Compression, KvState};
+use edgecache::netsim::LinkModel;
+use edgecache::util::rng::Rng;
+
+const HASH: &str = "fabric-test";
+const DIMS: (usize, usize, usize, usize) = (2, 64, 1, 8); // 128 B/token
+
+fn filled_state(n: usize, seed: u64) -> KvState {
+    let (l, s, kh, d) = DIMS;
+    let mut st = KvState::zeroed(l, s, kh, d);
+    st.n_tokens = n;
+    let mut rng = Rng::new(seed);
+    let row = kh * d;
+    let le = s * row;
+    for li in 0..l {
+        for e in 0..n * row {
+            st.k[li * le + e] = rng.f64() as f32;
+            st.v[li * le + e] = rng.f64() as f32 - 0.5;
+        }
+    }
+    st
+}
+
+fn peer_for(cb: &CacheBox, seed: u64) -> Peer {
+    Peer::connect(PeerConfig::new(cb.addr()), LinkModel::loopback(), seed, 1).unwrap()
+}
+
+/// The m-row truth a fabric fetch must reproduce bit-for-bit.
+fn expected_prefix(st: &KvState, m: usize, ct: usize, comp: Compression) -> KvState {
+    let blob = st.serialize_prefix_opts(m, HASH, comp, ct);
+    KvState::restore(&blob, HASH, DIMS).unwrap()
+}
+
+#[test]
+fn multi_source_fetch_matches_single_source() {
+    for comp in [Compression::None, Compression::Deflate] {
+        let st = filled_state(24, 7);
+        let ct = 4;
+        let m = 17;
+        let blob = st.serialize_prefix_opts(24, HASH, comp, ct);
+
+        let (cb_a, cb_b) = (CacheBox::start_local().unwrap(), CacheBox::start_local().unwrap());
+        for cb in [&cb_a, &cb_b] {
+            let mut c = edgecache::kvstore::KvClient::connect(&cb.addr()).unwrap();
+            c.set(b"state:e", &blob).unwrap();
+        }
+        let planner = PeerPlanner::default();
+        let compressed = comp == Compression::Deflate;
+
+        // single source: the degenerate one-stripe plan
+        let mut p0 = peer_for(&cb_a, 1);
+        let single = {
+            let mut claimers = vec![(0usize, &mut p0)];
+            fetch_prefix_multi(
+                &mut claimers, &planner, b"state:e", 24, compressed, ct, m, HASH, DIMS,
+            )
+            .expect("single-source fetch")
+        };
+        assert!(!single.multi_source);
+        assert_eq!(single.re_plans, 0);
+
+        // dual source: stripes split across both claimers
+        let mut pa = peer_for(&cb_a, 2);
+        let mut pb = peer_for(&cb_b, 3);
+        let dual = {
+            let mut claimers = vec![(0usize, &mut pa), (1usize, &mut pb)];
+            fetch_prefix_multi(
+                &mut claimers, &planner, b"state:e", 24, compressed, ct, m, HASH, DIMS,
+            )
+            .expect("dual-source fetch")
+        };
+        assert!(dual.multi_source, "5 chunks over 2 peers must stripe");
+        assert_eq!(dual.re_plans, 0);
+        assert_eq!(dual.share_failures, 0);
+        // both peers actually served chunk bytes
+        assert!(pa.ledger.bytes_down > 0 && pb.ledger.bytes_down > 0);
+
+        let want = expected_prefix(&st, m, ct, comp);
+        for got in [&single.state, &dual.state] {
+            assert_eq!(got.n_tokens, m);
+            assert_eq!(got.k, want.k, "comp={comp:?}");
+            assert_eq!(got.v, want.v, "comp={comp:?}");
+        }
+        assert_eq!(single.wire, dual.wire, "striping moves the same bytes");
+        cb_a.shutdown();
+        cb_b.shutdown();
+    }
+}
+
+#[test]
+fn dead_share_peer_replans_onto_survivor() {
+    // peer B dies after the plan names it: its stripe fails mid-fetch and
+    // the orphaned chunks are re-planned onto the survivor — assembly
+    // completes with the exact same bytes (StateAssembler invariants hold)
+    let st = filled_state(32, 11);
+    let ct = 4;
+    let m = 26;
+    let blob = st.serialize_prefix_opts(32, HASH, Compression::Deflate, ct);
+
+    let cb_a = CacheBox::start_local().unwrap();
+    let cb_b = CacheBox::start_local().unwrap();
+    for cb in [&cb_a, &cb_b] {
+        let mut c = edgecache::kvstore::KvClient::connect(&cb.addr()).unwrap();
+        c.set(b"state:e", &blob).unwrap();
+    }
+    let mut pa = peer_for(&cb_a, 4);
+    let mut pb = peer_for(&cb_b, 5);
+    cb_b.shutdown(); // B dies between the catalog claim and the fetch
+
+    let planner = PeerPlanner::default();
+    let fetch = {
+        let mut claimers = vec![(0usize, &mut pa), (1usize, &mut pb)];
+        fetch_prefix_multi(
+            &mut claimers, &planner, b"state:e", 32, true, ct, m, HASH, DIMS,
+        )
+        .expect("survivor must complete the fetch")
+    };
+    assert!(fetch.re_plans >= 1, "orphaned chunks must be re-planned");
+    assert!(fetch.share_failures >= 1);
+    assert!(!pb.is_connected(), "dead peer's connection must be torn down");
+    assert!(pb.ledger.share_failures >= 1);
+
+    let want = expected_prefix(&st, m, ct, Compression::Deflate);
+    assert_eq!(fetch.state.n_tokens, m);
+    assert_eq!(fetch.state.k, want.k, "re-planned restore must be bit-exact");
+    assert_eq!(fetch.state.v, want.v);
+    cb_a.shutdown();
+}
+
+#[test]
+fn dead_head_peer_rotates_then_survivor_serves() {
+    // the *first* claimer is dead: head acquisition rotates to the
+    // survivor, and the dead peer's planned stripe re-plans back too
+    let st = filled_state(32, 13);
+    let ct = 4;
+    let m = 32;
+    let blob = st.serialize_prefix_opts(32, HASH, Compression::None, ct);
+
+    let cb_a = CacheBox::start_local().unwrap();
+    let cb_b = CacheBox::start_local().unwrap();
+    {
+        let mut c = edgecache::kvstore::KvClient::connect(&cb_b.addr()).unwrap();
+        c.set(b"state:e", &blob).unwrap();
+    }
+    let mut pa = peer_for(&cb_a, 6);
+    let mut pb = peer_for(&cb_b, 7);
+    cb_a.shutdown(); // the would-be head peer is gone
+
+    let planner = PeerPlanner::default();
+    let fetch = {
+        let mut claimers = vec![(0usize, &mut pa), (1usize, &mut pb)];
+        fetch_prefix_multi(
+            &mut claimers, &planner, b"state:e", 32, false, ct, m, HASH, DIMS,
+        )
+        .expect("head rotation must find the survivor")
+    };
+    assert_eq!(fetch.head_peer, 1, "survivor serves the head");
+    assert!(fetch.share_failures >= 1, "dead head attempt is a failure");
+    let want = expected_prefix(&st, m, ct, Compression::None);
+    assert_eq!(fetch.state.k, want.k);
+    assert_eq!(fetch.state.v, want.v);
+    cb_b.shutdown();
+}
+
+#[test]
+fn no_live_claimer_degrades_to_none_not_corruption() {
+    let st = filled_state(16, 17);
+    let blob = st.serialize_prefix_opts(16, HASH, Compression::None, 4);
+    let cb = CacheBox::start_local().unwrap();
+    {
+        let mut c = edgecache::kvstore::KvClient::connect(&cb.addr()).unwrap();
+        c.set(b"state:e", &blob).unwrap();
+    }
+    let mut p = peer_for(&cb, 8);
+    cb.shutdown();
+    let planner = PeerPlanner::default();
+    let mut claimers = vec![(0usize, &mut p)];
+    let fetch = fetch_prefix_multi(
+        &mut claimers, &planner, b"state:e", 16, false, 4, 12, HASH, DIMS,
+    );
+    assert!(fetch.is_none(), "all-dead fabric must fail, never restore junk");
+}
+
+// ---------------------------------------------------------------------------
+// engine-backed end-to-end failover (skips without artifacts/tiny)
+// ---------------------------------------------------------------------------
+
+fn engine() -> Option<Arc<Engine>> {
+    if !edgecache::artifacts_dir().join("tiny/meta.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return None;
+    }
+    Some(Arc::new(Engine::load_preset("tiny").unwrap()))
+}
+
+fn fabric_cfg(name: &str, boxes: &[&CacheBox]) -> EdgeClientConfig {
+    let mut cfg = EdgeClientConfig::native(None);
+    cfg.name = name.into();
+    cfg.max_new_tokens = Some(2);
+    cfg.sync_interval = None;
+    cfg.peers = boxes
+        .iter()
+        .map(|cb| edgecache::coordinator::PeerConfig::new(cb.addr()))
+        .collect();
+    cfg
+}
+
+#[test]
+fn replicated_upload_survives_peer_death_mid_trace() {
+    // the satellite acceptance: with two peers and replication, killing a
+    // peer mid-trace keeps the partial hit alive — the planner re-fetches
+    // the orphaned chunks from the survivor, the assembled state is
+    // uncorrupted (the response reproduces the solo baseline), and the
+    // counters show re-planning instead of full-blob fallbacks
+    let Some(eng) = engine() else { return };
+    let cb_a = CacheBox::start_local().unwrap();
+    let cb_b = CacheBox::start_local().unwrap();
+    let mut cfg = fabric_cfg("failover", &[&cb_a, &cb_b]);
+    cfg.replicas = 1; // every upload lands on both boxes
+    cfg.compression = Compression::Deflate;
+    cfg.chunk_tokens = 4;
+    let mut c = EdgeClient::new(Arc::clone(&eng), cfg).unwrap();
+
+    let gen = edgecache::workload::Generator::new(31);
+    let p0 = gen.prompt("astronomy", 0, 2);
+    let p1 = gen.prompt("astronomy", 1, 2); // shares instruction + examples
+
+    let baseline = {
+        let mut solo = EdgeClient::new(
+            Arc::clone(&eng),
+            fabric_cfg("solo", &[]),
+        )
+        .unwrap();
+        let r = solo.query(&p1).unwrap();
+        solo.shutdown();
+        r.response_tokens
+    };
+
+    let r0 = c.query(&p0).unwrap();
+    assert_eq!(r0.case, HitCase::Miss);
+    assert_eq!(c.stats.replica_uploads, 1, "replication must copy the blob");
+    let (keys_a, ..) = cb_a.stats();
+    let (keys_b, ..) = cb_b.stats();
+    assert!(keys_a > 0 && keys_b > 0, "both boxes hold the entry");
+
+    // kill peer 0 mid-trace; its catalog still claims every range
+    cb_a.shutdown();
+
+    let r1 = c.query(&p1).unwrap();
+    assert_eq!(
+        r1.case,
+        HitCase::AllExamples,
+        "survivor must keep the partial hit alive"
+    );
+    assert!(!r1.false_positive);
+    assert_eq!(r1.response_tokens, baseline, "no corruption through failover");
+    assert_eq!(c.stats.range_fetches, 1, "the fabric range path served the hit");
+    assert_eq!(
+        c.stats.full_fetch_fallbacks, 0,
+        "orphans re-plan to the survivor, not to a full blob"
+    );
+    assert!(
+        c.stats.re_plans >= 1 || c.stats.peer_failures >= 1,
+        "the dead peer must show up in the planner counters: {:?}",
+        c.stats
+    );
+
+    // the trace keeps going: an exact repeat now fully hits via survivor
+    let r2 = c.query(&p1).unwrap();
+    assert_eq!(r2.case, HitCase::Full);
+    assert_eq!(r2.response_tokens, baseline);
+    c.shutdown();
+    cb_b.shutdown();
+}
+
+#[test]
+fn two_peer_client_stripes_partial_hits() {
+    // multi-source acceptance through the full client: a replicated entry
+    // is fetched from both boxes at once and the ledgers show both sides
+    let Some(eng) = engine() else { return };
+    let cb_a = CacheBox::start_local().unwrap();
+    let cb_b = CacheBox::start_local().unwrap();
+    let mut cfg = fabric_cfg("stripe", &[&cb_a, &cb_b]);
+    cfg.replicas = 1;
+    cfg.chunk_tokens = 2; // many chunks: both stripes non-empty
+    let mut c = EdgeClient::new(Arc::clone(&eng), cfg).unwrap();
+
+    let gen = edgecache::workload::Generator::new(37);
+    let p0 = gen.prompt("virology", 0, 2);
+    let p1 = gen.prompt("virology", 1, 2);
+
+    let r0 = c.query(&p0).unwrap();
+    assert_eq!(r0.case, HitCase::Miss);
+    let r1 = c.query(&p1).unwrap();
+    assert_eq!(r1.case, HitCase::AllExamples);
+    assert_eq!(c.stats.range_fetches, 1);
+    assert_eq!(c.stats.full_fetch_fallbacks, 0);
+    assert_eq!(c.stats.multi_source_fetches, 1, "hit must stripe across peers");
+    let ledgers = c.peer_ledgers();
+    assert!(
+        ledgers.iter().all(|l| l.bytes_down > 0),
+        "both peers served bytes: {ledgers:?}"
+    );
+    // correctness through the striped path
+    let r2 = c.query(&p1).unwrap();
+    assert_eq!(r2.case, HitCase::Full);
+    assert_eq!(r1.response_tokens, r2.response_tokens);
+    c.shutdown();
+    cb_a.shutdown();
+    cb_b.shutdown();
+}
+
+#[test]
+fn one_peer_config_is_the_degenerate_fabric() {
+    // no special-case single-box path: a 1-peer fabric behaves exactly
+    // like the paper's topology, range path included
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    let mut cfg = fabric_cfg("degenerate", &[&cb]);
+    cfg.compression = Compression::Deflate;
+    let mut c = EdgeClient::new(Arc::clone(&eng), cfg).unwrap();
+    let gen = edgecache::workload::Generator::new(41);
+    let p0 = gen.prompt("anatomy", 0, 2);
+    let p1 = gen.prompt("anatomy", 1, 2);
+
+    let r0 = c.query(&p0).unwrap();
+    assert_eq!(r0.case, HitCase::Miss);
+    let r1 = c.query(&p1).unwrap();
+    assert_eq!(r1.case, HitCase::AllExamples);
+    assert_eq!(c.stats.range_fetches, 1);
+    assert_eq!(c.stats.multi_source_fetches, 0, "one peer cannot stripe");
+    assert!(r1.saved_bytes > 0);
+    c.shutdown();
+    cb.shutdown();
+}
+
+#[test]
+fn placement_spreads_fresh_uploads_across_peers() {
+    // power-of-two-choices on used_bytes: distinct-domain misses must not
+    // all pile onto one box
+    let Some(eng) = engine() else { return };
+    let cb_a = CacheBox::start_local().unwrap();
+    let cb_b = CacheBox::start_local().unwrap();
+    let cfg = fabric_cfg("placer", &[&cb_a, &cb_b]);
+    let mut c = EdgeClient::new(Arc::clone(&eng), cfg).unwrap();
+    let gen = edgecache::workload::Generator::new(43);
+    for (i, domain) in ["marketing", "sociology", "nutrition", "prehistory"]
+        .iter()
+        .enumerate()
+    {
+        let p = gen.prompt(domain, i as u64, 1);
+        let r = c.query(&p).unwrap();
+        assert_eq!(r.case, HitCase::Miss);
+    }
+    let (keys_a, ..) = cb_a.stats();
+    let (keys_b, ..) = cb_b.stats();
+    assert!(
+        keys_a > 0 && keys_b > 0,
+        "two-choices placement must use both boxes ({keys_a}/{keys_b})"
+    );
+    let ledgers = c.peer_ledgers();
+    assert_eq!(
+        ledgers.iter().map(|l| l.uploads).sum::<u64>(),
+        4,
+        "{ledgers:?}"
+    );
+    c.shutdown();
+    cb_a.shutdown();
+    cb_b.shutdown();
+}

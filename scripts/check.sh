@@ -30,12 +30,24 @@ cargo test -q
 echo "== cargo test -q --test integration_failures =="
 cargo test -q --test integration_failures
 
+# The peer-fabric suite covers the multi-box failure ladder (dead shares,
+# dead head peers, survivor re-planning) with engine-free tests that always
+# run; keep it un-skippable the same way.
+echo "== cargo test -q --test integration_fabric =="
+cargo test -q --test integration_fabric
+
 # Streaming-assembly smoke (`just bench-smoke`): a tiny-parameter run of the
 # overlap bench whose built-in assertions pin the hot-path claim — streaming
 # beats store-and-forward and restore completes ~1 chunk-decode after the
 # last byte.
 echo "== streaming assembly smoke (EDGECACHE_SMOKE=1) =="
 EDGECACHE_SMOKE=1 cargo bench --bench streaming_assembly
+
+# Peer-fabric smoke (`just bench-peers`): asserts 2-peer multi-source
+# fetch strictly beats 1-peer on the shaped link, and that a mid-trace
+# peer death completes the trace via survivor re-planning (hit rate 1.0).
+echo "== peer fabric smoke (EDGECACHE_SMOKE=1) =="
+EDGECACHE_SMOKE=1 cargo bench --bench peer_fabric
 
 if [ "${1:-}" != "--no-clippy" ]; then
     echo "== cargo clippy -- -D warnings =="
