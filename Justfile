@@ -44,3 +44,16 @@ bench-peers:
 # within ~1 chunk-decode of last-byte arrival
 bench-smoke:
     cd rust && EDGECACHE_SMOKE=1 cargo bench --bench streaming_assembly
+
+# placement bench, full sweep (emits BENCH_placement.json): ring vs p2c on
+# byte balance, post-reboot (catalog-less) hit rate, and post-death
+# re-replication via fabric::repair_entry
+bench-placement-full:
+    cd rust && cargo bench --bench placement
+
+# the same bench with tiny parameters — the check.sh smoke gate: asserts
+# the ring's post-reboot hit rate strictly beats p2c's, ring byte imbalance
+# stays under the documented bound, and repair restores the replication
+# factor after a peer death
+bench-placement:
+    cd rust && EDGECACHE_SMOKE=1 cargo bench --bench placement

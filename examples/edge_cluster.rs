@@ -10,6 +10,7 @@
 //! EDGECACHE_PACED=1 cargo run --release --example edge_cluster  # paper pacing
 //! EDGECACHE_PRESET=edge-270m cargo run --release --example edge_cluster
 //! EDGECACHE_PEERS=3 EDGECACHE_REPLICAS=1 cargo run --release --example edge_cluster
+//! EDGECACHE_PLACEMENT=ring cargo run --release --example edge_cluster
 //! ```
 //!
 //! Reports per-case TTFT/TTLT distributions, the cooperative-reuse effect
@@ -22,7 +23,9 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
-use edgecache::coordinator::{CacheBox, EdgeClient, EdgeClientConfig, PeerConfig};
+use edgecache::coordinator::{
+    CacheBox, EdgeClient, EdgeClientConfig, PeerConfig, PlacementKind,
+};
 use edgecache::devicemodel::DeviceProfile;
 use edgecache::engine::Engine;
 use edgecache::metrics::CaseAggregate;
@@ -51,11 +54,17 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(0);
+    let placement = match std::env::var("EDGECACHE_PLACEMENT") {
+        Ok(v) => PlacementKind::by_name(&v)
+            .unwrap_or_else(|| panic!("EDGECACHE_PLACEMENT={v}: expected p2c|ring")),
+        Err(_) => PlacementKind::PowerOfTwoChoices,
+    };
 
     println!("== edgecache end-to-end cluster ==");
     println!(
         "preset={preset} paced={paced} domains={n_domains} per_domain={per_domain} \
-         peers={n_peers} replicas={replicas}"
+         peers={n_peers} replicas={replicas} placement={}",
+        placement.name()
     );
 
     // the peer fabric: N cache boxes on real TCP sockets
@@ -84,6 +93,7 @@ fn main() -> anyhow::Result<()> {
         name: name.to_string(),
         peers: peers.clone(),
         replicas,
+        placement,
         link: if paced { LinkModel::wifi4_2g4() } else { LinkModel::loopback() },
         device: if paced { DeviceProfile::pi_zero_2w() } else { DeviceProfile::host() },
         max_new_tokens: Some(if paced { 4 } else { 8 }),
@@ -165,20 +175,25 @@ fn main() -> anyhow::Result<()> {
     println!("\nwall time {:.1} s, {} queries, {:.2} q/s", wall.as_secs_f64(), total_queries, throughput);
     for c in &clients {
         println!(
-            "  {}: hits by case {:?}, FPs {}, down {:.2} MB, up {:.2} MB, \
-             multi-source {}, re-plans {}",
+            "  {} [{}]: hits by case {:?}, FPs {}, down {:.2} MB, up {:.2} MB, \
+             multi-source {}, re-plans {}, fallback probes {} ({} hits), repairs {}",
             c.cfg.name,
+            c.placement_name(),
             c.stats.hits_by_case,
             c.stats.false_positives,
             c.stats.bytes_down as f64 / 1e6,
             c.stats.bytes_up as f64 / 1e6,
             c.stats.multi_source_fetches,
             c.stats.re_plans,
+            c.stats.fallback_probes,
+            c.stats.fallback_probe_hits,
+            c.stats.repair_republishes,
         );
         for l in c.peer_ledgers() {
             println!(
                 "    peer {}: down {:.2} MB, up {:.2} MB, shares {} ({} failed), \
-                 uploads {} (+{} replicas), {} sync rounds",
+                 uploads {} (+{} replicas), placed {}, probes {}, repairs {}, \
+                 {} sync rounds",
                 l.addr,
                 l.bytes_down as f64 / 1e6,
                 l.bytes_up as f64 / 1e6,
@@ -186,6 +201,9 @@ fn main() -> anyhow::Result<()> {
                 l.share_failures,
                 l.uploads,
                 l.replica_uploads,
+                l.placed_entries,
+                l.fallback_probes,
+                l.repair_republishes,
                 l.sync_rounds,
             );
         }

@@ -1,0 +1,278 @@
+//! Placement acceptance bench — ring vs p2c on the three axes the
+//! placement API redesign trades between, measured over real cache-box
+//! TCP servers where sockets matter:
+//!
+//! * **(a) load balance** (no sockets): place many synthetic keys with
+//!   both policies and compare byte-load imbalance (max/mean).  p2c
+//!   probes loads and balances almost perfectly; the ring trades a
+//!   bounded hash imbalance — asserted under [`RING_BALANCE_BOUND`], the
+//!   bound README documents — for determinism.
+//! * **(b) post-reboot hit rate**: entries are uploaded through each
+//!   policy, then the client "reboots" with empty Bloom state and no
+//!   sync.  The ring recovers by probing each key's 1+k designated
+//!   owners; p2c has no owner set to probe and recovers nothing.
+//!   Asserted: ring hit rate strictly beats p2c's.
+//! * **(c) post-death re-replication**: ring-placed replicated entries
+//!   lose a box mid-fleet; `fabric::repair_entry` sweeps the recomputed
+//!   owner sets and re-publishes the missing copies.  Asserted: every
+//!   surviving entry is back at the configured replication factor.
+//!
+//! Emits `BENCH_placement.json`.
+//!
+//! Env: EDGECACHE_SMOKE=1 (reduced sizes for the check.sh gate),
+//!      EDGECACHE_PLACEMENT_JSON (output path, default
+//!      BENCH_placement.json).
+
+use edgecache::coordinator::fabric::{repair_entry, Peer, PeerConfig};
+use edgecache::coordinator::placement::{
+    Placement, PowerOfTwoChoices, RendezvousRing,
+};
+use edgecache::coordinator::{CacheBox, PeerPlanner};
+use edgecache::kvstore::KvClient;
+use edgecache::netsim::LinkModel;
+use edgecache::util::bytes::SharedBytes;
+use edgecache::util::json::Json;
+use edgecache::util::rng::Rng;
+
+/// Documented balance bound (see README "Placement"): ring byte-load
+/// imbalance (max peer load / mean peer load) stays under this at ≥256
+/// uniform keys over 4 peers.
+const RING_BALANCE_BOUND: f64 = 1.35;
+
+fn synth_keys(n: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..16).map(|_| rng.below(256) as u8).collect())
+        .collect()
+}
+
+fn main() {
+    edgecache::util::logger::init_from_env();
+    let smoke = std::env::var("EDGECACHE_SMOKE").as_deref() == Ok("1");
+
+    println!("=================================================================");
+    println!(" placement — ring vs p2c: balance, reboot recovery, repair{}",
+        if smoke { "  [smoke]" } else { "" });
+    println!("=================================================================");
+
+    // ---- (a) byte-load balance across 4 synthetic peers -----------------
+    let n_keys = if smoke { 256 } else { 1024 };
+    let keys = synth_keys(n_keys, 5);
+    let mut rng = Rng::new(6);
+    let sizes: Vec<u64> = (0..n_keys).map(|_| 8_000 + rng.below(24_000)).collect();
+
+    let ring = RendezvousRing::new((0..4).map(|i| format!("box-{i}:760{i}")).collect());
+    let mut ring_load = [0u64; 4];
+    for (k, &sz) in keys.iter().zip(&sizes) {
+        ring_load[ring.owners(k, 0)[0]] += sz;
+    }
+
+    let mut p2c = PowerOfTwoChoices::new(4, PeerPlanner::default(), 7);
+    let mut p2c_load = [0u64; 4];
+    for (k, &sz) in keys.iter().zip(&sizes) {
+        let loads = p2c_load;
+        let target = p2c.place_upload(k, 0, &mut |i| loads[i])[0];
+        p2c_load[target] += sz;
+    }
+
+    let imbalance = |loads: &[u64; 4]| -> f64 {
+        let total: u64 = loads.iter().sum();
+        let mean = total as f64 / 4.0;
+        *loads.iter().max().unwrap() as f64 / mean
+    };
+    let (ring_imb, p2c_imb) = (imbalance(&ring_load), imbalance(&p2c_load));
+    println!(
+        "(a) {n_keys} keys over 4 peers: byte imbalance ring {ring_imb:.3}x mean, p2c {p2c_imb:.3}x mean \
+         (documented ring bound {RING_BALANCE_BOUND}x)"
+    );
+    assert!(
+        ring_imb <= RING_BALANCE_BOUND,
+        "ring byte-load imbalance {ring_imb:.3} exceeds the documented bound {RING_BALANCE_BOUND}"
+    );
+
+    // ---- (b) post-reboot hit rate: owner probing vs nothing -------------
+    // Option-wrapped so the (c) section can kill one box by value while
+    // the others stay indexable
+    let mut boxes: Vec<Option<CacheBox>> = (0..3)
+        .map(|_| Some(CacheBox::start_local().expect("cache box")))
+        .collect();
+    let addrs: Vec<String> = boxes
+        .iter()
+        .map(|b| b.as_ref().unwrap().addr())
+        .collect();
+    let mut conns: Vec<KvClient> = addrs
+        .iter()
+        .map(|a| KvClient::connect(a).expect("conn"))
+        .collect();
+    let n_entries = if smoke { 8 } else { 24 };
+    let replicas = 1usize;
+    let mut payload_rng = Rng::new(9);
+    let payload = |rng: &mut Rng| -> Vec<u8> {
+        let len = 4_000 + rng.below(12_000) as usize;
+        (0..len).map(|_| rng.below(256) as u8).collect()
+    };
+
+    let mut policies: Vec<(&str, Box<dyn Placement>)> = vec![
+        (
+            "ring",
+            Box::new(RendezvousRing::new(addrs.clone())),
+        ),
+        (
+            "p2c",
+            Box::new(PowerOfTwoChoices::new(addrs.len(), PeerPlanner::default(), 11)),
+        ),
+    ];
+    let mut hit_rates: Vec<(String, f64)> = Vec::new();
+    for (pname, policy) in policies.iter_mut() {
+        // a warm fleet: every entry uploaded to primary + replica
+        let entry_keys: Vec<Vec<u8>> = (0..n_entries)
+            .map(|e| format!("state:{pname}:{e}").into_bytes())
+            .collect();
+        for key in &entry_keys {
+            let targets = policy.place_upload(key, replicas, &mut |i| {
+                conns[i].used_bytes().map(|v| v as u64).unwrap_or(u64::MAX)
+            });
+            assert!(!targets.is_empty(), "{pname}: placement must name a target");
+            let blob = payload(&mut payload_rng);
+            for &t in &targets {
+                conns[t].set(key, &blob).expect("seed upload");
+            }
+        }
+        // "reboot": empty Bloom state, sync lagging — the only recourse is
+        // deterministic owner probing, bounded to primary + replicas
+        let mut hits = 0usize;
+        let mut probes = 0usize;
+        for key in &entry_keys {
+            let owners = policy.owners(key, replicas);
+            probes += owners.len();
+            if owners
+                .iter()
+                .any(|&i| conns[i].exists(key).unwrap_or(false))
+            {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / n_entries as f64;
+        println!(
+            "(b) {pname}: post-reboot hit rate {rate:.2} ({hits}/{n_entries}, {probes} bounded probes)"
+        );
+        hit_rates.push((pname.to_string(), rate));
+    }
+    let ring_rate = hit_rates.iter().find(|(n, _)| n == "ring").unwrap().1;
+    let p2c_rate = hit_rates.iter().find(|(n, _)| n == "p2c").unwrap().1;
+    assert!(
+        ring_rate > p2c_rate,
+        "ring post-reboot hit rate ({ring_rate}) must strictly beat p2c's ({p2c_rate})"
+    );
+    assert_eq!(ring_rate, 1.0, "every ring-placed entry must be recoverable");
+
+    // ---- (c) post-death re-replication via fabric::repair_entry ---------
+    let mut ring = RendezvousRing::new(addrs.clone());
+    let repair_keys: Vec<Vec<u8>> = (0..n_entries)
+        .map(|e| format!("state:repair:{e}").into_bytes())
+        .collect();
+    for key in &repair_keys {
+        let blob = payload(&mut payload_rng);
+        for &o in &ring.owners(key, replicas) {
+            conns[o].set(key, &blob).expect("seed replicated entry");
+        }
+    }
+    let mut peers: Vec<Peer> = addrs
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            Peer::connect(PeerConfig::new(a.clone()), LinkModel::loopback(), 20 + i as u64, 1)
+                .expect("peer connect")
+        })
+        .collect();
+    // kill the primary owner of the first entry — it certainly holds data
+    let dead = ring.owners(&repair_keys[0], replicas)[0];
+    let owned_by_dead = repair_keys
+        .iter()
+        .filter(|k| ring.owners(k, replicas).contains(&dead))
+        .count();
+    println!("(c) killing box {dead} ({owned_by_dead}/{n_entries} entries lose a copy)");
+    boxes[dead].take().expect("box alive").shutdown();
+    let mut alive = vec![true; addrs.len()];
+    alive[dead] = false;
+    ring.on_membership_change(&alive);
+
+    // the repair sweep any client runs after using an entry: recompute the
+    // owner set, probe it, re-publish where the copy is gone
+    let mut republished = 0u64;
+    for key in &repair_keys {
+        let owners = ring.owners(key, replicas);
+        assert!(!owners.contains(&dead), "dead boxes never own");
+        let src = owners
+            .iter()
+            .copied()
+            .find(|&i| conns[i].exists(key).unwrap_or(false))
+            .expect("a surviving owner still serves the entry");
+        let blob: SharedBytes = conns[src].get(key).expect("fetch").expect("entry bytes");
+        let out = repair_entry(&mut peers, &owners, key, None, &mut || blob.clone());
+        republished += out.republished;
+        assert_eq!(out.dead, 0, "repair must only touch live owners");
+    }
+    assert_eq!(
+        republished as usize, owned_by_dead,
+        "exactly the entries that lost a copy get re-published"
+    );
+    assert!(republished >= 1, "the dead box must have owned something");
+    // replication factor restored: every entry serves from its full
+    // (recomputed) owner set
+    for key in &repair_keys {
+        for &o in &ring.owners(key, replicas) {
+            assert!(
+                conns[o].exists(key).unwrap_or(false),
+                "entry {:?} missing on owner {o} after repair",
+                String::from_utf8_lossy(key)
+            );
+        }
+    }
+    println!(
+        "(c) repair re-published {republished} copies; replication factor {} restored for all {n_entries} entries",
+        1 + replicas
+    );
+
+    let json = Json::obj(vec![
+        ("smoke", Json::Bool(smoke)),
+        (
+            "balance",
+            Json::obj(vec![
+                ("keys", Json::Int(n_keys as i64)),
+                ("peers", Json::Int(4)),
+                ("ring_imbalance_x", Json::Num(ring_imb)),
+                ("p2c_imbalance_x", Json::Num(p2c_imb)),
+                ("ring_bound_x", Json::Num(RING_BALANCE_BOUND)),
+            ]),
+        ),
+        (
+            "post_reboot",
+            Json::obj(vec![
+                ("entries", Json::Int(n_entries as i64)),
+                ("replicas", Json::Int(replicas as i64)),
+                ("ring_hit_rate", Json::Num(ring_rate)),
+                ("p2c_hit_rate", Json::Num(p2c_rate)),
+            ]),
+        ),
+        (
+            "repair",
+            Json::obj(vec![
+                ("entries", Json::Int(n_entries as i64)),
+                ("lost_copies", Json::Int(owned_by_dead as i64)),
+                ("republished", Json::Int(republished as i64)),
+                ("replication_factor", Json::Int((1 + replicas) as i64)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("EDGECACHE_PLACEMENT_JSON")
+        .unwrap_or_else(|_| "BENCH_placement.json".into());
+    match std::fs::write(&path, json.to_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+    for cb in boxes.into_iter().flatten() {
+        cb.shutdown();
+    }
+    println!("placement done.");
+}

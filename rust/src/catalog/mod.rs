@@ -15,6 +15,14 @@
 //! [`LocalCatalog`] additionally tracks the master-catalog version it last
 //! synchronized to; the async sync loop lives in `coordinator` and applies
 //! [`LocalCatalog::apply_delta`].
+//!
+//! The catalog suppresses wasted probes but a Bloom false *negative*
+//! (fresh filter after a reboot, lagging sync) is an unrecoverable miss on
+//! its own — the client layers deterministic rendezvous placement on top
+//! (`coordinator::placement`), so a catalog miss can still fall back to
+//! probing the ring-designated owners, and a probe-confirmed hit is
+//! registered back here ([`LocalCatalog::register_key`]) to re-warm the
+//! filter.
 
 use sha2::{Digest, Sha256};
 
@@ -189,6 +197,13 @@ impl LocalCatalog {
 
     pub fn register_key(&mut self, key: &[u8]) {
         self.filter.insert(key);
+    }
+
+    /// Probe the filter for a single key (upload dedup and fallback-probe
+    /// warm-up checks; no `min_hit_tokens` filtering — that is a lookup
+    /// concern, not a membership one).
+    pub fn contains_key(&self, key: &[u8]) -> bool {
+        self.filter.contains(key)
     }
 
     /// Apply a master-catalog delta (async sync, Figure 2 green arrow).

@@ -17,9 +17,14 @@
 //! then striped across the claiming peers and downloaded concurrently —
 //! aggregate goodput scales with peer count, and a peer dying mid-stream
 //! re-plans its orphaned chunks onto the survivors before ever falling
-//! back to a full blob or local prefill.  Uploads pick a placement peer by
-//! power-of-two-choices on reported `used_bytes` (plus optional replicas),
-//! and a one-peer configuration is simply the degenerate one-stripe plan —
+//! back to a full blob or local prefill.  Uploads place through the
+//! pluggable [`Placement`] policy (`coordinator::placement`): the default
+//! power-of-two-choices probes `used_bytes` and balances load, while the
+//! rendezvous ring places deterministically — a catalog miss then falls
+//! back to probing the key's designated owners (catalog-less recovery
+//! after a reboot) and a hit's owner set is swept post-response to
+//! re-publish lost replicas ([`crate::coordinator::fabric::repair_entry`]).
+//! A one-peer configuration is simply the degenerate one-stripe plan —
 //! there is no separate single-box code path.
 //!
 //! Transfers are **range-aware** (the SparKV argument: move only bytes whose
@@ -55,6 +60,7 @@
 //! cost, so uploads are post-response).  All remote bytes flow through the
 //! Wi-Fi [`Shaper`] and all compute through the device [`Pacer`].
 
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -64,7 +70,10 @@ use crate::catalog::{
     lookup_tagged, ranges_for, state_store_key, LocalCatalog, ModelMeta, PromptRange,
 };
 use crate::coordinator::fabric::{
-    fetch_full_entry, fetch_prefix_multi, Peer, PeerConfig,
+    fetch_full_entry, fetch_prefix_multi, repair_entry, Peer, PeerConfig,
+};
+use crate::coordinator::placement::{
+    Placement, PlacementKind, PowerOfTwoChoices, RendezvousRing, Unplaced,
 };
 use crate::coordinator::policy::{FetchPolicy, PeerPlanner};
 use crate::coordinator::sync::CatalogSync;
@@ -80,7 +89,6 @@ use crate::model::state::{
 };
 use crate::netsim::LinkModel;
 use crate::util::bytes::SharedBytes;
-use crate::util::rng::Rng;
 use crate::workload::Prompt;
 
 /// Which of the paper's five evaluation cases a query landed in.
@@ -167,8 +175,17 @@ pub struct EdgeClientConfig {
     /// placement primary (clamped to the fleet size).  Replication trades
     /// upload bytes for read fan-out and failure resilience: a replicated
     /// range survives its primary dying mid-trace, because the surviving
-    /// claimers re-serve the orphaned chunks.
+    /// claimers re-serve the orphaned chunks.  With the ring policy the
+    /// replica set is the key's `1 + replicas` HRW owners — derivable by
+    /// any client, which is what enables catalog-less fallback probing
+    /// and replica repair.
     pub replicas: usize,
+    /// Which placement policy decides where uploads land
+    /// (`coordinator::placement`): `PowerOfTwoChoices` probes loads and
+    /// balances bytes (the historical behaviour), `RendezvousRing` places
+    /// deterministically so a catalog miss can still probe the designated
+    /// owners and repair can restore lost replicas.
+    pub placement: PlacementKind,
     pub device: DeviceProfile,
     /// Response-token budget; `None` uses the device profile's typical
     /// length (64 for the low-end 270M setting, 1 for the high-end 1B).
@@ -206,6 +223,7 @@ impl EdgeClientConfig {
             name: "low-end".into(),
             peers: server.into_iter().map(PeerConfig::new).collect(),
             replicas: 0,
+            placement: PlacementKind::PowerOfTwoChoices,
             link: LinkModel::wifi4_2g4(),
             device: DeviceProfile::pi_zero_2w(),
             max_new_tokens: None,
@@ -291,6 +309,18 @@ pub struct ClientStats {
     pub peer_failures: u64,
     /// Replica copies shipped by the upload placement policy.
     pub replica_uploads: u64,
+    /// EXISTS probes actually sent to ring-designated owners during
+    /// lookup: the catalog-miss fallback plus the `--no-catalog` ablation
+    /// under deterministic placement (both bounded to primary + replicas
+    /// per candidate range).  Repair-sweep probes are *not* counted here —
+    /// they show up per peer in `PeerLedger::fallback_probes`.
+    pub fallback_probes: u64,
+    /// Catalog misses the owner-probe fallback turned into hits (the
+    /// post-reboot recovery path).
+    pub fallback_probe_hits: u64,
+    /// Entries re-published by ring-driven replica repair to owners that
+    /// had lost their copy.
+    pub repair_republishes: u64,
 }
 
 /// Where a downloaded state physically lives on the fabric — the anchor
@@ -348,7 +378,18 @@ pub struct EdgeClient {
     pub catalog: Arc<Mutex<LocalCatalog>>,
     peers: Vec<Peer>,
     planner: PeerPlanner,
-    rng: Rng,
+    /// The pluggable placement policy (`cfg.placement`): where uploads
+    /// land, which owners a catalog miss may probe, where repair
+    /// re-publishes.
+    policy: Box<dyn Placement>,
+    /// Repair memo: store keys whose owner set was sweep-verified intact,
+    /// keyed to the exact owner set.  Invalidated when membership changes
+    /// the owner set or when a fetch observes a lost copy (empty GET,
+    /// failed share); a silent eviction on an owner the fetch never
+    /// touched heals only via a future sweep trigger (ROADMAP: proactive
+    /// repair sweep).  One entry per distinct hit entry — bounded by the
+    /// working set of reused prompts.
+    verified_owners: HashMap<Vec<u8>, Vec<usize>>,
     pacer: Pacer,
     sampler: Sampler,
     pub stats: ClientStats,
@@ -384,18 +425,46 @@ impl EdgeClient {
             }
         };
         let pacer = Pacer::new(cfg.device.clone());
+        let planner = PeerPlanner::default();
+        // ring nodes hash by *address*, so every client sharing a fleet
+        // computes the same owner sets regardless of peer listing order;
+        // p2c keeps its historical seeded draw sequence
+        let policy: Box<dyn Placement> = match cfg.placement {
+            PlacementKind::PowerOfTwoChoices => Box::new(PowerOfTwoChoices::new(
+                cfg.peers.len(),
+                planner,
+                cfg.seed ^ 0x9EE8,
+            )),
+            PlacementKind::RendezvousRing => Box::new(RendezvousRing::weighted(
+                cfg.peers.iter().map(|p| (p.addr.clone(), p.weight)).collect(),
+            )),
+        };
         Ok(EdgeClient {
             sampler: Sampler::greedy(),
             meta,
             catalog,
             peers,
-            planner: PeerPlanner::default(),
-            rng: Rng::new(cfg.seed ^ 0x9EE8),
+            planner,
+            policy,
+            verified_owners: HashMap::new(),
             pacer,
             stats: ClientStats::default(),
             engine,
             cfg,
         })
+    }
+
+    /// Push the currently-observed peer connectivity into the placement
+    /// policy, so owner sets skip dead boxes (their ring successors take
+    /// over) until a reconnect succeeds.
+    fn refresh_membership(&mut self) {
+        let alive: Vec<bool> = self.peers.iter().map(|p| p.is_connected()).collect();
+        self.policy.on_membership_change(&alive);
+    }
+
+    /// The active placement policy's name (telemetry).
+    pub fn placement_name(&self) -> &'static str {
+        self.policy.name()
     }
 
     pub fn engine(&self) -> &Engine {
@@ -557,10 +626,89 @@ impl EdgeClient {
         }
     }
 
+    /// EXISTS-probe `peer_set` for `range`'s store key over each peer's
+    /// shaped link, returning the claiming peers.  `fallback` counts the
+    /// probes into the catalog-less fallback telemetry.
+    fn probe_peers_exists(
+        &mut self,
+        peer_set: &[usize],
+        range: &PromptRange,
+        fallback: bool,
+    ) -> Vec<usize> {
+        let key = state_store_key(&range.key);
+        let mut claimers = Vec::new();
+        for &i in peer_set {
+            if i >= self.peers.len() {
+                continue;
+            }
+            let probe = {
+                let peer = &mut self.peers[i];
+                let Some((conn, shaper)) = peer.conn_parts() else {
+                    continue; // unreachable peer: no probe was sent
+                };
+                shaper.shaped(0, || conn.exists(&key))
+            };
+            if fallback {
+                self.stats.fallback_probes += 1;
+                self.peers[i].ledger.fallback_probes += 1;
+            }
+            match probe {
+                Ok(true) => claimers.push(i),
+                Ok(false) => {}
+                Err(_) => {
+                    self.peers[i].mark_dead_conn();
+                    self.stats.peer_failures += 1;
+                }
+            }
+        }
+        claimers
+    }
+
+    /// Catalog-less fallback (deterministic placement only): probe each
+    /// candidate range's ring-designated owners, longest range first —
+    /// bounded to primary + replicas per range, never the whole fleet.
+    /// This is how a client that rebooted with an empty Bloom filter (or
+    /// whose catalog sync is lagging) recovers warm-fleet hits a Bloom
+    /// false negative would otherwise lose for good.  A probe-confirmed
+    /// hit re-warms the claimers' local catalogs so the next query skips
+    /// the probes entirely.
+    fn probe_owner_sets(
+        &mut self,
+        ranges: &[PromptRange],
+    ) -> Option<(PromptRange, Vec<usize>)> {
+        for r in ranges.iter().rev() {
+            if r.token_len < self.cfg.min_hit_tokens {
+                continue;
+            }
+            self.refresh_membership();
+            // owners are hashed on the *store* key — the same identity the
+            // upload placed by and an alias target names, so every layer
+            // computes the same boxes
+            let owners = self
+                .policy
+                .owners(&state_store_key(&r.key), self.cfg.replicas);
+            if owners.is_empty() {
+                return None; // non-deterministic policy: nothing to probe
+            }
+            let claimers = self.probe_peers_exists(&owners, r, true);
+            if !claimers.is_empty() {
+                self.stats.fallback_probe_hits += 1;
+                for &i in &claimers {
+                    self.peers[i].catalog.lock().unwrap().register_key(&r.key);
+                }
+                return Some((r.clone(), claimers));
+            }
+        }
+        None
+    }
+
     /// Step 2: consult every peer's local catalog — the hit names the
-    /// peer(s) that claim the range ([`lookup_tagged`]) — or, in the
-    /// no-catalog ablation, probe each peer with EXISTS for every
-    /// candidate range, over that peer's shaped link.
+    /// peer(s) that claim the range ([`lookup_tagged`]).  On a catalog
+    /// miss under deterministic placement, fall back to probing the
+    /// ring-designated owners ([`EdgeClient::probe_owner_sets`]).  In the
+    /// no-catalog ablation, probe with EXISTS for every candidate range
+    /// over the shaped links — against the owner set when placement is
+    /// deterministic, against every peer otherwise.
     fn lookup(
         &mut self,
         ranges: &[PromptRange],
@@ -580,32 +728,33 @@ impl EdgeClient {
                 lookup_tagged(&refs, ranges)
             });
             bd.add(Phase::Bloom, t0.elapsed());
+            if res.is_some() || !self.policy.is_deterministic() {
+                return res;
+            }
+            let t0 = std::time::Instant::now();
+            let res = self.probe_owner_sets(ranges);
+            bd.add(Phase::Redis, t0.elapsed());
             res
         } else {
             // §5.2.3 ablation: every inference pays remote round trips,
-            // once per peer per candidate range until a claimer is found
+            // once per probed peer per candidate range until a claimer is
+            // found — the ring bounds the probed set to the designated
+            // owners instead of the whole fleet
             let t0 = std::time::Instant::now();
+            let deterministic = self.policy.is_deterministic();
             let mut best: Option<(PromptRange, Vec<usize>)> = None;
-            'ranges: for r in ranges.iter().rev() {
-                let key = state_store_key(&r.key);
-                let mut claimers = Vec::new();
-                for i in 0..self.peers.len() {
-                    let peer = &mut self.peers[i];
-                    let probe = {
-                        let Some((conn, shaper)) = peer.conn_parts() else {
-                            continue;
-                        };
-                        shaper.shaped(0, || conn.exists(&key))
-                    };
-                    match probe {
-                        Ok(true) => claimers.push(i),
-                        Ok(false) => {}
-                        Err(_) => peer.mark_dead_conn(),
-                    }
-                }
+            for r in ranges.iter().rev() {
+                let peer_set: Vec<usize> = if deterministic {
+                    self.refresh_membership();
+                    self.policy
+                        .owners(&state_store_key(&r.key), self.cfg.replicas)
+                } else {
+                    (0..self.peers.len()).collect()
+                };
+                let claimers = self.probe_peers_exists(&peer_set, r, deterministic);
                 if !claimers.is_empty() {
                     best = Some((r.clone(), claimers));
-                    break 'ranges;
+                    break;
                 }
             }
             bd.add(Phase::Redis, t0.elapsed());
@@ -677,7 +826,10 @@ impl EdgeClient {
                 }
                 Ok(None) => {
                     // this peer claimed the range but no longer holds it
-                    // (evicted / Bloom FP); another claimer may still
+                    // (evicted / Bloom FP); another claimer may still.
+                    // An observed lost copy also invalidates the repair
+                    // memo so the post-response sweep re-verifies owners.
+                    self.verified_owners.remove(key);
                     log_debug!(
                         "edge-client",
                         "claimer {} lost the entry; rotating",
@@ -737,15 +889,28 @@ impl EdgeClient {
         }
         let target = alias.target_key;
 
+        // fetch order: the alias-serving peer leads (historically it held
+        // the blob too; under ring alias indirection it may hold only the
+        // pointer — head rotation skips past it), the other Bloom claimers
+        // follow, and under deterministic placement the *target key's*
+        // ring owners join last, so an alias discovered by catalog-less
+        // probing can still reach the box that actually holds the blob.
+        let mut order: Vec<usize> = std::iter::once(alias_peer)
+            .chain(claimers.iter().copied().filter(|&i| i != alias_peer))
+            .collect();
+        if self.policy.is_deterministic() {
+            self.refresh_membership();
+            for o in self.policy.owners(&target, self.cfg.replicas) {
+                if !order.contains(&o) {
+                    order.push(o);
+                }
+            }
+        }
+
         // chunk-aligned fabric path: ECS3 aliases carry the target's chunk
         // size, so whole-chunk byte ranges never round to a mid-chunk
         // boundary — and deflated entries are range-served like any other.
-        // The alias-serving peer leads (it certainly holds the entry);
-        // every other claimer joins the stripe plan.
         if let Some(ct) = alias.chunk_tokens {
-            let order: Vec<usize> = std::iter::once(alias_peer)
-                .chain(claimers.iter().copied().filter(|&i| i != alias_peer))
-                .collect();
             let fetch = {
                 let mut sel: Vec<(usize, &mut Peer)> = self
                     .peers
@@ -773,6 +938,12 @@ impl EdgeClient {
                     self.stats.range_fetches += 1;
                     self.stats.re_plans += f.re_plans;
                     self.stats.peer_failures += f.share_failures;
+                    if f.share_failures > 0 {
+                        // a claimer failed or had lost its copy mid-fetch:
+                        // force the next repair sweep to re-verify this
+                        // entry's owners instead of trusting the memo
+                        self.verified_owners.remove(&target);
+                    }
                     if f.multi_source {
                         self.stats.multi_source_fetches += 1;
                     }
@@ -822,10 +993,9 @@ impl EdgeClient {
 
         // full-blob path: legacy (pre-chunking) aliases land here directly,
         // the fabric path lands here when its verification fails.  Try the
-        // claimers in order until one serves a verifiable entry.
-        for &i in std::iter::once(&alias_peer)
-            .chain(claimers.iter().filter(|&&i| i != alias_peer))
-        {
+        // fetch order (claimers, then ring target owners) until one serves
+        // a verifiable entry.
+        for &i in &order {
             if let Some((state, wire, full)) =
                 fetch_full_entry(&mut self.peers[i], &target, m, &hash, dims)
             {
@@ -929,7 +1099,7 @@ impl EdgeClient {
                     r.token_len > skip_up_to
                         && r.token_len <= prompt_tokens
                         && (self.cfg.partial_matching || r.token_len == prompt_tokens)
-                        && !guards.iter().any(|c| c.filter.contains(&r.key))
+                        && !guards.iter().any(|c| c.contains_key(&r.key))
                 })
                 .cloned()
                 .collect()
@@ -953,17 +1123,20 @@ impl EdgeClient {
 
         // shared pipeline tail: the long-range registration plus one tiny
         // alias + registration per shorter range (identical on every peer
-        // that receives a copy)
+        // that receives a copy).  One alias body serves every shorter
+        // range and owner — it only names the target entry.
+        let alias_blob: SharedBytes =
+            encode_range_alias(&long_key, n, compressed, ct).into();
+        let alias_len = alias_blob.len();
         let mut tail_reqs: Vec<Value> = Vec::with_capacity(todo.len() * 2 + 1);
         let mut alias_wire = 0usize;
         tail_reqs.push(register_req(&longest.key));
         for r in todo.iter().filter(|r| r.token_len != n) {
-            let alias = encode_range_alias(&long_key, n, compressed, ct);
-            alias_wire += alias.len();
+            alias_wire += alias_len;
             tail_reqs.push(request_shared(vec![
                 SharedBytes::copy_from(b"SET"),
                 state_store_key(&r.key).into(),
-                alias.into(),
+                alias_blob.clone(),
             ]));
             tail_reqs.push(register_req(&r.key));
         }
@@ -974,7 +1147,7 @@ impl EdgeClient {
         // remainder rides along with the suffix chunks.  Works for deflated
         // bases exactly like raw ones — chunks are independent streams.
         // The splice must land on the base's own peer; fresh blobs go to
-        // the two-choices placement winner instead.
+        // the placement policy's winner instead.
         let delta = delta_base
             .filter(|b| {
                 skip_up_to > 0
@@ -985,20 +1158,38 @@ impl EdgeClient {
             })
             .map(|b| (b, (skip_up_to / ct).min(b.chunk_index.len())))
             .filter(|(_, k)| *k >= 1);
-        // placement choice; `None` (both two-choices probes dead) falls
-        // through to the any-live-peer salvage path below rather than
-        // dropping the upload — other peers may still be reachable
+        // placement targets from the pluggable policy, primary first then
+        // the replica successors (ring: the deterministic HRW owner set,
+        // zero probe round trips; p2c: successive two-choices used_bytes
+        // probes).  The policy is briefly swapped out so its probe closure
+        // can borrow the peer table.
+        let targets: Vec<usize> = if delta.is_some() && self.cfg.replicas == 0 {
+            Vec::new() // primary pinned to the base's peer, nothing to place
+        } else {
+            // with a pinned splice primary the policy only needs the
+            // `replicas` extra copies, not a primary of its own — one
+            // fewer draw, two fewer p2c INFO probes
+            let want = if delta.is_some() {
+                self.cfg.replicas - 1
+            } else {
+                self.cfg.replicas
+            };
+            self.refresh_membership();
+            let mut policy = std::mem::replace(&mut self.policy, Box::new(Unplaced));
+            // placement hashes the *store* key — the identity lookups
+            // probe and alias targets name, so owners agree fleet-wide
+            let t = policy.place_upload(&long_key, want, &mut |i| {
+                self.probe_used_bytes(i)
+            });
+            self.policy = policy;
+            t
+        };
+        // a splice pins the primary to the base entry's own peer; an empty
+        // target set (both p2c probes dead) falls through to the
+        // any-live-peer salvage path below rather than dropping the upload
         let primary: Option<usize> = match &delta {
             Some((b, _)) => Some(b.peer),
-            None => {
-                let candidates: Vec<usize> = (0..self.peers.len()).collect();
-                let planner = self.planner;
-                let mut rng = self.rng.clone();
-                let choice =
-                    planner.place(&mut rng, &candidates, |i| self.probe_used_bytes(i));
-                self.rng = rng;
-                choice
-            }
+            None => targets.first().copied(),
         };
 
         // lazily-built full blob (fresh publishes, replicas, fallbacks);
@@ -1038,6 +1229,7 @@ impl EdgeClient {
                 } else {
                     cl.peers[i].ledger.uploads += 1;
                 }
+                cl.peers[i].ledger.placed_entries += 1;
                 blen + alias_wire
             };
 
@@ -1112,6 +1304,7 @@ impl EdgeClient {
                     }
                     if stored {
                         self.peers[primary].ledger.uploads += 1;
+                        self.peers[primary].ledger.placed_entries += 1;
                         uploaded_to.push(primary);
                     }
                 }
@@ -1148,31 +1341,74 @@ impl EdgeClient {
             return (wire, t0.elapsed(), 0);
         }
 
-        // -- replicas: extra full copies on distinct peers, each placed by
-        // the same two-choices policy as primaries so replica load spreads
-        // by reported used_bytes instead of piling onto low peer indices
+        // -- replicas: extra full copies on the remaining policy targets
+        // (ring: the key's deterministic replica successors, which is what
+        // makes the replica set derivable by any client; p2c: the
+        // two-choices picks made above), falling back to the rest of the
+        // fleet in index order when a target cannot take its copy
         let mut extra = self.cfg.replicas;
-        let mut failed: Vec<usize> = Vec::new();
-        while extra > 0 {
-            let candidates: Vec<usize> = (0..self.peers.len())
-                .filter(|i| !uploaded_to.contains(i) && !failed.contains(i))
-                .collect();
-            if candidates.is_empty() {
+        let mut tried: Vec<usize> = Vec::new();
+        for i in targets.iter().copied().chain(0..self.peers.len()) {
+            if extra == 0 {
                 break;
             }
-            let planner = self.planner;
-            let mut rng = self.rng.clone();
-            let choice =
-                planner.place(&mut rng, &candidates, |i| self.probe_used_bytes(i));
-            self.rng = rng;
-            let Some(i) = choice else { break };
+            if tried.contains(&i) || uploaded_to.contains(&i) {
+                continue;
+            }
+            tried.push(i);
             let added = publish_full_copy(self, i, true, mk_full(state));
             if added > 0 {
                 wire += added;
                 uploaded_to.push(i);
                 extra -= 1;
-            } else {
-                failed.push(i);
+            }
+        }
+
+        // -- ring alias indirection: under deterministic placement every
+        // shorter range's alias must ALSO live at *its own* store key's
+        // owners — the blob bundle (with its co-located aliases) lives at
+        // the longest key's owners, which is not where a catalog-less
+        // probe for a shared prefix will look.  With the pointer at the
+        // prefix key's own owner, the probe finds the alias there and the
+        // fetch follows it to the target key's owners.  Aliases are tens
+        // of bytes, so the extra copies are noise next to the blob.
+        //
+        // Deliberately NOT catalog-registered (no CAT.REGISTER, no local
+        // Bloom entry): these copies are probe targets for catalog-less
+        // recovery, not claims.  A Bloom claim would make lookups name
+        // the alias-only box as a chunk source, planting guaranteed-Nil
+        // stripes into every warm partial hit; Bloom discovery keeps
+        // flowing from the bundle owners' registrations instead.
+        if self.policy.is_deterministic() {
+            let mut extras: Vec<(usize, Vec<Value>, usize)> = Vec::new();
+            self.refresh_membership();
+            for r in todo.iter().filter(|r| r.token_len != n) {
+                let skey = state_store_key(&r.key);
+                for o in self.policy.owners(&skey, self.cfg.replicas) {
+                    if uploaded_to.contains(&o) {
+                        continue; // the bundle there already carries the alias
+                    }
+                    let idx = match extras.iter().position(|(p, ..)| *p == o) {
+                        Some(ix) => ix,
+                        None => {
+                            extras.push((o, Vec::new(), 0));
+                            extras.len() - 1
+                        }
+                    };
+                    let slot = &mut extras[idx];
+                    slot.2 += alias_len;
+                    slot.1.push(request_shared(vec![
+                        SharedBytes::copy_from(b"SET"),
+                        skey.clone().into(),
+                        alias_blob.clone(),
+                    ]));
+                }
+            }
+            for (o, reqs, alias_bytes) in extras {
+                if self.send_upload(o, &reqs, alias_bytes).is_none() {
+                    continue; // a later probe simply misses this owner
+                }
+                wire += alias_bytes;
             }
         }
 
@@ -1189,6 +1425,124 @@ impl EdgeClient {
         let saved = seed_cost.saturating_sub(wire);
         self.stats.bytes_saved += saved as u64;
         (wire, t0.elapsed(), saved)
+    }
+
+    /// Ring-driven replica repair (post-response, deterministic placement
+    /// only): probe the fetched entry's designated owners and re-publish
+    /// it to any owner that no longer serves it — e.g. the ring successor
+    /// that inherited ownership after a peer death, or an owner that
+    /// evicted its copy.  This is how the replication factor is restored
+    /// from the ring itself instead of per-entry bookkeeping: any client
+    /// that just used an entry can recompute its owner set and heal it.
+    ///
+    /// The re-publish is **byte-faithful**: it only runs when the whole
+    /// entry was restored (`base.total_rows == matched`) and it
+    /// re-serializes with the entry's *own* compression and chunk size
+    /// (from the download's delta base), so a repaired replica has the
+    /// exact chunk geometry the survivors advertise — a multi-source
+    /// stripe can mix it with the originals freely.  Repairing a prefix
+    /// of a longer entry, or with this client's own codec settings,
+    /// would plant a divergent copy whose chunk index disagrees with the
+    /// head peer's; those cases are skipped (ROADMAP: proactive repair
+    /// sweep).  Bounded to primary + replicas probes per sweep; a probe
+    /// that discovers a dead owner updates membership and the sweep runs
+    /// once more against the recomputed owner set.
+    fn repair_matched_range(
+        &mut self,
+        ranges: &[PromptRange],
+        matched: usize,
+        base: Option<&DeltaBase>,
+        state: &KvState,
+    ) {
+        if matched == 0 || self.peers.is_empty() || !self.policy.is_deterministic() {
+            return;
+        }
+        let Some(b) = base else { return };
+        let Some(ct) = b.chunk_tokens else {
+            return; // legacy v2 entry: never spliced, never repaired
+        };
+        if b.total_rows == matched {
+            // whole entry restored: a byte-faithful blob re-publish
+            let compression = if b.compressed {
+                Compression::Deflate
+            } else {
+                Compression::None
+            };
+            let store_key = b.store_key.clone();
+            let hash = self.engine.model_hash().to_string();
+            // the catalog key the entry is announced under (present when
+            // the hit range *is* the entry; an alias hit to an
+            // exactly-matched entry repairs the data without
+            // re-announcing it)
+            let catalog_key = ranges
+                .iter()
+                .find(|r| state_store_key(&r.key) == store_key)
+                .map(|r| r.key);
+            // serialized lazily: a sweep that finds every owner intact
+            // (the steady state) ships nothing
+            let mut blob: Option<SharedBytes> = None;
+            let mut mk = || {
+                blob.get_or_insert_with(|| {
+                    state.serialize_prefix_shared_opts(matched, &hash, compression, ct)
+                })
+                .clone()
+            };
+            self.repair_sweep(
+                &store_key,
+                catalog_key.as_ref().map(|k| &k[..]),
+                &mut mk,
+            );
+        } else {
+            // alias hit: an m-row prefix cannot re-create the longer
+            // entry, but the *pointer* can be re-established at the
+            // matched range's own owners — byte-canonical by
+            // construction — so catalog-less recovery of this prefix
+            // survives an alias owner's death.  Not catalog-registered,
+            // like the upload-time alias indirection.
+            let Some(range) = ranges.iter().find(|r| r.token_len == matched) else {
+                return;
+            };
+            let skey = state_store_key(&range.key);
+            let alias: SharedBytes =
+                encode_range_alias(&b.store_key, b.total_rows, b.compressed, ct).into();
+            self.repair_sweep(&skey, None, &mut || alias.clone());
+        }
+    }
+
+    /// The bounded repair sweep shared by the blob and alias repair
+    /// branches: probe `store_key`'s owners, re-publish via `mk` where
+    /// the copy is missing, and re-sweep once if a probe discovered a
+    /// dead owner (membership shifted under us).  A verified-intact
+    /// owner set is memoized per store key, so repeat hits in the steady
+    /// state pay zero probes — the memo self-invalidates whenever
+    /// membership changes the owner set.
+    fn repair_sweep(
+        &mut self,
+        store_key: &[u8],
+        catalog_key: Option<&[u8]>,
+        mk: &mut dyn FnMut() -> SharedBytes,
+    ) {
+        for _round in 0..2 {
+            self.refresh_membership();
+            let owners = self.policy.owners(store_key, self.cfg.replicas);
+            if owners.is_empty() {
+                return;
+            }
+            if self.verified_owners.get(store_key) == Some(&owners) {
+                return; // steady state: this owner set already verified
+            }
+            let out = repair_entry(&mut self.peers, &owners, store_key, catalog_key, mk);
+            self.stats.repair_republishes += out.republished;
+            self.stats.bytes_up += out.wire as u64;
+            if out.dead == 0 {
+                // a rejected publish (box at its memory limit) leaves the
+                // replica missing — don't memoize, so a later hit retries
+                if out.rejected == 0 {
+                    self.verified_owners.insert(store_key.to_vec(), owners);
+                }
+                return; // owner set was current; the sweep is authoritative
+            }
+        }
     }
 
     /// The full steps-1-to-4 query flow for a structured prompt.
@@ -1271,6 +1625,9 @@ impl EdgeClient {
         let (uploaded, upload_time, upload_saved) =
             self.upload_ranges(&state, &ranges, matched, full_len, delta_base.as_ref());
         saved += upload_saved;
+
+        // -- ring-driven replica repair (hit path, post-response) -------------
+        self.repair_matched_range(&ranges, matched, delta_base.as_ref(), &state);
 
         let case = Self::classify(&ranges, matched, full_len);
         self.stats.hits_by_case[case.number() - 1] += 1;

@@ -46,7 +46,7 @@ use crate::catalog::LocalCatalog;
 use crate::coordinator::policy::PeerPlanner;
 use crate::coordinator::sync::CatalogSync;
 use crate::kvstore::client::{getrange_req, ChunksReply, StreamingReplies};
-use crate::kvstore::resp::Value;
+use crate::kvstore::resp::{request_shared, Value};
 use crate::kvstore::KvClient;
 use crate::log_debug;
 use crate::metrics::{PeerLedger, Phase};
@@ -63,15 +63,19 @@ pub struct PeerConfig {
     /// (`EdgeClientConfig::link`), so homogeneous fleets configure one
     /// link once and heterogeneous ones override per box.
     pub link: Option<LinkModel>,
+    /// Relative placement weight for rendezvous-hash ownership (capacity
+    /// hint: a weight-2 box owns ~2x the keys of a weight-1 box).  Ignored
+    /// by the load-probing p2c policy.  1.0 = uniform.
+    pub weight: f64,
 }
 
 impl PeerConfig {
     pub fn new(addr: impl Into<String>) -> Self {
-        PeerConfig { addr: addr.into(), link: None }
+        PeerConfig { addr: addr.into(), link: None, weight: 1.0 }
     }
 
     pub fn with_link(addr: impl Into<String>, link: LinkModel) -> Self {
-        PeerConfig { addr: addr.into(), link: Some(link) }
+        PeerConfig { addr: addr.into(), link: Some(link), weight: 1.0 }
     }
 }
 
@@ -448,6 +452,11 @@ struct ShareOutcome {
     /// Chunks this share actually fed into the assembler.
     fed: usize,
     ok: bool,
+    /// The peer answered `Nil` — it authoritatively does not hold the
+    /// entry (evicted copy, Bloom FP, or a ring peer holding only the
+    /// range alias).  Distinguished from genuine failures so discovering
+    /// an absent claimer never burns the bounded re-plan budget.
+    absent: bool,
 }
 
 /// I/O half of one share: pipelined GETRANGE batch for this peer's chunk
@@ -465,7 +474,7 @@ fn fetch_share_io(
     verifier: &ChunkVerifier,
     asm: &Mutex<Option<StateAssembler>>,
 ) -> (ShareOutcome, bool) {
-    let fail = ShareOutcome { wire: 0, fed: 0, ok: false };
+    let fail = ShareOutcome { wire: 0, fed: 0, ok: false, absent: false };
     let Some((conn, shaper)) = peer.conn_parts() else {
         return (fail, true);
     };
@@ -484,11 +493,17 @@ fn fetch_share_io(
     let mut fed = 0usize;
     let mut ok = true;
     let mut dead = false;
+    let mut absent = false;
     for &c in chunks {
         let bytes = match replies.next_reply() {
             Ok(Some(Value::Bulk(b))) => b,
+            Ok(Some(Value::Nil)) => {
+                ok = false; // the key is not on this peer at all
+                absent = true;
+                break;
+            }
             Ok(_) => {
-                ok = false; // evicted / error reply mid-share
+                ok = false; // error reply mid-share
                 break;
             }
             Err(_) => {
@@ -533,7 +548,7 @@ fn fetch_share_io(
         // keep the connection frame-synced for the re-plan / fallback
         let _ = replies.drain();
     }
-    (ShareOutcome { wire, fed, ok }, dead)
+    (ShareOutcome { wire, fed, ok, absent }, dead)
 }
 
 /// One worker share: run the I/O, then settle the peer's ledger and
@@ -564,7 +579,9 @@ fn fetch_share(
 /// Run one round of chunk shares concurrently — one scoped thread per
 /// participating peer, each driving its own pipelined reply stream into
 /// the shared assembler.  Returns (wire bytes moved, failed shares, slots
-/// that fed at least one chunk).
+/// that fed at least one chunk, failed slots, slots that answered
+/// "no such key").
+#[allow(clippy::type_complexity)]
 fn run_shares(
     claimers: &mut [(usize, &mut Peer)],
     assign: &[(usize, Vec<usize>)],
@@ -572,13 +589,14 @@ fn run_shares(
     geom: &[(usize, usize)],
     verifier: &ChunkVerifier,
     asm: &Mutex<Option<StateAssembler>>,
-) -> (usize, u64, Vec<usize>, Vec<usize>) {
+) -> (usize, u64, Vec<usize>, Vec<usize>, Vec<usize>) {
     let mut slots: Vec<Option<&mut Peer>> =
         claimers.iter_mut().map(|(_, p)| Some(&mut **p)).collect();
     let mut wire = 0usize;
     let mut fails = 0u64;
     let mut contributed = Vec::new();
     let mut failed_slots = Vec::new();
+    let mut absent_slots = Vec::new();
     std::thread::scope(|s| {
         let mut handles = Vec::new();
         for (slot, chunks) in assign {
@@ -601,6 +619,9 @@ fn run_shares(
                     if o.fed > 0 {
                         contributed.push(slot);
                     }
+                    if o.absent {
+                        absent_slots.push(slot);
+                    }
                     if !o.ok {
                         fails += 1;
                         failed_slots.push(slot);
@@ -613,7 +634,7 @@ fn run_shares(
             }
         }
     });
-    (wire, fails, contributed, failed_slots)
+    (wire, fails, contributed, failed_slots, absent_slots)
 }
 
 fn finish_fetch(
@@ -680,6 +701,11 @@ pub fn fetch_prefix_multi(
     let live = claimers.iter().filter(|(_, p)| p.is_connected()).count();
     let single = live <= 1;
     let mut share_failures = 0u64;
+    // slots that authoritatively answered "no such key" during head
+    // rotation (evicted copy, Bloom FP, or a ring peer holding only the
+    // range alias, not the target blob): they cannot serve any share, so
+    // planning stripes onto them would only burn re-plan rounds
+    let mut absent_slots: Vec<usize> = Vec::new();
 
     // -- head acquisition: rotate across claimers until one answers -------
     let mut acquired: Option<(usize, StateAssembler, usize)> = None;
@@ -726,8 +752,10 @@ pub fn fetch_prefix_multi(
                 break;
             }
             HeadOutcome::Absent => {
-                // evicted on this claimer (or a Bloom FP); a replicated
-                // copy on another claimer can still serve the range path
+                // evicted on this claimer (or a Bloom FP / alias-only ring
+                // peer); a replicated copy on another claimer can still
+                // serve the range path — but this slot gets no stripe
+                absent_slots.push(slot);
                 log_debug!(
                     "fabric",
                     "head peer {} lost the entry; rotating",
@@ -779,11 +807,14 @@ pub fn fetch_prefix_multi(
 
     // round 0: goodput-weighted contiguous stripes, head peer first.
     // Claimers already known dead (alias-GET or head-rotation casualties)
-    // get no stripe — a share planned onto them is a guaranteed failure
-    // that would burn one of the bounded re-plan rounds for nothing.
+    // or known *absent* (rotation proved they lost the entry) get no
+    // stripe — a share planned onto them is a guaranteed failure that
+    // would burn one of the bounded re-plan rounds for nothing.
     let mut order: Vec<usize> = Vec::with_capacity(n);
     order.push(head_slot);
-    order.extend((0..n).filter(|&s| s != head_slot && claimers[s].1.is_connected()));
+    order.extend((0..n).filter(|&s| {
+        s != head_slot && !absent_slots.contains(&s) && claimers[s].1.is_connected()
+    }));
     let weights: Vec<f64> = order
         .iter()
         .map(|&s| claimers[s].1.link.goodput_bps)
@@ -796,8 +827,14 @@ pub fn fetch_prefix_multi(
         .collect();
 
     let mut rounds = 0usize;
+    // extra rounds granted when a share merely discovered an *absent*
+    // claimer (Nil replies): each discovery permanently excludes that
+    // slot, so the loop stays bounded (≤ n free rounds) and genuine
+    // failures keep their own budget — an alias-only ring claimer can
+    // never starve the re-plan of a real peer death
+    let mut free_rounds = 0usize;
     loop {
-        let (wire, fails, contributed, failed_slots) =
+        let (wire, fails, contributed, failed_slots, absent_now) =
             run_shares(claimers, &assign, target, &geom, &verifier, &asm_cell);
         wire_total += wire;
         share_failures += fails;
@@ -805,6 +842,9 @@ pub fn fetch_prefix_multi(
             if !sources.contains(&s) {
                 sources.push(s);
             }
+        }
+        if !absent_now.is_empty() {
+            free_rounds += 1;
         }
         for s in failed_slots {
             if !bad_slots.contains(&s) {
@@ -821,13 +861,17 @@ pub fn fetch_prefix_multi(
         if unfed.is_empty() {
             break;
         }
-        if rounds >= planner.max_replan_rounds {
+        if rounds >= planner.max_replan_rounds + free_rounds {
             log_debug!("fabric", "re-plan budget exhausted, {} chunks orphaned", unfed.len());
             return None;
         }
         rounds += 1;
         let live: Vec<usize> = (0..n)
-            .filter(|&s| claimers[s].1.is_connected() && !bad_slots.contains(&s))
+            .filter(|&s| {
+                claimers[s].1.is_connected()
+                    && !bad_slots.contains(&s)
+                    && !absent_slots.contains(&s)
+            })
             .collect();
         if live.is_empty() {
             return None;
@@ -905,4 +949,133 @@ pub fn fetch_full_entry(
             None
         }
     }
+}
+
+/// Outcome of one ring-driven repair sweep over an entry's designated
+/// owners ([`repair_entry`]).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RepairOutcome {
+    /// EXISTS probes attempted (one per owner in the sweep).
+    pub probes: u64,
+    /// Owners found missing the entry and successfully re-published to.
+    pub republished: u64,
+    /// Owners that turned out unreachable — membership changed under the
+    /// caller, who should recompute the owner set and sweep once more.
+    pub dead: u64,
+    /// Re-publishes a reachable owner *rejected* (e.g. an OOM error reply
+    /// to the SET): the replica is still missing, so the caller must not
+    /// record the owner set as verified.
+    pub rejected: u64,
+    /// Payload wire bytes the re-publishes moved.
+    pub wire: usize,
+}
+
+/// Ring-driven replica repair: EXISTS-probe each designated owner of
+/// `store_key` and, where the entry is gone (a peer death took a copy, or
+/// an eviction dropped it), re-publish `blob` and register `catalog_key`
+/// on the box and in the peer's local catalog.  `blob` is built lazily —
+/// a sweep that finds every owner intact serializes and ships nothing.
+///
+/// This is how replica bookkeeping is *derived from the ring* instead of
+/// stored per entry: any client that can fetch an entry can recompute its
+/// owner set and restore the replication factor, no matter who uploaded
+/// the original copies.  Probes land in each peer's
+/// `PeerLedger::fallback_probes` (they are catalog-less probes) and
+/// re-publishes in `PeerLedger::repair_republishes`.
+pub fn repair_entry(
+    peers: &mut [Peer],
+    owners: &[usize],
+    store_key: &[u8],
+    catalog_key: Option<&[u8]>,
+    blob: &mut dyn FnMut() -> SharedBytes,
+) -> RepairOutcome {
+    let mut out = RepairOutcome::default();
+    for &i in owners {
+        let Some(peer) = peers.get_mut(i) else { continue };
+        out.probes += 1;
+        peer.ledger.fallback_probes += 1;
+        let t0 = Instant::now();
+        let probe = {
+            let Some((conn, shaper)) = peer.conn_parts() else {
+                out.dead += 1;
+                continue;
+            };
+            shaper.shaped(0, || conn.exists(store_key))
+        };
+        match probe {
+            Ok(true) => {
+                peer.ledger.breakdown.add(Phase::Redis, t0.elapsed());
+                continue; // this owner still serves the entry
+            }
+            Ok(false) => {}
+            Err(e) => {
+                log_debug!("fabric", "repair probe of {} failed: {e}", peer.cfg.addr);
+                peer.mark_dead_conn();
+                peer.ledger.breakdown.add(Phase::Redis, t0.elapsed());
+                out.dead += 1;
+                continue;
+            }
+        }
+        let b = blob();
+        let blen = b.len();
+        let mut reqs = Vec::with_capacity(2);
+        reqs.push(request_shared(vec![
+            SharedBytes::copy_from(b"SET"),
+            store_key.to_vec().into(),
+            b,
+        ]));
+        if let Some(ck) = catalog_key {
+            reqs.push(request_shared(vec![
+                SharedBytes::copy_from(b"CAT.REGISTER"),
+                ck.to_vec().into(),
+            ]));
+        }
+        let sent = {
+            let Some((conn, shaper)) = peer.conn_parts() else {
+                out.dead += 1;
+                peer.ledger.breakdown.add(Phase::Redis, t0.elapsed());
+                continue;
+            };
+            shaper.shaped(blen, || conn.pipeline_req(&reqs))
+        };
+        match sent {
+            // a transport-level Ok still carries per-command replies: a
+            // box at its memory limit answers the SET with an OOM error,
+            // and counting that as a repair would memoize a still-missing
+            // replica (and register a claim the box cannot serve)
+            Ok(replies) if replies.iter().any(|r| matches!(r, Value::Error(_))) => {
+                log_debug!(
+                    "fabric",
+                    "repair publish to {} rejected by the box",
+                    peer.cfg.addr
+                );
+                out.rejected += 1;
+            }
+            Ok(_) => {
+                peer.ledger.bytes_up += blen as u64;
+                peer.ledger.repair_republishes += 1;
+                peer.ledger.placed_entries += 1;
+                out.republished += 1;
+                out.wire += blen;
+                if let Some(ck) = catalog_key {
+                    if let Ok(mut cat) = peer.catalog.lock() {
+                        cat.register_key(ck);
+                    }
+                }
+                log_debug!(
+                    "fabric",
+                    "repaired entry onto {} ({} bytes)",
+                    peer.cfg.addr,
+                    blen
+                );
+            }
+            Err(e) => {
+                log_debug!("fabric", "repair publish to {} failed: {e}", peer.cfg.addr);
+                peer.mark_dead_conn();
+                out.dead += 1;
+            }
+        }
+        peer.ledger.breakdown.add(Phase::Redis, t0.elapsed());
+    }
+    out
 }

@@ -13,14 +13,19 @@
 //! * [`sync`] — the asynchronous local-catalog synchronization loop
 //!   (Figure 2, green arrow), one per peer, with capped backoff for dead
 //!   peers;
-//! * [`policy`] — fetch + placement policies: the paper's
+//! * [`placement`] — the pluggable [`placement::Placement`] policy: where
+//!   uploads land, which owners a catalog miss may probe, where repair
+//!   re-publishes (deterministic rendezvous-hash ring or load-probing
+//!   power-of-two-choices);
+//! * [`policy`] — fetch policy and the fabric planner: the paper's
 //!   always-fetch-on-hit plus a break-even extension (§5.3 analysis turned
-//!   into a runtime policy), and the fabric's chunk-split / re-plan /
-//!   power-of-two-choices placement planner.
+//!   into a runtime policy), and the chunk-split / re-plan /
+//!   two-choices-sampling primitives the placement policies build on.
 
 pub mod cachebox;
 pub mod client;
 pub mod fabric;
+pub mod placement;
 pub mod policy;
 pub mod sync;
 
@@ -29,5 +34,8 @@ pub use client::{
     adaptive_chunk_tokens, EdgeClient, EdgeClientConfig, HitCase, QueryResult,
 };
 pub use fabric::{Peer, PeerConfig};
+pub use placement::{
+    Placement, PlacementKind, PowerOfTwoChoices, RendezvousRing,
+};
 pub use policy::{FetchPolicy, PeerPlanner};
 pub use sync::CatalogSync;

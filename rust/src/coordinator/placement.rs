@@ -1,0 +1,527 @@
+//! **Placement as an API** — every "where does this entry live" decision
+//! behind one trait, so the upload path, the catalog-miss fallback and
+//! replica repair all consult a single pluggable policy instead of
+//! smearing placement knowledge across the fabric.
+//!
+//! Two implementations ship:
+//!
+//! * [`RendezvousRing`] — weighted highest-random-weight (HRW / rendezvous)
+//!   hashing over the range key.  Placement is **deterministic fleet-wide**:
+//!   any client that knows the peer addresses computes the same primary and
+//!   the same k replica successors for a key, with no probe round trips at
+//!   upload time.  That determinism is what makes the *residual* probe
+//!   cheap and targeted — a client that rebooted with an empty Bloom
+//!   catalog (or whose sync is lagging) can still find a warm entry by
+//!   probing just the 1+k designated owners, and a fetch that discovers an
+//!   owner missing an entry another owner serves knows exactly where the
+//!   re-publish belongs ([`super::fabric::repair_entry`]).  HRW also moves
+//!   a minimal key set on membership change: removing a node re-homes only
+//!   the keys it owned (~K/n), every other key keeps its owner.
+//! * [`PowerOfTwoChoices`] — the pre-existing load-probing policy
+//!   ([`PeerPlanner::place`]): sample two peers, probe their `used_bytes`,
+//!   keep the lighter.  Best-in-class byte balance, but it *forgets* where
+//!   entries went — `owners` is empty, so catalog-less fallback probing and
+//!   ring repair are unavailable.  Kept as a pluggable policy over the same
+//!   sampling primitive; note equal-load ties now draw one extra bit from
+//!   the seeded rng (see [`PeerPlanner::place`]), so sequences are
+//!   reproducible per seed but not bit-identical to pre-trait builds.
+//!
+//! The trade-off the two span: p2c optimises byte balance at upload time
+//! (2 probes per copy), the ring optimises recoverability (0 probes per
+//! copy, bounded-probe lookup fallback, derivable replica sets) at the
+//! cost of hash-balance instead of load-balance — see `benches/placement.rs`
+//! for the measured gap on both axes.
+
+use crate::coordinator::policy::PeerPlanner;
+use crate::util::rng::Rng;
+
+/// Caller-side peer index: the position of a peer in
+/// `EdgeClientConfig::peers` (and in every `alive` slice handed to
+/// [`Placement::on_membership_change`]).
+pub type PeerId = usize;
+
+/// A pluggable placement policy: where uploads land, which peers a
+/// catalog-less lookup may probe, and which peers repair re-publishes to.
+pub trait Placement: Send {
+    /// Policy name for telemetry / CLI round-tripping.
+    fn name(&self) -> &'static str;
+
+    /// Whether [`Placement::owners`] is meaningful.  A deterministic
+    /// policy supports catalog-less fallback probing and replica repair;
+    /// a non-deterministic one (p2c) returns an empty owner set and those
+    /// paths stay off.
+    fn is_deterministic(&self) -> bool;
+
+    /// Deterministic owner set for `key`: the primary first, then the
+    /// `n_replicas` replica successors.  At most `1 + n_replicas` peers,
+    /// never a duplicate, never a peer marked dead by the last membership
+    /// update.  Empty when the policy has no deterministic owners.
+    fn owners(&self, key: &[u8], n_replicas: usize) -> Vec<PeerId>;
+
+    /// Upload-time placement: where the primary + `n_replicas` copies go,
+    /// primary first.  `probe(peer)` reports the peer's current
+    /// `used_bytes` (`u64::MAX` = unreachable); deterministic policies
+    /// never call it.
+    fn place_upload(
+        &mut self,
+        key: &[u8],
+        n_replicas: usize,
+        probe: &mut dyn FnMut(PeerId) -> u64,
+    ) -> Vec<PeerId>;
+
+    /// Membership update: `alive[i]` is peer `i`'s connectivity as the
+    /// caller last observed it.  Dead peers drop out of owner sets (their
+    /// successors take over) until marked alive again.
+    fn on_membership_change(&mut self, alive: &[bool]);
+}
+
+/// Which [`Placement`] implementation a client config selects
+/// (`--placement ring|p2c` on the CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// [`PowerOfTwoChoices`] — load-probing, non-deterministic.
+    PowerOfTwoChoices,
+    /// [`RendezvousRing`] — deterministic weighted HRW hashing.
+    RendezvousRing,
+}
+
+impl PlacementKind {
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "p2c" | "two-choices" | "power-of-two" => Some(Self::PowerOfTwoChoices),
+            "ring" | "rendezvous" | "hrw" => Some(Self::RendezvousRing),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::PowerOfTwoChoices => "p2c",
+            Self::RendezvousRing => "ring",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RendezvousRing
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct RingNode {
+    /// Stable fleet-wide identity (the peer's address).  Hashing the
+    /// identity — not the caller-side index — is what makes two clients
+    /// with differently-ordered peer lists agree on every owner set.
+    ident: String,
+    weight: f64,
+    alive: bool,
+}
+
+/// Weighted rendezvous (HRW) hashing over stable node identities.
+#[derive(Debug, Clone)]
+pub struct RendezvousRing {
+    nodes: Vec<RingNode>,
+}
+
+/// FNV-1a over `ident ++ len(ident) ++ key`, finished with a splitmix64
+/// avalanche so nearby identities decorrelate.
+fn hrw_hash(ident: &[u8], key: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in ident {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    // length separator: "ab"+"c" must not collide with "a"+"bc"
+    h = (h ^ ident.len() as u64).wrapping_mul(0x100000001b3);
+    for &b in key {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h = (h ^ (h >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    h = (h ^ (h >> 27)).wrapping_mul(0x94D049BB133111EB);
+    h ^ (h >> 31)
+}
+
+impl RendezvousRing {
+    /// Uniform-weight ring over the given node identities (peer addrs).
+    pub fn new<I: Into<String>>(idents: Vec<I>) -> Self {
+        Self::weighted(idents.into_iter().map(|i| (i.into(), 1.0)).collect())
+    }
+
+    /// Weighted ring: a weight-2 node owns ~2× the keys of a weight-1
+    /// node (classic weighted-rendezvous `-w / ln(u)` scoring).
+    pub fn weighted(nodes: Vec<(String, f64)>) -> Self {
+        RendezvousRing {
+            nodes: nodes
+                .into_iter()
+                .map(|(ident, weight)| RingNode {
+                    ident,
+                    weight: if weight.is_finite() { weight.max(1e-9) } else { 1.0 },
+                    alive: true,
+                })
+                .collect(),
+        }
+    }
+
+    fn score(node: &RingNode, key: &[u8]) -> f64 {
+        let h = hrw_hash(node.ident.as_bytes(), key);
+        // u uniform in (0, 1]; ln(u) <= 0, so the score is positive and a
+        // higher weight scales it up without breaking uniformity
+        let u = ((h >> 11) as f64 + 1.0) * (1.0 / (1u64 << 53) as f64);
+        -node.weight / u.ln().min(-1e-300)
+    }
+
+    /// Every live node ranked best-first for `key` — the full fallback
+    /// order.  Ties (astronomically unlikely with f64 scores) break on the
+    /// node identity so the ranking is independent of listing order.
+    pub fn ranked(&self, key: &[u8]) -> Vec<PeerId> {
+        let mut scored: Vec<(f64, PeerId)> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.alive)
+            .map(|(i, n)| (Self::score(n, key), i))
+            .collect();
+        scored.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| self.nodes[a.1].ident.cmp(&self.nodes[b.1].ident))
+        });
+        scored.into_iter().map(|(_, i)| i).collect()
+    }
+}
+
+impl Placement for RendezvousRing {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn is_deterministic(&self) -> bool {
+        true
+    }
+
+    fn owners(&self, key: &[u8], n_replicas: usize) -> Vec<PeerId> {
+        let mut r = self.ranked(key);
+        r.truncate(1 + n_replicas);
+        r
+    }
+
+    /// Deterministic placement never probes: the owner set *is* the
+    /// target set, and a dead owner's slot falls to its ring successor
+    /// (already handled by the alive filter in [`RendezvousRing::ranked`]).
+    fn place_upload(
+        &mut self,
+        key: &[u8],
+        n_replicas: usize,
+        _probe: &mut dyn FnMut(PeerId) -> u64,
+    ) -> Vec<PeerId> {
+        self.owners(key, n_replicas)
+    }
+
+    fn on_membership_change(&mut self, alive: &[bool]) {
+        for (node, &a) in self.nodes.iter_mut().zip(alive) {
+            node.alive = a;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PowerOfTwoChoices
+// ---------------------------------------------------------------------------
+
+/// The historical load-probing policy behind the [`Placement`] trait:
+/// each copy is placed by [`PeerPlanner::place`] (two sampled peers, the
+/// lighter `used_bytes` wins) over the live candidates not yet holding
+/// one.  Owns its seeded [`Rng`], so a given seed replays the exact same
+/// placement sequence — equal-load ties included (they draw from the
+/// same rng; see [`PeerPlanner::place`]).
+pub struct PowerOfTwoChoices {
+    planner: PeerPlanner,
+    rng: Rng,
+    alive: Vec<bool>,
+}
+
+impl PowerOfTwoChoices {
+    pub fn new(n_peers: usize, planner: PeerPlanner, seed: u64) -> Self {
+        PowerOfTwoChoices { planner, rng: Rng::new(seed), alive: vec![true; n_peers] }
+    }
+}
+
+impl Placement for PowerOfTwoChoices {
+    fn name(&self) -> &'static str {
+        "p2c"
+    }
+
+    fn is_deterministic(&self) -> bool {
+        false
+    }
+
+    /// p2c keeps no map from keys to peers — there is no owner set to
+    /// probe after a reboot, which is exactly the gap the ring closes.
+    fn owners(&self, _key: &[u8], _n_replicas: usize) -> Vec<PeerId> {
+        Vec::new()
+    }
+
+    fn place_upload(
+        &mut self,
+        _key: &[u8],
+        n_replicas: usize,
+        probe: &mut dyn FnMut(PeerId) -> u64,
+    ) -> Vec<PeerId> {
+        let mut out: Vec<PeerId> = Vec::with_capacity(1 + n_replicas);
+        for _ in 0..=n_replicas {
+            // dead-marked peers drop out of the candidate pool — sampling
+            // them would spend a redial attempt plus a doomed INFO probe
+            // before the planner discarded them anyway
+            let candidates: Vec<PeerId> = (0..self.alive.len())
+                .filter(|i| self.alive[*i] && !out.contains(i))
+                .collect();
+            if candidates.is_empty() {
+                break;
+            }
+            match self.planner.place(&mut self.rng, &candidates, &mut *probe) {
+                Some(i) => out.push(i),
+                None => break, // both probes dead: caller salvages elsewhere
+            }
+        }
+        out
+    }
+
+    fn on_membership_change(&mut self, alive: &[bool]) {
+        self.alive = alive.to_vec();
+    }
+}
+
+/// Zero-sized placeholder swapped into the client while the real policy is
+/// temporarily moved out for a placement call that must also borrow the
+/// peer table.  Places nothing, owns nothing.
+pub struct Unplaced;
+
+impl Placement for Unplaced {
+    fn name(&self) -> &'static str {
+        "unplaced"
+    }
+
+    fn is_deterministic(&self) -> bool {
+        false
+    }
+
+    fn owners(&self, _key: &[u8], _n_replicas: usize) -> Vec<PeerId> {
+        Vec::new()
+    }
+
+    fn place_upload(
+        &mut self,
+        _key: &[u8],
+        _n_replicas: usize,
+        _probe: &mut dyn FnMut(PeerId) -> u64,
+    ) -> Vec<PeerId> {
+        Vec::new()
+    }
+
+    fn on_membership_change(&mut self, _alive: &[bool]) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_keys(n: usize, seed: u64) -> Vec<[u8; 16]> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut k = [0u8; 16];
+                for b in k.iter_mut() {
+                    *b = rng.below(256) as u8;
+                }
+                k
+            })
+            .collect()
+    }
+
+    fn ring(n: usize) -> RendezvousRing {
+        RendezvousRing::new((0..n).map(|i| format!("peer-{i}:760{i}")).collect())
+    }
+
+    #[test]
+    fn balance_within_bound_across_synthetic_keys() {
+        // 256 uniform keys over 4 uniform nodes: every node's primary
+        // count stays within [mean/2, 1.5*mean] (the bound README states;
+        // 3 sigma at this population is well inside it)
+        let r = ring(4);
+        let keys = synth_keys(256, 11);
+        let mut counts = [0usize; 4];
+        for k in &keys {
+            counts[r.owners(k, 0)[0]] += 1;
+        }
+        let mean = keys.len() as f64 / 4.0;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) >= mean * 0.5 && (c as f64) <= mean * 1.5,
+                "node {i} count {c} outside [{}, {}]: {counts:?}",
+                mean * 0.5,
+                mean * 1.5
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_nodes_own_proportional_key_shares() {
+        // weight 3 vs three weight-1 nodes: the heavy node owns ~3x what
+        // any light node does (weighted-rendezvous proportionality)
+        let r = RendezvousRing::weighted(vec![
+            ("heavy:1".into(), 3.0),
+            ("a:2".into(), 1.0),
+            ("b:3".into(), 1.0),
+            ("c:4".into(), 1.0),
+        ]);
+        let keys = synth_keys(600, 13);
+        let mut counts = [0usize; 4];
+        for k in &keys {
+            counts[r.owners(k, 0)[0]] += 1;
+        }
+        // expected 300 / 100 / 100 / 100
+        let heavy = counts[0] as f64;
+        let light = *counts[1..].iter().max().unwrap() as f64;
+        assert!(
+            heavy / light > 2.0 && heavy / light < 4.5,
+            "weight-3 share off: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn minimal_key_movement_on_leave_and_join() {
+        let keys = synth_keys(300, 17);
+        // leave: killing node 2 re-homes exactly the keys it owned
+        let mut r = ring(5);
+        let before: Vec<PeerId> = keys.iter().map(|k| r.owners(k, 0)[0]).collect();
+        let mut alive = [true; 5];
+        alive[2] = false;
+        r.on_membership_change(&alive);
+        let mut moved = 0usize;
+        for (k, &old) in keys.iter().zip(&before) {
+            let new = r.owners(k, 0)[0];
+            if old == 2 {
+                assert_ne!(new, 2, "dead node must not own keys");
+                moved += 1;
+            } else {
+                assert_eq!(new, old, "survivor-owned keys must not move");
+            }
+        }
+        let expect = keys.len() as f64 / 5.0;
+        assert!(
+            (moved as f64) > expect * 0.4 && (moved as f64) < expect * 2.5,
+            "~K/n keys move on a leave, got {moved} of {}",
+            keys.len()
+        );
+
+        // join: adding a 6th node moves only the keys it now wins
+        let r5 = ring(5);
+        let r6 = ring(6);
+        let mut joined = 0usize;
+        for k in &keys {
+            let (old, new) = (r5.owners(k, 0)[0], r6.owners(k, 0)[0]);
+            if new != old {
+                assert_eq!(new, 5, "a moved key must have moved to the joiner");
+                joined += 1;
+            }
+        }
+        let expect = keys.len() as f64 / 6.0;
+        assert!(
+            (joined as f64) > expect * 0.4 && (joined as f64) < expect * 2.5,
+            "~K/n keys move on a join, got {joined} of {}",
+            keys.len()
+        );
+    }
+
+    #[test]
+    fn replica_sets_sized_deduped_and_never_dead() {
+        let mut r = ring(5);
+        let mut alive = [true; 5];
+        alive[3] = false;
+        r.on_membership_change(&alive);
+        for k in synth_keys(120, 19) {
+            let owners = r.owners(&k, 2);
+            assert_eq!(owners.len(), 3, "primary + 2 successors");
+            let mut dedup = owners.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), owners.len(), "no duplicate owners");
+            assert!(!owners.contains(&3), "dead peers never own");
+            assert_eq!(owners, r.owners(&k, 2), "deterministic across calls");
+        }
+        // replica demand beyond the live fleet clamps to the live fleet
+        let owners = r.owners(b"whatever", 10);
+        assert_eq!(owners.len(), 4);
+    }
+
+    #[test]
+    fn owner_sets_independent_of_node_listing_order() {
+        // two clients listing the same fleet in different orders must agree
+        // on every owner *identity* — determinism is fleet-wide, not
+        // per-client
+        let idents = ["a:1", "b:2", "c:3", "d:4"];
+        let fwd = RendezvousRing::new(idents.to_vec());
+        let rev = RendezvousRing::new(idents.iter().rev().cloned().collect());
+        for k in synth_keys(64, 23) {
+            let f: Vec<&str> = fwd.owners(&k, 1).into_iter().map(|i| idents[i]).collect();
+            let r: Vec<&str> = rev
+                .owners(&k, 1)
+                .into_iter()
+                .map(|i| idents[idents.len() - 1 - i])
+                .collect();
+            assert_eq!(f, r, "owner identities must not depend on listing order");
+        }
+    }
+
+    #[test]
+    fn p2c_has_no_owners_but_places_distinct_copies() {
+        let mut p = PowerOfTwoChoices::new(4, PeerPlanner::default(), 7);
+        assert!(!p.is_deterministic());
+        assert!(p.owners(b"k", 2).is_empty());
+        let loads = [100u64, 5, 900, 40];
+        let targets = p.place_upload(b"k", 2, &mut |i| loads[i]);
+        assert_eq!(targets.len(), 3);
+        let mut d = targets.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 3, "copies land on distinct peers: {targets:?}");
+        // replica demand beyond the fleet clamps to the fleet
+        let targets = p.place_upload(b"k", 10, &mut |i| loads[i]);
+        assert_eq!(targets.len(), 4);
+        // an all-dead fleet places nothing
+        let none = p.place_upload(b"k", 1, &mut |_| u64::MAX);
+        assert!(none.is_empty());
+        // dead-marked peers drop out of the candidate pool entirely — no
+        // doomed samples, no wasted probes
+        let mut alive = vec![true; 4];
+        alive[2] = false;
+        p.on_membership_change(&alive);
+        for _ in 0..16 {
+            let t = p.place_upload(b"k", 2, &mut |i| loads[i]);
+            assert!(!t.contains(&2), "dead peer must never be placed on: {t:?}");
+            assert_eq!(t.len(), 3, "three live peers take the three copies");
+        }
+        // revival restores the full pool
+        p.on_membership_change(&[true; 4]);
+        assert_eq!(p.place_upload(b"k", 3, &mut |i| loads[i]).len(), 4);
+    }
+
+    #[test]
+    fn p2c_sequences_reproducible_under_seed() {
+        let seq = |seed: u64| -> Vec<Vec<PeerId>> {
+            let mut p = PowerOfTwoChoices::new(3, PeerPlanner::default(), seed);
+            (0..32).map(|_| p.place_upload(b"x", 1, &mut |_| 7)).collect()
+        };
+        assert_eq!(seq(42), seq(42), "same seed, same placement sequence");
+        assert_ne!(seq(42), seq(43), "different seed, different sequence");
+    }
+
+    #[test]
+    fn kind_round_trips_by_name() {
+        for k in [PlacementKind::PowerOfTwoChoices, PlacementKind::RendezvousRing] {
+            assert_eq!(PlacementKind::by_name(k.name()), Some(k));
+        }
+        assert_eq!(PlacementKind::by_name("ring"), Some(PlacementKind::RendezvousRing));
+        assert_eq!(PlacementKind::by_name("hrw"), Some(PlacementKind::RendezvousRing));
+        assert_eq!(PlacementKind::by_name("p2c"), Some(PlacementKind::PowerOfTwoChoices));
+        assert!(PlacementKind::by_name("consistent").is_none());
+    }
+}

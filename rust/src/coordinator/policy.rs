@@ -12,7 +12,10 @@
 //!   count), how to *re-plan* the orphaned chunks when a peer dies
 //!   mid-fetch (round-robin over survivors), and where to *place* an upload
 //!   (power-of-two-choices on reported `used_bytes` — near-balanced load
-//!   for two probes instead of N).
+//!   for two probes instead of N).  [`PeerPlanner::place`] is the sampling
+//!   primitive behind the pluggable `coordinator::placement` policy
+//!   (`PowerOfTwoChoices`); the deterministic alternative lives there too
+//!   (`RendezvousRing`).
 
 use std::ops::Range;
 
@@ -51,20 +54,36 @@ impl FetchPolicy {
 
     /// Smallest matched-token count at which fetching wins on this
     /// device+link (analysis helper; assumes `bytes_per_token` state size).
+    ///
+    /// Beyond the RTT floor both sides are linear in `n` — transfer is
+    /// `rtt + n·bpt/goodput`, prefill is `n·ms_per_tok` — so the predicate
+    /// "transfer < prefill" is monotone: once fetching wins it keeps
+    /// winning.  A binary search over the same `1..100_000` window the old
+    /// linear scan used (returning `usize::MAX` beyond it, where prefill
+    /// never catches up) finds the crossing in ~17 model evaluations
+    /// instead of up to 100k.
     pub fn break_even_tokens(
         device: &DeviceProfile,
         link: &LinkModel,
         bytes_per_token: usize,
     ) -> usize {
-        for n in 1..100_000 {
-            let transfer = link.delay_for(n * bytes_per_token, None);
-            if transfer < device.prefill_time(n) {
-                return n;
-            }
-            // transfer and prefill both linear in n beyond the RTT floor; if
-            // prefill hasn't caught up by 100k tokens it never will
+        const LIMIT: usize = 100_000;
+        let fetch_wins =
+            |n: usize| link.delay_for(n * bytes_per_token, None) < device.prefill_time(n);
+        if !fetch_wins(LIMIT - 1) {
+            return usize::MAX;
         }
-        usize::MAX
+        // invariant: fetch_wins(hi) holds, fetch_wins(lo - 1) does not
+        let (mut lo, mut hi) = (1usize, LIMIT - 1);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if fetch_wins(mid) {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo
     }
 }
 
@@ -142,6 +161,12 @@ impl PeerPlanner {
     /// load without probing the whole fleet.  `probe` returning `u64::MAX`
     /// marks a peer unreachable.  Degenerates to the single candidate (no
     /// probe round trips) when only one peer exists.
+    ///
+    /// Every random decision — the two samples *and* the equal-load
+    /// tie-break — draws from the caller's `rng`, so a seeded caller
+    /// replays the exact same placement sequence (benches and tests can
+    /// reproduce placements bit-for-bit) and the first-sampled peer gets
+    /// no structural bias on ties.
     pub fn place(
         &self,
         rng: &mut Rng,
@@ -162,7 +187,15 @@ impl PeerPlanner {
                 if ua == u64::MAX && ub == u64::MAX {
                     return None;
                 }
-                Some(if ua <= ub { pa } else { pb })
+                Some(if ua < ub {
+                    pa
+                } else if ub < ua {
+                    pb
+                } else if rng.chance(0.5) {
+                    pa
+                } else {
+                    pb
+                })
             }
         }
     }
@@ -273,6 +306,70 @@ mod tests {
             be_hi > 1000,
             "high-end never reasonably breaks even: {be_hi}"
         );
+    }
+
+    #[test]
+    fn place_sequences_reproducible_under_seed() {
+        // a seeded caller replays the exact same placement sequence — the
+        // tie-break draws from the caller's rng instead of silently
+        // preferring the first sample
+        let p = PeerPlanner::default();
+        let seq = |seed: u64, load: fn(usize) -> u64| -> Vec<usize> {
+            let mut rng = Rng::new(seed);
+            (0..128)
+                .map(|_| p.place(&mut rng, &[0, 1, 2, 3], load).unwrap())
+                .collect()
+        };
+        assert_eq!(seq(99, |_| 7), seq(99, |_| 7), "same seed, same sequence");
+        assert_ne!(seq(99, |_| 7), seq(100, |_| 7), "seed changes the sequence");
+        // all-equal loads: ties must spread over the peers, not pile on
+        // whichever sample came first
+        let ties = seq(5, |_| 0);
+        let mut counts = [0usize; 4];
+        for &w in &ties {
+            counts[w] += 1;
+        }
+        assert!(
+            counts.iter().all(|&c| c > 0),
+            "equal-load ties must reach every peer: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn break_even_tokens_matches_linear_scan() {
+        // the binary search must agree with the old 1..100_000 linear scan
+        // on every device x link x stride combination
+        let scan = |device: &DeviceProfile, link: &LinkModel, bpt: usize| -> usize {
+            for n in 1..100_000 {
+                if link.delay_for(n * bpt, None) < device.prefill_time(n) {
+                    return n;
+                }
+            }
+            usize::MAX
+        };
+        let devices = [
+            DeviceProfile::pi_zero_2w(),
+            DeviceProfile::pi5_4gb(),
+            DeviceProfile::host(),
+        ];
+        let links = [
+            LinkModel::wifi4_2g4(),
+            LinkModel::ethernet_1g(),
+            LinkModel::loopback(),
+        ];
+        for d in &devices {
+            for l in &links {
+                for bpt in [0usize, 512, 29_800, 34_500, 1_000_000] {
+                    assert_eq!(
+                        FetchPolicy::break_even_tokens(d, l, bpt),
+                        scan(d, l, bpt),
+                        "device={} link={} bpt={bpt}",
+                        d.name,
+                        l.name
+                    );
+                }
+            }
+        }
     }
 
     #[test]

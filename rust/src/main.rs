@@ -5,7 +5,8 @@
 //! edgecache server    --addr 0.0.0.0:7600 --max-mb 14336
 //! edgecache client    --server HOST:PORT --preset edge-270m --device low-end \
 //!                     --link wifi --domains 8 --per-domain 4 --shots 1
-//! edgecache client    --server H1:P1 --peer H2:P2 --peer H3:P3 --replicas 1
+//! edgecache client    --server H1:P1 --peer H2:P2 --peer H3:P3 --replicas 1 \
+//!                     --placement ring
 //! edgecache run       --preset tiny --clients 2 --peers 2 --domains 6 --per-domain 3
 //! edgecache tables    --prompts 6434        # analytic Table 2/3/4 + figures
 //! edgecache workload  --domain astronomy --shots 5 --index 0
@@ -16,7 +17,9 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use edgecache::coordinator::{CacheBox, EdgeClient, EdgeClientConfig, FetchPolicy, PeerConfig};
+use edgecache::coordinator::{
+    CacheBox, EdgeClient, EdgeClientConfig, FetchPolicy, PeerConfig, PlacementKind,
+};
 use edgecache::devicemodel::DeviceProfile;
 use edgecache::engine::Engine;
 use edgecache::metrics::CaseAggregate;
@@ -105,6 +108,9 @@ fn client_config(m: &edgecache::util::cli::Matches, server: Option<String>) -> R
         name: "cli".into(),
         peers,
         replicas: m.usize("replicas").map_err(|e| anyhow!(e))?,
+        // the parser already validated the value against the choice list
+        placement: PlacementKind::by_name(&m.str("placement"))
+            .ok_or_else(|| anyhow!("unknown --placement (p2c|ring)"))?,
         link,
         device,
         max_new_tokens: m.get("max-new").and_then(|v| v.parse().ok()),
@@ -127,6 +133,14 @@ fn client_cmd_spec(name: &'static str, about: &'static str) -> Command {
         .opt("link", "loopback", "link model (wifi|ethernet|loopback)")
         .multi("peer", "additional cache-box peer address (repeatable)")
         .opt("replicas", "0", "extra peers each upload is replicated to")
+        .choice(
+            "placement",
+            &["p2c", "ring"],
+            "p2c",
+            "upload placement policy: p2c probes loads (power-of-two-choices), \
+             ring places deterministically (rendezvous hash; enables \
+             catalog-less fallback probing and replica repair)",
+        )
         .opt("domains", "6", "number of MMLU-like domains")
         .opt("per-domain", "3", "questions per domain")
         .opt("shots", "1", "few-shot examples per prompt")
@@ -184,17 +198,23 @@ fn run_trace(
     );
     for c in clients.iter() {
         println!(
-            "client {}: {} queries, hits by case {:?}, FPs {}, down {} KB, up {} KB",
+            "client {} [{}]: {} queries, hits by case {:?}, FPs {}, down {} KB, up {} KB, \
+             fallback probes {} ({} hits), repairs {}",
             c.cfg.name,
+            c.placement_name(),
             c.stats.queries,
             c.stats.hits_by_case,
             c.stats.false_positives,
             c.stats.bytes_down / 1024,
-            c.stats.bytes_up / 1024
+            c.stats.bytes_up / 1024,
+            c.stats.fallback_probes,
+            c.stats.fallback_probe_hits,
+            c.stats.repair_republishes
         );
         for l in c.peer_ledgers() {
             println!(
-                "  peer {}: down {} KB, up {} KB, shares {} ({} failed), uploads {} (+{} replicas), {} sync rounds",
+                "  peer {}: down {} KB, up {} KB, shares {} ({} failed), uploads {} (+{} replicas), \
+                 placed {}, probes {}, repairs {}, {} sync rounds",
                 l.addr,
                 l.bytes_down / 1024,
                 l.bytes_up / 1024,
@@ -202,6 +222,9 @@ fn run_trace(
                 l.share_failures,
                 l.uploads,
                 l.replica_uploads,
+                l.placed_entries,
+                l.fallback_probes,
+                l.repair_republishes,
                 l.sync_rounds
             );
         }

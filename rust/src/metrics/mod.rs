@@ -178,6 +178,16 @@ pub struct PeerLedger {
     pub uploads: u64,
     /// Uploads this peer received as a replica copy.
     pub replica_uploads: u64,
+    /// Entries this peer stored because a placement decision (policy
+    /// choice, splice pin, salvage or repair) designated it — the
+    /// per-peer view of where the placement policy is sending data.
+    pub placed_entries: u64,
+    /// Catalog-less EXISTS probes sent to this peer: ring-designated
+    /// owner probes on a catalog miss (`Placement::owners`) plus repair
+    /// sweeps (`fabric::repair_entry`).
+    pub fallback_probes: u64,
+    /// Entries re-published to this peer by ring-driven replica repair.
+    pub repair_republishes: u64,
     /// Completed catalog-sync rounds against this peer.
     pub sync_rounds: u64,
     /// Per-peer phase time (Redis = this peer's transfers).

@@ -209,6 +209,7 @@ pub fn real_table23(
         name: cfg.setting.name.into(),
         peers: vec![crate::coordinator::PeerConfig::new(cb.addr())],
         replicas: 0,
+        placement: crate::coordinator::PlacementKind::PowerOfTwoChoices,
         link: cfg.setting.link.clone(),
         device: if cfg.paced {
             cfg.setting.device.clone()

@@ -1,8 +1,10 @@
 //! Declarative command-line argument parser (clap substitute).
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, repeatable options
-//! (`--peer a --peer b`, read back via [`Matches::all`]), positional
-//! arguments, subcommands, defaults, and auto-generated `--help`.
+//! (`--peer a --peer b`, read back via [`Matches::all`]), enumerated
+//! options with parse-time validation ([`Command::choice`], e.g.
+//! `--placement ring|p2c`), positional arguments, subcommands, defaults,
+//! and auto-generated `--help`.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -14,6 +16,8 @@ pub struct ArgSpec {
     pub default: Option<String>,
     pub is_flag: bool,
     pub required: bool,
+    /// When set, provided values must be one of these (enumerated option).
+    pub choices: Option<&'static [&'static str]>,
 }
 
 #[derive(Debug, Default)]
@@ -29,7 +33,14 @@ impl Command {
     }
 
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
-        self.args.push(ArgSpec { name, help, default: None, is_flag: true, required: false });
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+            required: false,
+            choices: None,
+        });
         self
     }
 
@@ -40,12 +51,20 @@ impl Command {
             default: Some(default.to_string()),
             is_flag: false,
             required: false,
+            choices: None,
         });
         self
     }
 
     pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
-        self.args.push(ArgSpec { name, help, default: None, is_flag: false, required: true });
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+            required: true,
+            choices: None,
+        });
         self
     }
 
@@ -53,7 +72,36 @@ impl Command {
     /// collected and read back with [`Matches::all`].  Declared like a
     /// defaultless optional value — zero occurrences is fine.
     pub fn multi(mut self, name: &'static str, help: &'static str) -> Self {
-        self.args.push(ArgSpec { name, help, default: None, is_flag: false, required: false });
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+            required: false,
+            choices: None,
+        });
+        self
+    }
+
+    /// An enumerated value option: anything outside `choices` is rejected
+    /// at parse time with a message naming the legal values.  `default`
+    /// must be one of the choices.
+    pub fn choice(
+        mut self,
+        name: &'static str,
+        choices: &'static [&'static str],
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        debug_assert!(choices.contains(&default), "--{name} default not a choice");
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+            required: false,
+            choices: Some(choices),
+        });
         self
     }
 
@@ -64,6 +112,8 @@ impl Command {
         for a in &self.args {
             let tail = if a.is_flag {
                 String::new()
+            } else if let (Some(cs), Some(d)) = (a.choices, &a.default) {
+                format!(" <{}>  (default: {d})", cs.join("|"))
             } else if let Some(d) = &a.default {
                 format!(" <value>  (default: {d})")
             } else {
@@ -127,6 +177,15 @@ impl Command {
             }
             if let (false, Some(d)) = (spec.is_flag, &spec.default) {
                 values.entry(spec.name.to_string()).or_insert_with(|| d.clone());
+            }
+            if let (Some(choices), Some(v)) = (spec.choices, values.get(spec.name)) {
+                if !choices.contains(&v.as_str()) {
+                    return Err(format!(
+                        "--{}={v}: expected one of {}",
+                        spec.name,
+                        choices.join("|")
+                    ));
+                }
             }
         }
 
@@ -240,6 +299,31 @@ mod tests {
         // absent repeatable options and defaults yield no occurrences
         assert!(m.all("port").is_empty());
         assert!(c.parse(&argv(&[])).unwrap().all("peer").is_empty());
+    }
+
+    #[test]
+    fn choice_options_validated_at_parse_time() {
+        let c = || {
+            Command::new("t", "about")
+                .choice("placement", &["p2c", "ring"], "p2c", "placement policy")
+                .req("out", "output path")
+        };
+        // default applies and is legal
+        let m = c().parse(&argv(&["--out", "o"])).unwrap();
+        assert_eq!(m.str("placement"), "p2c");
+        // both forms accept a legal value
+        let m = c().parse(&argv(&["--placement", "ring", "--out", "o"])).unwrap();
+        assert_eq!(m.str("placement"), "ring");
+        let m = c().parse(&argv(&["--placement=ring", "--out", "o"])).unwrap();
+        assert_eq!(m.str("placement"), "ring");
+        // an illegal value is rejected with the legal set named
+        let err = c()
+            .parse(&argv(&["--placement", "consistent", "--out", "o"]))
+            .unwrap_err();
+        assert!(err.contains("p2c|ring"), "{err}");
+        // the usage line shows the choices
+        let usage = c().usage();
+        assert!(usage.contains("<p2c|ring>"), "{usage}");
     }
 
     #[test]

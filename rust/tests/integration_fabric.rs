@@ -9,7 +9,7 @@ use std::sync::Arc;
 
 use edgecache::coordinator::fabric::{fetch_prefix_multi, Peer, PeerConfig};
 use edgecache::coordinator::{
-    CacheBox, EdgeClient, EdgeClientConfig, HitCase, PeerPlanner,
+    CacheBox, EdgeClient, EdgeClientConfig, HitCase, PeerPlanner, PlacementKind,
 };
 use edgecache::engine::Engine;
 use edgecache::model::state::{Compression, KvState};
@@ -346,6 +346,180 @@ fn one_peer_config_is_the_degenerate_fabric() {
     assert!(r1.saved_bytes > 0);
     c.shutdown();
     cb.shutdown();
+}
+
+#[test]
+fn ring_fallback_probing_recovers_after_reboot() {
+    // the catalog-less recovery path: client 1 uploads under ring
+    // placement; client 2 "reboots" with an empty Bloom catalog and no
+    // sync, yet still serves the hit by probing the key's deterministic
+    // owners — a Bloom false negative stops being an unrecoverable miss
+    let Some(eng) = engine() else { return };
+    let boxes: Vec<CacheBox> = (0..3).map(|_| CacheBox::start_local().unwrap()).collect();
+    let box_refs: Vec<&CacheBox> = boxes.iter().collect();
+    let mut cfg = fabric_cfg("ring-up", &box_refs);
+    cfg.placement = PlacementKind::RendezvousRing;
+    let mut c1 = EdgeClient::new(Arc::clone(&eng), cfg).unwrap();
+
+    let gen = edgecache::workload::Generator::new(47);
+    let p = gen.prompt("astronomy", 0, 1);
+    let r0 = c1.query(&p).unwrap();
+    assert_eq!(r0.case, HitCase::Miss);
+    let baseline = r0.response_tokens.clone();
+
+    // a rebooted client: same fleet, fresh (empty) Bloom filters, never
+    // synced — the pure-catalog path would miss forever
+    let mut cfg2 = fabric_cfg("ring-reboot", &box_refs);
+    cfg2.placement = PlacementKind::RendezvousRing;
+    let mut c2 = EdgeClient::new(Arc::clone(&eng), cfg2).unwrap();
+    let r1 = c2.query(&p).unwrap();
+    assert_eq!(r1.case, HitCase::Full, "owner probing must recover the hit");
+    assert_eq!(r1.response_tokens, baseline, "no corruption through the fallback");
+    assert!(!r1.false_positive);
+    assert!(c2.stats.fallback_probes >= 1, "{:?}", c2.stats);
+    assert_eq!(c2.stats.fallback_probe_hits, 1);
+    // bounded probing: at most (1 + replicas) owners per candidate range
+    let ranges = 5; // 4 prefix ranges + full, the most a prompt registers
+    assert!(
+        c2.stats.fallback_probes <= ((1 + c2.cfg.replicas) * ranges) as u64,
+        "probing must stay bounded to the owner sets: {:?}",
+        c2.stats
+    );
+    // the probe-confirmed hit re-warmed the local catalog: an identical
+    // query hits via Bloom without new fallback probes
+    let probes = c2.stats.fallback_probes;
+    let r2 = c2.query(&p).unwrap();
+    assert_eq!(r2.case, HitCase::Full);
+    assert_eq!(
+        c2.stats.fallback_probes, probes,
+        "a warm catalog must skip owner probing"
+    );
+    c1.shutdown();
+    c2.shutdown();
+    for cb in boxes {
+        cb.shutdown();
+    }
+}
+
+#[test]
+fn ring_fallback_recovers_partial_hits_after_reboot() {
+    // the harder half of catalog-less recovery: the shared-prefix ranges
+    // exist only as *aliases*.  Under the ring they are also placed at
+    // their own store key's owners (alias indirection), so a rebooted
+    // client probing a prefix key's owner finds the pointer and follows
+    // it to the blob at the target key's owners.
+    let Some(eng) = engine() else { return };
+    let boxes: Vec<CacheBox> = (0..3).map(|_| CacheBox::start_local().unwrap()).collect();
+    let box_refs: Vec<&CacheBox> = boxes.iter().collect();
+    let mut cfg = fabric_cfg("ring-partial-up", &box_refs);
+    cfg.placement = PlacementKind::RendezvousRing;
+    let mut c1 = EdgeClient::new(Arc::clone(&eng), cfg).unwrap();
+
+    let gen = edgecache::workload::Generator::new(59);
+    let p0 = gen.prompt("anatomy", 0, 2);
+    let p1 = gen.prompt("anatomy", 1, 2); // shares instruction + examples
+    assert_eq!(p0.examples, p1.examples);
+    let r0 = c1.query(&p0).unwrap();
+    assert_eq!(r0.case, HitCase::Miss);
+
+    // what an uncached client answers for p1 — the recovery must match it
+    let baseline = {
+        let mut solo = EdgeClient::new(Arc::clone(&eng), fabric_cfg("solo", &[])).unwrap();
+        let r = solo.query(&p1).unwrap();
+        solo.shutdown();
+        r.response_tokens
+    };
+
+    // rebooted client: empty Bloom filters, no sync — only the ring knows
+    // where anything lives
+    let mut cfg2 = fabric_cfg("ring-partial-reboot", &box_refs);
+    cfg2.placement = PlacementKind::RendezvousRing;
+    let mut c2 = EdgeClient::new(Arc::clone(&eng), cfg2).unwrap();
+    let r1 = c2.query(&p1).unwrap();
+    assert_eq!(
+        r1.case,
+        HitCase::AllExamples,
+        "owner probing must recover the shared-prefix partial hit"
+    );
+    assert!(r1.matched_tokens > 0 && r1.matched_tokens < r1.prompt_tokens);
+    assert!(r1.downloaded_bytes > 0);
+    assert_eq!(r1.response_tokens, baseline, "no corruption through recovery");
+    assert!(c2.stats.fallback_probe_hits >= 1, "{:?}", c2.stats);
+    c1.shutdown();
+    c2.shutdown();
+    for cb in boxes {
+        cb.shutdown();
+    }
+}
+
+#[test]
+fn ring_repair_restores_replication_after_peer_death() {
+    // replica bookkeeping derived from the ring: after an owner dies, the
+    // next client to *use* the entry re-publishes it to the successor
+    // owner, restoring the configured replication factor with no
+    // per-entry tracking anywhere
+    let Some(eng) = engine() else { return };
+    let boxes: Vec<CacheBox> = (0..3).map(|_| CacheBox::start_local().unwrap()).collect();
+    let box_refs: Vec<&CacheBox> = boxes.iter().collect();
+    let mut cfg = fabric_cfg("ring-repair", &box_refs);
+    cfg.placement = PlacementKind::RendezvousRing;
+    cfg.replicas = 1; // replication factor 2 of 3 boxes
+    let mut c = EdgeClient::new(Arc::clone(&eng), cfg).unwrap();
+
+    let gen = edgecache::workload::Generator::new(53);
+    let p = gen.prompt("virology", 0, 1);
+    let r0 = c.query(&p).unwrap();
+    assert_eq!(r0.case, HitCase::Miss);
+    assert_eq!(c.stats.replica_uploads, 1, "ring must ship the replica copy");
+    // the blob bundle lives on its two HRW owners — the byte-heavy boxes
+    // (other boxes may hold tiny indirection aliases)
+    let bytes: Vec<usize> = boxes.iter().map(|cb| cb.stats().1).collect();
+    let heavy = (0..3).max_by_key(|&i| bytes[i]).unwrap();
+
+    // kill one bundle owner; catalogs (and the stale ring view) still
+    // point at it until the failed fetch flips membership
+    let mut boxes: Vec<Option<CacheBox>> = boxes.into_iter().map(Some).collect();
+    boxes[heavy].take().unwrap().shutdown();
+    let survivors: Vec<usize> = (0..3).filter(|&i| i != heavy).collect();
+    let before: Vec<usize> = survivors
+        .iter()
+        .map(|&i| boxes[i].as_ref().unwrap().stats().1)
+        .collect();
+
+    // the next use of the entry fetches from the survivor and, post
+    // response, repairs the successor owner back up to 2 live copies
+    let r1 = c.query(&p).unwrap();
+    assert_eq!(r1.case, HitCase::Full, "survivor keeps the hit alive");
+    assert_eq!(r1.response_tokens, r0.response_tokens);
+    assert!(
+        c.stats.repair_republishes >= 1,
+        "repair must re-publish the lost copy: {:?}",
+        c.stats
+    );
+    // with 2 of 3 boxes live the recomputed owner set is exactly the two
+    // survivors: one already held the blob, the other must have gained it
+    let gained: usize = survivors
+        .iter()
+        .zip(&before)
+        .map(|(&i, &b)| boxes[i].as_ref().unwrap().stats().1.saturating_sub(b))
+        .sum();
+    assert!(
+        gained > 500,
+        "a survivor must have received the repaired blob (+{gained} B)"
+    );
+    // replication factor is back: another use finds every live owner
+    // intact and re-publishes nothing new
+    let repairs = c.stats.repair_republishes;
+    let r2 = c.query(&p).unwrap();
+    assert_eq!(r2.case, HitCase::Full);
+    assert_eq!(
+        c.stats.repair_republishes, repairs,
+        "an intact owner set must not be re-repaired"
+    );
+    c.shutdown();
+    for cb in boxes.into_iter().flatten() {
+        cb.shutdown();
+    }
 }
 
 #[test]

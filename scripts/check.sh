@@ -49,6 +49,13 @@ EDGECACHE_SMOKE=1 cargo bench --bench streaming_assembly
 echo "== peer fabric smoke (EDGECACHE_SMOKE=1) =="
 EDGECACHE_SMOKE=1 cargo bench --bench peer_fabric
 
+# Placement smoke (`just bench-placement`): ring vs p2c — asserts the
+# ring's post-reboot (catalog-less) hit rate strictly beats p2c's, ring
+# byte imbalance stays under the documented bound, and ring-driven repair
+# restores the replication factor after a peer death.
+echo "== placement smoke (EDGECACHE_SMOKE=1) =="
+EDGECACHE_SMOKE=1 cargo bench --bench placement
+
 if [ "${1:-}" != "--no-clippy" ]; then
     echo "== cargo clippy -- -D warnings =="
     cargo clippy -- -D warnings
