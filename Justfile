@@ -57,3 +57,22 @@ bench-placement-full:
 # factor after a peer death
 bench-placement:
     cd rust && EDGECACHE_SMOKE=1 cargo bench --bench placement
+
+# churn bench, full sweep (emits BENCH_churn.json): rolling reboots + a
+# permanent peer death with heartbeat membership vs a no-heartbeat
+# ablation, a stalled (accepted-but-silent) head claimer, and seeded
+# mid-run link-degradation flaps
+bench-churn-full:
+    cd rust && cargo bench --bench churn
+
+# the same bench with tiny parameters — the check.sh smoke gate: asserts
+# heal+repair restores the replication factor and strictly beats the
+# ablation's post-death hit rate, stalled restores stay within one
+# deadline budget, and zero operations wedge
+bench-churn:
+    cd rust && EDGECACHE_SMOKE=1 cargo bench --bench churn
+
+# the liveness suite on its own (stalled-peer budget bound, membership
+# heal loop over a real reboot)
+test-liveness:
+    cd rust && cargo test -q --test integration_liveness

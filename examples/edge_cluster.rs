@@ -24,7 +24,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use edgecache::coordinator::{
-    CacheBox, EdgeClient, EdgeClientConfig, PeerConfig, PlacementKind,
+    CacheBox, DeadlineBudget, EdgeClient, EdgeClientConfig, PeerConfig, PlacementKind,
 };
 use edgecache::devicemodel::DeviceProfile;
 use edgecache::engine::Engine;
@@ -105,6 +105,8 @@ fn main() -> anyhow::Result<()> {
         fetch_policy: edgecache::coordinator::FetchPolicy::Always,
         min_hit_tokens: 1,
         sync_interval: Some(Duration::from_millis(100)),
+        // liveness on: a stalled box costs one 2 s op budget, never a hang
+        deadline: Some(DeadlineBudget::default()),
         seed,
     };
     let mut clients = vec![
@@ -173,10 +175,12 @@ fn main() -> anyhow::Result<()> {
     let total_queries: u64 = clients.iter().map(|c| c.stats.queries).sum();
     let throughput = total_queries as f64 / wall.as_secs_f64();
     println!("\nwall time {:.1} s, {} queries, {:.2} q/s", wall.as_secs_f64(), total_queries, throughput);
-    for c in &clients {
+    for c in &mut clients {
+        c.refresh_stats();
         println!(
             "  {} [{}]: hits by case {:?}, FPs {}, down {:.2} MB, up {:.2} MB, \
-             multi-source {}, re-plans {}, fallback probes {} ({} hits), repairs {}",
+             multi-source {}, re-plans {}, fallback probes {} ({} hits, {} suppressed), \
+             repairs {}, timeouts {}, suspects {}, heals {}",
             c.cfg.name,
             c.placement_name(),
             c.stats.hits_by_case,
@@ -187,13 +191,17 @@ fn main() -> anyhow::Result<()> {
             c.stats.re_plans,
             c.stats.fallback_probes,
             c.stats.fallback_probe_hits,
+            c.stats.probes_suppressed,
             c.stats.repair_republishes,
+            c.stats.timeouts,
+            c.stats.suspect_transitions,
+            c.stats.heals,
         );
         for l in c.peer_ledgers() {
             println!(
                 "    peer {}: down {:.2} MB, up {:.2} MB, shares {} ({} failed), \
                  uploads {} (+{} replicas), placed {}, probes {}, repairs {}, \
-                 {} sync rounds",
+                 {} sync rounds, {} heartbeats, {} heals, {} timeouts",
                 l.addr,
                 l.bytes_down as f64 / 1e6,
                 l.bytes_up as f64 / 1e6,
@@ -205,6 +213,9 @@ fn main() -> anyhow::Result<()> {
                 l.fallback_probes,
                 l.repair_republishes,
                 l.sync_rounds,
+                l.heartbeats,
+                l.heals,
+                l.timeouts,
             );
         }
     }

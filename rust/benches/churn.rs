@@ -1,0 +1,682 @@
+//! Churn acceptance bench — fleet liveness under membership churn, the
+//! scripted harness for the heartbeat/deadline layer:
+//!
+//! * **(a) reboot waves + a permanent death, heartbeats vs ablation**: a
+//!   3-box ring fabric with replicas=1 takes rolling reboots (leave +
+//!   rejoin on the same address) and then loses one box for good.  The
+//!   heartbeat run watches the `Up → Suspect → Dead → Recovering` machine,
+//!   lets the ring heal its owner sets, and repair-sweeps the healed box —
+//!   so it must end with the replication factor restored and a post-death
+//!   hit rate of 1.0.  The ablation (no heartbeats, no heal, no repair)
+//!   must end strictly lower — asserted.
+//! * **(b) stalled peer costs one deadline budget**: an accepted-but-silent
+//!   TCP endpoint claims the entry; every restore must rotate to the real
+//!   replica within roughly one op budget of the single-peer control —
+//!   asserted per fetch.
+//! * **(c) mid-run link degradation**: seeded `FaultPlan` flap schedules
+//!   (goodput degradation on one peer, stalls on the other) attached to
+//!   the shapers mid-trace; every fetch must still restore bit-exact.
+//!
+//! Every fabric op is watchdogged: any single op slower than `WEDGE`
+//! counts as wedged and fails the bench ("zero wedged operations").
+//!
+//! Emits `BENCH_churn.json`.
+//!
+//! Env: EDGECACHE_SMOKE=1 (reduced sizes for the check.sh gate),
+//!      EDGECACHE_CHURN_JSON (output path, default BENCH_churn.json).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use edgecache::coordinator::fabric::{
+    fetch_prefix_multi, repair_entry, Peer, PeerConfig,
+};
+use edgecache::coordinator::{
+    CacheBox, DeadlineBudget, HealthPolicy, Membership, PeerHealth, PeerPlanner,
+    Placement, RendezvousRing,
+};
+use edgecache::kvstore::KvClient;
+use edgecache::model::state::{Compression, KvState};
+use edgecache::netsim::{Fault, FaultPlan, LinkModel};
+use edgecache::util::bytes::SharedBytes;
+use edgecache::util::json::Json;
+use edgecache::util::rng::Rng;
+
+const HASH: &str = "bench-churn";
+const DIMS: (usize, usize, usize, usize) = (4, 128, 2, 32); // 2 KB/token
+const CT: usize = 4;
+/// Heartbeat cadence for the sync loops (fast so death/heal detection
+/// fits a bench run; real deployments run 100-200 ms).
+const SYNC_INTERVAL: Duration = Duration::from_millis(25);
+/// Any single fabric op slower than this is a wedged operation.
+const WEDGE: Duration = Duration::from_secs(8);
+
+fn budget() -> DeadlineBudget {
+    DeadlineBudget::from_millis(300, 400)
+}
+
+fn bench_link() -> LinkModel {
+    LinkModel {
+        name: "lan-64m",
+        goodput_bps: 8e6,
+        rtt: Duration::from_millis(2),
+        jitter_frac: 0.0,
+    }
+}
+
+fn filled_state(total_rows: usize, seed: u64) -> KvState {
+    let (l, s, kh, d) = DIMS;
+    let mut st = KvState::zeroed(l, s, kh, d);
+    st.n_tokens = total_rows;
+    let mut rng = Rng::new(seed);
+    for x in st.k.iter_mut().take(total_rows * 2 * kh * d * l) {
+        *x = rng.f64() as f32;
+    }
+    for x in st.v.iter_mut().take(total_rows * 2 * kh * d * l) {
+        *x = rng.f64() as f32 - 0.5;
+    }
+    st
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+fn p95(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[((v.len() - 1) as f64 * 0.95).round() as usize]
+}
+
+fn wait_for(what: &str, timeout: Duration, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < timeout, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Restart a cache box on the address its predecessor just vacated.  std's
+/// `TcpListener::bind` sets SO_REUSEADDR on unix, so lingering TIME_WAIT
+/// sockets don't block the rebind; retry briefly anyway for the dead
+/// instance's accept thread to release the port.
+fn restart_box(addr: &str) -> CacheBox {
+    let t0 = Instant::now();
+    loop {
+        match CacheBox::start(addr, 1 << 30) {
+            Ok(cb) => return cb,
+            Err(e) => {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(10),
+                    "could not rebind {addr}: {e}"
+                );
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    }
+}
+
+struct Entry {
+    key: String,
+    /// Owner set under the all-alive ring (primary first, replicas=1).
+    owners: Vec<usize>,
+    blob: Vec<u8>,
+    truth: KvState,
+}
+
+/// Generate entries until `n_target` exist *and* every owner pair of the
+/// 3-box ring is covered (so each churn victim combination loses at least
+/// one entry in the ablation), then seed the blobs onto their owners.
+fn seed_entries(
+    ring: &RendezvousRing,
+    addrs: &[String],
+    n_target: usize,
+    rows: usize,
+    m: usize,
+) -> Vec<Entry> {
+    let mut entries = Vec::new();
+    let mut pairs_seen = [false; 3];
+    for i in 0..64u64 {
+        let key = format!("state:c{i}");
+        let owners = ring.owners(key.as_bytes(), 1);
+        assert_eq!(owners.len(), 2, "replicas=1 on 3 boxes gives 2 owners");
+        let pair = owners[0] + owners[1] - 1; // {0,1}->0, {0,2}->1, {1,2}->2
+        pairs_seen[pair] = true;
+        let st = filled_state(rows, 1000 + i);
+        let blob = st.serialize_prefix_opts(rows, HASH, Compression::None, CT);
+        let truth = KvState::restore(
+            &st.serialize_prefix_opts(m, HASH, Compression::None, CT),
+            HASH,
+            DIMS,
+        )
+        .expect("truth restore");
+        entries.push(Entry { key, owners, blob, truth });
+        if entries.len() >= n_target && pairs_seen.iter().all(|&p| p) {
+            break;
+        }
+    }
+    assert!(
+        pairs_seen.iter().all(|&p| p),
+        "64 keys must cover all owner pairs"
+    );
+    for e in &entries {
+        for &o in &e.owners {
+            let mut c = KvClient::connect(&addrs[o]).expect("seed conn");
+            c.set(e.key.as_bytes(), &e.blob).expect("seed set");
+        }
+    }
+    entries
+}
+
+fn claimers<'a>(peers: &'a mut [Peer], owners: &[usize]) -> Vec<(usize, &'a mut Peer)> {
+    peers
+        .iter_mut()
+        .enumerate()
+        .filter(|(i, _)| owners.contains(i))
+        .collect()
+}
+
+#[derive(Default)]
+struct RunStats {
+    warm_hits: usize,
+    warm_total: usize,
+    post_hits: usize,
+    post_total: usize,
+    warm_ms: Vec<f64>,
+    post_ms: Vec<f64>,
+    republished: u64,
+    max_op_ms: f64,
+    wedged: usize,
+    deaths: u64,
+    heals: u64,
+}
+
+impl RunStats {
+    fn post_rate(&self) -> f64 {
+        self.post_hits as f64 / self.post_total.max(1) as f64
+    }
+}
+
+/// One full churn scenario: warm pass, rolling reboot wave, permanent
+/// death, post pass.  `heartbeats` arms the membership machine + sync-loop
+/// heartbeats + ring heal + repair sweeps; the ablation runs the identical
+/// event sequence blind.
+fn run_scenario(heartbeats: bool, smoke: bool) -> RunStats {
+    let (rows, m, n_entries) = if smoke { (24usize, 16usize, 4usize) } else { (40, 32, 8) };
+    let reboots: Vec<usize> = if smoke { vec![0] } else { vec![0, 2] };
+    let killed = 1usize;
+
+    let mut boxes: Vec<Option<CacheBox>> = (0..3)
+        .map(|_| Some(CacheBox::start_local().expect("box start")))
+        .collect();
+    let addrs: Vec<String> =
+        boxes.iter().map(|b| b.as_ref().unwrap().addr()).collect();
+    let mut ring = RendezvousRing::new(addrs.clone());
+    let entries = seed_entries(&ring, &addrs, n_entries, rows, m);
+
+    let planner = PeerPlanner::default();
+    let membership = Membership::new(3, HealthPolicy::default());
+    let mut peers: Vec<Peer> = addrs
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            let cfg = PeerConfig::new(a.clone()).with_deadline(budget());
+            let mut p =
+                Peer::connect(cfg, bench_link(), 10 + i as u64, 1).expect("peer connect");
+            if heartbeats {
+                p.set_health(membership.sink(i));
+                p.spawn_sync_with(SYNC_INTERVAL, Some(membership.sink(i)))
+                    .expect("sync spawn");
+            }
+            p
+        })
+        .collect();
+
+    let mut out = RunStats::default();
+    let fetch_pass = |peers: &mut [Peer],
+                          owners_of: &dyn Fn(&Entry) -> Vec<usize>,
+                          hits: &mut usize,
+                          total: &mut usize,
+                          lat: &mut Vec<f64>,
+                          max_op: &mut f64,
+                          wedged: &mut usize| {
+        for e in &entries {
+            let owners = owners_of(e);
+            let t0 = Instant::now();
+            let got = {
+                let mut cl = claimers(peers, &owners);
+                if cl.is_empty() {
+                    None
+                } else {
+                    fetch_prefix_multi(
+                        &mut cl, &planner, e.key.as_bytes(), rows, false, CT, m, HASH,
+                        DIMS,
+                    )
+                }
+            };
+            let el = t0.elapsed();
+            *max_op = max_op.max(ms(el));
+            if el >= WEDGE {
+                *wedged += 1;
+            }
+            *total += 1;
+            if let Some(f) = got {
+                assert_eq!(f.state.k, e.truth.k, "{}: corrupt restore", e.key);
+                assert_eq!(f.state.v, e.truth.v, "{}: corrupt restore", e.key);
+                *hits += 1;
+            }
+            lat.push(ms(el));
+        }
+    };
+
+    // ---- warm pass: all boxes up, static owners ------------------------
+    let static_owners = |e: &Entry| e.owners.clone();
+    {
+        let RunStats { warm_hits, warm_total, warm_ms, max_op_ms, wedged, .. } =
+            &mut out;
+        fetch_pass(
+            &mut peers, &static_owners, warm_hits, warm_total, warm_ms, max_op_ms,
+            wedged,
+        );
+    }
+    assert_eq!(out.warm_hits, out.warm_total, "warm pass must fully hit");
+
+    // ---- rolling reboot wave -------------------------------------------
+    for &v in &reboots {
+        boxes[v].take().expect("victim alive").shutdown();
+        if heartbeats {
+            // death detection rides the sync loop's missed heartbeats
+            wait_for("death detection", Duration::from_secs(10), || {
+                membership.state(v) == PeerHealth::Dead
+            });
+        } else {
+            // the ablation gets the same wall-clock gap, just no observer
+            std::thread::sleep(Duration::from_millis(150));
+        }
+        boxes[v] = Some(restart_box(&addrs[v]));
+        if heartbeats {
+            // the sync loop's backoff probe doubles as recovery detection:
+            // Dead -> Recovering on the first heartbeat, Up after probation
+            wait_for("heal", Duration::from_secs(20), || {
+                membership.state(v) == PeerHealth::Up
+            });
+            // the pooled conn predates the reboot; drop it so the repair
+            // sweep redials instead of burning its first probe on a stale
+            // socket
+            peers[v].mark_dead_conn();
+            ring.on_membership_change(&membership.alive_flags());
+            // repair sweep: re-publish every entry the reboot wiped
+            for e in &entries {
+                let owners = ring.owners(e.key.as_bytes(), 1);
+                let mut blob = || SharedBytes::copy_from(&e.blob);
+                let r = repair_entry(&mut peers, &owners, e.key.as_bytes(), None, &mut blob);
+                out.republished += r.republished;
+                assert_eq!(r.rejected, 0, "repair publish rejected");
+            }
+        }
+    }
+    if heartbeats {
+        // the acceptance gate: after heal + repair the replication factor
+        // is restored — every owner of every entry serves it again
+        for e in &entries {
+            for &o in &e.owners {
+                let mut c = KvClient::connect(&addrs[o]).expect("verify conn");
+                assert!(
+                    c.exists(e.key.as_bytes()).expect("verify exists"),
+                    "{} missing on owner {o} after heal+repair",
+                    e.key
+                );
+            }
+        }
+        assert!(out.republished > 0, "the reboot wave must have cost replicas");
+    }
+
+    // ---- permanent death + post pass -----------------------------------
+    boxes[killed].take().expect("killed box alive").shutdown();
+    if heartbeats {
+        wait_for("killed-peer detection", Duration::from_secs(10), || {
+            membership.state(killed) == PeerHealth::Dead
+        });
+        ring.on_membership_change(&membership.alive_flags());
+    } else {
+        std::thread::sleep(Duration::from_millis(150));
+    }
+    {
+        // heartbeat run: live owner sets (the dead box's slot fell to its
+        // ring successor); ablation: the stale static owners, dead box
+        // included
+        let live_owners = |e: &Entry| ring.owners(e.key.as_bytes(), 1);
+        let RunStats { post_hits, post_total, post_ms, max_op_ms, wedged, .. } =
+            &mut out;
+        if heartbeats {
+            fetch_pass(
+                &mut peers, &live_owners, post_hits, post_total, post_ms, max_op_ms,
+                wedged,
+            );
+        } else {
+            fetch_pass(
+                &mut peers, &static_owners, post_hits, post_total, post_ms, max_op_ms,
+                wedged,
+            );
+        }
+    }
+    if heartbeats {
+        // final sweep restores replicas=1 on the survivors, too
+        for e in &entries {
+            let owners = ring.owners(e.key.as_bytes(), 1);
+            let mut blob = || SharedBytes::copy_from(&e.blob);
+            let r = repair_entry(&mut peers, &owners, e.key.as_bytes(), None, &mut blob);
+            out.republished += r.republished;
+            for &o in &owners {
+                let mut c = KvClient::connect(&addrs[o]).expect("verify conn");
+                assert!(
+                    c.exists(e.key.as_bytes()).expect("verify exists"),
+                    "{} not re-replicated onto survivor {o}",
+                    e.key
+                );
+            }
+        }
+        out.deaths = membership.deaths();
+        out.heals = membership.heals();
+    }
+
+    for p in &mut peers {
+        p.stop_sync();
+    }
+    for b in boxes.into_iter().flatten() {
+        b.shutdown();
+    }
+    out
+}
+
+/// (b) A stalled (accepted-but-silent) head claimer: every restore must
+/// rotate to the live replica within about one op budget of the
+/// single-peer control.
+fn stalled_section(json: &mut Vec<(&'static str, Json)>) {
+    let (rows, m) = (24usize, 16usize);
+    let st = filled_state(rows, 77);
+    let blob = st.serialize_prefix_opts(rows, HASH, Compression::None, CT);
+    let truth = KvState::restore(
+        &st.serialize_prefix_opts(m, HASH, Compression::None, CT),
+        HASH,
+        DIMS,
+    )
+    .expect("truth restore");
+    let cb = CacheBox::start_local().expect("box");
+    KvClient::connect(&cb.addr())
+        .expect("seed conn")
+        .set(b"state:stall", &blob)
+        .expect("seed");
+
+    // the silent peer: accepts connections, never answers, never closes
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("silent bind");
+    listener.set_nonblocking(true).expect("nonblocking");
+    let silent_addr = listener.local_addr().expect("silent addr").to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let holder = std::thread::spawn(move || {
+        let mut held = Vec::new();
+        while !stop2.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((s, _)) => held.push(s),
+                Err(_) => std::thread::sleep(Duration::from_millis(5)),
+            }
+        }
+    });
+
+    let planner = PeerPlanner::default();
+    let b = budget();
+    let mut real = Peer::connect(
+        PeerConfig::new(cb.addr()).with_deadline(b),
+        bench_link(),
+        31,
+        1,
+    )
+    .expect("real peer");
+    let mut fetch_control = || {
+        let t0 = Instant::now();
+        let f = {
+            let mut cl = vec![(1usize, &mut real)];
+            fetch_prefix_multi(
+                &mut cl, &planner, b"state:stall", rows, false, CT, m, HASH, DIMS,
+            )
+            .expect("control fetch")
+        };
+        assert_eq!(f.state.k, truth.k);
+        t0.elapsed()
+    };
+    let control = fetch_control().min(fetch_control());
+
+    let mut silent = Peer::connect(
+        PeerConfig::new(silent_addr).with_deadline(b),
+        bench_link(),
+        32,
+        1,
+    )
+    .expect("silent peer connect");
+    let mut worst = Duration::ZERO;
+    let n = 3;
+    for i in 0..n {
+        let t0 = Instant::now();
+        let f = {
+            // the silent peer is the preferred head every time
+            let mut cl = vec![(0usize, &mut silent), (1usize, &mut real)];
+            fetch_prefix_multi(
+                &mut cl, &planner, b"state:stall", rows, false, CT, m, HASH, DIMS,
+            )
+        }
+        .unwrap_or_else(|| panic!("stalled fetch {i} must restore via the replica"));
+        let el = t0.elapsed();
+        worst = worst.max(el);
+        assert_eq!(f.state.k, truth.k, "stalled fetch {i}: corrupt restore");
+        assert_eq!(f.state.v, truth.v);
+        assert!(
+            el < control + 2 * b.op,
+            "stalled fetch {i} took {el:?}; budget {:?} + control {control:?} allows one \
+             deadline plus slack",
+            b.op
+        );
+    }
+    assert!(
+        silent.ledger.timeouts >= 1,
+        "the stall must be classified as a deadline expiry, not a dead conn"
+    );
+    println!(
+        "(b) stalled head claimer: control {:>7.2} ms, worst stalled {:>7.2} ms \
+         (op budget {} ms, {} deadline expiries)",
+        ms(control),
+        ms(worst),
+        b.op.as_millis(),
+        silent.ledger.timeouts,
+    );
+    json.push((
+        "stalled_peer",
+        Json::obj(vec![
+            ("op_budget_ms", Json::Int(b.op.as_millis() as i64)),
+            ("control_ms", Json::Num(ms(control))),
+            ("worst_ms", Json::Num(ms(worst))),
+            ("fetches", Json::Int(n as i64)),
+            ("deadline_expiries", Json::Int(silent.ledger.timeouts as i64)),
+        ]),
+    ));
+    stop.store(true, Ordering::SeqCst);
+    holder.join().expect("holder join");
+    cb.shutdown();
+}
+
+/// (c) Mid-run link degradation: seeded flap schedules on both peers'
+/// shapers; the trace keeps restoring bit-exact through the windows.
+fn degraded_section(smoke: bool, json: &mut Vec<(&'static str, Json)>) {
+    let (rows, m) = (24usize, 16usize);
+    let n_ops = if smoke { 8u64 } else { 16 };
+    let st = filled_state(rows, 88);
+    let blob = st.serialize_prefix_opts(rows, HASH, Compression::None, CT);
+    let truth = KvState::restore(
+        &st.serialize_prefix_opts(m, HASH, Compression::None, CT),
+        HASH,
+        DIMS,
+    )
+    .expect("truth restore");
+    let cb_a = CacheBox::start_local().expect("box a");
+    let cb_b = CacheBox::start_local().expect("box b");
+    for cb in [&cb_a, &cb_b] {
+        KvClient::connect(&cb.addr())
+            .expect("seed conn")
+            .set(b"state:flap", &blob)
+            .expect("seed");
+    }
+    let mut pa = Peer::connect(
+        PeerConfig::new(cb_a.addr()).with_deadline(budget()),
+        bench_link(),
+        41,
+        1,
+    )
+    .expect("peer a");
+    let mut pb = Peer::connect(
+        PeerConfig::new(cb_b.addr()).with_deadline(budget()),
+        bench_link(),
+        42,
+        1,
+    )
+    .expect("peer b");
+    // each fetch costs several shaped ops, so schedule over that op space
+    pa.shaper
+        .attach_faults(FaultPlan::flap_schedule(21, n_ops * 3, 3, Fault::Degrade(6.0)));
+    pb.shaper.attach_faults(FaultPlan::flap_schedule(
+        22,
+        n_ops * 3,
+        3,
+        Fault::Stall(Duration::from_millis(120)),
+    ));
+
+    let planner = PeerPlanner::default();
+    let mut lat = Vec::new();
+    let mut max_op = 0.0f64;
+    for i in 0..n_ops {
+        let t0 = Instant::now();
+        let f = {
+            let mut cl: Vec<(usize, &mut Peer)> = if i % 2 == 0 {
+                vec![(0, &mut pa), (1, &mut pb)]
+            } else {
+                vec![(1, &mut pb), (0, &mut pa)]
+            };
+            fetch_prefix_multi(
+                &mut cl, &planner, b"state:flap", rows, false, CT, m, HASH, DIMS,
+            )
+        }
+        .unwrap_or_else(|| panic!("degraded fetch {i} must still hit"));
+        let el = t0.elapsed();
+        assert!(el < WEDGE, "degraded fetch {i} wedged: {el:?}");
+        max_op = max_op.max(ms(el));
+        assert_eq!(f.state.k, truth.k, "degraded fetch {i}: corrupt restore");
+        lat.push(ms(el));
+    }
+    let faulted = pa.shaper.faulted_ops + pb.shaper.faulted_ops;
+    assert!(faulted >= 1, "the flap schedules must have fired mid-run");
+    println!(
+        "(c) degraded links: {n_ops} fetches through {faulted} faulted shaper ops, \
+         p95 {:>7.2} ms, max {:>7.2} ms, hit rate 1.00",
+        p95(&lat),
+        max_op,
+    );
+    json.push((
+        "degraded_links",
+        Json::obj(vec![
+            ("fetches", Json::Int(n_ops as i64)),
+            ("faulted_shaper_ops", Json::Int(faulted as i64)),
+            ("p95_ms", Json::Num(p95(&lat))),
+            ("max_ms", Json::Num(max_op)),
+            ("hit_rate", Json::Num(1.0)),
+        ]),
+    ));
+    cb_a.shutdown();
+    cb_b.shutdown();
+}
+
+fn run_json(r: &RunStats) -> Json {
+    Json::obj(vec![
+        ("warm_hits", Json::Int(r.warm_hits as i64)),
+        ("warm_total", Json::Int(r.warm_total as i64)),
+        ("post_hits", Json::Int(r.post_hits as i64)),
+        ("post_total", Json::Int(r.post_total as i64)),
+        ("post_hit_rate", Json::Num(r.post_rate())),
+        ("warm_p95_ms", Json::Num(p95(&r.warm_ms))),
+        ("post_p95_ms", Json::Num(p95(&r.post_ms))),
+        ("republished", Json::Int(r.republished as i64)),
+        ("max_op_ms", Json::Num(r.max_op_ms)),
+        ("wedged_ops", Json::Int(r.wedged as i64)),
+        ("deaths", Json::Int(r.deaths as i64)),
+        ("heals", Json::Int(r.heals as i64)),
+    ])
+}
+
+fn main() {
+    edgecache::util::logger::init_from_env();
+    let smoke = std::env::var("EDGECACHE_SMOKE").as_deref() == Ok("1");
+    println!("=================================================================");
+    println!(
+        " churn — reboot waves, peer death, stalls, link flaps{}",
+        if smoke { "  [smoke]" } else { "" }
+    );
+    println!("=================================================================");
+
+    // ---- (a) churn with heartbeats vs the no-heartbeat ablation ---------
+    let hb = run_scenario(true, smoke);
+    let ab = run_scenario(false, smoke);
+    println!(
+        "(a) heartbeats: warm {}/{}, post-death {}/{} ({} republished, \
+         {} deaths, {} heals, p95 warm {:.2} ms -> post {:.2} ms)",
+        hb.warm_hits,
+        hb.warm_total,
+        hb.post_hits,
+        hb.post_total,
+        hb.republished,
+        hb.deaths,
+        hb.heals,
+        p95(&hb.warm_ms),
+        p95(&hb.post_ms),
+    );
+    println!(
+        "(a) ablation:   warm {}/{}, post-death {}/{} (no heal, no repair)",
+        ab.warm_hits, ab.warm_total, ab.post_hits, ab.post_total,
+    );
+    assert_eq!(hb.post_hits, hb.post_total, "heal+repair must retain every hit");
+    assert!(
+        hb.post_rate() > ab.post_rate(),
+        "heartbeat run ({:.2}) must strictly beat the ablation ({:.2})",
+        hb.post_rate(),
+        ab.post_rate(),
+    );
+    assert_eq!(hb.wedged + ab.wedged, 0, "zero wedged operations");
+    assert!(hb.heals >= 1, "the reboot wave must heal through Recovering");
+    // tail retention: churn may cost re-plans and redials but never a
+    // tail blow-up (the budgets bound every stall)
+    assert!(
+        p95(&hb.post_ms) < p95(&hb.warm_ms) * 20.0 + 100.0,
+        "post-churn p95 {:.2} ms vs warm {:.2} ms: tail not retained",
+        p95(&hb.post_ms),
+        p95(&hb.warm_ms),
+    );
+
+    let mut sections: Vec<(&'static str, Json)> = vec![
+        ("smoke", Json::Bool(smoke)),
+        ("dims", Json::Str(format!("{DIMS:?}"))),
+        ("heartbeats", run_json(&hb)),
+        ("ablation", run_json(&ab)),
+    ];
+    stalled_section(&mut sections);
+    degraded_section(smoke, &mut sections);
+
+    let json = Json::obj(sections);
+    let path = std::env::var("EDGECACHE_CHURN_JSON")
+        .unwrap_or_else(|_| "BENCH_churn.json".into());
+    match std::fs::write(&path, json.to_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+    println!("churn done.");
+}

@@ -72,6 +72,9 @@ use crate::catalog::{
 use crate::coordinator::fabric::{
     fetch_full_entry, fetch_prefix_multi, repair_entry, Peer, PeerConfig,
 };
+use crate::coordinator::membership::{
+    classify_io_err, DeadlineBudget, HealthPolicy, Membership, Outcome,
+};
 use crate::coordinator::placement::{
     Placement, PlacementKind, PowerOfTwoChoices, RendezvousRing, Unplaced,
 };
@@ -212,6 +215,14 @@ pub struct EdgeClientConfig {
     pub min_hit_tokens: usize,
     /// Background catalog-sync interval; `None` = sync manually/never.
     pub sync_interval: Option<Duration>,
+    /// Per-op deadline budget armed on every pooled peer connection
+    /// (`set_read_timeout`/`set_write_timeout` plus a bounded connect).
+    /// `None` leaves sockets blocking — a *stalled* peer can then hold a
+    /// restore for as long as the OS lets it.  With a budget, a stall
+    /// costs at most one `op` timeout before the fabric re-plans, and the
+    /// peer is marked *Suspect* (not Dead) in membership.  Per-peer
+    /// [`PeerConfig::deadline`] overrides win over this fleet default.
+    pub deadline: Option<DeadlineBudget>,
     pub seed: u64,
 }
 
@@ -235,6 +246,7 @@ impl EdgeClientConfig {
             fetch_policy: FetchPolicy::Always,
             min_hit_tokens: 1,
             sync_interval: Some(Duration::from_millis(200)),
+            deadline: None,
             seed: 1,
         }
     }
@@ -321,6 +333,20 @@ pub struct ClientStats {
     /// Entries re-published by ring-driven replica repair to owners that
     /// had lost their copy.
     pub repair_republishes: u64,
+    /// Deadline-budget expiries (`WouldBlock`/`TimedOut`) observed on
+    /// pooled peer connections, summed over peers.  A timeout marks the
+    /// peer *Suspect*, never Dead (`coordinator::membership`).
+    pub timeouts: u64,
+    /// Membership transitions into `Suspect` — first strikes against a
+    /// peer that was healthy a moment ago.
+    pub suspect_transitions: u64,
+    /// Dead peers whose heartbeat came back (`Dead → Recovering`) — the
+    /// membership heal loop closing after a reboot.
+    pub heals: u64,
+    /// Ring-owner fallback probes skipped because every peer catalog was
+    /// warm (a Bloom miss is then trustworthy) or because the key sits in
+    /// the TTL'd probed-and-missed negative cache.
+    pub probes_suppressed: u64,
 }
 
 /// Where a downloaded state physically lives on the fabric — the anchor
@@ -390,27 +416,55 @@ pub struct EdgeClient {
     /// repair sweep).  One entry per distinct hit entry — bounded by the
     /// working set of reused prompts.
     verified_owners: HashMap<Vec<u8>, Vec<usize>>,
+    /// Fleet liveness: the shared per-peer health state machine every
+    /// sink (sync-loop heartbeats, hot-path I/O verdicts) reports into.
+    membership: Arc<Membership>,
+    /// Last membership epoch pushed into the placement policy; owner
+    /// sets, the repair memo and the probe negative cache are refreshed
+    /// only when the epoch moves — steady-state queries pay one atomic
+    /// load.
+    last_epoch: u64,
+    /// Fallback-probe suppression: store keys whose ring owners were
+    /// probed and answered "not here", with the probe time.  While the
+    /// entry is younger than [`PROBE_NEGATIVE_TTL`] the key is not
+    /// re-probed; any membership transition clears the cache (a heal or
+    /// death changes who should hold what).
+    probe_negative: HashMap<Vec<u8>, std::time::Instant>,
     pacer: Pacer,
     sampler: Sampler,
     pub stats: ClientStats,
 }
 
+/// How long a probed-and-missed store key suppresses re-probing its ring
+/// owners.  Long enough to cover a burst of repeat misses (the expensive
+/// pattern: every cold query paying bounded EXISTS probes that find
+/// nothing), short enough that a fresh upload by another client becomes
+/// probe-visible within a couple of sync intervals.
+const PROBE_NEGATIVE_TTL: Duration = Duration::from_millis(1500);
+
 impl EdgeClient {
     pub fn new(engine: Arc<Engine>, cfg: EdgeClientConfig) -> Result<Self> {
         anyhow::ensure!(cfg.chunk_tokens >= 1, "chunk_tokens must be >= 1");
         let meta = ModelMeta::new(engine.model_hash());
+        let membership = Membership::new(cfg.peers.len(), HealthPolicy::default());
         let mut peers = Vec::with_capacity(cfg.peers.len());
         for (i, pc) in cfg.peers.iter().enumerate() {
             let link = pc.link.clone().unwrap_or_else(|| cfg.link.clone());
+            // per-peer deadline overrides win; else the fleet default
+            let mut pc = pc.clone();
+            if pc.deadline.is_none() {
+                pc.deadline = cfg.deadline;
+            }
             // per-peer shaper seed: peer 0 keeps the historical stream
             let mut peer = Peer::connect(
-                pc.clone(),
+                pc,
                 link,
                 cfg.seed ^ (0x5AFE + i as u64),
                 cfg.min_hit_tokens,
             )?;
+            peer.set_health(membership.sink(i));
             if let Some(iv) = cfg.sync_interval {
-                peer.spawn_sync(iv)?;
+                peer.spawn_sync_with(iv, Some(membership.sink(i)))?;
             }
             peers.push(peer);
         }
@@ -447,6 +501,9 @@ impl EdgeClient {
             planner,
             policy,
             verified_owners: HashMap::new(),
+            membership,
+            last_epoch: 0,
+            probe_negative: HashMap::new(),
             pacer,
             stats: ClientStats::default(),
             engine,
@@ -454,12 +511,41 @@ impl EdgeClient {
         })
     }
 
-    /// Push the currently-observed peer connectivity into the placement
-    /// policy, so owner sets skip dead boxes (their ring successors take
-    /// over) until a reconnect succeeds.
+    /// Push the membership view into the placement policy whenever it has
+    /// moved: owner sets skip Dead boxes (their ring successors take
+    /// over) and *heal back* automatically once a rebooted box's
+    /// heartbeats clear probation — no lucky fallback probe required.
+    /// Suspect and Recovering peers stay in the owner sets; only Dead is
+    /// excluded.  Any transition also invalidates the repair memo and
+    /// the probe negative cache, because both describe a fleet that no
+    /// longer exists.  The telemetry mirrors are plain atomic loads and
+    /// refresh on every call.
     fn refresh_membership(&mut self) {
-        let alive: Vec<bool> = self.peers.iter().map(|p| p.is_connected()).collect();
-        self.policy.on_membership_change(&alive);
+        self.stats.suspect_transitions = self.membership.suspect_transitions();
+        self.stats.heals = self.membership.heals();
+        self.stats.timeouts = self.peers.iter().map(|p| p.ledger.timeouts).sum();
+        let epoch = self.membership.epoch();
+        if epoch == self.last_epoch {
+            return;
+        }
+        self.last_epoch = epoch;
+        self.policy.on_membership_change(&self.membership.alive_flags());
+        self.verified_owners.clear();
+        self.probe_negative.clear();
+    }
+
+    /// The fleet liveness view (heartbeat + hot-path fed) — benches and
+    /// tests poll this to observe deaths and heals.
+    pub fn membership(&self) -> &Arc<Membership> {
+        &self.membership
+    }
+
+    /// Bring the liveness mirrors in [`ClientStats`] (and the placement
+    /// policy's membership view) up to date — also happens automatically
+    /// at every query start; call before reading `stats` after the last
+    /// query of a trace.
+    pub fn refresh_stats(&mut self) {
+        self.refresh_membership();
     }
 
     /// The active placement policy's name (telemetry).
@@ -487,9 +573,16 @@ impl EdgeClient {
                     peer.cfg.addr
                 )),
             };
-            if let Err(e) = res {
-                peer.mark_dead_conn();
-                first_err.get_or_insert(e);
+            // a manual sync is a manual heartbeat: tests that drive the
+            // catalog synchronously still feed the liveness view, so a
+            // rebooted box heals without a background loop
+            match res {
+                Ok(()) => peer.note_io(Outcome::HeartbeatOk),
+                Err(e) => {
+                    peer.mark_dead_conn();
+                    peer.note_io(Outcome::HeartbeatMiss);
+                    first_err.get_or_insert(e);
+                }
             }
         }
         match first_err {
@@ -498,13 +591,20 @@ impl EdgeClient {
         }
     }
 
-    /// Per-peer transfer/latency ledgers, in peer order.
+    /// Per-peer transfer/latency ledgers, in peer order.  Liveness
+    /// counters (heartbeats, heals) are mirrored in from membership at
+    /// read time, like `sync_rounds` — they are produced on the sync
+    /// threads, not the query path.
     pub fn peer_ledgers(&self) -> Vec<PeerLedger> {
         self.peers
             .iter()
-            .map(|p| {
+            .enumerate()
+            .map(|(i, p)| {
                 let mut l = p.ledger.clone();
                 l.sync_rounds = p.sync_rounds();
+                let c = self.membership.peer_counters(i);
+                l.heartbeats = c.heartbeats;
+                l.heals = c.heals;
                 l
             })
             .collect()
@@ -644,6 +744,7 @@ impl EdgeClient {
             let probe = {
                 let peer = &mut self.peers[i];
                 let Some((conn, shaper)) = peer.conn_parts() else {
+                    peer.note_io(Outcome::IoDead);
                     continue; // unreachable peer: no probe was sent
                 };
                 shaper.shaped(0, || conn.exists(&key))
@@ -653,10 +754,15 @@ impl EdgeClient {
                 self.peers[i].ledger.fallback_probes += 1;
             }
             match probe {
-                Ok(true) => claimers.push(i),
-                Ok(false) => {}
-                Err(_) => {
+                Ok(held) => {
+                    self.peers[i].note_io(Outcome::IoOk);
+                    if held {
+                        claimers.push(i);
+                    }
+                }
+                Err(e) => {
                     self.peers[i].mark_dead_conn();
+                    self.peers[i].note_io(classify_io_err(&e));
                     self.stats.peer_failures += 1;
                 }
             }
@@ -676,17 +782,41 @@ impl EdgeClient {
         &mut self,
         ranges: &[PromptRange],
     ) -> Option<(PromptRange, Vec<usize>)> {
+        // Coldness gate: probing exists to recover what a *cold* catalog
+        // cannot see (a reboot emptied the Bloom filter, or sync never
+        // ran).  Once every peer catalog has synced at least one master
+        // delta, a Bloom miss is trustworthy — probing the owners on
+        // every genuinely-new prompt would find nothing, so those probes
+        // are suppressed and counted instead.
+        let warm = !self.peers.is_empty()
+            && self
+                .peers
+                .iter()
+                .all(|p| p.catalog.lock().unwrap().synced_version > 0);
+        let now = std::time::Instant::now();
         for r in ranges.iter().rev() {
             if r.token_len < self.cfg.min_hit_tokens {
                 continue;
+            }
+            if warm {
+                self.stats.probes_suppressed += 1;
+                continue;
+            }
+            let skey = state_store_key(&r.key);
+            // TTL'd negative cache: this key's owners recently answered
+            // "not here" — don't ask again until the TTL lapses (or
+            // membership moves, which clears the cache wholesale).
+            if let Some(&t) = self.probe_negative.get(&skey) {
+                if now.duration_since(t) < PROBE_NEGATIVE_TTL {
+                    self.stats.probes_suppressed += 1;
+                    continue;
+                }
             }
             self.refresh_membership();
             // owners are hashed on the *store* key — the same identity the
             // upload placed by and an alias target names, so every layer
             // computes the same boxes
-            let owners = self
-                .policy
-                .owners(&state_store_key(&r.key), self.cfg.replicas);
+            let owners = self.policy.owners(&skey, self.cfg.replicas);
             if owners.is_empty() {
                 return None; // non-deterministic policy: nothing to probe
             }
@@ -698,6 +828,7 @@ impl EdgeClient {
                 }
                 return Some((r.clone(), claimers));
             }
+            self.probe_negative.insert(skey, now);
         }
         None
     }
@@ -807,6 +938,7 @@ impl EdgeClient {
             let peer = &mut self.peers[i];
             let got = {
                 let Some((conn, shaper)) = peer.conn_parts() else {
+                    peer.note_io(Outcome::IoDead);
                     self.stats.peer_failures += 1;
                     continue;
                 };
@@ -821,10 +953,12 @@ impl EdgeClient {
             };
             match got {
                 Ok(Some(b)) => {
+                    peer.note_io(Outcome::IoOk);
                     peer.ledger.bytes_down += b.len() as u64;
                     return Some((i, b));
                 }
                 Ok(None) => {
+                    peer.note_io(Outcome::IoOk);
                     // this peer claimed the range but no longer holds it
                     // (evicted / Bloom FP); another claimer may still.
                     // An observed lost copy also invalidates the repair
@@ -839,6 +973,7 @@ impl EdgeClient {
                 Err(e) => {
                     log_debug!("edge-client", "download failed: {e}");
                     peer.mark_dead_conn();
+                    peer.note_io(classify_io_err(&e));
                     self.stats.peer_failures += 1;
                 }
             }
@@ -1017,6 +1152,7 @@ impl EdgeClient {
     fn probe_used_bytes(&mut self, i: usize) -> u64 {
         let res = {
             let Some((conn, shaper)) = self.peers[i].conn_parts() else {
+                self.peers[i].note_io(Outcome::IoDead);
                 return u64::MAX;
             };
             shaper.shaped_post(|| {
@@ -1026,11 +1162,15 @@ impl EdgeClient {
             })
         };
         match res {
-            Ok(info) => crate::kvstore::client::parse_info_used_bytes(&info)
-                .map(|v| v as u64)
-                .unwrap_or(u64::MAX),
-            Err(_) => {
+            Ok(info) => {
+                self.peers[i].note_io(Outcome::IoOk);
+                crate::kvstore::client::parse_info_used_bytes(&info)
+                    .map(|v| v as u64)
+                    .unwrap_or(u64::MAX)
+            }
+            Err(e) => {
                 self.peers[i].mark_dead_conn();
+                self.peers[i].note_io(classify_io_err(&e));
                 self.stats.peer_failures += 1;
                 u64::MAX
             }
@@ -1044,6 +1184,7 @@ impl EdgeClient {
         let t0 = std::time::Instant::now();
         let res = {
             let Some((conn, shaper)) = self.peers[i].conn_parts() else {
+                self.peers[i].note_io(Outcome::IoDead);
                 self.stats.peer_failures += 1;
                 return None;
             };
@@ -1053,12 +1194,14 @@ impl EdgeClient {
         peer.ledger.breakdown.add(Phase::Redis, t0.elapsed());
         match res {
             Ok(replies) => {
+                peer.note_io(Outcome::IoOk);
                 peer.ledger.bytes_up += wire as u64;
                 Some(replies)
             }
             Err(e) => {
                 log_debug!("edge-client", "upload to {} failed: {e}", peer.cfg.addr);
                 peer.mark_dead_conn();
+                peer.note_io(classify_io_err(&e));
                 self.stats.peer_failures += 1;
                 None
             }
@@ -1549,6 +1692,9 @@ impl EdgeClient {
     pub fn query(&mut self, prompt: &Prompt) -> Result<QueryResult> {
         let mut bd = PhaseBreakdown::default();
         self.stats.queries += 1;
+        // pick up heartbeat-driven transitions (a heal, a death the sync
+        // loop saw first) before the lookup decides who to ask
+        self.refresh_membership();
         let inflated0 = self.link_inflated_bytes();
         let overlap0 = self.link_overlap_saved();
 

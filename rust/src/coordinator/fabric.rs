@@ -43,6 +43,9 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::catalog::LocalCatalog;
+use crate::coordinator::membership::{
+    classify_io_err, DeadlineBudget, HealthSink, Outcome,
+};
 use crate::coordinator::policy::PeerPlanner;
 use crate::coordinator::sync::CatalogSync;
 use crate::kvstore::client::{getrange_req, ChunksReply, StreamingReplies};
@@ -67,15 +70,45 @@ pub struct PeerConfig {
     /// hint: a weight-2 box owns ~2x the keys of a weight-1 box).  Ignored
     /// by the load-probing p2c policy.  1.0 = uniform.
     pub weight: f64,
+    /// Socket deadlines for this peer's pooled connections: `connect`
+    /// bounds the dial, `op` arms read/write timeouts so a *stalled*
+    /// (accepted-but-silent) box costs at most one budget, never a hang.
+    /// `None` keeps the historical blocking behavior.
+    pub deadline: Option<DeadlineBudget>,
 }
 
 impl PeerConfig {
     pub fn new(addr: impl Into<String>) -> Self {
-        PeerConfig { addr: addr.into(), link: None, weight: 1.0 }
+        PeerConfig { addr: addr.into(), link: None, weight: 1.0, deadline: None }
     }
 
     pub fn with_link(addr: impl Into<String>, link: LinkModel) -> Self {
-        PeerConfig { addr: addr.into(), link: Some(link), weight: 1.0 }
+        PeerConfig { link: Some(link), ..Self::new(addr) }
+    }
+
+    pub fn with_deadline(mut self, deadline: DeadlineBudget) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Dial this peer honoring the deadline budget: a bounded
+    /// `connect_timeout` where the address parses as a socket address
+    /// (hostnames fall back to the blocking dial), then arm the per-op
+    /// read/write timeouts on the fresh socket.  This is the **only** dial
+    /// path the fabric uses, so pooled connections can never again come up
+    /// without their deadlines armed.
+    pub fn dial(&self) -> Result<KvClient> {
+        let conn = match self.deadline {
+            Some(b) if self.addr.parse::<std::net::SocketAddr>().is_ok() => {
+                KvClient::connect_timeout(&self.addr, b.connect)?
+            }
+            _ => KvClient::connect(&self.addr)?,
+        };
+        if let Some(b) = self.deadline {
+            conn.set_io_timeout(Some(b.op))
+                .with_context(|| format!("arm deadlines on {}", self.addr))?;
+        }
+        Ok(conn)
     }
 }
 
@@ -92,6 +125,9 @@ pub struct Peer {
     pub catalog: Arc<Mutex<LocalCatalog>>,
     sync: Option<CatalogSync>,
     pub ledger: PeerLedger,
+    /// Liveness reporting handle; `None` for standalone fabric use
+    /// (benches, tests) where no membership view exists.
+    health: Option<HealthSink>,
 }
 
 impl Peer {
@@ -103,7 +139,8 @@ impl Peer {
         seed: u64,
         min_hit_tokens: usize,
     ) -> Result<Peer> {
-        let conn = KvClient::connect(&cfg.addr)
+        let conn = cfg
+            .dial()
             .with_context(|| format!("cache box at {}", cfg.addr))?;
         let mut catalog = LocalCatalog::new();
         catalog.min_hit_tokens = min_hit_tokens;
@@ -114,18 +151,50 @@ impl Peer {
             catalog: Arc::new(Mutex::new(catalog)),
             sync: None,
             ledger: PeerLedger { addr: cfg.addr.clone(), ..Default::default() },
+            health: None,
             cfg,
         })
+    }
+
+    /// Attach the membership reporting handle for this peer.  Hot-path
+    /// outcomes ([`Peer::note_io`]) flow through it from then on.
+    pub fn set_health(&mut self, sink: HealthSink) {
+        self.health = Some(sink);
+    }
+
+    /// Report one hot-path I/O outcome: the ledger counts deadline
+    /// expiries, and the membership view (when attached) runs its state
+    /// machine.  Safe to call with no sink — standalone fabrics just keep
+    /// the ledger.
+    pub fn note_io(&mut self, outcome: Outcome) {
+        if outcome == Outcome::IoTimeout {
+            self.ledger.timeouts += 1;
+        }
+        if let Some(h) = &self.health {
+            h.report(outcome);
+        }
     }
 
     /// Start this peer's background catalog-sync loop (own connection, so
     /// it never contends with the request-path connection).
     pub fn spawn_sync(&mut self, interval: Duration) -> Result<()> {
+        self.spawn_sync_with(interval, None)
+    }
+
+    /// [`Peer::spawn_sync`] with a liveness sink: every sync round doubles
+    /// as a heartbeat, and a dead peer's backoff probes double as recovery
+    /// detection (the only path out of `Dead`).
+    pub fn spawn_sync_with(
+        &mut self,
+        interval: Duration,
+        health: Option<HealthSink>,
+    ) -> Result<()> {
         if self.sync.is_none() {
-            self.sync = Some(CatalogSync::spawn(
+            self.sync = Some(CatalogSync::spawn_with(
                 self.cfg.addr.clone(),
                 Arc::clone(&self.catalog),
                 interval,
+                health,
             )?);
         }
         Ok(())
@@ -151,7 +220,7 @@ impl Peer {
     /// syncs) reuses this one socket instead of dialing per call.
     pub fn conn_parts(&mut self) -> Option<(&mut KvClient, &mut Shaper)> {
         if self.conn.is_none() {
-            self.conn = KvClient::connect(&self.cfg.addr).ok();
+            self.conn = self.cfg.dial().ok();
         }
         match &mut self.conn {
             Some(c) => Some((c, &mut self.shaper)),
@@ -259,7 +328,9 @@ enum HeadOutcome {
     /// corrupt head) — fall back to a full-blob download.
     Reject,
     /// Connection-level failure: mark the peer dead and try the next one.
-    PeerDown,
+    /// Carries the liveness classification — a deadline expiry is
+    /// `IoTimeout` (→ `Suspect`), a closed/reset socket `IoDead`.
+    PeerDown(Outcome),
     /// The peer does not speak `GETCHUNKS` (or the entry is not chunked):
     /// retry via the byte-oriented GETRANGE compatibility path.
     Unsupported,
@@ -282,7 +353,7 @@ fn acquire_head_push(
     single: bool,
 ) -> HeadOutcome {
     let Some((conn, shaper)) = peer.conn_parts() else {
-        return HeadOutcome::PeerDown;
+        return HeadOutcome::PeerDown(Outcome::IoDead);
     };
     let want_rows = if single { m } else { 0 };
     let mut stream = match conn.getchunks_stream(target, want_rows) {
@@ -292,7 +363,7 @@ fn acquire_head_push(
         Ok(ChunksReply::Terminal(_)) => return HeadOutcome::Reject,
         Err(e) => {
             log_debug!("fabric", "GETCHUNKS failed: {e}");
-            return HeadOutcome::PeerDown;
+            return HeadOutcome::PeerDown(classify_io_err(&e));
         }
     };
     let expected = if single { 1 + k } else { 1 };
@@ -308,7 +379,7 @@ fn acquire_head_push(
             let _ = stream.drain();
             return HeadOutcome::Reject;
         }
-        Err(_) => return HeadOutcome::PeerDown,
+        Err(e) => return HeadOutcome::PeerDown(classify_io_err(&e)),
     };
     sess.arrived(head.len());
     let Some(mut asm) = checked_assembler(&head, head_len, ct, m, hash, dims) else {
@@ -352,7 +423,7 @@ fn acquire_head_getrange(
     let lo = BlobLayout::new(hash, l, kh, d).with_chunk_tokens(ct);
     let stride = lo.token_stride();
     let Some((conn, shaper)) = peer.conn_parts() else {
-        return HeadOutcome::PeerDown;
+        return HeadOutcome::PeerDown(Outcome::IoDead);
     };
 
     if single && !compressed {
@@ -370,7 +441,7 @@ fn acquire_head_getrange(
             Ok(r) => r,
             Err(e) => {
                 log_debug!("fabric", "range batch failed: {e}");
-                return HeadOutcome::PeerDown;
+                return HeadOutcome::PeerDown(classify_io_err(&e));
             }
         };
         let mut sess = shaper.shaped_stream();
@@ -380,7 +451,7 @@ fn acquire_head_getrange(
                 let _ = replies.drain();
                 return HeadOutcome::Reject; // evicted between alias GET and now
             }
-            Err(_) => return HeadOutcome::PeerDown,
+            Err(e) => return HeadOutcome::PeerDown(classify_io_err(&e)),
         };
         sess.arrived(head.len());
         let Some(mut asm) = checked_assembler(&head, head_len, ct, m, hash, dims) else {
@@ -410,7 +481,7 @@ fn acquire_head_getrange(
         Ok(None) => return HeadOutcome::Absent,
         Err(e) => {
             log_debug!("fabric", "head fetch failed: {e}");
-            return HeadOutcome::PeerDown;
+            return HeadOutcome::PeerDown(classify_io_err(&e));
         }
     };
     let Some(mut asm) = checked_assembler(&head, head_len, ct, m, hash, dims) else {
@@ -433,7 +504,7 @@ fn acquire_head_getrange(
         Ok(r) => r,
         Err(e) => {
             log_debug!("fabric", "range batch failed: {e}");
-            return HeadOutcome::PeerDown;
+            return HeadOutcome::PeerDown(classify_io_err(&e));
         }
     };
     let mut sess = shaper.shaped_stream();
@@ -463,9 +534,12 @@ struct ShareOutcome {
 /// ids, each reply shaped, crc-verified and inflated *outside* the shared
 /// lock ([`ChunkVerifier`] — concurrent peers must not serialize their
 /// decode behind one mutex), then committed into the assembler under it (a
-/// bounded scatter).  Returns the outcome plus whether the connection died
-/// (the caller tears it down — the borrow rules keep `mark_dead_conn` out
-/// of reach while the reply stream lives).
+/// bounded scatter).  Returns the outcome plus the liveness classification
+/// when the connection died — `Some(IoTimeout)` for a deadline expiry,
+/// `Some(IoDead)` for a closed socket; either way the caller tears the
+/// connection down (a timed-out reply stream is desynced and unusable
+/// even though the box may still be alive).  The borrow rules keep
+/// `mark_dead_conn` out of reach while the reply stream lives.
 fn fetch_share_io(
     peer: &mut Peer,
     target: &[u8],
@@ -473,10 +547,10 @@ fn fetch_share_io(
     geom: &[(usize, usize)],
     verifier: &ChunkVerifier,
     asm: &Mutex<Option<StateAssembler>>,
-) -> (ShareOutcome, bool) {
+) -> (ShareOutcome, Option<Outcome>) {
     let fail = ShareOutcome { wire: 0, fed: 0, ok: false, absent: false };
     let Some((conn, shaper)) = peer.conn_parts() else {
-        return (fail, true);
+        return (fail, Some(Outcome::IoDead));
     };
     let reqs: Vec<Value> = chunks
         .iter()
@@ -486,13 +560,13 @@ fn fetch_share_io(
         Ok(r) => r,
         Err(e) => {
             log_debug!("fabric", "share batch failed: {e}");
-            return (fail, true);
+            return (fail, Some(classify_io_err(&e)));
         }
     };
     let mut sess = shaper.shaped_stream();
     let mut fed = 0usize;
     let mut ok = true;
-    let mut dead = false;
+    let mut dead: Option<Outcome> = None;
     let mut absent = false;
     for &c in chunks {
         let bytes = match replies.next_reply() {
@@ -506,9 +580,9 @@ fn fetch_share_io(
                 ok = false; // error reply mid-share
                 break;
             }
-            Err(_) => {
+            Err(e) => {
                 ok = false;
-                dead = true;
+                dead = Some(classify_io_err(&e));
                 break;
             }
         };
@@ -544,15 +618,15 @@ fn fetch_share_io(
     }
     let wire = sess.bytes();
     sess.finish();
-    if !ok && !dead {
+    if !ok && dead.is_none() {
         // keep the connection frame-synced for the re-plan / fallback
         let _ = replies.drain();
     }
     (ShareOutcome { wire, fed, ok, absent }, dead)
 }
 
-/// One worker share: run the I/O, then settle the peer's ledger and
-/// connection state.
+/// One worker share: run the I/O, then settle the peer's ledger,
+/// connection state and liveness view.
 fn fetch_share(
     peer: &mut Peer,
     target: &[u8],
@@ -563,8 +637,13 @@ fn fetch_share(
 ) -> ShareOutcome {
     let t0 = Instant::now();
     let (outcome, dead) = fetch_share_io(peer, target, &chunks, geom, verifier, asm);
-    if dead {
+    if let Some(o) = dead {
+        // even on a mere timeout the pooled connection must go: its reply
+        // stream is desynced — only the membership verdict differs
         peer.mark_dead_conn();
+        peer.note_io(o);
+    } else if outcome.ok {
+        peer.note_io(Outcome::IoOk);
     }
     if outcome.ok {
         peer.ledger.fetch_shares += 1;
@@ -743,11 +822,13 @@ pub fn fetch_prefix_multi(
             HeadOutcome::Done { asm, wire } => {
                 peer.ledger.fetch_shares += 1;
                 peer.ledger.bytes_down += wire as u64;
+                peer.note_io(Outcome::IoOk);
                 let head_peer = claimers[slot].0;
                 return finish_fetch(asm, wire, head_peer, false, 0, share_failures);
             }
             HeadOutcome::Head { asm, wire } => {
                 peer.ledger.bytes_down += wire as u64;
+                peer.note_io(Outcome::IoOk);
                 acquired = Some((slot, asm, wire));
                 break;
             }
@@ -763,13 +844,28 @@ pub fn fetch_prefix_multi(
                 );
             }
             HeadOutcome::Reject => return None, // caller: full-blob fallback
-            HeadOutcome::PeerDown | HeadOutcome::Unsupported => {
+            HeadOutcome::PeerDown(o) => {
                 peer.mark_dead_conn();
+                peer.note_io(o);
                 peer.ledger.share_failures += 1;
                 share_failures += 1;
                 log_debug!(
                     "fabric",
                     "head peer {} down; rotating",
+                    peer.cfg.addr
+                );
+            }
+            HeadOutcome::Unsupported => {
+                // only reachable if the GETRANGE retry path itself is
+                // skipped; treat like the historical dead-conn rotation
+                // without a liveness verdict (it is a protocol gap, not a
+                // peer death)
+                peer.mark_dead_conn();
+                peer.ledger.share_failures += 1;
+                share_failures += 1;
+                log_debug!(
+                    "fabric",
+                    "head peer {} unsupported; rotating",
                     peer.cfg.addr
                 );
             }
@@ -924,17 +1020,19 @@ pub fn fetch_full_entry(
                 .unwrap_or(0);
             (r, n)
         }) {
-            Ok(opt) => (opt, false),
+            Ok(opt) => (opt, None),
             Err(e) => {
                 log_debug!("fabric", "full download failed: {e}");
-                (None, true)
+                (None, Some(classify_io_err(&e)))
             }
         }
     };
-    if dead {
+    if let Some(o) = dead {
         peer.mark_dead_conn();
+        peer.note_io(o);
     }
     let full = fetched?;
+    peer.note_io(Outcome::IoOk);
     peer.ledger.bytes_down += full.len() as u64;
     peer.ledger.breakdown.add(Phase::Redis, t0.elapsed());
     match KvState::restore(&full, hash, dims) {
@@ -997,6 +1095,7 @@ pub fn repair_entry(
         let t0 = Instant::now();
         let probe = {
             let Some((conn, shaper)) = peer.conn_parts() else {
+                peer.note_io(Outcome::IoDead);
                 out.dead += 1;
                 continue;
             };
@@ -1004,6 +1103,7 @@ pub fn repair_entry(
         };
         match probe {
             Ok(true) => {
+                peer.note_io(Outcome::IoOk);
                 peer.ledger.breakdown.add(Phase::Redis, t0.elapsed());
                 continue; // this owner still serves the entry
             }
@@ -1011,6 +1111,7 @@ pub fn repair_entry(
             Err(e) => {
                 log_debug!("fabric", "repair probe of {} failed: {e}", peer.cfg.addr);
                 peer.mark_dead_conn();
+                peer.note_io(classify_io_err(&e));
                 peer.ledger.breakdown.add(Phase::Redis, t0.elapsed());
                 out.dead += 1;
                 continue;
@@ -1032,6 +1133,7 @@ pub fn repair_entry(
         }
         let sent = {
             let Some((conn, shaper)) = peer.conn_parts() else {
+                peer.note_io(Outcome::IoDead);
                 out.dead += 1;
                 peer.ledger.breakdown.add(Phase::Redis, t0.elapsed());
                 continue;
@@ -1052,6 +1154,7 @@ pub fn repair_entry(
                 out.rejected += 1;
             }
             Ok(_) => {
+                peer.note_io(Outcome::IoOk);
                 peer.ledger.bytes_up += blen as u64;
                 peer.ledger.repair_republishes += 1;
                 peer.ledger.placed_entries += 1;
@@ -1072,6 +1175,7 @@ pub fn repair_entry(
             Err(e) => {
                 log_debug!("fabric", "repair publish to {} failed: {e}", peer.cfg.addr);
                 peer.mark_dead_conn();
+                peer.note_io(classify_io_err(&e));
                 out.dead += 1;
             }
         }

@@ -1,0 +1,623 @@
+//! Fleet liveness: a per-peer health state machine fed by heartbeats and
+//! hot-path I/O outcomes.
+//!
+//! The fabric's failure handling used to be purely reactive — a peer was
+//! only discovered dead when a hot-path read errored, and a dead-marked box
+//! that rebooted was never rediscovered except by a lucky fallback probe.
+//! [`Membership`] closes both gaps with one small state machine per peer:
+//!
+//! ```text
+//!        ok                 failure                striking out
+//!   Up ───────► Up     Up ───────────► Suspect ───────────────► Dead
+//!                      ▲   (timeout /      │                      │
+//!                      │    hb miss)       │ io dead              │ heartbeat ok
+//!                      │                   ▼                      ▼
+//!                      └──────────── proofs ≥ up_after       Recovering
+//!                                                             │       │
+//!                                            proofs ≥ recover_after   │ any failure
+//!                                                             ▼       ▼
+//!                                                             Up     Dead
+//! ```
+//!
+//! Two signal sources feed [`Membership::report`] through [`HealthSink`]
+//! handles:
+//!
+//! * **Heartbeats** piggybacked on the existing `CatalogSync` loop — every
+//!   sync round doubles as a PING (no new connections), and a dead peer's
+//!   backoff reconnect probes double as recovery detection.  A heartbeat is
+//!   the **only** exit from `Dead`: hot-path success against a supposedly
+//!   dead peer is treated as stale (`no Dead→Up without heartbeat`).
+//! * **Hot-path I/O outcomes** reported by the fabric: a timeout
+//!   (`WouldBlock`/`TimedOut` from an armed [`DeadlineBudget`]) is a
+//!   *suspicion*, not a death — the box may just be slow — while a closed
+//!   or reset connection is `IoDead`.
+//!
+//! Hysteresis damps flapping links: `Suspect` requires `up_after`
+//! consecutive successes to climb back to `Up`, strikes survive interleaved
+//! successes, and a flapper therefore ratchets toward `Dead` instead of
+//! oscillating.  `Suspect` and `Recovering` peers still count as *alive*
+//! (they stay in ring owner sets); only `Dead` drops a peer from placement.
+//!
+//! Every state change bumps a global [epoch](Membership::epoch) so callers
+//! (e.g. `EdgeClient`) can cheaply invalidate memoized owner sets and call
+//! `Placement::on_membership_change` exactly when the view shifted.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Health of one peer as seen by this client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum PeerHealth {
+    /// Healthy: full participant in placement and fetch planning.
+    Up = 0,
+    /// Recent timeout or missed heartbeat; still alive (still an owner),
+    /// but one more strike sequence away from `Dead`.
+    Suspect = 1,
+    /// Out of the fleet: excluded from owner sets until a heartbeat lands.
+    Dead = 2,
+    /// A heartbeat reached a dead-marked peer; probation until
+    /// `recover_after` consecutive successes confirm the reboot stuck.
+    Recovering = 3,
+}
+
+impl PeerHealth {
+    fn from_u8(v: u8) -> Self {
+        match v {
+            0 => PeerHealth::Up,
+            1 => PeerHealth::Suspect,
+            3 => PeerHealth::Recovering,
+            _ => PeerHealth::Dead,
+        }
+    }
+}
+
+/// One observation about a peer, from either signal source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// A `CatalogSync` round (connect + delta fetch) succeeded.
+    HeartbeatOk,
+    /// A sync round failed — connect refused, reset, or sync error.
+    HeartbeatMiss,
+    /// A hot-path operation (fetch share, upload, probe) succeeded.
+    IoOk,
+    /// A hot-path operation hit its [`DeadlineBudget`]
+    /// (`WouldBlock`/`TimedOut`): slow, not necessarily gone.
+    IoTimeout,
+    /// A hot-path operation found the connection dead (reset, EOF, refused).
+    IoDead,
+}
+
+impl Outcome {
+    fn is_success(self) -> bool {
+        matches!(self, Outcome::HeartbeatOk | Outcome::IoOk)
+    }
+}
+
+/// Hysteresis thresholds for the state machine.
+#[derive(Debug, Clone)]
+pub struct HealthPolicy {
+    /// Strikes accumulated in `Suspect` before the peer is declared `Dead`.
+    pub dead_after: u32,
+    /// Consecutive successes in `Suspect` before the peer returns to `Up`.
+    pub up_after: u32,
+    /// Consecutive successes in `Recovering` before the reboot is trusted.
+    pub recover_after: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy { dead_after: 3, up_after: 2, recover_after: 2 }
+    }
+}
+
+/// Per-operation socket deadlines for pooled fabric connections: `connect`
+/// bounds the dial (`TcpStream::connect_timeout`), `op` arms
+/// `set_read_timeout`/`set_write_timeout` so a *stalled* (accepted but
+/// silent) peer costs at most one budget, never a hang.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeadlineBudget {
+    pub connect: Duration,
+    pub op: Duration,
+}
+
+impl DeadlineBudget {
+    pub fn new(connect: Duration, op: Duration) -> Self {
+        DeadlineBudget { connect, op }
+    }
+
+    pub fn from_millis(connect_ms: u64, op_ms: u64) -> Self {
+        DeadlineBudget {
+            connect: Duration::from_millis(connect_ms),
+            op: Duration::from_millis(op_ms),
+        }
+    }
+}
+
+impl Default for DeadlineBudget {
+    fn default() -> Self {
+        // generous against the modelled Wi-Fi RTT (~270 ms/op) yet small
+        // enough that a wedged restore rotates to a survivor within one
+        // human-perceptible beat
+        DeadlineBudget::from_millis(500, 2_000)
+    }
+}
+
+/// Classify a failed peer operation: a timeout from an armed deadline is
+/// [`Outcome::IoTimeout`] (→ `Suspect`), anything else is
+/// [`Outcome::IoDead`] (→ `Dead`).  Walks the whole error chain so
+/// `anyhow` context wrapping does not hide the underlying `io::Error`.
+pub fn classify_io_err(e: &anyhow::Error) -> Outcome {
+    for cause in e.chain() {
+        if let Some(io) = cause.downcast_ref::<std::io::Error>() {
+            return match io.kind() {
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                    Outcome::IoTimeout
+                }
+                _ => Outcome::IoDead,
+            };
+        }
+    }
+    Outcome::IoDead
+}
+
+/// The pure transition function — `(state, strikes, proofs) × input →
+/// (state, strikes, proofs)`.  Kept free of clocks and I/O so the property
+/// tests can drive it with seeded input streams and assert determinism.
+///
+/// Invariants the tests pin:
+/// * `Dead` exits **only** on `HeartbeatOk` (into `Recovering`).
+/// * Strikes survive interleaved successes in `Suspect`, so an
+///   alternating flapper ratchets to `Dead` instead of oscillating.
+/// * Both counters reset on every state change.
+pub fn step(
+    state: PeerHealth,
+    strikes: u32,
+    proofs: u32,
+    input: Outcome,
+    policy: &HealthPolicy,
+) -> (PeerHealth, u32, u32) {
+    use Outcome::*;
+    use PeerHealth::*;
+    match state {
+        Up => match input {
+            HeartbeatOk | IoOk => (Up, 0, 0),
+            HeartbeatMiss | IoTimeout => (Suspect, 1, 0),
+            IoDead => (Dead, 0, 0),
+        },
+        Suspect => match input {
+            HeartbeatOk | IoOk => {
+                if proofs + 1 >= policy.up_after {
+                    (Up, 0, 0)
+                } else {
+                    // strikes deliberately kept: the hysteresis memory
+                    (Suspect, strikes, proofs + 1)
+                }
+            }
+            HeartbeatMiss | IoTimeout => {
+                if strikes + 1 >= policy.dead_after {
+                    (Dead, 0, 0)
+                } else {
+                    (Suspect, strikes + 1, 0)
+                }
+            }
+            IoDead => (Dead, 0, 0),
+        },
+        Dead => match input {
+            // the only way out of Dead: a heartbeat (sync-loop probe)
+            HeartbeatOk => {
+                if policy.recover_after <= 1 {
+                    (Up, 0, 0)
+                } else {
+                    (Recovering, 0, 1)
+                }
+            }
+            _ => (Dead, 0, 0),
+        },
+        Recovering => match input {
+            HeartbeatOk | IoOk => {
+                if proofs + 1 >= policy.recover_after {
+                    (Up, 0, 0)
+                } else {
+                    (Recovering, 0, proofs + 1)
+                }
+            }
+            // probation is strict: any failure sends the peer straight back
+            HeartbeatMiss | IoTimeout | IoDead => (Dead, 0, 0),
+        },
+    }
+}
+
+#[derive(Debug)]
+struct Cell {
+    state: PeerHealth,
+    strikes: u32,
+    proofs: u32,
+}
+
+/// Per-peer counters surfaced into `PeerLedger` at stats time.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PeerCounters {
+    /// Successful heartbeats observed (sync rounds that completed).
+    pub heartbeats: u64,
+    /// `Dead → Recovering` transitions: a rebooted box rediscovered.
+    pub heals: u64,
+    /// Deadline-budget expiries (`IoTimeout` reports) on the hot path.
+    pub timeouts: u64,
+}
+
+/// Fleet-wide liveness view shared (via `Arc`) between the client, its
+/// per-peer `CatalogSync` threads and the fabric's fetch workers.
+///
+/// Transitions run under one tiny per-peer mutex; reads
+/// ([`Membership::alive`], [`Membership::state`]) go through lock-free
+/// atomic mirrors so the hot path never contends with a heartbeat.
+#[derive(Debug)]
+pub struct Membership {
+    cells: Vec<Mutex<Cell>>,
+    /// Lock-free mirror of each cell's state (`PeerHealth as u8`).
+    states: Vec<AtomicU8>,
+    /// Bumped on every state change; compare-and-refresh cheaply.
+    epoch: AtomicU64,
+    policy: HealthPolicy,
+    per_heartbeats: Vec<AtomicU64>,
+    per_heals: Vec<AtomicU64>,
+    per_timeouts: Vec<AtomicU64>,
+    suspects: AtomicU64,
+    deaths: AtomicU64,
+    heals: AtomicU64,
+    recoveries: AtomicU64,
+}
+
+impl Membership {
+    pub fn new(n_peers: usize, policy: HealthPolicy) -> Arc<Self> {
+        let mk_cells = || {
+            (0..n_peers)
+                .map(|_| Mutex::new(Cell { state: PeerHealth::Up, strikes: 0, proofs: 0 }))
+                .collect()
+        };
+        let mk_u64s = || (0..n_peers).map(|_| AtomicU64::new(0)).collect();
+        Arc::new(Membership {
+            cells: mk_cells(),
+            states: (0..n_peers).map(|_| AtomicU8::new(PeerHealth::Up as u8)).collect(),
+            epoch: AtomicU64::new(0),
+            policy,
+            per_heartbeats: mk_u64s(),
+            per_heals: mk_u64s(),
+            per_timeouts: mk_u64s(),
+            suspects: AtomicU64::new(0),
+            deaths: AtomicU64::new(0),
+            heals: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// A cloneable per-peer reporting handle for sync loops and fabric
+    /// workers.
+    pub fn sink(self: &Arc<Self>, peer: usize) -> HealthSink {
+        HealthSink { membership: Arc::clone(self), peer }
+    }
+
+    /// Feed one observation through the state machine; returns the
+    /// (possibly unchanged) resulting state.
+    pub fn report(&self, peer: usize, input: Outcome) -> PeerHealth {
+        let Some(cell) = self.cells.get(peer) else {
+            return PeerHealth::Dead;
+        };
+        match input {
+            Outcome::HeartbeatOk => {
+                self.per_heartbeats[peer].fetch_add(1, Ordering::Relaxed);
+            }
+            Outcome::IoTimeout => {
+                self.per_timeouts[peer].fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+        let mut c = cell.lock().unwrap();
+        let old = c.state;
+        let (next, strikes, proofs) =
+            step(c.state, c.strikes, c.proofs, input, &self.policy);
+        c.state = next;
+        c.strikes = strikes;
+        c.proofs = proofs;
+        if next != old {
+            self.states[peer].store(next as u8, Ordering::Release);
+            match next {
+                PeerHealth::Suspect => {
+                    self.suspects.fetch_add(1, Ordering::Relaxed);
+                }
+                PeerHealth::Dead => {
+                    self.deaths.fetch_add(1, Ordering::Relaxed);
+                }
+                PeerHealth::Recovering => {
+                    // only reachable from Dead: a heal
+                    self.heals.fetch_add(1, Ordering::Relaxed);
+                    self.per_heals[peer].fetch_add(1, Ordering::Relaxed);
+                }
+                PeerHealth::Up => {
+                    if old == PeerHealth::Recovering {
+                        self.recoveries.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            // bumped last so an epoch-triggered refresh reads the new state
+            self.epoch.fetch_add(1, Ordering::Release);
+        }
+        next
+    }
+
+    pub fn state(&self, peer: usize) -> PeerHealth {
+        self.states
+            .get(peer)
+            .map(|s| PeerHealth::from_u8(s.load(Ordering::Acquire)))
+            .unwrap_or(PeerHealth::Dead)
+    }
+
+    /// Alive = participates in placement. `Suspect` and `Recovering` stay
+    /// in owner sets — only `Dead` is excluded.
+    pub fn alive(&self, peer: usize) -> bool {
+        self.state(peer) != PeerHealth::Dead
+    }
+
+    /// The placement view: one flag per peer, index-aligned with the
+    /// client's peer table.
+    pub fn alive_flags(&self) -> Vec<bool> {
+        (0..self.len()).map(|i| self.alive(i)).collect()
+    }
+
+    /// Monotone view version: changes iff some peer changed state.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    pub fn peer_counters(&self, peer: usize) -> PeerCounters {
+        PeerCounters {
+            heartbeats: self.per_heartbeats[peer].load(Ordering::Relaxed),
+            heals: self.per_heals[peer].load(Ordering::Relaxed),
+            timeouts: self.per_timeouts[peer].load(Ordering::Relaxed),
+        }
+    }
+
+    /// Total `* → Suspect` transitions.
+    pub fn suspect_transitions(&self) -> u64 {
+        self.suspects.load(Ordering::Relaxed)
+    }
+
+    /// Total `* → Dead` transitions.
+    pub fn deaths(&self) -> u64 {
+        self.deaths.load(Ordering::Relaxed)
+    }
+
+    /// Total `Dead → Recovering` transitions (rebooted boxes rediscovered).
+    pub fn heals(&self) -> u64 {
+        self.heals.load(Ordering::Relaxed)
+    }
+
+    /// Total `Recovering → Up` transitions (reboots that stuck).
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries.load(Ordering::Relaxed)
+    }
+
+    /// Total deadline-budget expiries across the fleet.
+    pub fn timeouts(&self) -> u64 {
+        self.per_timeouts
+            .iter()
+            .map(|t| t.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+/// A cheap cloneable handle binding one peer index to the shared
+/// [`Membership`]; handed to `CatalogSync` threads and fabric workers so
+/// they can report without knowing the peer table.
+#[derive(Debug, Clone)]
+pub struct HealthSink {
+    membership: Arc<Membership>,
+    peer: usize,
+}
+
+impl HealthSink {
+    pub fn report(&self, input: Outcome) -> PeerHealth {
+        self.membership.report(self.peer, input)
+    }
+
+    pub fn peer(&self) -> usize {
+        self.peer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn policy() -> HealthPolicy {
+        HealthPolicy::default()
+    }
+
+    fn draw_outcome(r: &mut Rng) -> Outcome {
+        match r.below(5) {
+            0 => Outcome::HeartbeatOk,
+            1 => Outcome::HeartbeatMiss,
+            2 => Outcome::IoOk,
+            3 => Outcome::IoTimeout,
+            _ => Outcome::IoDead,
+        }
+    }
+
+    #[test]
+    fn step_is_deterministic_over_seeded_streams() {
+        for seed in [1u64, 7, 42, 1234] {
+            let mut r1 = Rng::new(seed);
+            let mut r2 = Rng::new(seed);
+            let (mut a, mut b) =
+                ((PeerHealth::Up, 0u32, 0u32), (PeerHealth::Up, 0u32, 0u32));
+            for _ in 0..500 {
+                let (o1, o2) = (draw_outcome(&mut r1), draw_outcome(&mut r2));
+                assert_eq!(o1, o2);
+                a = step(a.0, a.1, a.2, o1, &policy());
+                b = step(b.0, b.1, b.2, o2, &policy());
+                assert_eq!(a, b, "same seed must walk the same trajectory");
+            }
+        }
+    }
+
+    #[test]
+    fn no_dead_to_up_without_heartbeat() {
+        // property: from Dead, any input stream *without* HeartbeatOk stays
+        // Dead forever — hot-path successes against a dead peer are stale
+        let mut r = Rng::new(99);
+        let non_heartbeat = [
+            Outcome::HeartbeatMiss,
+            Outcome::IoOk,
+            Outcome::IoTimeout,
+            Outcome::IoDead,
+        ];
+        let mut st = (PeerHealth::Dead, 0u32, 0u32);
+        for _ in 0..1000 {
+            let o = non_heartbeat[r.below(4) as usize];
+            st = step(st.0, st.1, st.2, o, &policy());
+            assert_eq!(st.0, PeerHealth::Dead, "only a heartbeat may revive");
+        }
+        // and the heartbeat path goes through Recovering, never straight Up
+        let (s, ..) = step(PeerHealth::Dead, 0, 0, Outcome::HeartbeatOk, &policy());
+        assert_eq!(s, PeerHealth::Recovering);
+    }
+
+    #[test]
+    fn flapping_peer_is_damped_not_oscillating() {
+        // alternate failure/success: strikes survive the interleaved
+        // successes (up_after=2 never reached consecutively), so the peer
+        // never bounces back to Up and instead ratchets to Dead
+        let mut st = (PeerHealth::Up, 0u32, 0u32);
+        let mut seen_up_again = false;
+        for i in 0..2 * policy().dead_after {
+            let o = if i % 2 == 0 { Outcome::IoTimeout } else { Outcome::IoOk };
+            st = step(st.0, st.1, st.2, o, &policy());
+            if st.0 == PeerHealth::Up {
+                seen_up_again = true;
+            }
+        }
+        assert!(!seen_up_again, "hysteresis must hold the flapper in Suspect");
+        assert_eq!(st.0, PeerHealth::Dead, "a persistent flapper strikes out");
+    }
+
+    #[test]
+    fn suspect_recovers_after_consecutive_successes() {
+        let p = policy();
+        let mut st = step(PeerHealth::Up, 0, 0, Outcome::IoTimeout, &p);
+        assert_eq!(st.0, PeerHealth::Suspect);
+        for _ in 0..p.up_after {
+            st = step(st.0, st.1, st.2, Outcome::IoOk, &p);
+        }
+        assert_eq!(st.0, PeerHealth::Up, "consecutive successes must heal");
+    }
+
+    #[test]
+    fn recovery_probation_is_strict() {
+        let p = policy();
+        let st = step(PeerHealth::Dead, 0, 0, Outcome::HeartbeatOk, &p);
+        assert_eq!(st.0, PeerHealth::Recovering);
+        // one failure during probation → straight back to Dead
+        let back = step(st.0, st.1, st.2, Outcome::IoTimeout, &p);
+        assert_eq!(back.0, PeerHealth::Dead);
+        // enough consecutive proof → Up
+        let mut ok = st;
+        for _ in 0..p.recover_after {
+            ok = step(ok.0, ok.1, ok.2, Outcome::HeartbeatOk, &p);
+        }
+        assert_eq!(ok.0, PeerHealth::Up);
+    }
+
+    #[test]
+    fn io_dead_kills_immediately_timeout_only_suspects() {
+        let p = policy();
+        let (s, ..) = step(PeerHealth::Up, 0, 0, Outcome::IoDead, &p);
+        assert_eq!(s, PeerHealth::Dead, "a closed connection is conclusive");
+        let (s, ..) = step(PeerHealth::Up, 0, 0, Outcome::IoTimeout, &p);
+        assert_eq!(s, PeerHealth::Suspect, "a deadline expiry is only a hint");
+    }
+
+    #[test]
+    fn membership_epoch_and_counters_track_transitions() {
+        let m = Membership::new(2, HealthPolicy::default());
+        assert_eq!(m.epoch(), 0);
+        assert!(m.alive(0) && m.alive(1));
+
+        // peer 0: time out → Suspect (epoch bump, suspect counted)
+        assert_eq!(m.report(0, Outcome::IoTimeout), PeerHealth::Suspect);
+        let e1 = m.epoch();
+        assert!(e1 > 0);
+        assert_eq!(m.suspect_transitions(), 1);
+        assert!(m.alive(0), "Suspect still counts as alive");
+        assert_eq!(m.peer_counters(0).timeouts, 1);
+
+        // a success without reaching up_after: no state change, no bump
+        m.report(0, Outcome::IoOk);
+        assert_eq!(m.epoch(), e1);
+
+        // peer 1 dies, then a heartbeat heals it through Recovering
+        assert_eq!(m.report(1, Outcome::IoDead), PeerHealth::Dead);
+        assert!(!m.alive(1));
+        assert_eq!(m.alive_flags(), vec![true, false]);
+        assert_eq!(m.deaths(), 1);
+        assert_eq!(m.report(1, Outcome::HeartbeatOk), PeerHealth::Recovering);
+        assert_eq!(m.heals(), 1);
+        assert_eq!(m.peer_counters(1).heals, 1);
+        assert!(m.alive(1), "Recovering rejoins the owner sets");
+        assert_eq!(m.report(1, Outcome::HeartbeatOk), PeerHealth::Up);
+        assert_eq!(m.recoveries(), 1);
+        assert_eq!(m.peer_counters(1).heartbeats, 2);
+
+        // sinks report through the same shared view
+        let sink = m.sink(0);
+        assert_eq!(sink.peer(), 0);
+        sink.report(Outcome::IoOk);
+        assert_eq!(m.state(0), PeerHealth::Up);
+    }
+
+    #[test]
+    fn out_of_range_peer_is_dead_and_ignored() {
+        let m = Membership::new(1, HealthPolicy::default());
+        assert_eq!(m.report(7, Outcome::IoOk), PeerHealth::Dead);
+        assert!(!m.alive(7));
+        assert_eq!(m.epoch(), 0);
+    }
+
+    #[test]
+    fn classify_io_errors() {
+        use std::io::{Error, ErrorKind};
+        let timeout: anyhow::Error =
+            anyhow::Error::new(Error::new(ErrorKind::TimedOut, "slow"))
+                .context("fetch share");
+        assert_eq!(classify_io_err(&timeout), Outcome::IoTimeout);
+        let would_block: anyhow::Error =
+            Error::new(ErrorKind::WouldBlock, "armed deadline").into();
+        assert_eq!(classify_io_err(&would_block), Outcome::IoTimeout);
+        let reset: anyhow::Error =
+            anyhow::Error::new(Error::new(ErrorKind::ConnectionReset, "gone"))
+                .context("ctx");
+        assert_eq!(classify_io_err(&reset), Outcome::IoDead);
+        let plain = anyhow::anyhow!("not an io error at all");
+        assert_eq!(classify_io_err(&plain), Outcome::IoDead);
+    }
+
+    #[test]
+    fn default_budget_sane() {
+        let b = DeadlineBudget::default();
+        assert!(b.connect >= Duration::from_millis(100));
+        assert!(b.op >= b.connect);
+        let c = DeadlineBudget::from_millis(100, 250);
+        assert_eq!(c.connect, Duration::from_millis(100));
+        assert_eq!(c.op, Duration::from_millis(250));
+    }
+}

@@ -20,11 +20,17 @@
 //! * [`policy`] — fetch policy and the fabric planner: the paper's
 //!   always-fetch-on-hit plus a break-even extension (§5.3 analysis turned
 //!   into a runtime policy), and the chunk-split / re-plan /
-//!   two-choices-sampling primitives the placement policies build on.
+//!   two-choices-sampling primitives the placement policies build on;
+//! * [`membership`] — the fleet liveness layer: a per-peer
+//!   `Up → Suspect → Dead → Recovering` health state machine fed by
+//!   heartbeats piggybacked on the sync loop and hot-path I/O outcomes,
+//!   plus the [`membership::DeadlineBudget`] that arms socket deadlines on
+//!   pooled connections so a stalled peer costs one budget, never a hang.
 
 pub mod cachebox;
 pub mod client;
 pub mod fabric;
+pub mod membership;
 pub mod placement;
 pub mod policy;
 pub mod sync;
@@ -34,6 +40,9 @@ pub use client::{
     adaptive_chunk_tokens, EdgeClient, EdgeClientConfig, HitCase, QueryResult,
 };
 pub use fabric::{Peer, PeerConfig};
+pub use membership::{
+    DeadlineBudget, HealthPolicy, HealthSink, Membership, Outcome, PeerHealth,
+};
 pub use placement::{
     Placement, PlacementKind, PowerOfTwoChoices, RendezvousRing,
 };

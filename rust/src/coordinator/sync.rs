@@ -11,6 +11,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::catalog::LocalCatalog;
+use crate::coordinator::membership::{HealthSink, Outcome};
 use crate::kvstore::KvClient;
 use crate::log_debug;
 use crate::util::rng::Rng;
@@ -44,6 +45,20 @@ impl CatalogSync {
         server_addr: String,
         catalog: Arc<Mutex<LocalCatalog>>,
         interval: Duration,
+    ) -> Result<CatalogSync> {
+        Self::spawn_with(server_addr, catalog, interval, None)
+    }
+
+    /// [`CatalogSync::spawn`] plus a liveness [`HealthSink`]: every round's
+    /// outcome doubles as a heartbeat (`HeartbeatOk` on a completed sync,
+    /// `HeartbeatMiss` on a failed connect or round), so membership learns
+    /// about reboots from the backoff probes this loop already makes — no
+    /// extra connections, no extra cadence.
+    pub fn spawn_with(
+        server_addr: String,
+        catalog: Arc<Mutex<LocalCatalog>>,
+        interval: Duration,
+        health: Option<HealthSink>,
     ) -> Result<CatalogSync> {
         let stop = Arc::new(AtomicBool::new(false));
         let rounds = Arc::new(AtomicU64::new(0));
@@ -82,6 +97,13 @@ impl CatalogSync {
                         },
                         None => false,
                     };
+                    if let Some(h) = &health {
+                        h.report(if ok {
+                            Outcome::HeartbeatOk
+                        } else {
+                            Outcome::HeartbeatMiss
+                        });
+                    }
                     if ok {
                         rounds2.fetch_add(1, Ordering::SeqCst);
                         delay = interval;

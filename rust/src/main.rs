@@ -18,7 +18,8 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use edgecache::coordinator::{
-    CacheBox, EdgeClient, EdgeClientConfig, FetchPolicy, PeerConfig, PlacementKind,
+    CacheBox, DeadlineBudget, EdgeClient, EdgeClientConfig, FetchPolicy, PeerConfig,
+    PlacementKind,
 };
 use edgecache::devicemodel::DeviceProfile;
 use edgecache::engine::Engine;
@@ -122,6 +123,16 @@ fn client_config(m: &edgecache::util::cli::Matches, server: Option<String>) -> R
         fetch_policy: if m.flag("break-even") { FetchPolicy::BreakEven } else { FetchPolicy::Always },
         min_hit_tokens: 1,
         sync_interval: Some(std::time::Duration::from_millis(200)),
+        // liveness is on by default for the real tool: a stalled box
+        // costs one op budget, never a wedged client (--deadline-ms 0
+        // restores fully blocking sockets)
+        deadline: match m.u64("deadline-ms").map_err(|e| anyhow!(e))? {
+            0 => None,
+            op_ms => Some(DeadlineBudget::from_millis(
+                m.u64("connect-ms").map_err(|e| anyhow!(e))?.max(1),
+                op_ms,
+            )),
+        },
         seed: m.u64("seed").map_err(|e| anyhow!(e))?,
     })
 }
@@ -146,6 +157,13 @@ fn client_cmd_spec(name: &'static str, about: &'static str) -> Command {
         .opt("shots", "1", "few-shot examples per prompt")
         .opt("max-new", "8", "response token budget")
         .opt("seed", "42", "workload seed")
+        .opt(
+            "deadline-ms",
+            "2000",
+            "per-op deadline budget on pooled peer connections; a stall \
+             marks the peer Suspect and re-plans (0 = blocking sockets)",
+        )
+        .opt("connect-ms", "500", "connect timeout for peer dials")
         .flag("no-partial", "disable partial matching (full-prompt keys only)")
         .flag("no-catalog", "disable the local Bloom catalog (probe server)")
         .flag("break-even", "fetch only when the transfer beats local prefill")
@@ -196,10 +214,12 @@ fn run_trace(
         "{}",
         report::ascii_table(&["Case", "n", "TTFT [s]", "TTLT [s]", "# tokens"], &rows)
     );
-    for c in clients.iter() {
+    for c in clients.iter_mut() {
+        c.refresh_stats();
         println!(
             "client {} [{}]: {} queries, hits by case {:?}, FPs {}, down {} KB, up {} KB, \
-             fallback probes {} ({} hits), repairs {}",
+             fallback probes {} ({} hits, {} suppressed), repairs {}, \
+             timeouts {}, suspects {}, heals {}",
             c.cfg.name,
             c.placement_name(),
             c.stats.queries,
@@ -209,12 +229,17 @@ fn run_trace(
             c.stats.bytes_up / 1024,
             c.stats.fallback_probes,
             c.stats.fallback_probe_hits,
-            c.stats.repair_republishes
+            c.stats.probes_suppressed,
+            c.stats.repair_republishes,
+            c.stats.timeouts,
+            c.stats.suspect_transitions,
+            c.stats.heals
         );
         for l in c.peer_ledgers() {
             println!(
                 "  peer {}: down {} KB, up {} KB, shares {} ({} failed), uploads {} (+{} replicas), \
-                 placed {}, probes {}, repairs {}, {} sync rounds",
+                 placed {}, probes {}, repairs {}, {} sync rounds, \
+                 {} heartbeats, {} heals, {} timeouts",
                 l.addr,
                 l.bytes_down / 1024,
                 l.bytes_up / 1024,
@@ -225,7 +250,10 @@ fn run_trace(
                 l.placed_entries,
                 l.fallback_probes,
                 l.repair_republishes,
-                l.sync_rounds
+                l.sync_rounds,
+                l.heartbeats,
+                l.heals,
+                l.timeouts
             );
         }
     }

@@ -190,6 +190,16 @@ pub struct PeerLedger {
     pub repair_republishes: u64,
     /// Completed catalog-sync rounds against this peer.
     pub sync_rounds: u64,
+    /// Liveness heartbeats acknowledged by this peer (one per completed
+    /// sync round and per manual sync; see `coordinator::membership`).
+    pub heartbeats: u64,
+    /// Times this peer healed — came back from Dead after its heartbeat
+    /// returned (Dead → Recovering transitions).
+    pub heals: u64,
+    /// Deadline-budget expiries on this peer's pooled connection
+    /// (`WouldBlock`/`TimedOut`): the peer stalled but was not declared
+    /// dead for it.
+    pub timeouts: u64,
     /// Per-peer phase time (Redis = this peer's transfers).
     pub breakdown: PhaseBreakdown,
 }

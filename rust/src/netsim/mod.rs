@@ -12,10 +12,120 @@
 //! The `wifi4_2g4` preset is calibrated against paper Table 3: a 2.25 MB
 //! state entry transfers in ≈0.86 s and a 9.94 MB entry in ≈2.9 s
 //! (`tests::paper_calibration` pins both).
+//!
+//! **Deterministic fault injection**: a seeded, *op-indexed* [`FaultPlan`]
+//! can be attached to any [`Shaper`] ([`Shaper::attach_faults`]) to
+//! reproduce link churn byte-for-byte — a stall window, a goodput
+//! degradation or a blackhole hits exactly the Nth…Mth shaped operations,
+//! never "whatever happened to run at second 3", so churn benches and
+//! tests replay identically on any machine.
 
 use std::time::{Duration, Instant};
 
 use crate::util::rng::Rng;
+
+/// Modelled delay a blackholed op is stretched by on a shaper.  A shaper
+/// wraps *completed* real transfers, so it cannot actually lose a reply —
+/// harnesses that consult a [`FaultPlan`] directly (process-level churn)
+/// implement true loss by killing the box; on a shaper a blackhole
+/// degrades to this bounded worst-case stall, long past any sane
+/// [`crate::coordinator::membership::DeadlineBudget`].
+pub const BLACKHOLE_STALL: Duration = Duration::from_secs(5);
+
+/// One fault kind a [`FaultWindow`] injects.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// A hung-but-alive peer: every op in the window takes this much
+    /// extra modelled time before its reply lands.
+    Stall(Duration),
+    /// Reply never arrives (see [`BLACKHOLE_STALL`] for the shaper
+    /// interpretation; harnesses kill the box instead).
+    Blackhole,
+    /// Goodput degradation: modelled delays are multiplied by this
+    /// factor (values below 1.0 are clamped up — a fault never speeds a
+    /// link up).
+    Degrade(f64),
+}
+
+impl Fault {
+    /// The modelled-delay transform this fault applies to one op.
+    pub fn stretch(self, base: Duration) -> Duration {
+        match self {
+            Fault::Stall(d) => base + d,
+            Fault::Blackhole => base + BLACKHOLE_STALL,
+            Fault::Degrade(x) => base.mul_f64(x.max(1.0)),
+        }
+    }
+}
+
+/// A half-open op-index window `[from_op, to_op)` during which `fault`
+/// applies.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultWindow {
+    pub from_op: u64,
+    pub to_op: u64,
+    pub fault: Fault,
+}
+
+/// A deterministic churn script: which shaped operations are faulted and
+/// how.  Indexed by the shaper's own op counter — wall-clock-free, so the
+/// same plan against the same workload reproduces the same byte-for-byte
+/// behaviour regardless of host speed.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    windows: Vec<FaultWindow>,
+    /// Ops drawn so far (advances once per shaped op when attached).
+    op: u64,
+}
+
+impl FaultPlan {
+    pub fn new(mut windows: Vec<FaultWindow>) -> Self {
+        windows.sort_by_key(|w| w.from_op);
+        FaultPlan { windows, op: 0 }
+    }
+
+    /// A seeded flap schedule: `flaps` disjoint fault windows scattered
+    /// over the first `ops` operations, one per equal slot so they never
+    /// overlap.  Same seed → same schedule, on every machine.
+    pub fn flap_schedule(seed: u64, ops: u64, flaps: usize, fault: Fault) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut windows = Vec::with_capacity(flaps);
+        let slot = if flaps == 0 { 0 } else { ops / flaps as u64 };
+        if slot >= 2 {
+            for i in 0..flaps as u64 {
+                let lo = i * slot;
+                let start = lo + rng.below(slot - 1);
+                let len = 1 + rng.below(slot - (start - lo));
+                windows.push(FaultWindow {
+                    from_op: start,
+                    to_op: start + len,
+                    fault,
+                });
+            }
+        }
+        Self::new(windows)
+    }
+
+    /// The fault (if any) covering op index `op` — pure lookup, no state.
+    pub fn fault_at(&self, op: u64) -> Option<Fault> {
+        self.windows
+            .iter()
+            .find(|w| w.from_op <= op && op < w.to_op)
+            .map(|w| w.fault)
+    }
+
+    /// Draw the fault for the next shaped op and advance the counter.
+    pub fn next_op(&mut self) -> Option<Fault> {
+        let f = self.fault_at(self.op);
+        self.op += 1;
+        f
+    }
+
+    /// Ops drawn so far.
+    pub fn op_index(&self) -> u64 {
+        self.op
+    }
+}
 
 /// A point-to-point link model: effective goodput + per-operation RTT, with
 /// optional jitter.
@@ -126,6 +236,11 @@ pub struct Shaper {
     /// work that measurably happened between arrivals, so the ledger cannot
     /// claim overlap a serial pipeline would not actually have paid for.
     pub overlap_saved: Duration,
+    /// Optional deterministic fault schedule ([`Shaper::attach_faults`]);
+    /// advances one op per shaped call.
+    faults: Option<FaultPlan>,
+    /// Ops whose modelled delay a [`FaultPlan`] stretched (diagnostic).
+    pub faulted_ops: u64,
 }
 
 impl Shaper {
@@ -137,6 +252,32 @@ impl Shaper {
             moved_bytes: 0,
             inflated_bytes: 0,
             overlap_saved: Duration::ZERO,
+            faults: None,
+            faulted_ops: 0,
+        }
+    }
+
+    /// Attach a deterministic [`FaultPlan`]: from the next shaped op on,
+    /// every op draws the plan's fault for its index and stretches its
+    /// modelled delay accordingly.  Replaces any previous plan.
+    pub fn attach_faults(&mut self, plan: FaultPlan) {
+        self.faults = Some(plan);
+    }
+
+    /// Draw the next op's fault from the attached plan, if any.
+    fn draw_fault(&mut self) -> Option<Fault> {
+        let f = self.faults.as_mut().and_then(|p| p.next_op());
+        if f.is_some() {
+            self.faulted_ops += 1;
+        }
+        f
+    }
+
+    /// Apply `fault` to a modelled delay target.
+    fn stretched(target: Duration, fault: Option<Fault>) -> Duration {
+        match fault {
+            Some(f) => f.stretch(target),
+            None => target,
         }
     }
 
@@ -149,7 +290,9 @@ impl Shaper {
     /// Run `op` (a real network transfer moving `bytes`) and stretch its
     /// duration to at least the modelled link delay.
     pub fn shaped<T>(&mut self, bytes: usize, op: impl FnOnce() -> T) -> T {
-        let target = self.link.delay_for(bytes, Some(&mut self.rng));
+        let fault = self.draw_fault();
+        let target =
+            Self::stretched(self.link.delay_for(bytes, Some(&mut self.rng)), fault);
         self.moved_bytes += bytes as u64;
         let t0 = Instant::now();
         let out = op();
@@ -166,11 +309,13 @@ impl Shaper {
     /// the fact (downloads): `op` returns `(value, bytes_moved)` and the
     /// stretch is computed from the actual byte count.
     pub fn shaped_post<T>(&mut self, op: impl FnOnce() -> (T, usize)) -> T {
+        let fault = self.draw_fault();
         let t0 = Instant::now();
         let (out, bytes) = op();
         let real = t0.elapsed();
         self.moved_bytes += bytes as u64;
-        let target = self.link.delay_for(bytes, Some(&mut self.rng));
+        let target =
+            Self::stretched(self.link.delay_for(bytes, Some(&mut self.rng)), fault);
         if real < target {
             let pad = target - real;
             std::thread::sleep(pad);
@@ -192,6 +337,7 @@ impl Shaper {
     /// cumulative bytes (per-call jitter could model bytes arriving out of
     /// order, which TCP does not do).
     pub fn shaped_stream(&mut self) -> StreamSession<'_> {
+        let fault = self.draw_fault();
         let jitter = if self.link.jitter_frac > 0.0 {
             1.0 + (self.rng.f64() - 0.5) * self.link.jitter_frac
         } else {
@@ -203,6 +349,7 @@ impl Shaper {
             t0: now,
             last_return: now,
             jitter,
+            fault,
             cum_bytes: 0,
             first: true,
             saved: Duration::ZERO,
@@ -221,6 +368,10 @@ pub struct StreamSession<'a> {
     /// store-and-forward pipeline would have paid *after* the last byte.
     last_return: Instant,
     jitter: f64,
+    /// One fault per session (a pipelined batch is one op): every arrival
+    /// target is stretched through it, so a stall delays the whole stream
+    /// head-of-line and a degradation slows every chunk.
+    fault: Option<Fault>,
     cum_bytes: usize,
     /// The work before the first arrival is request building + the raw
     /// socket read, not decode — it earns no overlap credit.
@@ -234,11 +385,12 @@ impl StreamSession<'_> {
     /// far.
     fn target_for(&self, cum: usize) -> Duration {
         let l = &self.shaper.link;
-        if l.goodput_bps.is_infinite() && l.rtt.is_zero() {
+        if l.goodput_bps.is_infinite() && l.rtt.is_zero() && self.fault.is_none() {
             return Duration::ZERO;
         }
         let secs = (l.rtt.as_secs_f64() + cum as f64 / l.goodput_bps) * self.jitter;
-        Duration::from_secs_f64(secs.max(0.0))
+        let base = Duration::from_secs_f64(secs.max(0.0).min(1e6));
+        Shaper::stretched(base, self.fault)
     }
 
     /// Payload bytes accounted so far in this session.
@@ -468,5 +620,107 @@ mod tests {
         assert!(LinkModel::by_name("ethernet-1g").is_some());
         assert!(LinkModel::by_name("loopback").is_some());
         assert!(LinkModel::by_name("carrier-pigeon").is_none());
+    }
+
+    #[test]
+    fn fault_plan_is_seed_deterministic() {
+        for seed in [1u64, 7, 42, 1234] {
+            let a = FaultPlan::flap_schedule(seed, 400, 5, Fault::Blackhole);
+            let b = FaultPlan::flap_schedule(seed, 400, 5, Fault::Blackhole);
+            for op in 0..400 {
+                assert_eq!(a.fault_at(op), b.fault_at(op), "seed {seed} op {op}");
+            }
+        }
+        // different seeds disagree somewhere (overwhelmingly likely)
+        let a = FaultPlan::flap_schedule(1, 400, 5, Fault::Blackhole);
+        let b = FaultPlan::flap_schedule(2, 400, 5, Fault::Blackhole);
+        assert!((0..400).any(|op| a.fault_at(op) != b.fault_at(op)));
+    }
+
+    #[test]
+    fn flap_schedule_windows_are_disjoint_and_bounded() {
+        let plan = FaultPlan::flap_schedule(9, 100, 4, Fault::Stall(Duration::ZERO));
+        let faulted: Vec<u64> = (0..200).filter(|&op| plan.fault_at(op).is_some()).collect();
+        assert!(!faulted.is_empty(), "4 flaps over 100 ops must fault something");
+        assert!(faulted.iter().all(|&op| op < 100), "windows stay inside [0, ops)");
+        // one flap per 25-op slot: no slot holds two windows, so runs of
+        // faulted ops never span a slot boundary's worth of ops
+        for w in 0..4u64 {
+            let in_slot = faulted.iter().filter(|&&op| op / 25 == w).count();
+            assert!(in_slot <= 25);
+        }
+        // degenerate inputs produce an empty (never-faulting) plan
+        assert!(FaultPlan::flap_schedule(9, 0, 4, Fault::Blackhole).fault_at(0).is_none());
+        assert!(FaultPlan::flap_schedule(9, 100, 0, Fault::Blackhole).fault_at(0).is_none());
+    }
+
+    #[test]
+    fn fault_stretch_transforms() {
+        let base = Duration::from_millis(100);
+        assert_eq!(
+            Fault::Stall(Duration::from_millis(40)).stretch(base),
+            Duration::from_millis(140)
+        );
+        assert_eq!(Fault::Degrade(3.0).stretch(base), Duration::from_millis(300));
+        // a fault never speeds a link up
+        assert_eq!(Fault::Degrade(0.1).stretch(base), base);
+        assert_eq!(Fault::Blackhole.stretch(base), base + BLACKHOLE_STALL);
+    }
+
+    #[test]
+    fn attached_stall_hits_exactly_its_window() {
+        // window [1,2): op 0 and op 2 ride the plain link, op 1 stalls
+        let mut s = Shaper::new(LinkModel::loopback(), 1);
+        s.attach_faults(FaultPlan::new(vec![FaultWindow {
+            from_op: 1,
+            to_op: 2,
+            fault: Fault::Stall(Duration::from_millis(40)),
+        }]));
+        let t0 = Instant::now();
+        s.shaped(1000, || ());
+        assert!(t0.elapsed() < Duration::from_millis(20), "op 0 unfaulted");
+        let t1 = Instant::now();
+        s.shaped(1000, || ());
+        assert!(t1.elapsed() >= Duration::from_millis(40), "op 1 stalled");
+        let t2 = Instant::now();
+        s.shaped(1000, || ());
+        assert!(t2.elapsed() < Duration::from_millis(20), "op 2 unfaulted");
+        assert_eq!(s.faulted_ops, 1);
+    }
+
+    #[test]
+    fn degraded_stream_slows_every_arrival() {
+        // Degrade(4): the 1 MB/s test link serves 10 KB in ~10ms rtt +
+        // 10ms wire; degraded that becomes ~80ms total
+        let mut s = Shaper::new(test_link(), 1);
+        s.attach_faults(FaultPlan::new(vec![FaultWindow {
+            from_op: 0,
+            to_op: u64::MAX,
+            fault: Fault::Degrade(4.0),
+        }]));
+        let t0 = Instant::now();
+        let mut sess = s.shaped_stream();
+        sess.arrived(10_000);
+        sess.finish();
+        let el = t0.elapsed();
+        assert!(el >= Duration::from_millis(75), "degraded arrival: {el:?}");
+        assert_eq!(s.faulted_ops, 1, "one stream session is one op");
+    }
+
+    #[test]
+    fn faultless_shaper_behaviour_is_unchanged() {
+        // calibration safety: attaching no plan leaves delays identical
+        let mut a = Shaper::new(test_link(), 3);
+        let mut b = Shaper::new(test_link(), 3);
+        b.attach_faults(FaultPlan::new(Vec::new()));
+        let ta = Instant::now();
+        a.shaped(20_000, || ());
+        let da = ta.elapsed();
+        let tb = Instant::now();
+        b.shaped(20_000, || ());
+        let db = tb.elapsed();
+        let diff = if da > db { da - db } else { db - da };
+        assert!(diff < Duration::from_millis(15), "{da:?} vs {db:?}");
+        assert_eq!(b.faulted_ops, 0);
     }
 }

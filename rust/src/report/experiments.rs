@@ -225,6 +225,7 @@ pub fn real_table23(
         fetch_policy: crate::coordinator::FetchPolicy::Always,
         min_hit_tokens: 1,
         sync_interval: None,
+        deadline: None,
         seed: cfg.seed,
     };
     let mut client = EdgeClient::new(engine, ecfg)?;

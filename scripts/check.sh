@@ -8,6 +8,15 @@ set -eu
 
 cd "$(dirname "$0")/../rust"
 
+# Watchdog: the liveness/churn suites intentionally park sockets and kill
+# servers mid-operation; a regression there wedges instead of failing.
+# Cap every test/bench invocation so the gate itself can never hang.
+if command -v timeout >/dev/null 2>&1; then
+    WATCHDOG="timeout 900"
+else
+    WATCHDOG=""
+fi
+
 # Disabled tests must point at a ROADMAP item, or they rot: any #[ignore]
 # whose attribute line lacks a "ROADMAP" marker fails the gate.
 echo "== #[ignore] audit =="
@@ -22,39 +31,53 @@ echo "== cargo build --release =="
 cargo build --release
 
 echo "== cargo test -q =="
-cargo test -q
+$WATCHDOG cargo test -q
 
 # The failure-injection suite is the safety net for the chunk-compressed
 # state path (corrupt chunks, truncation, stale aliases, dead servers);
 # run it explicitly so a filtered `cargo test` can never skip it silently.
 echo "== cargo test -q --test integration_failures =="
-cargo test -q --test integration_failures
+$WATCHDOG cargo test -q --test integration_failures
 
 # The peer-fabric suite covers the multi-box failure ladder (dead shares,
 # dead head peers, survivor re-planning) with engine-free tests that always
 # run; keep it un-skippable the same way.
 echo "== cargo test -q --test integration_fabric =="
-cargo test -q --test integration_fabric
+$WATCHDOG cargo test -q --test integration_fabric
+
+# The liveness suite pins the deadline-budget guarantee: a stalled
+# (accepted-but-silent) peer delays a restore by at most one op budget,
+# and the heartbeat loop detects death + recovery on a rebooted address.
+echo "== cargo test -q --test integration_liveness =="
+$WATCHDOG cargo test -q --test integration_liveness
 
 # Streaming-assembly smoke (`just bench-smoke`): a tiny-parameter run of the
 # overlap bench whose built-in assertions pin the hot-path claim — streaming
 # beats store-and-forward and restore completes ~1 chunk-decode after the
 # last byte.
 echo "== streaming assembly smoke (EDGECACHE_SMOKE=1) =="
-EDGECACHE_SMOKE=1 cargo bench --bench streaming_assembly
+$WATCHDOG env EDGECACHE_SMOKE=1 cargo bench --bench streaming_assembly
 
 # Peer-fabric smoke (`just bench-peers`): asserts 2-peer multi-source
 # fetch strictly beats 1-peer on the shaped link, and that a mid-trace
 # peer death completes the trace via survivor re-planning (hit rate 1.0).
 echo "== peer fabric smoke (EDGECACHE_SMOKE=1) =="
-EDGECACHE_SMOKE=1 cargo bench --bench peer_fabric
+$WATCHDOG env EDGECACHE_SMOKE=1 cargo bench --bench peer_fabric
 
 # Placement smoke (`just bench-placement`): ring vs p2c — asserts the
 # ring's post-reboot (catalog-less) hit rate strictly beats p2c's, ring
 # byte imbalance stays under the documented bound, and ring-driven repair
 # restores the replication factor after a peer death.
 echo "== placement smoke (EDGECACHE_SMOKE=1) =="
-EDGECACHE_SMOKE=1 cargo bench --bench placement
+$WATCHDOG env EDGECACHE_SMOKE=1 cargo bench --bench placement
+
+# Churn smoke (`just bench-churn`): rolling reboots + a permanent peer
+# death — asserts the heartbeat+deadline run restores the replication
+# factor and strictly beats the no-heartbeat ablation on post-death hit
+# rate, every stalled restore stays within one deadline budget, and zero
+# operations wedge.
+echo "== churn smoke (EDGECACHE_SMOKE=1) =="
+$WATCHDOG env EDGECACHE_SMOKE=1 cargo bench --bench churn
 
 if [ "${1:-}" != "--no-clippy" ]; then
     echo "== cargo clippy -- -D warnings =="
