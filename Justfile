@@ -76,3 +76,20 @@ bench-churn:
 # heal loop over a real reboot)
 test-liveness:
     cd rust && cargo test -q --test integration_liveness
+
+# fetch-plan bench, full sweep (emits BENCH_plan.json): per-chunk mixed
+# plans vs all-fetch / all-recompute / whole-range break-even across the
+# device x link x state-scale x prefix grid
+bench-plan-full:
+    cd rust && cargo bench --bench fetch_plan
+
+# the same bench with a reduced grid — the check.sh smoke gate: asserts
+# mixed plans dominate both extremes, strictly win on slow-link/fast-device
+# cells, and match the exhaustive 2^k oracle
+bench-plan:
+    cd rust && EDGECACHE_SMOKE=1 cargo bench --bench fetch_plan
+
+# the plan-oracle suite on its own (brute-force optimality, monotonicity
+# laws, prefix-shape invariant)
+test-plan:
+    cd rust && cargo test -q --test plan_oracle

@@ -24,7 +24,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use edgecache::coordinator::{
-    CacheBox, DeadlineBudget, EdgeClient, EdgeClientConfig, PeerConfig, PlacementKind,
+    CacheBox, DeadlineBudget, EdgeClient, EdgeClientConfig, PeerConfig, PlacementKind, PlanMode,
 };
 use edgecache::devicemodel::DeviceProfile;
 use edgecache::engine::Engine;
@@ -103,6 +103,10 @@ fn main() -> anyhow::Result<()> {
         partial_matching: true,
         use_catalog: true,
         fetch_policy: edgecache::coordinator::FetchPolicy::Always,
+        // chunk planning only engages under device pacing (the host
+        // profile models no recompute rate, so unpaced runs all-fetch)
+        plan: PlanMode::Chunk,
+        probe_negative_ttl: Duration::from_millis(1500),
         min_hit_tokens: 1,
         sync_interval: Some(Duration::from_millis(100)),
         // liveness on: a stalled box costs one 2 s op budget, never a hang
@@ -179,7 +183,8 @@ fn main() -> anyhow::Result<()> {
         c.refresh_stats();
         println!(
             "  {} [{}]: hits by case {:?}, FPs {}, down {:.2} MB, up {:.2} MB, \
-             multi-source {}, re-plans {}, fallback probes {} ({} hits, {} suppressed), \
+             multi-source {}, re-plans {}, chunks {} fetched / {} recomputed \
+             ({} mixed plans), fallback probes {} ({} hits, {} suppressed), \
              repairs {}, timeouts {}, suspects {}, heals {}",
             c.cfg.name,
             c.placement_name(),
@@ -189,6 +194,9 @@ fn main() -> anyhow::Result<()> {
             c.stats.bytes_up as f64 / 1e6,
             c.stats.multi_source_fetches,
             c.stats.re_plans,
+            c.stats.chunks_fetched,
+            c.stats.chunks_recomputed,
+            c.stats.plan_mixed,
             c.stats.fallback_probes,
             c.stats.fallback_probe_hits,
             c.stats.probes_suppressed,
@@ -199,14 +207,15 @@ fn main() -> anyhow::Result<()> {
         );
         for l in c.peer_ledgers() {
             println!(
-                "    peer {}: down {:.2} MB, up {:.2} MB, shares {} ({} failed), \
-                 uploads {} (+{} replicas), placed {}, probes {}, repairs {}, \
-                 {} sync rounds, {} heartbeats, {} heals, {} timeouts",
+                "    peer {}: down {:.2} MB, up {:.2} MB, shares {} ({} failed, \
+                 {} chunks), uploads {} (+{} replicas), placed {}, probes {}, \
+                 repairs {}, {} sync rounds, {} heartbeats, {} heals, {} timeouts",
                 l.addr,
                 l.bytes_down as f64 / 1e6,
                 l.bytes_up as f64 / 1e6,
                 l.fetch_shares,
                 l.share_failures,
+                l.chunks_served,
                 l.uploads,
                 l.replica_uploads,
                 l.placed_entries,

@@ -254,7 +254,7 @@ fn run_scenario(heartbeats: bool, smoke: bool) -> RunStats {
                 } else {
                     fetch_prefix_multi(
                         &mut cl, &planner, e.key.as_bytes(), rows, false, CT, m, HASH,
-                        DIMS,
+                        DIMS, None,
                     )
                 }
             };
@@ -442,7 +442,7 @@ fn stalled_section(json: &mut Vec<(&'static str, Json)>) {
         let f = {
             let mut cl = vec![(1usize, &mut real)];
             fetch_prefix_multi(
-                &mut cl, &planner, b"state:stall", rows, false, CT, m, HASH, DIMS,
+                &mut cl, &planner, b"state:stall", rows, false, CT, m, HASH, DIMS, None,
             )
             .expect("control fetch")
         };
@@ -466,7 +466,7 @@ fn stalled_section(json: &mut Vec<(&'static str, Json)>) {
             // the silent peer is the preferred head every time
             let mut cl = vec![(0usize, &mut silent), (1usize, &mut real)];
             fetch_prefix_multi(
-                &mut cl, &planner, b"state:stall", rows, false, CT, m, HASH, DIMS,
+                &mut cl, &planner, b"state:stall", rows, false, CT, m, HASH, DIMS, None,
             )
         }
         .unwrap_or_else(|| panic!("stalled fetch {i} must restore via the replica"));
@@ -565,7 +565,7 @@ fn degraded_section(smoke: bool, json: &mut Vec<(&'static str, Json)>) {
                 vec![(1, &mut pb), (0, &mut pa)]
             };
             fetch_prefix_multi(
-                &mut cl, &planner, b"state:flap", rows, false, CT, m, HASH, DIMS,
+                &mut cl, &planner, b"state:flap", rows, false, CT, m, HASH, DIMS, None,
             )
         }
         .unwrap_or_else(|| panic!("degraded fetch {i} must still hit"));

@@ -1,0 +1,184 @@
+//! Fetch-plan ablation: the per-chunk planner (`coordinator::plan`) vs the
+//! two extremes (all-fetch / all-recompute) and the PR 3 whole-range
+//! break-even policy, swept over the device × link × state-scale ×
+//! prefix-length grid.
+//!
+//! The sweep is analytic — it exercises the exact cost model the fabric
+//! plans with, so it maps *where* mixed plans pay off: on a slow link with
+//! a fast device the optimum splits the range (cheap prefix recomputed
+//! while the tail streams), and neither extreme nor the binary policy can
+//! reach it.  Asserted:
+//!
+//! * every cell: the planned cost is ≤ both extremes (the planner
+//!   dominates by construction) and never loses to the binary policy by
+//!   more than 5 %;
+//! * at least one slow-link/fast-device cell where the mixed plan
+//!   *strictly* beats both extremes;
+//! * `plan_split` matches the exhaustive 2^k argmin on every cell small
+//!   enough to enumerate.
+//!
+//! Emits `BENCH_plan.json`.
+//!
+//! Env: EDGECACHE_SMOKE=1 (reduced grid for the check.sh gate),
+//!      EDGECACHE_PLAN_JSON (output path, default BENCH_plan.json).
+
+use edgecache::coordinator::plan::{
+    cost_of, plan_exhaustive, plan_split, ChunkCost, ChunkSource, LinkCost,
+    EXHAUSTIVE_MAX_CHUNKS,
+};
+use edgecache::coordinator::FetchPolicy;
+use edgecache::devicemodel::DeviceProfile;
+use edgecache::netsim::LinkModel;
+use edgecache::report::ascii_table;
+use edgecache::util::json::Json;
+
+const EPS: f64 = 1e-9;
+
+fn main() {
+    edgecache::util::logger::init_from_env();
+    let smoke = std::env::var("EDGECACHE_SMOKE").is_ok();
+
+    let devices = [
+        ("pi-zero-2w", DeviceProfile::pi_zero_2w()),
+        ("pi5-4gb", DeviceProfile::pi5_4gb()),
+    ];
+    let links = [
+        ("wifi4-2g4", LinkModel::wifi4_2g4()),
+        ("ethernet-1g", LinkModel::ethernet_1g()),
+    ];
+    // (label, uncompressed state bytes/token, wire compression ratio)
+    let scales = [
+        ("270M raw", 34_474usize, 1.0f64),
+        ("270M deflate", 34_474, 0.6),
+        ("1B raw", 29_751, 1.0),
+    ];
+    let prefixes: &[usize] = if smoke { &[128] } else { &[64, 128, 256, 512] };
+    let ct = 16usize; // tokens per ECS3 chunk
+
+    println!("== per-chunk fetch planning vs extremes vs whole-range break-even ==\n");
+    let mut rows = Vec::new();
+    let mut cells = Vec::new();
+    let mut mixed_strict_win = false;
+
+    for (dname, dev) in &devices {
+        for (lname, link) in &links {
+            for (sname, bpt, ratio) in &scales {
+                for &m in prefixes {
+                    let k = m.div_ceil(ct);
+                    let chunk_wire = (*bpt as f64 * ct as f64 * ratio) as usize;
+                    let chunks: Vec<ChunkCost> = (0..k)
+                        .map(|_| ChunkCost { wire_bytes: chunk_wire, tokens: ct })
+                        .collect();
+                    let lcosts = [LinkCost::from_link(link)];
+                    let rate = dev.prefill_ms_per_tok;
+
+                    let plan = plan_split(&chunks, &lcosts, rate);
+                    let fetch =
+                        cost_of(&chunks, &lcosts, rate, &vec![ChunkSource::Fetch; k]).total_s;
+                    let recompute =
+                        cost_of(&chunks, &lcosts, rate, &vec![ChunkSource::Recompute; k])
+                            .total_s;
+                    // the PR 3 ablation: one break-even decision for the
+                    // whole range, then all-fetch or all-recompute
+                    let binary = if FetchPolicy::BreakEven.should_fetch(
+                        dev,
+                        link,
+                        m,
+                        (m as f64 * *bpt as f64 * ratio) as usize,
+                    ) {
+                        fetch
+                    } else {
+                        recompute
+                    };
+
+                    let planned = plan.cost.total_s;
+                    assert!(
+                        planned <= fetch + EPS && planned <= recompute + EPS,
+                        "{dname}/{lname}/{sname}/m={m}: plan {planned:.4}s worse than an \
+                         extreme (fetch {fetch:.4}s, recompute {recompute:.4}s)"
+                    );
+                    assert!(
+                        planned <= binary * 1.05 + EPS,
+                        "{dname}/{lname}/{sname}/m={m}: plan {planned:.4}s loses >5% to \
+                         the binary policy ({binary:.4}s)"
+                    );
+                    if k <= EXHAUSTIVE_MAX_CHUNKS {
+                        let oracle = plan_exhaustive(&chunks, &lcosts, rate);
+                        assert!(
+                            (planned - oracle.cost.total_s).abs() <= EPS,
+                            "{dname}/{lname}/{sname}/m={m}: split plan {planned:.6}s != \
+                             exhaustive optimum {:.6}s",
+                            oracle.cost.total_s
+                        );
+                    }
+                    let strict =
+                        planned < fetch * 0.99 - EPS && planned < recompute * 0.99 - EPS;
+                    if strict && *dname == "pi5-4gb" && *lname == "wifi4-2g4" {
+                        mixed_strict_win = true;
+                    }
+
+                    rows.push(vec![
+                        dname.to_string(),
+                        lname.to_string(),
+                        sname.to_string(),
+                        m.to_string(),
+                        format!("{fetch:.3}"),
+                        format!("{recompute:.3}"),
+                        format!("{binary:.3}"),
+                        format!("{planned:.3}"),
+                        format!("{}/{}", plan.fetched(), plan.recomputed()),
+                        if strict { "mixed-win" } else { "" }.to_string(),
+                    ]);
+                    cells.push(Json::obj(vec![
+                        ("device", Json::str(*dname)),
+                        ("link", Json::str(*lname)),
+                        ("scale", Json::str(*sname)),
+                        ("prefix_tokens", Json::Int(m as i64)),
+                        ("chunks", Json::Int(k as i64)),
+                        ("all_fetch_s", Json::Num(fetch)),
+                        ("all_recompute_s", Json::Num(recompute)),
+                        ("binary_s", Json::Num(binary)),
+                        ("planned_s", Json::Num(planned)),
+                        ("fetched", Json::Int(plan.fetched() as i64)),
+                        ("recomputed", Json::Int(plan.recomputed() as i64)),
+                        ("mixed", Json::Bool(plan.is_mixed())),
+                    ]));
+                }
+            }
+        }
+    }
+
+    println!(
+        "{}",
+        ascii_table(
+            &[
+                "device", "link", "scale", "m", "fetch [s]", "recompute [s]",
+                "binary [s]", "planned [s]", "F/R", "",
+            ],
+            &rows
+        )
+    );
+    assert!(
+        mixed_strict_win,
+        "expected at least one pi5/wifi cell where the mixed plan strictly \
+         beats both extremes"
+    );
+    println!(
+        "mixed plans strictly beat both extremes on the slow-link/fast-device \
+         cells and never lose to the PR 3 binary policy."
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("fetch_plan")),
+        ("smoke", Json::Bool(smoke)),
+        ("chunk_tokens", Json::Int(ct as i64)),
+        ("cells", Json::Arr(cells)),
+    ]);
+    let path = std::env::var("EDGECACHE_PLAN_JSON")
+        .unwrap_or_else(|_| "BENCH_plan.json".into());
+    match std::fs::write(&path, json.to_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+    println!("fetch_plan done.");
+}

@@ -105,7 +105,7 @@ fn main() {
         let f = {
             let mut claimers = vec![(0usize, &mut pa)];
             fetch_prefix_multi(
-                &mut claimers, &planner, b"state:a", total, false, ct, m, HASH, DIMS,
+                &mut claimers, &planner, b"state:a", total, false, ct, m, HASH, DIMS, None,
             )
             .expect("single fetch")
         };
@@ -116,7 +116,7 @@ fn main() {
         let f = {
             let mut claimers = vec![(0usize, &mut pa), (1usize, &mut pb)];
             fetch_prefix_multi(
-                &mut claimers, &planner, b"state:a", total, false, ct, m, HASH, DIMS,
+                &mut claimers, &planner, b"state:a", total, false, ct, m, HASH, DIMS, None,
             )
             .expect("dual fetch")
         };
@@ -189,7 +189,7 @@ fn main() {
                 vec![(1, &mut pd), (0, &mut pc)]
             };
             fetch_prefix_multi(
-                &mut claimers, &planner, key.as_bytes(), btotal, true, ct, bm, HASH, DIMS,
+                &mut claimers, &planner, key.as_bytes(), btotal, true, ct, bm, HASH, DIMS, None,
             )
         };
         let f = f.unwrap_or_else(|| {

@@ -70,7 +70,8 @@ use crate::catalog::{
     lookup_tagged, ranges_for, state_store_key, LocalCatalog, ModelMeta, PromptRange,
 };
 use crate::coordinator::fabric::{
-    fetch_full_entry, fetch_prefix_multi, repair_entry, Peer, PeerConfig,
+    fetch_full_entry, fetch_prefix_multi, repair_entry, LocalRecompute, Peer,
+    PeerConfig,
 };
 use crate::coordinator::membership::{
     classify_io_err, DeadlineBudget, HealthPolicy, Membership, Outcome,
@@ -78,6 +79,7 @@ use crate::coordinator::membership::{
 use crate::coordinator::placement::{
     Placement, PlacementKind, PowerOfTwoChoices, RendezvousRing, Unplaced,
 };
+use crate::coordinator::plan::PlanMode;
 use crate::coordinator::policy::{FetchPolicy, PeerPlanner};
 use crate::coordinator::sync::CatalogSync;
 use crate::devicemodel::{DeviceProfile, Pacer};
@@ -210,6 +212,16 @@ pub struct EdgeClientConfig {
     /// server with EXISTS for every candidate range, over the shaped link).
     pub use_catalog: bool,
     pub fetch_policy: FetchPolicy,
+    /// Chunk-level fetch planning (`coordinator::plan`).  `Chunk` compares
+    /// modelled transfer time against the device's prefill rate per matched
+    /// ECS3 chunk and may emit a *mixed* plan — recompute the cheap prefix
+    /// locally while fetching the expensive suffix from peers, the two
+    /// overlapped through the stream assembler.  `Range` keeps the
+    /// all-or-nothing whole-range decision (`fetch_policy` alone) as the
+    /// PR-3 ablation.  Planning only engages on devices whose prefill side
+    /// is modelled ([`DeviceProfile::models_recompute`]); the host profile
+    /// always fetches whole ranges regardless of this knob.
+    pub plan: PlanMode,
     /// Ignore probable hits shorter than this many tokens (§3.2 "match of
     /// sufficient length").
     pub min_hit_tokens: usize,
@@ -223,6 +235,13 @@ pub struct EdgeClientConfig {
     /// peer is marked *Suspect* (not Dead) in membership.  Per-peer
     /// [`PeerConfig::deadline`] overrides win over this fleet default.
     pub deadline: Option<DeadlineBudget>,
+    /// How long a probed-and-missed store key suppresses re-probing its
+    /// ring owners (the fallback-probe negative cache).  Long enough to
+    /// cover a burst of repeat misses, short enough that a fresh upload by
+    /// another client becomes probe-visible within a couple of sync
+    /// intervals.  `Duration::ZERO` disables the cache entirely — every
+    /// cold lookup re-probes.
+    pub probe_negative_ttl: Duration,
     pub seed: u64,
 }
 
@@ -244,9 +263,11 @@ impl EdgeClientConfig {
             partial_matching: true,
             use_catalog: true,
             fetch_policy: FetchPolicy::Always,
+            plan: PlanMode::Chunk,
             min_hit_tokens: 1,
             sync_interval: Some(Duration::from_millis(200)),
             deadline: None,
+            probe_negative_ttl: Duration::from_millis(1500),
             seed: 1,
         }
     }
@@ -347,6 +368,16 @@ pub struct ClientStats {
     /// warm (a Bloom miss is then trustworthy) or because the key sits in
     /// the TTL'd probed-and-missed negative cache.
     pub probes_suppressed: u64,
+    /// ECS3 chunks the fetch plan pulled over the wire (completed range
+    /// fetches only).
+    pub chunks_fetched: u64,
+    /// ECS3 chunks the fetch plan assigned to local recompute — whether by
+    /// up-front cost comparison (`--plan chunk`) or by mid-fetch rescue of
+    /// orphaned/corrupt chunks.
+    pub chunks_recomputed: u64,
+    /// Range fetches whose final plan genuinely mixed both sources (≥ 1
+    /// chunk fetched *and* ≥ 1 recomputed).
+    pub plan_mixed: u64,
 }
 
 /// Where a downloaded state physically lives on the fabric — the anchor
@@ -426,21 +457,27 @@ pub struct EdgeClient {
     last_epoch: u64,
     /// Fallback-probe suppression: store keys whose ring owners were
     /// probed and answered "not here", with the probe time.  While the
-    /// entry is younger than [`PROBE_NEGATIVE_TTL`] the key is not
-    /// re-probed; any membership transition clears the cache (a heal or
-    /// death changes who should hold what).
+    /// entry is younger than [`EdgeClientConfig::probe_negative_ttl`] the
+    /// key is not re-probed; any membership transition clears the cache (a
+    /// heal or death changes who should hold what).
     probe_negative: HashMap<Vec<u8>, std::time::Instant>,
     pacer: Pacer,
     sampler: Sampler,
     pub stats: ClientStats,
 }
 
-/// How long a probed-and-missed store key suppresses re-probing its ring
-/// owners.  Long enough to cover a burst of repeat misses (the expensive
-/// pattern: every cold query paying bounded EXISTS probes that find
-/// nothing), short enough that a fresh upload by another client becomes
-/// probe-visible within a couple of sync intervals.
-const PROBE_NEGATIVE_TTL: Duration = Duration::from_millis(1500);
+/// Whether a probed-and-missed entry recorded at `probed_at` still
+/// suppresses re-probing at `now` under `ttl`
+/// ([`EdgeClientConfig::probe_negative_ttl`]).  A zero TTL never
+/// suppresses — the strict `<` makes `Duration::ZERO` an exact off
+/// switch, not a 1-tick cache.
+fn negcache_suppresses(
+    ttl: Duration,
+    probed_at: std::time::Instant,
+    now: std::time::Instant,
+) -> bool {
+    now.duration_since(probed_at) < ttl
+}
 
 impl EdgeClient {
     pub fn new(engine: Arc<Engine>, cfg: EdgeClientConfig) -> Result<Self> {
@@ -805,9 +842,10 @@ impl EdgeClient {
             let skey = state_store_key(&r.key);
             // TTL'd negative cache: this key's owners recently answered
             // "not here" — don't ask again until the TTL lapses (or
-            // membership moves, which clears the cache wholesale).
+            // membership moves, which clears the cache wholesale).  A zero
+            // TTL disables the cache: every cold lookup re-probes.
             if let Some(&t) = self.probe_negative.get(&skey) {
-                if now.duration_since(t) < PROBE_NEGATIVE_TTL {
+                if negcache_suppresses(self.cfg.probe_negative_ttl, t, now) {
                     self.stats.probes_suppressed += 1;
                     continue;
                 }
@@ -906,11 +944,12 @@ impl EdgeClient {
         &mut self,
         range: &PromptRange,
         claimers: &[usize],
+        tokens: &[u32],
         bd: &mut PhaseBreakdown,
     ) -> Option<Download> {
         let key = state_store_key(&range.key);
         let t0 = std::time::Instant::now();
-        let out = self.fetch_state(&key, range, claimers);
+        let out = self.fetch_state(&key, range, claimers, tokens);
         bd.add(Phase::Redis, t0.elapsed());
         match out {
             Some(d) if d.state.n_tokens == range.token_len => {
@@ -986,6 +1025,7 @@ impl EdgeClient {
         key: &[u8],
         range: &PromptRange,
         claimers: &[usize],
+        tokens: &[u32],
     ) -> Option<Download> {
         let (alias_peer, blob) = self.fetch_alias_blob(key, claimers)?;
         let cfg = &self.engine.model.config;
@@ -1046,6 +1086,49 @@ impl EdgeClient {
         // size, so whole-chunk byte ranges never round to a mid-chunk
         // boundary — and deflated entries are range-served like any other.
         if let Some(ct) = alias.chunk_tokens {
+            // chunk-level fetch plan feeder (`coordinator::plan`):
+            // regenerate cheap prefix chunks from the prompt tokens while
+            // the expensive suffix streams from the peers.  Only engaged
+            // under `--plan chunk` on devices whose prefill side is
+            // modelled — the host profile would recompute "for free" and
+            // must keep the historical all-fetch path.
+            let total_rows = alias.total_rows;
+            let stride = BlobLayout::new(&hash, dims.0, dims.2, dims.3).token_stride();
+            let engine = Arc::clone(&self.engine);
+            let pacer = &mut self.pacer;
+            let mut feed = move |chunks: &[usize]| -> Option<Vec<(usize, Vec<u8>)>> {
+                let hi = *chunks.iter().max()?;
+                let rows = m.min((hi + 1) * ct);
+                let st = match engine.prefill_prefix(&tokens[..m], rows, pacer) {
+                    Ok(st) => st,
+                    Err(e) => {
+                        log_debug!("edge-client", "local recompute failed: {e}");
+                        return None;
+                    }
+                };
+                let mut out = Vec::with_capacity(chunks.len());
+                for &c in chunks {
+                    let t0 = c * ct;
+                    let real = st.n_tokens.saturating_sub(t0).min(ct.min(m - t0));
+                    if real == 0 {
+                        continue;
+                    }
+                    // commit_chunk expects the chunk's *stored* rows (blob
+                    // geometry); rows past the matched prefix are never
+                    // scattered, so zero-padding them is sound
+                    let stored = ct.min(total_rows - t0);
+                    let mut payload = st.chunk_payload(t0, real);
+                    payload.resize(stored * stride, 0);
+                    out.push((c, payload));
+                }
+                Some(out)
+            };
+            let plan_chunks = self.cfg.plan == PlanMode::Chunk
+                && self.cfg.device.models_recompute();
+            let local = plan_chunks.then(|| LocalRecompute {
+                feed: &mut feed,
+                prefill_ms_per_tok: self.cfg.device.prefill_ms_per_tok,
+            });
             let fetch = {
                 let mut sel: Vec<(usize, &mut Peer)> = self
                     .peers
@@ -1066,6 +1149,7 @@ impl EdgeClient {
                     m,
                     &hash,
                     dims,
+                    local,
                 )
             };
             match fetch {
@@ -1081,6 +1165,11 @@ impl EdgeClient {
                     }
                     if f.multi_source {
                         self.stats.multi_source_fetches += 1;
+                    }
+                    self.stats.chunks_fetched += f.chunks_fetched as u64;
+                    self.stats.chunks_recomputed += f.chunks_recomputed as u64;
+                    if f.chunks_fetched > 0 && f.chunks_recomputed > 0 {
+                        self.stats.plan_mixed += 1;
                     }
                     let head_peer = f.head_peer;
                     self.peers[head_peer]
@@ -1730,7 +1819,7 @@ impl EdgeClient {
                 range.token_len,
                 est_bytes,
             ) {
-                match self.try_download(&range, &claimers, &mut bd) {
+                match self.try_download(&range, &claimers, &tokens, &mut bd) {
                     Some(d) => {
                         matched = d.state.n_tokens;
                         downloaded = d.wire_bytes;
@@ -2048,6 +2137,23 @@ mod tests {
         // loopback has no BDP: only the fixed per-chunk overhead remains
         let lo = adaptive_chunk_tokens(&LinkModel::loopback(), stride_270m, 117);
         assert!((1..=4).contains(&lo), "{lo}");
+    }
+
+    #[test]
+    fn negcache_zero_ttl_disables_suppression() {
+        use std::time::Instant;
+        let probed = Instant::now();
+        let now = probed + Duration::from_millis(1);
+        // configured TTL (the default 1.5 s) suppresses a fresh miss…
+        let ttl = EdgeClientConfig::native(None).probe_negative_ttl;
+        assert!(ttl > Duration::ZERO, "default TTL must be non-zero");
+        assert!(negcache_suppresses(ttl, probed, now));
+        // …and stops suppressing once the entry outlives it
+        assert!(!negcache_suppresses(ttl, probed, probed + ttl));
+        // a zero TTL never suppresses, even at the exact probe instant —
+        // the `--negcache-ms 0` ablation re-probes every cold lookup
+        assert!(!negcache_suppresses(Duration::ZERO, probed, probed));
+        assert!(!negcache_suppresses(Duration::ZERO, probed, now));
     }
 
     #[test]

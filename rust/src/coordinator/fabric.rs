@@ -31,6 +31,19 @@
 //!    chunk re-verifies against the head peer's crc index no matter which
 //!    box served it.
 //!
+//! With a [`LocalRecompute`] feeder attached (`--plan chunk` on a paced
+//! device), the fetch additionally consults the per-chunk cost model
+//! (`coordinator::plan`): the exact stored chunk lengths from the verified
+//! index are priced against the device's prefill rate, and the resulting
+//! split plan recomputes the cheap leading chunks locally (the feeder runs
+//! on the calling thread, overlapping the share threads' modelled wire
+//! time) while the expensive suffix is striped across peers as before.
+//! Orphaned chunks can then be re-planned onto *either* a survivor or the
+//! local feeder — whichever the model says is cheaper — so a fetch
+//! survives even the death of the last claimer, and a single corrupt
+//! chunk degrades to one chunk of recompute instead of a full-blob
+//! fallback.
+//!
 //! Anything unrecoverable returns `None` and the caller falls back to a
 //! full-blob download ([`fetch_full_entry`]) and then to local prefill —
 //! the same never-restore-questionable-bytes ladder as the single-box
@@ -46,6 +59,7 @@ use crate::catalog::LocalCatalog;
 use crate::coordinator::membership::{
     classify_io_err, DeadlineBudget, HealthSink, Outcome,
 };
+use crate::coordinator::plan::{cost_of, plan_split, ChunkCost, ChunkSource, LinkCost};
 use crate::coordinator::policy::PeerPlanner;
 use crate::coordinator::sync::CatalogSync;
 use crate::kvstore::client::{getrange_req, ChunksReply, StreamingReplies};
@@ -259,6 +273,29 @@ pub struct FabricFetch {
     pub share_failures: u64,
     /// Whether more than one peer actually served chunks.
     pub multi_source: bool,
+    /// Chunks whose rows came off a peer stripe.
+    pub chunks_fetched: usize,
+    /// Chunks whose rows the local feeder recomputed ([`LocalRecompute`]).
+    pub chunks_recomputed: usize,
+}
+
+/// The local-recompute feeder: the second chunk source next to the
+/// per-peer reply streams.  The client builds one when chunk planning is
+/// on (`--plan chunk`) and the device models recompute; the fabric stays
+/// engine-free — it only sees raw row payloads.
+pub struct LocalRecompute<'a> {
+    /// Produce raw row payloads for the requested chunk ids — exactly
+    /// `stored_rows(c) * stride` bytes each, the
+    /// [`StateAssembler::commit_chunk`] contract.  Causality means the
+    /// feeder prefills from scratch up to the highest requested chunk even
+    /// if only some ids are wanted (the planner only requests prefixes on
+    /// the happy path; rescue prices that from-scratch cost explicitly).
+    /// `None` (or missing ids) leaves those chunks unfed — the re-plan
+    /// loop treats them like any other orphan.
+    pub feed: &'a mut dyn FnMut(&[usize]) -> Option<Vec<(usize, Vec<u8>)>>,
+    /// Modelled device prefill rate (ms/token) the cost model prices
+    /// recompute with; `<= 0` disables planning (host profile).
+    pub prefill_ms_per_tok: f64,
 }
 
 /// Validate a fetched head and build the streaming assembler from it: the
@@ -650,25 +687,68 @@ fn fetch_share(
     } else {
         peer.ledger.share_failures += 1;
     }
+    peer.ledger.chunks_served += outcome.fed as u64;
     peer.ledger.bytes_down += outcome.wire as u64;
     peer.ledger.breakdown.add(Phase::Redis, t0.elapsed());
     outcome
 }
 
+/// Drive the local-recompute feeder for `chunks` and commit the returned
+/// raw row payloads into the shared assembler.  Returns how many chunks
+/// were actually committed; anything missing stays unfed and the re-plan
+/// loop handles it like any other orphan.
+fn feed_local(
+    local: &mut LocalRecompute<'_>,
+    chunks: &[usize],
+    asm: &Mutex<Option<StateAssembler>>,
+) -> usize {
+    if chunks.is_empty() {
+        return 0;
+    }
+    let Some(payloads) = (local.feed)(chunks) else {
+        log_debug!("fabric", "local feeder declined {} chunks", chunks.len());
+        return 0;
+    };
+    let mut fed = 0usize;
+    for (c, payload) in payloads {
+        let committed = match asm.lock() {
+            Ok(mut guard) => match guard.as_mut() {
+                Some(a) => match a.commit_chunk(c, &payload) {
+                    Ok(()) => true,
+                    Err(e) => {
+                        log_debug!("fabric", "recomputed chunk {c} not committed: {e}");
+                        false
+                    }
+                },
+                None => false,
+            },
+            Err(_) => false,
+        };
+        if committed {
+            fed += 1;
+        }
+    }
+    fed
+}
+
 /// Run one round of chunk shares concurrently — one scoped thread per
 /// participating peer, each driving its own pipelined reply stream into
-/// the shared assembler.  Returns (wire bytes moved, failed shares, slots
-/// that fed at least one chunk, failed slots, slots that answered
-/// "no such key").
+/// the shared assembler — plus, when a mixed plan assigned it work, the
+/// local-recompute feeder on the calling thread (paced device compute
+/// elapses here while each share thread sleeps on its own modelled wire,
+/// so the two feeders genuinely overlap).  Returns (wire bytes moved,
+/// failed shares, slots that fed at least one chunk, failed slots, slots
+/// that answered "no such key", chunks the feeder recomputed).
 #[allow(clippy::type_complexity)]
 fn run_shares(
     claimers: &mut [(usize, &mut Peer)],
     assign: &[(usize, Vec<usize>)],
+    local: Option<(&mut LocalRecompute<'_>, &[usize])>,
     target: &[u8],
     geom: &[(usize, usize)],
     verifier: &ChunkVerifier,
     asm: &Mutex<Option<StateAssembler>>,
-) -> (usize, u64, Vec<usize>, Vec<usize>, Vec<usize>) {
+) -> (usize, u64, Vec<usize>, Vec<usize>, Vec<usize>, usize) {
     let mut slots: Vec<Option<&mut Peer>> =
         claimers.iter_mut().map(|(_, p)| Some(&mut **p)).collect();
     let mut wire = 0usize;
@@ -676,6 +756,7 @@ fn run_shares(
     let mut contributed = Vec::new();
     let mut failed_slots = Vec::new();
     let mut absent_slots = Vec::new();
+    let mut recomputed = 0usize;
     std::thread::scope(|s| {
         let mut handles = Vec::new();
         for (slot, chunks) in assign {
@@ -690,6 +771,9 @@ fn run_shares(
                 *slot,
                 s.spawn(move || fetch_share(peer, target, chunks, geom, verifier, asm)),
             ));
+        }
+        if let Some((lr, chunks)) = local {
+            recomputed = feed_local(lr, chunks, asm);
         }
         for (slot, h) in handles {
             match h.join() {
@@ -713,9 +797,10 @@ fn run_shares(
             }
         }
     });
-    (wire, fails, contributed, failed_slots, absent_slots)
+    (wire, fails, contributed, failed_slots, absent_slots, recomputed)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn finish_fetch(
     asm: StateAssembler,
     wire: usize,
@@ -723,6 +808,8 @@ fn finish_fetch(
     multi_source: bool,
     re_plans: u64,
     share_failures: u64,
+    chunks_fetched: usize,
+    chunks_recomputed: usize,
 ) -> Option<FabricFetch> {
     let compressed = asm.compressed();
     let entries = asm.entries().to_vec();
@@ -736,6 +823,8 @@ fn finish_fetch(
             re_plans,
             share_failures,
             multi_source,
+            chunks_fetched,
+            chunks_recomputed,
         }),
         Err(e) => {
             log_debug!("fabric", "assembly rejected: {e}");
@@ -749,9 +838,10 @@ fn finish_fetch(
 /// whole chunks across them and re-planning around failures.  `claimers`
 /// pairs each peer with its caller-side id (reported back in
 /// [`FabricFetch::head_peer`]); a single claimer is simply the degenerate
-/// one-stripe plan.  `None` means the range path could not complete — the
-/// caller falls back to [`fetch_full_entry`], never to a questionable
-/// restore.
+/// one-stripe plan.  A `local` feeder turns the stripe split into a mixed
+/// per-chunk fetch/recompute plan (module docs).  `None` means the range
+/// path could not complete — the caller falls back to
+/// [`fetch_full_entry`], never to a questionable restore.
 #[allow(clippy::too_many_arguments)]
 pub fn fetch_prefix_multi(
     claimers: &mut [(usize, &mut Peer)],
@@ -763,6 +853,7 @@ pub fn fetch_prefix_multi(
     m: usize,
     hash: &str,
     dims: (usize, usize, usize, usize),
+    local: Option<LocalRecompute<'_>>,
 ) -> Option<FabricFetch> {
     let n = claimers.len();
     if n == 0 {
@@ -772,13 +863,20 @@ pub fn fetch_prefix_multi(
     let lo = BlobLayout::new(hash, l, kh, d).with_chunk_tokens(ct);
     let head_len = lo.payload_off(total_rows);
     let k = lo.prefix_chunks(m);
+    // a feeder with a modelled prefill rate arms per-chunk planning; the
+    // host profile (rate 0) keeps the historical all-fetch behaviour
+    let mut local = local.filter(|lr| lr.prefill_ms_per_tok > 0.0 && k > 0);
     // one *live* claimer is a single-source fetch: the GETCHUNKS request
     // carries every chunk in one round trip (dead-marked claimers don't
     // force the split head+stripes shape — after a peer death the
     // survivor keeps serving hits at full single-source speed; the head
-    // rotation below still redials them, so a recovered box re-joins)
+    // rotation below still redials them, so a recovered box re-joins).
+    // Chunk planning needs the head+stripes shape even with one claimer:
+    // the plan prices the exact stored chunk lengths from the index, and
+    // per-chunk shares are what let one bad chunk degrade to one chunk of
+    // recompute instead of a whole-range fallback.
     let live = claimers.iter().filter(|(_, p)| p.is_connected()).count();
-    let single = live <= 1;
+    let single = live <= 1 && local.is_none();
     let mut share_failures = 0u64;
     // slots that authoritatively answered "no such key" during head
     // rotation (evicted copy, Bloom FP, or a ring peer holding only the
@@ -821,10 +919,11 @@ pub fn fetch_prefix_multi(
         match out {
             HeadOutcome::Done { asm, wire } => {
                 peer.ledger.fetch_shares += 1;
+                peer.ledger.chunks_served += k as u64;
                 peer.ledger.bytes_down += wire as u64;
                 peer.note_io(Outcome::IoOk);
                 let head_peer = claimers[slot].0;
-                return finish_fetch(asm, wire, head_peer, false, 0, share_failures);
+                return finish_fetch(asm, wire, head_peer, false, 0, share_failures, k, 0);
             }
             HeadOutcome::Head { asm, wire } => {
                 peer.ledger.bytes_down += wire as u64;
@@ -915,11 +1014,41 @@ pub fn fetch_prefix_multi(
         .iter()
         .map(|&s| claimers[s].1.link.goodput_bps)
         .collect();
-    let stripes = planner.split_chunks(k, &weights);
+
+    // mixed plan (feeder attached): price each chunk's exact stored wire
+    // bytes against the device's prefill rate over the participants'
+    // links.  Causal attention makes executable plans prefix-shaped —
+    // recompute chunks [0, split) locally, stripe [split, k) over peers.
+    let split = match &local {
+        Some(lr) => {
+            let chunk_costs: Vec<ChunkCost> = (0..k)
+                .map(|c| ChunkCost {
+                    wire_bytes: geom[c].1,
+                    tokens: ct.min(m - c * ct),
+                })
+                .collect();
+            let links: Vec<LinkCost> = order
+                .iter()
+                .map(|&s| LinkCost::from_link(&claimers[s].1.link))
+                .collect();
+            plan_split(&chunk_costs, &links, lr.prefill_ms_per_tok).split_point()
+        }
+        None => 0,
+    };
+    let mut chunks_recomputed = 0usize;
+    let mut local_round: Vec<usize> = (0..split).collect();
+    if split > 0 {
+        log_debug!(
+            "fabric",
+            "mixed plan: recompute chunks [0, {split}), fetch [{split}, {k})"
+        );
+    }
+
+    let stripes = planner.split_chunks(k - split, &weights);
     let mut assign: Vec<(usize, Vec<usize>)> = order
         .iter()
         .zip(stripes)
-        .map(|(&s, r)| (s, r.collect()))
+        .map(|(&s, r)| (s, r.map(|c| c + split).collect()))
         .collect();
 
     let mut rounds = 0usize;
@@ -929,9 +1058,24 @@ pub fn fetch_prefix_multi(
     // failures keep their own budget — an alias-only ring claimer can
     // never starve the re-plan of a real peer death
     let mut free_rounds = 0usize;
+    // the local feeder gets one rescue shot per fetch: a successful rescue
+    // feeds everything it was asked for, and a broken feeder must not be
+    // able to spin the loop
+    let mut rescue_spent = false;
+    let read_unfed = || match asm_cell.lock() {
+        Ok(guard) => guard.as_ref().map(|a| a.unfed_chunks()),
+        Err(_) => None, // a worker panicked: never restore this
+    };
     loop {
-        let (wire, fails, contributed, failed_slots, absent_now) =
-            run_shares(claimers, &assign, target, &geom, &verifier, &asm_cell);
+        let local_arg = if local_round.is_empty() {
+            None
+        } else {
+            local.as_mut().map(|lr| (lr, local_round.as_slice()))
+        };
+        let (wire, fails, contributed, failed_slots, absent_now, fed_local) =
+            run_shares(claimers, &assign, local_arg, target, &geom, &verifier, &asm_cell);
+        chunks_recomputed += fed_local;
+        local_round = Vec::new();
         wire_total += wire;
         share_failures += fails;
         for s in contributed {
@@ -947,21 +1091,10 @@ pub fn fetch_prefix_multi(
                 bad_slots.push(s);
             }
         }
-        let unfed = match asm_cell.lock() {
-            Ok(guard) => match guard.as_ref() {
-                Some(a) => a.unfed_chunks(),
-                None => return None,
-            },
-            Err(_) => return None, // a worker panicked: never restore this
-        };
+        let mut unfed = read_unfed()?;
         if unfed.is_empty() {
             break;
         }
-        if rounds >= planner.max_replan_rounds + free_rounds {
-            log_debug!("fabric", "re-plan budget exhausted, {} chunks orphaned", unfed.len());
-            return None;
-        }
-        rounds += 1;
         let live: Vec<usize> = (0..n)
             .filter(|&s| {
                 claimers[s].1.is_connected()
@@ -969,9 +1102,55 @@ pub fn fetch_prefix_multi(
                     && !absent_slots.contains(&s)
             })
             .collect();
+        let budget_spent = rounds >= planner.max_replan_rounds + free_rounds;
+        // orphan placement goes to *either* a survivor or the local feeder:
+        // rescue when no survivor can serve (or the budget is spent), or
+        // when the model prices from-scratch prefill up to the highest
+        // orphan below re-fetching over the surviving links
+        let rescue = match &local {
+            Some(lr) if !rescue_spent => {
+                live.is_empty() || budget_spent || {
+                    let refetch: Vec<ChunkCost> = unfed
+                        .iter()
+                        .map(|&c| ChunkCost { wire_bytes: geom[c].1, tokens: 0 })
+                        .collect();
+                    let links: Vec<LinkCost> = live
+                        .iter()
+                        .map(|&s| LinkCost::from_link(&claimers[s].1.link))
+                        .collect();
+                    let all_fetch = vec![ChunkSource::Fetch; refetch.len()];
+                    let fetch_s =
+                        cost_of(&refetch, &links, lr.prefill_ms_per_tok, &all_fetch).total_s;
+                    let hi = *unfed.iter().max().expect("unfed non-empty");
+                    let recompute_s =
+                        m.min((hi + 1) * ct) as f64 * lr.prefill_ms_per_tok / 1e3;
+                    recompute_s < fetch_s
+                }
+            }
+            _ => false,
+        };
+        if rescue {
+            rescue_spent = true;
+            let lr = local.as_mut().expect("rescue implies a feeder");
+            log_debug!(
+                "fabric",
+                "rescuing {} orphaned chunks onto local recompute",
+                unfed.len()
+            );
+            chunks_recomputed += feed_local(lr, &unfed, &asm_cell);
+            unfed = read_unfed()?;
+            if unfed.is_empty() {
+                break;
+            }
+        }
         if live.is_empty() {
             return None;
         }
+        if budget_spent {
+            log_debug!("fabric", "re-plan budget exhausted, {} chunks orphaned", unfed.len());
+            return None;
+        }
+        rounds += 1;
         assign = planner.reassign(&unfed, &live);
         if assign.is_empty() {
             return None;
@@ -994,6 +1173,8 @@ pub fn fetch_prefix_multi(
         sources.len() > 1,
         re_plans,
         share_failures,
+        k - chunks_recomputed,
+        chunks_recomputed,
     )
 }
 

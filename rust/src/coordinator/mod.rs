@@ -21,6 +21,11 @@
 //!   always-fetch-on-hit plus a break-even extension (§5.3 analysis turned
 //!   into a runtime policy), and the chunk-split / re-plan /
 //!   two-choices-sampling primitives the placement policies build on;
+//! * [`plan`] — overhead-aware per-chunk fetch planning: a cost model over
+//!   per-peer goodput/RTT and devicemodel prefill rates that emits mixed
+//!   fetch/recompute plans per matched chunk (`--plan chunk`), with the
+//!   all-or-nothing [`policy::FetchPolicy`] kept as the `--plan range`
+//!   ablation;
 //! * [`membership`] — the fleet liveness layer: a per-peer
 //!   `Up → Suspect → Dead → Recovering` health state machine fed by
 //!   heartbeats piggybacked on the sync loop and hot-path I/O outcomes,
@@ -32,6 +37,7 @@ pub mod client;
 pub mod fabric;
 pub mod membership;
 pub mod placement;
+pub mod plan;
 pub mod policy;
 pub mod sync;
 
@@ -46,5 +52,6 @@ pub use membership::{
 pub use placement::{
     Placement, PlacementKind, PowerOfTwoChoices, RendezvousRing,
 };
+pub use plan::{ChunkCost, ChunkPlan, ChunkSource, LinkCost, PlanCost, PlanMode};
 pub use policy::{FetchPolicy, PeerPlanner};
 pub use sync::CatalogSync;

@@ -1,0 +1,432 @@
+//! Overhead-aware per-chunk fetch planning (SparKV-style mixed loading).
+//!
+//! `FetchPolicy::break_even_tokens` makes one all-or-nothing decision per
+//! matched range, but ECS3 already gives chunk-granular transfer and the
+//! fabric gives per-peer goodput.  This module makes the restore plan
+//! per-chunk: for each matched chunk it compares the modelled transfer cost
+//! (per-peer goodput/RTT, the chunk's queue position within its stripe, the
+//! entry's actual compressed wire bytes) against the local recompute cost
+//! (devicemodel prefill rates) and emits **mixed plans** — fetch the
+//! expensive-to-recompute chunks from fast peers while the device
+//! recomputes the cheap ones locally, overlapped through `StateAssembler`.
+//!
+//! Two planners share one [`cost_of`] model:
+//!
+//! * [`plan_exhaustive`] — argmin over all `2^k` fetch/recompute
+//!   assignments (`k ≤ 16`).  This is the reference the oracle test suite
+//!   pins: whatever assignment the enumeration says is cheapest, the
+//!   planner must match.
+//! * [`plan_split`] — the *executable* planner.  Causal attention means a
+//!   recomputed chunk needs every earlier token's state, so the only plans
+//!   the engine can actually run are "recompute the prefix `[0, s)`
+//!   locally, fetch the suffix `[s, k)` from peers"; this scans all `k+1`
+//!   split points.  For a single link and homogeneous chunks the split
+//!   optimum equals the exhaustive optimum (only the *counts* matter);
+//!   in general it is the best plan subject to the causality constraint.
+//!
+//! Cost model, in seconds:
+//!
+//! * transfer: fetched chunks are striped contiguously across links in
+//!   goodput proportion (the same [`PeerPlanner::split_chunks`] discipline
+//!   the fabric uses), and a stripe's completion is
+//!   `rtt + stripe_bytes / goodput` — the shaper's arrival model for the
+//!   stripe's last queued chunk.  Plan transfer cost is the max over
+//!   non-empty stripes.
+//! * recompute: the device is serial, so `Σ tokens_c · prefill_ms / 1e3`
+//!   over recomputed chunks.
+//! * total: `max(transfer, recompute)` — the two feeders overlap.
+//!
+//! The degenerate all-or-nothing decision ([`FetchPolicy::BreakEven`],
+//! `--plan range`) is kept as the ablation baseline; `benches/fetch_plan.rs`
+//! maps the device×link grid where it is provably wrong.
+
+use crate::netsim::LinkModel;
+
+use super::policy::PeerPlanner;
+
+/// Largest chunk count [`plan_exhaustive`] will enumerate (`2^k` masks).
+pub const EXHAUSTIVE_MAX_CHUNKS: usize = 16;
+
+/// Restore-plan granularity (`--plan chunk|range`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanMode {
+    /// Ablation: one all-or-nothing decision per matched range (the PR 3
+    /// `FetchPolicy` behaviour).
+    Range,
+    /// Per-chunk mixed plans from the cost model in this module.
+    Chunk,
+}
+
+impl PlanMode {
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "range" | "binary" => Some(PlanMode::Range),
+            "chunk" | "mixed" => Some(PlanMode::Chunk),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanMode::Range => "range",
+            PlanMode::Chunk => "chunk",
+        }
+    }
+}
+
+/// Per-chunk planner input: what the chunk costs to move vs to redo.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChunkCost {
+    /// Bytes actually on the wire for this chunk (the entry's stored,
+    /// possibly deflated, chunk length — so per-entry compression ratio is
+    /// priced in for free).
+    pub wire_bytes: usize,
+    /// Prompt tokens this chunk covers (what local prefill must redo).
+    pub tokens: usize,
+}
+
+/// Per-link planner input, extracted from the fabric's shaped links.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkCost {
+    pub goodput_bps: f64,
+    pub rtt_s: f64,
+}
+
+impl LinkCost {
+    pub fn from_link(l: &LinkModel) -> Self {
+        LinkCost { goodput_bps: l.goodput_bps, rtt_s: l.rtt.as_secs_f64() }
+    }
+}
+
+/// Where one chunk's rows come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkSource {
+    /// Download from a peer stripe.
+    Fetch,
+    /// Recompute locally on the (modelled) device.
+    Recompute,
+}
+
+/// Modelled cost of one assignment, in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanCost {
+    /// `max(transfer, recompute)` — the feeders overlap.
+    pub total_s: f64,
+    /// Completion of the slowest non-empty peer stripe.
+    pub transfer_s: f64,
+    /// Serial local prefill of the recomputed chunks.
+    pub recompute_s: f64,
+}
+
+/// A per-chunk restore plan plus its modelled cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkPlan {
+    /// `sources[c]` is where chunk `c` comes from.
+    pub sources: Vec<ChunkSource>,
+    pub cost: PlanCost,
+}
+
+impl ChunkPlan {
+    pub fn fetched(&self) -> usize {
+        self.sources.iter().filter(|s| **s == ChunkSource::Fetch).count()
+    }
+
+    pub fn recomputed(&self) -> usize {
+        self.sources.len() - self.fetched()
+    }
+
+    pub fn is_mixed(&self) -> bool {
+        self.fetched() > 0 && self.recomputed() > 0
+    }
+
+    /// For split plans: the first fetched chunk index `s` (recompute
+    /// `[0, s)`, fetch `[s, k)`).  `k` when everything is recomputed.
+    pub fn split_point(&self) -> usize {
+        self.sources
+            .iter()
+            .position(|s| *s == ChunkSource::Fetch)
+            .unwrap_or(self.sources.len())
+    }
+}
+
+
+/// Price one fetch/recompute assignment under the cost model (module docs).
+///
+/// `sources.len()` must equal `chunks.len()`.  An assignment that fetches
+/// anything over an empty link set costs `+inf` transfer.
+pub fn cost_of(
+    chunks: &[ChunkCost],
+    links: &[LinkCost],
+    prefill_ms_per_tok: f64,
+    sources: &[ChunkSource],
+) -> PlanCost {
+    assert_eq!(chunks.len(), sources.len(), "one source per chunk");
+    let fetch_bytes: Vec<usize> = sources
+        .iter()
+        .zip(chunks)
+        .filter(|(s, _)| **s == ChunkSource::Fetch)
+        .map(|(_, c)| c.wire_bytes)
+        .collect();
+    let transfer_s = if fetch_bytes.is_empty() {
+        0.0
+    } else if links.is_empty() {
+        f64::INFINITY
+    } else {
+        // Goodput-weighted contiguous stripes — the fabric's split
+        // discipline — so a chunk's queue position within its stripe is
+        // priced via the stripe's cumulative bytes.
+        let weights: Vec<f64> = links.iter().map(|l| l.goodput_bps).collect();
+        let stripes = PeerPlanner::default().split_chunks(fetch_bytes.len(), &weights);
+        let mut worst = 0.0f64;
+        for (link, stripe) in links.iter().zip(&stripes) {
+            if stripe.is_empty() {
+                continue;
+            }
+            let bytes: usize = fetch_bytes[stripe.clone()].iter().sum();
+            let xfer = bytes as f64 / link.goodput_bps; // inf goodput -> 0
+            worst = worst.max(link.rtt_s + xfer);
+        }
+        worst
+    };
+    let recompute_tokens: usize = sources
+        .iter()
+        .zip(chunks)
+        .filter(|(s, _)| **s == ChunkSource::Recompute)
+        .map(|(_, c)| c.tokens)
+        .sum();
+    let recompute_s = recompute_tokens as f64 * prefill_ms_per_tok / 1e3;
+    PlanCost { total_s: transfer_s.max(recompute_s), transfer_s, recompute_s }
+}
+
+fn plan_for(
+    chunks: &[ChunkCost],
+    links: &[LinkCost],
+    prefill_ms_per_tok: f64,
+    sources: Vec<ChunkSource>,
+) -> ChunkPlan {
+    let cost = cost_of(chunks, links, prefill_ms_per_tok, &sources);
+    ChunkPlan { sources, cost }
+}
+
+/// Argmin over every `2^k` fetch/recompute assignment (`k ≤ 16`; larger
+/// inputs delegate to [`plan_split`]).  Ties prefer fewer fetched chunks,
+/// then the first assignment in mask order — deterministic, so the oracle
+/// suite can replay it.
+pub fn plan_exhaustive(
+    chunks: &[ChunkCost],
+    links: &[LinkCost],
+    prefill_ms_per_tok: f64,
+) -> ChunkPlan {
+    let k = chunks.len();
+    if k > EXHAUSTIVE_MAX_CHUNKS {
+        return plan_split(chunks, links, prefill_ms_per_tok);
+    }
+    let mut best: Option<ChunkPlan> = None;
+    for mask in 0u32..(1u32 << k) {
+        let sources: Vec<ChunkSource> = (0..k)
+            .map(|c| {
+                if mask & (1 << c) != 0 {
+                    ChunkSource::Fetch
+                } else {
+                    ChunkSource::Recompute
+                }
+            })
+            .collect();
+        let cand = plan_for(chunks, links, prefill_ms_per_tok, sources);
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                cand.cost.total_s < b.cost.total_s
+                    || (cand.cost.total_s == b.cost.total_s && cand.fetched() < b.fetched())
+            }
+        };
+        if better {
+            best = Some(cand);
+        }
+    }
+    best.unwrap_or(ChunkPlan {
+        sources: Vec::new(),
+        cost: PlanCost { total_s: 0.0, transfer_s: 0.0, recompute_s: 0.0 },
+    })
+}
+
+/// The executable planner: scan every split point `s`, recomputing the
+/// prefix `[0, s)` and fetching the suffix `[s, k)` (causal attention
+/// forbids recomputing a chunk whose predecessors are absent).  Both
+/// extremes are in the scan — `s = 0` is all-fetch, `s = k` is
+/// all-recompute — so the split plan never loses to either.  Ties prefer
+/// the larger `s` (fewer fetched chunks, fewer wire bytes).
+pub fn plan_split(
+    chunks: &[ChunkCost],
+    links: &[LinkCost],
+    prefill_ms_per_tok: f64,
+) -> ChunkPlan {
+    let k = chunks.len();
+    let mut best: Option<ChunkPlan> = None;
+    for s in 0..=k {
+        let sources: Vec<ChunkSource> = (0..k)
+            .map(|c| if c < s { ChunkSource::Recompute } else { ChunkSource::Fetch })
+            .collect();
+        let cand = plan_for(chunks, links, prefill_ms_per_tok, sources);
+        let better = match &best {
+            None => true,
+            Some(b) => cand.cost.total_s <= b.cost.total_s, // tie -> larger s
+        };
+        if better {
+            best = Some(cand);
+        }
+    }
+    best.expect("k+1 >= 1 candidates")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devicemodel::DeviceProfile;
+
+    fn uniform(k: usize, wire_bytes: usize, tokens: usize) -> Vec<ChunkCost> {
+        vec![ChunkCost { wire_bytes, tokens }; k]
+    }
+
+    fn wifi() -> LinkCost {
+        LinkCost::from_link(&LinkModel::wifi4_2g4())
+    }
+
+    #[test]
+    fn plan_mode_names_roundtrip() {
+        for m in [PlanMode::Range, PlanMode::Chunk] {
+            assert_eq!(PlanMode::by_name(m.name()), Some(m));
+        }
+        assert_eq!(PlanMode::by_name("mixed"), Some(PlanMode::Chunk));
+        assert!(PlanMode::by_name("per-token").is_none());
+    }
+
+    #[test]
+    fn cost_extremes_match_single_feeder() {
+        let chunks = uniform(4, 100_000, 32);
+        let links = [wifi()];
+        let p = 8.0; // ms/tok
+        let all_fetch = vec![ChunkSource::Fetch; 4];
+        let c = cost_of(&chunks, &links, p, &all_fetch);
+        assert_eq!(c.recompute_s, 0.0);
+        let expect = 0.270 + 400_000.0 / (30.4e6 / 8.0);
+        assert!((c.transfer_s - expect).abs() < 1e-9, "{c:?}");
+        assert_eq!(c.total_s, c.transfer_s);
+        let all_re = vec![ChunkSource::Recompute; 4];
+        let c = cost_of(&chunks, &links, p, &all_re);
+        assert_eq!(c.transfer_s, 0.0);
+        assert!((c.recompute_s - 128.0 * 8.0 / 1e3).abs() < 1e-12, "{c:?}");
+    }
+
+    #[test]
+    fn fetch_without_links_is_infinite() {
+        let chunks = uniform(2, 1000, 8);
+        let c = cost_of(&chunks, &[], 10.0, &[ChunkSource::Fetch, ChunkSource::Recompute]);
+        assert!(c.transfer_s.is_infinite());
+        let c = cost_of(&chunks, &[], 10.0, &[ChunkSource::Recompute; 2]);
+        assert!(c.transfer_s == 0.0 && c.total_s.is_finite());
+    }
+
+    #[test]
+    fn loopback_plans_all_fetch_on_any_real_device() {
+        let chunks = uniform(6, 500_000, 64);
+        let links = [LinkCost::from_link(&LinkModel::loopback())];
+        for planner in [plan_exhaustive, plan_split] {
+            let plan = planner(&chunks, &links, DeviceProfile::pi5_4gb().prefill_ms_per_tok);
+            assert_eq!(plan.fetched(), 6, "free wire beats any recompute: {plan:?}");
+            assert_eq!(plan.cost.total_s, 0.0);
+        }
+    }
+
+    #[test]
+    fn host_device_plans_all_recompute_under_pure_model() {
+        // prefill rate 0 makes recompute free — the *model* says compute
+        // everything, which is why callers gate on models_recompute()
+        let chunks = uniform(4, 1_000_000, 32);
+        let plan = plan_exhaustive(&chunks, &[wifi()], 0.0);
+        assert_eq!(plan.recomputed(), 4);
+        assert!(!DeviceProfile::host().models_recompute());
+        assert!(DeviceProfile::pi5_4gb().models_recompute());
+    }
+
+    #[test]
+    fn slow_link_fast_device_yields_mixed_plan() {
+        // pi5-class prefill (~8 ms/tok) against paper Wi-Fi, long prefix of
+        // chunky state: the binary decision is provably wrong here
+        let chunks = uniform(8, 1_048_576, 32); // 8 MB total, 256 tokens
+        let links = [wifi()];
+        let p = DeviceProfile::pi5_4gb().prefill_ms_per_tok;
+        let plan = plan_split(&chunks, &links, p);
+        let all_fetch = cost_of(&chunks, &links, p, &vec![ChunkSource::Fetch; 8]);
+        let all_re = cost_of(&chunks, &links, p, &vec![ChunkSource::Recompute; 8]);
+        assert!(plan.is_mixed(), "{plan:?}");
+        assert!(plan.cost.total_s < all_fetch.total_s);
+        assert!(plan.cost.total_s < all_re.total_s);
+    }
+
+    #[test]
+    fn split_plan_never_worse_than_either_extreme() {
+        let p = 3.7;
+        for k in 0..10usize {
+            let chunks: Vec<ChunkCost> = (0..k)
+                .map(|i| ChunkCost { wire_bytes: 10_000 + 7013 * i, tokens: 16 + i })
+                .collect();
+            let links = [wifi(), LinkCost { goodput_bps: 1e6, rtt_s: 0.05 }];
+            let plan = plan_split(&chunks, &links, p);
+            for extreme in [ChunkSource::Fetch, ChunkSource::Recompute] {
+                let c = cost_of(&chunks, &links, p, &vec![extreme; k]);
+                assert!(
+                    plan.cost.total_s <= c.total_s + 1e-12,
+                    "k={k} {extreme:?}: {plan:?} vs {c:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustive_matches_split_on_homogeneous_single_link() {
+        // with one link and identical chunks only the counts matter, so the
+        // causality-constrained split scan reaches the unconstrained optimum
+        let links = [wifi()];
+        for p in [1.0, 8.0, 50.0, 192.0] {
+            for k in 0..=8usize {
+                let chunks = uniform(k, 300_000, 24);
+                let e = plan_exhaustive(&chunks, &links, p);
+                let s = plan_split(&chunks, &links, p);
+                assert!(
+                    (e.cost.total_s - s.cost.total_s).abs() < 1e-12,
+                    "p={p} k={k}: {e:?} vs {s:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_split_point_is_prefix_shaped() {
+        let chunks = uniform(8, 1_048_576, 32);
+        let plan = plan_split(&chunks, &[wifi()], DeviceProfile::pi5_4gb().prefill_ms_per_tok);
+        let s = plan.split_point();
+        for (c, src) in plan.sources.iter().enumerate() {
+            let want = if c < s { ChunkSource::Recompute } else { ChunkSource::Fetch };
+            assert_eq!(*src, want, "chunk {c} of split {s}");
+        }
+        assert_eq!(plan.recomputed(), s);
+    }
+
+    #[test]
+    fn empty_chunk_set_plans_trivially() {
+        let plan = plan_exhaustive(&[], &[wifi()], 8.0);
+        assert!(plan.sources.is_empty());
+        assert_eq!(plan.cost.total_s, 0.0);
+        let plan = plan_split(&[], &[wifi()], 8.0);
+        assert!(plan.sources.is_empty());
+    }
+
+    #[test]
+    fn oversize_exhaustive_delegates_to_split() {
+        let chunks = uniform(EXHAUSTIVE_MAX_CHUNKS + 3, 200_000, 16);
+        let e = plan_exhaustive(&chunks, &[wifi()], 8.0);
+        let s = plan_split(&chunks, &[wifi()], 8.0);
+        assert_eq!(e, s);
+    }
+}

@@ -5,6 +5,10 @@
 //!   this loses on the high-end device (Redis 2.89 s vs P-decode 2.69 s).
 //!   Its §5.3 break-even discussion is turned here into an explicit runtime
 //!   policy — [`FetchPolicy::BreakEven`] — evaluated in the ablation bench.
+//!   Both variants decide for the *whole* matched range at once; the
+//!   per-chunk mixed planner in [`super::plan`] subsumes them (`--plan
+//!   chunk`), and this all-or-nothing form is kept as its `--plan range`
+//!   ablation baseline.
 //! * [`PeerPlanner`] — with N cache boxes instead of one, three decisions
 //!   appear that a single-box system never had to make: how to *split* a
 //!   matched chunk set across the peers that claim it (goodput-weighted

@@ -94,6 +94,15 @@ impl DeviceProfile {
         self.prefill_ms_per_tok == 0.0 && self.decode_ms_per_tok == 0.0
     }
 
+    /// Whether this device's prefill side is modelled at all.  The host
+    /// profile prefills at rate 0, which would make local recompute free
+    /// under any cost model — per-chunk fetch planning
+    /// (`coordinator::plan`) only engages when this holds, so native runs
+    /// keep the historical all-fetch restore path.
+    pub fn models_recompute(&self) -> bool {
+        self.prefill_ms_per_tok > 0.0
+    }
+
     // -- analytic model (no execution; used for full-population sweeps) -----
 
     pub fn prefill_time(&self, tokens: usize) -> Duration {

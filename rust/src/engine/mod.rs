@@ -123,6 +123,25 @@ impl Engine {
         Ok(last_logits)
     }
 
+    /// Prefill the first `rows` prompt tokens from scratch into a fresh
+    /// state (paced).  The local-recompute feeder of the chunk-level fetch
+    /// plan (`coordinator::plan`) uses this to regenerate the cheap prefix
+    /// of a matched range while the expensive suffix is still on the wire;
+    /// phase attribution stays with the caller (the feeder's wall time is
+    /// already inside the fetch's Redis window).
+    pub fn prefill_prefix(
+        &self,
+        tokens: &[u32],
+        rows: usize,
+        pacer: &mut Pacer,
+    ) -> Result<KvState> {
+        let rows = rows.min(tokens.len());
+        let mut state = self.fresh_state();
+        let mut bd = PhaseBreakdown::default();
+        self.prefill_suffix(&mut state, &tokens[..rows], pacer, &mut bd)?;
+        Ok(state)
+    }
+
     /// First-token logits for a prompt whose state is already (fully or
     /// partially) cached.  Partial → prefill the suffix (attributed to
     /// P-decode).  Full → one re-derivation decode step (attributed to

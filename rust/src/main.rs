@@ -19,7 +19,7 @@ use anyhow::{anyhow, Result};
 
 use edgecache::coordinator::{
     CacheBox, DeadlineBudget, EdgeClient, EdgeClientConfig, FetchPolicy, PeerConfig,
-    PlacementKind,
+    PlacementKind, PlanMode,
 };
 use edgecache::devicemodel::DeviceProfile;
 use edgecache::engine::Engine;
@@ -121,6 +121,12 @@ fn client_config(m: &edgecache::util::cli::Matches, server: Option<String>) -> R
         partial_matching: !m.flag("no-partial"),
         use_catalog: !m.flag("no-catalog"),
         fetch_policy: if m.flag("break-even") { FetchPolicy::BreakEven } else { FetchPolicy::Always },
+        // the parser already validated the value against the choice list
+        plan: PlanMode::by_name(&m.str("plan"))
+            .ok_or_else(|| anyhow!("unknown --plan (chunk|range)"))?,
+        probe_negative_ttl: std::time::Duration::from_millis(
+            m.u64("negcache-ms").map_err(|e| anyhow!(e))?,
+        ),
         min_hit_tokens: 1,
         sync_interval: Some(std::time::Duration::from_millis(200)),
         // liveness is on by default for the real tool: a stalled box
@@ -164,6 +170,20 @@ fn client_cmd_spec(name: &'static str, about: &'static str) -> Command {
              marks the peer Suspect and re-plans (0 = blocking sockets)",
         )
         .opt("connect-ms", "500", "connect timeout for peer dials")
+        .choice(
+            "plan",
+            &["chunk", "range"],
+            "chunk",
+            "fetch planning granularity: chunk prices each ECS3 chunk \
+             (fetch vs local recompute, mixed plans), range keeps the \
+             all-or-nothing break-even decision (PR 3 ablation)",
+        )
+        .opt(
+            "negcache-ms",
+            "1500",
+            "fallback-probe negative-cache TTL; a missed probe is not \
+             retried for this long (0 = probe every time)",
+        )
         .flag("no-partial", "disable partial matching (full-prompt keys only)")
         .flag("no-catalog", "disable the local Bloom catalog (probe server)")
         .flag("break-even", "fetch only when the transfer beats local prefill")
@@ -218,6 +238,7 @@ fn run_trace(
         c.refresh_stats();
         println!(
             "client {} [{}]: {} queries, hits by case {:?}, FPs {}, down {} KB, up {} KB, \
+             chunks {} fetched / {} recomputed ({} mixed plans), \
              fallback probes {} ({} hits, {} suppressed), repairs {}, \
              timeouts {}, suspects {}, heals {}",
             c.cfg.name,
@@ -227,6 +248,9 @@ fn run_trace(
             c.stats.false_positives,
             c.stats.bytes_down / 1024,
             c.stats.bytes_up / 1024,
+            c.stats.chunks_fetched,
+            c.stats.chunks_recomputed,
+            c.stats.plan_mixed,
             c.stats.fallback_probes,
             c.stats.fallback_probe_hits,
             c.stats.probes_suppressed,
@@ -237,7 +261,8 @@ fn run_trace(
         );
         for l in c.peer_ledgers() {
             println!(
-                "  peer {}: down {} KB, up {} KB, shares {} ({} failed), uploads {} (+{} replicas), \
+                "  peer {}: down {} KB, up {} KB, shares {} ({} failed, {} chunks), \
+                 uploads {} (+{} replicas), \
                  placed {}, probes {}, repairs {}, {} sync rounds, \
                  {} heartbeats, {} heals, {} timeouts",
                 l.addr,
@@ -245,6 +270,7 @@ fn run_trace(
                 l.bytes_up / 1024,
                 l.fetch_shares,
                 l.share_failures,
+                l.chunks_served,
                 l.uploads,
                 l.replica_uploads,
                 l.placed_entries,

@@ -174,6 +174,11 @@ pub struct PeerLedger {
     /// Fetch shares this peer failed mid-stream (dead conn, short or
     /// corrupt reply) — the planner re-plans these onto survivors.
     pub share_failures: u64,
+    /// Individual ECS3 chunks this peer delivered to completion across all
+    /// its fetch shares — the per-peer denominator of the chunk-level fetch
+    /// plan (`coordinator::plan`): together with a client's
+    /// `chunks_recomputed` it answers "who actually produced each chunk".
+    pub chunks_served: u64,
     /// Uploads this peer received as placement primary.
     pub uploads: u64,
     /// Uploads this peer received as a replica copy.

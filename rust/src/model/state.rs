@@ -720,6 +720,17 @@ impl KvState {
             .with_chunk_tokens(chunk_tokens)
     }
 
+    /// Raw token-major payload for rows `[t0, t0+rows)` — exactly the
+    /// `rows * token_stride()` bytes [`StateAssembler::commit_chunk`]
+    /// expects for a chunk covering those rows, uncompressed.  This is how
+    /// a locally recomputed state feeds chunks into a streaming assembly
+    /// alongside per-peer reply streams (`coordinator::plan`).
+    pub fn chunk_payload(&self, t0: usize, rows: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(rows * 2 * self.n_layers * self.row_elems() * 4);
+        self.gather_rows_into(t0, rows, &mut out);
+        out
+    }
+
     /// Gather token rows `[t0, t0+rows)` (token-major) into `dst`.
     fn gather_rows_into(&self, t0: usize, rows: usize, dst: &mut Vec<u8>) {
         let row = self.row_elems();

@@ -223,6 +223,10 @@ pub fn real_table23(
         partial_matching: true,
         use_catalog: true,
         fetch_policy: crate::coordinator::FetchPolicy::Always,
+        // the paper's Case-5 rows measure the pure fetch path, so the
+        // chunk planner is ablated here even under device pacing
+        plan: crate::coordinator::PlanMode::Range,
+        probe_negative_ttl: std::time::Duration::from_millis(1500),
         min_hit_tokens: 1,
         sync_interval: None,
         deadline: None,

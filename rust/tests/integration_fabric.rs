@@ -6,13 +6,14 @@
 //! `EdgeClient` flow and skips when `artifacts/tiny` is absent.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use edgecache::coordinator::fabric::{fetch_prefix_multi, Peer, PeerConfig};
+use edgecache::coordinator::fabric::{fetch_prefix_multi, LocalRecompute, Peer, PeerConfig};
 use edgecache::coordinator::{
-    CacheBox, EdgeClient, EdgeClientConfig, HitCase, PeerPlanner, PlacementKind,
+    CacheBox, DeadlineBudget, EdgeClient, EdgeClientConfig, HitCase, PeerPlanner, PlacementKind,
 };
 use edgecache::engine::Engine;
-use edgecache::model::state::{Compression, KvState};
+use edgecache::model::state::{BlobLayout, Compression, KvState};
 use edgecache::netsim::LinkModel;
 use edgecache::util::rng::Rng;
 
@@ -67,6 +68,7 @@ fn multi_source_fetch_matches_single_source() {
             let mut claimers = vec![(0usize, &mut p0)];
             fetch_prefix_multi(
                 &mut claimers, &planner, b"state:e", 24, compressed, ct, m, HASH, DIMS,
+                None,
             )
             .expect("single-source fetch")
         };
@@ -80,6 +82,7 @@ fn multi_source_fetch_matches_single_source() {
             let mut claimers = vec![(0usize, &mut pa), (1usize, &mut pb)];
             fetch_prefix_multi(
                 &mut claimers, &planner, b"state:e", 24, compressed, ct, m, HASH, DIMS,
+                None,
             )
             .expect("dual-source fetch")
         };
@@ -125,7 +128,7 @@ fn dead_share_peer_replans_onto_survivor() {
     let fetch = {
         let mut claimers = vec![(0usize, &mut pa), (1usize, &mut pb)];
         fetch_prefix_multi(
-            &mut claimers, &planner, b"state:e", 32, true, ct, m, HASH, DIMS,
+            &mut claimers, &planner, b"state:e", 32, true, ct, m, HASH, DIMS, None,
         )
         .expect("survivor must complete the fetch")
     };
@@ -164,7 +167,7 @@ fn dead_head_peer_rotates_then_survivor_serves() {
     let fetch = {
         let mut claimers = vec![(0usize, &mut pa), (1usize, &mut pb)];
         fetch_prefix_multi(
-            &mut claimers, &planner, b"state:e", 32, false, ct, m, HASH, DIMS,
+            &mut claimers, &planner, b"state:e", 32, false, ct, m, HASH, DIMS, None,
         )
         .expect("head rotation must find the survivor")
     };
@@ -190,9 +193,185 @@ fn no_live_claimer_degrades_to_none_not_corruption() {
     let planner = PeerPlanner::default();
     let mut claimers = vec![(0usize, &mut p)];
     let fetch = fetch_prefix_multi(
-        &mut claimers, &planner, b"state:e", 16, false, 4, 12, HASH, DIMS,
+        &mut claimers, &planner, b"state:e", 16, false, 4, 12, HASH, DIMS, None,
     );
     assert!(fetch.is_none(), "all-dead fabric must fail, never restore junk");
+}
+
+// ---------------------------------------------------------------------------
+// mixed fetch/recompute plans (the `coordinator::plan` chunk planner)
+// ---------------------------------------------------------------------------
+
+/// A hand-built local feeder: serves the true row payloads straight out of
+/// `st`, shaped exactly like the client's engine-backed feeder output
+/// (stored-rows geometry per the `commit_chunk` contract).
+fn truth_feeder<'a>(
+    st: &'a KvState,
+    ct: usize,
+    total: usize,
+) -> impl FnMut(&[usize]) -> Option<Vec<(usize, Vec<u8>)>> + 'a {
+    move |chunks: &[usize]| {
+        Some(
+            chunks
+                .iter()
+                .map(|&c| {
+                    let t0 = c * ct;
+                    (c, st.chunk_payload(t0, ct.min(total - t0)))
+                })
+                .collect(),
+        )
+    }
+}
+
+#[test]
+fn dead_peer_orphans_rescue_onto_local_recompute() {
+    // peer B dies after the plan names it and the planner has *zero*
+    // re-plan budget: its orphaned stripe must go to the local feeder —
+    // not a survivor — the restore stays bit-exact, and the dead peer
+    // costs at most one deadline-budget op of wall time
+    let st = filled_state(32, 19);
+    let (ct, m) = (4, 32);
+    let blob = st.serialize_prefix_opts(32, HASH, Compression::None, ct);
+    let b = DeadlineBudget::from_millis(200, 250);
+
+    let cb_a = CacheBox::start_local().unwrap();
+    let cb_b = CacheBox::start_local().unwrap();
+    for cb in [&cb_a, &cb_b] {
+        let mut c = edgecache::kvstore::KvClient::connect(&cb.addr()).unwrap();
+        c.set(b"state:e", &blob).unwrap();
+    }
+    let mut pa =
+        Peer::connect(PeerConfig::new(cb_a.addr()).with_deadline(b), LinkModel::loopback(), 21, 1)
+            .unwrap();
+    let mut pb =
+        Peer::connect(PeerConfig::new(cb_b.addr()).with_deadline(b), LinkModel::loopback(), 22, 1)
+            .unwrap();
+    cb_b.shutdown(); // B dies between the catalog claim and the fetch
+
+    // no survivor retries allowed: the only way out is the feeder
+    let planner = PeerPlanner { max_replan_rounds: 0 };
+    let mut feed = truth_feeder(&st, ct, 32);
+    let t0 = Instant::now();
+    let fetch = {
+        let mut claimers = vec![(0usize, &mut pa), (1usize, &mut pb)];
+        fetch_prefix_multi(
+            &mut claimers, &planner, b"state:e", 32, false, ct, m, HASH, DIMS,
+            Some(LocalRecompute { feed: &mut feed, prefill_ms_per_tok: 50.0 }),
+        )
+        .expect("orphaned chunks must be rescued by local recompute")
+    };
+    let el = t0.elapsed();
+    assert!(
+        fetch.chunks_recomputed >= 1 && fetch.chunks_fetched >= 1,
+        "B's stripe must go local while A's still rides the wire: {} fetched / {} recomputed",
+        fetch.chunks_fetched,
+        fetch.chunks_recomputed
+    );
+    assert_eq!(
+        fetch.chunks_fetched + fetch.chunks_recomputed,
+        8,
+        "every chunk has exactly one source"
+    );
+    assert!(fetch.share_failures >= 1);
+    assert!(pb.ledger.share_failures >= 1);
+    assert!(
+        el < b.connect + 2 * b.op,
+        "a dead stripe peer costs at most ~one deadline op, took {el:?}"
+    );
+    let want = expected_prefix(&st, m, ct, Compression::None);
+    assert_eq!(fetch.state.n_tokens, m);
+    assert_eq!(fetch.state.k, want.k, "rescued restore must be bit-exact");
+    assert_eq!(fetch.state.v, want.v);
+    cb_a.shutdown();
+}
+
+#[test]
+fn corrupt_chunk_degrades_to_recompute_not_fallback() {
+    // one stored chunk's bytes are flipped on the box: the share
+    // crc-rejects exactly that chunk, prior chunks stay committed, and
+    // with a feeder attached the fetch degrades the rejected tail to
+    // local recompute instead of abandoning the whole range
+    let st = filled_state(32, 23);
+    let (ct, m) = (4, 32);
+    let mut blob = st.serialize_prefix_opts(32, HASH, Compression::None, ct);
+    let lo = BlobLayout::new(HASH, DIMS.0, DIMS.2, DIMS.3).with_chunk_tokens(ct);
+    // first byte of chunk 3's stored rows (uncompressed: ct * stride each)
+    let bad = lo.payload_off(32) + 3 * ct * lo.token_stride();
+    blob[bad] ^= 0x5A;
+
+    let cb = CacheBox::start_local().unwrap();
+    {
+        let mut c = edgecache::kvstore::KvClient::connect(&cb.addr()).unwrap();
+        c.set(b"state:e", &blob).unwrap();
+    }
+    let mut p = peer_for(&cb, 24);
+    let planner = PeerPlanner::default();
+    let mut feed = truth_feeder(&st, ct, 32);
+    let fetch = {
+        let mut claimers = vec![(0usize, &mut p)];
+        fetch_prefix_multi(
+            &mut claimers, &planner, b"state:e", 32, false, ct, m, HASH, DIMS,
+            Some(LocalRecompute { feed: &mut feed, prefill_ms_per_tok: 5.0 }),
+        )
+        .expect("a corrupt chunk must degrade to recompute, not fail the range")
+    };
+    assert_eq!(fetch.chunks_fetched, 3, "chunks before the corruption stay fetched");
+    assert_eq!(fetch.chunks_recomputed, 5, "the corrupt chunk and its tail go local");
+    assert!(fetch.share_failures >= 1, "the crc reject is a share failure");
+    // the feeder supplied the true rows for every rejected chunk
+    let want = expected_prefix(&st, m, ct, Compression::None);
+    assert_eq!(fetch.state.n_tokens, m);
+    assert_eq!(fetch.state.k, want.k, "degraded restore must be bit-exact");
+    assert_eq!(fetch.state.v, want.v);
+    cb.shutdown();
+}
+
+#[test]
+fn slow_link_fast_device_plans_genuinely_mixed() {
+    // the planner's reason to exist: over a slow link with a fast device
+    // the cost model must split the range — the cheap prefix is
+    // recomputed locally while the tail is fetched, overlapped, and the
+    // result is still bit-exact
+    let st = filled_state(32, 29);
+    let (ct, m) = (4, 32);
+    let blob = st.serialize_prefix_opts(32, HASH, Compression::None, ct);
+    let cb = CacheBox::start_local().unwrap();
+    {
+        let mut c = edgecache::kvstore::KvClient::connect(&cb.addr()).unwrap();
+        c.set(b"state:e", &blob).unwrap();
+    }
+    // 512 B chunks over ~100 kB/s + 5 ms RTT vs 4 ms/chunk recompute:
+    // neither extreme is optimal (all-fetch ≈ 46 ms, all-recompute 32 ms,
+    // the s=5 split ≈ 20 ms)
+    let slow = LinkModel {
+        name: "test-slow",
+        goodput_bps: 100_000.0,
+        rtt: Duration::from_millis(5),
+        jitter_frac: 0.0,
+    };
+    let mut p = Peer::connect(PeerConfig::new(cb.addr()), slow, 25, 1).unwrap();
+    let planner = PeerPlanner::default();
+    let mut feed = truth_feeder(&st, ct, 32);
+    let fetch = {
+        let mut claimers = vec![(0usize, &mut p)];
+        fetch_prefix_multi(
+            &mut claimers, &planner, b"state:e", 32, false, ct, m, HASH, DIMS,
+            Some(LocalRecompute { feed: &mut feed, prefill_ms_per_tok: 1.0 }),
+        )
+        .expect("mixed-plan fetch")
+    };
+    assert!(
+        fetch.chunks_fetched >= 1 && fetch.chunks_recomputed >= 1,
+        "plan must mix on this cell: {} fetched / {} recomputed",
+        fetch.chunks_fetched, fetch.chunks_recomputed
+    );
+    assert_eq!(fetch.share_failures, 0, "no failures: this split is *planned*");
+    assert_eq!(fetch.re_plans, 0);
+    let want = expected_prefix(&st, m, ct, Compression::None);
+    assert_eq!(fetch.state.n_tokens, m);
+    assert_eq!(fetch.state.k, want.k, "mixed restore must be bit-exact");
+    assert_eq!(fetch.state.v, want.v);
+    cb.shutdown();
 }
 
 // ---------------------------------------------------------------------------

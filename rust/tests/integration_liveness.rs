@@ -120,7 +120,7 @@ fn stalled_peer_cannot_delay_restore_beyond_one_budget() {
         let f = {
             let mut cl = vec![(1usize, &mut real)];
             fetch_prefix_multi(
-                &mut cl, &planner, b"state:x", rows, false, CT, m, HASH, DIMS,
+                &mut cl, &planner, b"state:x", rows, false, CT, m, HASH, DIMS, None,
             )
             .expect("control fetch")
         };
@@ -136,7 +136,7 @@ fn stalled_peer_cannot_delay_restore_beyond_one_budget() {
         let f = {
             let mut cl = vec![(0usize, &mut silent), (1usize, &mut real)];
             fetch_prefix_multi(
-                &mut cl, &planner, b"state:x", rows, false, CT, m, HASH, DIMS,
+                &mut cl, &planner, b"state:x", rows, false, CT, m, HASH, DIMS, None,
             )
         }
         .unwrap_or_else(|| panic!("fetch {i} must restore via the live replica"));

@@ -1,0 +1,248 @@
+//! Oracle suite for the per-chunk fetch planner (`coordinator::plan`).
+//!
+//! The planner's claim is *optimality under its own cost model*, so the
+//! tests pin it against an oracle that cannot be wrong by construction:
+//! brute-force enumeration of every `2^k` fetch/recompute assignment
+//! through the same public [`cost_of`] function.  On top of the oracle:
+//!
+//! * seeded property sweeps over heterogeneous chunk sizes, link sets and
+//!   device rates (the harness prints a replayable seed on failure);
+//! * monotonicity laws on homogeneous-chunk single-link grids (the
+//!   restriction keeps the laws exact — with heterogeneous chunks a faster
+//!   link can legitimately swap *which* chunks it fetches): a faster link
+//!   only grows the fetch set, a faster device only grows the recompute
+//!   set;
+//! * dominance everywhere: a plan's cost never exceeds the cheaper of
+//!   all-fetch and all-recompute.
+
+use edgecache::coordinator::plan::{
+    cost_of, plan_exhaustive, plan_split, ChunkCost, ChunkSource, LinkCost,
+};
+use edgecache::devicemodel::DeviceProfile;
+use edgecache::netsim::LinkModel;
+use edgecache::util::prop::{run_prop, Gen};
+
+/// Relative-tolerance comparison for modelled seconds.
+fn leq(a: f64, b: f64) -> bool {
+    a <= b * (1.0 + 1e-9) + 1e-12
+}
+
+fn close(a: f64, b: f64) -> bool {
+    leq(a, b) && leq(b, a)
+}
+
+/// The oracle: argmin over every possible assignment, priced through the
+/// same public cost function the planners use.
+fn brute_force_min(chunks: &[ChunkCost], links: &[LinkCost], rate: f64) -> f64 {
+    let k = chunks.len();
+    assert!(k <= 16, "oracle enumeration is 2^k");
+    let mut best = f64::INFINITY;
+    for mask in 0u32..(1 << k) {
+        let sources: Vec<ChunkSource> = (0..k)
+            .map(|i| {
+                if mask & (1 << i) != 0 { ChunkSource::Fetch } else { ChunkSource::Recompute }
+            })
+            .collect();
+        best = best.min(cost_of(chunks, links, rate, &sources).total_s);
+    }
+    best
+}
+
+fn gen_chunks(g: &mut Gen, k: usize) -> Vec<ChunkCost> {
+    (0..k)
+        .map(|_| ChunkCost {
+            wire_bytes: g.usize_in(64, 2_000_000),
+            tokens: g.usize_in(1, 64),
+        })
+        .collect()
+}
+
+fn gen_links(g: &mut Gen) -> Vec<LinkCost> {
+    let n = g.usize_in(1, 3);
+    (0..n)
+        .map(|_| LinkCost {
+            goodput_bps: g.usize_in(10_000, 200_000_000) as f64,
+            rtt_s: g.usize_in(0, 500) as f64 / 1e3,
+        })
+        .collect()
+}
+
+/// ms/token prefill rate: spans sub-ms hosts to Pi-Zero-class devices.
+fn gen_rate(g: &mut Gen) -> f64 {
+    g.usize_in(1, 250_000) as f64 / 1e3
+}
+
+#[test]
+fn exhaustive_planner_matches_brute_force_oracle() {
+    run_prop("plan-exhaustive-oracle", |g| {
+        let k = g.usize_in(1, 10);
+        let chunks = gen_chunks(g, k);
+        let links = gen_links(g);
+        let rate = gen_rate(g);
+        let plan = plan_exhaustive(&chunks, &links, rate);
+        // the plan's reported cost is its own sources re-priced...
+        let repriced = cost_of(&chunks, &links, rate, &plan.sources).total_s;
+        assert!(
+            close(plan.cost.total_s, repriced),
+            "reported {} != repriced {repriced}",
+            plan.cost.total_s
+        );
+        // ...and no assignment whatsoever is cheaper
+        let oracle = brute_force_min(&chunks, &links, rate);
+        assert!(
+            close(plan.cost.total_s, oracle),
+            "planner {} vs oracle {oracle} (k={k}, rate={rate})",
+            plan.cost.total_s
+        );
+    });
+}
+
+#[test]
+fn split_planner_is_prefix_shaped_and_dominates_extremes() {
+    run_prop("plan-split-dominates", |g| {
+        let k = g.usize_in(1, 12);
+        let chunks = gen_chunks(g, k);
+        let links = gen_links(g);
+        let rate = gen_rate(g);
+        let plan = plan_split(&chunks, &links, rate);
+        // executable shape: causal prefill means recompute is a prefix
+        let s = plan.split_point();
+        for (i, src) in plan.sources.iter().enumerate() {
+            let want = if i < s { ChunkSource::Recompute } else { ChunkSource::Fetch };
+            assert_eq!(*src, want, "split plan must be recompute-prefix shaped");
+        }
+        // law: plan cost <= min(all-fetch, all-recompute)
+        let fetch = cost_of(&chunks, &links, rate, &vec![ChunkSource::Fetch; k]).total_s;
+        let rec = cost_of(&chunks, &links, rate, &vec![ChunkSource::Recompute; k]).total_s;
+        assert!(
+            leq(plan.cost.total_s, fetch.min(rec)),
+            "split plan {} must not lose to an extreme (fetch {fetch}, recompute {rec})",
+            plan.cost.total_s
+        );
+        // the split restriction can only cost, never gain, vs the oracle
+        let oracle = plan_exhaustive(&chunks, &links, rate);
+        assert!(
+            leq(oracle.cost.total_s, plan.cost.total_s),
+            "oracle {} cannot be worse than restricted split {}",
+            oracle.cost.total_s,
+            plan.cost.total_s
+        );
+    });
+}
+
+#[test]
+fn split_matches_exhaustive_on_homogeneous_chunks() {
+    // with identical chunks the cost depends only on *how many* are
+    // fetched, so the prefix restriction loses nothing: the split planner
+    // must reach the unrestricted optimum exactly
+    run_prop("plan-split-homogeneous-optimal", |g| {
+        let k = g.usize_in(1, 12);
+        let chunk = ChunkCost {
+            wire_bytes: g.usize_in(64, 2_000_000),
+            tokens: g.usize_in(1, 64),
+        };
+        let chunks = vec![chunk; k];
+        let links = vec![LinkCost {
+            goodput_bps: g.usize_in(10_000, 200_000_000) as f64,
+            rtt_s: g.usize_in(0, 500) as f64 / 1e3,
+        }];
+        let rate = gen_rate(g);
+        let split = plan_split(&chunks, &links, rate);
+        let oracle = plan_exhaustive(&chunks, &links, rate);
+        assert!(
+            close(split.cost.total_s, oracle.cost.total_s),
+            "homogeneous split {} != oracle {} (k={k}, rate={rate})",
+            split.cost.total_s,
+            oracle.cost.total_s
+        );
+    });
+}
+
+#[test]
+fn faster_link_only_grows_the_fetch_set() {
+    // homogeneous grid law: sweep goodput upward with everything else
+    // fixed — the number of fetched chunks must be non-decreasing
+    let chunks = vec![ChunkCost { wire_bytes: 551_584, tokens: 16 }; 12];
+    for rate in [2.0, 8.046, 50.0, 192.75] {
+        let mut last = 0usize;
+        for exp in 0..24 {
+            let goodput = 10_000.0 * 1.8f64.powi(exp);
+            let links = [LinkCost { goodput_bps: goodput, rtt_s: 0.27 }];
+            let f = plan_split(&chunks, &links, rate).fetched();
+            assert!(
+                f >= last,
+                "rate {rate}: goodput {goodput:.0} fetched {f} < previous {last}"
+            );
+            last = f;
+        }
+        // a slow device must end up fetching everything; a fast one may
+        // keep recomputing chunks the link's RTT floor makes free anyway
+        if rate > 100.0 {
+            assert_eq!(last, 12, "pi-zero-class prefill never beats a fast link");
+        }
+    }
+}
+
+#[test]
+fn faster_device_only_grows_the_recompute_set() {
+    // dual law: sweep the prefill rate downward (device gets faster) with
+    // the link fixed — the recompute set must be non-decreasing
+    let chunks = vec![ChunkCost { wire_bytes: 551_584, tokens: 16 }; 12];
+    for (_, link) in [
+        ("wifi", LinkCost::from_link(&LinkModel::wifi4_2g4())),
+        ("slow", LinkCost { goodput_bps: 250_000.0, rtt_s: 0.05 }),
+    ] {
+        let mut last = 0usize;
+        for exp in 0..24 {
+            let rate = 500.0 / 1.6f64.powi(exp); // ms/token, decreasing
+            let r = plan_split(&chunks, &[link], rate).recomputed();
+            assert!(
+                r >= last,
+                "rate {rate:.3} ms/tok recomputed {r} < previous {last}"
+            );
+            last = r;
+        }
+    }
+}
+
+#[test]
+fn no_links_forces_all_recompute() {
+    let chunks = vec![ChunkCost { wire_bytes: 1_000, tokens: 8 }; 6];
+    for plan in [
+        plan_split(&chunks, &[], 10.0),
+        plan_exhaustive(&chunks, &[], 10.0),
+    ] {
+        assert_eq!(plan.fetched(), 0, "fetching over no links costs +inf");
+        assert_eq!(plan.recomputed(), 6);
+        assert!(plan.cost.total_s.is_finite());
+    }
+}
+
+#[test]
+fn paper_cells_behave_as_the_ablation_claims() {
+    // the bench's headline cells, pinned: slow link + fast device mixes,
+    // slow device all-fetches, fast link all-fetches
+    let chunks = vec![ChunkCost { wire_bytes: 551_584, tokens: 16 }; 16];
+    let wifi = [LinkCost::from_link(&LinkModel::wifi4_2g4())];
+    let eth = [LinkCost::from_link(&LinkModel::ethernet_1g())];
+
+    let mixed = plan_split(&chunks, &wifi, DeviceProfile::pi5_4gb().prefill_ms_per_tok);
+    assert!(mixed.is_mixed(), "pi5 over wifi must split: {mixed:?}");
+    let fetch_all =
+        cost_of(&chunks, &wifi, DeviceProfile::pi5_4gb().prefill_ms_per_tok, &vec![
+            ChunkSource::Fetch;
+            16
+        ])
+        .total_s;
+    assert!(
+        mixed.cost.total_s < fetch_all * 0.99,
+        "the mixed plan must strictly beat all-fetch here"
+    );
+
+    let slow_dev =
+        plan_split(&chunks, &wifi, DeviceProfile::pi_zero_2w().prefill_ms_per_tok);
+    assert_eq!(slow_dev.recomputed(), 0, "pi-zero recompute never pays on wifi");
+
+    let fast_link = plan_split(&chunks, &eth, DeviceProfile::pi5_4gb().prefill_ms_per_tok);
+    assert_eq!(fast_link.recomputed(), 0, "gigabit fetch always pays");
+}
