@@ -93,3 +93,23 @@ bench-plan:
 # laws, prefix-shape invariant)
 test-plan:
     cd rust && cargo test -q --test plan_oracle
+
+# gossip bench, full sweep (emits BENCH_gossip.json): fleet-wide death
+# detection with SWIM digests vs the per-client-heartbeat ablation, an
+# asymmetric partition survived with zero false deaths (indirect probes +
+# incarnation refutation), and byte-fault schedules restored bit-exact via
+# the rescue ladder
+bench-gossip-full:
+    cd rust && cargo bench --bench gossip
+
+# the same bench with tiny parameters — the check.sh smoke gate: asserts
+# gossiped detection strictly beats per-client detection for >= 2 of 3
+# clients, zero false-positive deaths under the partition schedule, and
+# every byte fault ends in a bit-exact restored prefix
+bench-gossip:
+    cd rust && EDGECACHE_SMOKE=1 cargo bench --bench gossip
+
+# the SWIM law suite on its own (merge commutativity/idempotence/order
+# convergence, incarnation refutation, byte-fault rejection granularity)
+test-gossip:
+    cd rust && cargo test -q --test gossip_laws

@@ -1,0 +1,680 @@
+//! Gossip acceptance bench — fleet-converged health under packet-level
+//! chaos, the scripted harness for the PR 8 SWIM layer:
+//!
+//! * **(a) fleet-wide detection latency, gossip vs per-client ablation**: a
+//!   3-client × 3-box fleet with deliberately staggered heartbeat cadences
+//!   (one fast prober, two slow ones) loses a box for good.  With gossip,
+//!   the fast client's first-hand `Dead` verdict rides the boxes' gossip
+//!   blackboards and the slow clients adopt it on their *next* exchange —
+//!   well before their own strike budgets could conclude anything.  The
+//!   ablation runs the identical fleet with gossip off, so every client
+//!   pays its own detection latency.  Asserted: gossiped detection is
+//!   strictly faster for at least 2 of the 3 clients, fleet convergence is
+//!   strictly faster, and neither run ever declares a live box `Dead`.
+//! * **(b) asymmetric partition — refutation + indirect probes, zero false
+//!   deaths**: a [`ChaosProxy`] cuts exactly one client↔box edge while
+//!   every other path stays up.  The partitioned client's strike budget
+//!   keeps exhausting, but each circumstantial verdict is withheld by a
+//!   relay probe through a third box, the spreading suspicion is refuted by
+//!   the subject's bumped incarnation on the gossip wire, and the hit rate
+//!   through the partition stays 1.0 via head rotation.  Asserted: zero
+//!   `Dead` transitions fleet-wide, ≥ 1 probe save, ≥ 1 wire refutation.
+//! * **(c) byte-fault schedules end bit-exact**: seeded per-op byte faults
+//!   (`TruncateAt` / `CorruptByteAt` / `ResetAfter`) damage chunk replies
+//!   mid-stream; chunk crcs reject them, re-planning and the seeded local
+//!   rescue ladder fill the orphans, and every restore is asserted
+//!   bit-exact against the truth state.
+//!
+//! Emits `BENCH_gossip.json`.
+//!
+//! Env: EDGECACHE_SMOKE=1 (reduced sizes for the check.sh gate),
+//!      EDGECACHE_GOSSIP_JSON (output path, default BENCH_gossip.json).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use edgecache::coordinator::fabric::{fetch_prefix_multi, LocalRecompute, Peer, PeerConfig};
+use edgecache::coordinator::{
+    CacheBox, CatalogSync, DeadlineBudget, HealthPolicy, Membership, Outcome,
+    PeerHealth, PeerPlanner, RelayProber,
+};
+use edgecache::kvstore::KvClient;
+use edgecache::model::state::{Compression, KvState};
+use edgecache::netsim::{ChaosProxy, Fault, FaultPlan, FaultWindow, LinkModel};
+use edgecache::util::json::Json;
+use edgecache::util::rng::Rng;
+
+const HASH: &str = "bench-gossip";
+const DIMS: (usize, usize, usize, usize) = (4, 128, 2, 32); // 2 KB/token
+const CT: usize = 4;
+
+fn budget() -> DeadlineBudget {
+    DeadlineBudget::from_millis(300, 400)
+}
+
+fn bench_link() -> LinkModel {
+    LinkModel {
+        name: "lan-64m",
+        goodput_bps: 8e6,
+        rtt: Duration::from_millis(2),
+        jitter_frac: 0.0,
+    }
+}
+
+fn filled_state(total_rows: usize, seed: u64) -> KvState {
+    let (l, s, kh, d) = DIMS;
+    let mut st = KvState::zeroed(l, s, kh, d);
+    st.n_tokens = total_rows;
+    let mut rng = Rng::new(seed);
+    for x in st.k.iter_mut().take(total_rows * 2 * kh * d * l) {
+        *x = rng.f64() as f32;
+    }
+    for x in st.v.iter_mut().take(total_rows * 2 * kh * d * l) {
+        *x = rng.f64() as f32 - 0.5;
+    }
+    st
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+fn p95(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[((v.len() - 1) as f64 * 0.95).round() as usize]
+}
+
+fn wait_for(what: &str, timeout: Duration, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < timeout, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+// ------------------------------------------------------------- probers --
+
+/// One fleet client reduced to its membership plane: a heartbeat loop that
+/// pings every box each round (sync-loop classification: any failure is a
+/// circumstantial `HeartbeatMiss`, never a conclusive `IoDead`) and — when
+/// gossip is on — exchanges membership digests over the same connection,
+/// exactly what `CatalogSync::spawn_gossip` piggybacks on a real client.
+struct ProbeClient {
+    membership: Arc<Membership>,
+    /// First instant this client saw `deadly` as `Dead`.
+    detect: Arc<Mutex<Option<Instant>>>,
+    /// A peer outside `deadly` was declared `Dead` — a false positive.
+    false_death: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+fn spawn_probe_client(
+    dials: Vec<String>,
+    membership: Arc<Membership>,
+    deadly: Option<usize>,
+    interval: Duration,
+    gossip: bool,
+    stop: Arc<AtomicBool>,
+) -> ProbeClient {
+    let detect = Arc::new(Mutex::new(None));
+    let false_death = Arc::new(AtomicBool::new(false));
+    let (m, d, f) = (Arc::clone(&membership), Arc::clone(&detect), Arc::clone(&false_death));
+    let handle = std::thread::spawn(move || {
+        while !stop.load(Ordering::Acquire) {
+            for (j, addr) in dials.iter().enumerate() {
+                let outcome = match KvClient::connect(addr) {
+                    Ok(mut c) => {
+                        let _ = c.set_io_timeout(Some(Duration::from_millis(150)));
+                        match c.ping() {
+                            Ok(()) => {
+                                if gossip {
+                                    // best-effort, like the sync loop: an
+                                    // old box answers with an error, not a
+                                    // broken heartbeat
+                                    let _ = CatalogSync::gossip_once(&mut c, &m);
+                                }
+                                Outcome::HeartbeatOk
+                            }
+                            Err(_) => Outcome::HeartbeatMiss,
+                        }
+                    }
+                    Err(_) => Outcome::HeartbeatMiss,
+                };
+                m.report(j, outcome);
+            }
+            for j in 0..dials.len() {
+                if m.state(j) != PeerHealth::Dead {
+                    continue;
+                }
+                if deadly == Some(j) {
+                    let mut slot = d.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(Instant::now());
+                    }
+                } else {
+                    f.store(true, Ordering::Release);
+                }
+            }
+            std::thread::sleep(interval);
+        }
+    });
+    ProbeClient { membership, detect, false_death, handle: Some(handle) }
+}
+
+impl ProbeClient {
+    fn join(&mut self) {
+        if let Some(h) = self.handle.take() {
+            h.join().expect("probe client join");
+        }
+    }
+}
+
+// ------------------------------------------- (a) detection vs ablation --
+
+struct DetectOut {
+    /// Per-client `Dead(victim)` detection latency from the kill instant.
+    detect_ms: Vec<f64>,
+    /// Fleet convergence: the slowest client's detection latency.
+    converge_ms: f64,
+    false_deaths: bool,
+    adoptions: u64,
+}
+
+/// One detection run: 3 boxes, 3 membership-plane clients with staggered
+/// cadences (client 0 fast, clients 1-2 slow), box 2 killed for good.
+fn detection_run(gossip: bool, fast: Duration, slow: Duration) -> DetectOut {
+    let victim = 2usize;
+    let mut boxes: Vec<Option<CacheBox>> = (0..3)
+        .map(|_| Some(CacheBox::start_local().expect("box start")))
+        .collect();
+    let addrs: Vec<String> = boxes.iter().map(|b| b.as_ref().unwrap().addr()).collect();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut clients: Vec<ProbeClient> = [fast, slow, slow]
+        .iter()
+        .map(|&iv| {
+            spawn_probe_client(
+                addrs.clone(),
+                Membership::with_addrs(addrs.clone(), HealthPolicy::default()),
+                Some(victim),
+                iv,
+                gossip,
+                Arc::clone(&stop),
+            )
+        })
+        .collect();
+
+    // warm: every client must complete a few healthy rounds first
+    std::thread::sleep(slow.max(Duration::from_millis(200)) + slow / 2);
+    for c in &clients {
+        assert_eq!(c.membership.state(victim), PeerHealth::Up, "warm fleet must be Up");
+    }
+
+    let t_kill = Instant::now();
+    boxes[victim].take().expect("victim alive").shutdown();
+    wait_for("fleet-wide death detection", Duration::from_secs(20), || {
+        clients.iter().all(|c| c.detect.lock().unwrap().is_some())
+    });
+    stop.store(true, Ordering::Release);
+    for c in &mut clients {
+        c.join();
+    }
+
+    let detect_ms: Vec<f64> = clients
+        .iter()
+        .map(|c| ms(c.detect.lock().unwrap().expect("detected") - t_kill))
+        .collect();
+    let out = DetectOut {
+        converge_ms: detect_ms.iter().cloned().fold(0.0, f64::max),
+        false_deaths: clients.iter().any(|c| c.false_death.load(Ordering::Acquire)),
+        adoptions: clients.iter().map(|c| c.membership.gossip_adoptions()).sum(),
+        detect_ms,
+    };
+    for b in boxes.into_iter().flatten() {
+        b.shutdown();
+    }
+    out
+}
+
+fn detection_section(smoke: bool, json: &mut Vec<(&'static str, Json)>) {
+    // cadences are the experiment: the fast prober detects first-hand,
+    // the slow probers can only beat their own strike budgets via gossip
+    let (fast, slow) = if smoke {
+        (Duration::from_millis(15), Duration::from_millis(250))
+    } else {
+        (Duration::from_millis(20), Duration::from_millis(500))
+    };
+    let g = detection_run(true, fast, slow);
+    let a = detection_run(false, fast, slow);
+    println!(
+        "(a) detection latency (ms): gossip {:?} (converge {:.0}), \
+         ablation {:?} (converge {:.0}), {} gossip adoptions",
+        g.detect_ms.iter().map(|x| x.round()).collect::<Vec<_>>(),
+        g.converge_ms,
+        a.detect_ms.iter().map(|x| x.round()).collect::<Vec<_>>(),
+        a.converge_ms,
+        g.adoptions,
+    );
+    assert!(!g.false_deaths && !a.false_deaths, "no live box may be declared Dead");
+    let faster = g
+        .detect_ms
+        .iter()
+        .zip(&a.detect_ms)
+        .filter(|(g, a)| g < a)
+        .count();
+    assert!(
+        faster >= 2,
+        "gossip must strictly beat per-client detection for >= 2 of 3 clients \
+         (gossip {:?} vs ablation {:?})",
+        g.detect_ms,
+        a.detect_ms,
+    );
+    assert!(
+        g.converge_ms < a.converge_ms,
+        "fleet convergence must be strictly faster with gossip \
+         ({:.0} ms vs {:.0} ms)",
+        g.converge_ms,
+        a.converge_ms,
+    );
+    assert!(g.adoptions >= 1, "the slow clients must have adopted the verdict");
+    let arr = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+    json.push((
+        "detection",
+        Json::obj(vec![
+            ("fast_interval_ms", Json::Int(fast.as_millis() as i64)),
+            ("slow_interval_ms", Json::Int(slow.as_millis() as i64)),
+            (
+                "gossip",
+                Json::obj(vec![
+                    ("client_detect_ms", arr(&g.detect_ms)),
+                    ("converge_ms", Json::Num(g.converge_ms)),
+                    ("adoptions", Json::Int(g.adoptions as i64)),
+                    ("false_deaths", Json::Int(0)),
+                ]),
+            ),
+            (
+                "ablation",
+                Json::obj(vec![
+                    ("client_detect_ms", arr(&a.detect_ms)),
+                    ("converge_ms", Json::Num(a.converge_ms)),
+                    ("false_deaths", Json::Int(0)),
+                ]),
+            ),
+            ("clients_faster_with_gossip", Json::Int(faster as i64)),
+        ]),
+    ));
+}
+
+// --------------------------------------- (b) asymmetric partition -------
+
+fn partition_section(smoke: bool, json: &mut Vec<(&'static str, Json)>) {
+    let (rows, m) = (24usize, 16usize);
+    let n_fetches = if smoke { 5 } else { 10 };
+    let cb_a = CacheBox::start_local().expect("box a");
+    let cb_b = CacheBox::start_local().expect("box b");
+    let cb_v = CacheBox::start_local().expect("box v");
+    let st = filled_state(rows, 505);
+    let blob = st.serialize_prefix_opts(rows, HASH, Compression::None, CT);
+    let truth = KvState::restore(
+        &st.serialize_prefix_opts(m, HASH, Compression::None, CT),
+        HASH,
+        DIMS,
+    )
+    .expect("truth restore");
+    for cb in [&cb_a, &cb_v] {
+        KvClient::connect(&cb.addr())
+            .expect("seed conn")
+            .set(b"state:part", &blob)
+            .expect("seed");
+    }
+
+    // the partitioned client P reaches box V only through the proxy; its
+    // gossip identity stays the real box address so digests, relay probes
+    // and the boxes' self-refutation all speak about the same peer
+    let mut proxy = ChaosProxy::start(&cb_v.addr()).expect("proxy start");
+    let idents = vec![cb_a.addr(), cb_b.addr(), cb_v.addr()];
+    let p_dials = vec![cb_a.addr(), cb_b.addr(), proxy.addr().to_string()];
+    let p_cfgs = vec![
+        PeerConfig::new(cb_a.addr()).with_deadline(budget()),
+        PeerConfig::new(cb_b.addr()).with_deadline(budget()),
+        PeerConfig::new(proxy.addr().to_string())
+            .with_deadline(budget())
+            .with_gossip_addr(cb_v.addr()),
+    ];
+    let mp = Membership::with_addrs(idents.clone(), HealthPolicy::default());
+    mp.set_prober(Arc::new(RelayProber::new(&p_cfgs, budget())), 2);
+    let mq = Membership::with_addrs(idents.clone(), HealthPolicy::default());
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut p = spawn_probe_client(
+        p_dials,
+        Arc::clone(&mp),
+        None, // nobody is allowed to die in this scenario
+        Duration::from_millis(60),
+        true,
+        Arc::clone(&stop),
+    );
+    let mut q = spawn_probe_client(
+        idents,
+        Arc::clone(&mq),
+        None,
+        Duration::from_millis(50),
+        true,
+        Arc::clone(&stop),
+    );
+
+    std::thread::sleep(Duration::from_millis(300));
+    proxy.set_partitioned(true);
+
+    // hit-rate retention through the dark edge: P's fetches prefer the
+    // proxied box, rotate off the severed socket and restore from A.  The
+    // fetch peers deliberately carry no health sink — the membership plane
+    // is the heartbeat loop above, which classifies the partition
+    // circumstantially; a conclusive hot-path reset through the proxy is
+    // exactly the false verdict the probe/refutation layer is for.
+    let planner = PeerPlanner::default();
+    let mut pv = Peer::connect(p_cfgs[2].clone(), bench_link(), 61, 1).expect("peer v");
+    let mut pa = Peer::connect(p_cfgs[0].clone(), bench_link(), 62, 1).expect("peer a");
+    let mut lat = Vec::new();
+    let mut hits = 0usize;
+    for i in 0..n_fetches {
+        let t0 = Instant::now();
+        let f = {
+            let mut cl = vec![(2usize, &mut pv), (0usize, &mut pa)];
+            fetch_prefix_multi(
+                &mut cl, &planner, b"state:part", rows, false, CT, m, HASH, DIMS, None,
+            )
+        }
+        .unwrap_or_else(|| panic!("partitioned fetch {i} must restore via A"));
+        lat.push(ms(t0.elapsed()));
+        assert_eq!(f.state.k, truth.k, "partitioned fetch {i}: corrupt restore");
+        assert_eq!(f.state.v, truth.v);
+        hits += 1;
+    }
+
+    // the strike budget must keep exhausting and every circumstantial
+    // verdict must be withheld by a relay that still reaches V
+    wait_for("a probe save", Duration::from_secs(15), || mp.probe_saves() >= 1);
+    // P's suspicion spreads through the blackboards; V hears it on the
+    // clean client's exchange and refutes with a bumped incarnation, which
+    // the clean client adopts as a *wire* refutation
+    wait_for("a wire refutation", Duration::from_secs(15), || mq.refutations() >= 1);
+
+    proxy.set_partitioned(false);
+    wait_for("partition heal", Duration::from_secs(15), || {
+        mp.state(2) == PeerHealth::Up
+    });
+    stop.store(true, Ordering::Release);
+    p.join();
+    q.join();
+
+    let false_deaths = mp.deaths()
+        + mq.deaths()
+        + u64::from(p.false_death.load(Ordering::Acquire))
+        + u64::from(q.false_death.load(Ordering::Acquire));
+    println!(
+        "(b) asymmetric partition: {hits}/{n_fetches} hits (p95 {:.2} ms), \
+         {} probe saves / {} indirect probes, {} wire refutations, \
+         incarnation {}, {} false deaths",
+        p95(&lat),
+        mp.probe_saves(),
+        mp.indirect_probes(),
+        mq.refutations(),
+        mq.incarnation(2),
+        false_deaths,
+    );
+    assert_eq!(false_deaths, 0, "an asymmetric partition must never kill a live box");
+    assert_eq!(hits, n_fetches, "hit rate through the partition must stay 1.0");
+    assert!(mp.probe_saves() >= 1 && mp.indirect_probes() >= 1);
+    assert!(mq.refutations() >= 1, "the bumped incarnation must refute on the wire");
+    assert!(mq.incarnation(2) >= 1, "refutation must have bumped V's incarnation");
+    json.push((
+        "partition",
+        Json::obj(vec![
+            ("fetches", Json::Int(n_fetches as i64)),
+            ("hit_rate", Json::Num(hits as f64 / n_fetches as f64)),
+            ("p95_ms", Json::Num(p95(&lat))),
+            ("indirect_probes", Json::Int(mp.indirect_probes() as i64)),
+            ("probe_saves", Json::Int(mp.probe_saves() as i64)),
+            ("wire_refutations", Json::Int(mq.refutations() as i64)),
+            ("victim_incarnation", Json::Int(mq.incarnation(2) as i64)),
+            ("false_deaths", Json::Int(false_deaths as i64)),
+        ]),
+    ));
+    proxy.shutdown();
+    cb_a.shutdown();
+    cb_b.shutdown();
+    cb_v.shutdown();
+}
+
+// ------------------------------------------- (c) byte-fault schedules ---
+
+/// A truth-backed recompute feeder (the bench stays engine-free): raw row
+/// payloads straight from the full source state, exactly the
+/// `StateAssembler::commit_chunk` contract.
+fn truth_payloads(
+    source: &KvState,
+    total_rows: usize,
+    chunks: &[usize],
+) -> Option<Vec<(usize, Vec<u8>)>> {
+    Some(
+        chunks
+            .iter()
+            .map(|&c| {
+                let real = CT.min(total_rows - c * CT);
+                (c, source.chunk_payload(c * CT, real))
+            })
+            .collect(),
+    )
+}
+
+fn byte_fault_section(smoke: bool, json: &mut Vec<(&'static str, Json)>) {
+    let (rows, m) = (24usize, 16usize);
+    let st = filled_state(rows, 909);
+    let blob = st.serialize_prefix_opts(rows, HASH, Compression::None, CT);
+    let truth = KvState::restore(
+        &st.serialize_prefix_opts(m, HASH, Compression::None, CT),
+        HASH,
+        DIMS,
+    )
+    .expect("truth restore");
+    let cb_1 = CacheBox::start_local().expect("box 1");
+    let cb_2 = CacheBox::start_local().expect("box 2");
+    for cb in [&cb_1, &cb_2] {
+        KvClient::connect(&cb.addr())
+            .expect("seed conn")
+            .set(b"state:bytes", &blob)
+            .expect("seed");
+    }
+    let planner = PeerPlanner::default();
+
+    // -- (c1) mixed schedule against a clean partner ----------------------
+    // every early op on peer 1 carries some byte fault; the clean partner
+    // plus re-planning must keep each restore bit-exact
+    let n_fetches = if smoke { 5u64 } else { 8 };
+    let points: Vec<(u64, Fault)> = (0..n_fetches * 4)
+        .map(|i| {
+            let f = match i % 3 {
+                0 => Fault::TruncateAt((i as usize * 7) % 97),
+                1 => Fault::CorruptByteAt((i as usize * 13) % 127),
+                _ => Fault::ResetAfter((i as usize * 11) % 83),
+            };
+            (i, f)
+        })
+        .collect();
+    let mut p1 = Peer::connect(
+        PeerConfig::new(cb_1.addr()).with_deadline(budget()),
+        bench_link(),
+        71,
+        1,
+    )
+    .expect("peer 1");
+    let mut p2 = Peer::connect(
+        PeerConfig::new(cb_2.addr()).with_deadline(budget()),
+        bench_link(),
+        72,
+        1,
+    )
+    .expect("peer 2");
+    p1.shaper.attach_faults(FaultPlan::at_ops(&points));
+    let (mut re_plans, mut share_failures, mut recomputed) = (0u64, 0u64, 0usize);
+    let mut lat = Vec::new();
+    for i in 0..n_fetches {
+        let mut feed =
+            |chunks: &[usize], _seed: Option<KvState>| truth_payloads(&st, rows, chunks);
+        let lr = LocalRecompute { feed: &mut feed, prefill_ms_per_tok: 5.0 };
+        let t0 = Instant::now();
+        let f = {
+            // alternate head preference so the faulted peer keeps serving
+            let mut cl: Vec<(usize, &mut Peer)> = if i % 2 == 0 {
+                vec![(0, &mut p1), (1, &mut p2)]
+            } else {
+                vec![(1, &mut p2), (0, &mut p1)]
+            };
+            fetch_prefix_multi(
+                &mut cl, &planner, b"state:bytes", rows, false, CT, m, HASH, DIMS,
+                Some(lr),
+            )
+        }
+        .unwrap_or_else(|| panic!("chaos fetch {i} must still restore"));
+        lat.push(ms(t0.elapsed()));
+        assert_eq!(f.state.k, truth.k, "chaos fetch {i}: corrupt restore");
+        assert_eq!(f.state.v, truth.v, "chaos fetch {i}: corrupt restore");
+        re_plans += f.re_plans;
+        share_failures += f.share_failures;
+        recomputed += f.chunks_recomputed;
+    }
+    let faulted = p1.shaper.faulted_ops;
+    assert!(faulted >= 1, "the byte-fault schedule must have fired");
+    assert!(
+        re_plans + share_failures + recomputed as u64 >= 1,
+        "at least one damaged reply must have forced the rescue ladder"
+    );
+    println!(
+        "(c1) mixed byte faults: {n_fetches} fetches, {faulted} faulted ops, \
+         {share_failures} share failures, {re_plans} re-plans, \
+         {recomputed} chunks recomputed, p95 {:.2} ms, all bit-exact",
+        p95(&lat),
+    );
+
+    // -- (c2) every wire path damaged: the rescue ladder must finish ------
+    // both peers corrupt the first chunk of every op's stream, so the wire
+    // can never complete the prefix on its own; the fetch still succeeds
+    // only because the (seed-aware) local rescue recomputes the orphans
+    let mut r1 = Peer::connect(
+        PeerConfig::new(cb_1.addr()).with_deadline(budget()),
+        bench_link(),
+        81,
+        1,
+    )
+    .expect("rescue peer 1");
+    let mut r2 = Peer::connect(
+        PeerConfig::new(cb_2.addr()).with_deadline(budget()),
+        bench_link(),
+        82,
+        1,
+    )
+    .expect("rescue peer 2");
+    let everywhere = || {
+        FaultPlan::new(vec![FaultWindow {
+            from_op: 0,
+            to_op: u64::MAX,
+            fault: Fault::CorruptByteAt(0),
+        }])
+    };
+    r1.shaper.attach_faults(everywhere());
+    r2.shaper.attach_faults(everywhere());
+    let rescue_fetches = if smoke { 2 } else { 3 };
+    let mut rescue_recomputed = 0usize;
+    let mut seeded_rescues = 0u64;
+    for i in 0..rescue_fetches {
+        let mut feed = |chunks: &[usize], seed: Option<KvState>| {
+            if seed.is_some() {
+                seeded_rescues += 1;
+            }
+            truth_payloads(&st, rows, chunks)
+        };
+        let lr = LocalRecompute { feed: &mut feed, prefill_ms_per_tok: 5.0 };
+        let f = {
+            let mut cl = vec![(0usize, &mut r1), (1usize, &mut r2)];
+            fetch_prefix_multi(
+                &mut cl, &planner, b"state:bytes", rows, false, CT, m, HASH, DIMS,
+                Some(lr),
+            )
+        }
+        .unwrap_or_else(|| panic!("rescue fetch {i} must recompute its way out"));
+        assert_eq!(f.state.k, truth.k, "rescue fetch {i}: corrupt restore");
+        assert_eq!(f.state.v, truth.v, "rescue fetch {i}: corrupt restore");
+        assert!(
+            f.chunks_recomputed >= 1,
+            "rescue fetch {i}: a perpetually damaged wire must force recompute"
+        );
+        rescue_recomputed += f.chunks_recomputed;
+    }
+    println!(
+        "(c2) perpetual corruption: {rescue_fetches} fetches, \
+         {rescue_recomputed} chunks recomputed ({seeded_rescues} seeded), \
+         all bit-exact",
+    );
+    json.push((
+        "byte_faults",
+        Json::obj(vec![
+            (
+                "mixed",
+                Json::obj(vec![
+                    ("fetches", Json::Int(n_fetches as i64)),
+                    ("faulted_ops", Json::Int(faulted as i64)),
+                    ("share_failures", Json::Int(share_failures as i64)),
+                    ("re_plans", Json::Int(re_plans as i64)),
+                    ("chunks_recomputed", Json::Int(recomputed as i64)),
+                    ("p95_ms", Json::Num(p95(&lat))),
+                    ("bit_exact", Json::Bool(true)),
+                ]),
+            ),
+            (
+                "rescue",
+                Json::obj(vec![
+                    ("fetches", Json::Int(rescue_fetches as i64)),
+                    ("chunks_recomputed", Json::Int(rescue_recomputed as i64)),
+                    ("seeded_rescues", Json::Int(seeded_rescues as i64)),
+                    ("bit_exact", Json::Bool(true)),
+                ]),
+            ),
+        ]),
+    ));
+    cb_1.shutdown();
+    cb_2.shutdown();
+}
+
+fn main() {
+    edgecache::util::logger::init_from_env();
+    let smoke = std::env::var("EDGECACHE_SMOKE").as_deref() == Ok("1");
+    println!("=================================================================");
+    println!(
+        " gossip — SWIM digests, refuted suspicion, byte-level chaos{}",
+        if smoke { "  [smoke]" } else { "" }
+    );
+    println!("=================================================================");
+
+    let mut sections: Vec<(&'static str, Json)> = vec![
+        ("smoke", Json::Bool(smoke)),
+        ("dims", Json::Str(format!("{DIMS:?}"))),
+    ];
+    detection_section(smoke, &mut sections);
+    partition_section(smoke, &mut sections);
+    byte_fault_section(smoke, &mut sections);
+
+    let json = Json::obj(sections);
+    let path = std::env::var("EDGECACHE_GOSSIP_JSON")
+        .unwrap_or_else(|_| "BENCH_gossip.json".into());
+    match std::fs::write(&path, json.to_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+    println!("gossip done.");
+}

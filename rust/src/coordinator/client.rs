@@ -71,7 +71,7 @@ use crate::catalog::{
 };
 use crate::coordinator::fabric::{
     fetch_full_entry, fetch_prefix_multi, repair_entry, LocalRecompute, Peer,
-    PeerConfig,
+    PeerConfig, RelayProber,
 };
 use crate::coordinator::membership::{
     classify_io_err, DeadlineBudget, HealthPolicy, Membership, Outcome,
@@ -242,6 +242,24 @@ pub struct EdgeClientConfig {
     /// intervals.  `Duration::ZERO` disables the cache entirely — every
     /// cold lookup re-probes.
     pub probe_negative_ttl: Duration,
+    /// SWIM-style gossip: piggyback membership digests on every catalog
+    /// sync round, so one client's liveness verdict reaches the rest of
+    /// the fleet in O(sync-period) via the boxes' blackboards, and a
+    /// suspected box refutes with a bumped incarnation
+    /// (`coordinator::membership` module docs).  `false` is the
+    /// per-client-heartbeat ablation (PR 6 behaviour).
+    pub gossip: bool,
+    /// Relays consulted by the indirect probe before `Suspect → Dead` is
+    /// committed on circumstantial evidence (timeouts/missed heartbeats):
+    /// up to this many *other* Up boxes are asked to `PING` the suspect
+    /// over their own network path, so an asymmetric client↔box partition
+    /// cannot convict a healthy box.  `0` disables indirect probing.
+    pub indirect_probes: usize,
+    /// Adaptive-deadline multiplier `k` ([`PeerConfig::deadline_k`]): arm
+    /// each sized op's timeout at `k ×` the peer link's expected transfer
+    /// time, floored by `deadline.op` and widened ×2 under `Suspect`.
+    /// `<= 0` keeps the static fleet-wide budget.
+    pub adaptive_deadline_k: f64,
     pub seed: u64,
 }
 
@@ -268,6 +286,9 @@ impl EdgeClientConfig {
             sync_interval: Some(Duration::from_millis(200)),
             deadline: None,
             probe_negative_ttl: Duration::from_millis(1500),
+            gossip: true,
+            indirect_probes: 1,
+            adaptive_deadline_k: 0.0,
             seed: 1,
         }
     }
@@ -378,6 +399,18 @@ pub struct ClientStats {
     /// Range fetches whose final plan genuinely mixed both sources (≥ 1
     /// chunk fetched *and* ≥ 1 recomputed).
     pub plan_mixed: u64,
+    /// Peer-state changes adopted second-hand from gossip digests (another
+    /// client's verdict arriving via a box's blackboard).
+    pub gossip_adoptions: u64,
+    /// Local suspicion/death verdicts *refuted* — by a higher-incarnation
+    /// gossip entry or by a positive indirect probe.
+    pub gossip_refutations: u64,
+    /// Indirect probes launched before committing a circumstantial
+    /// `Suspect → Dead`.
+    pub indirect_probes: u64,
+    /// Indirect probes that found the suspect reachable via a relay and
+    /// withheld the death verdict (a false positive prevented).
+    pub probe_saves: u64,
 }
 
 /// Where a downloaded state physically lives on the fabric — the anchor
@@ -483,7 +516,29 @@ impl EdgeClient {
     pub fn new(engine: Arc<Engine>, cfg: EdgeClientConfig) -> Result<Self> {
         anyhow::ensure!(cfg.chunk_tokens >= 1, "chunk_tokens must be >= 1");
         let meta = ModelMeta::new(engine.model_hash());
-        let membership = Membership::new(cfg.peers.len(), HealthPolicy::default());
+        // membership is keyed by each box's fleet-wide *gossip identity*
+        // (usually its dial address), so every client gossiping about the
+        // same fleet names the same peers in its digests
+        let membership = Membership::with_addrs(
+            cfg.peers
+                .iter()
+                .map(|p| p.gossip_identity().to_string())
+                .collect(),
+            HealthPolicy::default(),
+        );
+        // indirect probes: before a circumstantial Suspect → Dead commits,
+        // ask up to `indirect_probes` other Up boxes to PING the suspect
+        // over their own path (needs at least one possible relay)
+        if cfg.indirect_probes > 0 && cfg.peers.len() >= 2 {
+            let budget = cfg.deadline.unwrap_or(DeadlineBudget::new(
+                Duration::from_millis(250),
+                Duration::from_millis(250),
+            ));
+            membership.set_prober(
+                Arc::new(RelayProber::new(&cfg.peers, budget)),
+                cfg.indirect_probes,
+            );
+        }
         let mut peers = Vec::with_capacity(cfg.peers.len());
         for (i, pc) in cfg.peers.iter().enumerate() {
             let link = pc.link.clone().unwrap_or_else(|| cfg.link.clone());
@@ -491,6 +546,9 @@ impl EdgeClient {
             let mut pc = pc.clone();
             if pc.deadline.is_none() {
                 pc.deadline = cfg.deadline;
+            }
+            if pc.deadline_k <= 0.0 {
+                pc.deadline_k = cfg.adaptive_deadline_k;
             }
             // per-peer shaper seed: peer 0 keeps the historical stream
             let mut peer = Peer::connect(
@@ -501,7 +559,11 @@ impl EdgeClient {
             )?;
             peer.set_health(membership.sink(i));
             if let Some(iv) = cfg.sync_interval {
-                peer.spawn_sync_with(iv, Some(membership.sink(i)))?;
+                peer.spawn_sync_gossip(
+                    iv,
+                    Some(membership.sink(i)),
+                    cfg.gossip.then(|| Arc::clone(&membership)),
+                )?;
             }
             peers.push(peer);
         }
@@ -561,6 +623,10 @@ impl EdgeClient {
         self.stats.suspect_transitions = self.membership.suspect_transitions();
         self.stats.heals = self.membership.heals();
         self.stats.timeouts = self.peers.iter().map(|p| p.ledger.timeouts).sum();
+        self.stats.gossip_adoptions = self.membership.gossip_adoptions();
+        self.stats.gossip_refutations = self.membership.refutations();
+        self.stats.indirect_probes = self.membership.indirect_probes();
+        self.stats.probe_saves = self.membership.probe_saves();
         let epoch = self.membership.epoch();
         if epoch == self.last_epoch {
             return;
@@ -1096,15 +1162,33 @@ impl EdgeClient {
             let stride = BlobLayout::new(&hash, dims.0, dims.2, dims.3).token_stride();
             let engine = Arc::clone(&self.engine);
             let pacer = &mut self.pacer;
-            let mut feed = move |chunks: &[usize]| -> Option<Vec<(usize, Vec<u8>)>> {
+            let mut feed = move |chunks: &[usize],
+                                 seed: Option<KvState>|
+                  -> Option<Vec<(usize, Vec<u8>)>> {
                 let hi = *chunks.iter().max()?;
                 let rows = m.min((hi + 1) * ct);
-                let st = match engine.prefill_prefix(&tokens[..m], rows, pacer) {
-                    Ok(st) => st,
-                    Err(e) => {
-                        log_debug!("edge-client", "local recompute failed: {e}");
-                        return None;
+                // incremental rescue: resume prefill from the assembler's
+                // already-committed contiguous row prefix instead of token
+                // 0, so a mid-restore rescue pays for the orphan span only
+                let st = match seed.filter(|s| s.n_tokens > 0 && s.n_tokens <= rows) {
+                    Some(mut s) => {
+                        let mut bd = PhaseBreakdown::default();
+                        match engine.prefill_suffix(&mut s, &tokens[..rows], pacer, &mut bd)
+                        {
+                            Ok(_) => s,
+                            Err(e) => {
+                                log_debug!("edge-client", "seeded recompute failed: {e}");
+                                return None;
+                            }
+                        }
                     }
+                    None => match engine.prefill_prefix(&tokens[..m], rows, pacer) {
+                        Ok(st) => st,
+                        Err(e) => {
+                            log_debug!("edge-client", "local recompute failed: {e}");
+                            return None;
+                        }
+                    },
                 };
                 let mut out = Vec::with_capacity(chunks.len());
                 for &c in chunks {

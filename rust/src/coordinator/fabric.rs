@@ -57,7 +57,8 @@ use anyhow::{Context, Result};
 
 use crate::catalog::LocalCatalog;
 use crate::coordinator::membership::{
-    classify_io_err, DeadlineBudget, HealthSink, Outcome,
+    classify_io_err, DeadlineBudget, HealthSink, IndirectProbe, Membership, Outcome,
+    PeerHealth,
 };
 use crate::coordinator::plan::{cost_of, plan_split, ChunkCost, ChunkSource, LinkCost};
 use crate::coordinator::policy::PeerPlanner;
@@ -68,7 +69,7 @@ use crate::kvstore::KvClient;
 use crate::log_debug;
 use crate::metrics::{PeerLedger, Phase};
 use crate::model::state::{BlobLayout, ChunkEntry, ChunkVerifier, KvState, StateAssembler};
-use crate::netsim::{LinkModel, Shaper, StreamSession};
+use crate::netsim::{apply_byte_fault, LinkModel, Shaper, StreamSession};
 use crate::util::bytes::SharedBytes;
 
 /// One cache-box peer in the client configuration.
@@ -89,11 +90,29 @@ pub struct PeerConfig {
     /// (accepted-but-silent) box costs at most one budget, never a hang.
     /// `None` keeps the historical blocking behavior.
     pub deadline: Option<DeadlineBudget>,
+    /// Adaptive-deadline multiplier `k`: before each sized operation the
+    /// fabric re-arms the op timeout at `k ×` the link model's expected
+    /// transfer time (floored by `deadline.op`, doubled while the peer is
+    /// `Suspect`), so a 270 ms-RTT Wi-Fi peer and a loopback peer stop
+    /// sharing one stall threshold.  `<= 0` keeps the static budget.
+    pub deadline_k: f64,
+    /// Canonical fleet identity of this box for gossip digests and relayed
+    /// probes.  `None` means `addr` *is* the identity; they diverge when
+    /// the client reaches the box through an interposer (the chaos-proxy
+    /// harness) but the fleet-wide health view must name the real box.
+    pub gossip_addr: Option<String>,
 }
 
 impl PeerConfig {
     pub fn new(addr: impl Into<String>) -> Self {
-        PeerConfig { addr: addr.into(), link: None, weight: 1.0, deadline: None }
+        PeerConfig {
+            addr: addr.into(),
+            link: None,
+            weight: 1.0,
+            deadline: None,
+            deadline_k: 0.0,
+            gossip_addr: None,
+        }
     }
 
     pub fn with_link(addr: impl Into<String>, link: LinkModel) -> Self {
@@ -103,6 +122,25 @@ impl PeerConfig {
     pub fn with_deadline(mut self, deadline: DeadlineBudget) -> Self {
         self.deadline = Some(deadline);
         self
+    }
+
+    /// Enable adaptive per-op deadlines at multiplier `k` (see
+    /// [`PeerConfig::deadline_k`]).
+    pub fn with_deadline_k(mut self, k: f64) -> Self {
+        self.deadline_k = k;
+        self
+    }
+
+    /// Override the gossip identity (see [`PeerConfig::gossip_addr`]).
+    pub fn with_gossip_addr(mut self, addr: impl Into<String>) -> Self {
+        self.gossip_addr = Some(addr.into());
+        self
+    }
+
+    /// The address this box is known by fleet-wide: the gossip override,
+    /// or the dial address when none is set.
+    pub fn gossip_identity(&self) -> &str {
+        self.gossip_addr.as_deref().unwrap_or(&self.addr)
     }
 
     /// Dial this peer honoring the deadline budget: a bounded
@@ -203,15 +241,51 @@ impl Peer {
         interval: Duration,
         health: Option<HealthSink>,
     ) -> Result<()> {
+        self.spawn_sync_gossip(interval, health, None)
+    }
+
+    /// [`Peer::spawn_sync_with`] plus SWIM gossip piggybacked on the sync
+    /// wire: each successful round swaps membership digests with this box
+    /// (see [`CatalogSync::spawn_gossip`]).
+    pub fn spawn_sync_gossip(
+        &mut self,
+        interval: Duration,
+        health: Option<HealthSink>,
+        gossip: Option<Arc<Membership>>,
+    ) -> Result<()> {
         if self.sync.is_none() {
-            self.sync = Some(CatalogSync::spawn_with(
+            self.sync = Some(CatalogSync::spawn_gossip(
                 self.cfg.addr.clone(),
                 Arc::clone(&self.catalog),
                 interval,
                 health,
+                gossip,
             )?);
         }
         Ok(())
+    }
+
+    /// Re-arm this peer's op deadline for an operation expected to move
+    /// `op_bytes`: `k ×` the link model's expected transfer time, floored
+    /// by the configured static budget and doubled while the peer is
+    /// `Suspect` (a suspected box gets one *wider* benefit of the doubt,
+    /// not a hair-trigger).  No-op without a static budget, without `k`, or
+    /// without a live pooled connection.
+    pub fn arm_adaptive_deadline(&mut self, op_bytes: usize) {
+        let Some(base) = self.cfg.deadline else { return };
+        if self.cfg.deadline_k <= 0.0 {
+            return;
+        }
+        let expected_s = self.link.rtt.as_secs_f64()
+            + op_bytes as f64 / self.link.goodput_bps.max(1.0);
+        let widen = self
+            .health
+            .as_ref()
+            .is_some_and(|h| h.state() == PeerHealth::Suspect);
+        let b = base.adaptive(expected_s, self.cfg.deadline_k, widen);
+        if let Some(conn) = &self.conn {
+            let _ = conn.set_io_timeout(Some(b.op));
+        }
     }
 
     pub fn stop_sync(&mut self) {
@@ -287,12 +361,17 @@ pub struct LocalRecompute<'a> {
     /// Produce raw row payloads for the requested chunk ids — exactly
     /// `stored_rows(c) * stride` bytes each, the
     /// [`StateAssembler::commit_chunk`] contract.  Causality means the
-    /// feeder prefills from scratch up to the highest requested chunk even
-    /// if only some ids are wanted (the planner only requests prefixes on
-    /// the happy path; rescue prices that from-scratch cost explicitly).
-    /// `None` (or missing ids) leaves those chunks unfed — the re-plan
-    /// loop treats them like any other orphan.
-    pub feed: &'a mut dyn FnMut(&[usize]) -> Option<Vec<(usize, Vec<u8>)>>,
+    /// feeder prefills up to the highest requested chunk even if only some
+    /// ids are wanted (the planner only requests prefixes on the happy
+    /// path; rescue prices that cost explicitly).  A `seed` — the
+    /// assembler's already-committed contiguous row prefix
+    /// ([`StateAssembler::seed_state`]) — lets the feeder resume prefill
+    /// from `seed.n_tokens` instead of token 0, so a mid-restore rescue
+    /// costs the orphan span, not its end offset.  `None` (or missing ids)
+    /// leaves those chunks unfed — the re-plan loop treats them like any
+    /// other orphan.
+    pub feed:
+        &'a mut dyn FnMut(&[usize], Option<KvState>) -> Option<Vec<(usize, Vec<u8>)>>,
     /// Modelled device prefill rate (ms/token) the cost model prices
     /// recompute with; `<= 0` disables planning (host profile).
     pub prefill_ms_per_tok: f64,
@@ -342,6 +421,18 @@ pub fn consume_chunk_stream(
         let bytes = match replies.next_reply() {
             Ok(Some(Value::Bulk(b))) => b,
             _ => return false, // evicted mid-stream / error reply / dead conn
+        };
+        // scripted byte-granular fault: damage this reply exactly as a
+        // flaky link would, before timing or verification see it
+        let bytes: SharedBytes = match sess.take_byte_fault(bytes.len()) {
+            Some(f) => {
+                let mut v = bytes.to_vec();
+                if apply_byte_fault(f, &mut v).is_err() {
+                    return false; // injected mid-stream reset
+                }
+                v.into()
+            }
+            None => bytes,
         };
         sess.arrived(bytes.len());
         if let Err(e) = asm.feed_chunk(&bytes) {
@@ -623,6 +714,24 @@ fn fetch_share_io(
                 break;
             }
         };
+        // scripted byte-granular fault: truncate/corrupt this reply (the
+        // crc check below rejects it chunk-granularly) or cut the stream
+        // mid-reply (an injected reset tears the pooled connection down
+        // like a real one would)
+        let bytes: SharedBytes = match sess.take_byte_fault(bytes.len()) {
+            Some(f) => {
+                let mut v = bytes.to_vec();
+                match apply_byte_fault(f, &mut v) {
+                    Ok(()) => v.into(),
+                    Err(_) => {
+                        ok = false;
+                        dead = Some(Outcome::IoDead);
+                        break;
+                    }
+                }
+            }
+            None => bytes,
+        };
         sess.arrived(bytes.len());
         // CPU-heavy half outside the lock: crc + bounded inflate
         let payload = match verifier.verify(c, &bytes) {
@@ -673,6 +782,9 @@ fn fetch_share(
     asm: &Mutex<Option<StateAssembler>>,
 ) -> ShareOutcome {
     let t0 = Instant::now();
+    // deadline scaled to what this share actually moves over this link
+    let expected: usize = chunks.iter().map(|&c| geom[c].1).sum();
+    peer.arm_adaptive_deadline(expected);
     let (outcome, dead) = fetch_share_io(peer, target, &chunks, geom, verifier, asm);
     if let Some(o) = dead {
         // even on a mere timeout the pooled connection must go: its reply
@@ -700,12 +812,13 @@ fn fetch_share(
 fn feed_local(
     local: &mut LocalRecompute<'_>,
     chunks: &[usize],
+    seed: Option<KvState>,
     asm: &Mutex<Option<StateAssembler>>,
 ) -> usize {
     if chunks.is_empty() {
         return 0;
     }
-    let Some(payloads) = (local.feed)(chunks) else {
+    let Some(payloads) = (local.feed)(chunks, seed) else {
         log_debug!("fabric", "local feeder declined {} chunks", chunks.len());
         return 0;
     };
@@ -773,7 +886,9 @@ fn run_shares(
             ));
         }
         if let Some((lr, chunks)) = local {
-            recomputed = feed_local(lr, chunks, asm);
+            // round-0 local chunks are the leading prefix — nothing is
+            // committed below them, so there is no seed to resume from
+            recomputed = feed_local(lr, chunks, None, asm);
         }
         for (slot, h) in handles {
             match h.join() {
@@ -888,6 +1003,7 @@ pub fn fetch_prefix_multi(
     let mut acquired: Option<(usize, StateAssembler, usize)> = None;
     for slot in 0..n {
         let t0 = Instant::now();
+        claimers[slot].1.arm_adaptive_deadline(head_len);
         let mut out = acquire_head_push(
             &mut *claimers[slot].1,
             target,
@@ -1066,6 +1182,12 @@ pub fn fetch_prefix_multi(
         Ok(guard) => guard.as_ref().map(|a| a.unfed_chunks()),
         Err(_) => None, // a worker panicked: never restore this
     };
+    // the contiguous already-committed row prefix: what an incremental
+    // rescue resumes prefill from instead of token 0
+    let read_seed = || match asm_cell.lock() {
+        Ok(guard) => guard.as_ref().and_then(|a| a.seed_state()),
+        Err(_) => None,
+    };
     loop {
         let local_arg = if local_round.is_empty() {
             None
@@ -1105,8 +1227,10 @@ pub fn fetch_prefix_multi(
         let budget_spent = rounds >= planner.max_replan_rounds + free_rounds;
         // orphan placement goes to *either* a survivor or the local feeder:
         // rescue when no survivor can serve (or the budget is spent), or
-        // when the model prices from-scratch prefill up to the highest
-        // orphan below re-fetching over the surviving links
+        // when the model prices prefill up to the highest orphan —
+        // *resumed from the already-committed contiguous prefix*, so a
+        // mid-restore rescue is priced (and paid) proportional to the
+        // orphan span — below re-fetching over the surviving links
         let rescue = match &local {
             Some(lr) if !rescue_spent => {
                 live.is_empty() || budget_spent || {
@@ -1122,8 +1246,14 @@ pub fn fetch_prefix_multi(
                     let fetch_s =
                         cost_of(&refetch, &links, lr.prefill_ms_per_tok, &all_fetch).total_s;
                     let hi = *unfed.iter().max().expect("unfed non-empty");
-                    let recompute_s =
-                        m.min((hi + 1) * ct) as f64 * lr.prefill_ms_per_tok / 1e3;
+                    let seeded = match asm_cell.lock() {
+                        Ok(g) => g.as_ref().map_or(0, |a| a.seeded_rows()),
+                        Err(_) => 0,
+                    };
+                    let recompute_s = m.min((hi + 1) * ct).saturating_sub(seeded)
+                        as f64
+                        * lr.prefill_ms_per_tok
+                        / 1e3;
                     recompute_s < fetch_s
                 }
             }
@@ -1137,7 +1267,7 @@ pub fn fetch_prefix_multi(
                 "rescuing {} orphaned chunks onto local recompute",
                 unfed.len()
             );
-            chunks_recomputed += feed_local(lr, &unfed, &asm_cell);
+            chunks_recomputed += feed_local(lr, &unfed, read_seed(), &asm_cell);
             unfed = read_unfed()?;
             if unfed.is_empty() {
                 break;
@@ -1363,4 +1493,50 @@ pub fn repair_entry(
         peer.ledger.breakdown.add(Phase::Redis, t0.elapsed());
     }
     out
+}
+
+/// The fabric's [`IndirectProbe`] implementation: before `Suspect → Dead`
+/// is committed on circumstantial evidence, ask a third box to `PING` the
+/// suspect (`PROBE.RELAY`) over *its* network path.  Relays are dialed
+/// fresh with the probe budget's short deadlines — never through the
+/// pooled request-path connections, which may themselves be mid-operation
+/// on the thread that is asking — and the suspect is named by its gossip
+/// identity, so a client reaching boxes through an interposer still asks
+/// about the real address.  One positive answer suffices; relays that
+/// cannot be reached or cannot say are skipped.
+pub struct RelayProber {
+    /// Dial address per fleet slot (what this client connects to).
+    dial: Vec<String>,
+    /// Gossip identity per fleet slot (what relays are asked to probe).
+    identity: Vec<String>,
+    budget: DeadlineBudget,
+}
+
+impl RelayProber {
+    pub fn new(peers: &[PeerConfig], budget: DeadlineBudget) -> Self {
+        RelayProber {
+            dial: peers.iter().map(|p| p.addr.clone()).collect(),
+            identity: peers
+                .iter()
+                .map(|p| p.gossip_identity().to_string())
+                .collect(),
+            budget,
+        }
+    }
+}
+
+impl IndirectProbe for RelayProber {
+    fn probe_via(&self, vias: &[usize], target: usize) -> Option<bool> {
+        let t = self.identity.get(target)?;
+        for &v in vias {
+            let Some(va) = self.dial.get(v) else { continue };
+            let cfg = PeerConfig::new(va.clone()).with_deadline(self.budget);
+            let Ok(mut conn) = cfg.dial() else { continue };
+            match conn.probe_relay(t) {
+                Ok(r) => return Some(r),
+                Err(_) => continue, // an old box without the verb: try the next relay
+            }
+        }
+        None
+    }
 }

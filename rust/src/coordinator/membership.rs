@@ -41,6 +41,38 @@
 //! Every state change bumps a global [epoch](Membership::epoch) so callers
 //! (e.g. `EdgeClient`) can cheaply invalidate memoized owner sets and call
 //! `Placement::on_membership_change` exactly when the view shifted.
+//!
+//! # Gossip (SWIM-style fleet convergence)
+//!
+//! Per-client detection alone makes every client re-pay the full strike
+//! budget for the same dead box.  The gossip layer fixes that with three
+//! SWIM ingredients, carried on the wire the fleet already has (the
+//! catalog-sync frames; see `CatalogSync` and the server's `GOSSIP`
+//! command):
+//!
+//! * every peer view carries an **incarnation number**; views merge by the
+//!   pure law in [`PeerView::merge`] — higher incarnation wins outright, at
+//!   equal incarnation the more severe state wins (`Dead > Suspect >
+//!   Recovering > Up`).  The law is commutative, idempotent and
+//!   associative, so any delivery order of any digest set converges to the
+//!   same view (property-tested in `tests/gossip_laws.rs`).
+//! * **refutation**: a box that hears itself suspected/declared dead at
+//!   incarnation `i` re-advertises `Up` at `i+1`, which out-competes the
+//!   stale claim under the merge law.  On the client side, *first-hand*
+//!   contact with the subject (a heal transition) bumps the local
+//!   incarnation too — the evidence came from the subject answering, which
+//!   is the subject's refutation by proxy.
+//! * adopting a gossiped claim is **damped**: a second-hand non-`Dead`
+//!   claim about a locally-`Dead` peer enters through `Recovering`
+//!   probation, never straight to `Up` — the PR 6 invariant (`no Dead→Up
+//!   without first-hand confirmation`) survives gossip.
+//!
+//! Before committing a *circumstantial* `Suspect → Dead` promotion (strike
+//! budget exhausted by timeouts/missed heartbeats, not a reset socket), an
+//! [`IndirectProbe`] asks a third peer to relay a reachability check; if
+//! the subject answers the relay, the verdict is withheld and the strikes
+//! reset — an asymmetric partition between one client and one box can no
+//! longer kill that box fleet-wide.
 
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
@@ -133,6 +165,23 @@ impl DeadlineBudget {
             op: Duration::from_millis(op_ms),
         }
     }
+
+    /// Derive a per-op budget from the link model's expected transfer time
+    /// for this op's byte size: `k ×` expected seconds, floored by the
+    /// static budget (`--deadline-ms` stays a lower bound, never a fleet
+    /// constant), and doubled while the peer is `Suspect` so a
+    /// slow-but-alive box is not convicted by its own link model.
+    /// `k <= 0` disables adaptation (the static budget passes through).
+    pub fn adaptive(self, expected_s: f64, k: f64, widen: bool) -> DeadlineBudget {
+        if k <= 0.0 || !expected_s.is_finite() || expected_s <= 0.0 {
+            return self;
+        }
+        let mut op_s = (expected_s * k).max(self.op.as_secs_f64());
+        if widen {
+            op_s *= 2.0;
+        }
+        DeadlineBudget { connect: self.connect, op: Duration::from_secs_f64(op_s) }
+    }
 }
 
 impl Default for DeadlineBudget {
@@ -160,6 +209,154 @@ pub fn classify_io_err(e: &anyhow::Error) -> Outcome {
         }
     }
     Outcome::IoDead
+}
+
+/// One peer's gossiped view: an incarnation number plus the claimed state.
+/// This is the unit the SWIM merge law operates on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeerView {
+    pub incarnation: u64,
+    pub state: PeerHealth,
+}
+
+impl PeerView {
+    pub fn new(incarnation: u64, state: PeerHealth) -> Self {
+        PeerView { incarnation, state }
+    }
+
+    /// Claim severity at equal incarnation: `Dead > Suspect > Recovering >
+    /// Up`.  More severe claims win ties because a false death is refutable
+    /// (bump the incarnation) while a suppressed death is not.
+    pub fn severity(state: PeerHealth) -> u8 {
+        match state {
+            PeerHealth::Up => 0,
+            PeerHealth::Recovering => 1,
+            PeerHealth::Suspect => 2,
+            PeerHealth::Dead => 3,
+        }
+    }
+
+    /// The SWIM merge law: lexicographic max over `(incarnation,
+    /// severity)`.  Pure, total, commutative, idempotent and associative —
+    /// `tests/gossip_laws.rs` proves all three across seeded delivery
+    /// orders, which is what makes fleet views *converge* rather than
+    /// merely change.
+    pub fn merge(a: PeerView, b: PeerView) -> PeerView {
+        let ka = (a.incarnation, Self::severity(a.state));
+        let kb = (b.incarnation, Self::severity(b.state));
+        if kb > ka {
+            b
+        } else {
+            a
+        }
+    }
+}
+
+/// A compact, addr-keyed snapshot of one node's membership view — the
+/// payload piggybacked on catalog-sync frames (`GOSSIP` command).  Keys are
+/// canonical peer addresses (not peer-table indices) so digests align
+/// across clients whose peer tables list the fleet in different orders.
+///
+/// Wire form is line-based text: a `G1 <epoch>` header, then one
+/// `<addr> <incarnation> <state-u8>` line per peer.  Addresses are
+/// host:port strings and never contain whitespace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MembershipDigest {
+    /// The sender's view epoch at encode time (freshness hint only; the
+    /// merge law itself is epoch-free).
+    pub epoch: u64,
+    /// Sorted by address so encoding is canonical.
+    entries: Vec<(String, PeerView)>,
+}
+
+impl MembershipDigest {
+    pub fn new(epoch: u64) -> Self {
+        MembershipDigest { epoch, entries: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, addr: &str) -> Option<PeerView> {
+        self.entries
+            .binary_search_by(|(a, _)| a.as_str().cmp(addr))
+            .ok()
+            .map(|i| self.entries[i].1)
+    }
+
+    /// Upsert through the merge law: an existing entry for `addr` is
+    /// merged, a new one inserted (keeping the sort).
+    pub fn merge_entry(&mut self, addr: &str, view: PeerView) {
+        match self.entries.binary_search_by(|(a, _)| a.as_str().cmp(addr)) {
+            Ok(i) => self.entries[i].1 = PeerView::merge(self.entries[i].1, view),
+            Err(i) => self.entries.insert(i, (addr.to_string(), view)),
+        }
+    }
+
+    /// Merge every entry of `other` into `self` (set union under
+    /// [`PeerView::merge`]); epochs take the max.
+    pub fn merge_from(&mut self, other: &MembershipDigest) {
+        self.epoch = self.epoch.max(other.epoch);
+        for (addr, view) in &other.entries {
+            self.merge_entry(addr, *view);
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, PeerView)> {
+        self.entries.iter().map(|(a, v)| (a.as_str(), *v))
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = format!("G1 {}\n", self.epoch);
+        for (addr, v) in &self.entries {
+            out.push_str(&format!("{addr} {} {}\n", v.incarnation, v.state as u8));
+        }
+        out.into_bytes()
+    }
+
+    /// Parse a wire digest; `None` on any malformed header/line so a
+    /// corrupted frame degrades to "no gossip this round", never to a
+    /// poisoned view.
+    pub fn decode(bytes: &[u8]) -> Option<MembershipDigest> {
+        let text = std::str::from_utf8(bytes).ok()?;
+        let mut lines = text.lines();
+        let header = lines.next()?;
+        let epoch = header.strip_prefix("G1 ")?.trim().parse::<u64>().ok()?;
+        let mut d = MembershipDigest::new(epoch);
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let addr = parts.next()?;
+            let inc = parts.next()?.parse::<u64>().ok()?;
+            let st = parts.next()?.parse::<u8>().ok()?;
+            if parts.next().is_some() {
+                return None;
+            }
+            d.merge_entry(addr, PeerView::new(inc, PeerHealth::from_u8(st)));
+        }
+        Some(d)
+    }
+}
+
+/// Relay a reachability check for `target` through third-party peers —
+/// the network half of the indirect-probe rule, kept behind a trait so
+/// [`Membership`] itself stays free of sockets.  `via` holds candidate
+/// relay peer indices (already filtered to `Up`, already rotated for
+/// variety); implementations try them in order.
+///
+/// Returns `Some(true)` if any relay reached the target, `Some(false)` if
+/// a relay answered definitively "unreachable", and `None` if no relay
+/// could be consulted at all (no route ≠ proof of death, but it cannot
+/// block the verdict either — SWIM commits in that case).
+pub trait IndirectProbe: Send + Sync {
+    fn probe_via(&self, via: &[usize], target: usize) -> Option<bool>;
 }
 
 /// The pure transition function — `(state, strikes, proofs) × input →
@@ -253,7 +450,6 @@ pub struct PeerCounters {
 /// Transitions run under one tiny per-peer mutex; reads
 /// ([`Membership::alive`], [`Membership::state`]) go through lock-free
 /// atomic mirrors so the hot path never contends with a heartbeat.
-#[derive(Debug)]
 pub struct Membership {
     cells: Vec<Mutex<Cell>>,
     /// Lock-free mirror of each cell's state (`PeerHealth as u8`).
@@ -261,6 +457,16 @@ pub struct Membership {
     /// Bumped on every state change; compare-and-refresh cheaply.
     epoch: AtomicU64,
     policy: HealthPolicy,
+    /// Canonical gossip identity per peer, index-aligned with `cells`.
+    /// Placeholder `#i` names when constructed without addresses — digests
+    /// only travel between nodes that share real addresses.
+    addrs: Vec<String>,
+    /// Per-peer incarnation numbers (the SWIM refutation counter).
+    incs: Vec<AtomicU64>,
+    /// Indirect-probe hook: `(prober, max relays per verdict)`.
+    prober: Mutex<Option<(Arc<dyn IndirectProbe>, usize)>>,
+    /// Round-robin cursor rotating which `Up` peer relays first.
+    probe_rr: AtomicU64,
     per_heartbeats: Vec<AtomicU64>,
     per_heals: Vec<AtomicU64>,
     per_timeouts: Vec<AtomicU64>,
@@ -268,10 +474,30 @@ pub struct Membership {
     deaths: AtomicU64,
     heals: AtomicU64,
     recoveries: AtomicU64,
+    gossip_adoptions: AtomicU64,
+    refutations: AtomicU64,
+    indirect_probes: AtomicU64,
+    probe_saves: AtomicU64,
+}
+
+impl std::fmt::Debug for Membership {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Membership")
+            .field("peers", &self.addrs)
+            .field("epoch", &self.epoch)
+            .finish_non_exhaustive()
+    }
 }
 
 impl Membership {
     pub fn new(n_peers: usize, policy: HealthPolicy) -> Arc<Self> {
+        Self::with_addrs((0..n_peers).map(|i| format!("#{i}")).collect(), policy)
+    }
+
+    /// Construct with canonical per-peer gossip addresses (what
+    /// `EdgeClient` does) so emitted digests carry fleet-meaningful keys.
+    pub fn with_addrs(addrs: Vec<String>, policy: HealthPolicy) -> Arc<Self> {
+        let n_peers = addrs.len();
         let mk_cells = || {
             (0..n_peers)
                 .map(|_| Mutex::new(Cell { state: PeerHealth::Up, strikes: 0, proofs: 0 }))
@@ -283,6 +509,10 @@ impl Membership {
             states: (0..n_peers).map(|_| AtomicU8::new(PeerHealth::Up as u8)).collect(),
             epoch: AtomicU64::new(0),
             policy,
+            addrs,
+            incs: mk_u64s(),
+            prober: Mutex::new(None),
+            probe_rr: AtomicU64::new(0),
             per_heartbeats: mk_u64s(),
             per_heals: mk_u64s(),
             per_timeouts: mk_u64s(),
@@ -290,7 +520,19 @@ impl Membership {
             deaths: AtomicU64::new(0),
             heals: AtomicU64::new(0),
             recoveries: AtomicU64::new(0),
+            gossip_adoptions: AtomicU64::new(0),
+            refutations: AtomicU64::new(0),
+            indirect_probes: AtomicU64::new(0),
+            probe_saves: AtomicU64::new(0),
         })
+    }
+
+    /// Register the indirect-probe relay used before circumstantial
+    /// `Suspect → Dead` verdicts; `max_vias = 0` unregisters (verdicts
+    /// commit directly, the PR 6 behaviour).
+    pub fn set_prober(&self, prober: Arc<dyn IndirectProbe>, max_vias: usize) {
+        let mut p = self.prober.lock().unwrap();
+        *p = (max_vias > 0).then_some((prober, max_vias));
     }
 
     pub fn len(&self) -> usize {
@@ -307,25 +549,18 @@ impl Membership {
         HealthSink { membership: Arc::clone(self), peer }
     }
 
-    /// Feed one observation through the state machine; returns the
-    /// (possibly unchanged) resulting state.
-    pub fn report(&self, peer: usize, input: Outcome) -> PeerHealth {
-        let Some(cell) = self.cells.get(peer) else {
-            return PeerHealth::Dead;
-        };
-        match input {
-            Outcome::HeartbeatOk => {
-                self.per_heartbeats[peer].fetch_add(1, Ordering::Relaxed);
-            }
-            Outcome::IoTimeout => {
-                self.per_timeouts[peer].fetch_add(1, Ordering::Relaxed);
-            }
-            _ => {}
-        }
-        let mut c = cell.lock().unwrap();
+    /// Apply a transition to a locked cell: mirror store, transition
+    /// counters, epoch bump — the one place state changes become visible.
+    /// Callers hold the cell lock.
+    fn commit(
+        &self,
+        peer: usize,
+        c: &mut Cell,
+        next: PeerHealth,
+        strikes: u32,
+        proofs: u32,
+    ) -> PeerHealth {
         let old = c.state;
-        let (next, strikes, proofs) =
-            step(c.state, c.strikes, c.proofs, input, &self.policy);
         c.state = next;
         c.strikes = strikes;
         c.proofs = proofs;
@@ -349,10 +584,93 @@ impl Membership {
                     }
                 }
             }
+            // first-hand contact with the subject refutes stale suspicion:
+            // a heal bumps the incarnation so the refreshed view wins the
+            // merge against any gossiped claim at the old incarnation
+            let healed = matches!(
+                (old, next),
+                (PeerHealth::Suspect, PeerHealth::Up)
+                    | (PeerHealth::Dead, PeerHealth::Recovering)
+                    | (PeerHealth::Recovering, PeerHealth::Up)
+            );
+            if healed {
+                self.incs[peer].fetch_add(1, Ordering::Relaxed);
+            }
             // bumped last so an epoch-triggered refresh reads the new state
             self.epoch.fetch_add(1, Ordering::Release);
         }
         next
+    }
+
+    /// Feed one observation through the state machine; returns the
+    /// (possibly unchanged) resulting state.
+    ///
+    /// A *circumstantial* `Suspect → Dead` promotion — the strike budget
+    /// exhausted by timeouts/missed heartbeats rather than a reset socket
+    /// — is held for an [`IndirectProbe`] when one is registered: if a
+    /// third peer can still reach the subject, the verdict is withheld and
+    /// the strikes reset (an asymmetric partition, not a death).  `IoDead`
+    /// stays conclusive and commits without a probe.
+    pub fn report(&self, peer: usize, input: Outcome) -> PeerHealth {
+        let Some(cell) = self.cells.get(peer) else {
+            return PeerHealth::Dead;
+        };
+        match input {
+            Outcome::HeartbeatOk => {
+                self.per_heartbeats[peer].fetch_add(1, Ordering::Relaxed);
+            }
+            Outcome::IoTimeout => {
+                self.per_timeouts[peer].fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+        let mut c = cell.lock().unwrap();
+        let (next, strikes, proofs) =
+            step(c.state, c.strikes, c.proofs, input, &self.policy);
+
+        let circumstantial = matches!(input, Outcome::IoTimeout | Outcome::HeartbeatMiss);
+        if next == PeerHealth::Dead && c.state == PeerHealth::Suspect && circumstantial {
+            let hook = self.prober.lock().unwrap().clone();
+            if let Some((prober, max_vias)) = hook {
+                // probe with no membership locks held: the relay does real
+                // socket I/O and may itself report outcomes
+                drop(c);
+                let vias = self.relay_candidates(peer, max_vias);
+                self.indirect_probes.fetch_add(1, Ordering::Relaxed);
+                let reachable = prober.probe_via(&vias, peer) == Some(true);
+                let mut c = cell.lock().unwrap();
+                if c.state != PeerHealth::Suspect {
+                    // raced with a heal or another verdict while unlocked
+                    return c.state;
+                }
+                if reachable {
+                    // the subject answered a third peer: withhold the
+                    // verdict, clear the strike budget, count the save
+                    self.probe_saves.fetch_add(1, Ordering::Relaxed);
+                    self.refutations.fetch_add(1, Ordering::Relaxed);
+                    return self.commit(peer, &mut c, PeerHealth::Suspect, 0, 0);
+                }
+                return self.commit(peer, &mut c, PeerHealth::Dead, 0, 0);
+            }
+        }
+        self.commit(peer, &mut c, next, strikes, proofs)
+    }
+
+    /// `Up` peers other than `target`, rotated by a round-robin cursor so
+    /// successive verdicts consult different relays, truncated to
+    /// `max_vias`.
+    fn relay_candidates(&self, target: usize, max_vias: usize) -> Vec<usize> {
+        let ups: Vec<usize> = (0..self.len())
+            .filter(|&i| i != target && self.state(i) == PeerHealth::Up)
+            .collect();
+        if ups.is_empty() {
+            return ups;
+        }
+        let start = self.probe_rr.fetch_add(1, Ordering::Relaxed) as usize % ups.len();
+        let mut rotated: Vec<usize> = ups[start..].to_vec();
+        rotated.extend_from_slice(&ups[..start]);
+        rotated.truncate(max_vias);
+        rotated
     }
 
     pub fn state(&self, peer: usize) -> PeerHealth {
@@ -377,6 +695,94 @@ impl Membership {
     /// Monotone view version: changes iff some peer changed state.
     pub fn epoch(&self) -> u64 {
         self.epoch.load(Ordering::Acquire)
+    }
+
+    /// The peer's current incarnation (the SWIM refutation counter; bumps
+    /// on first-hand heals and on gossip adoptions of higher incarnations).
+    pub fn incarnation(&self, peer: usize) -> u64 {
+        self.incs.get(peer).map(|i| i.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// The canonical gossip identity for `peer` (a placeholder `#i` when
+    /// constructed without addresses).
+    pub fn addr(&self, peer: usize) -> &str {
+        &self.addrs[peer]
+    }
+
+    fn peer_index(&self, addr: &str) -> Option<usize> {
+        self.addrs.iter().position(|a| a == addr)
+    }
+
+    /// Snapshot the local view as an addr-keyed digest, ready to
+    /// piggyback on the next catalog-sync frame.
+    pub fn digest(&self) -> MembershipDigest {
+        let mut d = MembershipDigest::new(self.epoch());
+        for i in 0..self.len() {
+            d.merge_entry(&self.addrs[i], PeerView::new(self.incarnation(i), self.state(i)));
+        }
+        d
+    }
+
+    /// Merge a gossiped digest into the local view; returns how many peers
+    /// changed state.  Per entry the merge law decides, then adoption is
+    /// damped: second-hand non-`Dead` evidence about a locally-`Dead` peer
+    /// enters through `Recovering` probation (the PR 6 `no Dead→Up without
+    /// first-hand confirmation` invariant survives gossip).  A gossiped
+    /// `Dead` adopts directly — the remote verdict already passed *its*
+    /// indirect probe, and re-probing at every hop would reintroduce the
+    /// per-client detection latency gossip exists to remove.
+    pub fn apply_digest(&self, d: &MembershipDigest) -> usize {
+        let mut adopted = 0;
+        for (addr, remote) in d.iter() {
+            let Some(i) = self.peer_index(addr) else { continue };
+            let mut c = self.cells[i].lock().unwrap();
+            let local = PeerView::new(self.incs[i].load(Ordering::Relaxed), c.state);
+            let merged = PeerView::merge(local, remote);
+            if merged == local {
+                continue;
+            }
+            if PeerView::severity(merged.state) < PeerView::severity(local.state) {
+                // a higher-incarnation, less-severe claim: stale local
+                // suspicion refuted through gossip
+                self.refutations.fetch_add(1, Ordering::Relaxed);
+            }
+            let adopt = if local.state == PeerHealth::Dead && merged.state != PeerHealth::Dead
+            {
+                PeerHealth::Recovering
+            } else {
+                merged.state
+            };
+            if adopt != local.state {
+                adopted += 1;
+                self.gossip_adoptions.fetch_add(1, Ordering::Relaxed);
+                self.commit(i, &mut c, adopt, 0, 0);
+            }
+            // after commit: the merged incarnation is authoritative, even
+            // over commit's own first-hand heal bump
+            self.incs[i].store(merged.incarnation, Ordering::Relaxed);
+        }
+        adopted
+    }
+
+    /// Peers whose state changed because of a gossiped digest.
+    pub fn gossip_adoptions(&self) -> u64 {
+        self.gossip_adoptions.load(Ordering::Relaxed)
+    }
+
+    /// Stale suspicions overturned — by a higher-incarnation gossip claim
+    /// or by an indirect probe reaching the subject.
+    pub fn refutations(&self) -> u64 {
+        self.refutations.load(Ordering::Relaxed)
+    }
+
+    /// Indirect probes attempted before circumstantial death verdicts.
+    pub fn indirect_probes(&self) -> u64 {
+        self.indirect_probes.load(Ordering::Relaxed)
+    }
+
+    /// Death verdicts withheld because a relay still reached the subject.
+    pub fn probe_saves(&self) -> u64 {
+        self.probe_saves.load(Ordering::Relaxed)
     }
 
     pub fn peer_counters(&self, peer: usize) -> PeerCounters {
@@ -432,6 +838,17 @@ impl HealthSink {
 
     pub fn peer(&self) -> usize {
         self.peer
+    }
+
+    /// The bound peer's current state (lock-free mirror read) — what the
+    /// adaptive deadline derivation keys its `Suspect` widening on.
+    pub fn state(&self) -> PeerHealth {
+        self.membership.state(self.peer)
+    }
+
+    /// The shared fleet view this sink reports into.
+    pub fn membership(&self) -> &Arc<Membership> {
+        &self.membership
     }
 }
 
@@ -619,5 +1036,164 @@ mod tests {
         let c = DeadlineBudget::from_millis(100, 250);
         assert_eq!(c.connect, Duration::from_millis(100));
         assert_eq!(c.op, Duration::from_millis(250));
+    }
+
+    #[test]
+    fn adaptive_budget_floors_scales_and_widens() {
+        let b = DeadlineBudget::from_millis(100, 300);
+        // k=0 disables: the static budget passes through untouched
+        assert_eq!(b.adaptive(10.0, 0.0, false), b);
+        // a fast op stays floored at the static budget
+        assert_eq!(b.adaptive(0.001, 3.0, false).op, Duration::from_millis(300));
+        // a slow-link op scales to k x expected
+        let slow = b.adaptive(1.0, 3.0, false);
+        assert_eq!(slow.op, Duration::from_secs_f64(3.0));
+        assert_eq!(slow.connect, b.connect, "connect budget is not adaptive");
+        // Suspect widens by 2x so a slow-but-alive peer is not convicted
+        assert_eq!(b.adaptive(1.0, 3.0, true).op, Duration::from_secs_f64(6.0));
+        // garbage expected times degrade to the static budget
+        assert_eq!(b.adaptive(f64::NAN, 3.0, false), b);
+    }
+
+    #[test]
+    fn digest_roundtrips_and_rejects_garbage() {
+        let mut d = MembershipDigest::new(7);
+        d.merge_entry("127.0.0.1:9001", PeerView::new(2, PeerHealth::Suspect));
+        d.merge_entry("127.0.0.1:9000", PeerView::new(0, PeerHealth::Up));
+        d.merge_entry("127.0.0.1:9002", PeerView::new(5, PeerHealth::Dead));
+        let back = MembershipDigest::decode(&d.encode()).expect("roundtrip");
+        assert_eq!(back, d);
+        assert_eq!(back.get("127.0.0.1:9001"), Some(PeerView::new(2, PeerHealth::Suspect)));
+        assert!(MembershipDigest::decode(b"").is_none());
+        assert!(MembershipDigest::decode(b"G2 0\n").is_none(), "unknown version");
+        assert!(MembershipDigest::decode(b"G1 x\n").is_none());
+        assert!(MembershipDigest::decode(b"G1 0\naddr 1\n").is_none(), "short line");
+        assert!(MembershipDigest::decode(b"G1 0\naddr 1 0 extra\n").is_none());
+        assert!(MembershipDigest::decode(&[0xff, 0xfe]).is_none(), "not utf-8");
+    }
+
+    #[test]
+    fn merge_law_higher_incarnation_beats_severity() {
+        use PeerHealth::*;
+        let dead_old = PeerView::new(3, Dead);
+        let up_new = PeerView::new(4, Up);
+        assert_eq!(PeerView::merge(dead_old, up_new), up_new, "refutation wins");
+        assert_eq!(PeerView::merge(up_new, dead_old), up_new, "in either order");
+        // equal incarnation: severity decides, Dead > Suspect > Recovering > Up
+        let s = PeerView::new(4, Suspect);
+        assert_eq!(PeerView::merge(up_new, s), s);
+        assert_eq!(PeerView::merge(s, PeerView::new(4, Dead)), PeerView::new(4, Dead));
+    }
+
+    #[test]
+    fn gossip_adoption_spreads_death_and_damps_resurrection() {
+        let m = Membership::with_addrs(
+            vec!["a:1".into(), "b:2".into()],
+            HealthPolicy::default(),
+        );
+        // a remote digest carries a death verdict for b:2
+        let mut d = MembershipDigest::new(1);
+        d.merge_entry("b:2", PeerView::new(0, PeerHealth::Dead));
+        d.merge_entry("c:3", PeerView::new(9, PeerHealth::Dead)); // unknown addr: ignored
+        assert_eq!(m.apply_digest(&d), 1);
+        assert_eq!(m.state(1), PeerHealth::Dead, "gossiped death adopted");
+        assert_eq!(m.gossip_adoptions(), 1);
+        assert_eq!(m.deaths(), 1);
+
+        // re-applying the same digest is idempotent (no second adoption)
+        assert_eq!(m.apply_digest(&d), 0);
+
+        // a higher-incarnation Up claim refutes — but lands as Recovering
+        // probation, never straight Up (second-hand evidence)
+        let mut r = MembershipDigest::new(2);
+        r.merge_entry("b:2", PeerView::new(1, PeerHealth::Up));
+        assert_eq!(m.apply_digest(&r), 1);
+        assert_eq!(m.state(1), PeerHealth::Recovering);
+        assert_eq!(m.incarnation(1), 1, "merged incarnation is authoritative");
+        assert!(m.refutations() >= 1);
+
+        // stale lower-incarnation suspicion can no longer re-infect
+        let mut stale = MembershipDigest::new(3);
+        stale.merge_entry("b:2", PeerView::new(0, PeerHealth::Dead));
+        assert_eq!(m.apply_digest(&stale), 0);
+        assert_eq!(m.state(1), PeerHealth::Recovering);
+    }
+
+    #[test]
+    fn first_hand_heal_bumps_incarnation() {
+        let m = Membership::with_addrs(vec!["a:1".into()], HealthPolicy::default());
+        assert_eq!(m.incarnation(0), 0);
+        m.report(0, Outcome::IoTimeout); // Up -> Suspect: no bump
+        assert_eq!(m.incarnation(0), 0);
+        m.report(0, Outcome::IoOk);
+        m.report(0, Outcome::IoOk); // Suspect -> Up: first-hand heal
+        assert_eq!(m.state(0), PeerHealth::Up);
+        assert_eq!(m.incarnation(0), 1, "heal refutes the suspicion epoch");
+        // the local digest now out-competes the stale Suspect claim
+        let v = m.digest().get("a:1").unwrap();
+        assert_eq!(
+            PeerView::merge(v, PeerView::new(0, PeerHealth::Suspect)),
+            v,
+            "bumped incarnation wins the merge"
+        );
+    }
+
+    struct FixedProbe(Option<bool>, std::sync::atomic::AtomicU64);
+    impl IndirectProbe for FixedProbe {
+        fn probe_via(&self, _via: &[usize], _target: usize) -> Option<bool> {
+            self.1.fetch_add(1, Ordering::Relaxed);
+            self.0
+        }
+    }
+
+    #[test]
+    fn indirect_probe_withholds_circumstantial_death() {
+        let m = Membership::with_addrs(
+            vec!["a:1".into(), "b:2".into(), "c:3".into()],
+            HealthPolicy::default(),
+        );
+        let probe = Arc::new(FixedProbe(Some(true), AtomicU64::new(0)));
+        m.set_prober(probe.clone(), 1);
+        // strike peer 0 out on timeouts alone: the relay reaches it, so the
+        // verdict is withheld every time and the peer stays Suspect
+        for _ in 0..4 * m.policy.dead_after {
+            m.report(0, Outcome::IoTimeout);
+        }
+        assert_eq!(m.state(0), PeerHealth::Suspect, "reachable subject never dies");
+        assert!(probe.1.load(Ordering::Relaxed) >= 2, "probe consulted per verdict");
+        assert_eq!(m.deaths(), 0);
+        assert!(m.probe_saves() >= 2);
+
+        // IoDead stays conclusive: no probe can save a reset socket
+        m.report(0, Outcome::IoDead);
+        assert_eq!(m.state(0), PeerHealth::Dead);
+
+        // an unreachable subject commits Dead through the probe path
+        for _ in 0..m.policy.dead_after + 1 {
+            m.report(1, Outcome::HeartbeatMiss);
+        }
+        assert_eq!(m.state(1), PeerHealth::Suspect, "probe still saving");
+        m.set_prober(Arc::new(FixedProbe(Some(false), AtomicU64::new(0))), 1);
+        for _ in 0..m.policy.dead_after {
+            m.report(1, Outcome::HeartbeatMiss);
+        }
+        assert_eq!(m.state(1), PeerHealth::Dead, "relay-confirmed unreachable dies");
+    }
+
+    #[test]
+    fn relay_candidates_skip_target_and_non_up() {
+        let m = Membership::with_addrs(
+            vec!["a:1".into(), "b:2".into(), "c:3".into(), "d:4".into()],
+            HealthPolicy::default(),
+        );
+        m.report(2, Outcome::IoDead);
+        let vias = m.relay_candidates(0, 8);
+        assert!(!vias.contains(&0), "target never relays for itself");
+        assert!(!vias.contains(&2), "dead peers cannot relay");
+        assert_eq!(vias.len(), 2);
+        // rotation: successive calls start from different relays
+        let a = m.relay_candidates(0, 1);
+        let b = m.relay_candidates(0, 1);
+        assert_ne!(a, b, "round-robin cursor rotates the first relay");
     }
 }

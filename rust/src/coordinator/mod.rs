@@ -31,6 +31,12 @@
 //!   heartbeats piggybacked on the sync loop and hot-path I/O outcomes,
 //!   plus the [`membership::DeadlineBudget`] that arms socket deadlines on
 //!   pooled connections so a stalled peer costs one budget, never a hang.
+//!   Since PR 8 the view is *fleet-converged*: SWIM-style
+//!   [`membership::MembershipDigest`]s (incarnation-numbered peer states)
+//!   ride the catalog-sync wire through each box's gossip blackboard, a
+//!   suspected box refutes with a bumped incarnation, and a circumstantial
+//!   `Suspect → Dead` is gated behind an indirect probe relayed through a
+//!   third box ([`fabric::RelayProber`]).
 
 pub mod cachebox;
 pub mod client;
@@ -45,9 +51,10 @@ pub use cachebox::CacheBox;
 pub use client::{
     adaptive_chunk_tokens, EdgeClient, EdgeClientConfig, HitCase, QueryResult,
 };
-pub use fabric::{Peer, PeerConfig};
+pub use fabric::{Peer, PeerConfig, RelayProber};
 pub use membership::{
-    DeadlineBudget, HealthPolicy, HealthSink, Membership, Outcome, PeerHealth,
+    DeadlineBudget, HealthPolicy, HealthSink, IndirectProbe, Membership,
+    MembershipDigest, Outcome, PeerHealth, PeerView,
 };
 pub use placement::{
     Placement, PlacementKind, PowerOfTwoChoices, RendezvousRing,

@@ -11,7 +11,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::catalog::LocalCatalog;
-use crate::coordinator::membership::{HealthSink, Outcome};
+use crate::coordinator::membership::{HealthSink, Membership, MembershipDigest, Outcome};
 use crate::kvstore::KvClient;
 use crate::log_debug;
 use crate::util::rng::Rng;
@@ -60,6 +60,24 @@ impl CatalogSync {
         interval: Duration,
         health: Option<HealthSink>,
     ) -> Result<CatalogSync> {
+        Self::spawn_gossip(server_addr, catalog, interval, health, None)
+    }
+
+    /// [`CatalogSync::spawn_with`] plus SWIM-style gossip piggybacked on the
+    /// same wire: after each successful sync round the loop swaps membership
+    /// digests with the box (`GOSSIP`), merging the reply into the local
+    /// [`Membership`] — one client's verdict reaches the fleet in
+    /// O(sync-period) instead of every client re-paying its own strike
+    /// budget.  Gossip failures are swallowed (an old box without the
+    /// `GOSSIP` verb degrades to PR 6 per-client detection, never to a
+    /// failed sync round).
+    pub fn spawn_gossip(
+        server_addr: String,
+        catalog: Arc<Mutex<LocalCatalog>>,
+        interval: Duration,
+        health: Option<HealthSink>,
+        gossip: Option<Arc<Membership>>,
+    ) -> Result<CatalogSync> {
         let stop = Arc::new(AtomicBool::new(false));
         let rounds = Arc::new(AtomicU64::new(0));
         let attempts = Arc::new(AtomicU64::new(0));
@@ -85,7 +103,15 @@ impl CatalogSync {
                     }
                     let ok = match conn.as_mut() {
                         Some(c) => match Self::sync_once(c, &catalog) {
-                            Ok(()) => true,
+                            Ok(()) => {
+                                if let Some(m) = &gossip {
+                                    // best-effort: a box that predates the
+                                    // GOSSIP verb answers with an error, not
+                                    // a broken sync round
+                                    let _ = Self::gossip_once(c, m);
+                                }
+                                true
+                            }
                             Err(e) => {
                                 log_debug!(
                                     "catalog-sync",
@@ -128,6 +154,19 @@ impl CatalogSync {
                 }
             })?;
         Ok(CatalogSync { stop, thread: Some(thread), rounds, attempts })
+    }
+
+    /// One digest exchange (also used synchronously in tests): push the
+    /// local membership view, merge the box's blackboard reply.  Returns
+    /// how many peer states the reply changed locally.
+    pub fn gossip_once(conn: &mut KvClient, membership: &Membership) -> Result<usize> {
+        let payload = membership.digest().encode();
+        let reply = conn.gossip_exchange(&payload)?;
+        match MembershipDigest::decode(&reply) {
+            Some(d) => Ok(membership.apply_digest(&d)),
+            // unparseable reply degrades to "no gossip this round"
+            None => Ok(0),
+        }
     }
 
     /// One pull-merge round (also used synchronously in tests).
@@ -278,6 +317,38 @@ mod tests {
         );
         assert_eq!(sync.rounds.load(Ordering::SeqCst), 0);
         sync.stop();
+    }
+
+    #[test]
+    fn gossip_round_converges_two_clients_through_one_box() {
+        use crate::coordinator::membership::{HealthPolicy, Outcome, PeerHealth};
+        // client A convicts peer "b" first-hand; one gossip round through a
+        // shared box's blackboard and client B — which never probed "b" —
+        // holds the same verdict.
+        let cb = CacheBox::start_local().unwrap();
+        let addrs = vec![cb.addr(), "10.9.9.9:1".to_string()];
+        let ma = crate::coordinator::membership::Membership::with_addrs(
+            addrs.clone(),
+            HealthPolicy::default(),
+        );
+        let mb = crate::coordinator::membership::Membership::with_addrs(
+            addrs,
+            HealthPolicy::default(),
+        );
+        ma.report(1, Outcome::IoDead);
+        assert_eq!(ma.state(1), PeerHealth::Dead);
+        assert_eq!(mb.state(1), PeerHealth::Up);
+
+        let mut ca = KvClient::connect(&cb.addr()).unwrap();
+        let mut cbn = KvClient::connect(&cb.addr()).unwrap();
+        CatalogSync::gossip_once(&mut ca, &ma).unwrap();
+        let changed = CatalogSync::gossip_once(&mut cbn, &mb).unwrap();
+        assert!(changed >= 1, "B must adopt A's verdict from the board");
+        assert_eq!(mb.state(1), PeerHealth::Dead);
+        // the box advertises itself Up on the same board, so neither client
+        // ever flags it from gossip alone
+        assert_eq!(ma.state(0), PeerHealth::Up);
+        cb.shutdown();
     }
 
     #[test]

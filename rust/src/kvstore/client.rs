@@ -318,6 +318,29 @@ impl KvClient {
             other => Err(anyhow!("unexpected CAT.DELTA reply {other:?}")),
         }
     }
+
+    // -- gossip (SWIM fleet health over the sync wire) -----------------------
+
+    /// One gossip exchange: push the local membership digest, receive the
+    /// box's merged board (encoded `MembershipDigest` bytes).  Errors on
+    /// boxes that predate `GOSSIP` surface as `Err` (the typed `ERR unknown
+    /// command` reply) — sync loops swallow them, so gossip degrades to
+    /// plain heartbeats against an old fleet.
+    pub fn gossip_exchange(&mut self, digest: &[u8]) -> Result<SharedBytes> {
+        match self.command(&[b"GOSSIP", digest])? {
+            Value::Bulk(b) => Ok(b),
+            other => Err(anyhow!("unexpected GOSSIP reply {other:?}")),
+        }
+    }
+
+    /// Ask this box to probe `target` on our behalf (the indirect-probe
+    /// relay): `true` iff the relay reached it within its budget.
+    pub fn probe_relay(&mut self, target: &str) -> Result<bool> {
+        Ok(self
+            .command(&[b"PROBE.RELAY", target.as_bytes()])?
+            .as_int()
+            == Some(1))
+    }
 }
 
 /// Extract the `used_bytes:` field from an `INFO` reply — the one place

@@ -36,6 +36,25 @@
 //!   a streaming client still decodes chunk `i` while chunk `i+1` is on
 //!   the wire.  Non-ECS3 entries (legacy v2 blobs, aliases, garbage) get a
 //!   typed error so clients fall back to the GETRANGE compatibility path.
+//!
+//! Two commands make each cache box a **gossip blackboard** for the
+//! SWIM-style fleet-health layer (`coordinator::membership`) — clients
+//! never talk to each other directly, so the boxes they all sync with are
+//! the natural merge points:
+//!
+//! * `GOSSIP digest` — merge a client's membership digest into the box's
+//!   board (the pure [`PeerView::merge`] law per address) and reply with
+//!   the merged board.  One client's verdict reaches every other client
+//!   within one sync period.  The box **self-refutes**: a claim that this
+//!   box is Suspect/Dead at incarnation `i ≥` its own bumps its own
+//!   incarnation to `i + 1` and re-advertises `Up`, which out-competes the
+//!   stale claim on every board it reaches — and because the bump is
+//!   relative to the *claimed* incarnation, refutation survives a box
+//!   restart that reset its counter to zero;
+//! * `PROBE.RELAY addr` — dial `addr` with a short bounded budget and
+//!   `PING` it, replying `1`/`0` — the third-party reachability check an
+//!   indirect probe routes through before a circumstantial `Suspect →
+//!   Dead` verdict commits.
 
 use std::collections::HashMap;
 use std::io::Write;
@@ -46,8 +65,9 @@ use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
-use super::resp::{read_value, Decoder, RespError, Value};
+use super::resp::{read_value, request, Decoder, RespError, Value};
 use super::store::Store;
+use crate::coordinator::membership::{MembershipDigest, PeerHealth, PeerView};
 use crate::log_debug;
 use crate::log_info;
 use crate::util::bytes::SharedBytes;
@@ -96,6 +116,18 @@ pub struct KvServer {
     /// Simulated per-command processing delay (cache-box CPU time); zero by
     /// default — the link shaping lives client-side in `netsim`.
     pub op_delay: std::time::Duration,
+    /// The gossip blackboard: every `GOSSIP` exchange merges the caller's
+    /// digest in and replies with the merged view.
+    gossip: Mutex<MembershipDigest>,
+    /// This box's canonical gossip identity (the bound address, set by
+    /// `serve`); `None` until serving, which disables self-refutation.
+    self_addr: Mutex<Option<String>>,
+    /// This box's own incarnation — bumped past any gossiped claim of its
+    /// own suspicion/death (the SWIM subject-refutes rule).
+    own_inc: AtomicU64,
+    /// Self-refutations issued (stale claims of this box's death heard and
+    /// out-advertised).
+    refuted: AtomicU64,
 }
 
 fn parse_index(arg: &[u8]) -> Option<usize> {
@@ -142,7 +174,22 @@ impl KvServer {
             conns: Mutex::new(HashMap::new()),
             next_conn_id: AtomicU64::new(0),
             op_delay: std::time::Duration::ZERO,
+            gossip: Mutex::new(MembershipDigest::default()),
+            self_addr: Mutex::new(None),
+            own_inc: AtomicU64::new(0),
+            refuted: AtomicU64::new(0),
         })
+    }
+
+    /// Self-refutations this box has issued against gossiped claims of its
+    /// own suspicion/death.
+    pub fn gossip_refutations(&self) -> u64 {
+        self.refuted.load(Ordering::Relaxed)
+    }
+
+    /// A snapshot of the box's merged gossip board (tests/benches).
+    pub fn gossip_board(&self) -> MembershipDigest {
+        self.gossip.lock().unwrap().clone()
     }
 
     /// Bind and serve on `addr` (use port 0 for an ephemeral port).  Returns
@@ -150,6 +197,9 @@ impl KvServer {
     pub fn serve(self: &Arc<Self>, addr: &str) -> Result<ServerHandle> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
+        // the bound address is this box's gossip identity — what clients'
+        // digests key its health under, and what self-refutation watches for
+        *self.self_addr.lock().unwrap() = Some(local.to_string());
         let srv = Arc::clone(self);
         let accept_thread = std::thread::Builder::new()
             .name("kv-accept".into())
@@ -376,12 +426,66 @@ impl KvServer {
                 items.extend(keys.iter().map(|k| Value::bulk(k.clone())));
                 Value::Array(items)
             }
+            ("GOSSIP", 2) => {
+                let Some(incoming) = MembershipDigest::decode(&args[1]) else {
+                    return Value::Error("ERR bad gossip digest".into());
+                };
+                let mut board = self.gossip.lock().unwrap();
+                board.merge_from(&incoming);
+                if let Some(me) = self.self_addr.lock().unwrap().as_deref() {
+                    // subject-refutes: any claim that *this* box is not Up
+                    // at an incarnation ≥ ours bumps ours past it — relative
+                    // to the claim, so it survives a restart that zeroed the
+                    // counter
+                    if let Some(claim) = board.get(me) {
+                        let own = self.own_inc.load(Ordering::Relaxed);
+                        if claim.state != PeerHealth::Up && claim.incarnation >= own {
+                            self.own_inc.store(claim.incarnation + 1, Ordering::Relaxed);
+                            self.refuted.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    let own = self.own_inc.load(Ordering::Relaxed);
+                    board.merge_entry(me, PeerView::new(own, PeerHealth::Up));
+                }
+                Value::bulk(board.encode())
+            }
+            ("PROBE.RELAY", 2) => {
+                let Ok(target) = std::str::from_utf8(&args[1]) else {
+                    return Value::Error("ERR bad probe address".into());
+                };
+                Value::Int(relay_probe(target) as i64)
+            }
             ("SHUTDOWN", 1) => {
                 self.stop.store(true, Ordering::SeqCst);
                 Value::Simple("SHUTTING DOWN".into())
             }
             _ => Value::Error(format!("ERR unknown command '{cmd}' / arity {}", args.len())),
         }
+    }
+}
+
+/// The third-party reachability check behind `PROBE.RELAY`: dial `target`
+/// under a short fixed budget and `PING` it.  The budget is deliberately a
+/// relay-local constant — a probe exists to settle a verdict quickly, and
+/// a wedged relay op must never outlive the prober's own patience.
+fn relay_probe(target: &str) -> bool {
+    use std::io::Read;
+    const BUDGET: std::time::Duration = std::time::Duration::from_millis(250);
+    let Ok(sa) = target.parse::<std::net::SocketAddr>() else {
+        return false;
+    };
+    let Ok(mut conn) = TcpStream::connect_timeout(&sa, BUDGET) else {
+        return false;
+    };
+    let _ = conn.set_read_timeout(Some(BUDGET));
+    let _ = conn.set_write_timeout(Some(BUDGET));
+    if conn.write_all(&request(&[b"PING"]).encode()).is_err() {
+        return false;
+    }
+    let mut buf = [0u8; 16];
+    match conn.read(&mut buf) {
+        Ok(n) if n > 0 => buf.starts_with(b"+PONG"),
+        _ => false,
     }
 }
 
@@ -644,6 +748,79 @@ mod tests {
             srv.dispatch(request(&[b"SPLICE", b"x", b"base", b"7", b"3", b"", b""])),
             Value::Error(_)
         ));
+    }
+
+    #[test]
+    fn gossip_board_merges_and_self_refutes() {
+        let srv = KvServer::new(usize::MAX);
+        let h = srv.serve("127.0.0.1:0").unwrap();
+        let me = h.addr_string();
+
+        // a client digest claiming some third box dead + this box suspect
+        let mut d = MembershipDigest::new(4);
+        d.merge_entry("10.0.0.9:7000", PeerView::new(0, PeerHealth::Dead));
+        d.merge_entry(&me, PeerView::new(3, PeerHealth::Suspect));
+        let r = srv.dispatch(request(&[b"GOSSIP", &d.encode()]));
+        let Value::Bulk(b) = r else { panic!("expected bulk, got {r:?}") };
+        let merged = MembershipDigest::decode(&b).unwrap();
+
+        // the third-box verdict is on the board for other clients to adopt
+        assert_eq!(
+            merged.get("10.0.0.9:7000"),
+            Some(PeerView::new(0, PeerHealth::Dead))
+        );
+        // and the box refuted its own suspicion: Up at a bumped incarnation
+        let self_view = merged.get(&me).unwrap();
+        assert_eq!(self_view.state, PeerHealth::Up);
+        assert_eq!(self_view.incarnation, 4, "bumped past the claimed incarnation");
+        assert_eq!(srv.gossip_refutations(), 1);
+        // the refutation wins the merge against the stale claim
+        assert_eq!(
+            PeerView::merge(self_view, PeerView::new(3, PeerHealth::Suspect)),
+            self_view
+        );
+
+        // an empty digest still harvests the board (pull-only exchange)
+        let empty = MembershipDigest::new(0);
+        let r = srv.dispatch(request(&[b"GOSSIP", &empty.encode()]));
+        let Value::Bulk(b) = r else { panic!("{r:?}") };
+        let board = MembershipDigest::decode(&b).unwrap();
+        assert!(board.get("10.0.0.9:7000").is_some(), "board is sticky");
+
+        // garbage digests are a typed error, not a poisoned board
+        assert!(matches!(
+            srv.dispatch(request(&[b"GOSSIP", b"\xff\xfe"])),
+            Value::Error(_)
+        ));
+        h.shutdown();
+    }
+
+    #[test]
+    fn probe_relay_reports_reachability() {
+        let a = KvServer::new(usize::MAX);
+        let ha = a.serve("127.0.0.1:0").unwrap();
+        let b = KvServer::new(usize::MAX);
+        let hb = b.serve("127.0.0.1:0").unwrap();
+
+        // box A relays a probe to live box B: reachable
+        let r = a.dispatch(request(&[b"PROBE.RELAY", hb.addr_string().as_bytes()]));
+        assert_eq!(r, Value::Int(1));
+
+        // a dead target address: unreachable (bounded, no wedge)
+        let dead = hb.addr_string();
+        hb.shutdown();
+        let t0 = std::time::Instant::now();
+        let r = a.dispatch(request(&[b"PROBE.RELAY", dead.as_bytes()]));
+        assert_eq!(r, Value::Int(0));
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(2),
+            "relay budget must bound the probe"
+        );
+
+        // unparsable addresses are a clean 0, not an error loop
+        let r = a.dispatch(request(&[b"PROBE.RELAY", b"not an address"]));
+        assert_eq!(r, Value::Int(0));
+        ha.shutdown();
     }
 
     #[test]

@@ -139,6 +139,15 @@ fn client_config(m: &edgecache::util::cli::Matches, server: Option<String>) -> R
                 op_ms,
             )),
         },
+        // fleet-health knobs: gossip rides the sync wire unless ablated,
+        // indirect probes gate circumstantial death verdicts, and k > 0
+        // scales per-op deadlines to each link's expected transfer time
+        gossip: !m.flag("no-gossip"),
+        indirect_probes: m.usize("indirect-probes").map_err(|e| anyhow!(e))?,
+        adaptive_deadline_k: m
+            .str("deadline-k")
+            .parse::<f64>()
+            .map_err(|e| anyhow!("bad --deadline-k: {e}"))?,
         seed: m.u64("seed").map_err(|e| anyhow!(e))?,
     })
 }
@@ -183,6 +192,24 @@ fn client_cmd_spec(name: &'static str, about: &'static str) -> Command {
             "1500",
             "fallback-probe negative-cache TTL; a missed probe is not \
              retried for this long (0 = probe every time)",
+        )
+        .opt(
+            "indirect-probes",
+            "1",
+            "relays asked to PING a Suspect before a circumstantial death \
+             verdict commits (0 = trust first-hand evidence only)",
+        )
+        .opt(
+            "deadline-k",
+            "0",
+            "adaptive deadline multiplier: arm each op's timeout at k x the \
+             link's expected transfer time, floored by --deadline-ms and \
+             widened x2 under Suspect (0 = static budget)",
+        )
+        .flag(
+            "no-gossip",
+            "disable SWIM gossip digests on the sync wire (per-client \
+             heartbeat ablation)",
         )
         .flag("no-partial", "disable partial matching (full-prompt keys only)")
         .flag("no-catalog", "disable the local Bloom catalog (probe server)")
@@ -240,7 +267,8 @@ fn run_trace(
             "client {} [{}]: {} queries, hits by case {:?}, FPs {}, down {} KB, up {} KB, \
              chunks {} fetched / {} recomputed ({} mixed plans), \
              fallback probes {} ({} hits, {} suppressed), repairs {}, \
-             timeouts {}, suspects {}, heals {}",
+             timeouts {}, suspects {}, heals {}, \
+             gossip {} adopted / {} refuted, probes {} indirect ({} saves)",
             c.cfg.name,
             c.placement_name(),
             c.stats.queries,
@@ -257,7 +285,11 @@ fn run_trace(
             c.stats.repair_republishes,
             c.stats.timeouts,
             c.stats.suspect_transitions,
-            c.stats.heals
+            c.stats.heals,
+            c.stats.gossip_adoptions,
+            c.stats.gossip_refutations,
+            c.stats.indirect_probes,
+            c.stats.probe_saves
         );
         for l in c.peer_ledgers() {
             println!(

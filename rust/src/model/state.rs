@@ -574,6 +574,31 @@ impl StateAssembler {
         Ok(())
     }
 
+    /// Rows already restored as a *contiguous prefix*: the leading run of
+    /// fed chunks × `chunk_tokens`, capped at `m`.  Chunks committed out of
+    /// order past a gap don't count — the engine can only resume prefill
+    /// from a gap-free row prefix.
+    pub fn seeded_rows(&self) -> usize {
+        let lead = self.fed_mask.iter().take_while(|&&f| f).count();
+        (lead * self.chunk_tokens).min(self.m)
+    }
+
+    /// Clone the partially-assembled state, trimmed to [`Self::seeded_rows`],
+    /// as a seed for incremental local recompute: a rescue that prefills
+    /// from `seeded_rows()` onward instead of token 0 pays only for the
+    /// orphan span, not its end offset.  Returns `None` when nothing
+    /// contiguous has been committed (a seed of 0 rows is just a fresh
+    /// state).
+    pub fn seed_state(&self) -> Option<KvState> {
+        let rows = self.seeded_rows();
+        if rows == 0 {
+            return None;
+        }
+        let mut st = self.st.clone();
+        st.n_tokens = rows;
+        Some(st)
+    }
+
     /// Return the assembled `m`-row state; an error if any expected chunk
     /// was never fed.
     pub fn finish(self) -> Result<KvState, StateError> {

@@ -33,6 +33,16 @@ use crate::util::rng::Rng;
 pub const BLACKHOLE_STALL: Duration = Duration::from_secs(5);
 
 /// One fault kind a [`FaultWindow`] injects.
+///
+/// The first three stretch an op's *modelled time*; the byte-granular
+/// trio (`TruncateAt` / `CorruptByteAt` / `ResetAfter`) instead mutates an
+/// op's *payload bytes* — injected partial writes that drive the ECS3
+/// chunk-crc verification, the `StateAssembler` mid-stream corruption path
+/// and the rescue ladder, not just timeouts and deaths.  Byte faults are
+/// timing-neutral ([`Fault::stretch`] passes the base delay through) and
+/// fire through [`StreamSession::take_byte_fault`] +
+/// [`apply_byte_fault`] on streamed chunk paths; ops that never stream
+/// payload bytes pass through them unaffected.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Fault {
     /// A hung-but-alive peer: every op in the window takes this much
@@ -45,16 +55,82 @@ pub enum Fault {
     /// factor (values below 1.0 are clamped up — a fault never speeds a
     /// link up).
     Degrade(f64),
+    /// Partial write: the op's payload stream is cut at byte `n` — the
+    /// reply arrives short, and the chunk crc must reject it.
+    TruncateAt(usize),
+    /// Bit-rot: the payload byte at stream offset `n` is XOR-flipped —
+    /// the reply arrives with the right length and a wrong crc.
+    CorruptByteAt(usize),
+    /// Partial write then a torn connection: the stream is cut at byte
+    /// `n` and the socket reports `ConnectionReset` — the fabric
+    /// classifies it `IoDead`, the rescue ladder takes over.
+    ResetAfter(usize),
 }
 
 impl Fault {
-    /// The modelled-delay transform this fault applies to one op.
+    /// The modelled-delay transform this fault applies to one op.  Byte
+    /// faults are timing-neutral: they damage payloads, not clocks, so
+    /// every calibration bound holds with a byte schedule attached.
     pub fn stretch(self, base: Duration) -> Duration {
         match self {
             Fault::Stall(d) => base + d,
             Fault::Blackhole => base + BLACKHOLE_STALL,
             Fault::Degrade(x) => base.mul_f64(x.max(1.0)),
+            Fault::TruncateAt(_) | Fault::CorruptByteAt(_) | Fault::ResetAfter(_) => base,
         }
+    }
+
+    /// The stream offset a byte-granular fault acts at; `None` for the
+    /// timing faults.
+    pub fn byte_offset(self) -> Option<usize> {
+        match self {
+            Fault::TruncateAt(n) | Fault::CorruptByteAt(n) | Fault::ResetAfter(n) => {
+                Some(n)
+            }
+            _ => None,
+        }
+    }
+
+    /// Rebase a byte fault's stream offset (see
+    /// [`StreamSession::take_byte_fault`]).
+    fn with_byte_offset(self, n: usize) -> Fault {
+        match self {
+            Fault::TruncateAt(_) => Fault::TruncateAt(n),
+            Fault::CorruptByteAt(_) => Fault::CorruptByteAt(n),
+            Fault::ResetAfter(_) => Fault::ResetAfter(n),
+            other => other,
+        }
+    }
+}
+
+/// Apply a byte-granular fault to one reply's payload buffer, offset
+/// already rebased to within the buffer.  Truncation and corruption mutate
+/// in place (the ECS3 chunk crc rejects the result downstream — a damaged
+/// chunk must *never* commit a row); `ResetAfter` truncates and then
+/// reports the torn socket as a `ConnectionReset` io error so the caller's
+/// error classification sees exactly what a real mid-write reset produces.
+/// Timing faults are a no-op here.
+pub fn apply_byte_fault(fault: Fault, bytes: &mut Vec<u8>) -> std::io::Result<()> {
+    match fault {
+        Fault::TruncateAt(n) => {
+            bytes.truncate(n);
+            Ok(())
+        }
+        Fault::CorruptByteAt(n) => {
+            if !bytes.is_empty() {
+                let i = n.min(bytes.len() - 1);
+                bytes[i] ^= 0xA5;
+            }
+            Ok(())
+        }
+        Fault::ResetAfter(n) => {
+            bytes.truncate(n);
+            Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "injected mid-stream reset",
+            ))
+        }
+        _ => Ok(()),
     }
 }
 
@@ -104,6 +180,18 @@ impl FaultPlan {
             }
         }
         Self::new(windows)
+    }
+
+    /// A point schedule: each `(op, fault)` pair faults exactly that one
+    /// op — the natural shape for byte-fault scripts ("truncate op 3's
+    /// stream at byte 100, corrupt op 7's at byte 5").
+    pub fn at_ops(points: &[(u64, Fault)]) -> Self {
+        Self::new(
+            points
+                .iter()
+                .map(|&(op, fault)| FaultWindow { from_op: op, to_op: op + 1, fault })
+                .collect(),
+        )
     }
 
     /// The fault (if any) covering op index `op` — pure lookup, no state.
@@ -398,6 +486,23 @@ impl StreamSession<'_> {
         self.cum_bytes
     }
 
+    /// If this op carries a byte-granular fault that the next `len`-byte
+    /// reply reaches, consume it and return it rebased to an offset within
+    /// that reply (ready for [`apply_byte_fault`]).  One-shot per session:
+    /// a byte fault damages exactly one reply of the faulted op.  Call
+    /// *before* [`StreamSession::arrived`] for the same reply — arrival
+    /// accounting advances the cumulative stream offset.
+    pub fn take_byte_fault(&mut self, len: usize) -> Option<Fault> {
+        let f = self.fault?;
+        let off = f.byte_offset()?;
+        if len == 0 || off >= self.cum_bytes + len {
+            // the fault sits past this reply: leave it armed
+            return None;
+        }
+        self.fault = None;
+        Some(f.with_byte_offset(off.saturating_sub(self.cum_bytes).min(len - 1)))
+    }
+
     /// The next `bytes` wire bytes have really been read; block until their
     /// modelled arrival time.
     ///
@@ -436,6 +541,147 @@ impl StreamSession<'_> {
         let saved = self.saved;
         self.shaper.overlap_saved += saved;
         saved
+    }
+}
+
+/// A byte-level TCP chaos proxy for the *real-socket* paths the modelled
+/// [`Shaper`] cannot reach: `CatalogSync` heartbeats and gossip dial real
+/// TCP, so simulating an **asymmetric partition** (one client ↔ one box
+/// edge dark, every other path up) needs an actual wire to cut.  The proxy
+/// listens on its own ephemeral port and pumps bytes to `upstream`; while
+/// [partitioned](ChaosProxy::set_partitioned), established connections are
+/// severed and new ones are accepted-then-dropped — the partitioned client
+/// sees resets and refused syncs against this one box, while clients
+/// dialing the box directly stay healthy.  That is exactly the scenario
+/// incarnation refutation + indirect probes must survive with zero false
+/// `Dead` verdicts.
+pub struct ChaosProxy {
+    addr: String,
+    partitioned: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Bind an ephemeral local port and start forwarding to `upstream`.
+    pub fn start(upstream: &str) -> std::io::Result<ChaosProxy> {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?.to_string();
+        let upstream = upstream.to_string();
+        let partitioned = Arc::new(AtomicBool::new(false));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (p, s) = (Arc::clone(&partitioned), Arc::clone(&stop));
+        let handle = std::thread::spawn(move || {
+            while !s.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((conn, _)) => {
+                        if p.load(Ordering::Acquire) {
+                            // refuse: accept-then-drop reads as a reset
+                            drop(conn);
+                            continue;
+                        }
+                        let Ok(up) = std::net::TcpStream::connect(&upstream) else {
+                            drop(conn);
+                            continue;
+                        };
+                        Self::pump_pair(conn, up, Arc::clone(&p), Arc::clone(&s));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(ChaosProxy { addr, partitioned, stop, handle: Some(handle) })
+    }
+
+    /// Spawn one relay thread per direction; each exits (dropping its
+    /// sockets, which severs the connection) as soon as the partition flag
+    /// rises or either side closes.
+    fn pump_pair(
+        client: std::net::TcpStream,
+        upstream: std::net::TcpStream,
+        partitioned: std::sync::Arc<std::sync::atomic::AtomicBool>,
+        stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    ) {
+        let (Ok(c2), Ok(u2)) = (client.try_clone(), upstream.try_clone()) else {
+            return;
+        };
+        for (rd, wr) in [(client, u2), (upstream, c2)] {
+            let (p, s) = (
+                std::sync::Arc::clone(&partitioned),
+                std::sync::Arc::clone(&stop),
+            );
+            std::thread::spawn(move || Self::pump(rd, wr, p, s));
+        }
+    }
+
+    fn pump(
+        mut rd: std::net::TcpStream,
+        mut wr: std::net::TcpStream,
+        partitioned: std::sync::Arc<std::sync::atomic::AtomicBool>,
+        stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    ) {
+        use std::io::{Read, Write};
+        use std::sync::atomic::Ordering;
+        let _ = rd.set_read_timeout(Some(Duration::from_millis(25)));
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            if partitioned.load(Ordering::Acquire) || stop.load(Ordering::Acquire) {
+                break;
+            }
+            match rd.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => {
+                    if wr.write_all(&buf[..n]).is_err() {
+                        break;
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    continue;
+                }
+                Err(_) => break,
+            }
+        }
+        let _ = rd.shutdown(std::net::Shutdown::Both);
+        let _ = wr.shutdown(std::net::Shutdown::Both);
+    }
+
+    /// The proxy's own dialable address — what the partitioned client's
+    /// peer table points at instead of the box.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Raise or clear the partition.  Raising severs established proxied
+    /// connections within one pump poll (≤ ~25 ms) and refuses new ones.
+    pub fn set_partitioned(&self, on: bool) {
+        self.partitioned.store(on, std::sync::atomic::Ordering::Release);
+    }
+
+    pub fn is_partitioned(&self) -> bool {
+        self.partitioned.load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -722,5 +968,118 @@ mod tests {
         let diff = if da > db { da - db } else { db - da };
         assert!(diff < Duration::from_millis(15), "{da:?} vs {db:?}");
         assert_eq!(b.faulted_ops, 0);
+    }
+
+    #[test]
+    fn byte_faults_are_timing_neutral() {
+        // stretch() passes the base delay through: a byte schedule can
+        // never break a calibration bound
+        let base = Duration::from_millis(123);
+        assert_eq!(Fault::TruncateAt(10).stretch(base), base);
+        assert_eq!(Fault::CorruptByteAt(0).stretch(base), base);
+        assert_eq!(Fault::ResetAfter(99).stretch(base), base);
+        assert_eq!(Fault::Stall(base).stretch(base), base + base);
+    }
+
+    #[test]
+    fn apply_byte_fault_damages_exactly_as_scripted() {
+        let mut b = vec![1u8, 2, 3, 4, 5];
+        apply_byte_fault(Fault::TruncateAt(2), &mut b).unwrap();
+        assert_eq!(b, vec![1, 2]);
+
+        let mut b = vec![1u8, 2, 3, 4, 5];
+        apply_byte_fault(Fault::CorruptByteAt(3), &mut b).unwrap();
+        assert_eq!(b, vec![1, 2, 3, 4 ^ 0xA5, 5], "one byte flipped, length kept");
+
+        let mut b = vec![1u8, 2, 3, 4, 5];
+        let err = apply_byte_fault(Fault::ResetAfter(1), &mut b).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::ConnectionReset);
+        assert_eq!(b, vec![1], "reset still delivers the bytes before the tear");
+
+        // timing faults are a payload no-op
+        let mut b = vec![9u8; 4];
+        apply_byte_fault(Fault::Blackhole, &mut b).unwrap();
+        assert_eq!(b, vec![9u8; 4]);
+    }
+
+    #[test]
+    fn stream_session_fires_byte_fault_on_the_covering_reply() {
+        let mut s = Shaper::new(LinkModel::loopback(), 1);
+        s.attach_faults(FaultPlan::at_ops(&[(0, Fault::CorruptByteAt(150))]));
+        let mut sess = s.shaped_stream();
+        // reply 0 covers [0, 100): fault at 150 stays armed
+        assert_eq!(sess.take_byte_fault(100), None);
+        sess.arrived(100);
+        // reply 1 covers [100, 200): fires, rebased to offset 50
+        assert_eq!(sess.take_byte_fault(100), Some(Fault::CorruptByteAt(50)));
+        sess.arrived(100);
+        // one-shot: later replies are clean
+        assert_eq!(sess.take_byte_fault(100), None);
+        sess.finish();
+
+        // an unfaulted op draws nothing
+        let mut sess = s.shaped_stream();
+        assert_eq!(sess.take_byte_fault(100), None);
+        sess.finish();
+    }
+
+    #[test]
+    fn chaos_proxy_partitions_one_edge() {
+        use std::io::{Read, Write};
+        // a tiny echo upstream
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let upstream = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            for conn in listener.incoming().flatten() {
+                std::thread::spawn(move || {
+                    let mut conn = conn;
+                    let mut buf = [0u8; 256];
+                    while let Ok(n) = conn.read(&mut buf) {
+                        if n == 0 || conn.write_all(&buf[..n]).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+
+        let proxy = ChaosProxy::start(&upstream).unwrap();
+        let mut c = std::net::TcpStream::connect(proxy.addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+        c.write_all(b"ping").unwrap();
+        let mut buf = [0u8; 4];
+        c.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"ping", "healthy proxy forwards both ways");
+
+        // raise the partition: the established connection is severed...
+        proxy.set_partitioned(true);
+        std::thread::sleep(Duration::from_millis(80));
+        let dead = match c.write_all(b"x") {
+            Err(_) => true,
+            Ok(()) => c.read_exact(&mut buf).is_err(),
+        };
+        assert!(dead, "partition must sever the established connection");
+        // ...and new dials through the proxy fail fast (accept-then-drop)
+        let mut c2 = std::net::TcpStream::connect(proxy.addr()).unwrap();
+        c2.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+        let gone = match c2.write_all(b"ping") {
+            Err(_) => true,
+            Ok(()) => c2.read_exact(&mut buf).is_err(),
+        };
+        assert!(gone, "partitioned proxy must not carry new connections");
+        // the upstream itself is still reachable directly (asymmetric!)
+        let mut d = std::net::TcpStream::connect(&upstream).unwrap();
+        d.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+        d.write_all(b"pong").unwrap();
+        d.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"pong");
+
+        // clearing the partition restores service for fresh dials
+        proxy.set_partitioned(false);
+        let mut c3 = std::net::TcpStream::connect(proxy.addr()).unwrap();
+        c3.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+        c3.write_all(b"back").unwrap();
+        c3.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"back");
     }
 }

@@ -1,0 +1,270 @@
+//! PR 8 law suite (see `util::prop` for harness/replay mechanics):
+//!
+//! * SWIM digest merge laws — commutative, idempotent, associative, and
+//!   therefore *order-convergent*: every delivery order of the same gossip
+//!   events produces the same final view;
+//! * incarnation refutation — a higher incarnation always beats stale
+//!   suspicion, and stale suspicion can never re-convict;
+//! * the byte-granular fault model — truncation/corruption of a stored
+//!   chunk is rejected chunk-granularly by the ECS3 crc index and never
+//!   commits a row into the `StateAssembler`; the restored prefix stays
+//!   bit-exact once pristine bytes arrive.
+
+use edgecache::coordinator::membership::{
+    HealthPolicy, Membership, MembershipDigest, Outcome, PeerHealth, PeerView,
+};
+use edgecache::model::state::{BlobLayout, Compression, KvState, StateAssembler};
+use edgecache::netsim::{apply_byte_fault, Fault};
+use edgecache::util::prop::{run_prop_n, Gen};
+use edgecache::util::rng::Rng;
+
+const HASH: &str = "gossip-law";
+const DIMS: (usize, usize, usize, usize) = (2, 64, 1, 8); // 128 B/token
+
+// ---------------------------------------------------------------- gossip --
+
+const ADDRS: [&str; 5] = ["10.0.0.1:7", "10.0.0.2:7", "10.0.0.3:7", "10.0.0.4:7", "10.0.0.5:7"];
+
+fn gen_view(g: &mut Gen) -> PeerView {
+    let state = match g.usize_in(0, 3) {
+        0 => PeerHealth::Up,
+        1 => PeerHealth::Recovering,
+        2 => PeerHealth::Suspect,
+        _ => PeerHealth::Dead,
+    };
+    PeerView::new(g.usize_in(0, 4) as u64, state)
+}
+
+fn gen_digest(g: &mut Gen) -> MembershipDigest {
+    let mut d = MembershipDigest::new(g.usize_in(0, 9) as u64);
+    for addr in ADDRS {
+        if g.bool() {
+            d.merge_entry(addr, gen_view(g));
+        }
+    }
+    d
+}
+
+#[test]
+fn prop_view_merge_is_commutative_idempotent_associative() {
+    run_prop_n("view-merge-laws", 400, |g: &mut Gen| {
+        let (a, b, c) = (gen_view(g), gen_view(g), gen_view(g));
+        assert_eq!(PeerView::merge(a, b), PeerView::merge(b, a), "commutative");
+        assert_eq!(PeerView::merge(a, a), a, "idempotent");
+        assert_eq!(
+            PeerView::merge(PeerView::merge(a, b), c),
+            PeerView::merge(a, PeerView::merge(b, c)),
+            "associative"
+        );
+        // the winner is always one of the operands — merge invents nothing
+        let w = PeerView::merge(a, b);
+        assert!(w == a || w == b, "merge must pick an operand");
+    });
+}
+
+#[test]
+fn prop_digest_merge_converges_across_delivery_orders() {
+    run_prop_n("digest-order-convergence", 150, |g: &mut Gen| {
+        let events: Vec<MembershipDigest> =
+            (0..g.usize_in(2, 6)).map(|_| gen_digest(g)).collect();
+        // two independently seeded delivery orders of the same events
+        let mut order_a: Vec<usize> = (0..events.len()).collect();
+        let mut order_b = order_a.clone();
+        let mut rng = Rng::new(g.rng.next_u64());
+        for i in (1..order_a.len()).rev() {
+            order_a.swap(i, (rng.next_u64() as usize) % (i + 1));
+        }
+        for i in (1..order_b.len()).rev() {
+            order_b.swap(i, (rng.next_u64() as usize) % (i + 1));
+        }
+        let fold = |order: &[usize]| {
+            let mut board = MembershipDigest::default();
+            for &i in order {
+                board.merge_from(&events[i]);
+            }
+            board
+        };
+        let (a, b) = (fold(&order_a), fold(&order_b));
+        assert_eq!(a, b, "delivery order must not change the converged view");
+        // re-delivering everything is a no-op (idempotent union)
+        let mut again = a.clone();
+        for e in &events {
+            again.merge_from(e);
+        }
+        assert_eq!(again, a, "re-delivery must be a no-op");
+    });
+}
+
+#[test]
+fn prop_digest_wire_roundtrip_is_exact() {
+    run_prop_n("digest-roundtrip", 200, |g: &mut Gen| {
+        let d = gen_digest(g);
+        let decoded = MembershipDigest::decode(&d.encode()).expect("own encoding must parse");
+        assert_eq!(decoded, d);
+    });
+}
+
+#[test]
+fn higher_incarnation_refutes_stale_suspicion() {
+    // law level: suspicion at incarnation i loses to Up at i+1, in both
+    // argument orders; and Up at i+1 is immune to re-conviction by i
+    let sus = PeerView::new(3, PeerHealth::Suspect);
+    let up = PeerView::new(4, PeerHealth::Up);
+    assert_eq!(PeerView::merge(sus, up), up);
+    assert_eq!(PeerView::merge(up, sus), up);
+
+    // membership level: a first-hand Suspect is overturned by a gossiped
+    // higher incarnation (the subject refuted itself through some box)
+    let m = Membership::with_addrs(
+        vec!["10.0.0.1:7".into(), "10.0.0.2:7".into()],
+        HealthPolicy::default(),
+    );
+    m.report(1, Outcome::IoTimeout);
+    assert_eq!(m.state(1), PeerHealth::Suspect);
+    let mut d = MembershipDigest::new(0);
+    d.merge_entry("10.0.0.2:7", PeerView::new(m.incarnation(1) + 1, PeerHealth::Up));
+    assert_eq!(m.apply_digest(&d), 1, "the refutation must be adopted");
+    assert_eq!(m.state(1), PeerHealth::Up);
+    assert!(m.refutations() >= 1);
+
+    // stale suspicion (the old incarnation) bounces off the refuted view
+    let mut stale = MembershipDigest::new(0);
+    stale.merge_entry("10.0.0.2:7", PeerView::new(0, PeerHealth::Suspect));
+    assert_eq!(m.apply_digest(&stale), 0, "stale gossip must not re-convict");
+    assert_eq!(m.state(1), PeerHealth::Up);
+}
+
+// ----------------------------------------------------------- byte faults --
+
+fn filled_state(n: usize, seed: u64) -> KvState {
+    let (l, s, kh, d) = DIMS;
+    let mut st = KvState::zeroed(l, s, kh, d);
+    st.n_tokens = n;
+    let mut rng = Rng::new(seed);
+    let row = kh * d;
+    let le = s * row;
+    for li in 0..l {
+        for e in 0..n * row {
+            st.k[li * le + e] = rng.f64() as f32;
+            st.v[li * le + e] = rng.f64() as f32 - 0.5;
+        }
+    }
+    st
+}
+
+/// Byte spans `(offset, len)` of the stored chunks, from the verified index.
+fn chunk_spans(asm: &StateAssembler, head_len: usize) -> Vec<(usize, usize)> {
+    let mut off = head_len;
+    (0..asm.expected_chunks())
+        .map(|c| {
+            let span = (off, asm.chunk_len(c));
+            off += asm.chunk_len(c);
+            span
+        })
+        .collect()
+}
+
+#[test]
+fn prop_byte_faults_are_rejected_chunk_granularly_and_never_commit_a_row() {
+    run_prop_n("byte-faults-chunk-granular", 40, |g: &mut Gen| {
+        let comp = if g.bool() { Compression::Deflate } else { Compression::None };
+        let ct = 4;
+        let n = g.usize_in(9, 32);
+        let st = filled_state(n, g.rng.next_u64());
+        let blob = st.serialize_prefix_opts(n, HASH, comp, ct);
+        let (l, _, kh, d) = DIMS;
+        let head_len = BlobLayout::new(HASH, l, kh, d)
+            .with_chunk_tokens(ct)
+            .payload_off(n);
+        let mut asm = StateAssembler::new(&blob[..head_len], n, HASH, DIMS).unwrap();
+        let k = asm.expected_chunks();
+        let spans = chunk_spans(&asm, head_len);
+        let victim = g.usize_in(0, k - 1);
+        for c in 0..k {
+            let (off, len) = spans[c];
+            let pristine = &blob[off..off + len];
+            if c == victim {
+                let mut damaged = pristine.to_vec();
+                let fault = if g.bool() {
+                    Fault::TruncateAt(g.usize_in(0, len - 1))
+                } else {
+                    Fault::CorruptByteAt(g.usize_in(0, len - 1))
+                };
+                apply_byte_fault(fault, &mut damaged).unwrap();
+                let fed_before = asm.fed_chunks();
+                assert!(
+                    asm.feed_chunk_at(c, &damaged).is_err(),
+                    "damaged chunk {c} must be rejected ({fault:?})"
+                );
+                assert_eq!(asm.fed_chunks(), fed_before, "rejection must not count as fed");
+                assert!(!asm.fed_at(c), "rejection must not mark the chunk fed");
+                // chunk-granular: the same slot still accepts pristine bytes
+                asm.feed_chunk_at(c, pristine).unwrap();
+            } else {
+                asm.feed_chunk_at(c, pristine).unwrap();
+            }
+        }
+        let out = asm.finish().expect("all chunks pristine-fed");
+        let want = KvState::restore(&blob, HASH, DIMS).unwrap();
+        assert_eq!(out, want, "restored prefix must be bit-exact after the fault");
+    });
+}
+
+#[test]
+fn prop_seeded_rows_track_the_contiguous_fed_prefix() {
+    run_prop_n("seeded-rows-oracle", 60, |g: &mut Gen| {
+        let ct = 4;
+        let n = g.usize_in(9, 32);
+        let st = filled_state(n, g.rng.next_u64());
+        let blob = st.serialize_prefix_opts(n, HASH, Compression::None, ct);
+        let (l, _, kh, d) = DIMS;
+        let head_len = BlobLayout::new(HASH, l, kh, d)
+            .with_chunk_tokens(ct)
+            .payload_off(n);
+        let mut asm = StateAssembler::new(&blob[..head_len], n, HASH, DIMS).unwrap();
+        let k = asm.expected_chunks();
+        let spans = chunk_spans(&asm, head_len);
+        // feed a random subset in a random order
+        let mut order: Vec<usize> = (0..k).collect();
+        let mut rng = Rng::new(g.rng.next_u64());
+        for i in (1..order.len()).rev() {
+            order.swap(i, (rng.next_u64() as usize) % (i + 1));
+        }
+        let keep = g.usize_in(0, k);
+        let mut fed = vec![false; k];
+        for &c in order.iter().take(keep) {
+            let (off, len) = spans[c];
+            asm.feed_chunk_at(c, &blob[off..off + len]).unwrap();
+            fed[c] = true;
+            let lead = fed.iter().take_while(|&&f| f).count();
+            let want_rows = (lead * ct).min(n);
+            assert_eq!(asm.seeded_rows(), want_rows, "seeded_rows oracle");
+            match asm.seed_state() {
+                Some(seed) => {
+                    assert!(want_rows > 0);
+                    assert_eq!(seed.n_tokens, want_rows);
+                    // the seed's leading rows are bit-exact truth rows
+                    assert_eq!(
+                        seed.chunk_payload(0, want_rows),
+                        st.chunk_payload(0, want_rows),
+                        "seed rows must match the stored truth"
+                    );
+                }
+                None => assert_eq!(want_rows, 0, "no seed only when nothing contiguous"),
+            }
+        }
+    });
+}
+
+#[test]
+fn reset_fault_truncates_and_surfaces_a_connection_reset() {
+    let mut bytes = (0u8..200).collect::<Vec<u8>>();
+    let err = apply_byte_fault(Fault::ResetAfter(37), &mut bytes)
+        .expect_err("an injected reset must surface as an error");
+    assert_eq!(err.kind(), std::io::ErrorKind::ConnectionReset);
+    assert_eq!(bytes.len(), 37, "only the bytes before the reset survive");
+
+    let mut bytes = vec![0xFFu8; 64];
+    apply_byte_fault(Fault::CorruptByteAt(70), &mut bytes).unwrap();
+    assert_eq!(bytes[63], 0xFF ^ 0xA5, "offset past the end clamps to the last byte");
+}

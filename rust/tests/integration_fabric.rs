@@ -209,8 +209,8 @@ fn truth_feeder<'a>(
     st: &'a KvState,
     ct: usize,
     total: usize,
-) -> impl FnMut(&[usize]) -> Option<Vec<(usize, Vec<u8>)>> + 'a {
-    move |chunks: &[usize]| {
+) -> impl FnMut(&[usize], Option<KvState>) -> Option<Vec<(usize, Vec<u8>)>> + 'a {
+    move |chunks: &[usize], _seed: Option<KvState>| {
         Some(
             chunks
                 .iter()

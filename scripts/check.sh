@@ -74,6 +74,13 @@ $WATCHDOG cargo test -q --test integration_liveness
 echo "== cargo test -q --test plan_oracle =="
 $WATCHDOG cargo test -q --test plan_oracle
 
+# The SWIM law suite pins the gossip layer's algebra (digest merge is
+# commutative/idempotent/order-convergent, higher incarnations refute
+# stale suspicion) and the byte-fault model (damaged chunks are rejected
+# chunk-granularly, never committing a bad row).
+echo "== cargo test -q --test gossip_laws =="
+$WATCHDOG cargo test -q --test gossip_laws
+
 # Streaming-assembly smoke (`just bench-smoke`): a tiny-parameter run of the
 # overlap bench whose built-in assertions pin the hot-path claim — streaming
 # beats store-and-forward and restore completes ~1 chunk-decode after the
@@ -108,6 +115,15 @@ $WATCHDOG env EDGECACHE_SMOKE=1 cargo bench --bench churn
 # and match the exhaustive oracle on every enumerable cell.
 echo "== fetch plan smoke (EDGECACHE_SMOKE=1) =="
 $WATCHDOG env EDGECACHE_SMOKE=1 cargo bench --bench fetch_plan
+
+# Gossip smoke (`just bench-gossip`): the SWIM fleet harness — asserts
+# gossiped death detection strictly beats per-client detection for >= 2 of
+# 3 staggered clients, an asymmetric partition produces zero false-positive
+# deaths (indirect probes + incarnation refutation, hit rate 1.0 through
+# head rotation), and every scripted byte fault ends in a bit-exact
+# restored prefix via the rescue ladder.
+echo "== gossip smoke (EDGECACHE_SMOKE=1) =="
+$WATCHDOG env EDGECACHE_SMOKE=1 cargo bench --bench gossip
 
 if [ "${1:-}" != "--no-clippy" ]; then
     echo "== cargo clippy -q -- -D warnings =="
