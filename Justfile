@@ -113,3 +113,23 @@ bench-gossip:
 # convergence, incarnation refutation, byte-fault rejection granularity)
 test-gossip:
     cd rust && cargo test -q --test gossip_laws
+
+# fleet serving bench, full ramp (emits BENCH_fleet.json): thousands of
+# Zipf-driven simulated clients against the poll+sharded serving core vs
+# the thread-per-connection ablation — p50/p99/p999 TTFT, hit/shed rates,
+# per-box saturation, max sustained clients
+bench-fleet-full:
+    cd rust && cargo bench --bench fleet
+
+# the same bench with tiny parameters — the check.sh smoke gate: exercises
+# both serving cores end-to-end and asserts the harness mechanics (no op
+# lost without a verdict, zero wedged poll clients); the strict p99 /
+# sustained-clients comparisons only gate the full run
+bench-fleet:
+    cd rust && EDGECACHE_SMOKE=1 cargo bench --bench fleet
+
+# the serving-core suite on its own (sharded-store stress with torn-read
+# detection, poll vs threads reply identity, deterministic admission
+# shedding + recovery, many-connection readiness multiplexing)
+test-serve:
+    cd rust && cargo test -q --test serve_core

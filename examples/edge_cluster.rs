@@ -185,7 +185,8 @@ fn main() -> anyhow::Result<()> {
             "  {} [{}]: hits by case {:?}, FPs {}, down {:.2} MB, up {:.2} MB, \
              multi-source {}, re-plans {}, chunks {} fetched / {} recomputed \
              ({} mixed plans), fallback probes {} ({} hits, {} suppressed), \
-             repairs {}, timeouts {}, suspects {}, heals {}",
+             repairs {}, timeouts {}, suspects {}, heals {}, \
+             busy rejections {} ({} free replans)",
             c.cfg.name,
             c.placement_name(),
             c.stats.hits_by_case,
@@ -204,12 +205,15 @@ fn main() -> anyhow::Result<()> {
             c.stats.timeouts,
             c.stats.suspect_transitions,
             c.stats.heals,
+            c.stats.busy_rejections,
+            c.stats.replans_on_busy,
         );
         for l in c.peer_ledgers() {
             println!(
                 "    peer {}: down {:.2} MB, up {:.2} MB, shares {} ({} failed, \
                  {} chunks), uploads {} (+{} replicas), placed {}, probes {}, \
-                 repairs {}, {} sync rounds, {} heartbeats, {} heals, {} timeouts",
+                 repairs {}, {} sync rounds, {} heartbeats, {} heals, {} timeouts, \
+                 {} sheds, peak pending {}",
                 l.addr,
                 l.bytes_down as f64 / 1e6,
                 l.bytes_up as f64 / 1e6,
@@ -225,6 +229,8 @@ fn main() -> anyhow::Result<()> {
                 l.heartbeats,
                 l.heals,
                 l.timeouts,
+                l.sheds,
+                l.peak_pending,
             );
         }
     }

@@ -1,0 +1,506 @@
+//! Fleet-scale serving bench — thousands of simulated clients with Zipf
+//! key popularity against a small multi-box fabric, ramping concurrency
+//! until each serving core breaks:
+//!
+//! * **threads** — the PR 1–8 ablation: thread-per-connection over
+//!   blocking sockets, single store lock, unbounded admission;
+//! * **poll** — the fleet-scale core: non-blocking readiness loop +
+//!   worker pool, sharded store locks, bounded admission shedding `BUSY`.
+//!
+//! Each ramp step replays the *same* seeded trace (per-client Zipf key
+//! streams over a shared key population) through both cores and records
+//! per-op TTFT (request issue → reply decoded).  A step is **sustained**
+//! when every simulated client finishes its stream (zero wedged) and the
+//! p99 TTFT stays under the SLO.  A `BUSY` shed grants the op exactly one
+//! immediate retry — the client-side one-free-replan discipline — before
+//! it is counted shed and skipped.
+//!
+//! Simulated clients are multiplexed over a bounded pool of real
+//! connections (fd-limit aware: `workers × boxes` sockets, never one per
+//! simulated client); concurrency on the wire is the worker count, while
+//! the key streams preserve per-client locality.
+//!
+//! Emits `BENCH_fleet.json`: per step p50/p99/p999 TTFT, hit rate, shed
+//! rate, wedged count, per-box saturation (ops, sheds, peak pending), and
+//! the cross-core verdict (max sustained clients; p99 at the highest
+//! mutually-sustained step).  The full run asserts the poll core strictly
+//! beats the ablation on tail latency at that step, sustains at least as
+//! many clients, never wedges a client, and matches hit rate.
+//!
+//! Env: EDGECACHE_SMOKE=1 (reduced sizes + mechanics-only assertions for
+//!      the check.sh gate), EDGECACHE_FLEET_JSON (output path, default
+//!      BENCH_fleet.json).
+
+use std::time::{Duration, Instant};
+
+use edgecache::kvstore::{KvClient, KvServer, ServeMode, Value};
+use edgecache::kvstore::resp::request;
+use edgecache::util::json::Json;
+use edgecache::util::rng::Rng;
+
+// ------------------------------------------------------------ workload --
+
+/// Zipf(s) sampler over `n` ranked keys via inverse-CDF binary search.
+struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    fn new(n: usize, s: f64) -> Zipf {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += 1.0 / ((i + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+/// Rank → key id permutation so the hot head of the Zipf distribution is
+/// spread across the key space (and therefore across boxes/shards) instead
+/// of clustering on consecutive ids.
+fn scatter(rank: usize, keys: usize) -> usize {
+    rank.wrapping_mul(2654435761) % keys
+}
+
+fn key_name(id: usize) -> Vec<u8> {
+    format!("fleet:{id:06}").into_bytes()
+}
+
+fn key_box(id: usize, boxes: usize) -> usize {
+    // FNV-1a over the id bytes — a stable placement independent of the
+    // client count, so every ramp step agrees where each key lives
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key_name(id) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    (h % boxes as u64) as usize
+}
+
+fn key_value(id: usize, val_len: usize) -> Vec<u8> {
+    let len = val_len / 2 + (id * 31) % (val_len / 2).max(1);
+    vec![(id % 251) as u8; len.max(1)]
+}
+
+/// One simulated client's scripted key stream.
+fn client_trace(client: usize, ops: usize, zipf: &Zipf, keys: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(seed ^ (client as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    (0..ops).map(|_| scatter(zipf.sample(&mut rng), keys)).collect()
+}
+
+// ------------------------------------------------------------- metrics --
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[derive(Default)]
+struct StepResult {
+    clients: usize,
+    ttft_ms: Vec<f64>,
+    hits: u64,
+    misses: u64,
+    sheds: u64,
+    busy_retries_saved: u64,
+    wedged: u64,
+    wall_s: f64,
+    per_box: Vec<BoxStat>,
+}
+
+struct BoxStat {
+    ops: u64,
+    sheds: u64,
+    peak_pending: u64,
+}
+
+impl StepResult {
+    fn sorted_ttft(&self) -> Vec<f64> {
+        let mut v = self.ttft_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    fn hit_rate(&self) -> f64 {
+        let n = self.hits + self.misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.hits as f64 / n as f64
+        }
+    }
+
+    fn shed_rate(&self) -> f64 {
+        let n = self.hits + self.misses + self.sheds;
+        if n == 0 {
+            0.0
+        } else {
+            self.sheds as f64 / n as f64
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let s = self.sorted_ttft();
+        Json::obj(vec![
+            ("clients", Json::Int(self.clients as i64)),
+            ("ops", Json::Int(self.ttft_ms.len() as i64)),
+            ("p50_ttft_ms", Json::Num(percentile(&s, 0.50))),
+            ("p99_ttft_ms", Json::Num(percentile(&s, 0.99))),
+            ("p999_ttft_ms", Json::Num(percentile(&s, 0.999))),
+            ("hit_rate", Json::Num(self.hit_rate())),
+            ("shed_rate", Json::Num(self.shed_rate())),
+            ("busy_retries_saved", Json::Int(self.busy_retries_saved as i64)),
+            ("wedged_clients", Json::Int(self.wedged as i64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            (
+                "per_box",
+                Json::Arr(
+                    self.per_box
+                        .iter()
+                        .map(|b| {
+                            Json::obj(vec![
+                                ("ops", Json::Int(b.ops as i64)),
+                                ("sheds", Json::Int(b.sheds as i64)),
+                                ("peak_pending", Json::Int(b.peak_pending as i64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+// ------------------------------------------------------------- harness --
+
+struct Scale {
+    boxes: usize,
+    shards: usize,
+    max_pending: usize,
+    workers: usize,
+    keys: usize,
+    val_len: usize,
+    ops_per_client: usize,
+    ramp: Vec<usize>,
+    slo_ms: f64,
+}
+
+/// Drive one ramp step: `clients` simulated clients multiplexed over
+/// `scale.workers` worker threads (each holding one real connection per
+/// box), replaying the seeded trace against a fresh fleet in `mode`.
+fn run_step(mode: ServeMode, scale: &Scale, clients: usize, zipf: &Zipf) -> StepResult {
+    let (shards, max_pending) = match mode {
+        ServeMode::Threads => (1, 0),
+        ServeMode::Poll => (scale.shards, scale.max_pending),
+    };
+    let handles: Vec<_> = (0..scale.boxes)
+        .map(|_| {
+            KvServer::configure(usize::MAX, shards, max_pending)
+                .serve_with("127.0.0.1:0", mode)
+                .expect("bind fleet box")
+        })
+        .collect();
+    let addrs: Vec<String> = handles.iter().map(|h| h.addr_string()).collect();
+
+    let workers = scale.workers.min(clients).max(1);
+    let t0 = Instant::now();
+    let results: Vec<(Vec<f64>, u64, u64, u64, u64, u64)> = std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for w in 0..workers {
+            let addrs = &addrs;
+            let scale_ref = &scale;
+            joins.push(s.spawn(move || {
+                let mut conns: Vec<KvClient> = addrs
+                    .iter()
+                    .map(|a| {
+                        let c = KvClient::connect(a).expect("dial fleet box");
+                        c.set_io_timeout(Some(Duration::from_secs(10))).ok();
+                        c
+                    })
+                    .collect();
+                let mut ttft = Vec::new();
+                let (mut hits, mut misses, mut sheds, mut saved) = (0u64, 0u64, 0u64, 0u64);
+                let mut wedged = 0u64;
+                // this worker's slice of the simulated-client population,
+                // streams interleaved round-robin so in-flight work mixes
+                // clients the way a real box sees it
+                let my: Vec<Vec<usize>> = (w..clients)
+                    .step_by(workers)
+                    .map(|c| {
+                        client_trace(c, scale_ref.ops_per_client, zipf, scale_ref.keys, 42)
+                    })
+                    .collect();
+                'clients: for op in 0..scale_ref.ops_per_client {
+                    for trace in &my {
+                        let id = trace[op];
+                        let b = key_box(id, addrs.len());
+                        let key = key_name(id);
+                        match fetch_once(&mut conns[b], &key) {
+                            Fetch::Hit(ms) => {
+                                hits += 1;
+                                ttft.push(ms);
+                            }
+                            Fetch::Miss(ms) => {
+                                misses += 1;
+                                ttft.push(ms);
+                                // populate so later touches of this hot key
+                                // hit — the cache-fill half of the workload
+                                let val = key_value(id, scale_ref.val_len);
+                                if conns[b].set(&key, &val).is_err() {
+                                    wedged += 1;
+                                    break 'clients;
+                                }
+                            }
+                            Fetch::Busy => {
+                                // one free retry per op (the fabric's
+                                // absent-claimer discipline applied to
+                                // sheds), then count it shed and move on
+                                std::thread::yield_now();
+                                match fetch_once(&mut conns[b], &key) {
+                                    Fetch::Hit(ms) => {
+                                        hits += 1;
+                                        saved += 1;
+                                        ttft.push(ms);
+                                    }
+                                    Fetch::Miss(ms) => {
+                                        misses += 1;
+                                        saved += 1;
+                                        ttft.push(ms);
+                                    }
+                                    Fetch::Busy => sheds += 1,
+                                    Fetch::Dead => {
+                                        wedged += 1;
+                                        break 'clients;
+                                    }
+                                }
+                            }
+                            Fetch::Dead => {
+                                wedged += 1;
+                                break 'clients;
+                            }
+                        }
+                    }
+                }
+                (ttft, hits, misses, sheds, saved, wedged)
+            }));
+        }
+        joins.into_iter().map(|j| j.join().expect("worker panicked")).collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut out = StepResult { clients, wall_s, ..Default::default() };
+    for (ttft, hits, misses, sheds, saved, wedged) in results {
+        out.ttft_ms.extend(ttft);
+        out.hits += hits;
+        out.misses += misses;
+        out.sheds += sheds;
+        out.busy_retries_saved += saved;
+        out.wedged += wedged;
+    }
+    for h in handles {
+        out.per_box.push(BoxStat {
+            ops: h.server.store.hits() + h.server.store.misses(),
+            sheds: h.server.admission.sheds(),
+            peak_pending: h.server.admission.peak_pending() as u64,
+        });
+        h.shutdown();
+    }
+    out
+}
+
+enum Fetch {
+    Hit(f64),
+    Miss(f64),
+    Busy,
+    Dead,
+}
+
+/// One timed GET: TTFT is issue → reply decoded.  Server errors come back
+/// in-place (`pipeline_req`), so a `BUSY` shed is distinguishable from a
+/// dead connection.
+fn fetch_once(conn: &mut KvClient, key: &[u8]) -> Fetch {
+    let req = request(&[b"GET" as &[u8], key]);
+    let t = Instant::now();
+    match conn.pipeline_req(std::slice::from_ref(&req)) {
+        Ok(mut replies) => match replies.pop() {
+            Some(Value::Bulk(_)) => Fetch::Hit(t.elapsed().as_secs_f64() * 1e3),
+            Some(Value::Nil) => Fetch::Miss(t.elapsed().as_secs_f64() * 1e3),
+            Some(Value::Error(e)) if e.starts_with("BUSY") => Fetch::Busy,
+            _ => Fetch::Dead,
+        },
+        Err(_) => Fetch::Dead,
+    }
+}
+
+fn run_mode(mode: ServeMode, scale: &Scale, zipf: &Zipf) -> (Vec<StepResult>, usize) {
+    let mut steps = Vec::new();
+    let mut max_sustained = 0usize;
+    for &c in &scale.ramp {
+        let step = run_step(mode, scale, c, zipf);
+        let sorted = step.sorted_ttft();
+        let p99 = percentile(&sorted, 0.99);
+        let sustained = step.wedged == 0 && p99 <= scale.slo_ms;
+        println!(
+            "  {} @ {:>5} clients: p50 {:.3} ms, p99 {:.3} ms, p999 {:.3} ms, \
+             hit {:.3}, shed {:.4}, wedged {}, {:.1} s {}",
+            mode.name(),
+            c,
+            percentile(&sorted, 0.50),
+            p99,
+            percentile(&sorted, 0.999),
+            step.hit_rate(),
+            step.shed_rate(),
+            step.wedged,
+            step.wall_s,
+            if sustained { "[sustained]" } else { "[broke]" },
+        );
+        steps.push(step);
+        if sustained {
+            max_sustained = c;
+        } else {
+            break; // past the knee — higher steps only get worse
+        }
+    }
+    (steps, max_sustained)
+}
+
+fn main() {
+    let smoke = std::env::var("EDGECACHE_SMOKE").as_deref() == Ok("1");
+    let scale = if smoke {
+        Scale {
+            boxes: 2,
+            shards: 4,
+            max_pending: 256,
+            workers: 16,
+            keys: 128,
+            val_len: 2 << 10,
+            ops_per_client: 25,
+            ramp: vec![8, 32],
+            slo_ms: 1e9, // smoke gates mechanics, not performance
+        }
+    } else {
+        Scale {
+            boxes: 2,
+            shards: 8,
+            max_pending: 1024,
+            workers: 128,
+            keys: 4096,
+            val_len: 8 << 10,
+            ops_per_client: 40,
+            ramp: vec![128, 512, 1024, 2048, 4096],
+            slo_ms: 80.0,
+        }
+    };
+    println!(
+        "== fleet serving bench == ({} boxes, {} workers, {} keys, Zipf 1.1{})",
+        scale.boxes,
+        scale.workers,
+        scale.keys,
+        if smoke { ", SMOKE" } else { "" }
+    );
+    let zipf = Zipf::new(scale.keys, 1.1);
+
+    println!("threads core (ablation: 1 shard, unbounded admission):");
+    let (threads_steps, threads_max) = run_mode(ServeMode::Threads, &scale, &zipf);
+    println!("poll core ({} shards, {} pending cap):", scale.shards, scale.max_pending);
+    let (poll_steps, poll_max) = run_mode(ServeMode::Poll, &scale, &zipf);
+
+    // the verdict is read at the highest step BOTH cores sustained
+    let both = threads_max.min(poll_max);
+    let at = |steps: &[StepResult]| -> Option<(f64, f64)> {
+        steps
+            .iter()
+            .find(|s| s.clients == both)
+            .map(|s| (percentile(&s.sorted_ttft(), 0.99), s.hit_rate()))
+    };
+    let (threads_p99, threads_hr) = at(&threads_steps).unwrap_or((0.0, 0.0));
+    let (poll_p99, poll_hr) = at(&poll_steps).unwrap_or((0.0, 0.0));
+    println!(
+        "\nmax sustained: threads {} / poll {} clients; \
+         @{} clients p99 TTFT threads {:.3} ms vs poll {:.3} ms",
+        threads_max, poll_max, both, threads_p99, poll_p99
+    );
+
+    // -- mechanics gates (every run, smoke included) ----------------------
+    for (name, steps) in [("threads", &threads_steps), ("poll", &poll_steps)] {
+        for s in steps {
+            let expected = (s.hits + s.misses + s.sheds) as usize;
+            assert_eq!(
+                s.ttft_ms.len() + s.sheds as usize,
+                expected,
+                "{name}: ops lost without a verdict at {} clients",
+                s.clients
+            );
+        }
+    }
+    let poll_last = poll_steps.last().expect("poll ran at least one step");
+    assert_eq!(poll_last.wedged, 0, "poll core wedged a client");
+    assert!(poll_max >= scale.ramp[0], "poll core failed the very first step");
+
+    // -- performance gates (full run only: smoke scale is noise) ----------
+    if !smoke {
+        assert!(
+            poll_max >= threads_max,
+            "poll sustained fewer clients ({poll_max}) than the ablation ({threads_max})"
+        );
+        if both > 0 {
+            assert!(
+                poll_p99 < threads_p99,
+                "poll p99 TTFT {poll_p99:.3} ms not strictly under threads {threads_p99:.3} ms \
+                 at {both} clients"
+            );
+            assert!(
+                (poll_hr - threads_hr).abs() < 0.05,
+                "hit rates diverged: poll {poll_hr:.3} vs threads {threads_hr:.3}"
+            );
+        } else {
+            // vacuous win: the ablation broke at the very first ramp step
+            println!("no mutually-sustained step — ablation broke immediately");
+        }
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("fleet")),
+        ("smoke", Json::Bool(smoke)),
+        ("boxes", Json::Int(scale.boxes as i64)),
+        ("workers", Json::Int(scale.workers as i64)),
+        ("keys", Json::Int(scale.keys as i64)),
+        ("zipf_s", Json::Num(1.1)),
+        ("slo_ms", Json::Num(scale.slo_ms)),
+        ("threads", Json::Arr(threads_steps.iter().map(|s| s.to_json()).collect())),
+        ("poll", Json::Arr(poll_steps.iter().map(|s| s.to_json()).collect())),
+        (
+            "verdict",
+            Json::obj(vec![
+                ("max_sustained_threads", Json::Int(threads_max as i64)),
+                ("max_sustained_poll", Json::Int(poll_max as i64)),
+                ("mutual_clients", Json::Int(both as i64)),
+                ("threads_p99_ttft_ms", Json::Num(threads_p99)),
+                ("poll_p99_ttft_ms", Json::Num(poll_p99)),
+                ("threads_hit_rate", Json::Num(threads_hr)),
+                ("poll_hit_rate", Json::Num(poll_hr)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("EDGECACHE_FLEET_JSON")
+        .unwrap_or_else(|_| "BENCH_fleet.json".to_string());
+    match std::fs::write(&path, json.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+    println!("OK");
+}

@@ -6,7 +6,7 @@
 use anyhow::Result;
 
 use crate::kvstore::server::ServerHandle;
-use crate::kvstore::KvServer;
+use crate::kvstore::{KvServer, ServeMode};
 
 pub struct CacheBox {
     pub handle: ServerHandle,
@@ -17,8 +17,23 @@ impl CacheBox {
     /// `max_bytes` bounds the prompt-cache keyspace (the Pi 5 in the paper
     /// has 16 GB; eviction is exact-LRU).
     pub fn start(addr: &str, max_bytes: usize) -> Result<CacheBox> {
-        let server = KvServer::new(max_bytes);
-        let handle = server.serve(addr)?;
+        Self::start_tuned(addr, max_bytes, 1, 0, ServeMode::Threads)
+    }
+
+    /// [`CacheBox::start`] with the serving-core knobs exposed: `shards`
+    /// independent store shards under one fleet-consistent byte budget,
+    /// `max_pending` admission slots (0 = unbounded; overflow is shed with
+    /// `BUSY`), and the serving core (`ServeMode::Threads` per-connection
+    /// threads, or `ServeMode::Poll` for the non-blocking readiness loop).
+    pub fn start_tuned(
+        addr: &str,
+        max_bytes: usize,
+        shards: usize,
+        max_pending: usize,
+        mode: ServeMode,
+    ) -> Result<CacheBox> {
+        let server = KvServer::configure(max_bytes, shards, max_pending);
+        let handle = server.serve_with(addr, mode)?;
         Ok(CacheBox { handle })
     }
 
@@ -32,8 +47,8 @@ impl CacheBox {
     }
 
     pub fn stats(&self) -> (usize, usize, u64) {
-        let s = self.handle.server.store.lock().unwrap();
-        (s.len(), s.used_bytes(), s.evictions)
+        let s = &self.handle.server.store;
+        (s.len(), s.used_bytes(), s.evictions())
     }
 
     /// Stored length of one entry (None when absent).  Does not refresh
@@ -41,12 +56,12 @@ impl CacheBox {
     /// show up here as tiny (tens-of-bytes) entries next to the one real
     /// state blob per prompt.
     pub fn entry_len(&self, key: &[u8]) -> Option<usize> {
-        self.handle.server.store.lock().unwrap().strlen(key)
+        self.handle.server.store.strlen(key)
     }
 
     /// Bytes currently held by the keyspace (`Store::used_bytes`).
     pub fn used_bytes(&self) -> usize {
-        self.handle.server.store.lock().unwrap().used_bytes()
+        self.handle.server.store.used_bytes()
     }
 
     pub fn catalog_version(&self) -> u64 {

@@ -411,6 +411,13 @@ pub struct ClientStats {
     /// Indirect probes that found the suspect reachable via a relay and
     /// withheld the death verdict (a false positive prevented).
     pub probe_saves: u64,
+    /// Requests the fleet shed with `BUSY` at admission gates, as observed
+    /// by this client (mirror of the per-peer [`PeerLedger::sheds`] sums —
+    /// health-neutral, these never count as peer failures).
+    pub busy_rejections: u64,
+    /// Free re-plan rounds fetches were granted because a saturated peer
+    /// shed a share (capped at one per fetch).
+    pub replans_on_busy: u64,
 }
 
 /// Where a downloaded state physically lives on the fabric — the anchor
@@ -623,6 +630,7 @@ impl EdgeClient {
         self.stats.suspect_transitions = self.membership.suspect_transitions();
         self.stats.heals = self.membership.heals();
         self.stats.timeouts = self.peers.iter().map(|p| p.ledger.timeouts).sum();
+        self.stats.busy_rejections = self.peers.iter().map(|p| p.ledger.sheds).sum();
         self.stats.gossip_adoptions = self.membership.gossip_adoptions();
         self.stats.gossip_refutations = self.membership.refutations();
         self.stats.indirect_probes = self.membership.indirect_probes();
@@ -1241,6 +1249,7 @@ impl EdgeClient {
                     self.stats.range_fetches += 1;
                     self.stats.re_plans += f.re_plans;
                     self.stats.peer_failures += f.share_failures;
+                    self.stats.replans_on_busy += f.busy_replans;
                     if f.share_failures > 0 {
                         // a claimer failed or had lost its copy mid-fetch:
                         // force the next repair sweep to re-verify this
@@ -1337,6 +1346,14 @@ impl EdgeClient {
         match res {
             Ok(info) => {
                 self.peers[i].note_io(Outcome::IoOk);
+                // piggyback the admission telemetry the same INFO carries:
+                // the box's high-water pending depth (absent on servers
+                // predating the admission gate — the field is append-only)
+                if let Some(pk) = crate::kvstore::client::parse_info_field(&info, "pending_peak")
+                {
+                    self.peers[i].ledger.peak_pending =
+                        self.peers[i].ledger.peak_pending.max(pk as u64);
+                }
                 crate::kvstore::client::parse_info_used_bytes(&info)
                     .map(|v| v as u64)
                     .unwrap_or(u64::MAX)

@@ -222,6 +222,9 @@ impl Peer {
         if outcome == Outcome::IoTimeout {
             self.ledger.timeouts += 1;
         }
+        if outcome == Outcome::Overloaded {
+            self.ledger.sheds += 1;
+        }
         if let Some(h) = &self.health {
             h.report(outcome);
         }
@@ -345,6 +348,14 @@ pub struct FabricFetch {
     pub re_plans: u64,
     /// Shares (including head attempts) that failed along the way.
     pub share_failures: u64,
+    /// Shares (including head attempts) a saturated peer shed with `BUSY`.
+    /// Health-neutral and *not* counted into `share_failures`: the box is
+    /// alive, its admission queue is just full.
+    pub busy_shares: u64,
+    /// Free re-plan rounds granted because a peer answered `BUSY` (capped
+    /// at one per fetch so a perpetually-saturated peer cannot spin the
+    /// re-plan loop).
+    pub busy_replans: u64,
     /// Whether more than one peer actually served chunks.
     pub multi_source: bool,
     /// Chunks whose rows came off a peer stripe.
@@ -459,6 +470,10 @@ enum HeadOutcome {
     /// Carries the liveness classification — a deadline expiry is
     /// `IoTimeout` (→ `Suspect`), a closed/reset socket `IoDead`.
     PeerDown(Outcome),
+    /// The peer shed the request at its admission gate (`BUSY` reply): it
+    /// is alive but saturated.  Health-neutral — rotate to the next
+    /// claimer without tearing the connection down or burning a strike.
+    Busy,
     /// The peer does not speak `GETCHUNKS` (or the entry is not chunked):
     /// retry via the byte-oriented GETRANGE compatibility path.
     Unsupported,
@@ -487,6 +502,12 @@ fn acquire_head_push(
     let mut stream = match conn.getchunks_stream(target, want_rows) {
         Ok(ChunksReply::Stream(s)) => s,
         Ok(ChunksReply::Terminal(Value::Nil)) => return HeadOutcome::Absent,
+        // BUSY must be discriminated *before* the generic error arm: a shed
+        // is not a protocol gap, and retrying it over GETRANGE would only
+        // hit the same full admission queue with a second request.
+        Ok(ChunksReply::Terminal(Value::Error(e))) if e.starts_with("BUSY") => {
+            return HeadOutcome::Busy;
+        }
         Ok(ChunksReply::Terminal(Value::Error(_))) => return HeadOutcome::Unsupported,
         Ok(ChunksReply::Terminal(_)) => return HeadOutcome::Reject,
         Err(e) => {
@@ -645,6 +666,15 @@ fn acquire_head_getrange(
     HeadOutcome::Done { asm, wire }
 }
 
+/// Queue-depth-aware cost of a peer's link: the static link model derated
+/// by the peer's smoothed observed/expected service-time ratio
+/// ([`PeerLedger::service_slowdown`]).  A box whose shares keep running
+/// slow — queue building behind its admission gate — sheds planner share
+/// to the survivors *before* it starts shedding requests.
+fn peer_link_cost(peer: &Peer) -> LinkCost {
+    LinkCost::from_link(&peer.link).derated(peer.ledger.service_slowdown())
+}
+
 /// Outcome of one worker's chunk share.
 struct ShareOutcome {
     wire: usize,
@@ -656,6 +686,10 @@ struct ShareOutcome {
     /// range alias).  Distinguished from genuine failures so discovering
     /// an absent claimer never burns the bounded re-plan budget.
     absent: bool,
+    /// The peer shed this share at its admission gate (`BUSY` reply): it
+    /// is alive but saturated.  Health-neutral — the share goes back into
+    /// the re-plan pool with one free round, not a health strike.
+    busy: bool,
 }
 
 /// I/O half of one share: pipelined GETRANGE batch for this peer's chunk
@@ -676,7 +710,7 @@ fn fetch_share_io(
     verifier: &ChunkVerifier,
     asm: &Mutex<Option<StateAssembler>>,
 ) -> (ShareOutcome, Option<Outcome>) {
-    let fail = ShareOutcome { wire: 0, fed: 0, ok: false, absent: false };
+    let fail = ShareOutcome { wire: 0, fed: 0, ok: false, absent: false, busy: false };
     let Some((conn, shaper)) = peer.conn_parts() else {
         return (fail, Some(Outcome::IoDead));
     };
@@ -696,12 +730,18 @@ fn fetch_share_io(
     let mut ok = true;
     let mut dead: Option<Outcome> = None;
     let mut absent = false;
+    let mut busy = false;
     for &c in chunks {
         let bytes = match replies.next_reply() {
             Ok(Some(Value::Bulk(b))) => b,
             Ok(Some(Value::Nil)) => {
                 ok = false; // the key is not on this peer at all
                 absent = true;
+                break;
+            }
+            Ok(Some(Value::Error(e))) if e.starts_with("BUSY") => {
+                ok = false; // shed at the admission gate, not a failure
+                busy = true;
                 break;
             }
             Ok(_) => {
@@ -766,9 +806,11 @@ fn fetch_share_io(
     sess.finish();
     if !ok && dead.is_none() {
         // keep the connection frame-synced for the re-plan / fallback
+        // (a shed burst is one BUSY error per pipelined request — draining
+        // them leaves the very same connection usable next round)
         let _ = replies.drain();
     }
-    (ShareOutcome { wire, fed, ok, absent }, dead)
+    (ShareOutcome { wire, fed, ok, absent, busy }, dead)
 }
 
 /// One worker share: run the I/O, then settle the peer's ledger,
@@ -791,12 +833,25 @@ fn fetch_share(
         // stream is desynced — only the membership verdict differs
         peer.mark_dead_conn();
         peer.note_io(o);
+    } else if outcome.busy {
+        // alive-but-saturated: the drained connection stays pooled and the
+        // membership view records a health-neutral Overloaded observation
+        peer.note_io(Outcome::Overloaded);
     } else if outcome.ok {
         peer.note_io(Outcome::IoOk);
     }
     if outcome.ok {
         peer.ledger.fetch_shares += 1;
-    } else {
+        // queue-depth signal for the planner: how long this share took
+        // against what the link model alone predicts.  Only successful
+        // shares feed the EWMA — failures and sheds have their own
+        // (health / free-replan) channels.
+        let expected_ms = (peer.link.rtt.as_secs_f64()
+            + expected as f64 / peer.link.goodput_bps.max(1.0))
+            * 1e3;
+        peer.ledger
+            .note_service_time(t0.elapsed().as_secs_f64() * 1e3, expected_ms);
+    } else if !outcome.busy {
         peer.ledger.share_failures += 1;
     }
     peer.ledger.chunks_served += outcome.fed as u64;
@@ -851,7 +906,8 @@ fn feed_local(
 /// elapses here while each share thread sleeps on its own modelled wire,
 /// so the two feeders genuinely overlap).  Returns (wire bytes moved,
 /// failed shares, slots that fed at least one chunk, failed slots, slots
-/// that answered "no such key", chunks the feeder recomputed).
+/// that answered "no such key", slots shed with `BUSY`, chunks the feeder
+/// recomputed).
 #[allow(clippy::type_complexity)]
 fn run_shares(
     claimers: &mut [(usize, &mut Peer)],
@@ -861,7 +917,7 @@ fn run_shares(
     geom: &[(usize, usize)],
     verifier: &ChunkVerifier,
     asm: &Mutex<Option<StateAssembler>>,
-) -> (usize, u64, Vec<usize>, Vec<usize>, Vec<usize>, usize) {
+) -> (usize, u64, Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>, usize) {
     let mut slots: Vec<Option<&mut Peer>> =
         claimers.iter_mut().map(|(_, p)| Some(&mut **p)).collect();
     let mut wire = 0usize;
@@ -869,6 +925,7 @@ fn run_shares(
     let mut contributed = Vec::new();
     let mut failed_slots = Vec::new();
     let mut absent_slots = Vec::new();
+    let mut busy_slots = Vec::new();
     let mut recomputed = 0usize;
     std::thread::scope(|s| {
         let mut handles = Vec::new();
@@ -900,7 +957,12 @@ fn run_shares(
                     if o.absent {
                         absent_slots.push(slot);
                     }
-                    if !o.ok {
+                    if o.busy {
+                        // a shed is neither a failure nor an absence: the
+                        // slot stays plannable (the queue may have drained
+                        // by the next round)
+                        busy_slots.push(slot);
+                    } else if !o.ok {
                         fails += 1;
                         failed_slots.push(slot);
                     }
@@ -912,7 +974,7 @@ fn run_shares(
             }
         }
     });
-    (wire, fails, contributed, failed_slots, absent_slots, recomputed)
+    (wire, fails, contributed, failed_slots, absent_slots, busy_slots, recomputed)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -923,6 +985,8 @@ fn finish_fetch(
     multi_source: bool,
     re_plans: u64,
     share_failures: u64,
+    busy_shares: u64,
+    busy_replans: u64,
     chunks_fetched: usize,
     chunks_recomputed: usize,
 ) -> Option<FabricFetch> {
@@ -937,6 +1001,8 @@ fn finish_fetch(
             head_peer,
             re_plans,
             share_failures,
+            busy_shares,
+            busy_replans,
             multi_source,
             chunks_fetched,
             chunks_recomputed,
@@ -993,6 +1059,11 @@ pub fn fetch_prefix_multi(
     let live = claimers.iter().filter(|(_, p)| p.is_connected()).count();
     let single = live <= 1 && local.is_none();
     let mut share_failures = 0u64;
+    // shares (head attempts included) a saturated peer shed with BUSY, and
+    // the free re-plan rounds those sheds earned (at most one per fetch)
+    let mut busy_shares = 0u64;
+    let mut busy_replans = 0u64;
+    let mut busy_free_granted = false;
     // slots that authoritatively answered "no such key" during head
     // rotation (evicted copy, Bloom FP, or a ring peer holding only the
     // range alias, not the target blob): they cannot serve any share, so
@@ -1039,7 +1110,18 @@ pub fn fetch_prefix_multi(
                 peer.ledger.bytes_down += wire as u64;
                 peer.note_io(Outcome::IoOk);
                 let head_peer = claimers[slot].0;
-                return finish_fetch(asm, wire, head_peer, false, 0, share_failures, k, 0);
+                return finish_fetch(
+                    asm,
+                    wire,
+                    head_peer,
+                    false,
+                    0,
+                    share_failures,
+                    busy_shares,
+                    busy_replans,
+                    k,
+                    0,
+                );
             }
             HeadOutcome::Head { asm, wire } => {
                 peer.ledger.bytes_down += wire as u64;
@@ -1059,6 +1141,31 @@ pub fn fetch_prefix_multi(
                 );
             }
             HeadOutcome::Reject => return None, // caller: full-blob fallback
+            HeadOutcome::Busy => {
+                // shed at the admission gate: the reply was a single
+                // frame-synced BUSY error, so the pooled connection stays
+                // up and the peer keeps its health — just rotate
+                peer.note_io(Outcome::Overloaded);
+                busy_shares += 1;
+                log_debug!(
+                    "fabric",
+                    "head peer {} busy; rotating",
+                    peer.cfg.addr
+                );
+            }
+            HeadOutcome::PeerDown(Outcome::Overloaded) => {
+                // BUSY surfaced through a non-pipelined error path
+                // (`classify_io_err` walked the error chain): the reply
+                // was consumed whole, so the connection is still synced —
+                // same health-neutral rotation as `HeadOutcome::Busy`
+                peer.note_io(Outcome::Overloaded);
+                busy_shares += 1;
+                log_debug!(
+                    "fabric",
+                    "head peer {} busy; rotating",
+                    peer.cfg.addr
+                );
+            }
             HeadOutcome::PeerDown(o) => {
                 peer.mark_dead_conn();
                 peer.note_io(o);
@@ -1126,9 +1233,11 @@ pub fn fetch_prefix_multi(
     order.extend((0..n).filter(|&s| {
         s != head_slot && !absent_slots.contains(&s) && claimers[s].1.is_connected()
     }));
+    // queue-depth-aware stripe weights: effective (derated) goodput, not
+    // the static link model — a peer running hot takes a smaller stripe
     let weights: Vec<f64> = order
         .iter()
-        .map(|&s| claimers[s].1.link.goodput_bps)
+        .map(|&s| peer_link_cost(&*claimers[s].1).goodput_bps)
         .collect();
 
     // mixed plan (feeder attached): price each chunk's exact stored wire
@@ -1145,7 +1254,7 @@ pub fn fetch_prefix_multi(
                 .collect();
             let links: Vec<LinkCost> = order
                 .iter()
-                .map(|&s| LinkCost::from_link(&claimers[s].1.link))
+                .map(|&s| peer_link_cost(&*claimers[s].1))
                 .collect();
             plan_split(&chunk_costs, &links, lr.prefill_ms_per_tok).split_point()
         }
@@ -1194,7 +1303,7 @@ pub fn fetch_prefix_multi(
         } else {
             local.as_mut().map(|lr| (lr, local_round.as_slice()))
         };
-        let (wire, fails, contributed, failed_slots, absent_now, fed_local) =
+        let (wire, fails, contributed, failed_slots, absent_now, busy_now, fed_local) =
             run_shares(claimers, &assign, local_arg, target, &geom, &verifier, &asm_cell);
         chunks_recomputed += fed_local;
         local_round = Vec::new();
@@ -1207,6 +1316,20 @@ pub fn fetch_prefix_multi(
         }
         if !absent_now.is_empty() {
             free_rounds += 1;
+        }
+        if !busy_now.is_empty() {
+            busy_shares += busy_now.len() as u64;
+            // a shed earns ONE free re-plan per fetch — like discovering an
+            // absent claimer it is not the client's fault, but unlike
+            // absence it is not a permanent exclusion, so an uncapped
+            // grant would let a perpetually-saturated peer spin the loop.
+            // Busy slots stay out of `bad_slots`: the queue may well have
+            // drained by the next round.
+            if !busy_free_granted {
+                busy_free_granted = true;
+                free_rounds += 1;
+                busy_replans += 1;
+            }
         }
         for s in failed_slots {
             if !bad_slots.contains(&s) {
@@ -1240,7 +1363,7 @@ pub fn fetch_prefix_multi(
                         .collect();
                     let links: Vec<LinkCost> = live
                         .iter()
-                        .map(|&s| LinkCost::from_link(&claimers[s].1.link))
+                        .map(|&s| peer_link_cost(&*claimers[s].1))
                         .collect();
                     let all_fetch = vec![ChunkSource::Fetch; refetch.len()];
                     let fetch_s =
@@ -1303,6 +1426,8 @@ pub fn fetch_prefix_multi(
         sources.len() > 1,
         re_plans,
         share_failures,
+        busy_shares,
+        busy_replans,
         k - chunks_recomputed,
         chunks_recomputed,
     )

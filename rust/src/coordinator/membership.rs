@@ -119,6 +119,11 @@ pub enum Outcome {
     IoTimeout,
     /// A hot-path operation found the connection dead (reset, EOF, refused).
     IoDead,
+    /// The peer shed the operation with a `BUSY` reply (admission control):
+    /// alive but saturated.  Health-neutral by design — striking an
+    /// overloaded peer toward `Suspect`/`Dead` would amplify overload into
+    /// false churn; the fabric instead treats it as a replan signal.
+    Overloaded,
 }
 
 impl Outcome {
@@ -199,6 +204,13 @@ impl Default for DeadlineBudget {
 /// `anyhow` context wrapping does not hide the underlying `io::Error`.
 pub fn classify_io_err(e: &anyhow::Error) -> Outcome {
     for cause in e.chain() {
+        // a shed op surfaces as a server error whose text carries the BUSY
+        // prefix (`exec_req` wraps `Value::Error` into "server error: BUSY
+        // ..."); it must classify as Overloaded before any io inspection —
+        // the socket is healthy, the box is just saturated
+        if cause.to_string().contains("BUSY") {
+            return Outcome::Overloaded;
+        }
         if let Some(io) = cause.downcast_ref::<std::io::Error>() {
             return match io.kind() {
                 std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
@@ -382,6 +394,8 @@ pub fn step(
             HeartbeatOk | IoOk => (Up, 0, 0),
             HeartbeatMiss | IoTimeout => (Suspect, 1, 0),
             IoDead => (Dead, 0, 0),
+            // shed load is health-neutral: alive, just saturated
+            Overloaded => (Up, strikes, proofs),
         },
         Suspect => match input {
             HeartbeatOk | IoOk => {
@@ -400,6 +414,9 @@ pub fn step(
                 }
             }
             IoDead => (Dead, 0, 0),
+            // neither a strike nor an exonerating proof: BUSY says nothing
+            // about whether the suspicion was deserved
+            Overloaded => (Suspect, strikes, proofs),
         },
         Dead => match input {
             // the only way out of Dead: a heartbeat (sync-loop probe)
@@ -422,6 +439,9 @@ pub fn step(
             }
             // probation is strict: any failure sends the peer straight back
             HeartbeatMiss | IoTimeout | IoDead => (Dead, 0, 0),
+            // but shed load is not a failure — probation neither advances
+            // nor resets on a box that answered (with BUSY) at all
+            Overloaded => (Recovering, 0, proofs),
         },
     }
 }
@@ -1026,6 +1046,49 @@ mod tests {
         assert_eq!(classify_io_err(&reset), Outcome::IoDead);
         let plain = anyhow::anyhow!("not an io error at all");
         assert_eq!(classify_io_err(&plain), Outcome::IoDead);
+    }
+
+    #[test]
+    fn busy_replies_classify_as_overloaded_not_a_strike() {
+        // the shape exec_req produces for a BUSY error reply, with context
+        let busy: anyhow::Error =
+            anyhow::anyhow!("server error: BUSY server queue full").context("fetch share");
+        assert_eq!(classify_io_err(&busy), Outcome::Overloaded);
+        // context layers above the BUSY text must not hide it
+        let wrapped = anyhow::anyhow!("server error: BUSY server queue full")
+            .context("stripe 2")
+            .context("while reading reply");
+        assert_eq!(classify_io_err(&wrapped), Outcome::Overloaded);
+    }
+
+    #[test]
+    fn overloaded_is_health_neutral_in_every_state() {
+        let p = policy();
+        use PeerHealth::*;
+        // no state moves, no counters move — shed load is not evidence
+        for (state, strikes, proofs) in
+            [(Up, 0, 0), (Suspect, 1, 1), (Dead, 0, 0), (Recovering, 0, 1)]
+        {
+            let (s2, k2, f2) = step(state, strikes, proofs, Outcome::Overloaded, &p);
+            assert_eq!(s2, state, "{state:?} must not transition on BUSY");
+            if state != Dead {
+                assert_eq!((k2, f2), (strikes, proofs), "{state:?} counters frozen");
+            }
+        }
+        // a Suspect peer one strike from Dead survives any number of BUSYs
+        let mut st = (Suspect, p.dead_after - 1, 0);
+        for _ in 0..10 {
+            st = step(st.0, st.1, st.2, Outcome::Overloaded, &p);
+        }
+        assert_eq!(st.0, Suspect, "BUSY storm must never promote to Dead");
+
+        // and through Membership::report: no epoch bump, no transitions
+        let m = Membership::new(1, p);
+        let e0 = m.epoch();
+        assert_eq!(m.report(0, Outcome::Overloaded), Up);
+        assert_eq!(m.epoch(), e0);
+        assert_eq!(m.suspect_transitions(), 0);
+        assert_eq!(m.deaths(), 0);
     }
 
     #[test]

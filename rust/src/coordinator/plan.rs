@@ -96,6 +96,23 @@ impl LinkCost {
     pub fn from_link(l: &LinkModel) -> Self {
         LinkCost { goodput_bps: l.goodput_bps, rtt_s: l.rtt.as_secs_f64() }
     }
+
+    /// Queue-depth-aware derating: scale effective goodput down by the
+    /// peer's observed/expected service-time ratio
+    /// (`PeerLedger::service_slowdown`), so a hot box — one whose shares
+    /// complete slower than its link model alone explains — loses planner
+    /// share *before* it stalls.  The factor is clamped to `[0.05, 1.0]`:
+    /// a slowdown never makes a link look faster than its model, and even
+    /// a pathological observation leaves the peer 5% of its goodput so it
+    /// keeps receiving (and can shed or recover) rather than being
+    /// silently zeroed out of every plan.
+    pub fn derated(self, slowdown: f64) -> LinkCost {
+        if !slowdown.is_finite() || slowdown <= 0.0 {
+            return self;
+        }
+        let factor = (1.0 / slowdown).clamp(0.05, 1.0);
+        LinkCost { goodput_bps: self.goodput_bps * factor, rtt_s: self.rtt_s }
+    }
 }
 
 /// Where one chunk's rows come from.
@@ -299,6 +316,37 @@ mod tests {
         }
         assert_eq!(PlanMode::by_name("mixed"), Some(PlanMode::Chunk));
         assert!(PlanMode::by_name("per-token").is_none());
+    }
+
+    #[test]
+    fn derating_shifts_share_to_survivors() {
+        use crate::coordinator::policy::PeerPlanner;
+        // Three identical links; peer 1 reports a 4x service-time slowdown
+        // (queue building up behind its admission gate).  Its stripe must
+        // shrink and the survivors' stripes must grow.
+        let links = [wifi(), wifi().derated(4.0), wifi()];
+        let weights: Vec<f64> = links.iter().map(|l| l.goodput_bps).collect();
+        let stripes = PeerPlanner::default().split_chunks(18, &weights);
+        assert_eq!(stripes.len(), 3);
+        let hot = stripes[1].len();
+        let cold = stripes[0].len().min(stripes[2].len());
+        assert!(
+            hot < cold,
+            "hot peer must get a strictly smaller stripe: {stripes:?}"
+        );
+        // Coverage is still contiguous and complete.
+        assert_eq!(stripes[0].start, 0);
+        assert_eq!(stripes[2].end, 18);
+
+        // Derating degrades goodput only — latency is a link property, not
+        // a queue property — and is clamped on both sides.
+        let base = wifi();
+        assert_eq!(base.derated(4.0).rtt_s, base.rtt_s);
+        assert_eq!(base.derated(1.0).goodput_bps, base.goodput_bps);
+        assert_eq!(base.derated(0.5).goodput_bps, base.goodput_bps); // never faster
+        assert!(base.derated(1e9).goodput_bps >= base.goodput_bps * 0.05 * 0.999);
+        assert_eq!(base.derated(f64::NAN).goodput_bps, base.goodput_bps);
+        assert_eq!(base.derated(-1.0).goodput_bps, base.goodput_bps);
     }
 
     #[test]

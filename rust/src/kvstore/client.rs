@@ -348,8 +348,15 @@ impl KvClient {
 /// and callers that shape the `INFO` exchange themselves (the upload
 /// placement probe).
 pub fn parse_info_used_bytes(info: &str) -> Option<usize> {
+    parse_info_field(info, "used_bytes")
+}
+
+/// Extract any numeric `name:value` field from an `INFO` reply (the format
+/// is append-only `name:value\r\n` lines, so parsing by prefix stays
+/// compatible across server generations that add fields).
+pub fn parse_info_field(info: &str, name: &str) -> Option<usize> {
     info.lines()
-        .find_map(|l| l.strip_prefix("used_bytes:"))
+        .find_map(|l| l.strip_prefix(name).and_then(|r| r.strip_prefix(':')))
         .and_then(|v| v.trim().parse::<usize>().ok())
 }
 

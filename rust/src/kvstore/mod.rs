@@ -19,9 +19,11 @@
 pub mod client;
 pub mod resp;
 pub mod server;
+pub mod shard;
 pub mod store;
 
 pub use client::KvClient;
 pub use resp::Value;
-pub use server::{KvServer, ServerHandle};
+pub use server::{KvServer, ServeMode, ServerHandle};
+pub use shard::ShardedStore;
 pub use store::Store;

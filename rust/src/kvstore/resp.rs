@@ -353,6 +353,73 @@ pub fn write_value(stream: &mut impl Write, v: &Value) -> Result<(), RespError> 
     Ok(())
 }
 
+/// Buffered reply writer for nonblocking sockets — the write-side twin of
+/// [`Decoder`].  Encoded frames accumulate in one buffer; [`WriteBuf::flush_into`]
+/// writes as much as the sink accepts and resumes mid-frame on the next
+/// call, so a streamed `GETCHUNKS` reply to a slow reader never blocks the
+/// serving loop and never tears a frame.
+#[derive(Debug, Default)]
+pub struct WriteBuf {
+    buf: Vec<u8>,
+}
+
+impl Default for WriteBuf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WriteBuf {
+    pub fn new() -> Self {
+        WriteBuf { buf: Vec::new() }
+    }
+
+    /// Queue one encoded frame behind whatever is still unflushed.
+    pub fn push(&mut self, v: &Value) {
+        v.encode_into(&mut self.buf);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Unflushed bytes queued (the read side gates on this high-water mark).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Write as much as `w` accepts right now; returns the bytes written by
+    /// this call.  `WouldBlock` is not an error — the remaining bytes stay
+    /// queued and the next call resumes exactly where this one stopped.
+    /// `Interrupted` retries; a sink that accepts zero bytes is reported as
+    /// `WriteZero` so callers drop the connection instead of spinning.
+    pub fn flush_into(&mut self, w: &mut impl Write) -> io::Result<usize> {
+        let mut written = 0usize;
+        while !self.buf.is_empty() {
+            match w.write(&self.buf) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "sink accepted zero bytes",
+                    ))
+                }
+                Ok(n) => {
+                    self.buf.drain(..n);
+                    written += n;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(written)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -531,5 +598,194 @@ mod tests {
                 assert_eq!(d.next_value().unwrap().unwrap(), v);
             }
         });
+    }
+
+    /// Decode `enc` fed as two fragments split at `cut` and assert the
+    /// result is identical to the whole-buffer decode (`want`).
+    fn decode_split(enc: &[u8], cut: usize, want: &[Value]) {
+        let mut d = Decoder::new();
+        let mut got = Vec::new();
+        d.feed(&enc[..cut]);
+        while let Some(v) = d.next_value().unwrap() {
+            got.push(v);
+        }
+        d.feed(&enc[cut..]);
+        while let Some(v) = d.next_value().unwrap() {
+            got.push(v);
+        }
+        assert_eq!(got, want, "split at byte {cut} of {}", enc.len());
+    }
+
+    #[test]
+    fn every_split_point_decodes_identically() {
+        // frames chosen so cuts land inside bulk length headers, multi-bulk
+        // headers, CRLF terminators, negative integers and binary payloads
+        // that themselves contain CRLF
+        let vs = vec![
+            request(&[b"SET", b"key\r\nwith\r\ncrlf", b"\x00\xff\x0d\x0a"]),
+            Value::Nil,
+            Value::Int(-1234567890),
+            Value::Error("BUSY server queue full".into()),
+            Value::Array(vec![
+                Value::bulk(vec![13u8; 37]),
+                Value::Nil,
+                Value::Simple("OK".into()),
+            ]),
+        ];
+        let mut enc = Vec::new();
+        for v in &vs {
+            v.encode_into(&mut enc);
+        }
+        for cut in 0..=enc.len() {
+            decode_split(&enc, cut, &vs);
+        }
+    }
+
+    #[test]
+    fn random_frame_sequences_survive_every_split() {
+        run_prop_n("resp-every-split", 24, |g| {
+            let n = 1 + g.size(3);
+            let mut vs = Vec::new();
+            for _ in 0..n {
+                let kind = g.usize_in(0, 5);
+                let v = match kind {
+                    0 => Value::Simple("PONG".into()),
+                    1 => Value::Error("ERR boom".into()),
+                    2 => Value::Int(g.rng.next_u64() as i64),
+                    3 => Value::Nil,
+                    4 => {
+                        let len = g.size(200);
+                        Value::bulk(g.bytes(len))
+                    }
+                    _ => {
+                        let len = g.size(64);
+                        Value::Array(vec![Value::bulk(g.bytes(len)), Value::Int(7)])
+                    }
+                };
+                vs.push(v);
+            }
+            let mut enc = Vec::new();
+            for v in &vs {
+                v.encode_into(&mut enc);
+            }
+            // identity holds for a cut at every byte boundary...
+            for cut in 0..=enc.len() {
+                decode_split(&enc, cut, &vs);
+            }
+            // ...and for the degenerate one-byte-per-feed dribble
+            let mut d = Decoder::new();
+            let mut got = Vec::new();
+            for b in &enc {
+                d.feed(std::slice::from_ref(b));
+                while let Some(v) = d.next_value().unwrap() {
+                    got.push(v);
+                }
+            }
+            assert_eq!(got, vs);
+        });
+    }
+
+    /// A sink modelling a non-blocking socket with a tiny send buffer: it
+    /// accepts at most `cap` bytes per `write` call and at most `accept`
+    /// bytes in total before reporting `WouldBlock`.
+    struct CappedWriter {
+        data: Vec<u8>,
+        cap: usize,
+        accept: usize,
+    }
+
+    impl io::Write for CappedWriter {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.accept == 0 {
+                return Err(io::Error::from(io::ErrorKind::WouldBlock));
+            }
+            let n = buf.len().min(self.cap).min(self.accept);
+            self.data.extend_from_slice(&buf[..n]);
+            self.accept -= n;
+            Ok(n)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_buf_resumes_partial_writes() {
+        let vs = [
+            Value::ok(),
+            Value::bulk(vec![7u8; 300]),
+            Value::Int(-5),
+            Value::Error("BUSY server queue full".into()),
+        ];
+        let mut expect = Vec::new();
+        for v in &vs {
+            v.encode_into(&mut expect);
+        }
+        for cap in [1usize, 3, 7, 64, 1 << 20] {
+            let mut wb = WriteBuf::new();
+            for v in &vs {
+                wb.push(v);
+            }
+            assert_eq!(wb.len(), expect.len());
+            let mut sink = CappedWriter { data: Vec::new(), cap, accept: 0 };
+            let mut rounds = 0usize;
+            while !wb.is_empty() {
+                // the "kernel" frees a dribble of send-buffer space, then
+                // the next flush resumes exactly where the last stopped
+                sink.accept += cap.min(11);
+                let n = wb.flush_into(&mut sink).unwrap();
+                assert!(n <= cap.min(11) + cap, "flushed more than the sink took");
+                rounds += 1;
+                assert!(rounds < 100_000, "flush wedged at cap {cap}");
+            }
+            assert_eq!(sink.data, expect, "cap {cap}");
+            // an empty buffer flush is a no-op, not an error
+            assert_eq!(wb.flush_into(&mut sink).unwrap(), 0);
+        }
+    }
+
+    #[test]
+    fn write_buf_partial_write_random_schedule() {
+        run_prop_n("writebuf-resume", 64, |g| {
+            let n = 1 + g.size(6);
+            let mut wb = WriteBuf::new();
+            let mut expect = Vec::new();
+            for _ in 0..n {
+                let len = g.size(400);
+                let v = if g.bool() {
+                    Value::bulk(g.bytes(len))
+                } else {
+                    Value::Int(g.rng.next_u64() as i64)
+                };
+                v.encode_into(&mut expect);
+                wb.push(&v);
+            }
+            let mut sink = CappedWriter { data: Vec::new(), cap: usize::MAX, accept: 0 };
+            while !wb.is_empty() {
+                // random per-round send-buffer grants, including 0 (a flush
+                // against a full buffer must WouldBlock-break, not error)
+                sink.accept = g.size(97) - 1;
+                sink.cap = 1 + g.size(31);
+                let _ = wb.flush_into(&mut sink).unwrap();
+            }
+            assert_eq!(sink.data, expect);
+        });
+    }
+
+    #[test]
+    fn write_buf_reports_write_zero() {
+        struct ZeroSink;
+        impl io::Write for ZeroSink {
+            fn write(&mut self, _: &[u8]) -> io::Result<usize> {
+                Ok(0)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut wb = WriteBuf::new();
+        wb.push(&Value::ok());
+        let err = wb.flush_into(&mut ZeroSink).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::WriteZero);
     }
 }

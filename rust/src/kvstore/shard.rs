@@ -1,0 +1,319 @@
+//! Sharded store lock — N independent `Mutex<Store>` shards keyed by a
+//! stable hash of the store key, so concurrent `GETRANGE`/`SET`/`SPLICE`
+//! from many connections stop serializing on one box-wide mutex.
+//!
+//! Budget discipline: the global byte budget is partitioned *exactly*
+//! across shards (shard `i` gets `max/n` plus one of the `max % n`
+//! remainder bytes), so the fleet-consistent invariant
+//! `Σ shard.used_bytes ≤ global max_bytes` holds by construction and each
+//! shard keeps its own exact-LRU accounting.  Eviction is therefore
+//! per-shard LRU rather than globally exact LRU — the same approximation
+//! Redis Cluster and every sharded cache makes; with keys hashed uniformly
+//! the per-shard working sets track the global one.
+//!
+//! The single-shard configuration is bit-for-bit the old behaviour
+//! (`KvServer::new` defaults to it), and [`ShardedStore::lock`] keeps the
+//! historical `server.store.lock().unwrap()` call sites compiling against
+//! it; that shim panics on a multi-shard store rather than silently
+//! returning a partial view.
+
+use std::sync::{LockResult, Mutex, MutexGuard};
+
+use super::store::Store;
+use crate::util::bytes::SharedBytes;
+
+/// Stable FNV-1a over the store key: cheap, dependency-free, and fixed
+/// across runs so tests can place keys deterministically.
+fn fnv1a(key: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in key {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// N independent byte-budgeted LRU shards behind one facade.
+#[derive(Debug)]
+pub struct ShardedStore {
+    shards: Vec<Mutex<Store>>,
+}
+
+impl ShardedStore {
+    /// Partition `max_bytes` exactly across `n_shards` stores.
+    /// `usize::MAX` means unbounded — every shard stays unbounded too.
+    pub fn new(max_bytes: usize, n_shards: usize) -> Self {
+        let n = n_shards.max(1);
+        let shards = (0..n)
+            .map(|i| {
+                let budget = if max_bytes == usize::MAX {
+                    usize::MAX
+                } else {
+                    max_bytes / n + usize::from(i < max_bytes % n)
+                };
+                Mutex::new(Store::new(budget))
+            })
+            .collect();
+        ShardedStore { shards }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard owns `key` (exposed so tests can colocate keys).
+    pub fn shard_index(&self, key: &[u8]) -> usize {
+        (fnv1a(key) % self.shards.len() as u64) as usize
+    }
+
+    /// The shard that owns `key`.
+    pub fn shard(&self, key: &[u8]) -> &Mutex<Store> {
+        &self.shards[self.shard_index(key)]
+    }
+
+    /// Shard by index (aggregation / diagnostics).
+    pub fn shard_at(&self, i: usize) -> &Mutex<Store> {
+        &self.shards[i]
+    }
+
+    /// Compatibility shim for the historical single-`Mutex<Store>` call
+    /// sites (`server.store.lock().unwrap()`).  Only meaningful when the
+    /// store has exactly one shard; a multi-shard store panics here — a
+    /// partial view silently standing in for the whole keyspace is the
+    /// kind of bug this type exists to prevent.
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, Store>> {
+        assert_eq!(
+            self.shards.len(),
+            1,
+            "ShardedStore::lock() is the single-shard compatibility shim; \
+             use shard()/shard_at() on a {}-shard store",
+            self.shards.len()
+        );
+        self.shards[0].lock()
+    }
+
+    // -- keyed operations: lock only the owning shard --
+
+    pub fn set(&self, key: &[u8], data: impl Into<SharedBytes>) -> bool {
+        self.shard(key).lock().unwrap().set(key, data)
+    }
+
+    pub fn get(&self, key: &[u8]) -> Option<SharedBytes> {
+        self.shard(key).lock().unwrap().get(key)
+    }
+
+    pub fn get_range(&self, key: &[u8], start: usize, end: usize) -> Option<SharedBytes> {
+        self.shard(key).lock().unwrap().get_range(key, start, end)
+    }
+
+    pub fn contains(&self, key: &[u8]) -> bool {
+        self.shard(key).lock().unwrap().contains(key)
+    }
+
+    pub fn strlen(&self, key: &[u8]) -> Option<usize> {
+        self.shard(key).lock().unwrap().strlen(key)
+    }
+
+    pub fn del(&self, key: &[u8]) -> bool {
+        self.shard(key).lock().unwrap().del(key)
+    }
+
+    // -- aggregates: fold over shards, locking one at a time --
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.lock().unwrap().is_empty())
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().used_bytes())
+            .sum()
+    }
+
+    /// Global budget — the exact sum of the per-shard budgets
+    /// (`usize::MAX` if unbounded).
+    pub fn max_bytes(&self) -> usize {
+        let mut total = 0usize;
+        for s in &self.shards {
+            let b = s.lock().unwrap().max_bytes;
+            if b == usize::MAX {
+                return usize::MAX;
+            }
+            total += b;
+        }
+        total
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().evictions)
+            .sum()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().hits).sum()
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().misses).sum()
+    }
+
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+
+    /// All keys, collected across shards (diagnostics / repair sweeps).
+    pub fn all_keys(&self) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.extend(s.lock().unwrap().keys().cloned());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop_n;
+
+    #[test]
+    fn budget_partitions_exactly() {
+        for max in [0usize, 1, 63, 64, 65, 1000, 1 << 20] {
+            for n in [1usize, 2, 3, 7, 8, 16] {
+                let s = ShardedStore::new(max, n);
+                assert_eq!(s.n_shards(), n);
+                assert_eq!(s.max_bytes(), max, "max={max} n={n}");
+                // no shard deviates from the mean by more than a byte
+                let budgets: Vec<usize> = (0..n)
+                    .map(|i| s.shard_at(i).lock().unwrap().max_bytes)
+                    .collect();
+                let (lo, hi) = (budgets.iter().min().unwrap(), budgets.iter().max().unwrap());
+                assert!(hi - lo <= 1, "uneven partition {budgets:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn unbounded_budget_stays_unbounded_per_shard() {
+        let s = ShardedStore::new(usize::MAX, 8);
+        assert_eq!(s.max_bytes(), usize::MAX);
+        for i in 0..8 {
+            assert_eq!(s.shard_at(i).lock().unwrap().max_bytes, usize::MAX);
+        }
+        assert!(s.set(b"k", vec![0u8; 1 << 20]));
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let s = ShardedStore::new(100, 0);
+        assert_eq!(s.n_shards(), 1);
+        assert_eq!(s.max_bytes(), 100);
+    }
+
+    #[test]
+    fn keyed_ops_route_to_a_stable_shard() {
+        let s = ShardedStore::new(usize::MAX, 8);
+        for i in 0..64u32 {
+            let key = format!("key-{i}").into_bytes();
+            assert!(s.set(&key, key.clone()));
+            assert_eq!(s.shard_index(&key), s.shard_index(&key), "stable");
+            // the entry lives exactly in its owning shard
+            let own = s.shard_index(&key);
+            assert!(s.shard_at(own).lock().unwrap().contains(&key));
+            for other in (0..8).filter(|o| *o != own) {
+                assert!(!s.shard_at(other).lock().unwrap().contains(&key));
+            }
+        }
+        assert_eq!(s.len(), 64);
+    }
+
+    #[test]
+    fn facade_mirrors_store_semantics() {
+        let s = ShardedStore::new(usize::MAX, 4);
+        assert!(s.set(b"k", b"hello world".to_vec()));
+        assert_eq!(s.get(b"k").as_deref(), Some(&b"hello world"[..]));
+        assert_eq!(s.get_range(b"k", 0, 4).unwrap(), b"hello");
+        assert_eq!(s.get_range(b"gone", 0, 4), None);
+        assert_eq!(s.strlen(b"k"), Some(11));
+        assert!(s.contains(b"k"));
+        assert_eq!(s.hits(), 2);
+        assert_eq!(s.misses(), 1);
+        assert!(s.del(b"k"));
+        assert!(!s.del(b"k"));
+        assert!(s.is_empty());
+        s.set(b"a", vec![1]);
+        s.clear();
+        assert_eq!(s.used_bytes(), 0);
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn single_shard_lock_shim_works() {
+        let s = ShardedStore::new(usize::MAX, 1);
+        s.lock().unwrap().set(b"a", vec![1, 2, 3]);
+        assert_eq!(s.lock().unwrap().get(b"a").as_deref(), Some(&[1u8, 2, 3][..]));
+    }
+
+    #[test]
+    #[should_panic(expected = "single-shard compatibility shim")]
+    fn multi_shard_lock_shim_panics() {
+        let s = ShardedStore::new(usize::MAX, 2);
+        let _ = s.lock();
+    }
+
+    #[test]
+    fn global_budget_invariant_across_shards() {
+        run_prop_n("shard-global-budget", 64, |g| {
+            let n = g.usize_in(1, 8);
+            let budget = g.usize_in(128, 4096);
+            let s = ShardedStore::new(budget, n);
+            for _ in 0..g.size(200) {
+                let key = g.bytes(g.usize_in(1, 12));
+                let val = g.bytes(g.usize_in(0, 300));
+                s.set(&key, val);
+                assert!(
+                    s.used_bytes() <= budget,
+                    "used {} > global budget {budget} (n={n})",
+                    s.used_bytes()
+                );
+                // each shard honours its own slice of the budget
+                for i in 0..n {
+                    let sh = s.shard_at(i).lock().unwrap();
+                    assert!(sh.used_bytes() <= sh.max_bytes);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn eviction_is_shard_local() {
+        // hammering one shard's keyspace must never evict another shard's
+        // entries — per-shard LRU is independent by construction
+        let s = ShardedStore::new(4096, 4);
+        let cold_key = b"cold".to_vec();
+        let cold_shard = s.shard_index(&cold_key);
+        assert!(s.set(&cold_key, vec![0u8; 64]));
+        let mut hot = 0u32;
+        let mut i = 0u32;
+        while hot < 200 {
+            let key = format!("hot-{i}").into_bytes();
+            i += 1;
+            if s.shard_index(&key) == cold_shard {
+                continue; // only pressure the *other* shards
+            }
+            s.set(&key, vec![1u8; 200]);
+            hot += 1;
+        }
+        assert!(s.evictions() > 0, "pressure must actually evict");
+        assert!(s.contains(&cold_key), "cold shard untouched by hot shards");
+    }
+}

@@ -23,6 +23,7 @@ use edgecache::coordinator::{
 };
 use edgecache::devicemodel::DeviceProfile;
 use edgecache::engine::Engine;
+use edgecache::kvstore::ServeMode;
 use edgecache::metrics::CaseAggregate;
 use edgecache::model::state::Compression;
 use edgecache::netsim::LinkModel;
@@ -81,13 +82,37 @@ fn cmd_server(argv: &[String]) -> Result<()> {
     let m = parse_or_help(
         Command::new("server", "run the cache box (Figure 1, middle node)")
             .opt("addr", "127.0.0.1:7600", "listen address")
-            .opt("max-mb", "14336", "prompt-cache memory budget in MB"),
+            .opt("max-mb", "14336", "prompt-cache memory budget in MB")
+            .choice(
+                "serve",
+                &["threads", "poll"],
+                "threads",
+                "serving core: per-connection threads, or the non-blocking poll loop",
+            )
+            .opt("shards", "1", "independent store shards under one global byte budget")
+            .opt(
+                "max-pending",
+                "0",
+                "admission gate: pending ops before shedding with BUSY (0 = unbounded)",
+            ),
         argv,
     )?;
     let addr = m.str("addr");
     let max_mb: usize = m.usize("max-mb").map_err(|e| anyhow!(e))?;
-    let cb = CacheBox::start(&addr, max_mb << 20)?;
-    log_info!("cli", "cache box on {} ({} MB budget); Ctrl-C to stop", cb.addr(), max_mb);
+    let mode = ServeMode::by_name(&m.str("serve"))
+        .ok_or_else(|| anyhow!("unknown --serve (threads|poll)"))?;
+    let shards: usize = m.usize("shards").map_err(|e| anyhow!(e))?;
+    let max_pending: usize = m.usize("max-pending").map_err(|e| anyhow!(e))?;
+    let cb = CacheBox::start_tuned(&addr, max_mb << 20, shards, max_pending, mode)?;
+    log_info!(
+        "cli",
+        "cache box on {} ({} MB budget, {} core, {} shards, {} pending cap); Ctrl-C to stop",
+        cb.addr(),
+        max_mb,
+        mode.name(),
+        shards.max(1),
+        max_pending
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -268,7 +293,8 @@ fn run_trace(
              chunks {} fetched / {} recomputed ({} mixed plans), \
              fallback probes {} ({} hits, {} suppressed), repairs {}, \
              timeouts {}, suspects {}, heals {}, \
-             gossip {} adopted / {} refuted, probes {} indirect ({} saves)",
+             gossip {} adopted / {} refuted, probes {} indirect ({} saves), \
+             busy rejections {} ({} free replans)",
             c.cfg.name,
             c.placement_name(),
             c.stats.queries,
@@ -289,14 +315,17 @@ fn run_trace(
             c.stats.gossip_adoptions,
             c.stats.gossip_refutations,
             c.stats.indirect_probes,
-            c.stats.probe_saves
+            c.stats.probe_saves,
+            c.stats.busy_rejections,
+            c.stats.replans_on_busy
         );
         for l in c.peer_ledgers() {
             println!(
                 "  peer {}: down {} KB, up {} KB, shares {} ({} failed, {} chunks), \
                  uploads {} (+{} replicas), \
                  placed {}, probes {}, repairs {}, {} sync rounds, \
-                 {} heartbeats, {} heals, {} timeouts",
+                 {} heartbeats, {} heals, {} timeouts, \
+                 {} sheds, peak pending {}",
                 l.addr,
                 l.bytes_down / 1024,
                 l.bytes_up / 1024,
@@ -311,7 +340,9 @@ fn run_trace(
                 l.sync_rounds,
                 l.heartbeats,
                 l.heals,
-                l.timeouts
+                l.timeouts,
+                l.sheds,
+                l.peak_pending
             );
         }
     }

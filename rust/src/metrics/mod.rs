@@ -205,8 +205,52 @@ pub struct PeerLedger {
     /// (`WouldBlock`/`TimedOut`): the peer stalled but was not declared
     /// dead for it.
     pub timeouts: u64,
+    /// Operations this peer shed with a `BUSY` reply (admission control) —
+    /// replanned for free, never a health strike.
+    pub sheds: u64,
+    /// High-water mark of the peer's pending-op queue, as last advertised
+    /// by its `INFO pending_peak:` line (0 until a probe has seen one).
+    pub peak_pending: u64,
+    /// Smoothed observed per-share service time (EWMA, milliseconds) —
+    /// wall time from request to last byte of completed fetch shares.
+    pub srv_observed_ms: f64,
+    /// Smoothed *expected* per-share service time under the link model
+    /// alone (EWMA, ms).  The ratio observed/expected isolates peer-side
+    /// queueing from link cost, and derates this peer's planner share
+    /// (`plan::LinkCost::derated`) before it stalls.
+    pub srv_expected_ms: f64,
     /// Per-peer phase time (Redis = this peer's transfers).
     pub breakdown: PhaseBreakdown,
+}
+
+impl PeerLedger {
+    /// Fold one completed fetch share's service time into the EWMAs
+    /// (`observed_ms` wall clock vs `expected_ms` from the link model).
+    /// First sample initialises both; later samples smooth with α = 0.2 so
+    /// a transient hiccup cannot swing the planner share by itself.
+    pub fn note_service_time(&mut self, observed_ms: f64, expected_ms: f64) {
+        const ALPHA: f64 = 0.2;
+        if !(observed_ms.is_finite() && expected_ms.is_finite()) {
+            return;
+        }
+        if self.srv_observed_ms <= 0.0 {
+            self.srv_observed_ms = observed_ms;
+            self.srv_expected_ms = expected_ms;
+        } else {
+            self.srv_observed_ms = (1.0 - ALPHA) * self.srv_observed_ms + ALPHA * observed_ms;
+            self.srv_expected_ms = (1.0 - ALPHA) * self.srv_expected_ms + ALPHA * expected_ms;
+        }
+    }
+
+    /// Observed/expected service-time ratio: `1.0` = the link model alone
+    /// explains this peer's latency; `> 1` = peer-side queueing.  `1.0`
+    /// until enough samples exist.
+    pub fn service_slowdown(&self) -> f64 {
+        if self.srv_observed_ms <= 0.0 || self.srv_expected_ms <= 0.0 {
+            return 1.0;
+        }
+        (self.srv_observed_ms / self.srv_expected_ms).max(0.0)
+    }
 }
 
 /// Running summary over a population of scalar samples (seconds).

@@ -81,6 +81,21 @@ $WATCHDOG cargo test -q --test plan_oracle
 echo "== cargo test -q --test gossip_laws =="
 $WATCHDOG cargo test -q --test gossip_laws
 
+# The serving-core suite pins the fleet-scale substrate: sharded-store
+# stress with uniform-fill torn-read detection and honest byte accounting,
+# poll vs thread reply identity, deterministic admission shedding with
+# per-op (not per-connection) recovery, and readiness multiplexing across
+# more connections than workers with zero wedged clients.
+echo "== cargo test -q --test serve_core =="
+$WATCHDOG cargo test -q --test serve_core
+
+# Fleet serving smoke (`just bench-fleet`): tiny Zipf ramp through both
+# serving cores — asserts every op ends in a hit/miss/shed verdict and the
+# poll core wedges zero clients; the strict tail-latency and
+# max-sustained-clients comparisons gate the full run only.
+echo "== fleet serving smoke (EDGECACHE_SMOKE=1) =="
+$WATCHDOG env EDGECACHE_SMOKE=1 cargo bench --bench fleet
+
 # Streaming-assembly smoke (`just bench-smoke`): a tiny-parameter run of the
 # overlap bench whose built-in assertions pin the hot-path claim — streaming
 # beats store-and-forward and restore completes ~1 chunk-decode after the
