@@ -133,3 +133,23 @@ bench-fleet:
 # shedding + recovery, many-connection readiness multiplexing)
 test-serve:
     cd rust && cargo test -q --test serve_core
+
+# semantic-tier bench, full run (emits BENCH_semantic.json): a paraphrased
+# workload through semantic matching vs the --no-semantic ablation under
+# paced prefill — hit rate, mean TTFT, false-probe accounting, and
+# byte-identical responses across arms
+bench-semantic-full:
+    cd rust && cargo bench --bench semantic
+
+# the same bench with tiny parameters — the check.sh smoke gate: asserts
+# the ablation/exact arms send zero semantic probes, the semantic arm
+# strictly improves reuse, accounting closes (matched_on == matched_off +
+# tokens_recovered), and every response is bit-identical across arms
+bench-semantic:
+    cd rust && EDGECACHE_SMOKE=1 cargo bench --bench semantic
+
+# the semantic-tier suite on its own (sketch wire roundtrip, legacy-peer
+# degradation, verification gate vs a maliciously-close sketch, paraphrase
+# prefix recovery, the --no-semantic ablation, repair sweep healing)
+test-semantic:
+    cd rust && cargo test -q --test semantic_tier

@@ -111,6 +111,16 @@ fn main() -> anyhow::Result<()> {
         sync_interval: Some(Duration::from_millis(100)),
         // liveness on: a stalled box costs one 2 s op budget, never a hang
         deadline: Some(DeadlineBudget::default()),
+        gossip: true,
+        indirect_probes: 1,
+        adaptive_deadline_k: 0.0,
+        // the semantic tier rides along: sketches register with uploads and
+        // sync between the clients, though this exact-repeat trace never
+        // needs a probe (cooperative reuse lands as exact hits)
+        semantic: true,
+        semantic_dist: 16,
+        semantic_k: 3,
+        repair_sweep: Duration::ZERO,
         seed,
     };
     let mut clients = vec![
@@ -186,7 +196,8 @@ fn main() -> anyhow::Result<()> {
              multi-source {}, re-plans {}, chunks {} fetched / {} recomputed \
              ({} mixed plans), fallback probes {} ({} hits, {} suppressed), \
              repairs {}, timeouts {}, suspects {}, heals {}, \
-             busy rejections {} ({} free replans)",
+             busy rejections {} ({} free replans), \
+             semantic {} probes / {} hits / {} false ({} tokens recovered)",
             c.cfg.name,
             c.placement_name(),
             c.stats.hits_by_case,
@@ -207,13 +218,18 @@ fn main() -> anyhow::Result<()> {
             c.stats.heals,
             c.stats.busy_rejections,
             c.stats.replans_on_busy,
+            c.stats.semantic_probes,
+            c.stats.semantic_hits,
+            c.stats.semantic_false_probes,
+            c.stats.semantic_tokens_recovered,
         );
         for l in c.peer_ledgers() {
             println!(
                 "    peer {}: down {:.2} MB, up {:.2} MB, shares {} ({} failed, \
                  {} chunks), uploads {} (+{} replicas), placed {}, probes {}, \
                  repairs {}, {} sync rounds, {} heartbeats, {} heals, {} timeouts, \
-                 {} sheds, peak pending {}",
+                 {} sheds, peak pending {}, {} sketch entries \
+                 ({} sections synced)",
                 l.addr,
                 l.bytes_down as f64 / 1e6,
                 l.bytes_up as f64 / 1e6,
@@ -231,6 +247,8 @@ fn main() -> anyhow::Result<()> {
                 l.timeouts,
                 l.sheds,
                 l.peak_pending,
+                l.sketch_entries,
+                l.sketch_sections,
             );
         }
     }

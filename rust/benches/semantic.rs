@@ -1,0 +1,351 @@
+//! Semantic-tier bench — paraphrased workload, semantic matching ON vs
+//! the `--no-semantic` ablation, over the *identical* seeded trace.
+//!
+//! Per domain, one base prompt seeds the cache, then V seeded paraphrase
+//! variants (`workload::perturb`, synonym-bucket swaps at the configured
+//! rate) are queried.  A variant whose instruction got perturbed is a
+//! **total exact miss** — the exact tier recovers nothing — which is
+//! precisely where nearest-sketch search plus token-prefix verification
+//! re-enters the game.  Both arms run a fresh cache box + client so
+//! nothing leaks between them.
+//!
+//! A third mini-arm replays an *exact* (rate-0) repeat trace with
+//! semantic enabled and asserts zero semantic probes: an exact workload
+//! must see zero semantic wire traffic (no-regression gate).
+//!
+//! Mechanics gates (every run, smoke included):
+//!   * ablation arm reports zero semantic probes/hits;
+//!   * exact arm reports zero semantic probes (never engages on hits);
+//!   * on-arm probes ≥ hits + false probes, and hits ≥ 1;
+//!   * strict reuse win: on-arm reused-query count and matched-token
+//!     total both exceed the ablation's;
+//!   * accounting closes: matched_on == matched_off + tokens_recovered
+//!     (the semantic tier adds exactly its verified prefixes, nothing
+//!     else shifts);
+//!   * bit-exactness: every paraphrase query's response text is
+//!     byte-identical across arms — reused state never changes output.
+//!
+//! Performance gate (full run only — smoke runs unpaced on the host
+//! profile, where TTFT deltas are noise): mean paraphrase TTFT with
+//! semantic on is strictly below the ablation's under the paced device.
+//!
+//! Emits `BENCH_semantic.json`.
+//!
+//! Env: EDGECACHE_SMOKE=1 (tiny sizes, host device, mechanics-only),
+//!      EDGECACHE_PERTURB (per-word swap rate, default 0.3),
+//!      EDGECACHE_SEMANTIC_DIST (Hamming budget, default 24),
+//!      EDGECACHE_DEVICE (paced profile for the full run, default
+//!      pi5-4gb), EDGECACHE_SEMANTIC_JSON (output path, default
+//!      BENCH_semantic.json).
+
+use std::sync::Arc;
+
+use edgecache::coordinator::{CacheBox, EdgeClient, EdgeClientConfig};
+use edgecache::devicemodel::DeviceProfile;
+use edgecache::engine::Engine;
+use edgecache::util::json::Json;
+use edgecache::workload::perturb::Perturber;
+use edgecache::workload::{Generator, Prompt};
+
+const SEED: u64 = 42;
+
+struct ArmResult {
+    name: &'static str,
+    queries: usize,
+    /// Paraphrase queries only (seeds excluded from scoring).
+    para_queries: usize,
+    reused: usize,
+    matched_tokens: u64,
+    prompt_tokens: u64,
+    ttft_ms: Vec<f64>,
+    responses: Vec<String>,
+    bytes_down: u64,
+    sem_probes: u64,
+    sem_hits: u64,
+    sem_false: u64,
+    sem_tokens: u64,
+}
+
+impl ArmResult {
+    fn reuse_rate(&self) -> f64 {
+        if self.para_queries == 0 {
+            return 0.0;
+        }
+        self.reused as f64 / self.para_queries as f64
+    }
+
+    fn mean_ttft_ms(&self) -> f64 {
+        if self.ttft_ms.is_empty() {
+            return 0.0;
+        }
+        self.ttft_ms.iter().sum::<f64>() / self.ttft_ms.len() as f64
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arm", Json::str(self.name)),
+            ("queries", Json::Int(self.queries as i64)),
+            ("paraphrase_queries", Json::Int(self.para_queries as i64)),
+            ("reused", Json::Int(self.reused as i64)),
+            ("reuse_rate", Json::Num(self.reuse_rate())),
+            ("matched_tokens", Json::Int(self.matched_tokens as i64)),
+            ("prompt_tokens", Json::Int(self.prompt_tokens as i64)),
+            ("mean_ttft_ms", Json::Num(self.mean_ttft_ms())),
+            ("bytes_down", Json::Int(self.bytes_down as i64)),
+            (
+                "semantic",
+                Json::obj(vec![
+                    ("probes", Json::Int(self.sem_probes as i64)),
+                    ("hits", Json::Int(self.sem_hits as i64)),
+                    ("false_probes", Json::Int(self.sem_false as i64)),
+                    ("tokens_recovered", Json::Int(self.sem_tokens as i64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+struct ArmSpec {
+    name: &'static str,
+    semantic: bool,
+    /// Per-word synonym-swap probability for the paraphrase variants.
+    rate: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_arm(
+    engine: &Arc<Engine>,
+    spec: &ArmSpec,
+    domains: &[&str],
+    variants: usize,
+    shots: usize,
+    dist: u32,
+    device: &DeviceProfile,
+) -> ArmResult {
+    let cb = CacheBox::start_local().expect("cache box");
+    let mut cfg = EdgeClientConfig::native(Some(cb.addr()));
+    cfg.max_new_tokens = Some(2);
+    cfg.sync_interval = None;
+    cfg.semantic = spec.semantic;
+    cfg.semantic_dist = dist;
+    cfg.device = device.clone();
+    let mut client = EdgeClient::new(Arc::clone(engine), cfg).expect("client");
+
+    let gen = Generator::new(SEED);
+    let mut res = ArmResult {
+        name: spec.name,
+        queries: 0,
+        para_queries: 0,
+        reused: 0,
+        matched_tokens: 0,
+        prompt_tokens: 0,
+        ttft_ms: Vec::new(),
+        responses: Vec::new(),
+        bytes_down: 0,
+        sem_probes: 0,
+        sem_hits: 0,
+        sem_false: 0,
+        sem_tokens: 0,
+    };
+    for (di, domain) in domains.iter().enumerate() {
+        let base = gen.prompt(domain, di as u64, shots);
+        let _ = client.query(&base).expect("seed query");
+        res.queries += 1;
+        for v in 0..variants {
+            // per-variant stable paraphrase: the SAME text lands in every arm
+            let mut pert =
+                Perturber::new(SEED ^ ((di * 101 + v + 1) as u64), spec.rate);
+            pert.reorder = 0.0;
+            let p: Prompt = pert.perturb(&base);
+            let r = client.query(&p).expect("paraphrase query");
+            res.queries += 1;
+            res.para_queries += 1;
+            if r.matched_tokens > 0 {
+                res.reused += 1;
+            }
+            res.matched_tokens += r.matched_tokens as u64;
+            res.prompt_tokens += r.prompt_tokens as u64;
+            res.ttft_ms.push(r.breakdown.ttft().as_secs_f64() * 1e3);
+            res.responses.push(r.response_text);
+        }
+    }
+    res.bytes_down = client.stats.bytes_down;
+    res.sem_probes = client.stats.semantic_probes;
+    res.sem_hits = client.stats.semantic_hits;
+    res.sem_false = client.stats.semantic_false_probes;
+    res.sem_tokens = client.stats.semantic_tokens_recovered;
+    client.shutdown();
+    cb.shutdown();
+    res
+}
+
+fn main() {
+    edgecache::util::logger::init_from_env();
+    let smoke = std::env::var("EDGECACHE_SMOKE").as_deref() == Ok("1");
+    let rate: f64 = std::env::var("EDGECACHE_PERTURB")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.3);
+    let dist: u32 = std::env::var("EDGECACHE_SEMANTIC_DIST")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24);
+    // smoke runs unpaced (host): mechanics only, wall-clock bounded.  The
+    // full run paces prefill on a real profile so recovered tokens show up
+    // as real TTFT milliseconds.
+    let device = if smoke {
+        DeviceProfile::host()
+    } else {
+        let name = std::env::var("EDGECACHE_DEVICE").unwrap_or_default();
+        DeviceProfile::by_name(&name).unwrap_or_else(DeviceProfile::pi5_4gb)
+    };
+    let (domains, variants, shots): (&[&str], usize, usize) = if smoke {
+        (&["astronomy", "marketing"], 5, 1)
+    } else {
+        (&["astronomy", "marketing", "virology"], 10, 2)
+    };
+
+    println!("================================================================");
+    println!(" Semantic tier — paraphrased workload, on vs --no-semantic");
+    println!("================================================================");
+    println!(
+        "rate {rate}, dist {dist}, device {}, {} domains x {} variants ({}-shot){}",
+        device.name,
+        domains.len(),
+        variants,
+        shots,
+        if smoke { "  [smoke]" } else { "" }
+    );
+    assert!(rate >= 0.1, "perturbation rate below the acceptance floor");
+
+    let engine = match Engine::load_preset("tiny") {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            println!("skipping: tiny preset unavailable ({e})");
+            return;
+        }
+    };
+
+    let on = run_arm(
+        &engine,
+        &ArmSpec { name: "semantic", semantic: true, rate },
+        domains,
+        variants,
+        shots,
+        dist,
+        &device,
+    );
+    let off = run_arm(
+        &engine,
+        &ArmSpec { name: "no-semantic", semantic: false, rate },
+        domains,
+        variants,
+        shots,
+        dist,
+        &device,
+    );
+    // exact-repeat trace (rate 0 = every variant is the base prompt):
+    // semantic stays enabled but must never engage
+    let exact = run_arm(
+        &engine,
+        &ArmSpec { name: "exact", semantic: true, rate: 0.0 },
+        &domains[..1],
+        2.min(variants),
+        shots,
+        dist,
+        &device,
+    );
+
+    for a in [&on, &off, &exact] {
+        println!(
+            "{:>12}: {}/{} paraphrase queries reused, {} matched tokens, \
+             mean TTFT {:.2} ms, semantic {} probes / {} hits / {} false / {} tokens",
+            a.name,
+            a.reused,
+            a.para_queries,
+            a.matched_tokens,
+            a.mean_ttft_ms(),
+            a.sem_probes,
+            a.sem_hits,
+            a.sem_false,
+            a.sem_tokens
+        );
+    }
+
+    // -- mechanics gates (every run, smoke included) ----------------------
+    assert_eq!(off.sem_probes, 0, "ablation arm sent semantic probes");
+    assert_eq!(off.sem_hits, 0, "ablation arm recorded semantic hits");
+    assert_eq!(
+        exact.sem_probes, 0,
+        "semantic engaged on an exact-repeat workload (must only fire on total misses)"
+    );
+    assert_eq!(exact.reused, exact.para_queries, "exact repeats must all hit");
+    assert!(on.sem_hits >= 1, "paraphrased trace produced no semantic hits");
+    assert!(
+        on.sem_probes >= on.sem_hits + on.sem_false,
+        "probe ledger does not cover hits + false probes"
+    );
+    assert!(
+        on.reused > off.reused,
+        "semantic did not strictly improve reuse: {} vs {}",
+        on.reused,
+        off.reused
+    );
+    assert!(
+        on.matched_tokens > off.matched_tokens,
+        "semantic did not strictly improve matched tokens"
+    );
+    assert_eq!(
+        on.matched_tokens,
+        off.matched_tokens + on.sem_tokens,
+        "accounting drift: semantic must add exactly its verified prefixes"
+    );
+    assert_eq!(on.responses, off.responses, "reused state changed a response");
+
+    // -- performance gate (full run only: unpaced smoke TTFT is noise) ----
+    if !smoke {
+        assert!(
+            on.mean_ttft_ms() < off.mean_ttft_ms(),
+            "semantic mean TTFT {:.2} ms not strictly under ablation {:.2} ms",
+            on.mean_ttft_ms(),
+            off.mean_ttft_ms()
+        );
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("semantic")),
+        ("smoke", Json::Bool(smoke)),
+        ("rate", Json::Num(rate)),
+        ("semantic_dist", Json::Int(dist as i64)),
+        ("device", Json::str(device.name)),
+        ("domains", Json::Int(domains.len() as i64)),
+        ("variants", Json::Int(variants as i64)),
+        ("shots", Json::Int(shots as i64)),
+        (
+            "arms",
+            Json::Arr(vec![on.to_json(), off.to_json(), exact.to_json()]),
+        ),
+        (
+            "verdict",
+            Json::obj(vec![
+                ("reuse_gain", Json::Num(on.reuse_rate() - off.reuse_rate())),
+                (
+                    "ttft_delta_ms",
+                    Json::Num(off.mean_ttft_ms() - on.mean_ttft_ms()),
+                ),
+                (
+                    "tokens_recovered",
+                    Json::Int(on.sem_tokens as i64),
+                ),
+                ("false_probes", Json::Int(on.sem_false as i64)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("EDGECACHE_SEMANTIC_JSON")
+        .unwrap_or_else(|_| "BENCH_semantic.json".into());
+    match std::fs::write(&path, json.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+    println!("OK");
+}

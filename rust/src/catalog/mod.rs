@@ -85,6 +85,15 @@ pub fn state_store_key(key: &[u8; KEY_LEN]) -> Vec<u8> {
     v
 }
 
+/// The kvstore key under which the cheap token-id header for `key` is stored
+/// (the semantic tier's verification source — see `crate::sketch`).
+pub fn token_store_key(key: &[u8; KEY_LEN]) -> Vec<u8> {
+    let mut v = Vec::with_capacity(4 + KEY_LEN * 2);
+    v.extend_from_slice(b"tok:");
+    v.extend_from_slice(crate::util::hex::encode(key).as_bytes());
+    v
+}
+
 /// A candidate prefix range of a tokenized prompt.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PromptRange {
@@ -397,5 +406,14 @@ mod tests {
         let sk = state_store_key(&k);
         assert!(sk.starts_with(b"state:"));
         assert_eq!(sk.len(), 6 + 32);
+    }
+
+    #[test]
+    fn token_store_key_format() {
+        let k = range_key(&meta(), &[1, 2, 3]);
+        let tk = token_store_key(&k);
+        assert!(tk.starts_with(b"tok:"));
+        assert_eq!(tk.len(), 4 + 32);
+        assert_ne!(tk, state_store_key(&k));
     }
 }

@@ -67,7 +67,8 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::catalog::{
-    lookup_tagged, ranges_for, state_store_key, LocalCatalog, ModelMeta, PromptRange,
+    lookup_tagged, ranges_for, state_store_key, token_store_key, LocalCatalog, ModelMeta,
+    PromptRange, KEY_LEN,
 };
 use crate::coordinator::fabric::{
     fetch_full_entry, fetch_prefix_multi, repair_entry, LocalRecompute, Peer,
@@ -93,6 +94,10 @@ use crate::model::state::{
     Compression, KvState, DEFAULT_CHUNK_TOKENS,
 };
 use crate::netsim::LinkModel;
+use crate::sketch::{
+    common_prefix_len, decode_token_ids, encode_section, encode_token_ids, sketch_tokens,
+    SketchCandidate, SketchRecord,
+};
 use crate::util::bytes::SharedBytes;
 use crate::workload::Prompt;
 
@@ -260,6 +265,27 @@ pub struct EdgeClientConfig {
     /// time, floored by `deadline.op` and widened ×2 under `Suspect`.
     /// `<= 0` keeps the static fleet-wide budget.
     pub adaptive_deadline_k: f64,
+    /// The semantic similarity tier (`crate::sketch`): register a SimHash
+    /// sketch + token-id header with every upload, and on a **total** exact
+    /// catalog miss search the per-peer sketch tables for paraphrase
+    /// donors, each verified by its real token prefix before any state is
+    /// reused.  Never engages when the exact tier matched anything — an
+    /// exact workload sees zero semantic wire traffic.  `false` is the
+    /// `--no-semantic` ablation: no registration, no sync, no probes.
+    pub semantic: bool,
+    /// Max Hamming distance (of [`crate::sketch::SKETCH_BITS`]) a sketch
+    /// candidate may sit from the query sketch.  Unrelated prompts
+    /// concentrate near 32 bits; the default 16 keeps false candidates
+    /// ~4σ away while admitting moderate paraphrases.
+    pub semantic_dist: u32,
+    /// Max donor candidates verified (token-header probes) per miss.
+    pub semantic_k: usize,
+    /// Proactive repair sweep period: at most once per this interval, one
+    /// post-response sweep step SCANs a slice of one box's key space and
+    /// re-publishes entries whose ring owners lost their copy — healing
+    /// cold entries without waiting for a client hit.  `ZERO` = off.
+    /// Deterministic placement only (owners must be derivable).
+    pub repair_sweep: Duration,
     pub seed: u64,
 }
 
@@ -289,6 +315,10 @@ impl EdgeClientConfig {
             gossip: true,
             indirect_probes: 1,
             adaptive_deadline_k: 0.0,
+            semantic: true,
+            semantic_dist: 16,
+            semantic_k: 3,
+            repair_sweep: Duration::ZERO,
             seed: 1,
         }
     }
@@ -418,6 +448,20 @@ pub struct ClientStats {
     /// Free re-plan rounds fetches were granted because a saturated peer
     /// shed a share (capped at one per fetch).
     pub replans_on_busy: u64,
+    /// Token-header verification probes the semantic tier sent (one per
+    /// sketch candidate actually checked; engaged only on total exact
+    /// misses).
+    pub semantic_probes: u64,
+    /// Semantic donor reuses that completed: a verified token prefix was
+    /// fetched and restored where the exact tier saw nothing.
+    pub semantic_hits: u64,
+    /// Verification probes whose real token overlap came in below the
+    /// usable threshold — the sketch proposed, the token header refuted
+    /// (wasted wire, never wasted correctness).
+    pub semantic_false_probes: u64,
+    /// Prompt tokens recovered across all semantic hits (the prefill the
+    /// tier saved a paraphrased workload).
+    pub semantic_tokens_recovered: u64,
 }
 
 /// Where a downloaded state physically lives on the fabric — the anchor
@@ -501,6 +545,12 @@ pub struct EdgeClient {
     /// key is not re-probed; any membership transition clears the cache (a
     /// heal or death changes who should hold what).
     probe_negative: HashMap<Vec<u8>, std::time::Instant>,
+    /// Proactive repair sweep state ([`EdgeClientConfig::repair_sweep`]):
+    /// last sweep time, the SCAN cursor into the current box's key space,
+    /// and which box is being walked (round-robin when a walk wraps).
+    last_sweep: std::time::Instant,
+    sweep_cursor: usize,
+    sweep_peer: usize,
     pacer: Pacer,
     sampler: Sampler,
     pub stats: ClientStats,
@@ -566,10 +616,11 @@ impl EdgeClient {
             )?;
             peer.set_health(membership.sink(i));
             if let Some(iv) = cfg.sync_interval {
-                peer.spawn_sync_gossip(
+                peer.spawn_sync_semantic(
                     iv,
                     Some(membership.sink(i)),
                     cfg.gossip.then(|| Arc::clone(&membership)),
+                    cfg.semantic,
                 )?;
             }
             peers.push(peer);
@@ -610,6 +661,9 @@ impl EdgeClient {
             membership,
             last_epoch: 0,
             probe_negative: HashMap::new(),
+            last_sweep: std::time::Instant::now(),
+            sweep_cursor: 0,
+            sweep_peer: 0,
             pacer,
             stats: ClientStats::default(),
             engine,
@@ -675,10 +729,18 @@ impl EdgeClient {
     /// first failure is reported after the sweep.
     pub fn sync_catalog_now(&mut self) -> Result<()> {
         let mut first_err: Option<anyhow::Error> = None;
+        let semantic = self.cfg.semantic;
         for peer in &mut self.peers {
             let catalog = Arc::clone(&peer.catalog);
+            let sketches = Arc::clone(&peer.sketches);
             let res = match peer.conn_parts() {
-                Some((conn, _)) => CatalogSync::sync_once(conn, &catalog),
+                Some((conn, _)) => CatalogSync::sync_once(conn, &catalog).map(|()| {
+                    if semantic {
+                        // best-effort, like the background loop: a legacy
+                        // box degrades the semantic tier, not the sync
+                        let _ = CatalogSync::sketch_once(conn, &sketches);
+                    }
+                }),
                 None => Err(anyhow::anyhow!(
                     "cache box at {} unreachable",
                     peer.cfg.addr
@@ -713,6 +775,10 @@ impl EdgeClient {
             .map(|(i, p)| {
                 let mut l = p.ledger.clone();
                 l.sync_rounds = p.sync_rounds();
+                if let Ok(s) = p.sketches.lock() {
+                    l.sketch_entries = s.len() as u64;
+                    l.sketch_sections = s.synced_sections;
+                }
                 let c = self.membership.peer_counters(i);
                 l.heartbeats = c.heartbeats;
                 l.heals = c.heals;
@@ -1141,12 +1207,47 @@ impl EdgeClient {
         // fetch order: the alias-serving peer leads (historically it held
         // the blob too; under ring alias indirection it may hold only the
         // pointer — head rotation skips past it), the other Bloom claimers
-        // follow, and under deterministic placement the *target key's*
-        // ring owners join last, so an alias discovered by catalog-less
-        // probing can still reach the box that actually holds the blob.
-        let mut order: Vec<usize> = std::iter::once(alias_peer)
+        // follow; `fetch_entry_rows` appends the target key's ring owners,
+        // so an alias discovered by catalog-less probing can still reach
+        // the box that actually holds the blob.
+        let order: Vec<usize> = std::iter::once(alias_peer)
             .chain(claimers.iter().copied().filter(|&i| i != alias_peer))
             .collect();
+        self.fetch_entry_rows(
+            target,
+            alias.total_rows,
+            alias.compressed,
+            alias.chunk_tokens,
+            m,
+            order,
+            tokens,
+            blob.len(),
+        )
+    }
+
+    /// Fetch the first `m` rows of the entry stored under `target` —
+    /// geometry (`total_rows`, `compressed`, ECS3 `ct`) supplied by the
+    /// caller: the exact path reads it out of a range alias, the semantic
+    /// path out of a verified [`SketchRecord`].  `order` is the preferred
+    /// peer order (claimers first); under deterministic placement the
+    /// target's ring owners are appended.  `alias_wire` is whatever wire
+    /// the caller already spent discovering the entry (alias GET / token
+    /// header probe) and is folded into the download's byte ledger.
+    #[allow(clippy::too_many_arguments)]
+    fn fetch_entry_rows(
+        &mut self,
+        target: Vec<u8>,
+        total_rows: usize,
+        compressed: bool,
+        chunk_tokens: Option<usize>,
+        m: usize,
+        mut order: Vec<usize>,
+        tokens: &[u32],
+        alias_wire: usize,
+    ) -> Option<Download> {
+        let cfg = &self.engine.model.config;
+        let dims = (cfg.n_layers, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim);
+        let hash = self.engine.model_hash().to_string();
         if self.policy.is_deterministic() {
             self.refresh_membership();
             for o in self.policy.owners(&target, self.cfg.replicas) {
@@ -1159,14 +1260,13 @@ impl EdgeClient {
         // chunk-aligned fabric path: ECS3 aliases carry the target's chunk
         // size, so whole-chunk byte ranges never round to a mid-chunk
         // boundary — and deflated entries are range-served like any other.
-        if let Some(ct) = alias.chunk_tokens {
+        if let Some(ct) = chunk_tokens {
             // chunk-level fetch plan feeder (`coordinator::plan`):
             // regenerate cheap prefix chunks from the prompt tokens while
             // the expensive suffix streams from the peers.  Only engaged
             // under `--plan chunk` on devices whose prefill side is
             // modelled — the host profile would recompute "for free" and
             // must keep the historical all-fetch path.
-            let total_rows = alias.total_rows;
             let stride = BlobLayout::new(&hash, dims.0, dims.2, dims.3).token_stride();
             let engine = Arc::clone(&self.engine);
             let pacer = &mut self.pacer;
@@ -1235,8 +1335,8 @@ impl EdgeClient {
                     &mut sel,
                     &self.planner,
                     &target,
-                    alias.total_rows,
-                    alias.compressed,
+                    total_rows,
+                    compressed,
                     ct,
                     m,
                     &hash,
@@ -1277,17 +1377,17 @@ impl EdgeClient {
                     let body_total: usize =
                         f.entries.iter().map(|e| e.len as usize).sum();
                     let baseline = if f.compressed {
-                        lo.payload_off(alias.total_rows) + body_total
+                        lo.payload_off(total_rows) + body_total
                     } else {
                         lo.blob_len(m)
                     };
                     return Some(Download {
-                        wire_bytes: blob.len() + f.wire,
+                        wire_bytes: alias_wire + f.wire,
                         saved_bytes: baseline.saturating_sub(f.wire),
                         base: DeltaBase {
                             store_key: target,
                             peer: head_peer,
-                            total_rows: alias.total_rows,
+                            total_rows,
                             compressed: f.compressed,
                             chunk_tokens: Some(ct),
                             chunk_index: f.entries,
@@ -1319,10 +1419,185 @@ impl EdgeClient {
                 self.peers[i].shaper.note_inflated(state.payload_bytes(m));
                 return Some(Download {
                     base: delta_base_for_entry(target, i, &full),
-                    wire_bytes: blob.len() + wire,
+                    wire_bytes: alias_wire + wire,
                     saved_bytes: 0,
                     state,
                 });
+            }
+        }
+        None
+    }
+
+    /// GET a donor's cheap token-id header (`tok:<hex>`) from the peers
+    /// whose sketch tables advertise it, rotating past dead or evicted
+    /// copies.  Returns the header's wire size plus the decoded ids.
+    fn fetch_token_header(
+        &mut self,
+        key: &[u8; KEY_LEN],
+        claimers: &[usize],
+    ) -> Option<(usize, Vec<u32>)> {
+        let tkey = token_store_key(key);
+        for &i in claimers {
+            if i >= self.peers.len() {
+                continue;
+            }
+            let peer = &mut self.peers[i];
+            let got = {
+                let Some((conn, shaper)) = peer.conn_parts() else {
+                    peer.note_io(Outcome::IoDead);
+                    self.stats.peer_failures += 1;
+                    continue;
+                };
+                shaper.shaped_post(|| {
+                    let r = conn.get(&tkey);
+                    let n = r
+                        .as_ref()
+                        .map(|o| o.as_ref().map_or(0, |b| b.len()))
+                        .unwrap_or(0);
+                    (r, n)
+                })
+            };
+            match got {
+                Ok(Some(b)) => {
+                    peer.note_io(Outcome::IoOk);
+                    peer.ledger.bytes_down += b.len() as u64;
+                    match decode_token_ids(&b) {
+                        Some(ids) => return Some((b.len(), ids)),
+                        // unknown header version: the donor is unverifiable,
+                        // and every copy stores the same bytes — give up on
+                        // this candidate rather than rotating
+                        None => return None,
+                    }
+                }
+                Ok(None) => {
+                    peer.note_io(Outcome::IoOk);
+                    log_debug!(
+                        "edge-client",
+                        "token header missing on {}; rotating",
+                        peer.cfg.addr
+                    );
+                }
+                Err(e) => {
+                    log_debug!("edge-client", "token header fetch failed: {e}");
+                    peer.mark_dead_conn();
+                    peer.note_io(classify_io_err(&e));
+                    self.stats.peer_failures += 1;
+                }
+            }
+        }
+        None
+    }
+
+    /// The semantic tier, engaged ONLY after a total exact-catalog miss
+    /// (never on exact hits — the caller guarantees the ordering): sketch
+    /// the prompt, rank donor candidates from the per-peer sketch tables
+    /// by Hamming distance, then **verify** each candidate by fetching its
+    /// cheap token-id header and computing the real longest common token
+    /// prefix.  Correctness never rides on the sketch: only the verified
+    /// prefix is fetched, and causal attention makes the donor's first
+    /// `lcp` rows bit-identical to a local prefill of the same tokens.
+    /// A near sketch whose real overlap is below the hit floor is a
+    /// *false probe* — one tiny header round trip, charged through the
+    /// shaper and counted, never any KV bytes.
+    fn semantic_lookup_fetch(
+        &mut self,
+        tokens: &[u32],
+        bd: &mut PhaseBreakdown,
+    ) -> Option<Download> {
+        let floor = self.cfg.min_hit_tokens.max(1);
+        if tokens.len() < floor || self.peers.is_empty() {
+            return None;
+        }
+        // sketch + table scan: pure local compute, microseconds — a
+        // genuinely novel prompt whose candidates all exceed the distance
+        // bound costs zero wire here.  Attributed to the lookup phase.
+        let t0 = std::time::Instant::now();
+        let q = sketch_tokens(tokens);
+        let mut merged: Vec<(SketchCandidate, Vec<usize>)> = Vec::new();
+        for (i, peer) in self.peers.iter().enumerate() {
+            let Ok(table) = peer.sketches.lock() else {
+                continue;
+            };
+            for c in table.nearest(q, self.cfg.semantic_k, self.cfg.semantic_dist, floor) {
+                match merged.iter_mut().find(|(m, _)| m.record.key == c.record.key) {
+                    Some((_, cl)) => cl.push(i),
+                    None => merged.push((c, vec![i])),
+                }
+            }
+        }
+        // closest sketch first; between equals, the longer donor (more
+        // potential overlap per header probe)
+        merged.sort_by(|a, b| {
+            a.0.distance
+                .cmp(&b.0.distance)
+                .then(b.0.record.token_len.cmp(&a.0.record.token_len))
+        });
+        merged.truncate(self.cfg.semantic_k);
+        bd.add(Phase::Bloom, t0.elapsed());
+
+        for (cand, claimers) in merged {
+            let rec = cand.record;
+            self.stats.semantic_probes += 1;
+            let t0 = std::time::Instant::now();
+            let probe = self.fetch_token_header(&rec.key, &claimers);
+            bd.add(Phase::Redis, t0.elapsed());
+            let Some((probe_wire, donor)) = probe else {
+                continue;
+            };
+            let lcp = common_prefix_len(tokens, &donor).min(rec.token_len as usize);
+            if lcp < floor {
+                self.stats.semantic_false_probes += 1;
+                log_debug!(
+                    "edge-client",
+                    "false probe: sketch dist {} but real overlap {lcp} < {floor}",
+                    cand.distance
+                );
+                continue;
+            }
+            // the same overhead-aware break-even gate the exact path runs,
+            // on the *verified* overlap — never on the sketch's promise
+            let est_bytes = self.engine.model.config.kv_bytes_per_token() * lcp;
+            let link = claimers
+                .first()
+                .and_then(|&i| self.peers.get(i))
+                .map(|p| p.link.clone())
+                .unwrap_or_else(|| self.cfg.link.clone());
+            if !self
+                .cfg
+                .fetch_policy
+                .should_fetch(&self.cfg.device, &link, lcp, est_bytes)
+            {
+                self.stats.fetches_declined += 1;
+                return None;
+            }
+            let t0 = std::time::Instant::now();
+            let got = self.fetch_entry_rows(
+                state_store_key(&rec.key),
+                rec.token_len as usize,
+                rec.compressed,
+                (rec.chunk_tokens > 0).then_some(rec.chunk_tokens as usize),
+                lcp,
+                claimers,
+                tokens,
+                probe_wire,
+            );
+            bd.add(Phase::Redis, t0.elapsed());
+            match got {
+                Some(d) if d.state.n_tokens == lcp => {
+                    self.stats.semantic_hits += 1;
+                    self.stats.semantic_tokens_recovered += lcp as u64;
+                    self.stats.bytes_saved += d.saved_bytes as u64;
+                    return Some(d);
+                }
+                _ => {
+                    // donor evicted or unverifiable mid-fetch; the sketch
+                    // was honest (the header proved the overlap), so this
+                    // is a peer failure, not a false probe
+                    log_debug!(
+                        "edge-client",
+                        "semantic donor fetch failed; next candidate"
+                    );
+                }
             }
         }
         None
@@ -1409,6 +1684,7 @@ impl EdgeClient {
     fn upload_ranges(
         &mut self,
         state: &KvState,
+        tokens: &[u32],
         ranges: &[PromptRange],
         skip_up_to: usize,
         prompt_tokens: usize,
@@ -1472,6 +1748,37 @@ impl EdgeClient {
                 alias_blob.clone(),
             ]));
             tail_reqs.push(register_req(&r.key));
+        }
+
+        // semantic-tier registration rides the same pipeline tail, so
+        // every box that stores a copy also serves verification probes
+        // (the cheap token-id header) and advertises the entry in its
+        // master sketch log.  A legacy box answers `CAT.SREGISTER` with
+        // an in-pipeline error the senders ignore — against it the tier
+        // degrades to exact-only, by construction.  Registered for the
+        // *longest* range only: a token-prefix LCP against the full entry
+        // subsumes every alias prefix.
+        let sketch_rec = (self.cfg.semantic && n <= tokens.len()).then(|| SketchRecord {
+            key: longest.key,
+            sketch: sketch_tokens(&tokens[..n]),
+            token_len: n as u32,
+            chunk_tokens: ct as u32,
+            compressed,
+        });
+        if let Some(rec) = &sketch_rec {
+            let header: SharedBytes = encode_token_ids(&tokens[..n]).into();
+            alias_wire += header.len();
+            tail_reqs.push(request_shared(vec![
+                SharedBytes::copy_from(b"SET"),
+                token_store_key(&longest.key).into(),
+                header,
+            ]));
+            let section: SharedBytes = encode_section(std::slice::from_ref(rec)).into();
+            alias_wire += section.len();
+            tail_reqs.push(request_shared(vec![
+                SharedBytes::copy_from(b"CAT.SREGISTER"),
+                section,
+            ]));
         }
 
         // SPLICE is chunk-aligned: reuse the base's whole chunks below the
@@ -1753,6 +2060,13 @@ impl EdgeClient {
             for r in &todo {
                 cat.register_key(&r.key);
             }
+            // mirror the sketch into this client's view of the peer
+            // immediately — other clients learn it via CAT.SDELTA sync
+            if let Some(rec) = sketch_rec {
+                if let Ok(mut t) = self.peers[i].sketches.lock() {
+                    t.insert(rec);
+                }
+            }
         }
         self.stats.bytes_up += wire as u64;
         let saved = seed_cost.saturating_sub(wire);
@@ -1776,8 +2090,10 @@ impl EdgeClient {
     /// stripe can mix it with the originals freely.  Repairing a prefix
     /// of a longer entry, or with this client's own codec settings,
     /// would plant a divergent copy whose chunk index disagrees with the
-    /// head peer's; those cases are skipped (ROADMAP: proactive repair
-    /// sweep).  Bounded to primary + replicas probes per sweep; a probe
+    /// head peer's; those cases are skipped — the timer-gated
+    /// [`maybe_repair_sweep`](Self::maybe_repair_sweep) heals them from
+    /// the authoritative stored bytes instead.  Bounded to primary +
+    /// replicas probes per sweep; a probe
     /// that discovers a dead owner updates membership and the sweep runs
     /// once more against the recomputed owner set.
     fn repair_matched_range(
@@ -1878,6 +2194,112 @@ impl EdgeClient {
         }
     }
 
+    /// One timer-gated step of the proactive repair sweep
+    /// ([`EdgeClientConfig::repair_sweep`]): SCAN the next slice of the
+    /// current box's key space and ring-repair every state entry found.
+    /// Full entries re-publish byte-faithfully from the scanned copy;
+    /// range-alias pointers re-establish at their own key's owners and are
+    /// deliberately not catalog-registered (matching upload-time ring
+    /// alias indirection).  The verified-owner memo inside
+    /// [`repair_sweep`](Self::repair_sweep) makes steady-state steps
+    /// probe-free; a wrapped walk rotates to the next box.  Runs
+    /// post-response, never on the query latency path, and only under
+    /// deterministic placement (owner sets are derivable).
+    fn maybe_repair_sweep(&mut self) {
+        const SWEEP_BATCH: usize = 16;
+        if self.cfg.repair_sweep.is_zero()
+            || self.peers.is_empty()
+            || !self.policy.is_deterministic()
+            || self.last_sweep.elapsed() < self.cfg.repair_sweep
+        {
+            return;
+        }
+        self.last_sweep = std::time::Instant::now();
+        let pi = self.sweep_peer % self.peers.len();
+        let cursor = self.sweep_cursor;
+        let scanned = {
+            let peer = &mut self.peers[pi];
+            let Some((conn, shaper)) = peer.conn_parts() else {
+                peer.note_io(Outcome::IoDead);
+                return;
+            };
+            shaper.shaped(0, || conn.scan_keys(cursor, SWEEP_BATCH))
+        };
+        let (next, keys) = match scanned {
+            Ok(v) => {
+                self.peers[pi].note_io(Outcome::IoOk);
+                v
+            }
+            Err(e) => {
+                // a legacy box without SCAN answers an error on a healthy
+                // connection — rotate to the next box instead of spinning
+                // (regular traffic still detects genuinely dead conns)
+                log_debug!("edge-client", "repair sweep scan failed: {e}");
+                self.sweep_cursor = 0;
+                self.sweep_peer = (pi + 1) % self.peers.len();
+                return;
+            }
+        };
+        for key in keys {
+            // only state entries are ring-placed; token headers and other
+            // key families ride along with their bundle's copies
+            if !key.starts_with(b"state:") {
+                continue;
+            }
+            let ck: Option<[u8; KEY_LEN]> = std::str::from_utf8(&key[6..])
+                .ok()
+                .and_then(crate::util::hex::decode)
+                .and_then(|v| v.try_into().ok());
+            let Some(ck) = ck else {
+                continue; // malformed key: not ours to repair
+            };
+            let blob = {
+                let peer = &mut self.peers[pi];
+                let Some((conn, shaper)) = peer.conn_parts() else {
+                    peer.note_io(Outcome::IoDead);
+                    return;
+                };
+                match shaper.shaped_post(|| {
+                    let r = conn.get(&key);
+                    let n = r
+                        .as_ref()
+                        .map(|o| o.as_ref().map_or(0, |b| b.len()))
+                        .unwrap_or(0);
+                    (r, n)
+                }) {
+                    Ok(Some(b)) => {
+                        peer.note_io(Outcome::IoOk);
+                        peer.ledger.bytes_down += b.len() as u64;
+                        b
+                    }
+                    Ok(None) => {
+                        peer.note_io(Outcome::IoOk);
+                        continue; // evicted between SCAN and GET
+                    }
+                    Err(e) => {
+                        log_debug!("edge-client", "sweep read failed: {e}");
+                        self.peers[pi].mark_dead_conn();
+                        self.peers[pi].note_io(classify_io_err(&e));
+                        return;
+                    }
+                }
+            };
+            // alias pointers are repaired key-only (never registered);
+            // real entries re-register their catalog key at every healed
+            // owner, exactly like the hit-path repair
+            if decode_range_alias(&blob).is_some() {
+                self.repair_sweep(&key, None, &mut || blob.clone());
+            } else {
+                self.repair_sweep(&key, Some(&ck[..]), &mut || blob.clone());
+            }
+        }
+        self.sweep_cursor = next;
+        if next == 0 {
+            // walked the whole box: start over on the next one
+            self.sweep_peer = (pi + 1) % self.peers.len();
+        }
+    }
+
     /// The full steps-1-to-4 query flow for a structured prompt.
     pub fn query(&mut self, prompt: &Prompt) -> Result<QueryResult> {
         let mut bd = PhaseBreakdown::default();
@@ -1937,6 +2359,19 @@ impl EdgeClient {
             } else {
                 self.stats.fetches_declined += 1;
             }
+        } else if self.cfg.semantic {
+            // total exact miss: the semantic tier may still find a
+            // paraphrase donor.  Strictly ordered AFTER the exact lookup
+            // — an exact hit (even partial) never engages it, so exact
+            // workloads see zero behaviour change.
+            if let Some(d) = self.semantic_lookup_fetch(&tokens, &mut bd) {
+                matched = d.state.n_tokens;
+                downloaded = d.wire_bytes;
+                saved += d.saved_bytes;
+                self.stats.bytes_down += d.wire_bytes as u64;
+                delta_base = Some(d.base);
+                state = Some(d.state);
+            }
         }
         let mut state = state.unwrap_or_else(|| self.engine.fresh_state());
 
@@ -1958,12 +2393,21 @@ impl EdgeClient {
         let text = engine.tokenizer.decode(&out_tokens);
 
         // -- post-response upload (miss/partial path) -------------------------
-        let (uploaded, upload_time, upload_saved) =
-            self.upload_ranges(&state, &ranges, matched, full_len, delta_base.as_ref());
+        let (uploaded, upload_time, upload_saved) = self.upload_ranges(
+            &state,
+            &tokens,
+            &ranges,
+            matched,
+            full_len,
+            delta_base.as_ref(),
+        );
         saved += upload_saved;
 
         // -- ring-driven replica repair (hit path, post-response) -------------
         self.repair_matched_range(&ranges, matched, delta_base.as_ref(), &state);
+
+        // -- proactive repair sweep (timer-gated, post-response) --------------
+        self.maybe_repair_sweep();
 
         let case = Self::classify(&ranges, matched, full_len);
         self.stats.hits_by_case[case.number() - 1] += 1;

@@ -70,6 +70,7 @@ use crate::log_debug;
 use crate::metrics::{PeerLedger, Phase};
 use crate::model::state::{BlobLayout, ChunkEntry, ChunkVerifier, KvState, StateAssembler};
 use crate::netsim::{apply_byte_fault, LinkModel, Shaper, StreamSession};
+use crate::sketch::SketchTable;
 use crate::util::bytes::SharedBytes;
 
 /// One cache-box peer in the client configuration.
@@ -175,6 +176,10 @@ pub struct Peer {
     /// This peer's local catalog: one Bloom filter + sync cursor per box,
     /// so a lookup can name the box(es) that claim a range.
     pub catalog: Arc<Mutex<LocalCatalog>>,
+    /// This peer's sketch table — the semantic tier's per-box view, merged
+    /// by the same sync loop that merges the catalog (empty forever against
+    /// a legacy box, which degrades that peer to exact-only matching).
+    pub sketches: Arc<Mutex<SketchTable>>,
     sync: Option<CatalogSync>,
     pub ledger: PeerLedger,
     /// Liveness reporting handle; `None` for standalone fabric use
@@ -201,6 +206,7 @@ impl Peer {
             conn: Some(conn),
             shaper: Shaper::new(link, seed),
             catalog: Arc::new(Mutex::new(catalog)),
+            sketches: Arc::new(Mutex::new(SketchTable::new())),
             sync: None,
             ledger: PeerLedger { addr: cfg.addr.clone(), ..Default::default() },
             health: None,
@@ -256,13 +262,27 @@ impl Peer {
         health: Option<HealthSink>,
         gossip: Option<Arc<Membership>>,
     ) -> Result<()> {
+        self.spawn_sync_semantic(interval, health, gossip, false)
+    }
+
+    /// [`Peer::spawn_sync_gossip`] plus the semantic tier: when `sketches`
+    /// is set the loop also pulls this box's sketch sections into
+    /// [`Peer::sketches`] (see [`CatalogSync::spawn_semantic`]).
+    pub fn spawn_sync_semantic(
+        &mut self,
+        interval: Duration,
+        health: Option<HealthSink>,
+        gossip: Option<Arc<Membership>>,
+        sketches: bool,
+    ) -> Result<()> {
         if self.sync.is_none() {
-            self.sync = Some(CatalogSync::spawn_gossip(
+            self.sync = Some(CatalogSync::spawn_semantic(
                 self.cfg.addr.clone(),
                 Arc::clone(&self.catalog),
                 interval,
                 health,
                 gossip,
+                sketches.then(|| Arc::clone(&self.sketches)),
             )?);
         }
         Ok(())

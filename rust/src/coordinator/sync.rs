@@ -14,6 +14,7 @@ use crate::catalog::LocalCatalog;
 use crate::coordinator::membership::{HealthSink, Membership, MembershipDigest, Outcome};
 use crate::kvstore::KvClient;
 use crate::log_debug;
+use crate::sketch::SketchTable;
 use crate::util::rng::Rng;
 
 /// Ceiling for the failure backoff: a dead peer is re-probed at least this
@@ -78,6 +79,23 @@ impl CatalogSync {
         health: Option<HealthSink>,
         gossip: Option<Arc<Membership>>,
     ) -> Result<CatalogSync> {
+        Self::spawn_semantic(server_addr, catalog, interval, health, gossip, None)
+    }
+
+    /// [`CatalogSync::spawn_gossip`] plus the semantic tier's sketch
+    /// sections: after a successful exact-catalog round the loop pulls
+    /// `CAT.SDELTA` into the shared [`SketchTable`].  Like gossip, sketch
+    /// pulls are best-effort — a legacy box without the verb answers with an
+    /// error and the tier degrades to exact-only matching against that
+    /// peer, never to a failed sync round.
+    pub fn spawn_semantic(
+        server_addr: String,
+        catalog: Arc<Mutex<LocalCatalog>>,
+        interval: Duration,
+        health: Option<HealthSink>,
+        gossip: Option<Arc<Membership>>,
+        sketches: Option<Arc<Mutex<SketchTable>>>,
+    ) -> Result<CatalogSync> {
         let stop = Arc::new(AtomicBool::new(false));
         let rounds = Arc::new(AtomicU64::new(0));
         let attempts = Arc::new(AtomicU64::new(0));
@@ -109,6 +127,12 @@ impl CatalogSync {
                                     // GOSSIP verb answers with an error, not
                                     // a broken sync round
                                     let _ = Self::gossip_once(c, m);
+                                }
+                                if let Some(t) = &sketches {
+                                    // same contract for sketch sections: a
+                                    // legacy box degrades the tier, never
+                                    // the round
+                                    let _ = Self::sketch_once(c, t);
                                 }
                                 true
                             }
@@ -167,6 +191,20 @@ impl CatalogSync {
             // unparseable reply degrades to "no gossip this round"
             None => Ok(0),
         }
+    }
+
+    /// One sketch-section pull (also used synchronously in tests): fetch
+    /// every section appended after the table's synced version and merge the
+    /// decodable ones.  Returns how many sections arrived.
+    pub fn sketch_once(conn: &mut KvClient, table: &Arc<Mutex<SketchTable>>) -> Result<usize> {
+        let since = table.lock().unwrap().synced_version;
+        let (ver, sections) = conn.sketch_delta(since)?;
+        if ver <= since {
+            return Ok(0);
+        }
+        let n = sections.len();
+        table.lock().unwrap().apply_delta(ver, &sections);
+        Ok(n)
     }
 
     /// One pull-merge round (also used synchronously in tests).

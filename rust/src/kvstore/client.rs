@@ -319,6 +319,71 @@ impl KvClient {
         }
     }
 
+    // -- sketch sync (the semantic tier's versioned sections) ----------------
+
+    /// Append one encoded sketch section to the box's master sketch log.
+    /// Legacy boxes answer `ERR unknown command`, surfaced as `Err` — the
+    /// upload pipeline and sync loops treat that as "tier unavailable
+    /// there", never as a failed upload.
+    pub fn sketch_register(&mut self, section: &[u8]) -> Result<u64> {
+        Ok(self
+            .command(&[b"CAT.SREGISTER", section])?
+            .as_int()
+            .unwrap_or(0) as u64)
+    }
+
+    /// Pull sketch sections appended after `since`; returns
+    /// (new_version, sections).  Sections are opaque bytes here — the
+    /// `sketch` module's versioned decoder decides what is usable.
+    pub fn sketch_delta(&mut self, since: u64) -> Result<(u64, Vec<SharedBytes>)> {
+        let since_s = since.to_string();
+        match self.command(&[b"CAT.SDELTA", since_s.as_bytes()])? {
+            Value::Array(items) => {
+                let mut it = items.into_iter();
+                let ver = it
+                    .next()
+                    .and_then(|v| v.as_int())
+                    .ok_or_else(|| anyhow!("CAT.SDELTA missing version"))?
+                    as u64;
+                let mut sections = Vec::new();
+                for v in it {
+                    match v {
+                        Value::Bulk(b) => sections.push(b),
+                        other => bail!("CAT.SDELTA non-bulk entry {other:?}"),
+                    }
+                }
+                Ok((ver, sections))
+            }
+            other => Err(anyhow!("unexpected CAT.SDELTA reply {other:?}")),
+        }
+    }
+
+    /// One page of the box's sorted key space: keys `[cursor, cursor+count)`
+    /// plus the next cursor (`0` when the walk wrapped) — the repair
+    /// sweep's window into what a box actually holds.
+    pub fn scan_keys(&mut self, cursor: usize, count: usize) -> Result<(usize, Vec<Vec<u8>>)> {
+        let c = cursor.to_string();
+        let n = count.to_string();
+        match self.command(&[b"SCAN", c.as_bytes(), n.as_bytes()])? {
+            Value::Array(items) => {
+                let mut it = items.into_iter();
+                let next = it
+                    .next()
+                    .and_then(|v| v.as_int())
+                    .ok_or_else(|| anyhow!("SCAN missing cursor"))? as usize;
+                let mut keys = Vec::new();
+                for v in it {
+                    match v {
+                        Value::Bulk(b) => keys.push(b.to_vec()),
+                        other => bail!("SCAN non-bulk entry {other:?}"),
+                    }
+                }
+                Ok((next, keys))
+            }
+            other => Err(anyhow!("unexpected SCAN reply {other:?}")),
+        }
+    }
+
     // -- gossip (SWIM fleet health over the sync wire) -----------------------
 
     /// One gossip exchange: push the local membership digest, receive the

@@ -205,6 +205,11 @@ impl Admission {
 #[derive(Debug, Default)]
 pub struct MasterCatalog {
     log: Vec<SharedBytes>,
+    /// Parallel append-only log of *sketch sections* (`sketch` module wire
+    /// format) powering the semantic tier.  Kept separate from the key log
+    /// so legacy clients that only pull `CAT.DELTA` never see sketch bytes
+    /// — the tiers version independently.
+    sketch_log: Vec<SharedBytes>,
 }
 
 impl MasterCatalog {
@@ -222,6 +227,25 @@ impl MasterCatalog {
         let from = (since as usize).min(self.log.len());
         let to = (from + cap).min(self.log.len());
         (to as u64, &self.log[from..to])
+    }
+
+    pub fn sketch_version(&self) -> u64 {
+        self.sketch_log.len() as u64
+    }
+
+    /// Append one opaque sketch section.  The box never decodes it — the
+    /// section's magic/version is a client-side contract, so a box can
+    /// relay formats newer than itself.
+    pub fn sketch_register(&mut self, section: impl Into<SharedBytes>) -> u64 {
+        self.sketch_log.push(section.into().detach_loose());
+        self.sketch_version()
+    }
+
+    /// Sketch sections appended after `since` (capped like [`Self::delta`]).
+    pub fn sketch_delta(&self, since: u64, cap: usize) -> (u64, &[SharedBytes]) {
+        let from = (since as usize).min(self.sketch_log.len());
+        let to = (from + cap).min(self.sketch_log.len());
+        (to as u64, &self.sketch_log[from..to])
     }
 }
 
@@ -592,6 +616,46 @@ impl KvServer {
                 let mut items = Vec::with_capacity(keys.len() + 1);
                 items.push(Value::Int(ver as i64));
                 items.extend(keys.iter().map(|k| Value::bulk(k.clone())));
+                Value::Array(items)
+            }
+            ("CAT.SREGISTER", 2) => {
+                let v = self.catalog.lock().unwrap().sketch_register(args[1].clone());
+                Value::Int(v as i64)
+            }
+            ("CAT.SDELTA", 2) => {
+                let since = match std::str::from_utf8(&args[1])
+                    .ok()
+                    .and_then(|s| s.parse::<u64>().ok())
+                {
+                    Some(v) => v,
+                    None => return Value::Error("ERR bad since".into()),
+                };
+                let cat = self.catalog.lock().unwrap();
+                let (ver, sections) = cat.sketch_delta(since, 100_000);
+                let mut items = Vec::with_capacity(sections.len() + 1);
+                items.push(Value::Int(ver as i64));
+                items.extend(sections.iter().map(|s| Value::bulk(s.clone())));
+                Value::Array(items)
+            }
+            ("SCAN", 3) => {
+                let (Some(cursor), Some(count)) =
+                    (parse_index(&args[1]), parse_index(&args[2]))
+                else {
+                    return Value::Error("ERR bad cursor".into());
+                };
+                // sorted snapshot so a cursor walk is stable across calls
+                // modulo concurrent inserts/evictions — good enough for the
+                // repair sweep, which re-verifies everything it touches
+                let mut keys = self.store.all_keys();
+                keys.sort_unstable();
+                let from = cursor.min(keys.len());
+                let to = (from + count.max(1)).min(keys.len());
+                let next = if to >= keys.len() { 0 } else { to };
+                let mut items = Vec::with_capacity(to - from + 1);
+                items.push(Value::Int(next as i64));
+                items.extend(
+                    keys[from..to].iter().map(|k| Value::bulk(k.clone())),
+                );
                 Value::Array(items)
             }
             ("GOSSIP", 2) => {

@@ -17,6 +17,8 @@
 //!   partial prompt matching, upload/retrieval policy
 //! * [`netsim`] / [`devicemodel`] — calibrated Wi-Fi 4 link shaping and
 //!   Raspberry-Pi device pacing so the paper's testbed numbers reproduce
+//! * [`sketch`] — SimHash similarity sketches: the semantic tier that
+//!   turns paraphrase misses into verified partial hits
 //! * [`workload`] — MMLU-like multi-domain prompt generator
 //! * [`metrics`] / [`report`] — the six-phase latency breakdown and the
 //!   paper-table renderers
@@ -35,6 +37,7 @@ pub mod model;
 pub mod netsim;
 pub mod report;
 pub mod runtime;
+pub mod sketch;
 pub mod tokenizer;
 pub mod util;
 pub mod workload;

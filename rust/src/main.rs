@@ -173,6 +173,15 @@ fn client_config(m: &edgecache::util::cli::Matches, server: Option<String>) -> R
             .str("deadline-k")
             .parse::<f64>()
             .map_err(|e| anyhow!("bad --deadline-k: {e}"))?,
+        // the semantic tier: sketch registration + nearest-sketch search on
+        // total exact misses, every candidate verified by its real token
+        // prefix before any state is reused
+        semantic: !m.flag("no-semantic"),
+        semantic_dist: m.usize("semantic-dist").map_err(|e| anyhow!(e))? as u32,
+        semantic_k: m.usize("semantic-k").map_err(|e| anyhow!(e))?,
+        repair_sweep: std::time::Duration::from_millis(
+            m.u64("repair-sweep-ms").map_err(|e| anyhow!(e))?,
+        ),
         seed: m.u64("seed").map_err(|e| anyhow!(e))?,
     })
 }
@@ -230,6 +239,30 @@ fn client_cmd_spec(name: &'static str, about: &'static str) -> Command {
             "adaptive deadline multiplier: arm each op's timeout at k x the \
              link's expected transfer time, floored by --deadline-ms and \
              widened x2 under Suspect (0 = static budget)",
+        )
+        .opt(
+            "semantic-dist",
+            "16",
+            "max Hamming distance (of 64 sketch bits) a semantic donor \
+             candidate may sit from the query sketch",
+        )
+        .opt(
+            "semantic-k",
+            "3",
+            "max semantic donor candidates verified (token-header probes) \
+             per total exact miss",
+        )
+        .opt(
+            "repair-sweep-ms",
+            "0",
+            "proactive repair sweep period: SCAN a slice of one box's key \
+             space and re-publish entries whose ring owners lost their \
+             copy (0 = off; deterministic placement only)",
+        )
+        .flag(
+            "no-semantic",
+            "disable the semantic similarity tier (exact-match-only \
+             ablation: no sketch registration, sync or probes)",
         )
         .flag(
             "no-gossip",
@@ -294,7 +327,8 @@ fn run_trace(
              fallback probes {} ({} hits, {} suppressed), repairs {}, \
              timeouts {}, suspects {}, heals {}, \
              gossip {} adopted / {} refuted, probes {} indirect ({} saves), \
-             busy rejections {} ({} free replans)",
+             busy rejections {} ({} free replans), \
+             semantic {} probes / {} hits / {} false ({} tokens recovered)",
             c.cfg.name,
             c.placement_name(),
             c.stats.queries,
@@ -317,7 +351,11 @@ fn run_trace(
             c.stats.indirect_probes,
             c.stats.probe_saves,
             c.stats.busy_rejections,
-            c.stats.replans_on_busy
+            c.stats.replans_on_busy,
+            c.stats.semantic_probes,
+            c.stats.semantic_hits,
+            c.stats.semantic_false_probes,
+            c.stats.semantic_tokens_recovered
         );
         for l in c.peer_ledgers() {
             println!(
@@ -325,7 +363,8 @@ fn run_trace(
                  uploads {} (+{} replicas), \
                  placed {}, probes {}, repairs {}, {} sync rounds, \
                  {} heartbeats, {} heals, {} timeouts, \
-                 {} sheds, peak pending {}",
+                 {} sheds, peak pending {}, \
+                 {} sketch entries ({} sections synced)",
                 l.addr,
                 l.bytes_down / 1024,
                 l.bytes_up / 1024,
@@ -342,7 +381,9 @@ fn run_trace(
                 l.heals,
                 l.timeouts,
                 l.sheds,
-                l.peak_pending
+                l.peak_pending,
+                l.sketch_entries,
+                l.sketch_sections
             );
         }
     }

@@ -195,6 +195,11 @@ pub struct PeerLedger {
     pub repair_republishes: u64,
     /// Completed catalog-sync rounds against this peer.
     pub sync_rounds: u64,
+    /// Sketch records currently held in this peer's synced sketch table
+    /// (the semantic tier's per-box search space; 0 against a legacy box).
+    pub sketch_entries: u64,
+    /// Sketch sections this peer's sync loop has merged over its lifetime.
+    pub sketch_sections: u64,
     /// Liveness heartbeats acknowledged by this peer (one per completed
     /// sync round and per manual sync; see `coordinator::membership`).
     pub heartbeats: u64,

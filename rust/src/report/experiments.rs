@@ -230,6 +230,16 @@ pub fn real_table23(
         min_hit_tokens: 1,
         sync_interval: None,
         deadline: None,
+        gossip: true,
+        indirect_probes: 1,
+        adaptive_deadline_k: 0.0,
+        // the paper's tables measure the exact tier; the semantic tier is
+        // ablated so its sketch/token-header uploads don't skew the wire
+        // columns (the repeat workload would never probe anyway)
+        semantic: false,
+        semantic_dist: 16,
+        semantic_k: 3,
+        repair_sweep: std::time::Duration::ZERO,
         seed: cfg.seed,
     };
     let mut client = EdgeClient::new(engine, ecfg)?;

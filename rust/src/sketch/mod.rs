@@ -1,0 +1,459 @@
+//! Similarity sketches — the *semantic tier* beside the exact Bloom
+//! catalog.
+//!
+//! The paper's partial matching fires only on exact token-prefix equality,
+//! so a paraphrased prompt misses the entire fleet cache and pays full
+//! prefill.  This module adds a compact per-entry **SimHash** computed at
+//! upload time from cheap token-bucket shingle features (no model
+//! inference, no embedding service): every W-token window of the entry's
+//! token ids is bucketed and hashed, each hash votes ±1 on 64 accumulator
+//! bits, and the sign pattern becomes the sketch.  Two prompts that share
+//! most of their shingles land within a few Hamming bits of each other, so
+//! a nearest-sketch scan over a fleet's [`SketchTable`] proposes donor
+//! entries for a prompt the exact catalog missed.
+//!
+//! **The sketch is advisory, never trusted.**  Correctness comes from the
+//! verification gate: before any state is reused, the client fetches the
+//! donor's cheap token-id header ([`encode_token_ids`], stored under
+//! `tok:<hex>` beside the state blob) and computes the *actual* longest
+//! common token prefix ([`common_prefix_len`]).  Only the verified prefix
+//! rows are fetched and restored — causal attention makes the first `lcp`
+//! rows of the donor's KV state bit-identical to what local prefill of the
+//! same `lcp` tokens would produce, so a maliciously-close sketch with
+//! zero real overlap can cost at most one wasted header probe.
+//!
+//! Sketches travel fleet-wide as **versioned sections**
+//! ([`encode_section`] / [`decode_section`]) appended to each box's
+//! master sketch log and pulled incrementally by `CatalogSync`
+//! (`CAT.SREGISTER` / `CAT.SDELTA`).  A peer that predates the verbs
+//! answers with an error the sync loop swallows, and a section whose
+//! magic/version is unknown decodes to "nothing" — either way the tier
+//! degrades to exact-only matching, never to a broken sync round.
+
+use std::collections::HashMap;
+
+use crate::catalog::KEY_LEN;
+
+/// Sketch width in bits (one `u64`).  64 bits keeps the per-entry cost at
+/// 8 bytes and a fleet-wide table of thousands of entries under a page,
+/// while leaving same-domain paraphrases ~tens of bits from unrelated
+/// prompts on the MMLU-style workload.
+pub const SKETCH_BITS: usize = 64;
+
+/// Shingle window: features are overlapping `W`-token windows, so local
+/// token swaps perturb only the `W` shingles that cover them.
+const SHINGLE_W: usize = 3;
+
+/// Token-bucket count: token ids are folded to `t % BUCKETS` before
+/// shingling, so the feature space stays small and a tokenizer's exact id
+/// assignment (beyond bucket collisions) stops mattering.
+const BUCKETS: u32 = 1024;
+
+/// SplitMix64 finalizer — cheap, well-mixed 64-bit hash per shingle.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// SimHash over token-bucket shingles: each `SHINGLE_W`-wide window of
+/// bucketed token ids hashes to 64 bits that vote ±1 per accumulator; the
+/// accumulator signs are the sketch.  Deterministic — identical token
+/// sequences (identical shingle multisets) always sketch identically —
+/// and cheap: one pass, no allocation beyond the fixed accumulator.
+pub fn sketch_tokens(tokens: &[u32]) -> u64 {
+    let mut acc = [0i32; SKETCH_BITS];
+    let mut vote = |h: u64| {
+        for (b, a) in acc.iter_mut().enumerate() {
+            if (h >> b) & 1 == 1 {
+                *a += 1;
+            } else {
+                *a -= 1;
+            }
+        }
+    };
+    if tokens.len() < SHINGLE_W {
+        // degenerate short input: one shingle over what exists, padded
+        // with a sentinel so the empty prompt still sketches stably
+        let mut h = 0xE1u64;
+        for &t in tokens {
+            h = mix64(h ^ (t % BUCKETS) as u64);
+        }
+        vote(mix64(h));
+    } else {
+        for w in tokens.windows(SHINGLE_W) {
+            let mut h = 0xE1u64;
+            for &t in w {
+                h = mix64(h ^ (t % BUCKETS) as u64);
+            }
+            vote(h);
+        }
+    }
+    let mut out = 0u64;
+    for (b, &a) in acc.iter().enumerate() {
+        if a >= 0 {
+            out |= 1 << b;
+        }
+    }
+    out
+}
+
+/// Hamming distance between two sketches (0..=64).
+pub fn hamming(a: u64, b: u64) -> u32 {
+    (a ^ b).count_ones()
+}
+
+/// One fleet-visible sketch entry: the catalog key it annotates plus the
+/// entry geometry a semantic fetch needs (what an exact hit would read
+/// out of the range alias).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SketchRecord {
+    /// Catalog key of the donor entry (the *longest* range of its upload —
+    /// an LCP against the full entry subsumes every alias prefix).
+    pub key: [u8; KEY_LEN],
+    pub sketch: u64,
+    /// Donor entry length in tokens (rows held at its store key).
+    pub token_len: u32,
+    /// ECS3 chunk size of the donor blob.
+    pub chunk_tokens: u32,
+    /// Whether the donor blob is per-chunk deflated.
+    pub compressed: bool,
+}
+
+/// Section wire format: magic+version tag, then fixed-width records.  The
+/// tag is the whole compatibility story — a future v2 changes the magic
+/// and today's decoder ignores it (returns `None`), degrading that peer
+/// to exact-only for v2 entries instead of misparsing them.
+const SECTION_MAGIC: &[u8; 4] = b"SKS1";
+/// key + sketch + token_len + chunk_tokens + flags
+const RECORD_LEN: usize = KEY_LEN + 8 + 4 + 4 + 1;
+
+/// Encode records as one versioned sketch section (the `CAT.SREGISTER`
+/// payload and `CAT.SDELTA` reply unit).
+pub fn encode_section(records: &[SketchRecord]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + records.len() * RECORD_LEN);
+    out.extend_from_slice(SECTION_MAGIC);
+    out.extend_from_slice(&(records.len() as u32).to_le_bytes());
+    for r in records {
+        out.extend_from_slice(&r.key);
+        out.extend_from_slice(&r.sketch.to_le_bytes());
+        out.extend_from_slice(&r.token_len.to_le_bytes());
+        out.extend_from_slice(&r.chunk_tokens.to_le_bytes());
+        out.push(r.compressed as u8);
+    }
+    out
+}
+
+/// Decode a sketch section; `None` for unknown magic/version or a
+/// malformed body (legacy peers, future formats — the caller skips it).
+pub fn decode_section(bytes: &[u8]) -> Option<Vec<SketchRecord>> {
+    if bytes.len() < 8 || &bytes[..4] != SECTION_MAGIC {
+        return None;
+    }
+    let n = u32::from_le_bytes(bytes[4..8].try_into().ok()?) as usize;
+    if bytes.len() != 8 + n * RECORD_LEN {
+        return None;
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let b = &bytes[8 + i * RECORD_LEN..8 + (i + 1) * RECORD_LEN];
+        let mut key = [0u8; KEY_LEN];
+        key.copy_from_slice(&b[..KEY_LEN]);
+        let sketch = u64::from_le_bytes(b[KEY_LEN..KEY_LEN + 8].try_into().ok()?);
+        let token_len =
+            u32::from_le_bytes(b[KEY_LEN + 8..KEY_LEN + 12].try_into().ok()?);
+        let chunk_tokens =
+            u32::from_le_bytes(b[KEY_LEN + 12..KEY_LEN + 16].try_into().ok()?);
+        let compressed = b[KEY_LEN + 16] != 0;
+        out.push(SketchRecord { key, sketch, token_len, chunk_tokens, compressed });
+    }
+    Some(out)
+}
+
+/// A sketch candidate returned by [`SketchTable::nearest`].
+#[derive(Debug, Clone, Copy)]
+pub struct SketchCandidate {
+    pub record: SketchRecord,
+    pub distance: u32,
+}
+
+/// Per-peer sketch table: every sketch record this client has pulled from
+/// one box's master sketch log, keyed by catalog key.  Mirrors
+/// `LocalCatalog` — a sync cursor plus the merged state — but stores the
+/// records themselves (8+ bytes each) because nearest-sketch search needs
+/// them, where the Bloom filter only answers membership.
+#[derive(Debug, Default)]
+pub struct SketchTable {
+    records: HashMap<[u8; KEY_LEN], SketchRecord>,
+    /// Master sketch-log version this table has incorporated.
+    pub synced_version: u64,
+    /// Sections merged over the table's lifetime (sync telemetry).
+    pub synced_sections: u64,
+}
+
+impl SketchTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Insert/overwrite one record (upload-time local registration and
+    /// section merges both land here; last write wins, like re-registering
+    /// a catalog key).
+    pub fn insert(&mut self, rec: SketchRecord) {
+        self.records.insert(rec.key, rec);
+    }
+
+    pub fn get(&self, key: &[u8; KEY_LEN]) -> Option<&SketchRecord> {
+        self.records.get(key)
+    }
+
+    /// Merge one decoded delta: apply every parseable section, ignore the
+    /// rest (forward compatibility), advance the cursor monotonically.
+    pub fn apply_delta(&mut self, new_version: u64, sections: &[impl AsRef<[u8]>]) {
+        for s in sections {
+            if let Some(recs) = decode_section(s.as_ref()) {
+                self.synced_sections += 1;
+                for r in recs {
+                    self.insert(r);
+                }
+            }
+        }
+        self.synced_version = self.synced_version.max(new_version);
+    }
+
+    /// The `k` nearest records to `sketch` within `max_dist` Hamming bits,
+    /// longest-entry-first among ties (a longer donor can only verify to a
+    /// longer overlap).  Linear scan — the table holds one record per
+    /// fleet entry, and 64-bit XOR+popcount makes even 10⁵ entries a
+    /// sub-millisecond scan, far below one prefill token.
+    pub fn nearest(
+        &self,
+        sketch: u64,
+        k: usize,
+        max_dist: u32,
+        min_tokens: usize,
+    ) -> Vec<SketchCandidate> {
+        let mut hits: Vec<SketchCandidate> = self
+            .records
+            .values()
+            .filter(|r| r.token_len as usize >= min_tokens)
+            .map(|r| SketchCandidate { record: *r, distance: hamming(sketch, r.sketch) })
+            .filter(|c| c.distance <= max_dist)
+            .collect();
+        hits.sort_by(|a, b| {
+            a.distance
+                .cmp(&b.distance)
+                .then(b.record.token_len.cmp(&a.record.token_len))
+        });
+        hits.truncate(k);
+        hits
+    }
+}
+
+/// Token-id header stored under `tok:<hex>` beside each uploaded entry —
+/// the cheap artifact the verification gate fetches instead of trusting
+/// the sketch.  ~4 bytes per token: a few hundred bytes where the state
+/// blob is hundreds of kilobytes.
+const TOKENS_MAGIC: &[u8; 4] = b"TOK1";
+
+pub fn encode_token_ids(tokens: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + tokens.len() * 4);
+    out.extend_from_slice(TOKENS_MAGIC);
+    out.extend_from_slice(&(tokens.len() as u32).to_le_bytes());
+    for &t in tokens {
+        out.extend_from_slice(&t.to_le_bytes());
+    }
+    out
+}
+
+pub fn decode_token_ids(bytes: &[u8]) -> Option<Vec<u32>> {
+    if bytes.len() < 8 || &bytes[..4] != TOKENS_MAGIC {
+        return None;
+    }
+    let n = u32::from_le_bytes(bytes[4..8].try_into().ok()?) as usize;
+    if bytes.len() != 8 + n * 4 {
+        return None;
+    }
+    Some(
+        bytes[8..]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+    )
+}
+
+/// Longest common token prefix — the *verified* overlap a semantic reuse
+/// is allowed to restore.  Correctness never depends on the sketch: this
+/// comparison is against the donor's real token ids.
+pub fn common_prefix_len(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tokens(seed: u64, n: usize) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.below(30_000) as u32).collect()
+    }
+
+    /// Substitute each token independently with probability `rate`.
+    fn perturb(toks: &[u32], rate: f64, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::new(seed ^ 0x9E37);
+        toks.iter()
+            .map(|&t| if rng.chance(rate) { rng.below(30_000) as u32 } else { t })
+            .collect()
+    }
+
+    #[test]
+    fn identical_inputs_sketch_identically() {
+        for seed in 0..16 {
+            let t = tokens(seed, 120);
+            assert_eq!(sketch_tokens(&t), sketch_tokens(&t));
+            assert_eq!(hamming(sketch_tokens(&t), sketch_tokens(&t)), 0);
+        }
+        // degenerate lengths stay stable too
+        for n in 0..4 {
+            let t = tokens(99, n);
+            assert_eq!(sketch_tokens(&t), sketch_tokens(&t.clone()));
+        }
+    }
+
+    #[test]
+    fn distance_monotone_under_growing_perturbation() {
+        // SimHash law, pinned on seeded sweeps: average Hamming distance
+        // grows with the perturbation rate, and unrelated prompts sit far
+        // from light paraphrases
+        let rates = [0.02, 0.1, 0.3, 0.8];
+        let mut avg = [0f64; 4];
+        let trials = 48;
+        for seed in 0..trials {
+            let base = tokens(seed, 160);
+            let s0 = sketch_tokens(&base);
+            for (i, &r) in rates.iter().enumerate() {
+                let p = perturb(&base, r, seed * 31 + i as u64);
+                avg[i] += hamming(s0, sketch_tokens(&p)) as f64;
+            }
+        }
+        for a in avg.iter_mut() {
+            *a /= trials as f64;
+        }
+        for w in avg.windows(2) {
+            assert!(
+                w[0] < w[1],
+                "distance must grow with perturbation: {avg:?}"
+            );
+        }
+        // a light paraphrase stays meaningfully closer than random noise
+        assert!(avg[0] < 12.0, "2% perturbation drifted {} bits", avg[0]);
+        assert!(avg[3] > 16.0, "80% perturbation only {} bits", avg[3]);
+    }
+
+    #[test]
+    fn unrelated_prompts_are_far() {
+        let mut far = 0u32;
+        for seed in 0..24 {
+            let a = sketch_tokens(&tokens(seed, 150));
+            let b = sketch_tokens(&tokens(seed + 1000, 150));
+            far += hamming(a, b);
+        }
+        assert!(far / 24 > 20, "unrelated avg distance {}", far / 24);
+    }
+
+    #[test]
+    fn section_roundtrip() {
+        let recs: Vec<SketchRecord> = (0..5u8)
+            .map(|i| SketchRecord {
+                key: [i; KEY_LEN],
+                sketch: 0xDEAD_BEEF_u64.rotate_left(i as u32),
+                token_len: 100 + i as u32,
+                chunk_tokens: 8,
+                compressed: i % 2 == 0,
+            })
+            .collect();
+        let wire = encode_section(&recs);
+        assert_eq!(decode_section(&wire).unwrap(), recs);
+        // empty section roundtrips too
+        assert_eq!(decode_section(&encode_section(&[])).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn decode_rejects_foreign_bytes() {
+        assert!(decode_section(b"").is_none());
+        assert!(decode_section(b"SKS2\x00\x00\x00\x00").is_none(), "future version");
+        assert!(decode_section(b"nonsense-bytes").is_none());
+        let mut truncated = encode_section(&[SketchRecord {
+            key: [1; KEY_LEN],
+            sketch: 7,
+            token_len: 10,
+            chunk_tokens: 8,
+            compressed: false,
+        }]);
+        truncated.pop();
+        assert!(decode_section(&truncated).is_none());
+    }
+
+    #[test]
+    fn table_merge_and_nearest() {
+        let mut t = SketchTable::new();
+        let base = tokens(1, 120);
+        let near = perturb(&base, 0.05, 2);
+        let far = tokens(5000, 120);
+        let mk = |key: u8, toks: &[u32], len: u32| SketchRecord {
+            key: [key; KEY_LEN],
+            sketch: sketch_tokens(toks),
+            token_len: len,
+            chunk_tokens: 8,
+            compressed: false,
+        };
+        t.apply_delta(2, &[encode_section(&[mk(1, &near, 100), mk(2, &far, 100)])]);
+        assert_eq!((t.len(), t.synced_version, t.synced_sections), (2, 2, 1));
+        // unknown sections are skipped, the cursor still advances
+        t.apply_delta(3, &[b"SKS9junk".to_vec()]);
+        assert_eq!((t.len(), t.synced_version), (2, 3));
+        t.apply_delta(1, &[] as &[Vec<u8>]); // stale delta: no regression
+        assert_eq!(t.synced_version, 3);
+
+        let q = sketch_tokens(&base);
+        let hits = t.nearest(q, 4, 16, 1);
+        assert_eq!(hits[0].record.key, [1; KEY_LEN], "paraphrase ranks first");
+        assert!(hits.iter().all(|c| c.distance <= 16));
+        // the distance threshold really filters
+        assert!(t.nearest(q, 4, 0, 1).len() <= 1);
+        // min_tokens filters short donors
+        assert!(t.nearest(q, 4, 64, 101).is_empty());
+        // tie-break prefers the longer donor
+        let mut t2 = SketchTable::new();
+        t2.insert(mk(3, &base, 50));
+        t2.insert(mk(4, &base, 90));
+        assert_eq!(t2.nearest(q, 1, 64, 1)[0].record.key, [4; KEY_LEN]);
+    }
+
+    #[test]
+    fn token_header_roundtrip_and_lcp() {
+        let t = tokens(3, 77);
+        let wire = encode_token_ids(&t);
+        assert_eq!(decode_token_ids(&wire).unwrap(), t);
+        assert!(decode_token_ids(b"TOK2aaaa").is_none());
+        assert!(decode_token_ids(&wire[..wire.len() - 1]).is_none());
+        assert_eq!(decode_token_ids(&encode_token_ids(&[])).unwrap(), Vec::<u32>::new());
+
+        assert_eq!(common_prefix_len(&t, &t), 77);
+        let mut d = t.clone();
+        d[40] ^= 1;
+        assert_eq!(common_prefix_len(&t, &d), 40);
+        assert_eq!(common_prefix_len(&t, &[]), 0);
+        assert_eq!(common_prefix_len(&t[..10], &d), 10);
+    }
+}

@@ -16,6 +16,8 @@
 
 use crate::util::rng::Rng;
 
+pub mod perturb;
+
 /// The 57 MMLU subject domains (Hendrycks et al., ICLR'21).
 pub const DOMAINS: [&str; 57] = [
     "abstract_algebra", "anatomy", "astronomy", "business_ethics",

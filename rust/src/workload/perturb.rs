@@ -1,0 +1,272 @@
+//! Seeded paraphrase perturbation for the MMLU-like workload — the
+//! "semantically similar, textually different" traffic the semantic tier
+//! (`crate::sketch`) is built for.
+//!
+//! Three composable edit families, all deterministic under a seed:
+//!
+//! * **synonym-bucket swaps** — each word whose lowercase core sits in one
+//!   of the disjoint [`SYNONYM_BUCKETS`] is replaced by another member of
+//!   its bucket with per-word probability `rate`.  Punctuation and
+//!   whitespace survive, so tokenization stays word-aligned;
+//! * **clause reorder** — with per-prompt probability `reorder`, two
+//!   adjacent interior comma-clauses of the target question swap places
+//!   (the generator's filler clauses are order-independent paraphrases);
+//! * **prefix boilerplate jitter** — with per-prompt probability
+//!   `prefix_jitter`, a boilerplate sentence is *prepended* to the
+//!   instruction.  This is the adversarial mode: it keeps the sketch close
+//!   while destroying the common token prefix, which is exactly the shape
+//!   the verification gate must catch (a false probe, never a reuse).
+//!
+//! A swap early in the prompt defeats every exact catalog range (total
+//! miss) while leaving the sketch within a few bits of the original — the
+//! regime where nearest-sketch search plus token-prefix verification
+//! recovers real reuse that exact matching cannot see.
+
+use crate::util::rng::Rng;
+use crate::workload::Prompt;
+
+/// Disjoint buckets of interchangeable words, biased toward the
+/// generator's term banks so perturbation actually lands on real prompts.
+pub const SYNONYM_BUCKETS: &[&[&str]] = &[
+    &["fundamental", "foundational", "basic"],
+    &["standard", "conventional", "typical"],
+    &["observed", "measured", "recorded"],
+    &["determines", "governs", "dictates"],
+    &["described", "characterized", "captured"],
+    &["total", "overall", "aggregate"],
+    &["behaviour", "dynamics", "evolution"],
+    &["questions", "problems", "items"],
+    &["answers", "solutions", "responses"],
+    &["general", "broad", "usual"],
+    &["large", "big", "substantial"],
+    &["conditions", "circumstances", "constraints"],
+    &["rate", "pace", "tempo"],
+    &["stability", "robustness", "steadiness"],
+    &["following", "subsequent", "ensuing"],
+    &["derived", "obtained", "deduced"],
+];
+
+/// Boilerplate sentences for the adversarial prefix-jitter mode.
+pub const BOILERPLATE: &[&str] = &[
+    "Answer with a single letter. ",
+    "Read every option before answering. ",
+    "Choose the best option. ",
+];
+
+/// Seeded paraphrase perturber; one instance = one reproducible stream of
+/// edits.  For a per-query stable paraphrase, construct it from a seed
+/// derived from the query identity.
+pub struct Perturber {
+    rng: Rng,
+    /// Per-word synonym-swap probability (the bench's "perturbation rate").
+    pub rate: f64,
+    /// Per-prompt clause-reorder probability.
+    pub reorder: f64,
+    /// Per-prompt adversarial boilerplate-prepend probability (default 0 —
+    /// opt in for verification-gate stress).
+    pub prefix_jitter: f64,
+}
+
+impl Perturber {
+    pub fn new(seed: u64, rate: f64) -> Self {
+        Perturber {
+            rng: Rng::new(seed ^ 0x5EED_9A9A),
+            rate,
+            reorder: rate,
+            prefix_jitter: 0.0,
+        }
+    }
+
+    /// Swap bucket words in `text` at the configured per-word rate.
+    /// Word-structure preserving: only maximal alphabetic runs are
+    /// considered, everything else is copied through verbatim.
+    pub fn swap_synonyms(&mut self, text: &str) -> String {
+        let mut out = String::with_capacity(text.len());
+        let mut word = String::new();
+        for ch in text.chars() {
+            if ch.is_alphabetic() {
+                word.push(ch);
+            } else {
+                self.flush_word(&mut out, &mut word);
+                out.push(ch);
+            }
+        }
+        self.flush_word(&mut out, &mut word);
+        out
+    }
+
+    fn flush_word(&mut self, out: &mut String, word: &mut String) {
+        if word.is_empty() {
+            return;
+        }
+        let lower = word.to_lowercase();
+        let hit = SYNONYM_BUCKETS.iter().find_map(|b| {
+            b.iter().position(|w| **w == lower).map(|i| (*b, i))
+        });
+        match hit {
+            Some((bucket, i)) if self.rng.chance(self.rate) => {
+                // a different member, uniformly
+                let j = (i + 1 + self.rng.below(bucket.len() as u64 - 1) as usize)
+                    % bucket.len();
+                let mut rep = bucket[j].to_string();
+                if word.chars().next().is_some_and(|c| c.is_uppercase()) {
+                    let mut cs = rep.chars();
+                    rep = cs.next().map(|c| c.to_uppercase().collect::<String>())
+                        .unwrap_or_default()
+                        + cs.as_str();
+                }
+                out.push_str(&rep);
+            }
+            _ => out.push_str(word),
+        }
+        word.clear();
+    }
+
+    /// With probability `reorder`, swap two adjacent interior comma-clauses
+    /// of the first line of `text` (the question sentence).  Lines after
+    /// the first (the answer options) are never touched.
+    pub fn reorder_clauses(&mut self, text: &str) -> String {
+        if !self.rng.chance(self.reorder) {
+            return text.to_string();
+        }
+        let (first, rest) = match text.split_once('\n') {
+            Some((f, r)) => (f, Some(r)),
+            None => (text, None),
+        };
+        let parts: Vec<&str> = first.split(", ").collect();
+        let mut out = if parts.len() >= 3 {
+            // interior adjacent pair: positions 1..len-1
+            let i = 1 + self.rng.below(parts.len() as u64 - 2) as usize;
+            let mut p = parts.clone();
+            p.swap(i, i - 1);
+            p.join(", ")
+        } else {
+            first.to_string()
+        };
+        if let Some(r) = rest {
+            out.push('\n');
+            out.push_str(r);
+        }
+        out
+    }
+
+    /// Apply the full family to a structured prompt: synonym swaps over
+    /// every part, clause reorder over the target question, and (when
+    /// enabled) adversarial boilerplate prepended to the instruction.
+    pub fn perturb(&mut self, p: &Prompt) -> Prompt {
+        let mut instruction = self.swap_synonyms(&p.instruction);
+        if self.prefix_jitter > 0.0 && self.rng.chance(self.prefix_jitter) {
+            let b = *self.rng.pick(BOILERPLATE);
+            instruction = format!("{b}{instruction}");
+        }
+        let examples = p.examples.iter().map(|e| self.swap_synonyms(e)).collect();
+        let target = self.swap_synonyms(&p.target);
+        let target = self.reorder_clauses(&target);
+        Prompt {
+            domain: p.domain.clone(),
+            instruction,
+            examples,
+            target,
+            answer: p.answer,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Generator;
+
+    fn sample() -> Prompt {
+        Generator::new(7).prompt("astronomy", 3, 5)
+    }
+
+    #[test]
+    fn buckets_are_disjoint_and_plural() {
+        let mut seen = std::collections::HashSet::new();
+        for b in SYNONYM_BUCKETS {
+            assert!(b.len() >= 2, "a bucket needs an alternative");
+            for w in *b {
+                assert!(seen.insert(*w), "{w} appears in two buckets");
+                assert_eq!(**w, w.to_lowercase(), "buckets store lowercase");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rate_is_identity() {
+        let p = sample();
+        let mut pert = Perturber::new(1, 0.0);
+        let q = pert.perturb(&p);
+        assert_eq!(p.full_text(), q.full_text());
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let p = sample();
+        let a = Perturber::new(42, 0.5).perturb(&p);
+        let b = Perturber::new(42, 0.5).perturb(&p);
+        assert_eq!(a.full_text(), b.full_text());
+        let c = Perturber::new(43, 0.5).perturb(&p);
+        // overwhelmingly likely to differ at rate 0.5
+        assert_ne!(a.full_text(), c.full_text());
+    }
+
+    #[test]
+    fn high_rate_changes_text_but_preserves_shape() {
+        let p = sample();
+        let mut pert = Perturber::new(5, 1.0);
+        pert.reorder = 0.0;
+        let q = pert.perturb(&p);
+        assert_ne!(p.full_text(), q.full_text());
+        // word-structure preserving: same word count, same line count
+        assert_eq!(p.word_count(), q.word_count());
+        assert_eq!(
+            p.full_text().lines().count(),
+            q.full_text().lines().count()
+        );
+    }
+
+    #[test]
+    fn swaps_stay_inside_their_bucket() {
+        let mut pert = Perturber::new(9, 1.0);
+        let out = pert.swap_synonyms("the total rate observed under standard conditions");
+        for (orig, new) in
+            "the total rate observed under standard conditions".split(' ').zip(out.split(' '))
+        {
+            if orig == new {
+                continue;
+            }
+            let bucket = SYNONYM_BUCKETS
+                .iter()
+                .find(|b| b.contains(&orig))
+                .unwrap_or_else(|| panic!("{orig} changed but is in no bucket"));
+            assert!(bucket.contains(&new), "{new} escaped {orig}'s bucket");
+        }
+    }
+
+    #[test]
+    fn prefix_jitter_prepends_boilerplate() {
+        let p = sample();
+        let mut pert = Perturber::new(3, 0.0);
+        pert.prefix_jitter = 1.0;
+        let q = pert.perturb(&p);
+        assert!(BOILERPLATE.iter().any(|b| q.instruction.starts_with(b)));
+        assert!(q.instruction.ends_with(&p.instruction));
+    }
+
+    #[test]
+    fn reorder_preserves_clause_multiset() {
+        let mut pert = Perturber::new(11, 0.0);
+        pert.reorder = 1.0;
+        let text = "alpha, beta, gamma, delta?\nA. x\nB. y";
+        let out = pert.reorder_clauses(text);
+        let (first, rest) = out.split_once('\n').unwrap();
+        assert_eq!(rest, "A. x\nB. y", "options untouched");
+        let mut orig: Vec<&str> = "alpha, beta, gamma, delta?".split(", ").collect();
+        let mut got: Vec<&str> = first.split(", ").collect();
+        orig.sort_unstable();
+        got.sort_unstable();
+        assert_eq!(orig, got, "reorder must be a permutation");
+    }
+}

@@ -1,0 +1,381 @@
+//! Integration: the semantic similarity tier (`edgecache::sketch`) —
+//! sketch-section wire roundtrip, legacy-peer degradation, the
+//! verification gate (a close sketch NEVER causes reuse without a real
+//! token-prefix overlap), cross-client paraphrase recovery, and the
+//! timer-driven proactive repair sweep.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use edgecache::coordinator::{
+    CacheBox, CatalogSync, EdgeClient, EdgeClientConfig, HitCase, PeerConfig,
+    PlacementKind,
+};
+use edgecache::engine::Engine;
+use edgecache::kvstore::KvClient;
+use edgecache::sketch::{
+    common_prefix_len, encode_section, encode_token_ids, sketch_tokens,
+    SketchRecord, SketchTable,
+};
+use edgecache::workload::perturb::Perturber;
+use edgecache::workload::{Generator, Prompt};
+
+fn engine() -> Option<Arc<Engine>> {
+    if !edgecache::artifacts_dir().join("tiny/meta.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return None;
+    }
+    Some(Arc::new(Engine::load_preset("tiny").unwrap()))
+}
+
+fn cfg(name: &str, server: Option<String>) -> EdgeClientConfig {
+    EdgeClientConfig {
+        name: name.into(),
+        max_new_tokens: Some(2),
+        sync_interval: None,
+        ..EdgeClientConfig::native(server)
+    }
+}
+
+/// A long shared instruction whose final words differ — the paraphrase
+/// shape exact range matching cannot see (every range hash differs) but
+/// the semantic tier recovers: the common token prefix is most of the
+/// prompt.
+fn manual_prompt(tail: &str, target: &str) -> Prompt {
+    let instruction = format!(
+        "You are assisting with a careful multi step reasoning exercise. \
+         Read the shared background closely, weigh every stated constraint, \
+         and keep the working consistent across steps. The background \
+         covers resource budgets, timing margins, placement rules, and \
+         recovery behaviour for a small fleet of cooperating cache boxes \
+         that serve key value traffic under churn and partial failure. \
+         When the steps disagree, prefer the reading that keeps the whole \
+         account consistent. {tail}\n\n"
+    );
+    Prompt {
+        domain: "manual".into(),
+        instruction,
+        examples: Vec::new(),
+        target: format!("State the {target} in one word.\nAnswer:"),
+        answer: 'A',
+    }
+}
+
+#[test]
+fn sketch_section_roundtrips_over_the_wire() {
+    let cb = CacheBox::start_local().unwrap();
+    let mut c = KvClient::connect(&cb.addr()).unwrap();
+
+    let rec = SketchRecord {
+        key: [0x42; 16],
+        sketch: 0xDEAD_BEEF_0BAD_F00D,
+        token_len: 321,
+        chunk_tokens: 8,
+        compressed: true,
+    };
+    let v1 = c.sketch_register(&encode_section(&[rec])).unwrap();
+    assert_eq!(v1, 1, "first section is version 1");
+
+    let (ver, sections) = c.sketch_delta(0).unwrap();
+    assert_eq!(ver, 1);
+    assert_eq!(sections.len(), 1);
+    let mut table = SketchTable::new();
+    table.apply_delta(ver, &sections);
+    assert_eq!(table.get(&rec.key), Some(&rec), "record survives the wire");
+    assert_eq!(table.synced_version, 1);
+
+    // a second register bumps the version; an incremental delta returns
+    // only the new section
+    let rec2 = SketchRecord { key: [0x43; 16], sketch: 1, ..rec };
+    let v2 = c.sketch_register(&encode_section(&[rec2])).unwrap();
+    assert_eq!(v2, 2);
+    let (ver2, tail) = c.sketch_delta(v1).unwrap();
+    assert_eq!(ver2, 2);
+    assert_eq!(tail.len(), 1, "incremental sync ships only the delta");
+    table.apply_delta(ver2, &tail);
+    assert_eq!(table.len(), 2);
+    assert_eq!(table.get(&rec2.key), Some(&rec2));
+    cb.shutdown();
+}
+
+#[test]
+fn legacy_box_degrades_sketch_sync_not_state() {
+    // A pre-sketch box answers the new verbs with `-ERR unknown command`
+    // on a healthy connection; the sync helper surfaces the error and the
+    // table stays empty — the tier degrades to exact-only, nothing dies.
+    use std::io::{Read, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut buf = [0u8; 4096];
+        while let Ok(n) = s.read(&mut buf) {
+            if n == 0 || s.write_all(b"-ERR unknown command\r\n").is_err() {
+                break;
+            }
+        }
+    });
+    let mut c = KvClient::connect(&addr).unwrap();
+    assert!(c.sketch_delta(0).is_err(), "legacy box lacks CAT.SDELTA");
+    let table = Arc::new(std::sync::Mutex::new(SketchTable::new()));
+    assert!(CatalogSync::sketch_once(&mut c, &table).is_err());
+    assert_eq!(table.lock().unwrap().len(), 0, "no partial merge on error");
+    assert!(c.scan_keys(0, 8).is_err(), "legacy box lacks SCAN");
+    drop(c);
+    server.join().unwrap();
+}
+
+#[test]
+fn semantic_never_engages_on_exact_hits() {
+    // The zero-regression guarantee for exact workloads: any exact
+    // catalog hit — full or partial — bypasses the semantic tier
+    // entirely.  Probe counters must stay at zero.
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    let mut c = EdgeClient::new(Arc::clone(&eng), cfg("exact", Some(cb.addr()))).unwrap();
+    let gen = Generator::new(31);
+    let p0 = gen.prompt("astronomy", 0, 2);
+    let p1 = gen.prompt("astronomy", 1, 2); // shares instruction + examples
+
+    let r0 = c.query(&p0).unwrap();
+    assert_eq!(r0.case, HitCase::Miss);
+    let r1 = c.query(&p0).unwrap();
+    assert_eq!(r1.case, HitCase::Full);
+    let r2 = c.query(&p1).unwrap();
+    assert_eq!(r2.case, HitCase::AllExamples);
+    assert_eq!(c.stats.semantic_probes, 0, "exact hits never probe");
+    assert_eq!(c.stats.semantic_hits, 0);
+    assert_eq!(c.stats.semantic_false_probes, 0);
+    c.shutdown();
+    cb.shutdown();
+}
+
+#[test]
+fn verification_gate_blocks_zero_overlap_donor() {
+    // The adversarial case the gate exists for: a donor whose sketch is
+    // IDENTICAL to the query's (Hamming distance 0) but whose real token
+    // ids share nothing.  The cheap-header verification must expose it as
+    // a false probe; no state is ever fetched, let alone reused.
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    let gen = Generator::new(37);
+    let victim = gen.prompt("virology", 0, 2);
+    let vtokens = eng.tokenize_prompt(&victim.full_text());
+    assert!(!vtokens.is_empty());
+
+    // plant the malicious donor: perfect sketch, zero-overlap header
+    let mal_key = [0xAB; 16];
+    let rec = SketchRecord {
+        key: mal_key,
+        sketch: sketch_tokens(&vtokens),
+        token_len: vtokens.len() as u32,
+        chunk_tokens: 4,
+        compressed: false,
+    };
+    let mut kv = KvClient::connect(&cb.addr()).unwrap();
+    kv.sketch_register(&encode_section(&[rec])).unwrap();
+    let disjoint: Vec<u32> = vtokens.iter().map(|t| t + 100_000).collect();
+    assert_eq!(common_prefix_len(&vtokens, &disjoint), 0);
+    kv.set(
+        &edgecache::catalog::token_store_key(&mal_key),
+        &encode_token_ids(&disjoint),
+    )
+    .unwrap();
+
+    let mut solo = EdgeClient::new(Arc::clone(&eng), cfg("solo", None)).unwrap();
+    let expected = solo.query(&victim).unwrap();
+
+    let mut c = EdgeClient::new(Arc::clone(&eng), cfg("gate", Some(cb.addr()))).unwrap();
+    c.sync_catalog_now().unwrap(); // pulls the malicious sketch section
+    let r = c.query(&victim).unwrap();
+
+    assert_eq!(c.stats.semantic_probes, 1, "the close sketch is probed");
+    assert_eq!(c.stats.semantic_false_probes, 1, "...and exposed");
+    assert_eq!(c.stats.semantic_hits, 0, "never reused");
+    assert_eq!(c.stats.semantic_tokens_recovered, 0);
+    assert_eq!(r.matched_tokens, 0);
+    assert_eq!(r.case, HitCase::Miss);
+    // correctness untouched: same output as a cache-less client
+    assert_eq!(r.response_tokens, expected.response_tokens);
+    c.shutdown();
+    solo.shutdown();
+    cb.shutdown();
+}
+
+#[test]
+fn paraphrase_recovers_verified_prefix_cross_client() {
+    // The headline semantic win: a paraphrase that changes words near the
+    // END of a long shared prefix defeats every exact range hash (total
+    // miss) yet shares almost the whole token prefix with the donor.  The
+    // tier must find the donor by sketch, verify the real LCP from the
+    // token header, fetch exactly that many rows, and produce the same
+    // response a cache-less client would.
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    let p0 = manual_prompt("Proceed with the checks now.", "outcome");
+    let p1 = manual_prompt("Continue with the checks now.", "outcome");
+    let t0 = eng.tokenize_prompt(&p0.full_text());
+    let t1 = eng.tokenize_prompt(&p1.full_text());
+    let lcp = common_prefix_len(&t0, &t1);
+    assert!(lcp > 20, "the manual prompts must share a long prefix ({lcp})");
+    assert!(lcp < t1.len());
+
+    let mut solo = EdgeClient::new(Arc::clone(&eng), cfg("solo", None)).unwrap();
+    let expected = solo.query(&p1).unwrap();
+
+    let mut a = EdgeClient::new(Arc::clone(&eng), cfg("donor", Some(cb.addr()))).unwrap();
+    let ra = a.query(&p0).unwrap();
+    assert_eq!(ra.case, HitCase::Miss); // donor upload
+
+    let mut k = cfg("semantic", Some(cb.addr()));
+    k.semantic_dist = 24; // headroom over the default for the short target
+    let mut b = EdgeClient::new(Arc::clone(&eng), k).unwrap();
+    b.sync_catalog_now().unwrap();
+    let rb = b.query(&p1).unwrap();
+
+    assert_eq!(b.stats.semantic_probes, 1);
+    assert_eq!(b.stats.semantic_hits, 1, "the paraphrase must hit");
+    assert_eq!(b.stats.semantic_false_probes, 0);
+    assert_eq!(
+        rb.matched_tokens, lcp,
+        "reuse is exactly the verified token-prefix overlap"
+    );
+    assert_eq!(b.stats.semantic_tokens_recovered, lcp as u64);
+    assert!(rb.downloaded_bytes > 0);
+    // bit-exactness, end to end: the semantically-reused rows feed the
+    // same decode a cache-less prefill would
+    assert_eq!(rb.response_tokens, expected.response_tokens);
+
+    // and the ledger saw the sketch arrive through sync
+    let ledgers = b.peer_ledgers();
+    assert!(ledgers[0].sketch_entries >= 1, "sketch table must be synced");
+    a.shutdown();
+    b.shutdown();
+    solo.shutdown();
+    cb.shutdown();
+}
+
+#[test]
+fn no_semantic_ablation_is_exact_only_and_interoperates() {
+    // `--no-semantic` in a mixed fleet: a sketch-capable box and a
+    // semantic uploader around it, yet the ablated client never probes,
+    // never registers, and keeps exact behaviour bit-for-bit.
+    let Some(eng) = engine() else { return };
+    let cb = CacheBox::start_local().unwrap();
+    let p0 = manual_prompt("Proceed with the checks now.", "outcome");
+    let p1 = manual_prompt("Continue with the checks now.", "outcome");
+
+    let mut a = EdgeClient::new(Arc::clone(&eng), cfg("donor", Some(cb.addr()))).unwrap();
+    let _ = a.query(&p0).unwrap();
+
+    let mut k = cfg("ablated", Some(cb.addr()));
+    k.semantic = false;
+    let mut b = EdgeClient::new(Arc::clone(&eng), k).unwrap();
+    b.sync_catalog_now().unwrap();
+    let r1 = b.query(&p1).unwrap();
+    assert_eq!(r1.case, HitCase::Miss, "paraphrase stays a miss without the tier");
+    assert_eq!(r1.matched_tokens, 0);
+    assert_eq!(b.stats.semantic_probes, 0);
+    let r0 = b.query(&p0).unwrap();
+    assert_eq!(r0.case, HitCase::Full, "exact matching fully intact");
+    a.shutdown();
+    b.shutdown();
+    cb.shutdown();
+}
+
+#[test]
+fn perturbed_workload_semantic_strictly_improves_reuse() {
+    // The acceptance shape of the semantic bench, in miniature: under a
+    // seeded paraphrase perturbation, the semantic client recovers
+    // strictly more tokens than the ablated one on an identical trace.
+    let Some(eng) = engine() else { return };
+    let gen = Generator::new(41);
+    let base = gen.prompt("marketing", 0, 2);
+    // same prompt, perturbed early (instruction vocabulary) — every
+    // exact range hash changes
+    let mut pert = Perturber::new(7, 1.0);
+    pert.reorder = 0.0;
+    let para = pert.perturb(&base);
+    assert_ne!(base.instruction, para.instruction, "perturbation must land");
+
+    // size the distance knob from the actual perturbation instead of
+    // guessing: the test pins the *mechanism* (engage → verify → reuse),
+    // the bench measures the default knob's yield
+    let ham = edgecache::sketch::hamming(
+        sketch_tokens(&eng.tokenize_prompt(&base.full_text())),
+        sketch_tokens(&eng.tokenize_prompt(&para.full_text())),
+    );
+
+    let run = |semantic: bool| -> (usize, u64) {
+        let cb = CacheBox::start_local().unwrap();
+        let mut k = cfg(if semantic { "sem" } else { "nosem" }, Some(cb.addr()));
+        k.semantic = semantic;
+        k.semantic_dist = ham.max(1);
+        let mut c = EdgeClient::new(Arc::clone(&eng), k).unwrap();
+        let _ = c.query(&base).unwrap();
+        let r = c.query(&para).unwrap();
+        let out = (r.matched_tokens, c.stats.semantic_tokens_recovered);
+        c.shutdown();
+        cb.shutdown();
+        out
+    };
+    let (m_on, rec_on) = run(true);
+    let (m_off, rec_off) = run(false);
+    assert_eq!(m_off, 0, "exact-only cannot see the paraphrase");
+    assert_eq!(rec_off, 0);
+    assert!(m_on > 0, "semantic recovers verified prefix tokens");
+    assert_eq!(rec_on, m_on as u64);
+}
+
+#[test]
+fn repair_sweep_restores_deleted_replicas() {
+    // The proactive sweep: ring placement, replicas=1, two boxes.  Every
+    // entry lives on both; wipe box B's state keys, let the sweep walk
+    // box A, and the ring owners must be healed without any query
+    // touching the lost entries.
+    let Some(eng) = engine() else { return };
+    let cb1 = CacheBox::start_local().unwrap();
+    let cb2 = CacheBox::start_local().unwrap();
+    let mut k = cfg("sweeper", Some(cb1.addr()));
+    k.peers = vec![PeerConfig::new(cb1.addr()), PeerConfig::new(cb2.addr())];
+    k.placement = PlacementKind::RendezvousRing;
+    k.replicas = 1;
+    let mut c = EdgeClient::new(Arc::clone(&eng), k).unwrap();
+
+    let gen = Generator::new(43);
+    let r0 = c.query(&gen.prompt("anatomy", 0, 1)).unwrap();
+    assert!(r0.uploaded_bytes > 0);
+    // arm the sweep only now, so no earlier sweep step has memoized the
+    // (then-intact) owner sets
+    c.cfg.repair_sweep = Duration::from_millis(1);
+
+    // wipe B's state keys (replica loss without a death)
+    let lost: Vec<Vec<u8>> = cb2
+        .handle
+        .server
+        .store
+        .all_keys()
+        .into_iter()
+        .filter(|kk| kk.starts_with(b"state:"))
+        .collect();
+    assert!(!lost.is_empty(), "ring+replica must have placed copies on B");
+    for kk in &lost {
+        assert!(cb2.handle.server.store.del(kk));
+    }
+
+    // a later, unrelated query triggers the timer-gated sweep
+    std::thread::sleep(Duration::from_millis(5));
+    let _ = c.query(&gen.prompt("sociology", 0, 1)).unwrap();
+
+    assert!(c.stats.repair_republishes > 0, "sweep must republish");
+    for kk in &lost {
+        assert!(
+            cb2.handle.server.store.strlen(kk).is_some(),
+            "replica not healed: {:?}",
+            String::from_utf8_lossy(kk)
+        );
+    }
+    c.shutdown();
+    cb1.shutdown();
+    cb2.shutdown();
+}

@@ -81,6 +81,14 @@ $WATCHDOG cargo test -q --test plan_oracle
 echo "== cargo test -q --test gossip_laws =="
 $WATCHDOG cargo test -q --test gossip_laws
 
+# The semantic-tier suite pins the sketch layer's contract: wire-roundtrip
+# of sketch sections, legacy boxes degrading to exact-only without losing
+# state sync, the verification gate refusing a maliciously-close sketch
+# with zero real overlap, paraphrase prefix recovery across clients, and
+# the proactive repair sweep re-publishing deleted replicas.
+echo "== cargo test -q --test semantic_tier =="
+$WATCHDOG cargo test -q --test semantic_tier
+
 # The serving-core suite pins the fleet-scale substrate: sharded-store
 # stress with uniform-fill torn-read detection and honest byte accounting,
 # poll vs thread reply identity, deterministic admission shedding with
@@ -139,6 +147,16 @@ $WATCHDOG env EDGECACHE_SMOKE=1 cargo bench --bench fetch_plan
 # restored prefix via the rescue ladder.
 echo "== gossip smoke (EDGECACHE_SMOKE=1) =="
 $WATCHDOG env EDGECACHE_SMOKE=1 cargo bench --bench gossip
+
+# Semantic smoke (`just bench-semantic`): the paraphrased-workload bench —
+# asserts the --no-semantic and exact-repeat arms send zero semantic
+# probes, the semantic arm strictly improves reuse and matched tokens,
+# accounting closes (matched_on == matched_off + tokens_recovered), and
+# every paraphrase response is byte-identical across arms (reused state
+# never changes output); the strict mean-TTFT comparison gates the paced
+# full run only.
+echo "== semantic smoke (EDGECACHE_SMOKE=1) =="
+$WATCHDOG env EDGECACHE_SMOKE=1 cargo bench --bench semantic
 
 if [ "${1:-}" != "--no-clippy" ]; then
     echo "== cargo clippy -q -- -D warnings =="
